@@ -1,0 +1,4 @@
+"""Build-time Python package: L2 JAX model + L1 Pallas kernels + AOT
+export. Runs once under ``make artifacts``; the Rust binary only ever
+loads the emitted ``artifacts/*.hlo.txt``.
+"""

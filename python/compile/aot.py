@@ -1,0 +1,96 @@
+"""AOT export: lower every L2 entrypoint to HLO **text** artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (what ``make
+artifacts`` runs). Also writes ``manifest.json`` (name -> inputs/outputs)
+and ``mlp_vectors.json`` (golden test vectors for the Rust runtime
+integration tests).
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: the
+    Rust side unwraps with ``to_tuple1()``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+
+
+ENTRYPOINTS = {
+    # name -> (fn, input specs builder)
+    "gemm_mm1_tile": (model.gemm_mm1_tile, model.tile_specs),
+    "gemm_kmm2_tile": (model.gemm_kmm2_tile, model.tile_specs),
+    "gemm_mm2_tile": (model.gemm_mm2_tile, model.tile_specs),
+    "mlp_fwd": (model.mlp_fwd, model.mlp_input_specs),
+}
+
+
+def export(out_dir: pathlib.Path) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"tile": model.TILE, "entrypoints": {}}
+    for name, (fn, specs_fn) in ENTRYPOINTS.items():
+        specs = specs_fn()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        out_spec = jax.eval_shape(fn, *specs)
+        manifest["entrypoints"][name] = {
+            "path": path.name,
+            "inputs": [_spec_json(s) for s in specs],
+            "outputs": [_spec_json(out_spec)],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Golden vectors: the Rust integration test executes mlp_fwd.hlo.txt
+    # on these inputs and must reproduce the logits bit-for-bit.
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 1 << model.MLP_WIDTHS[0], (model.BATCH, model.MLP_DIMS[0]))
+    params = model.random_mlp_params(seed=0)
+    logits = np.asarray(model.mlp_fwd(x, *params))
+    vectors = {
+        "x": x.tolist(),
+        "w1": params[0].tolist(),
+        "w2": params[1].tolist(),
+        "w3": params[2].tolist(),
+        "logits": logits.tolist(),
+    }
+    (out_dir / "mlp_vectors.json").write_text(json.dumps(vectors))
+    print(f"wrote {out_dir / 'mlp_vectors.json'}")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    export(pathlib.Path(args.out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (build-time only; never imported at runtime).
+
+- ``mm`` -- conventional MM1 tile kernel + the MM2 digit schedule.
+- ``kmm`` -- the paper's KMM2 kernel and recursive KMMn builder.
+- ``ffip`` -- the FFIP fast-inner-product baseline kernel [6].
+- ``analysis`` -- VMEM/MXU structural perf model (the TPU-side claim).
+- ``ref`` -- pure-jnp oracles the kernels are pytest-checked against.
+"""
+
+from compile.kernels import analysis, ffip, kmm, mm, ref  # noqa: F401

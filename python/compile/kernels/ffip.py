@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: FFIP (fast inner-product) tile matmul -- the
+authors' prior work [6], the baseline the paper combines KMM with in
+Table II.
+
+Winograd's identity per output element:
+
+    sum_k a_2k*b_2k + a_2k+1*b_2k+1
+      = sum_k (a_2k + b_2k+1)(a_2k+1 + b_2k) - alpha_i - beta_j
+    alpha_i = sum_k a_i,2k * a_i,2k+1     (per A row)
+    beta_j  = sum_k b_2k,j * b_2k+1,j     (per B column)
+
+Hardware-adaptation note (DESIGN.md SS Hardware-Adaptation): on the
+paper's FPGA the win is structural -- one multiplier per operand *pair*
+inside each PE. A TPU MXU has no per-PE operand-sum port, so the
+cross-product term here lowers to VPU broadcast-add + multiply +
+reduction rather than an MXU dot; the kernel exists for functional
+fidelity of the FFIP(+KMM) configurations, and the Rust FfipMxu model
+carries the resource accounting. Correctness is what pytest checks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.mm import _pad2
+
+jax.config.update("jax_enable_x64", True)
+
+FFIP_BLOCK = (32, 32, 32)
+
+
+def _ffip_kernel(x_ref, y_ref, o_ref, *, acc_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(acc_dtype)
+    y = y_ref[...].astype(acc_dtype)
+    x0, x1 = x[:, 0::2], x[:, 1::2]      # (bm, bk/2) pairs
+    y0, y1 = y[0::2, :], y[1::2, :]      # (bk/2, bn)
+    # Operand sums and the single multiplication per pair.
+    u = x0[:, :, None] + y1[None, :, :]  # a_2k + b_2k+1
+    v = x1[:, :, None] + y0[None, :, :]  # a_2k+1 + b_2k
+    cross = (u * v).sum(axis=1)
+    # Amortized corrections.
+    alpha = (x0 * x1).sum(axis=1, keepdims=True)
+    beta = (y0 * y1).sum(axis=0, keepdims=True)
+    o_ref[...] += cross - alpha - beta
+
+
+def ffip(a, b, *, block=FFIP_BLOCK, acc_dtype=jnp.int64, interpret=True):
+    """Exact integer matmul via the FFIP Pallas kernel.
+
+    Requires the K block to be even (operand pairs); inputs are padded
+    to the block grid and the result cropped, as in ``mm.mm1``.
+    """
+    (bm, bk, bn) = block
+    assert bk % 2 == 0, "FFIP reduction block must be even"
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    ap = _pad2(a.astype(acc_dtype), bm, bk)
+    bp = _pad2(b.astype(acc_dtype), bk, bn)
+    grid = (ap.shape[0] // bm, bp.shape[1] // bn, ap.shape[1] // bk)
+    out = pl.pallas_call(
+        functools.partial(_ffip_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), acc_dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: Karatsuba matrix multiplication (Algorithm 4).
+
+The paper's three FPGA sub-MXUs (Fig. 8) become **three MXU dot passes
+per resident VMEM tile pair** issued from one kernel body; the O(d^2)
+digit split / recombination (shifts, adds) runs on the VPU. BlockSpec
+stages each (bm,bk)/(bk,bn) tile pair into VMEM once and the kernel
+consumes it for all three sub-products before eviction -- the analogue of
+the scalable architecture's "read the tile set 3 times" (SS IV-C) with the
+re-reads served from VMEM instead of external memory.
+
+``kmmn`` composes the kernel recursively at the jnp level, mirroring the
+fixed-precision architecture's 3^r-leaf recursion tree (Fig. 8).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.mm import DEFAULT_BLOCK, _pad2, mm1
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _kmm2_kernel(x_ref, y_ref, o_ref, *, split, acc_dtype):
+    """KMM2 tile step: digit-split the resident tiles, run the three
+    sub-dots (MXU), recombine on the VPU, accumulate into the wide
+    running sum."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = split
+    mask = (1 << s) - 1
+    x = x_ref[...].astype(acc_dtype)
+    y = y_ref[...].astype(acc_dtype)
+    x1, x0 = x >> s, x & mask
+    y1, y0 = y >> s, y & mask
+    dot = functools.partial(jnp.dot, preferred_element_type=acc_dtype)
+    # Lines 9-11 of Algorithm 4: the three sub-products.
+    c1 = dot(x1, y1)
+    cs = dot(x1 + x0, y1 + y0)
+    c0 = dot(x0, y0)
+    # Lines 12-14: recombination (shifts are free wiring in hardware;
+    # here they fold into the VPU adds).
+    o_ref[...] += (c1 << (2 * s)) + ((cs - c1 - c0) << s) + c0
+
+
+def kmm2(a, b, w, *, block=DEFAULT_BLOCK, acc_dtype=jnp.int64, interpret=True):
+    """Exact integer matmul via the KMM2 Pallas kernel.
+
+    ``w`` is the element bitwidth; the split lands at ceil(w/2) so the
+    three sub-dots see (floor(w/2) | ceil(w/2)+1 | ceil(w/2))-bit operands
+    -- exactly the three sub-MXU widths of Fig. 8.
+    """
+    (bm, bk, bn) = block
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    s = (w + 1) // 2
+    ap = _pad2(a.astype(acc_dtype), bm, bk)
+    bp = _pad2(b.astype(acc_dtype), bk, bn)
+    grid = (ap.shape[0] // bm, bp.shape[1] // bn, ap.shape[1] // bk)
+    out = pl.pallas_call(
+        functools.partial(_kmm2_kernel, split=s, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), acc_dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def kmmn(a, b, w, n, *, block=DEFAULT_BLOCK, acc_dtype=jnp.int64,
+         interpret=True):
+    """n-digit KMM (Algorithm 4) composed recursively at the jnp level.
+
+    Each recursion level splits the operands into digit planes and issues
+    three (n/2)-digit sub-KMMs -- the 3^r-leaf tree of the fixed-precision
+    architecture. Leaves run the MM1 Pallas kernel.
+    """
+    assert n >= 1 and (n & (n - 1)) == 0, f"n={n} must be a power of two"
+    assert w >= n, f"w={w} must cover n={n} digits"
+    if n == 1:
+        return mm1(a, b, block=block, acc_dtype=acc_dtype, interpret=interpret)
+    s = (w + 1) // 2
+    mask = (1 << s) - 1
+    a = a.astype(acc_dtype)
+    b = b.astype(acc_dtype)
+    a1, a0 = a >> s, a & mask
+    b1, b0 = b >> s, b & mask
+    rec = functools.partial(kmmn, n=n // 2, block=block,
+                            acc_dtype=acc_dtype, interpret=interpret)
+    c1 = rec(a1, b1, w=w - s)
+    cs = rec(a1 + a0, b1 + b0, w=s + 1)
+    c0 = rec(a0, b0, w=s)
+    return (c1 << (2 * s)) + ((cs - c1 - c0) << s) + c0

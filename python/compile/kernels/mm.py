@@ -1,0 +1,123 @@
+"""L1 Pallas kernels: conventional integer tile matmul (MM1) and the
+two-digit conventional schedule (MM2).
+
+Hardware adaptation (DESIGN.md SS Hardware-Adaptation): the paper's FPGA
+systolic array becomes an MXU-targeted Pallas kernel. BlockSpec expresses
+the HBM->VMEM tile schedule the FPGA did with stationary B tiles; the
+``preferred_element_type`` dots are the MXU integer path; the k-blocked
+grid accumulation mirrors the Algorithm 5 two-level accumulator (narrow
+per-block pre-sums folded into the wide running sum held in ``o_ref``).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path
+(real-TPU perf is estimated analytically in DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Default VMEM-friendly tile: 3 planes of (128,128) i32 + accumulator
+# comfortably fit the ~16 MiB budget (DESIGN.md SS Hardware-Adaptation).
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    return jnp.pad(x, (((-m) % bm and (0, (-m) % bm)) or (0, 0),
+                       ((-n) % bn and (0, (-n) % bn)) or (0, 0)))
+
+
+def _mm1_kernel(x_ref, y_ref, o_ref, *, acc_dtype):
+    """One (bm,bk)x(bk,bn) tile MAC: init on the first k-step, then
+    accumulate -- the wide running sum of Algorithm 5."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(acc_dtype)
+    y = y_ref[...].astype(acc_dtype)
+    o_ref[...] += jnp.dot(x, y, preferred_element_type=acc_dtype)
+
+
+def mm1(a, b, *, block=DEFAULT_BLOCK, acc_dtype=jnp.int32, interpret=True):
+    """Exact integer matmul via the MM1 Pallas kernel.
+
+    ``a``: (M, K) int, ``b``: (K, N) int; returns (M, N) ``acc_dtype``.
+    Inputs are zero-padded to the block grid (the MXU edge padding of
+    SS IV-D) and the result is cropped back.
+    """
+    (bm, bk, bn) = block
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    ap = _pad2(a.astype(acc_dtype), bm, bk)
+    bp = _pad2(b.astype(acc_dtype), bk, bn)
+    grid = (ap.shape[0] // bm, bp.shape[1] // bn, ap.shape[1] // bk)
+    out = pl.pallas_call(
+        functools.partial(_mm1_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), acc_dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _mm2_kernel(x_ref, y_ref, o_ref, *, split, acc_dtype):
+    """Two-digit conventional schedule (Algorithm 3, n=2): four sub-dots
+    per resident tile pair -- the four tile re-reads of the scalable MM2
+    mode served from VMEM instead of external memory."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = split
+    mask = (1 << s) - 1
+    x = x_ref[...].astype(acc_dtype)
+    y = y_ref[...].astype(acc_dtype)
+    x1, x0 = x >> s, x & mask
+    y1, y0 = y >> s, y & mask
+    dot = functools.partial(jnp.dot, preferred_element_type=acc_dtype)
+    c1 = dot(x1, y1)
+    c10 = dot(x1, y0)
+    c01 = dot(x0, y1)
+    c0 = dot(x0, y0)
+    o_ref[...] += (c1 << (2 * s)) + ((c10 + c01) << s) + c0
+
+
+def mm2(a, b, w, *, block=DEFAULT_BLOCK, acc_dtype=jnp.int64, interpret=True):
+    """Exact integer matmul via the MM2 digit-plane Pallas kernel.
+
+    Splits w-bit elements at ceil(w/2) inside the kernel; the m-bit
+    sub-dots are what lands on the MXU.
+    """
+    (bm, bk, bn) = block
+    m, k = a.shape
+    _, n = b.shape
+    s = (w + 1) // 2
+    ap = _pad2(a.astype(acc_dtype), bm, bk)
+    bp = _pad2(b.astype(acc_dtype), bk, bn)
+    grid = (ap.shape[0] // bm, bp.shape[1] // bn, ap.shape[1] // bk)
+    out = pl.pallas_call(
+        functools.partial(_mm2_kernel, split=s, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), acc_dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]

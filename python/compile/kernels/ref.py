@@ -1,0 +1,105 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is the *algebraic ground truth* the L1 kernels are tested
+against at build time (pytest), mirroring the role of ``algo::matrix::
+matmul_oracle`` on the Rust side:
+
+- :func:`matmul_exact` -- exact integer matmul in wide accumulation.
+- :func:`digit_split` / :func:`digit_join` -- the paper's ceil(w/2) digit
+  convention (Algorithms 3-4, lines 3-6).
+- :func:`kmm2_reference` -- Algorithm 4 at n=2 written in plain jnp, used
+  to check the KMM Pallas kernel *structurally* (same three sub-products)
+  as well as numerically.
+- :func:`alg5_matmul` -- the Algorithm 5 (SS III-C) two-level accumulation
+  structure the MM1 kernel mirrors.
+
+Oracles run in int64 (enabled below) so that w <= 16 inputs with deep
+K-accumulation stay exact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def matmul_exact(a, b):
+    """Exact integer matrix product in int64 accumulation."""
+    return jnp.matmul(a.astype(jnp.int64), b.astype(jnp.int64))
+
+
+def lo_width(w: int) -> int:
+    """ceil(w/2) -- low-digit width and split shift (paper SS II-A)."""
+    return (w + 1) // 2
+
+
+def digit_split(x, w: int):
+    """Split w-bit elements into (hi, lo) digit planes.
+
+    hi holds bits w-1..ceil(w/2) (floor(w/2)-bit values), lo holds bits
+    ceil(w/2)-1..0 -- Algorithm 4 lines 3-6.
+    """
+    s = lo_width(w)
+    x = x.astype(jnp.int64)
+    return x >> s, x & ((1 << s) - 1)
+
+
+def digit_split_at(x, pos: int):
+    """Split at an explicit bit position (the SS IV-C hardware split)."""
+    x = x.astype(jnp.int64)
+    return x >> pos, x & ((1 << pos) - 1)
+
+
+def digit_join(hi, lo, w: int):
+    """Inverse of :func:`digit_split`."""
+    s = lo_width(w)
+    return (hi.astype(jnp.int64) << s) | lo.astype(jnp.int64)
+
+
+def kmm2_reference(a, b, w: int):
+    """Algorithm 4 at n=2 in plain jnp: 3 sub-products + recombination.
+
+    ``C = C1 << 2*ceil(w/2) + (Cs - C1 - C0) << ceil(w/2) + C0``
+    (the 2*ceil(w/2) form is exact for odd w as well).
+    """
+    s = lo_width(w)
+    a1, a0 = digit_split(a, w)
+    b1, b0 = digit_split(b, w)
+    c1 = matmul_exact(a1, b1)
+    cs = matmul_exact(a1 + a0, b1 + b0)
+    c0 = matmul_exact(a0, b0)
+    return (c1 << (2 * s)) + ((cs - c1 - c0) << s) + c0
+
+
+def mm2_reference(a, b, w: int):
+    """Algorithm 3 at n=2 in plain jnp: 4 sub-products + recombination."""
+    s = lo_width(w)
+    a1, a0 = digit_split(a, w)
+    b1, b0 = digit_split(b, w)
+    c1 = matmul_exact(a1, b1)
+    c10 = matmul_exact(a1, b0)
+    c01 = matmul_exact(a0, b1)
+    c0 = matmul_exact(a0, b0)
+    return (c1 << (2 * s)) + ((c10 + c01) << s) + c0
+
+
+def alg5_matmul(a, b, p: int = 4):
+    """Algorithm 5 (SS III-C) reference: pre-accumulate groups of ``p``
+    products before folding into the running sum. Bit-exact vs
+    :func:`matmul_exact`; exists to pin the accumulation *structure* the
+    MM1 kernel mirrors."""
+    a = a.astype(jnp.int64)
+    b = b.astype(jnp.int64)
+    m, k = a.shape
+    _, n = b.shape
+    pad = (-k) % p
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    groups = a.shape[1] // p
+    ag = a.reshape(m, groups, p)
+    bg = b.reshape(groups, p, n)
+    # x = sum_q a[i, g*p+q] * b[g*p+q, j] per group (the narrow pre-sum)...
+    pre = jnp.einsum("mgp,gpn->gmn", ag, bg)
+    # ... then the wide running sum over groups.
+    return pre.sum(axis=0)

@@ -1,0 +1,107 @@
+"""L2: the quantized neural-network compute graph (build-time JAX).
+
+A precision-heterogeneous integer MLP in the style the paper motivates
+(SS II-E): most layers run at 8 bits on the MM1 path, one layer runs at
+12 bits and exercises the KMM2 window (9 <= w <= 14 for m=8). Everything
+is exact integer arithmetic so the Rust coordinator can verify artifact
+outputs bit-for-bit against its own oracles.
+
+The graph is AOT-lowered by :mod:`compile.aot`; Python never runs at
+serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import kmm, mm
+
+jax.config.update("jax_enable_x64", True)
+
+# Layer plan: (in_dim, out_dim, input bitwidth w, algorithm).
+# w=12 on the hidden layer exercises the KMM2 window of the scalable
+# architecture (m=8: KMM for 9..14).
+MLP_DIMS = (256, 512, 512, 10)
+MLP_WIDTHS = (8, 12, 8)
+MLP_ALGS = ("mm1", "kmm2", "mm1")
+BATCH = 32
+# Requantization shift per layer output (folds scale into a power of 2,
+# the zero-point adjuster of [6] handles offsets on the Rust side).
+MLP_SHIFTS = (8, 10)
+BLOCK = (128, 128, 128)
+
+
+def _matmul(x, w_mat, width, alg):
+    if alg == "kmm2":
+        return kmm.kmm2(x, w_mat, width, block=BLOCK, acc_dtype=jnp.int64)
+    return mm.mm1(x, w_mat, block=BLOCK, acc_dtype=jnp.int64)
+
+
+def _requant(acc, shift, out_width):
+    """Power-of-two requantization: arithmetic shift, ReLU, clip to
+    out_width unsigned bits -- integer-exact and reproducible in Rust."""
+    q = acc >> shift
+    q = jnp.maximum(q, 0)
+    return jnp.minimum(q, (1 << out_width) - 1)
+
+
+def mlp_fwd(x, w1, w2, w3):
+    """Quantized MLP forward.
+
+    x: (BATCH, 256) 8-bit values; w1: (256, 512) 8-bit; w2: (512, 512)
+    12-bit; w3: (512, 10) 8-bit. Returns int64 logits (BATCH, 10).
+    """
+    h1 = _matmul(x, w1, MLP_WIDTHS[0], MLP_ALGS[0])
+    h1q = _requant(h1, MLP_SHIFTS[0], MLP_WIDTHS[1])
+    h2 = _matmul(h1q, w2, MLP_WIDTHS[1], MLP_ALGS[1])
+    h2q = _requant(h2, MLP_SHIFTS[1], MLP_WIDTHS[2])
+    return _matmul(h2q, w3, MLP_WIDTHS[2], MLP_ALGS[2])
+
+
+def mlp_input_specs():
+    """ShapeDtypeStructs for AOT lowering of :func:`mlp_fwd`."""
+    i64 = jnp.int64
+    return (
+        jax.ShapeDtypeStruct((BATCH, MLP_DIMS[0]), i64),
+        jax.ShapeDtypeStruct((MLP_DIMS[0], MLP_DIMS[1]), i64),
+        jax.ShapeDtypeStruct((MLP_DIMS[1], MLP_DIMS[2]), i64),
+        jax.ShapeDtypeStruct((MLP_DIMS[2], MLP_DIMS[3]), i64),
+    )
+
+
+def random_mlp_params(seed=0):
+    """Deterministic random weights within each layer's bitwidth."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    w1 = rng.integers(0, 1 << MLP_WIDTHS[0], MLP_DIMS[:2]).astype(np.int64)
+    w2 = rng.integers(0, 1 << MLP_WIDTHS[1], MLP_DIMS[1:3]).astype(np.int64)
+    w3 = rng.integers(0, 1 << MLP_WIDTHS[2], MLP_DIMS[2:4]).astype(np.int64)
+    return w1, w2, w3
+
+
+# --- Fixed-shape GEMM entrypoints for the Rust tile engine -------------
+# The coordinator serves arbitrary GEMMs by tiling onto these (SS IV-D);
+# one compiled executable per (shape, algorithm) variant.
+
+TILE = 128
+
+
+def gemm_mm1_tile(a, b):
+    """(TILE,TILE)x(TILE,TILE) 8-bit GEMM tile on the MM1 kernel."""
+    return mm.mm1(a, b, block=BLOCK, acc_dtype=jnp.int64)
+
+
+def gemm_kmm2_tile(a, b):
+    """(TILE,TILE)x(TILE,TILE) 12-bit GEMM tile on the KMM2 kernel."""
+    return kmm.kmm2(a, b, 12, block=BLOCK, acc_dtype=jnp.int64)
+
+
+def gemm_mm2_tile(a, b):
+    """(TILE,TILE)x(TILE,TILE) 16-bit GEMM tile on the MM2 kernel."""
+    return mm.mm2(a, b, 16, block=BLOCK, acc_dtype=jnp.int64)
+
+
+def tile_specs():
+    i64 = jnp.int64
+    t = jax.ShapeDtypeStruct((TILE, TILE), i64)
+    return (t, t)

@@ -1,0 +1,27 @@
+"""Structural L1 perf model: VMEM fits, issue ratios match the paper."""
+
+from compile.kernels import analysis
+
+
+def test_shipped_blocks_fit_vmem():
+    for k in analysis.standard_kernels():
+        assert k.vmem_fraction < 0.05, (k.name, k.vmem_fraction)
+
+
+def test_kmm_issue_ratio_is_four_thirds():
+    ks = analysis.standard_kernels()
+    kmm2 = next(k for k in ks if k.name == "kmm2")
+    mm2 = next(k for k in ks if k.name == "mm2")
+    assert abs(analysis.efficiency_ratio(kmm2, mm2) - 4 / 3) < 1e-12
+
+
+def test_mm1_has_no_digit_planes():
+    ks = {k.name: k for k in analysis.standard_kernels()}
+    bm, bk, bn = ks["mm1"].block
+    expected = (bm * bk + bk * bn) * 4 + bm * bn * 8
+    assert ks["mm1"].vmem_bytes == expected
+
+
+def test_report_renders():
+    r = analysis.report()
+    assert "KMM2 vs MM2" in r and "1.3333" in r

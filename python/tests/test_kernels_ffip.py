@@ -1,0 +1,40 @@
+"""FFIP Pallas kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ffip, ref
+
+settings.register_profile("kernels", deadline=None, max_examples=20)
+settings.load_profile("kernels")
+
+
+def rand(shape, w, seed):
+    return np.random.default_rng(seed).integers(0, 1 << w, shape, dtype=np.int64)
+
+
+dims = st.integers(min_value=1, max_value=30)
+
+
+@given(m=dims, k=dims, n=dims, w=st.integers(1, 15), seed=st.integers(0, 2**32 - 1))
+def test_ffip_matches_oracle(m, k, n, w, seed):
+    a, b = rand((m, k), w, seed), rand((k, n), w, seed + 1)
+    got = ffip.ffip(jnp.array(a), jnp.array(b), block=(8, 8, 8))
+    np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+def test_ffip_max_values():
+    # Operand sums peak at 2^(w+1) - 2; must remain exact.
+    w = 15
+    a = np.full((9, 17), (1 << w) - 1, dtype=np.int64)
+    b = np.full((17, 5), (1 << w) - 1, dtype=np.int64)
+    got = ffip.ffip(jnp.array(a), jnp.array(b), block=(8, 8, 8))
+    np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+def test_ffip_rejects_odd_block():
+    import pytest
+    a = jnp.zeros((4, 4), jnp.int64)
+    with pytest.raises(AssertionError):
+        ffip.ffip(a, a, block=(4, 3, 4))

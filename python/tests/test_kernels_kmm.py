@@ -1,0 +1,74 @@
+"""KMM2/KMMn Pallas kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kmm, ref
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def rand(shape, w, seed):
+    return np.random.default_rng(seed).integers(0, 1 << w, shape, dtype=np.int64)
+
+
+dims = st.integers(min_value=1, max_value=40)
+
+
+@given(m=dims, k=dims, n=dims, w=st.integers(2, 16), seed=st.integers(0, 2**32 - 1))
+def test_kmm2_matches_oracle(m, k, n, w, seed):
+    a, b = rand((m, k), w, seed), rand((k, n), w, seed + 1)
+    got = kmm.kmm2(jnp.array(a), jnp.array(b), w, block=(16, 16, 16))
+    np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+@given(w=st.integers(4, 16), seed=st.integers(0, 100))
+def test_kmmn4_matches_oracle(w, seed):
+    a, b = rand((18, 33), w, seed), rand((33, 9), w, seed + 1)
+    got = kmm.kmmn(jnp.array(a), jnp.array(b), w, 4, block=(16, 16, 16))
+    np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+@given(seed=st.integers(0, 50))
+def test_kmmn8_matches_oracle_w16(seed):
+    a, b = rand((10, 20), 16, seed), rand((20, 10), 16, seed + 1)
+    got = kmm.kmmn(jnp.array(a), jnp.array(b), 16, 8, block=(8, 8, 8))
+    np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+@given(w=st.integers(2, 16), seed=st.integers(0, 100))
+def test_kmm2_reference_identity(w, seed):
+    # The Karatsuba identity itself, at the jnp level.
+    a, b = rand((7, 19), w, seed), rand((19, 11), w, seed + 1)
+    np.testing.assert_array_equal(
+        np.array(ref.kmm2_reference(jnp.array(a), jnp.array(b), w)),
+        np.array(ref.matmul_exact(a, b)),
+    )
+
+
+def test_odd_widths_exact():
+    # Odd w forces the asymmetric floor/ceil digit widths.
+    for w in (3, 5, 7, 9, 11, 13, 15):
+        a, b = rand((12, 24), w, w), rand((24, 12), w, w + 1)
+        got = kmm.kmm2(jnp.array(a), jnp.array(b), w, block=(8, 8, 8))
+        np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+def test_all_ones_adversarial():
+    # Digit sums peak: As/Bs elements reach 2^(ceil(w/2)+1) - 2.
+    w = 14
+    a = np.full((16, 32), (1 << w) - 1, dtype=np.int64)
+    b = np.full((32, 16), (1 << w) - 1, dtype=np.int64)
+    got = kmm.kmm2(jnp.array(a), jnp.array(b), w, block=(16, 16, 16))
+    np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+def test_kmmn_rejects_bad_digits():
+    a = jnp.zeros((4, 4), jnp.int64)
+    import pytest
+    with pytest.raises(AssertionError):
+        kmm.kmmn(a, a, 8, 3)
+    with pytest.raises(AssertionError):
+        kmm.kmmn(a, a, 2, 4)

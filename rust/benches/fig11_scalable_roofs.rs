@@ -1,0 +1,36 @@
+//! Fig. 11 regenerator: multiplier compute-efficiency roofs of the
+//! precision-scalable MM2 vs KMM2 architectures (m = 8, X = Y = 64),
+//! plus *measured* efficiencies from the cycle simulator approaching the
+//! roofs on large GEMMs.
+//!
+//! Run: `cargo bench --bench fig11_scalable_roofs`
+
+use kmm::arch::scalable::ScalableKmm;
+use kmm::coordinator::scheduler::schedule;
+use kmm::model::workload::synthetic_square;
+use kmm::report::fig11;
+
+fn main() {
+    let (report, series) = fig11(8, 16);
+    println!("{report}");
+
+    println!("measured eq. (12) efficiency on a 4096^3 synthetic GEMM (approaches the roof):");
+    println!("{:>4} {:>12} {:>12} {:>10} {:>10}", "w", "KMM2 meas", "MM2 meas", "KMM2 roof", "MM2 roof");
+    for w in [4u32, 8, 9, 12, 14, 15, 16] {
+        let wl = synthetic_square("roofcheck", 4096, 1, w);
+        let kmm = ScalableKmm::paper_kmm();
+        let mm = ScalableKmm::paper_mm();
+        let ek = schedule(&wl, &kmm).unwrap().execution(w, 8, 4096, 326.0);
+        let em = schedule(&wl, &mm).unwrap().execution(w, 8, 4096, 320.0);
+        let roof = series.iter().find(|p| p.w == w).unwrap();
+        println!(
+            "{w:>4} {:>12.3} {:>12.3} {:>10.3} {:>10.3}",
+            ek.mbit_efficiency(),
+            em.mbit_efficiency(),
+            roof.kmm2,
+            roof.mm2
+        );
+        assert!(ek.mbit_efficiency() <= roof.kmm2 + 1e-9, "roof respected");
+        assert!(ek.mbit_efficiency() > roof.kmm2 * 0.93, "approaches roof");
+    }
+}

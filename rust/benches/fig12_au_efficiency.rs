@@ -1,0 +1,21 @@
+//! Fig. 12 regenerator: Area-Unit compute-efficiency limits of the
+//! fixed-precision MM1 / KSMM / KMM architectures vs input bitwidth
+//! (eqs. 16-23, X = Y = 64).
+//!
+//! Run: `cargo bench --bench fig12_au_efficiency`
+
+use kmm::area::au::ArrayCfg;
+use kmm::report::fig12;
+
+fn main() {
+    let (report, series) = fig12(&ArrayCfg::paper_64());
+    println!("{report}");
+    let first_kmm = series.iter().find(|p| p.kmm > 1.0).unwrap().w;
+    let first_ksmm = series
+        .iter()
+        .find(|p| p.ksmm > 1.0)
+        .map(|p| p.w.to_string())
+        .unwrap_or_else(|| "none <= 64".into());
+    println!("KMM crosses above MM1 at w = {first_kmm}; KSMM at w = {first_ksmm} (paper: KMM sooner, KMM >= KSMM everywhere)");
+    println!("KMM recursion levels chosen: {:?}", series.iter().map(|p| (p.w, p.kmm_n)).collect::<Vec<_>>());
+}

@@ -1,0 +1,75 @@
+//! Hot-path micro/macro benchmarks for the L3 engine (hand-rolled
+//! harness; criterion-style medians over repeated runs).
+//!
+//! Covers the loops the perf pass optimizes (EXPERIMENTS.md §Perf):
+//!   1. `SystolicSpec::tile_product`  — functional MXU tile MAC loop
+//!   2. `ScalableKmm::gemm`           — full scalable GEMM (KMM2 window)
+//!   3. `schedule(ResNet-50)`         — analytic workload scheduling
+//!   4. oracle `matmul_oracle`        — wide-int reference matmul
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::arch::mxu::SystolicSpec;
+use kmm::arch::scalable::ScalableKmm;
+use kmm::coordinator::scheduler::schedule;
+use kmm::model::resnet::{resnet, ResNet};
+use kmm::util::rng::Rng;
+use std::time::Instant;
+
+/// Median wall time of `iters` runs of `f`, in seconds.
+fn bench(name: &str, iters: usize, mut f: impl FnMut() -> u64) {
+    let mut times = Vec::with_capacity(iters);
+    let mut work = 0u64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        work = f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let med = times[times.len() / 2];
+    let rate = work as f64 / med / 1e6;
+    println!("{name:<44} median {:>9.3} ms   {:>9.1} Mops/s", med * 1e3, rate);
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    println!("== hotpath benches (median of N, release) ==");
+
+    // 1. Functional MXU tile product: 64x64 tile, 64 rows.
+    let spec = SystolicSpec::paper_64();
+    let a = Mat::random(64, 64, 8, &mut rng);
+    let b = Mat::random(64, 64, 8, &mut rng);
+    bench("tile_product 64x64x64 w8 (MACs/s)", 40, || {
+        let out = spec.tile_product(&a, &b);
+        std::hint::black_box(&out);
+        (64 * 64 * 64) as u64
+    });
+
+    // 2. Scalable GEMM in the KMM2 window: 256^3 at w = 12.
+    let arch = ScalableKmm::paper_kmm();
+    let a2 = Mat::random(256, 256, 12, &mut rng);
+    let b2 = Mat::random(256, 256, 12, &mut rng);
+    bench("scalable gemm 256^3 w12 KMM2 (MACs/s)", 10, || {
+        let (c, _) = arch.gemm(&a2, &b2, 12).unwrap();
+        std::hint::black_box(&c);
+        256 * 256 * 256
+    });
+
+    // 3. Analytic scheduling of ResNet-50 (layers/s scaled to ops).
+    let r50 = resnet(ResNet::R50, 12);
+    bench("schedule ResNet-50 w12 (layers/s x1e6)", 200, || {
+        let s = schedule(&r50, &arch).unwrap();
+        std::hint::black_box(&s);
+        r50.len() as u64
+    });
+
+    // 4. Oracle matmul 256^3 w16.
+    let a3 = Mat::random(256, 256, 16, &mut rng);
+    let b3 = Mat::random(256, 256, 16, &mut rng);
+    bench("matmul_oracle 256^3 w16 (MACs/s)", 10, || {
+        let c = matmul_oracle(&a3, &b3);
+        std::hint::black_box(&c);
+        256 * 256 * 256
+    });
+}

@@ -1,0 +1,25 @@
+//! Table II regenerator: FFIP [6] vs combined FFIP+KMM2 precision-
+//! scalable systolic arrays (compute-efficiency roofs 2 and 8/3).
+//!
+//! Run: `cargo bench --bench table2_ffip_kmm`
+
+use kmm::report::table2;
+use kmm::report::tables::TABLE2_PAPER_FFIP_KMM_EFF;
+
+fn main() {
+    let (report, cols) = table2();
+    println!("{report}");
+    let ffip_kmm = &cols[1];
+    println!("paper-vs-model deltas (FFIP+KMM, 9-14 bucket):");
+    for (ri, row) in ffip_kmm.rows.iter().enumerate() {
+        let pe = TABLE2_PAPER_FFIP_KMM_EFF[ri][1];
+        println!(
+            "  {}: eff {:.3} vs paper {:.3} ({:+.1}%)",
+            row.model,
+            row.cells[1].eff,
+            pe,
+            (row.cells[1].eff / pe - 1.0) * 100.0
+        );
+    }
+    println!("\nshape checks: FFIP approaches roof 2; FFIP+KMM exceeds 2 and approaches 8/3 = 2.667 in the 9-14 window.");
+}

@@ -1,0 +1,30 @@
+//! Table III regenerator: fixed-precision MM1 / KSMM / KMM 32x32 arrays
+//! in isolation on the calibrated Agilex 7 model (w = 32 n = 2 and
+//! w = 64 n = 4; unpipelined and pipelined baseline variants).
+//!
+//! Run: `cargo bench --bench table3_fixed_precision`
+
+use kmm::report::table3;
+use kmm::report::tables::TABLE3_PAPER;
+
+fn main() {
+    let (report, designs) = table3();
+    println!("{report}");
+    println!("paper-vs-model (DSPs exact except MM1^[64] +6% slack; ALMs calibrated <=8%; fmax <=10%):");
+    for &(arch, w, pipelined, dsps, alms, regs, fmax, roof) in TABLE3_PAPER {
+        let a = match arch {
+            "MM1" => kmm::area::fpga::FixedArch::Mm1,
+            "KSMM" => kmm::area::fpga::FixedArch::Ksmm,
+            _ => kmm::area::fpga::FixedArch::Kmm,
+        };
+        let d = designs
+            .iter()
+            .find(|d| d.arch == a && d.w == w && d.pipelined == pipelined)
+            .unwrap();
+        println!(
+            "  {arch:<4} w={w:<2} pipe={pipelined:<5} DSP {:>5}/{:<5} ALM {:>7}/{:<7} REG {:>8}/{:<8} fmax {:>3.0}/{:<3.0} roof {:>4.0}/{:<4.0}",
+            d.dsps, dsps, d.alms, alms, d.registers, regs, d.fmax_mhz, fmax, d.throughput_roof_gops, roof
+        );
+    }
+    println!("\n(model/paper pairs; registers are trend-modelled only — synthesis retiming not reproduced)");
+}

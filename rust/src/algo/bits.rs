@@ -1,0 +1,164 @@
+//! Bit-slicing primitives shared by the scalar and matrix digit algorithms.
+//!
+//! The paper's notation `x^[a:b]` denotes bits `a` down to `b` of a scalar.
+//! All digit algorithms split a `w`-bit value into a *high* part of
+//! `⌊w/2⌋` bits and a *low* part of `⌈w/2⌉` bits (Algorithms 1–4):
+//!
+//! ```text
+//!   x = x1 << ⌈w/2⌉ | x0,   x1 = x^[w-1 : ⌈w/2⌉],   x0 = x^[⌈w/2⌉-1 : 0]
+//! ```
+
+/// `⌈w/2⌉` — the low-digit width (also the split shift amount).
+pub const fn lo_width(w: u32) -> u32 {
+    w.div_ceil(2)
+}
+
+/// `⌊w/2⌋` — the high-digit width.
+pub const fn hi_width(w: u32) -> u32 {
+    w / 2
+}
+
+/// Bit mask of the `w` lowest bits (`w ≤ 64`; `w = 64` yields all-ones).
+pub const fn mask(w: u32) -> u64 {
+    if w >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << w) - 1
+    }
+}
+
+/// Split a `w`-bit value into `(hi, lo)` per the paper's convention:
+/// `hi` holds bits `w-1..⌈w/2⌉` (a `⌊w/2⌋`-bit value), `lo` holds bits
+/// `⌈w/2⌉-1..0` (a `⌈w/2⌉`-bit value).
+pub fn split(x: u64, w: u32) -> (u64, u64) {
+    debug_assert!(w >= 1 && w <= 64);
+    debug_assert!(fits(x, w), "value {x:#x} exceeds {w} bits");
+    let s = lo_width(w);
+    (x >> s, x & mask(s))
+}
+
+/// Split at an explicit bit position `pos` (the precision-scalable
+/// architecture's fixed hardware split at `m` or `m−1`, §IV-C):
+/// `hi = x >> pos`, `lo = x & mask(pos)`.
+pub fn split_at(x: u64, pos: u32) -> (u64, u64) {
+    debug_assert!(pos >= 1 && pos < 64);
+    (x >> pos, x & mask(pos))
+}
+
+/// Recombine digits: `hi << ⌈w/2⌉ | lo`. Inverse of [`split`].
+pub fn join(hi: u64, lo: u64, w: u32) -> u64 {
+    let s = lo_width(w);
+    debug_assert!(fits(lo, s));
+    (hi << s) | lo
+}
+
+/// True iff `x` fits in `w` unsigned bits.
+pub fn fits(x: u64, w: u32) -> bool {
+    w >= 64 || x < (1u64 << w)
+}
+
+/// Number of digits `n = 2^levels` covering `w` bits with `levels`
+/// recursion steps; `r = ⌈log2 n⌉` in the paper's notation.
+pub const fn recursion_levels(n: u32) -> u32 {
+    n.next_power_of_two().trailing_zeros()
+}
+
+/// Validity of an `(n, w)` algorithm configuration: `n` must be a power of
+/// two and each of the `r` recursive splits must leave at least 1 bit per
+/// digit (`w ≥ n`).
+pub fn config_valid(n: u32, w: u32) -> bool {
+    n.is_power_of_two() && n >= 1 && w >= n && w <= 64
+}
+
+/// The digit widths produced by one split of a `w`-bit operand, in the
+/// order the three Karatsuba sub-products use them:
+/// `(⌊w/2⌋, ⌈w/2⌉ + 1, ⌈w/2⌉)` for (hi·hi, sum·sum, lo·lo).
+pub fn karatsuba_subwidths(w: u32) -> (u32, u32, u32) {
+    (hi_width(w), lo_width(w) + 1, lo_width(w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+
+    #[test]
+    fn widths_partition_w() {
+        for w in 1..=64 {
+            assert_eq!(lo_width(w) + hi_width(w), w, "w={w}");
+        }
+    }
+
+    #[test]
+    fn mask_examples() {
+        assert_eq!(mask(0), 0);
+        assert_eq!(mask(4), 0xF);
+        assert_eq!(mask(8), 0xFF);
+        assert_eq!(mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn split_examples_from_paper() {
+        // 0xAE^[7:4] = 0xA, 0xAE^[3:0] = 0xE (paper §II-A).
+        assert_eq!(split(0xAE, 8), (0xA, 0xE));
+        // 0x12 on 8 bits splits to (1, 2).
+        assert_eq!(split(0x12, 8), (0x1, 0x2));
+    }
+
+    #[test]
+    fn split_odd_width() {
+        // w = 7: lo width 4, hi width 3.
+        let (hi, lo) = split(0b101_1011, 7);
+        assert_eq!(hi, 0b101);
+        assert_eq!(lo, 0b1011);
+    }
+
+    #[test]
+    fn split_join_roundtrip_prop() {
+        forall(Config::default().cases(300), |rng| {
+            let w = rng.range(1, 64) as u32;
+            let x = rng.bits(w);
+            let (hi, lo) = split(x, w);
+            crate::util::prop::prop_assert_eq(join(hi, lo, w), x, "join∘split = id")?;
+            crate::util::prop::prop_assert(fits(hi, hi_width(w)), "hi fits ⌊w/2⌋")?;
+            crate::util::prop::prop_assert(fits(lo, lo_width(w)), "lo fits ⌈w/2⌉")
+        });
+    }
+
+    #[test]
+    fn split_value_identity_prop() {
+        // x == hi * 2^⌈w/2⌉ + lo — the algebraic identity the algorithms use.
+        forall(Config::default().cases(300), |rng| {
+            let w = rng.range(2, 64) as u32;
+            let x = rng.bits(w);
+            let (hi, lo) = split(x, w);
+            let recon = (hi as u128) << lo_width(w) | lo as u128;
+            crate::util::prop::prop_assert_eq(recon, x as u128, "value identity")
+        });
+    }
+
+    #[test]
+    fn recursion_levels_examples() {
+        assert_eq!(recursion_levels(1), 0);
+        assert_eq!(recursion_levels(2), 1);
+        assert_eq!(recursion_levels(4), 2);
+        assert_eq!(recursion_levels(8), 3);
+    }
+
+    #[test]
+    fn config_validity() {
+        assert!(config_valid(1, 8));
+        assert!(config_valid(2, 8));
+        assert!(config_valid(4, 64));
+        assert!(!config_valid(3, 8)); // not a power of two
+        assert!(!config_valid(16, 8)); // more digits than bits
+        assert!(!config_valid(2, 65)); // too wide
+    }
+
+    #[test]
+    fn karatsuba_subwidths_examples() {
+        assert_eq!(karatsuba_subwidths(8), (4, 5, 4));
+        assert_eq!(karatsuba_subwidths(7), (3, 5, 4));
+        assert_eq!(karatsuba_subwidths(16), (8, 9, 8));
+    }
+}

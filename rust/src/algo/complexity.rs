@@ -1,0 +1,361 @@
+//! Closed-form complexity evaluators — eqs. (2)–(8) of §III-B.
+//!
+//! Two families:
+//!
+//! 1. **Bitwidth-decomposed** (`c_mm1`, `c_mm`, `c_ksm`, `c_ksmm`,
+//!    `c_kmm`): evaluate the recursive cost equations to a [`Tally`], the
+//!    same type the executable algorithms in this crate *count into*. The
+//!    test suite asserts `counted == closed-form` for every algorithm —
+//!    eqs. (2a)–(5b) are machine-checked against Algorithms 1–5.
+//! 2. **Arithmetic** (`arith_mm`, `arith_ksmm`, `arith_kmm`): the paper's
+//!    simplified operation totals (eqs. 6–8) used for Fig. 5. These are
+//!    the paper's own closed forms; note they approximate the recursion
+//!    as a single level scaled by `(n/2)^log2 3` (exact at `n = 2`,
+//!    slightly undercounting deeper recursion — see
+//!    `arith_forms_exact_at_n2` / EXPERIMENTS.md §Fig5).
+
+use crate::algo::bits;
+use crate::algo::opcount::{OpKind, Tally};
+
+/// GEMM problem dimensions: `A` is `m×k`, `B` is `k×n`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dims {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Dims {
+    /// Square `d×d · d×d`.
+    pub fn square(d: usize) -> Self {
+        Dims { m: d, k: d, n: d }
+    }
+
+    /// Number of scalar product terms (`d³` for square).
+    pub fn macs(&self) -> u128 {
+        (self.m * self.k * self.n) as u128
+    }
+
+    /// Number of output elements (`d²` for square).
+    pub fn outs(&self) -> u128 {
+        (self.m * self.n) as u128
+    }
+
+    /// Input-element counts (for the `As`/`Bs` digit-sum adds).
+    pub fn ins(&self) -> u128 {
+        (self.m * self.k + self.k * self.n) as u128
+    }
+}
+
+/// eq. (2b): `C(MM_1^[w]) = d³ (MULT^[w] + ACCUM^[2w])`.
+pub fn c_mm1(w: u32, dims: Dims) -> Tally {
+    let mut t = Tally::new();
+    t.record(OpKind::Mult, w, dims.macs());
+    t.record(OpKind::Accum, 2 * w, dims.macs());
+    t
+}
+
+/// eq. (2a): conventional n-digit matrix multiplication cost.
+pub fn c_mm(n: u32, w: u32, dims: Dims, wa: u32) -> Tally {
+    if n == 1 {
+        return c_mm1(w, dims);
+    }
+    let wl = bits::lo_width(w);
+    let wh = bits::hi_width(w);
+    let mut t = c_mm(n / 2, wh, dims, wa);
+    for _ in 0..3 {
+        t.merge(&c_mm(n / 2, wl, dims, wa));
+    }
+    t.record(OpKind::Add, w + wa, dims.outs());
+    t.record(OpKind::Add, 2 * w + wa, 2 * dims.outs());
+    t.record(OpKind::Shift, w, dims.outs());
+    t.record(OpKind::Shift, wl, dims.outs());
+    t
+}
+
+/// eq. (3): Karatsuba scalar multiplication cost.
+pub fn c_ksm(n: u32, w: u32) -> Tally {
+    if n == 1 {
+        let mut t = Tally::new();
+        t.mult(w);
+        return t;
+    }
+    let wl = bits::lo_width(w);
+    let wh = bits::hi_width(w);
+    let mut t = Tally::new();
+    t.record(OpKind::Add, 2 * w, 2);
+    t.record(OpKind::Add, wl, 2);
+    t.record(OpKind::Add, 2 * wl + 4, 2);
+    t.record(OpKind::Shift, w, 1);
+    t.record(OpKind::Shift, wl, 1);
+    t.merge(&c_ksm(n / 2, wh));
+    t.merge(&c_ksm(n / 2, wl + 1));
+    t.merge(&c_ksm(n / 2, wl));
+    t
+}
+
+/// eq. (4): `C(KSMM_n^[w]) = d³ (C(KSM_n^[w]) + ACCUM^[2w])`.
+pub fn c_ksmm(n: u32, w: u32, dims: Dims) -> Tally {
+    let mut per_mac = c_ksm(n, w);
+    per_mac.accum(2 * w);
+    per_mac.scaled(dims.macs())
+}
+
+/// eq. (5): Karatsuba matrix multiplication cost.
+pub fn c_kmm(n: u32, w: u32, dims: Dims, wa: u32) -> Tally {
+    if n == 1 {
+        return c_mm1(w, dims);
+    }
+    let wl = bits::lo_width(w);
+    let wh = bits::hi_width(w);
+    let mut t = Tally::new();
+    // Digit-sum adds: 2d² for square inputs (eq. 5a); exact general count
+    // is one add per element of A and of B.
+    t.record(OpKind::Add, wl, dims.ins());
+    // (Cs − C1 − C0): 2 ADD^[2⌈w/2⌉+4+wa] per output element.
+    t.record(OpKind::Add, 2 * wl + 4 + wa, 2 * dims.outs());
+    // Adds into C (lines 13–14): 2 ADD^[2w+wa] per output element.
+    t.record(OpKind::Add, 2 * w + wa, 2 * dims.outs());
+    t.record(OpKind::Shift, w, dims.outs());
+    t.record(OpKind::Shift, wl, dims.outs());
+    t.merge(&c_kmm(n / 2, wh, dims, wa));
+    t.merge(&c_kmm(n / 2, wl + 1, dims, wa));
+    t.merge(&c_kmm(n / 2, wl, dims, wa));
+    t
+}
+
+/// `(n/2)^(log2 3)` for power-of-two `n ≥ 2` — an exact integer
+/// (`3^(r−1)` where `r = log2 n`).
+pub fn half_n_pow_log2_3(n: u32) -> u128 {
+    assert!(n.is_power_of_two() && n >= 2);
+    3u128.pow(bits::recursion_levels(n) - 1)
+}
+
+/// eq. (6): `C(MM_n) = 2 n² d³ + 5 (n/2)² d²` (arithmetic op total).
+pub fn arith_mm(n: u32, d: u64) -> u128 {
+    let d3 = (d as u128).pow(3);
+    let d2 = (d as u128).pow(2);
+    2 * (n as u128).pow(2) * d3 + 5 * ((n / 2) as u128).pow(2) * d2
+}
+
+/// eq. (7): `C(KSMM_n) = (1 + 11 (n/2)^log2 3) d³`.
+pub fn arith_ksmm(n: u32, d: u64) -> u128 {
+    let d3 = (d as u128).pow(3);
+    (1 + 11 * half_n_pow_log2_3(n)) * d3
+}
+
+/// eq. (8): `C(KMM_n) = (n/2)^log2 3 (6 d³ + 8 d²)`.
+pub fn arith_kmm(n: u32, d: u64) -> u128 {
+    let d3 = (d as u128).pow(3);
+    let d2 = (d as u128).pow(2);
+    half_n_pow_log2_3(n) * (6 * d3 + 8 * d2)
+}
+
+/// One Fig. 5 data point: eqs. (6) and (7) relative to eq. (8).
+#[derive(Debug, Clone, Copy)]
+pub struct Fig5Point {
+    pub n: u32,
+    pub mm_over_kmm: f64,
+    pub ksmm_over_kmm: f64,
+}
+
+/// The Fig. 5 series: relative op counts for `n ∈ {2, 4, …, n_max}`,
+/// `d = 64` in the paper.
+pub fn fig5_series(d: u64, n_max: u32) -> Vec<Fig5Point> {
+    let mut out = vec![];
+    let mut n = 2;
+    while n <= n_max {
+        let kmm = arith_kmm(n, d) as f64;
+        out.push(Fig5Point {
+            n,
+            mm_over_kmm: arith_mm(n, d) as f64 / kmm,
+            ksmm_over_kmm: arith_ksmm(n, d) as f64 / kmm,
+        });
+        n *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::kmm::kmm;
+    use crate::algo::ksm::ksm;
+    use crate::algo::ksmm::ksmm;
+    use crate::algo::matrix::Mat;
+    use crate::algo::mm::{mm, mm1, wa_for_depth};
+    use crate::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    /// The load-bearing cross-check: closed forms == counted operations.
+    #[test]
+    fn counted_mm_matches_eq2() {
+        forall(Config::default().cases(40), |rng| {
+            let n_digits = *rng.pick(&[1u32, 2, 4, 8]);
+            let (m, k, n) = (rng.range(1, 5), rng.range(1, 5), rng.range(1, 5));
+            let w = rng.range(n_digits as usize, 64) as u32;
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let mut counted = Tally::new();
+            mm(&a, &b, w, n_digits, &mut counted);
+            let closed = c_mm(n_digits, w, Dims { m, k, n }, wa_for_depth(k));
+            prop_assert_eq(counted, closed, &format!("eq2 MM_{n_digits}^[{w}]"))
+        });
+    }
+
+    #[test]
+    fn counted_ksm_matches_eq3() {
+        forall(Config::default().cases(60), |rng| {
+            let n_digits = *rng.pick(&[1u32, 2, 4, 8]);
+            let w = rng.range(n_digits as usize, 64) as u32;
+            let mut counted = Tally::new();
+            ksm(rng.bits(w), rng.bits(w), w, n_digits, &mut counted);
+            prop_assert_eq(counted, c_ksm(n_digits, w), &format!("eq3 KSM_{n_digits}^[{w}]"))
+        });
+    }
+
+    #[test]
+    fn counted_ksmm_matches_eq4() {
+        forall(Config::default().cases(30), |rng| {
+            let n_digits = *rng.pick(&[1u32, 2, 4]);
+            let (m, k, n) = (rng.range(1, 4), rng.range(1, 4), rng.range(1, 4));
+            let w = rng.range(n_digits as usize, 48) as u32;
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let mut counted = Tally::new();
+            ksmm(&a, &b, w, n_digits, &mut counted);
+            let closed = c_ksmm(n_digits, w, Dims { m, k, n });
+            prop_assert_eq(counted, closed, &format!("eq4 KSMM_{n_digits}^[{w}]"))
+        });
+    }
+
+    #[test]
+    fn counted_kmm_matches_eq5() {
+        forall(Config::default().cases(40), |rng| {
+            let n_digits = *rng.pick(&[1u32, 2, 4, 8]);
+            let (m, k, n) = (rng.range(1, 5), rng.range(1, 5), rng.range(1, 5));
+            let w = rng.range(n_digits as usize, 64) as u32;
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let mut counted = Tally::new();
+            kmm(&a, &b, w, n_digits, &mut counted);
+            let closed = c_kmm(n_digits, w, Dims { m, k, n }, wa_for_depth(k));
+            prop_assert_eq(counted, closed, &format!("eq5 KMM_{n_digits}^[{w}]"))
+        });
+    }
+
+    #[test]
+    fn counted_mm1_matches_eq2b() {
+        let mut rng = Rng::new(1);
+        let a = Mat::random(3, 4, 8, &mut rng);
+        let b = Mat::random(4, 5, 8, &mut rng);
+        let mut counted = Tally::new();
+        mm1(&a, &b, 8, &mut counted);
+        assert_eq!(counted, c_mm1(8, Dims { m: 3, k: 4, n: 5 }));
+    }
+
+    #[test]
+    fn half_n_pow_values() {
+        assert_eq!(half_n_pow_log2_3(2), 1);
+        assert_eq!(half_n_pow_log2_3(4), 3);
+        assert_eq!(half_n_pow_log2_3(8), 9);
+        assert_eq!(half_n_pow_log2_3(16), 27);
+        assert_eq!(half_n_pow_log2_3(32), 81);
+    }
+
+    #[test]
+    fn arith_forms_exact_at_n2() {
+        // At n = 2 the paper's simplified totals are exact: compare with
+        // counted totals of the executable algorithms.
+        let d = 8usize;
+        let w = 16u32;
+        let mut rng = Rng::new(3);
+        let a = Mat::random(d, d, w, &mut rng);
+        let b = Mat::random(d, d, w, &mut rng);
+
+        let mut tm = Tally::new();
+        mm(&a, &b, w, 2, &mut tm);
+        assert_eq!(tm.total(), arith_mm(2, d as u64));
+
+        let mut tk = Tally::new();
+        kmm(&a, &b, w, 2, &mut tk);
+        assert_eq!(tk.total(), arith_kmm(2, d as u64));
+
+        let mut ts = Tally::new();
+        ksmm(&a, &b, w, 2, &mut ts);
+        assert_eq!(ts.total(), arith_ksmm(2, d as u64));
+    }
+
+    #[test]
+    fn arith_forms_track_counted_within_tolerance_at_n4() {
+        // For n > 2 the paper's closed forms approximate the recursion
+        // tree (they scale one level by (n/2)^log2 3). Verify they stay
+        // within 25% of the exact counted totals — close enough that the
+        // Fig. 5 ordering conclusions hold.
+        let d = 8usize;
+        let w = 32u32;
+        let mut rng = Rng::new(4);
+        let a = Mat::random(d, d, w, &mut rng);
+        let b = Mat::random(d, d, w, &mut rng);
+        for (algo, approx) in [
+            ("mm", arith_mm(4, d as u64)),
+            ("kmm", arith_kmm(4, d as u64)),
+            ("ksmm", arith_ksmm(4, d as u64)),
+        ] {
+            let mut t = Tally::new();
+            let counted = match algo {
+                "mm" => {
+                    mm(&a, &b, w, 4, &mut t);
+                    t.total()
+                }
+                "kmm" => {
+                    kmm(&a, &b, w, 4, &mut t);
+                    t.total()
+                }
+                _ => {
+                    ksmm(&a, &b, w, 4, &mut t);
+                    t.total()
+                }
+            };
+            let ratio = approx as f64 / counted as f64;
+            assert!(
+                (0.75..=1.25).contains(&ratio),
+                "{algo}: approx {approx} vs counted {counted} (ratio {ratio:.3})"
+            );
+        }
+    }
+
+    #[test]
+    fn fig5_shape_matches_paper() {
+        // Paper, Fig. 5 caption: KSMM_n requires over 75% more operations
+        // than KMM_n; KMM_n < MM_n starting at n=2, KSMM_n only for n>4.
+        let series = fig5_series(64, 32);
+        for p in &series {
+            assert!(
+                p.ksmm_over_kmm > 1.75,
+                "n={}: KSMM/KMM = {:.3}",
+                p.n,
+                p.ksmm_over_kmm
+            );
+        }
+        let at = |n: u32| series.iter().find(|p| p.n == n).unwrap();
+        assert!(at(2).mm_over_kmm > 1.0); // KMM beats MM already at n=2
+        assert!(at(2).ksmm_over_kmm > at(2).mm_over_kmm); // KSMM worse than MM at n=2
+        assert!(at(4).ksmm_over_kmm > at(4).mm_over_kmm); // ... and still at n=4
+        // KSMM falls below MM only for n > 4:
+        assert!(at(8).ksmm_over_kmm < at(8).mm_over_kmm);
+        // MM/KMM grows with n (exponential separation):
+        assert!(at(32).mm_over_kmm > at(8).mm_over_kmm);
+        assert!(at(8).mm_over_kmm > at(2).mm_over_kmm);
+    }
+
+    #[test]
+    fn ksmm_below_mm_only_above_n4() {
+        // Direct statement of the crossover in absolute counts.
+        let d = 64;
+        assert!(arith_ksmm(2, d) > arith_mm(2, d));
+        assert!(arith_ksmm(4, d) > arith_mm(4, d));
+        assert!(arith_ksmm(8, d) < arith_mm(8, d));
+        prop_assert(arith_kmm(2, d) < arith_mm(2, d), "KMM < MM at n=2").unwrap();
+    }
+}

@@ -1,0 +1,310 @@
+//! Algorithm 4 — n-digit **Karatsuba matrix multiplication** (`KMM_n^[w]`),
+//! the paper's core algorithmic contribution.
+//!
+//! The scalar Karatsuba identity is lifted to whole matrices of digit
+//! slices:
+//!
+//! ```text
+//!   As = A1 + A0,  Bs = B1 + B0                     (O(d²) adds)
+//!   C  = (A1·B1) << w
+//!      + (As·Bs − A1·B1 − A0·B0) << ⌈w/2⌉           (3 sub-MMs, O(d³) each)
+//!      + A0·B0
+//! ```
+//!
+//! Versus scalar-Karatsuba-per-element (KSMM), the extra additions move
+//! from O(d³) to O(d²) occurrences — so the 3-vs-4 multiplication saving
+//! survives at common small bitwidths (§III, Fig. 4/5).
+
+use crate::algo::bits;
+use crate::algo::matrix::{Mat, MatAcc};
+use crate::algo::mm::{mm1, mm1_preaccum, wa_for_depth};
+use crate::algo::opcount::Tally;
+
+/// Base-case (`MM_1`) selector for the KMM leaves: the plain eq. (1)
+/// inner product, or Algorithm 5 with pre-accumulation factor `p`
+/// (the paper's evaluated configuration uses `p = 4`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaseMm {
+    /// eq. (1) with conventional accumulation (`ACCUM^[2w]` entries).
+    Plain,
+    /// Algorithm 5 with pre-accumulation group size `p` (ADD entries
+    /// per eq. 10).
+    PreAccum(usize),
+}
+
+/// Compute `A × B` by Algorithm 4 with `n = 2^r` digits over `w`-bit
+/// elements, recording every operation into `tally` with the eq. (5a)
+/// bitwidths.
+pub fn kmm(a: &Mat, b: &Mat, w: u32, n: u32, tally: &mut Tally) -> MatAcc {
+    kmm_with_base(a, b, w, n, BaseMm::Plain, tally)
+}
+
+/// [`kmm`] with an explicit `MM_1` base algorithm (§III-C pairing of KMM
+/// with Algorithm 5).
+pub fn kmm_with_base(
+    a: &Mat,
+    b: &Mat,
+    w: u32,
+    n: u32,
+    base: BaseMm,
+    tally: &mut Tally,
+) -> MatAcc {
+    assert!(bits::config_valid(n, w), "invalid KMM config n={n} w={w}");
+    assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");
+    let wa = wa_for_depth(a.cols);
+    kmm_rec(a, b, w, n, wa, base, tally)
+}
+
+fn kmm_rec(
+    a: &Mat,
+    b: &Mat,
+    w: u32,
+    n: u32,
+    wa: u32,
+    base: BaseMm,
+    tally: &mut Tally,
+) -> MatAcc {
+    if n == 1 {
+        return match base {
+            BaseMm::Plain => mm1(a, b, w, tally),
+            BaseMm::PreAccum(p) => mm1_preaccum(a, b, w, p, tally),
+        };
+    }
+    let wl = bits::lo_width(w);
+    let wh = bits::hi_width(w);
+    let (a1, a0) = a.split(w);
+    let (b1, b0) = b.split(w);
+
+    // Lines 7–8: digit-sum matrices, ⌈w/2⌉-bit adds, one per element.
+    for _ in 0..a.rows * a.cols {
+        tally.add(wl);
+    }
+    for _ in 0..b.rows * b.cols {
+        tally.add(wl);
+    }
+    let a_s = a1.add(&a0); // (⌈w/2⌉+1)-bit elements
+    let b_s = b1.add(&b0);
+
+    // Lines 9–11: three sub-products at ⌊w/2⌋ / ⌈w/2⌉+1 / ⌈w/2⌉ bits.
+    let c1 = kmm_rec(&a1, &b1, wh, n / 2, wa, base, tally);
+    let c_s = kmm_rec(&a_s, &b_s, wl + 1, n / 2, wa, base, tally);
+    let c0 = kmm_rec(&a0, &b0, wl, n / 2, wa, base, tally);
+
+    // Lines 12–14 recombination, counted per output element (eq. 5a):
+    // two (2⌈w/2⌉+4+wa)-bit adds for (Cs − C1 − C0), both shifts, and two
+    // (2w+wa)-bit adds into C.
+    for _ in 0..a.rows * b.cols {
+        tally.add(2 * wl + 4 + wa);
+        tally.add(2 * wl + 4 + wa);
+        tally.shift(w);
+        tally.shift(wl);
+        tally.add(2 * w + wa);
+        tally.add(2 * w + wa);
+    }
+    // Paper erratum (see `algo::sm`): the high-product shift is 2⌈w/2⌉,
+    // not w (differs for odd w, which the ⌈w/2⌉+1 operand widths force
+    // at n ≥ 4).
+    let cross = c_s.sub(&c1).sub(&c0);
+    c1.shl(2 * wl).add(&cross.shl(wl)).add(&c0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::matmul_oracle;
+    use crate::algo::mm::mm;
+    use crate::algo::opcount::OpKind;
+    use crate::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kmm2_known_2x2() {
+        let a = Mat::from_rows(2, 2, &[0x12, 0x34, 0x56, 0x78]);
+        let b = Mat::from_rows(2, 2, &[0x9A, 0xBC, 0xDE, 0xF0]);
+        let mut t = Tally::new();
+        let c = kmm(&a, &b, 8, 2, &mut t);
+        assert_eq!(c, matmul_oracle(&a, &b));
+    }
+
+    #[test]
+    fn kmm_matches_oracle_prop() {
+        forall(Config::default().cases(100), |rng| {
+            let n_digits = *rng.pick(&[1u32, 2, 4, 8]);
+            let (m, k, n) = (rng.range(1, 5), rng.range(1, 5), rng.range(1, 5));
+            let w = rng.range(n_digits as usize, 64) as u32;
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let mut t = Tally::new();
+            prop_assert_eq(
+                kmm(&a, &b, w, n_digits, &mut t),
+                matmul_oracle(&a, &b),
+                &format!("KMM_{n_digits}^[{w}] == oracle"),
+            )
+        });
+    }
+
+    #[test]
+    fn kmm_agrees_with_mm_prop() {
+        forall(Config::default().cases(60), |rng| {
+            let n_digits = *rng.pick(&[2u32, 4]);
+            let d = rng.range(1, 5);
+            let w = rng.range(n_digits as usize, 64) as u32;
+            let a = Mat::random(d, d, w, rng);
+            let b = Mat::random(d, d, w, rng);
+            let mut t1 = Tally::new();
+            let mut t2 = Tally::new();
+            prop_assert_eq(
+                kmm(&a, &b, w, n_digits, &mut t1),
+                mm(&a, &b, w, n_digits, &mut t2),
+                "KMM == MM",
+            )
+        });
+    }
+
+    #[test]
+    fn kmm_with_preaccum_base_matches() {
+        forall(Config::default().cases(40), |rng| {
+            let d = rng.range(1, 6);
+            let w = rng.range(4, 32) as u32;
+            let a = Mat::random(d, d, w, rng);
+            let b = Mat::random(d, d, w, rng);
+            let mut t1 = Tally::new();
+            let mut t2 = Tally::new();
+            prop_assert_eq(
+                kmm_with_base(&a, &b, w, 2, BaseMm::PreAccum(4), &mut t1),
+                kmm(&a, &b, w, 2, &mut t2),
+                "KMM(Alg5 base) == KMM(plain base)",
+            )
+        });
+    }
+
+    #[test]
+    fn kmm2_multiplication_count_is_3_d3() {
+        // The headline: 3 half-width sub-matmuls instead of 4.
+        let mut rng = Rng::new(1);
+        let d = 4usize;
+        let a = Mat::random(d, d, 16, &mut rng);
+        let b = Mat::random(d, d, 16, &mut rng);
+        let mut t = Tally::new();
+        kmm(&a, &b, 16, 2, &mut t);
+        let d3 = (d * d * d) as u128;
+        assert_eq!(t.count_kind(OpKind::Mult), 3 * d3);
+        // Widths: d³ at ⌊w/2⌋=8, d³ at ⌈w/2⌉+1=9, d³ at ⌈w/2⌉=8.
+        assert_eq!(t.count(OpKind::Mult, 8), 2 * d3);
+        assert_eq!(t.count(OpKind::Mult, 9), d3);
+    }
+
+    #[test]
+    fn kmm_mult_count_is_3_pow_r_d3_prop() {
+        forall(Config::default().cases(30), |rng| {
+            let n_digits = *rng.pick(&[1u32, 2, 4, 8]);
+            let d = rng.range(1, 5);
+            let w = rng.range((n_digits as usize).max(16), 64) as u32;
+            let a = Mat::random(d, d, w, rng);
+            let b = Mat::random(d, d, w, rng);
+            let mut t = Tally::new();
+            kmm(&a, &b, w, n_digits, &mut t);
+            let r = bits::recursion_levels(n_digits);
+            prop_assert_eq(
+                t.count_kind(OpKind::Mult),
+                3u128.pow(r) * (d * d * d) as u128,
+                "KMM mult count = 3^r d³",
+            )
+        });
+    }
+
+    #[test]
+    fn kmm_extra_adds_are_o_d2() {
+        // Versus MM: KMM's *extra* non-mult ops per level scale with d²,
+        // not d³ — count adds excluding accumulations at two sizes.
+        let w = 16u32;
+        let count_adds = |d: usize| -> (u128, u128) {
+            let mut rng = Rng::new(d as u64);
+            let a = Mat::random(d, d, w, &mut rng);
+            let b = Mat::random(d, d, w, &mut rng);
+            let mut tk = Tally::new();
+            kmm(&a, &b, w, 2, &mut tk);
+            let mut tm = Tally::new();
+            mm(&a, &b, w, 2, &mut tm);
+            (tk.count_kind(OpKind::Add), tm.count_kind(OpKind::Add))
+        };
+        let (k4, m4) = count_adds(4);
+        let (k8, m8) = count_adds(8);
+        // Quadrupling: d 4→8 means d² grows 4×. ADD counts are pure-d²
+        // terms for both algorithms at one recursion level.
+        assert_eq!(k8, k4 * 4);
+        assert_eq!(m8, m4 * 4);
+        // And KMM has 8 adds/shifts-group vs MM's 3 adds, but 3 vs 4 mults.
+        assert!(k8 > m8);
+    }
+
+    #[test]
+    fn kmm_total_ops_below_mm_at_n2() {
+        // Fig. 5's key claim: KMM_n < MM_n in total ops already at n=2
+        // (for d large enough that d³ dominates).
+        let d = 16usize;
+        let w = 16u32;
+        let mut rng = Rng::new(2);
+        let a = Mat::random(d, d, w, &mut rng);
+        let b = Mat::random(d, d, w, &mut rng);
+        let mut tk = Tally::new();
+        let mut tm = Tally::new();
+        kmm(&a, &b, w, 2, &mut tk);
+        mm(&a, &b, w, 2, &mut tm);
+        assert!(
+            tk.total() < tm.total(),
+            "KMM {} !< MM {}",
+            tk.total(),
+            tm.total()
+        );
+    }
+
+    #[test]
+    fn kmm_64bit_max_operands() {
+        let a = Mat::from_fn(3, 3, |_, _| u64::MAX);
+        let b = Mat::from_fn(3, 3, |_, _| u64::MAX);
+        for n in [2u32, 4, 8] {
+            let mut t = Tally::new();
+            assert_eq!(kmm(&a, &b, 64, n, &mut t), matmul_oracle(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn kmm_rectangular_shapes() {
+        let mut rng = Rng::new(9);
+        for (m, k, n) in [(1, 7, 3), (5, 1, 2), (8, 3, 1), (2, 9, 4)] {
+            let a = Mat::random(m, k, 12, &mut rng);
+            let b = Mat::random(k, n, 12, &mut rng);
+            let mut t = Tally::new();
+            assert_eq!(
+                kmm(&a, &b, 12, 2, &mut t),
+                matmul_oracle(&a, &b),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn cross_term_headroom() {
+        // (Cs − C1 − C0) is non-negative and bounded by 2⌈w/2⌉+2+wa bits.
+        let d = 8usize;
+        let w = 16u32;
+        let a = Mat::from_fn(d, d, |_, _| (1 << w) - 1);
+        let b = Mat::from_fn(d, d, |_, _| (1 << w) - 1);
+        let (a1, a0) = a.split(w);
+        let (b1, b0) = b.split(w);
+        let a_s = a1.add(&a0);
+        let b_s = b1.add(&b0);
+        let mut t = Tally::new();
+        let c_s = mm1(&a_s, &b_s, 9, &mut t);
+        let c1 = mm1(&a1, &b1, 8, &mut t);
+        let c0 = mm1(&a0, &b0, 8, &mut t);
+        let cross = c_s.sub(&c1).sub(&c0);
+        let wa = wa_for_depth(d);
+        prop_assert(
+            cross.max_abs_bits() <= 2 * bits::lo_width(w) + 2 + wa,
+            "cross-term bitwidth bound (§III-B.4)",
+        )
+        .unwrap();
+    }
+}

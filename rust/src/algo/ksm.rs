@@ -1,0 +1,178 @@
+//! Algorithm 2 — n-digit Karatsuba scalar multiplication (`KSM_n^[w]`).
+//!
+//! Karatsuba (1962) trades one of Algorithm 1's four sub-products for three
+//! extra additions:
+//!
+//! ```text
+//!   as = a1 + a0,  bs = b1 + b0
+//!   a·b = (a1·b1) << w + (as·bs − a1·b1 − a0·b0) << ⌈w/2⌉ + a0·b0
+//! ```
+//!
+//! Only 3 sub-multiplications remain (3^r for r recursion levels), but the
+//! extra additions limit its value for small bitwidths (§II-C) — the
+//! shortcoming the paper's KMM extension removes at the matrix level.
+
+use crate::algo::bits;
+use crate::algo::opcount::Tally;
+
+/// Compute `a × b` by Algorithm 2 with `n` digits over `w`-bit operands,
+/// recording every arithmetic operation into `tally`.
+///
+/// Operation accounting matches eq. (3a)/(3b) exactly — see
+/// `algo::complexity::c_ksm` and the cross-check tests there.
+pub fn ksm(a: u64, b: u64, w: u32, n: u32, tally: &mut Tally) -> u128 {
+    assert!(bits::config_valid(n, w), "invalid KSM config n={n} w={w}");
+    assert!(bits::fits(a, w) && bits::fits(b, w), "operand exceeds w={w} bits");
+    ksm_rec(a, b, w, n, tally)
+}
+
+// Arithmetic is carried in u128: the full 2w-bit product fits for w ≤ 64,
+// and the Karatsuba cross term (c_s − c1 − c0 = a1·b0 + a0·b1) is
+// algebraically non-negative, so each subtraction stays in range.
+fn ksm_rec(a: u64, b: u64, w: u32, n: u32, tally: &mut Tally) -> u128 {
+    if n == 1 {
+        tally.mult(w);
+        return (a as u128) * (b as u128);
+    }
+    let wl = bits::lo_width(w); // ⌈w/2⌉
+    let wh = bits::hi_width(w); // ⌊w/2⌋
+    let (a1, a0) = bits::split(a, w);
+    let (b1, b0) = bits::split(b, w);
+
+    // Digit sums (lines 7–8): (⌈w/2⌉+1)-bit values, counted as ADD^[⌈w/2⌉].
+    tally.add(wl);
+    tally.add(wl);
+    let a_s = a1 + a0;
+    let b_s = b1 + b0;
+
+    // Three sub-products (lines 9–11) at ⌊w/2⌋, ⌈w/2⌉+1, ⌈w/2⌉ bits.
+    let c1 = ksm_rec(a1, b1, wh, n / 2, tally);
+    let c_s = ksm_rec(a_s, b_s, wl + 1, n / 2, tally);
+    let c0 = ksm_rec(a0, b0, wl, n / 2, tally);
+
+    // (c_s − c1 − c0) on 2⌈w/2⌉+4 bits (two subtractions, eq. 3a).
+    tally.add(2 * wl + 4);
+    tally.add(2 * wl + 4);
+    let cross = c_s
+        .checked_sub(c1)
+        .and_then(|x| x.checked_sub(c0))
+        .expect("Karatsuba cross term is algebraically non-negative");
+
+    // Recombination (lines 12–14): shifts plus two 2w-bit additions.
+    // Paper erratum (see `algo::sm`): the high-product shift is 2⌈w/2⌉,
+    // not w, which differs when w is odd (the ⌈w/2⌉+1-wide recursive
+    // operands make odd widths unavoidable at n ≥ 4).
+    tally.shift(w);
+    tally.shift(wl);
+    tally.add(2 * w);
+    tally.add(2 * w);
+    (c1 << (2 * wl)) + (cross << wl) + c0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::opcount::OpKind;
+    use crate::algo::sm::sm;
+    use crate::util::prop::{forall, prop_assert_eq, Config};
+
+    #[test]
+    fn small_example() {
+        let mut t = Tally::new();
+        assert_eq!(ksm(0x12, 0x10, 8, 2, &mut t), 0x120);
+    }
+
+    #[test]
+    fn exact_vs_native_prop() {
+        forall(Config::default().cases(400), |rng| {
+            let n = *rng.pick(&[1u32, 2, 4, 8]);
+            let w = rng.range(n as usize, 64) as u32;
+            let a = rng.bits(w);
+            let b = rng.bits(w);
+            let mut t = Tally::new();
+            prop_assert_eq(
+                ksm(a, b, w, n, &mut t),
+                (a as u128) * (b as u128),
+                &format!("KSM_{n}^[{w}]({a:#x},{b:#x})"),
+            )
+        });
+    }
+
+    #[test]
+    fn agrees_with_sm_prop() {
+        forall(Config::default().cases(200), |rng| {
+            let n = *rng.pick(&[2u32, 4]);
+            let w = rng.range(n as usize, 64) as u32;
+            let (a, b) = (rng.bits(w), rng.bits(w));
+            let mut t1 = Tally::new();
+            let mut t2 = Tally::new();
+            prop_assert_eq(
+                ksm(a, b, w, n, &mut t1),
+                sm(a, b, w, n, &mut t2),
+                "KSM == SM",
+            )
+        });
+    }
+
+    #[test]
+    fn ksm2_uses_three_multiplications() {
+        let mut t = Tally::new();
+        ksm(0xFF, 0xFF, 8, 2, &mut t);
+        assert_eq!(t.count_kind(OpKind::Mult), 3);
+        // ⌊w/2⌋=4, ⌈w/2⌉+1=5, ⌈w/2⌉=4.
+        assert_eq!(t.count(OpKind::Mult, 4), 2);
+        assert_eq!(t.count(OpKind::Mult, 5), 1);
+    }
+
+    #[test]
+    fn mult_count_is_three_pow_r_prop() {
+        forall(Config::default().cases(60), |rng| {
+            let n = *rng.pick(&[1u32, 2, 4, 8]);
+            let w = rng.range((n as usize).max(16), 64) as u32;
+            let mut t = Tally::new();
+            ksm(rng.bits(w), rng.bits(w), w, n, &mut t);
+            let r = bits::recursion_levels(n);
+            prop_assert_eq(
+                t.count_kind(OpKind::Mult),
+                3u128.pow(r),
+                "KSM mult count = 3^r",
+            )
+        });
+    }
+
+    #[test]
+    fn ksm2_more_total_ops_than_sm2() {
+        // The scalar Karatsuba penalty (§II-C): fewer mults, more ops total.
+        let mut tk = Tally::new();
+        let mut ts = Tally::new();
+        ksm(0xAB, 0xCD, 8, 2, &mut tk);
+        sm(0xAB, 0xCD, 8, 2, &mut ts);
+        assert!(tk.count_kind(OpKind::Mult) < ts.count_kind(OpKind::Mult));
+        assert!(tk.total() > ts.total());
+    }
+
+    #[test]
+    fn max_operands_all_widths() {
+        for w in [2u32, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64] {
+            let a = bits::mask(w);
+            let mut t = Tally::new();
+            assert_eq!(ksm(a, a, w, 2, &mut t), (a as u128) * (a as u128), "w={w}");
+        }
+    }
+
+    #[test]
+    fn deep_recursion_64bit() {
+        let mut t = Tally::new();
+        let a = 0xDEAD_BEEF_CAFE_F00Du64;
+        let b = 0x0123_4567_89AB_CDEFu64;
+        assert_eq!(ksm(a, b, 64, 8, &mut t), (a as u128) * (b as u128));
+        assert_eq!(t.count_kind(OpKind::Mult), 27); // 3^3
+    }
+
+    #[test]
+    fn zero_identity() {
+        let mut t = Tally::new();
+        assert_eq!(ksm(0, 12345, 16, 4, &mut t), 0);
+        assert_eq!(ksm(1, 12345, 16, 4, &mut t), 12345);
+    }
+}

@@ -1,0 +1,115 @@
+//! KSMM — conventional matrix multiplication with **scalar** Karatsuba
+//! multipliers (§III-B.3).
+//!
+//! KSMM is the obvious way to use Karatsuba in a matmul: keep eq. (1)'s
+//! loop structure and replace every elementwise product with `KSM_n^[w]`.
+//! Its complexity (eq. 4) is `d³ (C(KSM_n^[w]) + ACCUM^[2w])`: all of
+//! KSM's extra additions recur *d³* times. The paper uses KSMM as the
+//! strawman KMM improves on — KMM hoists the digit-sum and recombination
+//! additions out of the inner product so they recur only d² times.
+
+use crate::algo::bits;
+use crate::algo::ksm::ksm;
+use crate::algo::matrix::{Mat, MatAcc};
+use crate::algo::opcount::Tally;
+use crate::util::wide::I256;
+
+/// Compute `A × B` with eq. (1) looping and `KSM_n^[w]` element products,
+/// recording operations per eq. (4).
+pub fn ksmm(a: &Mat, b: &Mat, w: u32, n: u32, tally: &mut Tally) -> MatAcc {
+    assert!(bits::config_valid(n, w), "invalid KSMM config n={n} w={w}");
+    assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");
+    let mut c = MatAcc::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut sum = I256::zero();
+            for k in 0..a.cols {
+                let prod = ksm(a[(i, k)], b[(k, j)], w, n, tally);
+                tally.accum(2 * w);
+                sum += I256::from_u128(prod);
+            }
+            c[(i, j)] = sum;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::kmm::kmm;
+    use crate::algo::matrix::matmul_oracle;
+    use crate::algo::opcount::OpKind;
+    use crate::util::prop::{forall, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_oracle_prop() {
+        forall(Config::default().cases(80), |rng| {
+            let n_digits = *rng.pick(&[1u32, 2, 4]);
+            let (m, k, n) = (rng.range(1, 5), rng.range(1, 5), rng.range(1, 5));
+            let w = rng.range(n_digits as usize, 64) as u32;
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let mut t = Tally::new();
+            prop_assert_eq(
+                ksmm(&a, &b, w, n_digits, &mut t),
+                matmul_oracle(&a, &b),
+                &format!("KSMM_{n_digits}^[{w}] == oracle"),
+            )
+        });
+    }
+
+    #[test]
+    fn same_mult_count_as_kmm_but_more_adds() {
+        // KSMM and KMM perform the same 3^r d³ multiplications; KSMM's
+        // addition count is strictly larger (the d³-vs-d² distinction).
+        let d = 6usize;
+        let w = 16u32;
+        let mut rng = Rng::new(4);
+        let a = Mat::random(d, d, w, &mut rng);
+        let b = Mat::random(d, d, w, &mut rng);
+        let mut tk = Tally::new();
+        let mut ts = Tally::new();
+        kmm(&a, &b, w, 2, &mut tk);
+        ksmm(&a, &b, w, 2, &mut ts);
+        assert_eq!(tk.count_kind(OpKind::Mult), ts.count_kind(OpKind::Mult));
+        assert!(ts.count_kind(OpKind::Add) > tk.count_kind(OpKind::Add));
+        assert!(ts.count_kind(OpKind::Shift) > tk.count_kind(OpKind::Shift));
+    }
+
+    #[test]
+    fn add_count_scales_with_d3() {
+        let w = 16u32;
+        let adds = |d: usize| {
+            let mut rng = Rng::new(d as u64);
+            let a = Mat::random(d, d, w, &mut rng);
+            let b = Mat::random(d, d, w, &mut rng);
+            let mut t = Tally::new();
+            ksmm(&a, &b, w, 2, &mut t);
+            t.count_kind(OpKind::Add)
+        };
+        // d 2→4: d³ grows 8×.
+        assert_eq!(adds(4), adds(2) * 8);
+    }
+
+    #[test]
+    fn eq4_structure() {
+        // C(KSMM) = d³ (C(KSM) + ACCUM^[2w]): accum count is exactly d³.
+        let d = 3usize;
+        let mut rng = Rng::new(8);
+        let a = Mat::random(d, d, 8, &mut rng);
+        let b = Mat::random(d, d, 8, &mut rng);
+        let mut t = Tally::new();
+        ksmm(&a, &b, 8, 2, &mut t);
+        assert_eq!(t.count(OpKind::Accum, 16), (d * d * d) as u128);
+    }
+
+    #[test]
+    fn ksmm_64bit() {
+        let a = Mat::from_fn(2, 2, |_, _| u64::MAX);
+        let b = Mat::from_fn(2, 2, |_, _| u64::MAX - 1);
+        let mut t = Tally::new();
+        assert_eq!(ksmm(&a, &b, 64, 4, &mut t), matmul_oracle(&a, &b));
+    }
+}

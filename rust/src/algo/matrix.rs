@@ -1,0 +1,394 @@
+//! Integer matrix types for the exact digit algorithms.
+//!
+//! [`Mat`] holds `w`-bit unsigned elements (the algorithms' inputs:
+//! `A`, `B`, and their digit planes `A1/A0/As/...`). [`MatAcc`] holds
+//! [`I256`] accumulator elements (partial-product matrices `C1/Cs/C0` and
+//! the final product), wide enough for `w = 64` inputs with GEMM-depth
+//! accumulation and Karatsuba recombination shifts.
+
+use crate::algo::bits;
+use crate::util::rng::Rng;
+use crate::util::wide::I256;
+use std::fmt;
+
+macro_rules! fmt_matrix {
+    ($t:ty) => {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            for i in 0..self.rows {
+                for j in 0..self.cols {
+                    if j > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(f, "{}", self[(i, j)])?;
+                }
+                writeln!(f)?;
+            }
+            Ok(())
+        }
+    };
+}
+
+/// Dense row-major matrix of `w`-bit unsigned integers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<u64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> u64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[u64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.to_vec(),
+        }
+    }
+
+    /// Uniformly random matrix of `w`-bit elements.
+    pub fn random(rows: usize, cols: usize, w: u32, rng: &mut Rng) -> Self {
+        Mat::from_fn(rows, cols, |_, _| rng.bits(w))
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// True iff every element fits in `w` bits.
+    pub fn fits(&self, w: u32) -> bool {
+        self.data.iter().all(|&x| bits::fits(x, w))
+    }
+
+    /// Largest element bitwidth present.
+    pub fn max_bits(&self) -> u32 {
+        self.data
+            .iter()
+            .map(|&x| 64 - x.leading_zeros())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Split every element at width `w` into (high-digit, low-digit)
+    /// matrices: the paper's `(A1, A0)` formation (Algorithms 3–4, lines
+    /// 3–6). Pure wiring in hardware — no operations are counted.
+    pub fn split(&self, w: u32) -> (Mat, Mat) {
+        let mut hi = Mat::zeros(self.rows, self.cols);
+        let mut lo = Mat::zeros(self.rows, self.cols);
+        for idx in 0..self.data.len() {
+            let (h, l) = bits::split(self.data[idx], w);
+            hi.data[idx] = h;
+            lo.data[idx] = l;
+        }
+        (hi, lo)
+    }
+
+    /// Split every element at an explicit bit position `pos` into
+    /// (high-digit, low-digit) matrices — the precision-scalable
+    /// architecture's fixed hardware split at `m` or `m−1` (§IV-C).
+    pub fn split_at(&self, pos: u32) -> (Mat, Mat) {
+        let mut hi = Mat::zeros(self.rows, self.cols);
+        let mut lo = Mat::zeros(self.rows, self.cols);
+        for idx in 0..self.data.len() {
+            let (h, l) = bits::split_at(self.data[idx], pos);
+            hi.data[idx] = h;
+            lo.data[idx] = l;
+        }
+        (hi, lo)
+    }
+
+    /// Elementwise sum (the `As = A1 + A0` digit-sum matrices). The caller
+    /// accounts for the additions.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for idx in 0..self.data.len() {
+            out.data[idx] = self.data[idx] + other.data[idx];
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = u64;
+    fn index(&self, (i, j): (usize, usize)) -> &u64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut u64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Display for Mat {
+    fmt_matrix!(u64);
+}
+
+/// Dense row-major matrix of wide ([`I256`]) accumulator elements.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatAcc {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<I256>,
+}
+
+impl MatAcc {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatAcc {
+            rows,
+            cols,
+            data: vec![I256::zero(); rows * cols],
+        }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(
+        rows: usize,
+        cols: usize,
+        mut f: impl FnMut(usize, usize) -> I256,
+    ) -> Self {
+        let mut m = MatAcc::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Elementwise `self + other`.
+    pub fn add(&self, other: &MatAcc) -> MatAcc {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        MatAcc::from_fn(self.rows, self.cols, |i, j| self[(i, j)] + other[(i, j)])
+    }
+
+    /// Elementwise `self - other`.
+    pub fn sub(&self, other: &MatAcc) -> MatAcc {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        MatAcc::from_fn(self.rows, self.cols, |i, j| self[(i, j)] - other[(i, j)])
+    }
+
+    /// Elementwise left shift (the hardware-free `<< w` recombination).
+    pub fn shl(&self, s: u32) -> MatAcc {
+        MatAcc::from_fn(self.rows, self.cols, |i, j| self[(i, j)] << s)
+    }
+
+    /// Checked conversion of every element to i128 (for interop/tests).
+    pub fn to_i128_vec(&self) -> Option<Vec<i128>> {
+        self.data.iter().map(|x| x.to_i128()).collect()
+    }
+
+    /// Largest element magnitude in bits (accumulator headroom checks).
+    pub fn max_abs_bits(&self) -> u32 {
+        self.data.iter().map(|x| x.abs_bits()).max().unwrap_or(0)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatAcc {
+    type Output = I256;
+    fn index(&self, (i, j): (usize, usize)) -> &I256 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for MatAcc {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut I256 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Display for MatAcc {
+    fmt_matrix!(I256);
+}
+
+/// True iff an unsigned product-accumulation over `depth` terms of
+/// `a`-by-`b` operands fits i128 with headroom — the guard for the
+/// narrow fast paths used by [`matmul_oracle`] and the architecture
+/// models (perf pass, EXPERIMENTS.md §Perf).
+pub fn fits_i128_accum(a: &Mat, b: &Mat, depth: usize) -> bool {
+    let bits = a.max_bits() + b.max_bits() + crate::algo::opcount::ceil_log2(depth.max(1) as u32);
+    bits <= 126
+}
+
+/// Ground-truth matrix product computed directly in wide arithmetic —
+/// the oracle every algorithm in this crate is tested against.
+///
+/// Hot path: when every accumulation provably fits i128 (all inputs
+/// below ~63 bits), products accumulate in native i128 with row-major
+/// streaming over `B`; the fully general I256 path covers the rest.
+pub fn matmul_oracle(a: &Mat, b: &Mat) -> MatAcc {
+    assert_eq!(a.cols, b.rows, "dimension mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    if fits_i128_accum(a, b, a.cols) {
+        let (n, k) = (b.cols, a.cols);
+        let mut c = MatAcc::zeros(a.rows, n);
+        let bd = b.data();
+        let ad = a.data();
+        let mut row = vec![0i128; n];
+        for i in 0..a.rows {
+            row.fill(0);
+            for kk in 0..k {
+                let av = ad[i * k + kk] as u128;
+                if av == 0 {
+                    continue;
+                }
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for (acc, &bv) in row.iter_mut().zip(brow) {
+                    *acc += (av * bv as u128) as i128;
+                }
+            }
+            for (j, &v) in row.iter().enumerate() {
+                c[(i, j)] = I256::from_i128(v);
+            }
+        }
+        return c;
+    }
+    let mut c = MatAcc::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a[(i, k)];
+            if av == 0 {
+                continue;
+            }
+            for j in 0..b.cols {
+                let p = I256::from_prod(av, b[(k, j)]);
+                c[(i, j)] += p;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+
+    #[test]
+    fn indexing_row_major() {
+        let m = Mat::from_rows(2, 3, &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(m[(0, 0)], 1);
+        assert_eq!(m[(0, 2)], 3);
+        assert_eq!(m[(1, 0)], 4);
+        assert_eq!(m[(1, 2)], 6);
+    }
+
+    #[test]
+    fn split_rejoins_elementwise() {
+        forall(Config::default().cases(100), |rng| {
+            let w = rng.range(2, 32) as u32;
+            let m = Mat::random(3, 4, w, rng);
+            let (hi, lo) = m.split(w);
+            for i in 0..3 {
+                for j in 0..4 {
+                    let rejoined = bits::join(hi[(i, j)], lo[(i, j)], w);
+                    if rejoined != m[(i, j)] {
+                        return Err(format!("split/join mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            prop_assert(hi.fits(bits::hi_width(w)), "hi plane fits")?;
+            prop_assert(lo.fits(bits::lo_width(w)), "lo plane fits")
+        });
+    }
+
+    #[test]
+    fn oracle_identity_matrix() {
+        let id = Mat::from_fn(4, 4, |i, j| (i == j) as u64);
+        let mut rng = Rng::new(1);
+        let m = Mat::random(4, 4, 16, &mut rng);
+        let prod = matmul_oracle(&id, &m);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(prod[(i, j)].to_i128(), Some(m[(i, j)] as i128));
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_known_2x2() {
+        let a = Mat::from_rows(2, 2, &[1, 2, 3, 4]);
+        let b = Mat::from_rows(2, 2, &[5, 6, 7, 8]);
+        let c = matmul_oracle(&a, &b);
+        assert_eq!(c.to_i128_vec().unwrap(), vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn oracle_rectangular() {
+        let a = Mat::from_rows(2, 3, &[1, 2, 3, 4, 5, 6]);
+        let b = Mat::from_rows(3, 1, &[1, 1, 1]);
+        let c = matmul_oracle(&a, &b);
+        assert_eq!(c.to_i128_vec().unwrap(), vec![6, 15]);
+    }
+
+    #[test]
+    fn oracle_matches_i128_matmul_prop() {
+        forall(Config::default().cases(60), |rng| {
+            let (m, k, n) = (rng.range(1, 5), rng.range(1, 5), rng.range(1, 5));
+            let w = rng.range(1, 30) as u32;
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let c = matmul_oracle(&a, &b);
+            for i in 0..m {
+                for j in 0..n {
+                    let expect: i128 = (0..k)
+                        .map(|kk| a[(i, kk)] as i128 * b[(kk, j)] as i128)
+                        .sum();
+                    prop_assert_eq(c[(i, j)].to_i128(), Some(expect), "oracle == i128 matmul")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matacc_shift_add_sub() {
+        let a = MatAcc::from_fn(2, 2, |i, j| I256::from_i128((i * 2 + j) as i128));
+        let b = a.shl(4);
+        assert_eq!(b[(1, 1)].to_i128(), Some(48));
+        let s = b.sub(&a);
+        assert_eq!(s[(1, 1)].to_i128(), Some(45));
+        let t = s.add(&a);
+        assert_eq!(t, b);
+    }
+
+    #[test]
+    fn max_bits_tracks_largest() {
+        let m = Mat::from_rows(1, 3, &[0, 255, 7]);
+        assert_eq!(m.max_bits(), 8);
+        assert!(m.fits(8));
+        assert!(!m.fits(7));
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn oracle_rejects_bad_dims() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        matmul_oracle(&a, &b);
+    }
+}

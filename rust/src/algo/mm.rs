@@ -1,0 +1,294 @@
+//! Conventional matrix multiplication algorithms:
+//!
+//! - [`mm1`] — eq. (1): the direct `MM_1` inner-product algorithm, the base
+//!   case of every recursive digit algorithm.
+//! - [`mm1_preaccum`] — Algorithm 5: `MM_1` with the reduced-complexity
+//!   two-level accumulation structure (p-product pre-sums, §III-C).
+//! - [`mm`] — Algorithm 3: conventional n-digit matrix multiplication
+//!   (`MM_n^[w]`), the 4-sub-product digit decomposition that
+//!   precision-scalable prior work (§II-E) builds on.
+//!
+//! Every function computes the exact product in wide arithmetic *and*
+//! records its operations into a [`Tally`] with the bitwidths of
+//! eqs. (2a)/(2b), so the complexity analysis is validated against the
+//! executable algorithm.
+
+use crate::algo::bits;
+use crate::algo::matrix::{Mat, MatAcc};
+use crate::algo::opcount::{ceil_log2, Tally};
+use crate::util::wide::I256;
+
+/// The accumulation guard bitwidth `w_a = ⌈log2 K⌉` for a depth-`K`
+/// inner product (§III-C).
+pub fn wa_for_depth(k: usize) -> u32 {
+    ceil_log2(k.max(1) as u32)
+}
+
+/// `MM_1^[w]` (eq. 1): direct matrix multiplication. Records
+/// `M·K·N (MULT^[w] + ACCUM^[2w])` — eq. (2b).
+pub fn mm1(a: &Mat, b: &Mat, w: u32, tally: &mut Tally) -> MatAcc {
+    assert_eq!(a.cols, b.rows);
+    assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");
+    let mut c = MatAcc::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut sum = I256::zero();
+            for k in 0..a.cols {
+                tally.mult(w);
+                tally.accum(2 * w);
+                sum += I256::from_prod(a[(i, k)], b[(k, j)]);
+            }
+            c[(i, j)] = sum;
+        }
+    }
+    c
+}
+
+/// Algorithm 5: `MM_1` with two-level accumulation. Every group of (up to)
+/// `p` products is pre-summed on `2w + ⌈log2 p⌉` bits before one addition
+/// into the full `2w + w_a`-bit running sum, cutting the number of wide
+/// adders and accumulation registers by `p` (eq. 10, Fig. 6).
+///
+/// Records `MULT^[w]` plus the eq. (10) ADD decomposition directly (no
+/// `ACCUM` entries), so `mm1_preaccum` tally ==
+/// `mm1` tally `.expand_accum_alg5(p, wa)`.
+pub fn mm1_preaccum(a: &Mat, b: &Mat, w: u32, p: usize, tally: &mut Tally) -> MatAcc {
+    assert_eq!(a.cols, b.rows);
+    assert!(p >= 1);
+    assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");
+    let wa = wa_for_depth(a.cols);
+    let wp = ceil_log2(p as u32);
+    let mut c = MatAcc::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut sum = I256::zero();
+            let mut k = 0;
+            while k < a.cols {
+                let group = p.min(a.cols - k);
+                // Pre-sum `group` products on 2w + wp bits.
+                let mut x = I256::zero();
+                for q in 0..group {
+                    tally.mult(w);
+                    let prod = I256::from_prod(a[(i, k + q)], b[(k + q, j)]);
+                    if q == 0 {
+                        x = prod; // first product initializes the pre-sum
+                    } else {
+                        tally.add(2 * w + wp);
+                        x += prod;
+                    }
+                }
+                // One wide addition into the full running sum.
+                tally.add(2 * w + wa);
+                sum += x;
+                k += group;
+            }
+            c[(i, j)] = sum;
+        }
+    }
+    c
+}
+
+/// Algorithm 3: `MM_n^[w]` — conventional n-digit matrix multiplication.
+///
+/// ```text
+///   C = (A1·B1) << w + (A1·B0 + A0·B1) << ⌈w/2⌉ + A0·B0
+/// ```
+///
+/// recursing `log2 n` times; `MM_1` at the leaves. Operation accounting
+/// matches eq. (2a): per recursion level,
+/// `M·N (ADD^[w+wa] + 2 ADD^[2w+wa] + SHIFT^[w] + SHIFT^[⌈w/2⌉])`.
+pub fn mm(a: &Mat, b: &Mat, w: u32, n: u32, tally: &mut Tally) -> MatAcc {
+    assert!(bits::config_valid(n, w), "invalid MM config n={n} w={w}");
+    assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");
+    let wa = wa_for_depth(a.cols);
+    mm_rec(a, b, w, n, wa, tally)
+}
+
+fn mm_rec(a: &Mat, b: &Mat, w: u32, n: u32, wa: u32, tally: &mut Tally) -> MatAcc {
+    if n == 1 {
+        return mm1(a, b, w, tally);
+    }
+    let wl = bits::lo_width(w);
+    let wh = bits::hi_width(w);
+    let (a1, a0) = a.split(w);
+    let (b1, b0) = b.split(w);
+
+    // Lines 7–10: one sub-product at ⌊w/2⌋ bits, three at ⌈w/2⌉.
+    let c1 = mm_rec(&a1, &b1, wh, n / 2, wa, tally);
+    let c10 = mm_rec(&a1, &b0, wl, n / 2, wa, tally);
+    let c01 = mm_rec(&a0, &b1, wl, n / 2, wa, tally);
+    let c0 = mm_rec(&a0, &b0, wl, n / 2, wa, tally);
+
+    // Lines 11–13 recombination, counted per output element (eq. 2a).
+    // Paper erratum (see `algo::sm`): the high-product shift is 2⌈w/2⌉,
+    // not w (differs for odd w).
+    let m_out = a.rows * b.cols;
+    for _ in 0..m_out {
+        tally.add(w + wa); // C10 + C01
+        tally.shift(w); // C1 << 2⌈w/2⌉
+        tally.shift(wl); // (C10 + C01) << ⌈w/2⌉
+        tally.add(2 * w + wa); // C += (..) << ⌈w/2⌉
+        tally.add(2 * w + wa); // C += C0
+    }
+    let cross = c10.add(&c01);
+    c1.shl(2 * wl).add(&cross.shl(wl)).add(&c0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::matmul_oracle;
+    use crate::algo::opcount::OpKind;
+    use crate::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mm1_known_2x2() {
+        let a = Mat::from_rows(2, 2, &[1, 2, 3, 4]);
+        let b = Mat::from_rows(2, 2, &[5, 6, 7, 8]);
+        let mut t = Tally::new();
+        let c = mm1(&a, &b, 8, &mut t);
+        assert_eq!(c.to_i128_vec().unwrap(), vec![19, 22, 43, 50]);
+        // 2·2·2 MACs.
+        assert_eq!(t.count(OpKind::Mult, 8), 8);
+        assert_eq!(t.count(OpKind::Accum, 16), 8);
+    }
+
+    #[test]
+    fn mm1_matches_oracle_prop() {
+        forall(Config::default().cases(80), |rng| {
+            let (m, k, n) = (rng.range(1, 6), rng.range(1, 6), rng.range(1, 6));
+            let w = rng.range(1, 64) as u32;
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let mut t = Tally::new();
+            prop_assert_eq(mm1(&a, &b, w, &mut t), matmul_oracle(&a, &b), "mm1 == oracle")
+        });
+    }
+
+    #[test]
+    fn preaccum_matches_mm1_prop() {
+        forall(Config::default().cases(80), |rng| {
+            let (m, k, n) = (rng.range(1, 6), rng.range(1, 9), rng.range(1, 6));
+            let w = rng.range(1, 64) as u32;
+            let p = rng.range(1, 6);
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let mut t1 = Tally::new();
+            let mut t2 = Tally::new();
+            prop_assert_eq(
+                mm1_preaccum(&a, &b, w, p, &mut t1),
+                mm1(&a, &b, w, &mut t2),
+                "Alg 5 == eq (1)",
+            )
+        });
+    }
+
+    #[test]
+    fn preaccum_tally_matches_eq10_expansion() {
+        let mut rng = Rng::new(99);
+        // The aggregate expansion assumes group-aligned accumulation, so
+        // compare where p divides K (plus the trivial p=1). Non-dividing
+        // K is covered value-wise by `preaccum_matches_mm1_prop`.
+        for (k, p) in [(8usize, 4usize), (12, 4), (4, 2), (6, 3), (5, 1)] {
+            let a = Mat::random(3, k, 8, &mut rng);
+            let b = Mat::random(k, 2, 8, &mut rng);
+            let mut tp = Tally::new();
+            mm1_preaccum(&a, &b, 8, p, &mut tp);
+            let mut t1 = Tally::new();
+            mm1(&a, &b, 8, &mut t1);
+            let expanded = t1.expand_accum_alg5(p as u32, wa_for_depth(k));
+            assert_eq!(tp, expanded, "k={k} p={p}");
+        }
+    }
+
+    #[test]
+    fn preaccum_fewer_wide_adds() {
+        // The point of Algorithm 5: wide (2w+wa) adds reduced by ~p.
+        let mut rng = Rng::new(7);
+        let a = Mat::random(4, 64, 8, &mut rng);
+        let b = Mat::random(64, 4, 8, &mut rng);
+        let wa = wa_for_depth(64);
+        let mut tp = Tally::new();
+        mm1_preaccum(&a, &b, 8, 4, &mut tp);
+        let mut tc = Tally::new();
+        mm1(&a, &b, 8, &mut tc);
+        let conv = tc.expand_accum_conventional(wa);
+        let wide = 16 + wa;
+        assert_eq!(tp.count(OpKind::Add, wide) * 4, conv.count(OpKind::Add, wide));
+    }
+
+    #[test]
+    fn mm_matches_oracle_prop() {
+        forall(Config::default().cases(80), |rng| {
+            let n_digits = *rng.pick(&[1u32, 2, 4, 8]);
+            let (m, k, n) = (rng.range(1, 5), rng.range(1, 5), rng.range(1, 5));
+            let w = rng.range(n_digits as usize, 64) as u32;
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let mut t = Tally::new();
+            prop_assert_eq(
+                mm(&a, &b, w, n_digits, &mut t),
+                matmul_oracle(&a, &b),
+                &format!("MM_{n_digits}^[{w}] == oracle"),
+            )
+        });
+    }
+
+    #[test]
+    fn mm2_multiplier_counts() {
+        // MM_2 performs 4 half-width sub-matmuls: mult count 4·d³, with
+        // d³ at ⌊w/2⌋ bits and 3·d³ at ⌈w/2⌉ bits.
+        let mut rng = Rng::new(3);
+        let d = 4;
+        let a = Mat::random(d, d, 16, &mut rng);
+        let b = Mat::random(d, d, 16, &mut rng);
+        let mut t = Tally::new();
+        mm(&a, &b, 16, 2, &mut t);
+        let d3 = (d * d * d) as u128;
+        assert_eq!(t.count_kind(OpKind::Mult), 4 * d3);
+        assert_eq!(t.count(OpKind::Mult, 8), 4 * d3); // even split: all 8-bit
+    }
+
+    #[test]
+    fn mm_odd_width_exact() {
+        let mut rng = Rng::new(5);
+        for w in [3u32, 5, 7, 9, 13, 17, 33, 63] {
+            let a = Mat::random(3, 3, w, &mut rng);
+            let b = Mat::random(3, 3, w, &mut rng);
+            let mut t = Tally::new();
+            assert_eq!(mm(&a, &b, w, 2, &mut t), matmul_oracle(&a, &b), "w={w}");
+        }
+    }
+
+    #[test]
+    fn mm_64bit_full_range() {
+        let mut rng = Rng::new(11);
+        let a = Mat::from_fn(3, 3, |_, _| u64::MAX);
+        let b = Mat::random(3, 3, 64, &mut rng);
+        for n in [1u32, 2, 4, 8] {
+            let mut t = Tally::new();
+            assert_eq!(mm(&a, &b, 64, n, &mut t), matmul_oracle(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn wa_for_depth_examples() {
+        assert_eq!(wa_for_depth(1), 0);
+        assert_eq!(wa_for_depth(2), 1);
+        assert_eq!(wa_for_depth(64), 6);
+        assert_eq!(wa_for_depth(65), 7);
+    }
+
+    #[test]
+    fn accumulator_headroom_is_bounded() {
+        // Max-magnitude check backing the I256 claim: for w=64, d=8, the
+        // largest intermediate fits comfortably.
+        let a = Mat::from_fn(8, 8, |_, _| u64::MAX);
+        let b = Mat::from_fn(8, 8, |_, _| u64::MAX);
+        let mut t = Tally::new();
+        let c = mm(&a, &b, 64, 2, &mut t);
+        prop_assert(c.max_abs_bits() <= 2 * 64 + 3, "≤ 2w + log2 d bits").unwrap();
+        assert_eq!(c, matmul_oracle(&a, &b));
+    }
+}

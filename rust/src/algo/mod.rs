@@ -1,0 +1,28 @@
+//! Exact integer multiplication algorithms and their complexity analysis
+//! (paper §II–III).
+//!
+//! Everything in this module is *algebraic ground truth*: executable,
+//! exact (wide-integer) versions of Algorithms 1–5 that simultaneously
+//! count the operations they perform, plus the paper's closed-form cost
+//! equations evaluated over the same operation vocabulary. The hardware
+//! architecture models in [`crate::arch`] and the Pallas kernels under
+//! `python/compile/kernels/` are validated against these.
+
+pub mod bits;
+pub mod complexity;
+pub mod kmm;
+pub mod ksm;
+pub mod ksmm;
+pub mod matrix;
+pub mod mm;
+pub mod opcount;
+pub mod sm;
+
+pub use complexity::Dims;
+pub use kmm::{kmm, kmm_with_base, BaseMm};
+pub use ksm::ksm;
+pub use ksmm::ksmm;
+pub use matrix::{matmul_oracle, Mat, MatAcc};
+pub use mm::{mm, mm1, mm1_preaccum, wa_for_depth};
+pub use opcount::{OpKind, Tally};
+pub use sm::sm;

@@ -1,0 +1,293 @@
+//! Operation accounting: the paper's complexity currency.
+//!
+//! §III-B decomposes each algorithm's complexity into counts of
+//! `MULT^[w]`, `ADD^[w]`, `ACCUM^[w]`, and `SHIFT^[w]` — operations tagged
+//! with the bitwidth they act on. [`Tally`] is that decomposition as a
+//! value: the executable algorithms in this crate record every arithmetic
+//! operation they perform into a `Tally`, and `algo::complexity` evaluates
+//! the paper's closed forms (eqs. 2–8) to the same type, so
+//! *counted == closed-form* is a machine-checked invariant rather than a
+//! claim.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// The four operation kinds of §III-B.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKind {
+    /// `MULT^[w]`: multiplication of two w-bit values.
+    Mult,
+    /// `ADD^[w]`: addition producing a w-bit result.
+    Add,
+    /// `ACCUM^[w]`: accumulation of w-bit values into a running sum
+    /// (normally `ACCUM^[2w] = ADD^[2w + w_a]`, eq. 9; reducible via
+    /// Algorithm 5, eq. 10).
+    Accum,
+    /// `SHIFT^[w]`: shift by w bits (free in custom hardware, counted for
+    /// the general-purpose analysis).
+    Shift,
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            OpKind::Mult => "MULT",
+            OpKind::Add => "ADD",
+            OpKind::Accum => "ACCUM",
+            OpKind::Shift => "SHIFT",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A multiset of (operation kind, bitwidth) → count.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Tally {
+    counts: BTreeMap<(OpKind, u32), u128>,
+}
+
+impl Tally {
+    /// Empty tally.
+    pub fn new() -> Self {
+        Tally::default()
+    }
+
+    /// Record `count` operations of `kind` at `width` bits.
+    pub fn record(&mut self, kind: OpKind, width: u32, count: u128) {
+        if count == 0 {
+            return;
+        }
+        *self.counts.entry((kind, width)).or_insert(0) += count;
+    }
+
+    /// Record one `MULT^[w]`.
+    pub fn mult(&mut self, w: u32) {
+        self.record(OpKind::Mult, w, 1);
+    }
+
+    /// Record one `ADD^[w]`.
+    pub fn add(&mut self, w: u32) {
+        self.record(OpKind::Add, w, 1);
+    }
+
+    /// Record one `ACCUM^[w]`.
+    pub fn accum(&mut self, w: u32) {
+        self.record(OpKind::Accum, w, 1);
+    }
+
+    /// Record one `SHIFT^[w]`.
+    pub fn shift(&mut self, w: u32) {
+        self.record(OpKind::Shift, w, 1);
+    }
+
+    /// Count of operations of `kind` at exactly `width` bits.
+    pub fn count(&self, kind: OpKind, width: u32) -> u128 {
+        self.counts.get(&(kind, width)).copied().unwrap_or(0)
+    }
+
+    /// Total count of operations of `kind` at any width.
+    pub fn count_kind(&self, kind: OpKind) -> u128 {
+        self.counts
+            .iter()
+            .filter(|((k, _), _)| *k == kind)
+            .map(|(_, c)| c)
+            .sum()
+    }
+
+    /// Total operations of all kinds — the "arithmetic complexity"
+    /// simplification of §III-B.5 (shifts included, as in eqs. 6–8).
+    pub fn total(&self) -> u128 {
+        self.counts.values().sum()
+    }
+
+    /// Total excluding shifts (shifts are free in custom hardware, §IV-B).
+    pub fn total_nonshift(&self) -> u128 {
+        self.counts
+            .iter()
+            .filter(|((k, _), _)| *k != OpKind::Shift)
+            .map(|(_, c)| c)
+            .sum()
+    }
+
+    /// Sum of `width × count` for a kind: a first-order hardware-cost
+    /// proxy for adders (linear in width).
+    pub fn weighted_width(&self, kind: OpKind) -> u128 {
+        self.counts
+            .iter()
+            .filter(|((k, _), _)| *k == kind)
+            .map(|((_, w), c)| (*w as u128) * c)
+            .sum()
+    }
+
+    /// Merge another tally into this one.
+    pub fn merge(&mut self, other: &Tally) {
+        for (&(k, w), &c) in &other.counts {
+            self.record(k, w, c);
+        }
+    }
+
+    /// This tally replicated `factor` times (e.g. `d³ ×` a scalar cost).
+    pub fn scaled(&self, factor: u128) -> Tally {
+        let mut out = Tally::new();
+        for (&(k, w), &c) in &self.counts {
+            out.record(k, w, c * factor);
+        }
+        out
+    }
+
+    /// Expand every `ACCUM^[v]` using the *conventional* structure (eq. 9):
+    /// `ACCUM^[v] = ADD^[v + w_a]`.
+    pub fn expand_accum_conventional(&self, wa: u32) -> Tally {
+        let mut out = Tally::new();
+        for (&(k, w), &c) in &self.counts {
+            match k {
+                OpKind::Accum => out.record(OpKind::Add, w + wa, c),
+                _ => out.record(k, w, c),
+            }
+        }
+        out
+    }
+
+    /// Expand every `ACCUM^[v]` using Algorithm 5 (eq. 10): per group of
+    /// (up to) `p` accumulations, one `ADD^[v + w_a]` into the full running
+    /// sum plus `(p−1)` pre-sum `ADD^[v + w_p]`, where `w_p = ⌈log2 p⌉`.
+    /// A trailing partial group of size `g` costs `(g−1)` narrow adds plus
+    /// one wide add, matching the executable Algorithm 5 in `algo::mm`.
+    pub fn expand_accum_alg5(&self, p: u32, wa: u32) -> Tally {
+        assert!(p >= 1);
+        let wp = ceil_log2(p);
+        let mut out = Tally::new();
+        for (&(k, w), &c) in &self.counts {
+            match k {
+                OpKind::Accum => {
+                    let groups = c.div_ceil(p as u128);
+                    out.record(OpKind::Add, w + wa, groups);
+                    out.record(OpKind::Add, w + wp, c - groups);
+                }
+                _ => out.record(k, w, c),
+            }
+        }
+        out
+    }
+
+    /// Iterate over `((kind, width), count)` entries in deterministic order.
+    pub fn entries(&self) -> impl Iterator<Item = (OpKind, u32, u128)> + '_ {
+        self.counts.iter().map(|(&(k, w), &c)| (k, w, c))
+    }
+}
+
+impl fmt::Display for Tally {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, w, c) in self.entries() {
+            writeln!(f, "{c:>16} × {k}^[{w}]")?;
+        }
+        Ok(())
+    }
+}
+
+/// `⌈log2 x⌉` for `x ≥ 1`.
+pub fn ceil_log2(x: u32) -> u32 {
+    assert!(x >= 1);
+    32 - (x - 1).leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_examples() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(64), 6);
+        assert_eq!(ceil_log2(65), 7);
+    }
+
+    #[test]
+    fn record_and_count() {
+        let mut t = Tally::new();
+        t.mult(8);
+        t.mult(8);
+        t.add(16);
+        t.record(OpKind::Shift, 4, 3);
+        assert_eq!(t.count(OpKind::Mult, 8), 2);
+        assert_eq!(t.count(OpKind::Add, 16), 1);
+        assert_eq!(t.count(OpKind::Shift, 4), 3);
+        assert_eq!(t.count(OpKind::Mult, 16), 0);
+        assert_eq!(t.total(), 6);
+        assert_eq!(t.total_nonshift(), 3);
+    }
+
+    #[test]
+    fn merge_and_scale() {
+        let mut a = Tally::new();
+        a.mult(8);
+        let mut b = Tally::new();
+        b.mult(8);
+        b.add(9);
+        a.merge(&b);
+        assert_eq!(a.count(OpKind::Mult, 8), 2);
+        let s = a.scaled(10);
+        assert_eq!(s.count(OpKind::Mult, 8), 20);
+        assert_eq!(s.count(OpKind::Add, 9), 10);
+    }
+
+    #[test]
+    fn conventional_accum_expansion_eq9() {
+        // p ACCUM^[2w] = p ADD^[2w + wa]
+        let mut t = Tally::new();
+        t.record(OpKind::Accum, 16, 12);
+        let e = t.expand_accum_conventional(6);
+        assert_eq!(e.count(OpKind::Add, 22), 12);
+        assert_eq!(e.count_kind(OpKind::Accum), 0);
+    }
+
+    #[test]
+    fn alg5_accum_expansion_eq10() {
+        // p=4, wa=6, wp=2: every 4 ACCUM^[16] → 1 ADD^[22] + 3 ADD^[18].
+        let mut t = Tally::new();
+        t.record(OpKind::Accum, 16, 8);
+        let e = t.expand_accum_alg5(4, 6);
+        assert_eq!(e.count(OpKind::Add, 22), 2);
+        assert_eq!(e.count(OpKind::Add, 18), 6);
+        assert_eq!(e.total(), 8); // op count preserved, widths reduced
+    }
+
+    #[test]
+    fn alg5_reduces_weighted_width_vs_conventional() {
+        let mut t = Tally::new();
+        t.record(OpKind::Accum, 16, 1024);
+        let conv = t.expand_accum_conventional(6);
+        let alg5 = t.expand_accum_alg5(4, 6);
+        assert!(alg5.weighted_width(OpKind::Add) < conv.weighted_width(OpKind::Add));
+    }
+
+    #[test]
+    fn alg5_p1_equals_conventional() {
+        let mut t = Tally::new();
+        t.record(OpKind::Accum, 16, 7);
+        assert_eq!(t.expand_accum_alg5(1, 6), t.expand_accum_conventional(6));
+    }
+
+    #[test]
+    fn alg5_remainder_goes_to_presum() {
+        let mut t = Tally::new();
+        t.record(OpKind::Accum, 16, 10); // p=4 → 3 groups (last partial, size 2)
+        let e = t.expand_accum_alg5(4, 6);
+        assert_eq!(e.count(OpKind::Add, 22), 3);
+        assert_eq!(e.count(OpKind::Add, 18), 7);
+    }
+
+    #[test]
+    fn display_lists_entries() {
+        let mut t = Tally::new();
+        t.mult(8);
+        t.add(9);
+        let s = t.to_string();
+        assert!(s.contains("MULT^[8]"));
+        assert!(s.contains("ADD^[9]"));
+    }
+}

@@ -1,0 +1,163 @@
+//! Algorithm 1 — Conventional n-digit scalar multiplication (`SM_n^[w]`).
+//!
+//! A `w`-bit multiplication is split into four `⌊w/2⌋`/`⌈w/2⌉`-bit
+//! multiplications, recursively, `r = log2 n` times:
+//!
+//! ```text
+//!   a·b = (a1·b1) << w + (a1·b0 + a0·b1) << ⌈w/2⌉ + a0·b0
+//! ```
+//!
+//! This is the digit algorithm conventional precision-scalable hardware
+//! (§II-E) uses to compose large products from small multipliers; it is the
+//! baseline Karatsuba improves on.
+
+use crate::algo::bits;
+use crate::algo::opcount::Tally;
+
+/// Compute `a × b` by Algorithm 1 with `n` digits over `w`-bit operands,
+/// recording every arithmetic operation into `tally`.
+///
+/// Panics if `(n, w)` is invalid or an operand exceeds `w` bits.
+pub fn sm(a: u64, b: u64, w: u32, n: u32, tally: &mut Tally) -> u128 {
+    assert!(bits::config_valid(n, w), "invalid SM config n={n} w={w}");
+    assert!(bits::fits(a, w) && bits::fits(b, w), "operand exceeds w={w} bits");
+    sm_rec(a, b, w, n, tally)
+}
+
+fn sm_rec(a: u64, b: u64, w: u32, n: u32, tally: &mut Tally) -> u128 {
+    if n == 1 {
+        tally.mult(w);
+        return (a as u128) * (b as u128);
+    }
+    let wl = bits::lo_width(w); // ⌈w/2⌉
+    let wh = bits::hi_width(w); // ⌊w/2⌋
+    let (a1, a0) = bits::split(a, w);
+    let (b1, b0) = bits::split(b, w);
+
+    // Four sub-products (lines 7–10): hi·hi at ⌊w/2⌋ bits, the rest at ⌈w/2⌉.
+    let c1 = sm_rec(a1, b1, wh.max(1), n / 2, tally);
+    let c10 = sm_rec(a1, b0, wl, n / 2, tally);
+    let c01 = sm_rec(a0, b1, wl, n / 2, tally);
+    let c0 = sm_rec(a0, b0, wl, n / 2, tally);
+
+    // Recombination (lines 11–13). The cross-product sum is a (w+1)-bit-ish
+    // add counted at width w; the two adds into c are on 2w bits.
+    //
+    // Paper erratum: Algorithm 1 line 11 writes `c1 << w`, but with the
+    // split at bit ⌈w/2⌉ the algebraically correct shift is 2⌈w/2⌉
+    // (= w only for even w). Odd w arises in recursion (⌈w/2⌉+1 operands
+    // of Algorithm 2/4), so we shift by 2⌈w/2⌉ while keeping the paper's
+    // SHIFT^[w] accounting (shifts are free in hardware regardless).
+    tally.add(w); // c01 + c10
+    tally.shift(w); // c1 << 2⌈w/2⌉
+    tally.shift(wl); // (..) << ⌈w/2⌉
+    tally.add(2 * w); // c += (c01 + c10) << ⌈w/2⌉
+    tally.add(2 * w); // c += c0
+
+    let mut c = c1 << (2 * wl);
+    c += (c01 + c10) << wl;
+    c += c0;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::opcount::OpKind;
+    use crate::util::prop::{forall, prop_assert_eq, Config};
+
+    #[test]
+    fn paper_example_hex() {
+        // SM_2^[8]: 0x12 × 0x10 = 0x120 (§II-A).
+        let mut t = Tally::new();
+        assert_eq!(sm(0x12, 0x10, 8, 2, &mut t), 0x120);
+    }
+
+    #[test]
+    fn n1_is_plain_mult() {
+        let mut t = Tally::new();
+        assert_eq!(sm(200, 250, 8, 1, &mut t), 50_000);
+        assert_eq!(t.count(OpKind::Mult, 8), 1);
+        assert_eq!(t.total(), 1);
+    }
+
+    #[test]
+    fn exact_vs_native_prop() {
+        forall(Config::default().cases(400), |rng| {
+            let n = *rng.pick(&[1u32, 2, 4, 8]);
+            let w = rng.range(n as usize, 64) as u32;
+            let a = rng.bits(w);
+            let b = rng.bits(w);
+            let mut t = Tally::new();
+            prop_assert_eq(
+                sm(a, b, w, n, &mut t),
+                (a as u128) * (b as u128),
+                &format!("SM_{n}^[{w}]({a:#x},{b:#x})"),
+            )
+        });
+    }
+
+    #[test]
+    fn odd_widths_exact() {
+        for w in [3u32, 5, 7, 9, 11, 13, 15, 17, 31, 63] {
+            let a = bits::mask(w);
+            let b = bits::mask(w);
+            let mut t = Tally::new();
+            assert_eq!(sm(a, b, w, 2, &mut t), (a as u128) * (b as u128), "w={w}");
+        }
+    }
+
+    #[test]
+    fn sm2_uses_four_multiplications() {
+        let mut t = Tally::new();
+        sm(0xFF, 0xFF, 8, 2, &mut t);
+        assert_eq!(t.count_kind(OpKind::Mult), 4);
+        // One sub-product at ⌊w/2⌋ = 4 bits, three at ⌈w/2⌉ = 4 bits: all 4-bit here.
+        assert_eq!(t.count(OpKind::Mult, 4), 4);
+    }
+
+    #[test]
+    fn sm4_uses_sixteen_multiplications() {
+        let mut t = Tally::new();
+        sm(0xFFFF, 0xFFFF, 16, 4, &mut t);
+        assert_eq!(t.count_kind(OpKind::Mult), 16);
+    }
+
+    #[test]
+    fn mult_count_is_n_squared_prop() {
+        forall(Config::default().cases(60), |rng| {
+            let n = *rng.pick(&[1u32, 2, 4, 8]);
+            let w = rng.range((n as usize).max(8), 64) as u32;
+            let mut t = Tally::new();
+            sm(rng.bits(w), rng.bits(w), w, n, &mut t);
+            prop_assert_eq(
+                t.count_kind(OpKind::Mult),
+                (n as u128) * (n as u128),
+                "SM mult count = n²",
+            )
+        });
+    }
+
+    #[test]
+    fn extremes() {
+        let mut t = Tally::new();
+        assert_eq!(sm(0, 0, 16, 2, &mut t), 0);
+        assert_eq!(sm(0, 0xFFFF, 16, 2, &mut t), 0);
+        let m = u64::MAX;
+        assert_eq!(sm(m, m, 64, 2, &mut t), (m as u128) * (m as u128));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid SM config")]
+    fn rejects_non_power_of_two() {
+        let mut t = Tally::new();
+        sm(1, 1, 8, 3, &mut t);
+    }
+
+    #[test]
+    #[should_panic(expected = "operand exceeds")]
+    fn rejects_oversized_operand() {
+        let mut t = Tally::new();
+        sm(256, 1, 8, 2, &mut t);
+    }
+}

@@ -1,0 +1,286 @@
+//! FFIP baseline MXU — the authors' prior work \[6\] ("free-pipeline fast
+//! inner-product"), used in Table II both standalone and as the core MXU
+//! of the precision-scalable KMM architecture (FFIP+KMM).
+//!
+//! FFIP computes inner products by Winograd's fast inner-product identity:
+//!
+//! ```text
+//!   Σ_k a_{2k}·b_{2k} + a_{2k+1}·b_{2k+1}
+//!     = Σ_k (a_{2k} + b_{2k+1})(a_{2k+1} + b_{2k}) − α_i − β_j
+//!   α_i = Σ_k a_{i,2k}·a_{i,2k+1}      (per A-row, amortized over N)
+//!   β_j = Σ_k b_{2k,j}·b_{2k+1,j}      (per B-column, amortized over M)
+//! ```
+//!
+//! Each PE trades **two** multiply-accumulates for **one** multiplication
+//! of (w+1)-bit operand sums plus cheap additions, halving the multiplier
+//! count for the same X-deep reduction — the eq. (12) roof becomes 2
+//! (§V-B), and stacking KMM₂ on top lifts it to 8/3.
+
+use crate::algo::matrix::{Mat, MatAcc, matmul_oracle};
+use crate::arch::mxu::SystolicSpec;
+use crate::util::wide::I256;
+
+/// A tile-multiplication engine the precision-scalable architecture can
+/// host: the conventional MM₁ array (Fig. 7) or the FFIP array \[6\].
+pub trait TileEngine: Clone {
+    /// Timing shape of the array (X = reduction depth of one tile, Y =
+    /// output lanes, p = accumulator group size). Stream timing is
+    /// identical for MM₁ and FFIP: one A-row per cycle.
+    fn spec(&self) -> SystolicSpec;
+
+    /// Instantiated multipliers (the denominator of eqs. 11–12).
+    fn mults(&self) -> usize;
+
+    /// Exact product of an M×X tile by an X×Y tile.
+    fn tile_product(&self, a_tile: &Mat, b_tile: &Mat) -> MatAcc;
+
+    /// Narrow fast-path product into a flat i128 buffer, when the engine
+    /// supports it and the operands provably fit (perf hot path; see
+    /// `SystolicSpec::tile_product_i128`). Default: unsupported.
+    fn tile_product_i128(&self, _a_tile: &Mat, _b_tile: &Mat) -> Option<Vec<i128>> {
+        None
+    }
+
+    /// eq. (12) efficiency roof multiplier of the engine itself
+    /// (1 for MM₁, 2 for FFIP).
+    fn roof_factor(&self) -> f64;
+}
+
+impl TileEngine for SystolicSpec {
+    fn spec(&self) -> SystolicSpec {
+        *self
+    }
+
+    fn mults(&self) -> usize {
+        self.x * self.y
+    }
+
+    fn tile_product(&self, a_tile: &Mat, b_tile: &Mat) -> MatAcc {
+        SystolicSpec::tile_product(self, a_tile, b_tile)
+    }
+
+    fn tile_product_i128(&self, a_tile: &Mat, b_tile: &Mat) -> Option<Vec<i128>> {
+        SystolicSpec::tile_product_i128(self, a_tile, b_tile)
+    }
+
+    fn roof_factor(&self) -> f64 {
+        1.0
+    }
+}
+
+/// The FFIP systolic array: X-deep reduction served by X/2 multipliers
+/// per output lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FfipMxu {
+    /// Reduction depth (A-row length consumed per tile pass). Must be
+    /// even — PEs consume operand *pairs*.
+    pub x: usize,
+    /// Output lanes.
+    pub y: usize,
+    /// Algorithm 5 accumulator group size.
+    pub p: usize,
+}
+
+/// Statistics from one FFIP tile pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FfipStats {
+    /// Multiplications of (w+1)-bit operand sums in the array.
+    pub pair_mults: u64,
+    /// Amortized correction multiplications (α per A-row, β per B-col).
+    pub corr_mults: u64,
+    /// Operand-sum additions (two per pair-mult).
+    pub sum_adds: u64,
+}
+
+impl FfipMxu {
+    /// The paper's Table II FFIP 64×64 array: 64-deep reduction on
+    /// 64×32 multipliers.
+    pub fn paper_64() -> Self {
+        FfipMxu { x: 64, y: 64, p: 4 }
+    }
+
+    /// Exact FFIP tile product with operation counting.
+    pub fn tile_product_counted(&self, a_tile: &Mat, b_tile: &Mat) -> (MatAcc, FfipStats) {
+        assert_eq!(self.x % 2, 0, "FFIP reduction depth must be even");
+        assert_eq!(a_tile.cols, self.x, "A tile width must equal X");
+        assert_eq!(b_tile.rows, self.x);
+        assert_eq!(b_tile.cols, self.y, "B tile must be X×Y");
+        let m = a_tile.rows;
+        let pairs = self.x / 2;
+        let mut stats = FfipStats::default();
+
+        // α_i: one product chain per A row, amortized over all Y lanes.
+        let alpha: Vec<I256> = (0..m)
+            .map(|i| {
+                let mut s = I256::zero();
+                for k in 0..pairs {
+                    s += I256::from_prod(a_tile[(i, 2 * k)], a_tile[(i, 2 * k + 1)]);
+                }
+                s
+            })
+            .collect();
+        // β_j: one per B column, computed at tile-load time.
+        let beta: Vec<I256> = (0..self.y)
+            .map(|j| {
+                let mut s = I256::zero();
+                for k in 0..pairs {
+                    s += I256::from_prod(b_tile[(2 * k, j)], b_tile[(2 * k + 1, j)]);
+                }
+                s
+            })
+            .collect();
+        stats.corr_mults += (m + self.y) as u64 * pairs as u64;
+
+        let mut out = MatAcc::zeros(m, self.y);
+        for i in 0..m {
+            for j in 0..self.y {
+                let mut s = I256::zero();
+                for k in 0..pairs {
+                    // One multiplier per pair: (a₂ₖ + b₂ₖ₊₁)(a₂ₖ₊₁ + b₂ₖ).
+                    let u = a_tile[(i, 2 * k)] + b_tile[(2 * k + 1, j)];
+                    let v = a_tile[(i, 2 * k + 1)] + b_tile[(2 * k, j)];
+                    s += I256::from_prod(u, v);
+                }
+                out[(i, j)] = s - alpha[i] - beta[j];
+            }
+        }
+        stats.pair_mults += (m * self.y * pairs) as u64;
+        stats.sum_adds += 2 * (m * self.y * pairs) as u64;
+        (out, stats)
+    }
+}
+
+impl TileEngine for FfipMxu {
+    fn spec(&self) -> SystolicSpec {
+        SystolicSpec {
+            x: self.x,
+            y: self.y,
+            p: self.p,
+        }
+    }
+
+    /// X/2 · Y array multipliers — the factor-of-2 saving of \[6\].
+    fn mults(&self) -> usize {
+        self.x / 2 * self.y
+    }
+
+    fn tile_product(&self, a_tile: &Mat, b_tile: &Mat) -> MatAcc {
+        self.tile_product_counted(a_tile, b_tile).0
+    }
+
+    fn roof_factor(&self) -> f64 {
+        2.0
+    }
+}
+
+/// Reference check used by tests and the Table II bench: FFIP must agree
+/// with the oracle for every tile.
+pub fn ffip_matches_oracle(mxu: &FfipMxu, a: &Mat, b: &Mat) -> bool {
+    mxu.tile_product(a, b) == matmul_oracle(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    fn small() -> FfipMxu {
+        FfipMxu { x: 6, y: 4, p: 2 }
+    }
+
+    #[test]
+    fn tile_product_matches_oracle() {
+        forall(Config::default().cases(60), |rng| {
+            let mxu = FfipMxu {
+                x: 2 * rng.range(1, 6),
+                y: rng.range(1, 6),
+                p: rng.range(1, 4),
+            };
+            let rows = rng.range(1, 8);
+            let w = rng.range(1, 16) as u32;
+            let a = Mat::random(rows, mxu.x, w, rng);
+            let b = Mat::random(mxu.x, mxu.y, w, rng);
+            prop_assert_eq(
+                mxu.tile_product(&a, &b),
+                matmul_oracle(&a, &b),
+                "FFIP tile == oracle",
+            )
+        });
+    }
+
+    #[test]
+    fn multiplier_count_halved() {
+        let mxu = FfipMxu::paper_64();
+        assert_eq!(mxu.mults(), 64 * 32);
+        assert_eq!(mxu.spec().mults(), 64 * 64, "timing shape keeps full X");
+        assert_eq!(mxu.roof_factor(), 2.0);
+    }
+
+    #[test]
+    fn pair_mults_half_of_macs() {
+        let mxu = small();
+        let mut rng = Rng::new(1);
+        let a = Mat::random(5, mxu.x, 8, &mut rng);
+        let b = Mat::random(mxu.x, mxu.y, 8, &mut rng);
+        let (_, stats) = mxu.tile_product_counted(&a, &b);
+        let macs = (5 * mxu.x * mxu.y) as u64;
+        assert_eq!(stats.pair_mults, macs / 2);
+        // Corrections amortize: (M + Y)·X/2 ≪ M·Y·X/2 for large tiles.
+        assert_eq!(stats.corr_mults, (5 + 4) * 3);
+        assert_eq!(stats.sum_adds, 2 * stats.pair_mults);
+    }
+
+    #[test]
+    fn amortization_ratio_improves_with_tile_size() {
+        // corr/pair → 0 as the tile grows: the "free" in free-pipeline.
+        let m1 = FfipMxu { x: 4, y: 4, p: 2 };
+        let m2 = FfipMxu { x: 64, y: 64, p: 4 };
+        let mut rng = Rng::new(2);
+        let (a1, b1) = (
+            Mat::random(4, m1.x, 8, &mut rng),
+            Mat::random(m1.x, m1.y, 8, &mut rng),
+        );
+        let (a2, b2) = (
+            Mat::random(64, m2.x, 8, &mut rng),
+            Mat::random(m2.x, m2.y, 8, &mut rng),
+        );
+        let (_, s1) = m1.tile_product_counted(&a1, &b1);
+        let (_, s2) = m2.tile_product_counted(&a2, &b2);
+        let r1 = s1.corr_mults as f64 / s1.pair_mults as f64;
+        let r2 = s2.corr_mults as f64 / s2.pair_mults as f64;
+        prop_assert(r2 < r1 / 10.0, "amortization improves").unwrap();
+    }
+
+    #[test]
+    fn max_width_operands_exact() {
+        // w=16 all-ones: operand sums reach 2^17−2; must stay exact.
+        let mxu = small();
+        let a = Mat::from_fn(3, mxu.x, |_, _| (1u64 << 16) - 1);
+        let b = Mat::from_fn(mxu.x, mxu.y, |_, _| (1u64 << 16) - 1);
+        assert!(ffip_matches_oracle(&mxu, &a, &b));
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn rejects_odd_depth() {
+        let mxu = FfipMxu { x: 5, y: 4, p: 2 };
+        let a = Mat::zeros(1, 5);
+        let b = Mat::zeros(5, 4);
+        mxu.tile_product(&a, &b);
+    }
+
+    #[test]
+    fn systolic_spec_is_identity_engine() {
+        let s = SystolicSpec { x: 8, y: 8, p: 4 };
+        assert_eq!(TileEngine::mults(&s), 64);
+        assert_eq!(s.roof_factor(), 1.0);
+        let mut rng = Rng::new(3);
+        let a = Mat::random(2, 8, 8, &mut rng);
+        let b = Mat::random(8, 8, 8, &mut rng);
+        assert_eq!(
+            TileEngine::tile_product(&s, &a, &b),
+            matmul_oracle(&a, &b)
+        );
+    }
+}

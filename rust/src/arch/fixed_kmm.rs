@@ -1,0 +1,322 @@
+//! Fixed-precision KMM architecture — paper Fig. 8, §IV-B.
+//!
+//! For a fixed input precision `w` with `n = 2^r` digits, the design
+//! instantiates **three sub-MXUs** per recursion node — operating on
+//! `⌊w/2⌋`, `⌈w/2⌉+1` and `⌈w/2⌉`-bit inputs — plus `2X` input pre-adders
+//! (forming `As`, `Bs`) and the Fig. 9 post-adder unit (`2Y` narrow +
+//! `2Y` wide adders). Each sub-MXU may itself be another KMM node; the
+//! `3^r` leaves are conventional MM₁ systolic arrays (Fig. 7) running the
+//! Algorithm 5 accumulator.
+//!
+//! All three sub-MXUs run in lock-step on the same tile schedule, so the
+//! timing model of one leaf MXU ([`SystolicSpec::stream_cycles`]) carries
+//! over with only the post-adder pipeline latency added per level.
+
+use crate::algo::bits;
+use crate::algo::matrix::{Mat, MatAcc};
+use crate::arch::mxu::SystolicSpec;
+use crate::arch::post_adder::{PostAdder, PostAdderSpec, PostAdderStats};
+
+/// One node of the fixed-precision KMM recursion tree.
+#[derive(Debug, Clone)]
+pub enum KmmNode {
+    /// Leaf: a conventional MM₁ MXU on `w`-bit inputs.
+    Leaf { w: u32 },
+    /// Internal node: three sub-MXUs + pre/post adders for `w`-bit inputs.
+    Node {
+        w: u32,
+        hi: Box<KmmNode>,    // ⌊w/2⌋-bit  (C1 path)
+        sum: Box<KmmNode>,   // ⌈w/2⌉+1-bit (Cs path)
+        lo: Box<KmmNode>,    // ⌈w/2⌉-bit  (C0 path)
+    },
+}
+
+impl KmmNode {
+    /// Build the recursion tree for `n = 2^r` digits over `w`-bit inputs.
+    pub fn build(w: u32, n: u32) -> Self {
+        assert!(bits::config_valid(n, w), "invalid KMM config n={n} w={w}");
+        if n == 1 {
+            return KmmNode::Leaf { w };
+        }
+        let wl = bits::lo_width(w);
+        let wh = bits::hi_width(w);
+        KmmNode::Node {
+            w,
+            hi: Box::new(KmmNode::build(wh, n / 2)),
+            sum: Box::new(KmmNode::build(wl + 1, n / 2)),
+            lo: Box::new(KmmNode::build(wl, n / 2)),
+        }
+    }
+
+    /// Input bitwidth this node accepts.
+    pub fn w(&self) -> u32 {
+        match self {
+            KmmNode::Leaf { w } | KmmNode::Node { w, .. } => *w,
+        }
+    }
+
+    /// Leaf MXU input bitwidths, in-order (matches
+    /// [`crate::area::au::kmm_leaf_widths`]).
+    pub fn leaf_widths(&self) -> Vec<u32> {
+        match self {
+            KmmNode::Leaf { w } => vec![*w],
+            KmmNode::Node { hi, sum, lo, .. } => {
+                let mut v = hi.leaf_widths();
+                v.extend(sum.leaf_widths());
+                v.extend(lo.leaf_widths());
+                v
+            }
+        }
+    }
+
+    /// Number of leaf MM₁ MXUs (`3^r`).
+    pub fn leaves(&self) -> usize {
+        match self {
+            KmmNode::Leaf { .. } => 1,
+            KmmNode::Node { hi, sum, lo, .. } => hi.leaves() + sum.leaves() + lo.leaves(),
+        }
+    }
+
+    /// Internal recursion nodes (`(3^r − 1) / 2`), each carrying one
+    /// pre-adder vector pair and one post-adder unit.
+    pub fn internal_nodes(&self) -> usize {
+        match self {
+            KmmNode::Leaf { .. } => 0,
+            KmmNode::Node { hi, sum, lo, .. } => {
+                1 + hi.internal_nodes() + sum.internal_nodes() + lo.internal_nodes()
+            }
+        }
+    }
+
+    /// Recursion depth `r`.
+    pub fn depth(&self) -> u32 {
+        match self {
+            KmmNode::Leaf { .. } => 0,
+            KmmNode::Node { hi, .. } => 1 + hi.depth(),
+        }
+    }
+}
+
+/// Aggregate operation statistics from one fixed-KMM execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FixedKmmStats {
+    /// Input pre-adder `⌈w/2⌉`-bit additions (As/Bs formation).
+    pub pre_adds: u64,
+    /// Post-adder narrow + wide additions, summed over levels.
+    pub post: PostAdderStats,
+    /// Leaf-MXU multiply operations.
+    pub leaf_mults: u64,
+}
+
+/// The fixed-precision KMM architecture: recursion tree + leaf MXU shape.
+#[derive(Debug, Clone)]
+pub struct FixedKmm {
+    pub tree: KmmNode,
+    /// Shape of every leaf MM₁ MXU (all leaves share X/Y/p).
+    pub leaf: SystolicSpec,
+    /// Accumulation guard bits used by the post-adders.
+    pub wa: u32,
+}
+
+impl FixedKmm {
+    pub fn new(w: u32, n: u32, leaf: SystolicSpec) -> Self {
+        let tree = KmmNode::build(w, n);
+        let wa = crate::algo::opcount::ceil_log2(leaf.x as u32);
+        FixedKmm { tree, leaf, wa }
+    }
+
+    /// Total multipliers across the `3^r` leaf MXUs.
+    pub fn mults(&self) -> usize {
+        self.tree.leaves() * self.leaf.mults()
+    }
+
+    /// Multiply one tile pair exactly through the architecture: digit
+    /// split at each node, three sub-MXU products, Fig. 9 recombination.
+    /// `a_tile` is M×X, `b_tile` is X×Y, elements must fit the tree width.
+    pub fn tile_product(&self, a_tile: &Mat, b_tile: &Mat) -> (MatAcc, FixedKmmStats) {
+        let w = self.tree.w();
+        assert!(a_tile.fits(w) && b_tile.fits(w), "operand exceeds w={w} bits");
+        let mut stats = FixedKmmStats::default();
+        let out = self.run_node(&self.tree, a_tile, b_tile, &mut stats);
+        (out, stats)
+    }
+
+    fn run_node(
+        &self,
+        node: &KmmNode,
+        a: &Mat,
+        b: &Mat,
+        stats: &mut FixedKmmStats,
+    ) -> MatAcc {
+        match node {
+            KmmNode::Leaf { .. } => {
+                stats.leaf_mults += (a.rows * self.leaf.x * self.leaf.y) as u64;
+                self.leaf.tile_product(a, b)
+            }
+            KmmNode::Node { w, hi, sum, lo } => {
+                let (a1, a0) = a.split(*w);
+                let (b1, b0) = b.split(*w);
+                // 2X input pre-adders: As/Bs formed as operands stream in.
+                let a_s = a1.add(&a0);
+                let b_s = b1.add(&b0);
+                stats.pre_adds += (a.rows * a.cols + b.rows * b.cols) as u64;
+
+                let c1 = self.run_node(hi, &a1, &b1, stats);
+                let cs = self.run_node(sum, &a_s, &b_s, stats);
+                let c0 = self.run_node(lo, &a0, &b0, stats);
+
+                let mut pa = PostAdder::new(PostAdderSpec {
+                    w: *w,
+                    y: self.leaf.y,
+                    wa: self.wa,
+                });
+                let out = pa.combine(&c1, &cs, &c0);
+                stats.post.cross_adds += pa.stats.cross_adds;
+                stats.post.merge_adds += pa.stats.merge_adds;
+                stats.post.rows += pa.stats.rows;
+                out
+            }
+        }
+    }
+
+    /// Cycles to stream `rows` A-rows through the architecture: the three
+    /// sub-MXUs of every level run in parallel on the same schedule, so
+    /// the leaf stream dominates; each level adds its post-adder latency.
+    pub fn stream_cycles(&self, rows: usize, include_drain: bool) -> u64 {
+        let post = PostAdderSpec {
+            w: self.tree.w(),
+            y: self.leaf.y,
+            wa: self.wa,
+        };
+        self.leaf.stream_cycles(rows, include_drain)
+            + self.tree.depth() as u64 * post.latency()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::matmul_oracle;
+    use crate::util::prop::{forall, forall_pairs, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    fn leaf4() -> SystolicSpec {
+        SystolicSpec { x: 4, y: 4, p: 2 }
+    }
+
+    #[test]
+    fn tree_shape_counts() {
+        let t1 = KmmNode::build(16, 2);
+        assert_eq!(t1.leaves(), 3);
+        assert_eq!(t1.internal_nodes(), 1);
+        assert_eq!(t1.depth(), 1);
+        let t2 = KmmNode::build(32, 4);
+        assert_eq!(t2.leaves(), 9);
+        assert_eq!(t2.internal_nodes(), 4);
+        assert_eq!(t2.depth(), 2);
+        let t3 = KmmNode::build(64, 8);
+        assert_eq!(t3.leaves(), 27);
+        assert_eq!(t3.internal_nodes(), 13);
+    }
+
+    #[test]
+    fn leaf_widths_match_paper_sub_widths() {
+        // w=16, n=2: ⌊w/2⌋=8, ⌈w/2⌉+1=9, ⌈w/2⌉=8.
+        assert_eq!(KmmNode::build(16, 2).leaf_widths(), vec![8, 9, 8]);
+        // Odd split propagates exactly like Algorithm 4's sub-widths.
+        assert_eq!(KmmNode::build(9, 2).leaf_widths(), vec![4, 6, 5]);
+        // Matches the area model's enumeration for every Fig. 12 point.
+        let cfgs = [(16u32, 2u32), (24, 2), (32, 2), (40, 4), (64, 8)];
+        for (w, n) in cfgs {
+            assert_eq!(
+                KmmNode::build(w, n).leaf_widths(),
+                crate::area::au::kmm_leaf_widths(n, w),
+                "w={w} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn tile_product_matches_oracle_one_level() {
+        forall(Config::default().cases(40), |rng| {
+            let w = rng.range(2, 17) as u32;
+            let arch = FixedKmm::new(w, 2, leaf4());
+            let rows = rng.range(1, 8);
+            let a = Mat::random(rows, 4, w, rng);
+            let b = Mat::random(4, 4, w, rng);
+            let (c, _) = arch.tile_product(&a, &b);
+            prop_assert_eq(c, matmul_oracle(&a, &b), "fixed-KMM tile == oracle")
+        });
+    }
+
+    #[test]
+    fn tile_product_matches_oracle_deep_recursion() {
+        forall_pairs(&[(16u32, 4u32), (32, 4), (32, 8), (64, 8)], &[1usize, 3, 5], |(w, n), rows| {
+            let mut rng = Rng::new(w as u64 * 31 + n as u64);
+            let arch = FixedKmm::new(w, n, leaf4());
+            let a = Mat::random(rows, 4, w, &mut rng);
+            let b = Mat::random(4, 4, w, &mut rng);
+            let (c, _) = arch.tile_product(&a, &b);
+            prop_assert_eq(c, matmul_oracle(&a, &b), "deep recursion exact")
+        });
+    }
+
+    #[test]
+    fn architecture_matches_algorithm4() {
+        // The hardware structure computes exactly what algo::kmm computes.
+        forall(Config::default().cases(25), |rng| {
+            let w = *rng.pick(&[8u32, 12, 16, 32]);
+            let n = if w >= 16 && rng.chance(1, 2) { 4 } else { 2 };
+            let arch = FixedKmm::new(w, n, leaf4());
+            let a = Mat::random(4, 4, w, rng);
+            let b = Mat::random(4, 4, w, rng);
+            let (c_arch, _) = arch.tile_product(&a, &b);
+            let mut tally = crate::algo::opcount::Tally::new();
+            let c_alg = crate::algo::kmm(&a, &b, w, n, &mut tally);
+            prop_assert_eq(c_arch, c_alg, "arch == Algorithm 4")
+        });
+    }
+
+    #[test]
+    fn stats_count_structure() {
+        let arch = FixedKmm::new(16, 2, leaf4());
+        let mut rng = Rng::new(9);
+        let a = Mat::random(4, 4, 16, &mut rng);
+        let b = Mat::random(4, 4, 16, &mut rng);
+        let (_, stats) = arch.tile_product(&a, &b);
+        // One level: pre-adds = |A| + |B| = 32; three 4×4-leaf passes of
+        // 4 rows each = 3·4·16 mults.
+        assert_eq!(stats.pre_adds, 32);
+        assert_eq!(stats.leaf_mults, 3 * 4 * 16);
+        assert_eq!(stats.post.rows, 4);
+        assert_eq!(stats.post.cross_adds, 4 * 2 * 4);
+    }
+
+    #[test]
+    fn mults_scale_3_pow_r() {
+        let leaf = SystolicSpec { x: 64, y: 64, p: 4 };
+        assert_eq!(FixedKmm::new(16, 2, leaf).mults(), 3 * 4096);
+        assert_eq!(FixedKmm::new(32, 4, leaf).mults(), 9 * 4096);
+        assert_eq!(FixedKmm::new(64, 8, leaf).mults(), 27 * 4096);
+    }
+
+    #[test]
+    fn stream_cycles_adds_post_latency_per_level() {
+        let leaf = SystolicSpec { x: 64, y: 64, p: 4 };
+        let one = FixedKmm::new(16, 2, leaf);
+        assert_eq!(one.stream_cycles(64, true), 64 + 127 + 2);
+        let two = FixedKmm::new(32, 4, leaf);
+        assert_eq!(two.stream_cycles(64, true), 64 + 127 + 4);
+        // Throughput (rows/cycle steady state) is unchanged by depth.
+        assert_eq!(one.stream_cycles(1000, false), 1000 + 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "operand exceeds")]
+    fn rejects_oversized_operands() {
+        let arch = FixedKmm::new(8, 2, leaf4());
+        let a = Mat::from_rows(1, 4, &[300, 0, 0, 0]);
+        let b = Mat::zeros(4, 4);
+        arch.tile_product(&a, &b);
+    }
+}

@@ -1,0 +1,34 @@
+//! Hardware architecture models — paper §IV.
+//!
+//! Structural (adder/register/multiplier inventories) and functional
+//! (bit-exact) models of every design the paper evaluates:
+//!
+//! - [`pe`] / [`mxu`] — the baseline MM₁ systolic array (Figs. 6–7) with
+//!   the Algorithm 5 accumulator, including a cycle-stepped pipeline
+//!   simulator validated against the closed-form timing model.
+//! - [`post_adder`] — the KMM recombination unit (Fig. 9).
+//! - [`fixed_kmm`] — the fixed-precision KMM architecture (Fig. 8):
+//!   a 3^r-leaf recursion tree of sub-MXUs.
+//! - [`scalable`] — the precision-scalable KMM architecture (Fig. 10)
+//!   with the §IV-C mode controller (MM₁ / KMM₂ / MM₂ tile re-reads).
+//! - [`ffip`] — the FFIP baseline array of prior work \[6\] and the
+//!   [`ffip::TileEngine`] abstraction that lets the scalable architecture
+//!   host either core (Table II's FFIP+KMM).
+
+pub mod ffip;
+pub mod fixed_kmm;
+pub mod mxu;
+pub mod packing;
+pub mod pe;
+pub mod post_adder;
+pub mod scalable;
+pub mod scalable_multi;
+
+pub use ffip::{FfipMxu, TileEngine};
+pub use fixed_kmm::{FixedKmm, KmmNode};
+pub use mxu::SystolicSpec;
+pub use packing::PackSpec;
+pub use pe::{AccumSpec, Alg5Accumulator, Pe};
+pub use post_adder::{PostAdder, PostAdderSpec};
+pub use scalable::{select_mode, Mode, ScalableKmm, WidthError};
+pub use scalable_multi::{MultiRun, ScalableMulti};

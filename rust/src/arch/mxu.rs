@@ -1,0 +1,427 @@
+//! Baseline MM₁ systolic-array MXU — paper Fig. 7, §IV-A and §IV-D.
+//!
+//! Weight-stationary organization: a `B` tile (X×Y) is pre-loaded into the
+//! PEs (double-buffered, so the next tile loads while the current one
+//! computes); `A` row vectors stream in, one per clock cycle, and each
+//! output row emerges after the X-deep reduction pipeline plus the Y-wide
+//! output skew. Accumulation inside the reduction chain uses the
+//! Algorithm 5 two-level structure (Fig. 6) with group size `p`.
+//!
+//! Two coupled models:
+//!
+//! - [`CycleSim`] — a cycle-stepped pipeline simulator (explicit in-flight
+//!   wavefronts) used to *validate* the timing model and functional output
+//!   on small arrays.
+//! - [`SystolicSpec::stream_cycles`] — the closed-form cycle count used by
+//!   the GEMM-level simulator on full workloads, asserted equal to
+//!   [`CycleSim`] in tests.
+
+use crate::algo::matrix::{Mat, MatAcc};
+use crate::util::wide::I256;
+
+/// Static configuration of one MM₁ MXU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SystolicSpec {
+    /// Reduction depth: length of the `A` row vectors consumed per cycle
+    /// (number of multipliers per output column).
+    pub x: usize,
+    /// Output width: results produced per emerging row.
+    pub y: usize,
+    /// Algorithm 5 pre-accumulation group size.
+    pub p: usize,
+}
+
+impl SystolicSpec {
+    /// The paper's 64×64, p=4 MXU.
+    pub fn paper_64() -> Self {
+        SystolicSpec { x: 64, y: 64, p: 4 }
+    }
+
+    /// Multipliers in the array.
+    pub fn mults(&self) -> usize {
+        self.x * self.y
+    }
+
+    /// Cycles to pre-load a `B` tile into the stationary registers (one
+    /// row per cycle). Hidden by the double buffer whenever the previous
+    /// tile streams at least this many `A` rows (§IV-D).
+    pub fn b_load_cycles(&self) -> u64 {
+        self.x as u64
+    }
+
+    /// Pipeline latency from an `A` row entering to its output row fully
+    /// emerging: X reduction stages plus the Y−1 output skew.
+    pub fn fill_latency(&self) -> u64 {
+        (self.x + self.y - 1) as u64
+    }
+
+    /// Closed-form cycles to stream `rows` A-rows through a loaded array:
+    /// one row per cycle, plus the pipeline drain on the last row
+    /// (`include_drain` — set once per dependent chain, since back-to-back
+    /// tiles keep the pipe full).
+    pub fn stream_cycles(&self, rows: usize, include_drain: bool) -> u64 {
+        rows as u64 + if include_drain { self.fill_latency() } else { 0 }
+    }
+
+    /// Narrow fast-path tile product into a flat row-major i128 buffer
+    /// (`rows·Y`), avoiding all wide-integer temporaries. Returns `None`
+    /// when the operands do not provably fit i128 accumulation — callers
+    /// fall back to [`SystolicSpec::tile_product`]. Perf-pass hot path
+    /// for the scalable architecture (EXPERIMENTS.md §Perf, iter 3).
+    pub fn tile_product_i128(&self, a_tile: &Mat, b_tile: &Mat) -> Option<Vec<i128>> {
+        assert_eq!(a_tile.cols, self.x, "A tile width must equal X");
+        assert_eq!(b_tile.rows, self.x);
+        assert_eq!(b_tile.cols, self.y, "B tile must be X×Y");
+        if !crate::algo::matrix::fits_i128_accum(a_tile, b_tile, self.x) {
+            return None;
+        }
+        let (x, y) = (self.x, self.y);
+        let ad = a_tile.data();
+        let bd = b_tile.data();
+        let mut out = vec![0i128; a_tile.rows * y];
+        // Narrowest path: whole reduction fits u64 (e.g. 8-bit operands,
+        // X ≤ 2^47) — native 64-bit MACs, ~2× the u128 path.
+        let depth_bits = crate::algo::opcount::ceil_log2(x.max(1) as u32);
+        if a_tile.max_bits() + b_tile.max_bits() + depth_bits <= 63 {
+            let mut row64 = vec![0u64; y];
+            for i in 0..a_tile.rows {
+                row64.fill(0);
+                for k in 0..x {
+                    let av = ad[i * x + k];
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &bd[k * y..(k + 1) * y];
+                    for (acc, &bv) in row64.iter_mut().zip(brow) {
+                        *acc += av * bv;
+                    }
+                }
+                for (o, &v) in out[i * y..(i + 1) * y].iter_mut().zip(&row64) {
+                    *o = v as i128;
+                }
+            }
+            return Some(out);
+        }
+        for i in 0..a_tile.rows {
+            let row = &mut out[i * y..(i + 1) * y];
+            for k in 0..x {
+                let av = ad[i * x + k] as u128;
+                if av == 0 {
+                    continue;
+                }
+                let brow = &bd[k * y..(k + 1) * y];
+                for (acc, &bv) in row.iter_mut().zip(brow) {
+                    *acc += (av * bv as u128) as i128;
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// Multiply one tile functionally with Algorithm 5 accumulation
+    /// ordering: `a_tile` is M×X, `b_tile` is X×Y. Exact.
+    ///
+    /// Hot path (perf pass, EXPERIMENTS.md §Perf): operands that provably
+    /// fit i128 accumulation (everything up to ~63-bit inputs — all the
+    /// architectures' operating points) stream row-major through `B` with
+    /// native i128 MACs; integer addition is associative, so the Alg. 5
+    /// grouping is bit-identical and kept only on the wide fallback.
+    pub fn tile_product(&self, a_tile: &Mat, b_tile: &Mat) -> MatAcc {
+        assert_eq!(a_tile.cols, self.x, "A tile width must equal X");
+        assert_eq!(b_tile.rows, self.x);
+        assert_eq!(b_tile.cols, self.y, "B tile must be X×Y");
+        if crate::algo::matrix::fits_i128_accum(a_tile, b_tile, self.x) {
+            let (x, y) = (self.x, self.y);
+            let ad = a_tile.data();
+            let bd = b_tile.data();
+            let mut out = MatAcc::zeros(a_tile.rows, y);
+            let mut row = vec![0i128; y];
+            for i in 0..a_tile.rows {
+                row.fill(0);
+                for k in 0..x {
+                    let av = ad[i * x + k] as u128;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &bd[k * y..(k + 1) * y];
+                    for (acc, &bv) in row.iter_mut().zip(brow) {
+                        *acc += (av * bv as u128) as i128;
+                    }
+                }
+                for (j, &v) in row.iter().enumerate() {
+                    out[(i, j)] = I256::from_i128(v);
+                }
+            }
+            return out;
+        }
+        let mut out = MatAcc::zeros(a_tile.rows, self.y);
+        for i in 0..a_tile.rows {
+            for j in 0..self.y {
+                // Algorithm 5: pre-sum groups of p, then fold into the
+                // wide running sum (bit-exact regardless of grouping).
+                let mut sum = I256::zero();
+                let mut k = 0;
+                while k < self.x {
+                    let g = self.p.min(self.x - k);
+                    let mut pre = I256::zero();
+                    for q in 0..g {
+                        pre += I256::from_prod(a_tile[(i, k + q)], b_tile[(k + q, j)]);
+                    }
+                    sum += pre;
+                    k += g;
+                }
+                out[(i, j)] = sum;
+            }
+        }
+        out
+    }
+}
+
+/// Per-tile timing/occupancy statistics from a simulation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TileTiming {
+    /// Total cycles from first input to last output.
+    pub cycles: u64,
+    /// Cycles during which at least one PE did useful work.
+    pub busy_cycles: u64,
+    /// Useful multiply-accumulate operations performed.
+    pub macs: u64,
+}
+
+/// Cycle-stepped pipeline simulator of one MM₁ MXU tile multiplication.
+///
+/// Models the array as Y output columns, each an X-deep MAC pipeline, with
+/// the systolic skew of one cycle per column. In-flight rows are explicit:
+/// calling [`CycleSim::step`] advances exactly one clock edge, so fill,
+/// steady-state, and drain behaviour are observable cycle by cycle.
+pub struct CycleSim {
+    spec: SystolicSpec,
+    b: Mat,
+    /// In-flight rows: (row index, cycle it entered stage 0 of column 0).
+    inflight: Vec<(usize, u64)>,
+    a_rows: Vec<Vec<u64>>,
+    next_row: usize,
+    pub now: u64,
+    outputs: Vec<(usize, u64, Vec<I256>)>,
+    busy: u64,
+}
+
+impl CycleSim {
+    /// Create a simulator with a pre-loaded `B` tile (X×Y).
+    pub fn new(spec: SystolicSpec, a_tile: &Mat, b_tile: &Mat) -> Self {
+        assert_eq!(a_tile.cols, spec.x);
+        assert_eq!(b_tile.rows, spec.x);
+        assert_eq!(b_tile.cols, spec.y);
+        let a_rows = (0..a_tile.rows)
+            .map(|i| (0..spec.x).map(|k| a_tile[(i, k)]).collect())
+            .collect();
+        CycleSim {
+            spec,
+            b: b_tile.clone(),
+            inflight: vec![],
+            a_rows,
+            next_row: 0,
+            now: 0,
+            outputs: vec![],
+            busy: 0,
+        }
+    }
+
+    /// Advance one clock edge: inject the next `A` row (if any) and retire
+    /// any row whose last column cleared the pipeline.
+    pub fn step(&mut self) {
+        // Inject one row per cycle.
+        if self.next_row < self.a_rows.len() {
+            self.inflight.push((self.next_row, self.now));
+            self.next_row += 1;
+        }
+        if !self.inflight.is_empty() {
+            self.busy += 1;
+        }
+        // Retire rows whose full output vector has emerged: a row entering
+        // at cycle t clears column y at t + X + y; the last column at
+        // t + X + Y − 1. Outputs are visible at the *end* of that cycle.
+        let fill = self.spec.fill_latency();
+        let (spec, b) = (&self.spec, &self.b);
+        let a_rows = &self.a_rows;
+        let now = self.now;
+        let mut retired = vec![];
+        self.inflight.retain(|&(row, t0)| {
+            if now >= t0 + fill {
+                retired.push((row, t0));
+                false
+            } else {
+                true
+            }
+        });
+        for (row, t0) in retired {
+            let vals: Vec<I256> = (0..spec.y)
+                .map(|j| {
+                    let mut s = I256::zero();
+                    for k in 0..spec.x {
+                        s += I256::from_prod(a_rows[row][k], b[(k, j)]);
+                    }
+                    s
+                })
+                .collect();
+            self.outputs.push((row, t0 + fill, vals));
+        }
+        self.now += 1;
+    }
+
+    /// Run until every row has retired; return the output tile and timing.
+    pub fn run_to_completion(&mut self) -> (MatAcc, TileTiming) {
+        let rows = self.a_rows.len();
+        while self.outputs.len() < rows {
+            self.step();
+            assert!(
+                self.now < (rows as u64 + self.spec.fill_latency()) * 4 + 64,
+                "simulator failed to drain"
+            );
+        }
+        let mut out = MatAcc::zeros(rows, self.spec.y);
+        let mut last_cycle = 0;
+        for (row, done_at, vals) in &self.outputs {
+            last_cycle = last_cycle.max(*done_at);
+            for (j, v) in vals.iter().enumerate() {
+                out[(*row, j)] = *v;
+            }
+        }
+        let timing = TileTiming {
+            // +1: the output of the edge at cycle `last_cycle` is
+            // registered at the end of that cycle.
+            cycles: last_cycle + 1,
+            busy_cycles: self.busy,
+            macs: (rows * self.spec.x * self.spec.y) as u64,
+        };
+        (out, timing)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::matmul_oracle;
+    use crate::util::prop::{forall, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    fn small() -> SystolicSpec {
+        SystolicSpec { x: 4, y: 4, p: 2 }
+    }
+
+    #[test]
+    fn tile_product_matches_oracle() {
+        forall(Config::default().cases(50), |rng| {
+            let spec = SystolicSpec {
+                x: rng.range(1, 8),
+                y: rng.range(1, 8),
+                p: rng.range(1, 5),
+            };
+            let rows = rng.range(1, 10);
+            let w = rng.range(1, 16) as u32;
+            let a = Mat::random(rows, spec.x, w, rng);
+            let b = Mat::random(spec.x, spec.y, w, rng);
+            prop_assert_eq(
+                spec.tile_product(&a, &b),
+                matmul_oracle(&a, &b),
+                "tile product == oracle",
+            )
+        });
+    }
+
+    #[test]
+    fn cycle_sim_output_matches_functional() {
+        forall(Config::default().cases(30), |rng| {
+            let spec = small();
+            let rows = rng.range(1, 12);
+            let a = Mat::random(rows, spec.x, 8, rng);
+            let b = Mat::random(spec.x, spec.y, 8, rng);
+            let (out, _) = CycleSim::new(spec, &a, &b).run_to_completion();
+            prop_assert_eq(out, spec.tile_product(&a, &b), "cycle sim == functional")
+        });
+    }
+
+    #[test]
+    fn cycle_count_is_rows_plus_fill() {
+        // The closed-form model the GEMM simulator relies on: first row
+        // enters at cycle 0, last of M rows at M−1, drains after
+        // fill_latency, +1 for output registration.
+        forall(Config::default().cases(20), |rng| {
+            let spec = SystolicSpec {
+                x: rng.range(2, 8),
+                y: rng.range(2, 8),
+                p: 4,
+            };
+            let rows = rng.range(1, 20);
+            let a = Mat::random(rows, spec.x, 8, rng);
+            let b = Mat::random(spec.x, spec.y, 8, rng);
+            let (_, t) = CycleSim::new(spec, &a, &b).run_to_completion();
+            prop_assert_eq(
+                t.cycles,
+                spec.stream_cycles(rows, true),
+                "cycles == rows + X + Y − 1 (+1 reg)",
+            )
+        });
+    }
+
+    #[test]
+    fn stream_cycles_closed_form() {
+        let spec = SystolicSpec { x: 64, y: 64, p: 4 };
+        assert_eq!(spec.fill_latency(), 127);
+        assert_eq!(spec.stream_cycles(64, true), 64 + 127);
+        assert_eq!(spec.stream_cycles(64, false), 64);
+        assert_eq!(spec.b_load_cycles(), 64);
+    }
+
+    #[test]
+    fn macs_counted() {
+        let spec = small();
+        let mut rng = Rng::new(5);
+        let a = Mat::random(6, spec.x, 8, &mut rng);
+        let b = Mat::random(spec.x, spec.y, 8, &mut rng);
+        let (_, t) = CycleSim::new(spec, &a, &b).run_to_completion();
+        assert_eq!(t.macs, (6 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn single_row_tile() {
+        let spec = small();
+        let mut rng = Rng::new(6);
+        let a = Mat::random(1, spec.x, 8, &mut rng);
+        let b = Mat::random(spec.x, spec.y, 8, &mut rng);
+        let (out, t) = CycleSim::new(spec, &a, &b).run_to_completion();
+        assert_eq!(out, matmul_oracle(&a, &b));
+        assert_eq!(t.cycles, 1 + spec.fill_latency());
+    }
+
+    #[test]
+    fn wide_inputs_exact() {
+        // 16-bit inputs (the KMM₂ window top) with 64-deep reduction.
+        let spec = SystolicSpec { x: 8, y: 4, p: 4 };
+        let mut rng = Rng::new(7);
+        let a = Mat::random(5, spec.x, 16, &mut rng);
+        let b = Mat::random(spec.x, spec.y, 16, &mut rng);
+        let (out, _) = CycleSim::new(spec, &a, &b).run_to_completion();
+        assert_eq!(out, matmul_oracle(&a, &b));
+    }
+
+    #[test]
+    fn busy_cycles_bounded_by_total() {
+        let spec = small();
+        let mut rng = Rng::new(8);
+        let a = Mat::random(10, spec.x, 8, &mut rng);
+        let b = Mat::random(spec.x, spec.y, 8, &mut rng);
+        let (_, t) = CycleSim::new(spec, &a, &b).run_to_completion();
+        assert!(t.busy_cycles <= t.cycles);
+        assert!(t.busy_cycles >= 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "A tile width")]
+    fn rejects_mismatched_tile() {
+        let spec = small();
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 4);
+        spec.tile_product(&a, &b);
+    }
+}

@@ -1,0 +1,222 @@
+//! Processing element and the Algorithm 5 accumulator structure — Fig. 6.
+//!
+//! Each MM₁ PE holds the stationary `b` element (double-buffered), the
+//! flowing `a` element, one multiplier, and a share of the reduction
+//! chain's accumulator. The accumulator is the §III-C structure: products
+//! pre-sum on `2w + ⌈log2 p⌉` bits through `p−1` narrow adders with **no
+//! output registers**, and only the group total passes through the single
+//! wide (`2w + w_a`-bit) adder into the registered running sum — cutting
+//! wide adders and accumulation registers by `p` (eqs. 9–10, 18).
+
+use crate::algo::opcount::ceil_log2;
+use crate::util::wide::I256;
+
+/// Structural description of one Algorithm 5 accumulator serving `p`
+/// products of width `2w` with `wa` guard bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccumSpec {
+    pub w: u32,
+    pub p: u32,
+    pub wa: u32,
+}
+
+impl AccumSpec {
+    /// Width of the narrow pre-sum adders: `2w + ⌈log2 p⌉` (eq. 10).
+    pub fn presum_width(&self) -> u32 {
+        2 * self.w + ceil_log2(self.p)
+    }
+
+    /// Width of the wide running-sum adder and its register: `2w + wa`.
+    pub fn wide_width(&self) -> u32 {
+        2 * self.w + self.wa
+    }
+
+    /// Narrow adders per group (`p − 1`).
+    pub fn narrow_adders(&self) -> u32 {
+        self.p - 1
+    }
+
+    /// Registered wide adders per group (always 1): the factor-of-p
+    /// register reduction of §III-C.
+    pub fn wide_adders(&self) -> u32 {
+        1
+    }
+
+    /// Output register bits per `p` products (vs `p·(2w+wa)` without
+    /// Algorithm 5).
+    pub fn register_bits(&self) -> u32 {
+        self.wide_width()
+    }
+}
+
+/// Cycle-faithful Algorithm 5 accumulator: feed one product per call;
+/// the wide running sum updates (and its register re-latches) only when a
+/// group of `p` closes or [`Alg5Accumulator::flush`] is called.
+#[derive(Debug, Clone)]
+pub struct Alg5Accumulator {
+    spec: AccumSpec,
+    presum: I256,
+    in_group: u32,
+    running: I256,
+    /// Number of wide-register latch events (observable cost).
+    pub wide_latches: u64,
+    /// Number of narrow pre-sum additions performed.
+    pub narrow_adds: u64,
+}
+
+impl Alg5Accumulator {
+    pub fn new(spec: AccumSpec) -> Self {
+        Alg5Accumulator {
+            spec,
+            presum: I256::zero(),
+            in_group: 0,
+            running: I256::zero(),
+            wide_latches: 0,
+            narrow_adds: 0,
+        }
+    }
+
+    /// Feed one `2w`-bit product into the pre-sum network.
+    pub fn feed(&mut self, product: I256) {
+        if self.in_group == 0 {
+            self.presum = product; // first product initializes the pre-sum
+        } else {
+            self.narrow_adds += 1;
+            self.presum += product;
+        }
+        self.in_group += 1;
+        if self.in_group == self.spec.p {
+            self.close_group();
+        }
+    }
+
+    fn close_group(&mut self) {
+        self.running += self.presum;
+        self.wide_latches += 1;
+        self.presum = I256::zero();
+        self.in_group = 0;
+    }
+
+    /// Close any partial group and return the registered running sum.
+    pub fn flush(&mut self) -> I256 {
+        if self.in_group > 0 {
+            self.close_group();
+        }
+        self.running
+    }
+
+    /// The registered value (does not include an open pre-sum group).
+    pub fn registered(&self) -> I256 {
+        self.running
+    }
+}
+
+/// One MM₁ PE (Fig. 6): stationary `b` with a double buffer, flowing `a`.
+#[derive(Debug, Clone, Default)]
+pub struct Pe {
+    b_active: u64,
+    b_next: Option<u64>,
+}
+
+impl Pe {
+    /// Load the *next* tile's `b` element into the shadow buffer while the
+    /// current tile computes (§IV-D latency hiding).
+    pub fn load_next_b(&mut self, b: u64) {
+        self.b_next = Some(b);
+    }
+
+    /// Swap the shadow buffer in at a tile boundary.
+    pub fn swap_b(&mut self) {
+        if let Some(b) = self.b_next.take() {
+            self.b_active = b;
+        }
+    }
+
+    /// Currently active stationary operand.
+    pub fn b(&self) -> u64 {
+        self.b_active
+    }
+
+    /// The PE's multiply: one product per cycle.
+    pub fn mult(&self, a: u64) -> I256 {
+        I256::from_prod(a, self.b_active)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, prop_assert_eq, Config};
+
+    fn spec() -> AccumSpec {
+        AccumSpec { w: 8, p: 4, wa: 6 }
+    }
+
+    #[test]
+    fn widths_match_eq10() {
+        let s = spec();
+        assert_eq!(s.presum_width(), 18);
+        assert_eq!(s.wide_width(), 22);
+        assert_eq!(s.narrow_adders(), 3);
+        assert_eq!(s.wide_adders(), 1);
+        assert_eq!(s.register_bits(), 22);
+    }
+
+    #[test]
+    fn accumulates_exactly() {
+        forall(Config::default().cases(100), |rng| {
+            let p = rng.range(1, 6) as u32;
+            let s = AccumSpec { w: 8, p, wa: 6 };
+            let k = rng.range(1, 40);
+            let mut acc = Alg5Accumulator::new(s);
+            let mut expect = 0i128;
+            for _ in 0..k {
+                let a = rng.bits(8);
+                let b = rng.bits(8);
+                acc.feed(I256::from_prod(a, b));
+                expect += (a as i128) * (b as i128);
+            }
+            prop_assert_eq(acc.flush().to_i128(), Some(expect), "Alg5 accumulator exact")
+        });
+    }
+
+    #[test]
+    fn wide_latches_reduced_by_p() {
+        let s = spec();
+        let mut acc = Alg5Accumulator::new(s);
+        for i in 0..32u64 {
+            acc.feed(I256::from_u64(i));
+        }
+        acc.flush();
+        assert_eq!(acc.wide_latches, 8); // 32 / p=4
+        assert_eq!(acc.narrow_adds, 24); // 3 per group
+    }
+
+    #[test]
+    fn partial_group_flush() {
+        let s = spec();
+        let mut acc = Alg5Accumulator::new(s);
+        for i in 1..=6u64 {
+            acc.feed(I256::from_u64(i));
+        }
+        // One full group latched, two products pending.
+        assert_eq!(acc.wide_latches, 1);
+        assert_eq!(acc.registered().to_i128(), Some(1 + 2 + 3 + 4));
+        assert_eq!(acc.flush().to_i128(), Some(21));
+        assert_eq!(acc.wide_latches, 2);
+    }
+
+    #[test]
+    fn pe_double_buffer_swap() {
+        let mut pe = Pe::default();
+        pe.load_next_b(7);
+        assert_eq!(pe.b(), 0, "shadow load must not disturb active tile");
+        assert_eq!(pe.mult(5).to_i128(), Some(0));
+        pe.swap_b();
+        assert_eq!(pe.b(), 7);
+        assert_eq!(pe.mult(5).to_i128(), Some(35));
+        // Swapping again without a new load keeps the active value.
+        pe.swap_b();
+        assert_eq!(pe.b(), 7);
+    }
+}

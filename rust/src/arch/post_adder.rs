@@ -1,0 +1,196 @@
+//! KMM Post-Adder Unit — paper Fig. 9.
+//!
+//! Sits at the output of the three sub-MXUs of the fixed-precision KMM
+//! architecture (Fig. 8) and recombines one output-row triple per cycle:
+//!
+//! ```text
+//!   C_row = (C1 << w) + (Cs − C1 − C0) << ⌈w/2⌉ + C0
+//! ```
+//!
+//! Structurally it is `2Y` adders: per output lane, one
+//! `(2⌈w/2⌉+4+w_a)`-bit adder pair folded as two adder stages forming
+//! `(Cs − C1 − C0)` first (the narrow cross term), then two `(2w+w_a)`-bit
+//! adders merging the shifted terms (eq. 5a / 22a). Shifts are wiring and
+//! cost nothing (§IV-B).
+
+use crate::algo::bits;
+use crate::algo::matrix::MatAcc;
+use crate::util::wide::I256;
+
+/// Structural description of one Y-lane post-adder unit for `w`-bit
+/// recombination with `wa` accumulation guard bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PostAdderSpec {
+    /// Input bitwidth `w` of the level being recombined.
+    pub w: u32,
+    /// Output lanes (MXU height `Y`).
+    pub y: usize,
+    /// Accumulation guard bits `w_a = ⌈log2 X⌉`.
+    pub wa: u32,
+}
+
+impl PostAdderSpec {
+    /// Width of the narrow cross-term adders: `2⌈w/2⌉ + 4 + w_a` (eq. 5a).
+    pub fn cross_width(&self) -> u32 {
+        2 * bits::lo_width(self.w) + 4 + self.wa
+    }
+
+    /// Width of the wide merge adders: `2w + w_a`.
+    pub fn merge_width(&self) -> u32 {
+        2 * self.w + self.wa
+    }
+
+    /// Narrow adders in the unit (two per lane: `Cs − C1` then `− C0`).
+    pub fn cross_adders(&self) -> usize {
+        2 * self.y
+    }
+
+    /// Wide adders in the unit (two per lane: `+ (cross << ⌈w/2⌉)` and
+    /// `+ C0`).
+    pub fn merge_adders(&self) -> usize {
+        2 * self.y
+    }
+
+    /// Pipeline latency of the unit in cycles (one register rank per adder
+    /// stage: cross, then merge).
+    pub fn latency(&self) -> u64 {
+        2
+    }
+}
+
+/// Operation counters observable from a [`PostAdder`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PostAdderStats {
+    /// Narrow `(2⌈w/2⌉+4+wa)`-bit additions performed.
+    pub cross_adds: u64,
+    /// Wide `(2w+wa)`-bit additions performed.
+    pub merge_adds: u64,
+    /// Rows recombined.
+    pub rows: u64,
+}
+
+/// Functional + counting model of the Fig. 9 unit.
+#[derive(Debug, Clone)]
+pub struct PostAdder {
+    pub spec: PostAdderSpec,
+    pub stats: PostAdderStats,
+}
+
+impl PostAdder {
+    pub fn new(spec: PostAdderSpec) -> Self {
+        PostAdder {
+            spec,
+            stats: PostAdderStats::default(),
+        }
+    }
+
+    /// Recombine one output-row triple. Exact; counts ops per lane.
+    pub fn combine_row(&mut self, c1: &[I256], cs: &[I256], c0: &[I256]) -> Vec<I256> {
+        assert_eq!(c1.len(), self.spec.y, "C1 row must have Y lanes");
+        assert_eq!(cs.len(), self.spec.y);
+        assert_eq!(c0.len(), self.spec.y);
+        let wl = bits::lo_width(self.spec.w);
+        let out = (0..self.spec.y)
+            .map(|j| {
+                // Two narrow adds: (Cs − C1) − C0.
+                let cross = cs[j] - c1[j] - c0[j];
+                // Two wide adds: (C1 << 2⌈w/2⌉) + (cross << ⌈w/2⌉), + C0.
+                // (Shift by 2⌈w/2⌉, the exact-for-odd-w form; equals `<< w`
+                // for even w — see the `algo::sm` erratum note.)
+                (c1[j] << (2 * wl)) + (cross << wl) + c0[j]
+            })
+            .collect();
+        self.stats.cross_adds += 2 * self.spec.y as u64;
+        self.stats.merge_adds += 2 * self.spec.y as u64;
+        self.stats.rows += 1;
+        out
+    }
+
+    /// Recombine whole partial-product matrices (row per cycle in
+    /// hardware; batched here).
+    pub fn combine(&mut self, c1: &MatAcc, cs: &MatAcc, c0: &MatAcc) -> MatAcc {
+        assert_eq!((c1.rows, c1.cols), (cs.rows, cs.cols));
+        assert_eq!((c1.rows, c1.cols), (c0.rows, c0.cols));
+        assert_eq!(c1.cols, self.spec.y);
+        let mut out = MatAcc::zeros(c1.rows, c1.cols);
+        for i in 0..c1.rows {
+            let r1: Vec<I256> = (0..c1.cols).map(|j| c1[(i, j)]).collect();
+            let rs: Vec<I256> = (0..cs.cols).map(|j| cs[(i, j)]).collect();
+            let r0: Vec<I256> = (0..c0.cols).map(|j| c0[(i, j)]).collect();
+            let combined = self.combine_row(&r1, &rs, &r0);
+            for (j, v) in combined.into_iter().enumerate() {
+                out[(i, j)] = v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::{matmul_oracle, Mat};
+    use crate::util::prop::{forall, prop_assert_eq, Config};
+
+    fn spec(w: u32, y: usize) -> PostAdderSpec {
+        PostAdderSpec { w, y, wa: 6 }
+    }
+
+    #[test]
+    fn widths_match_eq5a() {
+        let s = spec(8, 64);
+        assert_eq!(s.cross_width(), 2 * 4 + 4 + 6);
+        assert_eq!(s.merge_width(), 2 * 8 + 6);
+        assert_eq!(s.cross_adders(), 128);
+        assert_eq!(s.merge_adders(), 128);
+        // Odd w: ⌈w/2⌉ governs the cross width.
+        let s9 = spec(9, 4);
+        assert_eq!(s9.cross_width(), 2 * 5 + 4 + 6);
+    }
+
+    /// The post-adder applied to exact digit-plane sub-products must
+    /// reproduce the full product — the Karatsuba identity in hardware.
+    #[test]
+    fn recombination_reproduces_product() {
+        forall(Config::default().cases(60), |rng| {
+            let w = rng.range(2, 17) as u32;
+            let d = rng.range(1, 7);
+            let y = d;
+            let a = Mat::random(d, d, w, rng);
+            let b = Mat::random(d, d, w, rng);
+            let (a1, a0) = a.split(w);
+            let (b1, b0) = b.split(w);
+            let a_s = a1.add(&a0);
+            let b_s = b1.add(&b0);
+            let c1 = matmul_oracle(&a1, &b1);
+            let cs = matmul_oracle(&a_s, &b_s);
+            let c0 = matmul_oracle(&a0, &b0);
+            let mut pa = PostAdder::new(spec(w, y));
+            let c = pa.combine(&c1, &cs, &c0);
+            prop_assert_eq(c, matmul_oracle(&a, &b), "post-adder == product")
+        });
+    }
+
+    #[test]
+    fn op_counts_per_row() {
+        let mut pa = PostAdder::new(spec(8, 16));
+        let z = MatAcc::zeros(5, 16);
+        pa.combine(&z, &z, &z);
+        assert_eq!(pa.stats.rows, 5);
+        assert_eq!(pa.stats.cross_adds, 5 * 2 * 16);
+        assert_eq!(pa.stats.merge_adds, 5 * 2 * 16);
+    }
+
+    #[test]
+    fn latency_is_two_stages() {
+        assert_eq!(spec(8, 64).latency(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "C1 row must have Y lanes")]
+    fn rejects_wrong_lane_count() {
+        let mut pa = PostAdder::new(spec(8, 4));
+        let row = vec![I256::zero(); 3];
+        pa.combine_row(&row, &row, &row);
+    }
+}

@@ -1,0 +1,588 @@
+//! Precision-scalable KMM architecture — paper Fig. 10, §IV-C.
+//!
+//! One m-bit-input MM₁ MXU executes w-bit GEMMs for varying `w` by
+//! re-reading each input tile set under a mode controller:
+//!
+//! | condition          | mode  | tile reads | schedule over iterations t |
+//! |--------------------|-------|------------|----------------------------|
+//! | `w ≤ m`            | MM₁   | 1          | `C0`                       |
+//! | `m < w ≤ 2m−2`     | KMM₂  | 3          | Karatsuba partials (below) |
+//! | `2m−2 < w ≤ 2m`    | MM₂   | 4          | conventional partials      |
+//!
+//! KMM₂ splits elements at `m−1` (so the digit sums `As = A1 + A0` still
+//! fit the m-bit multipliers — the reason the window top is `2m−2`), and
+//! the per-read MXU output transform emits
+//! `[C1≪2(m−1) − C1≪(m−1)]`, `[Cs≪(m−1)]`, `[C0 − C0≪(m−1)]` so that the
+//! *existing* out-of-MXU GEMM tile accumulator (§IV-D) sums them into
+//! exactly `C1≪2(m−1) + (Cs−C1−C0)≪(m−1) + C0` — no Karatsuba-specific
+//! adder tree is needed outside the MXU.
+//!
+//! MM₂ splits at `m` and emits `C1≪2m`, `C10≪m`, `C01≪m`, `C0` across its
+//! four reads (Algorithm 3 lines 11–13 executed incrementally).
+
+use crate::algo::matrix::{Mat, MatAcc};
+use crate::arch::ffip::{FfipMxu, TileEngine};
+use crate::arch::mxu::SystolicSpec;
+use crate::sim::gemm::{simulate_cycles, GemmStats};
+use crate::sim::memory::TileBuffer;
+use crate::sim::tiler::TileGrid;
+
+/// Execution mode chosen by the controller for one (w, m) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// `w ≤ m`: native pass-through, inputs bypass split/shift.
+    Mm1,
+    /// `m < w ≤ 2m−2`: Karatsuba two-digit schedule, 3 reads.
+    Kmm2,
+    /// `2m−2 < w ≤ 2m`: conventional two-digit schedule, 4 reads.
+    Mm2,
+}
+
+impl Mode {
+    /// Tile-set reads per job (§IV-C): 1 / 3 / 4.
+    pub fn reads(&self) -> u32 {
+        match self {
+            Mode::Mm1 => 1,
+            Mode::Kmm2 => 3,
+            Mode::Mm2 => 4,
+        }
+    }
+}
+
+/// Mode-selection error: the one-level scalable design tops out at `2m`.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("input bitwidth w={w} exceeds the 2m={max} ceiling of the one-level scalable architecture (m={m})")]
+pub struct WidthError {
+    pub w: u32,
+    pub m: u32,
+    pub max: u32,
+}
+
+/// The §IV-C mode controller. `kmm_enabled = false` models the baseline
+/// precision-scalable MM₂ architecture (MM₁ below m, MM₂ above).
+pub fn select_mode(w: u32, m: u32, kmm_enabled: bool) -> Result<Mode, WidthError> {
+    assert!(w >= 1 && m >= 2);
+    if w > 2 * m {
+        return Err(WidthError { w, m, max: 2 * m });
+    }
+    Ok(if w <= m {
+        Mode::Mm1
+    } else if kmm_enabled && w <= 2 * m - 2 {
+        Mode::Kmm2
+    } else {
+        Mode::Mm2
+    })
+}
+
+/// The precision-scalable architecture: one m-bit core array plus the mode
+/// controller, input formers, and output transform of Fig. 10.
+///
+/// Generic over the core [`TileEngine`]: the conventional MM₁ systolic
+/// array (Fig. 7, Table I) or the FFIP array \[6\] (Table II's FFIP+KMM).
+#[derive(Debug, Clone)]
+pub struct ScalableKmm<E: TileEngine = SystolicSpec> {
+    /// The core tile engine.
+    pub mxu: E,
+    /// Native multiplier input bitwidth `m`.
+    pub m: u32,
+    /// Whether the KMM₂ window is implemented (false = baseline MM₂ arch).
+    pub kmm_enabled: bool,
+}
+
+/// Result of one scalable GEMM execution.
+#[derive(Debug, Clone)]
+pub struct ScalableRun {
+    pub mode: Mode,
+    pub stats: GemmStats,
+    /// Input-former additions performed (`As`/`Bs`, KMM₂ mode only).
+    pub former_adds: u64,
+}
+
+impl ScalableKmm<SystolicSpec> {
+    /// The paper's Table I configuration: 64×64, p=4, m=8, KMM enabled.
+    pub fn paper_kmm() -> Self {
+        ScalableKmm {
+            mxu: SystolicSpec::paper_64(),
+            m: 8,
+            kmm_enabled: true,
+        }
+    }
+
+    /// The baseline precision-scalable MM₂ architecture of Table I.
+    pub fn paper_mm() -> Self {
+        ScalableKmm {
+            kmm_enabled: false,
+            ..Self::paper_kmm()
+        }
+    }
+}
+
+impl ScalableKmm<FfipMxu> {
+    /// Table II's FFIP+KMM₂ configuration: FFIP core, m=8, KMM enabled.
+    pub fn paper_ffip_kmm() -> Self {
+        ScalableKmm {
+            mxu: FfipMxu::paper_64(),
+            m: 8,
+            kmm_enabled: true,
+        }
+    }
+}
+
+impl<E: TileEngine> ScalableKmm<E> {
+    /// Digit-split position for `mode` (KMM₂ splits at `m−1`, MM₂ at `m`).
+    fn split_at(&self, mode: Mode) -> u32 {
+        match mode {
+            Mode::Mm1 => 0,
+            Mode::Kmm2 => self.m - 1,
+            Mode::Mm2 => self.m,
+        }
+    }
+
+    /// Execute one GEMM of `w`-bit inputs exactly, returning the product,
+    /// the chosen mode, and cycle/traffic statistics.
+    pub fn gemm(&self, a: &Mat, b: &Mat, w: u32) -> Result<(MatAcc, ScalableRun), WidthError> {
+        let mode = select_mode(w, self.m, self.kmm_enabled)?;
+        assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");
+        let spec = self.mxu.spec();
+        let grid = TileGrid::new(a.rows, a.cols, b.cols, spec.x, spec.y);
+        let mut acc = MatAcc::zeros(a.rows, b.cols);
+        let mut former_adds = 0u64;
+
+        // The §IV-D re-read memory path, with the mode's read bound.
+        let elem_bytes = 2u64;
+        let set_bytes = (grid.m * spec.x + spec.x * spec.y) as u64 * elem_bytes;
+        let mut buf = TileBuffer::new(mode.reads(), set_bytes);
+
+        // Perf-pass iteration 3 (EXPERIMENTS.md §Perf): when every
+        // shifted contribution provably fits i128 — all practical m —
+        // the whole GEMM runs on a flat i128 accumulator with the
+        // Fig. 10 output transform fused into accumulation (no wide
+        // temporaries). The guard covers operand bits + recombination
+        // shifts + accumulation depth with slack.
+        let s = self.split_at(mode);
+        let fast_ok = a.max_bits() + b.max_bits()
+            + crate::algo::opcount::ceil_log2(spec.x.max(a.cols).max(1) as u32)
+            + 2 * s
+            + 8
+            <= 126;
+        // Only attempt the fast path when the engine has a narrow kernel
+        // (probed on a trivial tile) — an aborted attempt must not leave
+        // partial traffic accounting in `buf`.
+        let engine_narrow = self
+            .mxu
+            .tile_product_i128(&Mat::zeros(1, spec.x), &Mat::zeros(spec.x, spec.y))
+            .is_some();
+        if fast_ok && engine_narrow {
+            let acc128 = self
+                .gemm_i128(a, b, mode, s, &grid, &spec, &mut buf, &mut former_adds)
+                .expect("narrow kernel cannot fail after the global guard");
+            let mut acc = MatAcc::zeros(a.rows, b.cols);
+            for i in 0..a.rows {
+                for j in 0..b.cols {
+                    acc[(i, j)] = crate::util::wide::I256::from_i128(acc128[i * b.cols + j]);
+                }
+            }
+            let mut stats = simulate_cycles(&grid, &spec, mode.reads());
+            stats.traffic = buf.stats;
+            return Ok((
+                acc,
+                ScalableRun {
+                    mode,
+                    stats,
+                    former_adds,
+                },
+            ));
+        }
+
+        // Generic wide path (oversized operands or engines without the
+        // narrow kernel). Digit planes are still formed once per tile
+        // job and reused across the 3–4 re-reads (perf iteration 2).
+        for job in grid.iter_jobs() {
+            let at = grid.a_tile(a, job.kb);
+            let bt = grid.b_tile(b, job.kb, job.nb);
+            let split_a = (mode != Mode::Mm1).then(|| at.split_at(s));
+            let split_b = (mode != Mode::Mm1).then(|| bt.split_at(s));
+            buf.fetch_next();
+            for _ in 0..mode.reads() {
+                let t = buf.read();
+                let part = self.read_pass(
+                    &at,
+                    &bt,
+                    split_a.as_ref(),
+                    split_b.as_ref(),
+                    mode,
+                    t,
+                    &mut former_adds,
+                );
+                // Out-of-MXU GEMM tile accumulation (§IV-D) — the partial
+                // products of every read land in the same accumulator.
+                for i in 0..a.rows {
+                    for yy in 0..spec.y {
+                        let nn = job.nb * spec.y + yy;
+                        if nn < b.cols {
+                            acc[(i, nn)] += part[(i, yy)];
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut stats = simulate_cycles(&grid, &spec, mode.reads());
+        stats.traffic = buf.stats; // identical replay schedule, keep the live one
+        Ok((
+            acc,
+            ScalableRun {
+                mode,
+                stats,
+                former_adds,
+            },
+        ))
+    }
+
+    /// Fused narrow path: flat i128 accumulator, per-read contributions
+    /// `Σ ±(raw ≪ shift)` applied during accumulation. Returns `None` if
+    /// the engine lacks a narrow kernel (then the generic path runs).
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_i128(
+        &self,
+        a: &Mat,
+        b: &Mat,
+        mode: Mode,
+        s: u32,
+        grid: &TileGrid,
+        spec: &SystolicSpec,
+        buf: &mut TileBuffer,
+        former_adds: &mut u64,
+    ) -> Option<Vec<i128>> {
+        let mut acc = vec![0i128; a.rows * b.cols];
+        for job in grid.iter_jobs() {
+            let at = grid.a_tile(a, job.kb);
+            let bt = grid.b_tile(b, job.kb, job.nb);
+            let split_a = (mode != Mode::Mm1).then(|| at.split_at(s));
+            let split_b = (mode != Mode::Mm1).then(|| bt.split_at(s));
+            // The Cs operands, formed once per job (the 2X input formers).
+            let sums = (mode == Mode::Kmm2).then(|| {
+                let (a1, a0) = split_a.as_ref().unwrap();
+                let (b1, b0) = split_b.as_ref().unwrap();
+                (a1.add(a0), b1.add(b0))
+            });
+            buf.fetch_next();
+            for _ in 0..mode.reads() {
+                let t = buf.read();
+                // Operands + the Fig. 10 output-transform schedule
+                // (contributions Σ sign·(raw ≪ shift)) for iteration t.
+                let planes = |sa: bool, sb: bool| -> (&Mat, &Mat) {
+                    let (a1, a0) = split_a.as_ref().unwrap();
+                    let (b1, b0) = split_b.as_ref().unwrap();
+                    (if sa { a1 } else { a0 }, if sb { b1 } else { b0 })
+                };
+                let (pa, pb, schedule): (&Mat, &Mat, Vec<(u32, i128)>) = match (mode, t) {
+                    (Mode::Mm1, _) => (&at, &bt, vec![(0, 1)]),
+                    // MM₂: C1≪2m, C10≪m, C01≪m, C0.
+                    (Mode::Mm2, 0) => {
+                        let (a1, b1) = planes(true, true);
+                        self.check(a1);
+                        self.check(b1);
+                        (a1, b1, vec![(2 * s, 1)])
+                    }
+                    (Mode::Mm2, 1) => {
+                        let (a1, b0) = planes(true, false);
+                        (a1, b0, vec![(s, 1)])
+                    }
+                    (Mode::Mm2, 2) => {
+                        let (a0, b1) = planes(false, true);
+                        (a0, b1, vec![(s, 1)])
+                    }
+                    (Mode::Mm2, 3) => {
+                        let (a0, b0) = planes(false, false);
+                        (a0, b0, vec![(0, 1)])
+                    }
+                    // KMM₂: [C1≪2s − C1≪s], [Cs≪s], [C0 − C0≪s].
+                    (Mode::Kmm2, 0) => {
+                        let (a1, b1) = planes(true, true);
+                        self.check(a1);
+                        self.check(b1);
+                        (a1, b1, vec![(2 * s, 1), (s, -1)])
+                    }
+                    (Mode::Kmm2, 1) => {
+                        let (a_s, b_s) = sums.as_ref().unwrap();
+                        *former_adds += (at.rows * at.cols + bt.rows * bt.cols) as u64;
+                        self.check(a_s);
+                        self.check(b_s);
+                        (a_s, b_s, vec![(s, 1)])
+                    }
+                    (Mode::Kmm2, 2) => {
+                        let (a0, b0) = planes(false, false);
+                        (a0, b0, vec![(0, 1), (s, -1)])
+                    }
+                    _ => unreachable!("read iteration out of range"),
+                };
+                let raw = self.mxu.tile_product_i128(pa, pb)?;
+                for i in 0..a.rows {
+                    for yy in 0..spec.y {
+                        let nn = job.nb * spec.y + yy;
+                        if nn >= b.cols {
+                            continue;
+                        }
+                        let v = raw[i * spec.y + yy];
+                        if v == 0 {
+                            continue;
+                        }
+                        let cell = &mut acc[i * b.cols + nn];
+                        for &(shift, sign) in &schedule {
+                            *cell += sign * (v << shift);
+                        }
+                    }
+                }
+            }
+        }
+        Some(acc)
+    }
+
+    /// One tile read pass: form the MXU inputs for iteration `t`, run the
+    /// m-bit array, and apply the Fig. 10 output transform. Digit planes
+    /// (`split_a`/`split_b`) are precomputed once per tile job.
+    #[allow(clippy::too_many_arguments)]
+    fn read_pass(
+        &self,
+        at: &Mat,
+        bt: &Mat,
+        split_a: Option<&(Mat, Mat)>,
+        split_b: Option<&(Mat, Mat)>,
+        mode: Mode,
+        t: u32,
+        former_adds: &mut u64,
+    ) -> MatAcc {
+        let s = self.split_at(mode);
+        match mode {
+            Mode::Mm1 => self.mxu.tile_product(at, bt),
+            Mode::Mm2 => {
+                let (a1, a0) = split_a.expect("planes precomputed");
+                let (b1, b0) = split_b.expect("planes precomputed");
+                self.check(a1);
+                self.check(b1);
+                // t: 0 → C1≪2m, 1 → C10≪m, 2 → C01≪m, 3 → C0.
+                match t {
+                    0 => self.mxu.tile_product(a1, b1).shl(2 * s),
+                    1 => self.mxu.tile_product(a1, b0).shl(s),
+                    2 => self.mxu.tile_product(a0, b1).shl(s),
+                    3 => self.mxu.tile_product(a0, b0),
+                    _ => unreachable!("MM₂ reads exactly 4 times"),
+                }
+            }
+            Mode::Kmm2 => {
+                let (a1, a0) = split_a.expect("planes precomputed");
+                let (b1, b0) = split_b.expect("planes precomputed");
+                match t {
+                    // C1≪2(m−1) − C1≪(m−1): both shifts of one product.
+                    0 => {
+                        self.check(a1);
+                        self.check(b1);
+                        let c1 = self.mxu.tile_product(a1, b1);
+                        c1.shl(2 * s).sub(&c1.shl(s))
+                    }
+                    // Cs≪(m−1): the input formers add A1+A0 / B1+B0 on the
+                    // fly (the 2X adders at the MXU inputs).
+                    1 => {
+                        let a_s = a1.add(a0);
+                        let b_s = b1.add(b0);
+                        *former_adds +=
+                            (at.rows * at.cols + bt.rows * bt.cols) as u64;
+                        self.check(&a_s);
+                        self.check(&b_s);
+                        self.mxu.tile_product(&a_s, &b_s).shl(s)
+                    }
+                    // C0 − C0≪(m−1).
+                    2 => {
+                        let c0 = self.mxu.tile_product(a0, b0);
+                        c0.sub(&c0.shl(s))
+                    }
+                    _ => unreachable!("KMM₂ reads exactly 3 times"),
+                }
+            }
+        }
+    }
+
+    /// Every operand entering the array must fit the m-bit multipliers —
+    /// the invariant the mode windows exist to preserve.
+    fn check(&self, m_in: &Mat) {
+        assert!(
+            m_in.fits(self.m),
+            "MXU operand exceeds m={} bits (max_bits={})",
+            self.m,
+            m_in.max_bits()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::matmul_oracle;
+    use crate::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    fn small(kmm: bool) -> ScalableKmm {
+        ScalableKmm {
+            mxu: SystolicSpec { x: 4, y: 4, p: 2 },
+            m: 8,
+            kmm_enabled: kmm,
+        }
+    }
+
+    #[test]
+    fn mode_windows_match_paper() {
+        // m=8: MM₁ for 1..=8, KMM₂ for 9..=14, MM₂ for 15..=16.
+        for w in 1..=8 {
+            assert_eq!(select_mode(w, 8, true).unwrap(), Mode::Mm1, "w={w}");
+        }
+        for w in 9..=14 {
+            assert_eq!(select_mode(w, 8, true).unwrap(), Mode::Kmm2, "w={w}");
+        }
+        for w in 15..=16 {
+            assert_eq!(select_mode(w, 8, true).unwrap(), Mode::Mm2, "w={w}");
+        }
+        assert!(select_mode(17, 8, true).is_err());
+        // Baseline MM arch: the KMM window degrades to MM₂.
+        for w in 9..=16 {
+            assert_eq!(select_mode(w, 8, false).unwrap(), Mode::Mm2, "w={w}");
+        }
+    }
+
+    #[test]
+    fn reads_per_mode() {
+        assert_eq!(Mode::Mm1.reads(), 1);
+        assert_eq!(Mode::Kmm2.reads(), 3);
+        assert_eq!(Mode::Mm2.reads(), 4);
+    }
+
+    #[test]
+    fn gemm_exact_all_widths() {
+        // Exactness across the full supported width range, both variants.
+        forall(Config::default().cases(60), |rng| {
+            let kmm = rng.chance(1, 2);
+            let arch = small(kmm);
+            let w = rng.range(1, 16) as u32;
+            let (m, k, n) = (rng.range(1, 7), rng.range(1, 11), rng.range(1, 7));
+            let a = Mat::random(m, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let (c, run) = arch.gemm(&a, &b, w).expect("within width ceiling");
+            prop_assert_eq(c, matmul_oracle(&a, &b), "scalable GEMM == oracle")?;
+            prop_assert_eq(
+                run.stats.reads_per_set,
+                run.mode.reads(),
+                "stats carry the mode's read factor",
+            )
+        });
+    }
+
+    #[test]
+    fn kmm2_window_boundaries_exact() {
+        // w = m+1 (window bottom), w = 2m−2 (top), w = 2m−1 (first MM₂).
+        for (w, expect) in [(9u32, Mode::Kmm2), (14, Mode::Kmm2), (15, Mode::Mm2)] {
+            let arch = small(true);
+            let mut rng = Rng::new(w as u64);
+            let a = Mat::random(5, 9, w, &mut rng);
+            let b = Mat::random(9, 5, w, &mut rng);
+            let (c, run) = arch.gemm(&a, &b, w).unwrap();
+            assert_eq!(run.mode, expect, "w={w}");
+            assert_eq!(c, matmul_oracle(&a, &b), "w={w}");
+        }
+    }
+
+    #[test]
+    fn kmm2_beats_mm2_cycles_by_4_over_3() {
+        // The headline: in the 9..=14 window the KMM arch takes 3 reads
+        // where the baseline takes 4.
+        let mut rng = Rng::new(3);
+        let a = Mat::random(64, 64, 12, &mut rng);
+        let b = Mat::random(64, 64, 12, &mut rng);
+        let kmm = ScalableKmm { mxu: SystolicSpec { x: 16, y: 16, p: 4 }, m: 8, kmm_enabled: true };
+        let mm = ScalableKmm { kmm_enabled: false, ..kmm.clone() };
+        let (ck, rk) = kmm.gemm(&a, &b, 12).unwrap();
+        let (cm, rm) = mm.gemm(&a, &b, 12).unwrap();
+        assert_eq!(ck, cm, "both modes exact");
+        let ratio = rm.stats.cycles as f64 / rk.stats.cycles as f64;
+        assert!((ratio - 4.0 / 3.0).abs() < 0.02, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn mm1_mode_bypasses_formers() {
+        let arch = small(true);
+        let mut rng = Rng::new(4);
+        let a = Mat::random(4, 8, 8, &mut rng);
+        let b = Mat::random(8, 4, 8, &mut rng);
+        let (_, run) = arch.gemm(&a, &b, 8).unwrap();
+        assert_eq!(run.mode, Mode::Mm1);
+        assert_eq!(run.former_adds, 0, "no As/Bs formation below m");
+        assert_eq!(run.stats.reads_per_set, 1);
+    }
+
+    #[test]
+    fn former_adds_counted_once_per_tile_element() {
+        let arch = small(true);
+        let mut rng = Rng::new(5);
+        let a = Mat::random(4, 4, 12, &mut rng);
+        let b = Mat::random(4, 4, 12, &mut rng);
+        let (_, run) = arch.gemm(&a, &b, 12).unwrap();
+        // One tile job, one Cs read: |A tile| + |B tile| = 16 + 16.
+        assert_eq!(run.former_adds, 32);
+    }
+
+    #[test]
+    fn operands_always_fit_multipliers() {
+        // The As/Bs digit sums in KMM₂ mode peak at 2^m − 2: still m bits.
+        forall(Config::default().cases(40), |rng| {
+            let arch = small(true);
+            let w = rng.range(9, 15) as u32;
+            // Adversarial all-ones matrices maximize the digit sums.
+            let a = Mat::from_fn(4, 4, |_, _| (1u64 << w) - 1);
+            let b = Mat::from_fn(4, 4, |_, _| (1u64 << w) - 1);
+            let (c, _) = arch.gemm(&a, &b, w).unwrap(); // would panic on overflow
+            prop_assert_eq(c, matmul_oracle(&a, &b), "all-ones exact")
+        });
+    }
+
+    #[test]
+    fn rejects_above_ceiling() {
+        let arch = small(true);
+        let a = Mat::zeros(2, 2);
+        let b = Mat::zeros(2, 2);
+        let err = arch.gemm(&a, &b, 17).unwrap_err();
+        assert_eq!(err.max, 16);
+        assert!(err.to_string().contains("w=17"));
+    }
+
+    #[test]
+    fn ffip_engine_traffic_not_double_counted() {
+        // Regression: the FFIP engine has no narrow kernel; the generic
+        // path must see a clean TileBuffer (no partial fast-path stats).
+        use crate::arch::ffip::FfipMxu;
+        let arch = ScalableKmm {
+            mxu: FfipMxu { x: 4, y: 4, p: 2 },
+            m: 8,
+            kmm_enabled: true,
+        };
+        let mut rng = Rng::new(7);
+        let a = Mat::random(4, 8, 12, &mut rng);
+        let b = Mat::random(8, 8, 12, &mut rng);
+        let (c, run) = arch.gemm(&a, &b, 12).unwrap();
+        assert_eq!(c, matmul_oracle(&a, &b));
+        let t = run.stats.traffic;
+        assert_eq!(t.sets_fetched, run.stats.tile_jobs, "one fetch per job");
+        assert_eq!(t.set_reads, t.sets_fetched * 3);
+    }
+
+    #[test]
+    fn traffic_fetched_once_replayed_by_mode() {
+        let arch = small(true);
+        let mut rng = Rng::new(6);
+        let a = Mat::random(4, 8, 12, &mut rng);
+        let b = Mat::random(8, 8, 12, &mut rng);
+        let (_, run) = arch.gemm(&a, &b, 12).unwrap();
+        let t = run.stats.traffic;
+        assert_eq!(t.set_reads, t.sets_fetched * 3);
+        assert_eq!(t.bytes_replayed, t.bytes_fetched * 2);
+        prop_assert(t.bytes_fetched > 0, "traffic recorded").unwrap();
+    }
+}

@@ -1,0 +1,240 @@
+//! Multi-level precision-scalable KMM — the recursive extension the
+//! paper sketches (§IV-B: "each of the three sub-MXUs can also be
+//! instantiated as another KMM MXU") applied to the *scalable*
+//! architecture: inputs wider than the one-level `2m` ceiling are
+//! digit-split recursively, each sub-product executing through the
+//! §IV-C mode machine, so a single m-bit array serves any width.
+//!
+//! Reads per tile set multiply down the recursion: a 2-level KMM
+//! schedule re-reads 3 × 3 = 9 times where conventional MM₂ recursion
+//! needs 4 × 4 = 16 — extending the eq. (15) roof `(4/3)^r` beyond
+//! r = 1 in the scalable setting (e.g. 16/9 ≈ 1.78 for m = 8,
+//! 17 ≤ w ≤ 26).
+
+use crate::algo::matrix::{Mat, MatAcc};
+use crate::arch::ffip::TileEngine;
+use crate::arch::mxu::SystolicSpec;
+use crate::arch::scalable::{select_mode, ScalableKmm, WidthError};
+use crate::sim::gemm::{simulate_cycles, GemmStats};
+use crate::sim::tiler::TileGrid;
+
+/// Multi-level wrapper around the one-level scalable architecture.
+#[derive(Debug, Clone)]
+pub struct ScalableMulti<E: TileEngine = SystolicSpec> {
+    pub base: ScalableKmm<E>,
+    /// Maximum recursion levels above the base (2 levels at m = 8 covers
+    /// w ≤ 26, 3 levels w ≤ 50, ...).
+    pub max_levels: u32,
+}
+
+/// Result of one multi-level GEMM.
+#[derive(Debug, Clone)]
+pub struct MultiRun {
+    /// Total tile-set reads (product over the recursion).
+    pub reads: u32,
+    /// Recursion levels *above* the base mode machine.
+    pub levels: u32,
+    /// Cycle statistics at the total read factor.
+    pub stats: GemmStats,
+}
+
+impl<E: TileEngine> ScalableMulti<E> {
+    /// One-level supported ceiling of the base machine.
+    fn base_ceiling(&self) -> u32 {
+        2 * self.base.m
+    }
+
+    /// Width ceiling after `levels` recursion levels: the outer split at
+    /// `s = ⌈w/2⌉` produces digit sums of width `s + 1`, which must fit
+    /// the level below — `s ≤ c_k − 1`, so `c_{k+1} = 2·(c_k − 1)` with
+    /// `c_0 = 2m` (the one-level machine including its MM₂ top window).
+    pub fn ceiling(&self, levels: u32) -> u32 {
+        let mut c = 2 * self.base.m;
+        for _ in 0..levels {
+            c = 2 * (c - 1);
+        }
+        c
+    }
+
+    /// Total tile reads a `w`-bit GEMM will issue.
+    pub fn reads_for(&self, w: u32) -> Result<u32, WidthError> {
+        if w <= self.base_ceiling() {
+            return Ok(select_mode(w, self.base.m, self.base.kmm_enabled)?.reads());
+        }
+        let mut levels_left = self.max_levels;
+        let mut w = w;
+        let mut factor = 1u32;
+        while w > self.base_ceiling() {
+            if levels_left == 0 {
+                return Err(WidthError {
+                    w,
+                    m: self.base.m,
+                    max: self.ceiling(self.max_levels),
+                });
+            }
+            let s = w.div_ceil(2);
+            // Outer level: KMM (3 reads) when enabled, else MM (4).
+            factor *= if self.base.kmm_enabled { 3 } else { 4 };
+            w = s + 1; // the widest sub-operand (the digit sums)
+            levels_left -= 1;
+        }
+        Ok(factor * select_mode(w, self.base.m, self.base.kmm_enabled)?.reads())
+    }
+
+    /// Execute exactly, recursing above the base ceiling.
+    pub fn gemm(&self, a: &Mat, b: &Mat, w: u32) -> Result<(MatAcc, MultiRun), WidthError> {
+        let (c, levels) = self.gemm_rec(a, b, w, self.max_levels)?;
+        let reads = self.reads_for(w)?;
+        let spec = self.base.mxu.spec();
+        let grid = TileGrid::new(a.rows, a.cols, b.cols, spec.x, spec.y);
+        let stats = simulate_cycles(&grid, &spec, reads);
+        Ok((
+            c,
+            MultiRun {
+                reads,
+                levels,
+                stats,
+            },
+        ))
+    }
+
+    fn gemm_rec(
+        &self,
+        a: &Mat,
+        b: &Mat,
+        w: u32,
+        levels_left: u32,
+    ) -> Result<(MatAcc, u32), WidthError> {
+        if w <= self.base_ceiling() {
+            let (c, _) = self.base.gemm(a, b, w)?;
+            return Ok((c, 0));
+        }
+        if levels_left == 0 {
+            return Err(WidthError {
+                w,
+                m: self.base.m,
+                max: self.ceiling(self.max_levels),
+            });
+        }
+        // Algorithm 4 at the tile-schedule level: split at ⌈w/2⌉,
+        // three sub-GEMMs through the next level down.
+        let s = w.div_ceil(2);
+        let (a1, a0) = a.split_at(s);
+        let (b1, b0) = b.split_at(s);
+        let a_s = a1.add(&a0);
+        let b_s = b1.add(&b0);
+        let (c1, l1) = self.gemm_rec(&a1, &b1, w - s, levels_left - 1)?;
+        let (cs, l2) = self.gemm_rec(&a_s, &b_s, s + 1, levels_left - 1)?;
+        let (c0, l3) = self.gemm_rec(&a0, &b0, s, levels_left - 1)?;
+        let cross = cs.sub(&c1).sub(&c0);
+        let c = c1.shl(2 * s).add(&cross.shl(s)).add(&c0);
+        Ok((c, 1 + l1.max(l2).max(l3)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::matmul_oracle;
+    use crate::coordinator::metrics::conventional_submults;
+    use crate::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+
+    fn multi(kmm: bool) -> ScalableMulti {
+        ScalableMulti {
+            base: ScalableKmm {
+                mxu: SystolicSpec { x: 4, y: 4, p: 2 },
+                m: 8,
+                kmm_enabled: kmm,
+            },
+            max_levels: 2,
+        }
+    }
+
+    #[test]
+    fn ceilings() {
+        let m = multi(true);
+        assert_eq!(m.ceiling(0), 16);
+        assert_eq!(m.ceiling(1), 30); // split ≤ 15, sums fit the MM₂ top
+        assert_eq!(m.ceiling(2), 58);
+    }
+
+    #[test]
+    fn exact_above_one_level() {
+        forall(Config::default().cases(40), |rng| {
+            let m = multi(true);
+            let w = rng.range(17, 26) as u32;
+            let (mm, k, n) = (rng.range(1, 5), rng.range(1, 7), rng.range(1, 5));
+            let a = Mat::random(mm, k, w, rng);
+            let b = Mat::random(k, n, w, rng);
+            let (c, run) = m.gemm(&a, &b, w).expect("within 2-level ceiling");
+            prop_assert_eq(c, matmul_oracle(&a, &b), "multi-level exact")?;
+            prop_assert(run.levels == 1, "one recursion level")?;
+            prop_assert_eq(run.reads, 9, "3 × 3 reads in the double-KMM window")
+        });
+    }
+
+    #[test]
+    fn deep_recursion_exact_w_40() {
+        let m = ScalableMulti { max_levels: 3, ..multi(true) };
+        let mut rng = crate::util::rng::Rng::new(40);
+        let a = Mat::random(4, 6, 40, &mut rng);
+        let b = Mat::random(6, 4, 40, &mut rng);
+        let (c, run) = m.gemm(&a, &b, 40).unwrap();
+        assert_eq!(c, matmul_oracle(&a, &b));
+        assert_eq!(run.levels, 2);
+        assert_eq!(run.reads, 27, "3³ for the triple-KMM window");
+    }
+
+    #[test]
+    fn kmm_read_advantage_over_mm_recursion() {
+        // 2-level window: KMM 9 reads vs conventional 16 → 16/9 roof.
+        let mk = multi(true);
+        let mm = multi(false);
+        assert_eq!(mk.reads_for(24).unwrap(), 9);
+        assert_eq!(mm.reads_for(24).unwrap(), 16);
+        // Effective multiplier efficiency: conventional needs 4^r = 16
+        // submults (eq. 13 with ⌈24/8⌉ = 3 → r = 2).
+        assert_eq!(conventional_submults(24, 8), 16);
+        let eff_roof = conventional_submults(24, 8) as f64 / 9.0;
+        assert!((eff_roof - 16.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_beyond_ceiling() {
+        let m = multi(true);
+        let a = Mat::zeros(2, 2);
+        assert!(m.gemm(&a, &a, 59).is_err());
+        assert!(m.reads_for(64).is_err());
+        // w = 29/30 still fit two levels via the inner MM₂ top window.
+        assert!(m.reads_for(30).is_ok());
+    }
+
+    #[test]
+    fn one_level_widths_delegate_to_base() {
+        forall(Config::default().cases(20), |rng| {
+            let m = multi(true);
+            let w = rng.range(1, 16) as u32;
+            let a = Mat::random(3, 5, w, rng);
+            let b = Mat::random(5, 3, w, rng);
+            let (c, run) = m.gemm(&a, &b, w).unwrap();
+            prop_assert_eq(c, matmul_oracle(&a, &b), "delegates exactly")?;
+            prop_assert(run.levels == 0, "no extra recursion")?;
+            let base_reads = select_mode(w, 8, true).unwrap().reads();
+            prop_assert_eq(run.reads, base_reads, "base read count")
+        });
+    }
+
+    #[test]
+    fn mixed_window_w27_uses_mm2_inner() {
+        // w = 27: split s = 14 → sum width 15 lands in the inner MM₂
+        // window → 3 × 4 = 12 reads.
+        let m = multi(true);
+        assert_eq!(m.reads_for(27).unwrap(), 12);
+        let mut rng = crate::util::rng::Rng::new(27);
+        let a = Mat::random(3, 4, 27, &mut rng);
+        let b = Mat::random(4, 3, 27, &mut rng);
+        let (c, run) = m.gemm(&a, &b, 27).unwrap();
+        assert_eq!(c, matmul_oracle(&a, &b));
+        assert_eq!(run.reads, 12);
+    }
+}

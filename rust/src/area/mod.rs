@@ -1,0 +1,12 @@
+//! Circuit-area and FPGA-resource models (paper §IV-F, Tables I–III).
+//!
+//! [`au`] is the paper's technology-agnostic Area-Unit model (areas in
+//! full-adder equivalents, eqs. 16–23); [`fpga`] maps architectures onto
+//! Intel FPGA resources (DSPs/ALMs/registers) and estimates Fmax — the
+//! analytical substitute for the paper's Quartus synthesis (DESIGN.md §2).
+
+pub mod au;
+pub mod fpga;
+
+pub use au::{area_add, area_ff, area_mult, ArrayCfg};
+pub use fpga::{synth_fixed, FixedArch, FixedSynth};

@@ -1,0 +1,279 @@
+//! Backend dispatch: the coordinator serves GEMMs through one of three
+//! interchangeable engines, all bit-exact and cross-validated:
+//!
+//! - [`FunctionalBackend`] — the architecture model ([`ScalableKmm`]),
+//!   exact functional execution + cycle statistics. The default for
+//!   simulation-driven evaluation.
+//! - [`PjrtBackend`] — the AOT path: tiles the GEMM onto the
+//!   `gemm_*_tile` PJRT executables produced by `make artifacts`
+//!   (Pallas kernels lowered through L2), accumulating partial tile
+//!   products in Rust exactly as §IV-D accumulates outside the MXU.
+//! - Both report the deterministic cycle model, so serving returns
+//!   timing alongside numerics.
+
+use crate::algo::matrix::{Mat, MatAcc};
+use crate::arch::mxu::SystolicSpec;
+use crate::arch::scalable::{select_mode, Mode, ScalableKmm};
+use crate::runtime::{HostTensor, Runtime};
+use crate::sim::gemm::{simulate_cycles, GemmStats};
+use crate::sim::tiler::TileGrid;
+use anyhow::{bail, Context, Result};
+
+/// Result of one dispatched GEMM.
+#[derive(Debug, Clone)]
+pub struct GemmResult {
+    pub c: MatAcc,
+    pub mode: Mode,
+    pub stats: GemmStats,
+}
+
+/// A GEMM execution engine the server can own.
+///
+/// Not `Send`: the PJRT client holds thread-affine state, so the server
+/// constructs its backend *on* the worker thread via a factory.
+pub trait GemmBackend {
+    /// Execute `A·B` exactly on `w`-bit inputs.
+    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult>;
+
+    /// Short backend label for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// The architecture-model backend.
+pub struct FunctionalBackend {
+    pub arch: ScalableKmm<SystolicSpec>,
+}
+
+impl FunctionalBackend {
+    pub fn paper() -> Self {
+        FunctionalBackend {
+            arch: ScalableKmm::paper_kmm(),
+        }
+    }
+}
+
+impl GemmBackend for FunctionalBackend {
+    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult> {
+        let (c, run) = self.arch.gemm(a, b, w)?;
+        Ok(GemmResult {
+            c,
+            mode: run.mode,
+            stats: run.stats,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "functional"
+    }
+}
+
+/// The PJRT artifact backend: GEMMs tile onto the fixed-shape AOT
+/// executables; partial tile products accumulate in Rust (§IV-D).
+pub struct PjrtBackend {
+    rt: Runtime,
+    /// Tile size of the AOT GEMM entrypoints (from the manifest).
+    tile: usize,
+    /// Mode windows mirror the scalable architecture at m = 8.
+    pub m: u32,
+    /// Timing model used for reported stats (numerics come from PJRT).
+    timing: SystolicSpec,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: Runtime) -> Self {
+        let tile = rt.manifest().tile;
+        PjrtBackend {
+            rt,
+            tile,
+            m: 8,
+            timing: SystolicSpec::paper_64(),
+        }
+    }
+
+    /// Which AOT entrypoint serves a `w`-bit GEMM.
+    ///
+    /// The KMM₂ kernel was lowered with a split at 6 (w = 12); it is
+    /// algebraically exact for any w whose high digit fits the int64
+    /// accumulator, but the KMM window of the m = 8 architecture it
+    /// models is 9..=14, with 13..=14 falling back to MM₂ here because
+    /// the artifact's split point is fixed at build time.
+    pub fn entrypoint_for(&self, w: u32) -> Result<(&'static str, Mode)> {
+        if w > 2 * self.m {
+            bail!("w={w} exceeds the 2m={} ceiling", 2 * self.m);
+        }
+        Ok(if w <= 8 {
+            ("gemm_mm1_tile", Mode::Mm1)
+        } else if w <= 12 {
+            ("gemm_kmm2_tile", Mode::Kmm2)
+        } else {
+            ("gemm_mm2_tile", Mode::Mm2)
+        })
+    }
+
+    fn tile_tensor(m: &Mat) -> HostTensor {
+        HostTensor::new(
+            vec![m.rows, m.cols],
+            m.data().iter().map(|&x| x as i64).collect(),
+        )
+    }
+
+    /// Executions issued so far (observability).
+    pub fn executions(&self) -> u64 {
+        self.rt.executions
+    }
+}
+
+impl GemmBackend for PjrtBackend {
+    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult> {
+        let (entry, mode) = self.entrypoint_for(w)?;
+        assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");
+        let t = self.tile;
+        // Pad to the AOT tile grid in *both* M and K/N (the artifacts are
+        // square t×t executables).
+        let grid = TileGrid::new(a.rows.max(1), a.cols, b.cols, t, t);
+        let m_tiles = a.rows.div_ceil(t);
+        let mut acc = MatAcc::zeros(a.rows, b.cols);
+        for mb in 0..m_tiles {
+            let rows = (a.rows - mb * t).min(t);
+            for job in grid.iter_jobs() {
+                // Build the M-padded A tile for this row block.
+                let at = Mat::from_fn(t, t, |i, xx| {
+                    let ii = mb * t + i;
+                    let kk = job.kb * t + xx;
+                    if ii < a.rows && kk < a.cols && i < rows {
+                        a[(ii, kk)]
+                    } else {
+                        0
+                    }
+                });
+                let bt = grid.b_tile(b, job.kb, job.nb);
+                let out = self
+                    .rt
+                    .execute(entry, &[Self::tile_tensor(&at), Self::tile_tensor(&bt)])
+                    .with_context(|| format!("executing {entry}"))?;
+                let part = &out[0];
+                for i in 0..rows {
+                    for yy in 0..t {
+                        let nn = job.nb * t + yy;
+                        if nn < b.cols {
+                            acc[(mb * t + i, nn)] +=
+                                crate::util::wide::I256::from_i128(part.at2(i, yy) as i128);
+                        }
+                    }
+                }
+            }
+        }
+        // Deterministic timing from the architecture model (the artifact
+        // is the numerics path; cycles come from the §IV-D schedule).
+        let tgrid = TileGrid::new(a.rows, a.cols, b.cols, self.timing.x, self.timing.y);
+        let stats = simulate_cycles(&tgrid, &self.timing, mode.reads());
+        Ok(GemmResult {
+            c: acc,
+            mode,
+            stats,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Cross-validation helper: run both backends on the same inputs and
+/// assert bit-identical products (used by integration tests and the
+/// `--verify` serving mode).
+pub fn cross_validate(
+    f: &mut dyn GemmBackend,
+    g: &mut dyn GemmBackend,
+    a: &Mat,
+    b: &Mat,
+    w: u32,
+) -> Result<bool> {
+    let rf = f.gemm(a, b, w)?;
+    let rg = g.gemm(a, b, w)?;
+    Ok(rf.c == rg.c)
+}
+
+/// Mode-window consistency between the PJRT routing and the scalable
+/// architecture's controller (the 13–14 artifact fallback is the only
+/// allowed difference).
+pub fn routing_consistent(w: u32, m: u32, pjrt_mode: Mode) -> bool {
+    match select_mode(w, m, true) {
+        Ok(Mode::Kmm2) if (13..=14).contains(&w) => pjrt_mode == Mode::Mm2,
+        Ok(expect) => pjrt_mode == expect,
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::matmul_oracle;
+    use crate::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn functional_backend_exact() {
+        forall(Config::default().cases(20), |rng| {
+            let mut be = FunctionalBackend {
+                arch: ScalableKmm {
+                    mxu: SystolicSpec { x: 4, y: 4, p: 2 },
+                    m: 8,
+                    kmm_enabled: true,
+                },
+            };
+            let w = rng.range(1, 16) as u32;
+            let a = Mat::random(5, 7, w, rng);
+            let b = Mat::random(7, 5, w, rng);
+            let r = be.gemm(&a, &b, w).unwrap();
+            prop_assert_eq(r.c, matmul_oracle(&a, &b), "functional backend exact")?;
+            prop_assert(r.stats.cycles > 0, "cycles reported")
+        });
+    }
+
+    #[test]
+    fn functional_backend_rejects_overwide() {
+        let mut be = FunctionalBackend::paper();
+        let a = Mat::zeros(2, 2);
+        let err = be.gemm(&a, &a, 17).unwrap_err();
+        assert!(err.to_string().contains("exceeds"));
+        assert_eq!(be.name(), "functional");
+    }
+
+    #[test]
+    fn pjrt_routing_windows() {
+        // Window routing is pure logic — no runtime needed.
+        for (w, expect) in [
+            (1u32, Mode::Mm1),
+            (8, Mode::Mm1),
+            (9, Mode::Kmm2),
+            (12, Mode::Kmm2),
+            (13, Mode::Mm2),
+            (16, Mode::Mm2),
+        ] {
+            assert!(routing_consistent(w, 8, expect), "w={w}");
+        }
+        assert!(!routing_consistent(17, 8, Mode::Mm2));
+    }
+
+    #[test]
+    fn pjrt_backend_exact_if_artifacts_present() {
+        let dir = crate::runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let rt = Runtime::from_dir(dir).unwrap();
+        let mut be = PjrtBackend::new(rt);
+        let mut rng = Rng::new(12);
+        for w in [8u32, 12, 16] {
+            // Ragged dims straddling two 128-tiles in every dimension.
+            let a = Mat::random(130, 150, w, &mut rng);
+            let b = Mat::random(150, 140, w, &mut rng);
+            let r = be.gemm(&a, &b, w).unwrap();
+            assert_eq!(r.c, matmul_oracle(&a, &b), "w={w}");
+        }
+        assert!(be.executions() > 0);
+        assert_eq!(be.name(), "pjrt");
+    }
+}

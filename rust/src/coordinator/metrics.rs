@@ -1,0 +1,215 @@
+//! Performance-per-area metrics — §IV-E, eqs. (11)–(15), and GOPS.
+//!
+//! The **multiplier compute efficiency** (eq. 12) measures *effective*
+//! m-bit multiplications per instantiated multiplier per clock cycle:
+//! throughput is credited with the number of m-bit multiplications that
+//! conventional algebra (SM/MM, i.e. `4^r` per w-bit product) would have
+//! needed, making the metric's maximum independent of the input bitwidth
+//! and clock frequency — the property §V-A needs for fair comparison
+//! against prior work.
+
+/// eq. (13): recursion levels needed to compute w-bit products on m-bit
+/// multipliers: `r = ⌈log2⌈w/m⌉⌉`.
+pub fn recursion_levels(w: u32, m: u32) -> u32 {
+    assert!(w >= 1 && m >= 1);
+    let n = w.div_ceil(m);
+    32 - (n - 1).leading_zeros()
+}
+
+/// Number of m-bit multiplications conventional algebra needs per w-bit
+/// product: `4^r` (§IV-E).
+pub fn conventional_submults(w: u32, m: u32) -> u64 {
+    4u64.pow(recursion_levels(w, m))
+}
+
+/// eq. (14): the MM architecture's multiplier-compute-efficiency roof.
+pub const MM_ROOF: f64 = 1.0;
+
+/// eq. (15): the KMM architecture's roof, `(4/3)^r`.
+pub fn kmm_roof(r: u32) -> f64 {
+    (4.0f64 / 3.0).powi(r as i32)
+}
+
+/// FFIP doubles performance per multiplier (§V-B), so its roof is 2.
+pub const FFIP_ROOF: f64 = 2.0;
+
+/// FFIP+KMM roof: `2·(4/3)^r = (8/3)^r` for one level (§V-B).
+pub fn ffip_kmm_roof(r: u32) -> f64 {
+    2.0 * kmm_roof(r)
+}
+
+/// A measured execution, sufficient to evaluate eqs. (11), (12) and GOPS.
+#[derive(Debug, Clone, Copy)]
+pub struct Execution {
+    /// w-bit multiplications the workload requires under conventional
+    /// algebra (eq. 1): `Σ M·K·N` over its GEMMs.
+    pub wbit_mults: u64,
+    /// Input bitwidth w of the workload.
+    pub w: u32,
+    /// Multiplier (hardware) bitwidth m.
+    pub m: u32,
+    /// Clock cycles the execution took.
+    pub cycles: u64,
+    /// Instantiated multipliers in the design.
+    pub multipliers: u64,
+    /// Clock frequency in MHz (converts cycles to seconds).
+    pub freq_mhz: f64,
+}
+
+impl Execution {
+    /// Execution time in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.cycles as f64 / (self.freq_mhz * 1e6)
+    }
+
+    /// eq. (11): w-bit multiplications per multiplier per clock cycle.
+    pub fn wbit_efficiency(&self) -> f64 {
+        self.wbit_mults as f64 / (self.cycles as f64 * self.multipliers as f64)
+    }
+
+    /// eq. (12): effective m-bit multiplications per multiplier per cycle
+    /// — the paper's headline metric (Tables I–II bottom rows).
+    pub fn mbit_efficiency(&self) -> f64 {
+        let effective = self.wbit_mults as f64 * conventional_submults(self.w, self.m) as f64;
+        effective / (self.cycles as f64 * self.multipliers as f64)
+    }
+
+    /// Throughput in GOPS counting one multiply + one add per w-bit MAC
+    /// (the convention of Tables I–III).
+    pub fn gops(&self) -> f64 {
+        2.0 * self.wbit_mults as f64 / self.seconds() / 1e9
+    }
+}
+
+/// Roof of eq. (12) for the precision-scalable architectures of Fig. 11,
+/// as a function of input width `w` and multiplier width `m`.
+///
+/// - MM₂ architecture: every region executes SM-equivalent schedules → 1.
+/// - KMM₂ architecture: `4/3` in the Karatsuba window `m < w ≤ 2m−2`
+///   (3 tile reads instead of 4), 1 elsewhere (MM₁ below, MM₂ above).
+pub fn scalable_roof(w: u32, m: u32, kmm_enabled: bool) -> f64 {
+    if kmm_enabled && w > m && w <= 2 * m - 2 {
+        4.0 / 3.0
+    } else {
+        1.0
+    }
+}
+
+/// One Fig. 11 point.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig11Point {
+    pub w: u32,
+    pub mm2: f64,
+    pub kmm2: f64,
+}
+
+/// The Fig. 11 series (paper: m = 8, w = 1..16, X = Y = 64).
+pub fn fig11_series(m: u32, w_max: u32) -> Vec<Fig11Point> {
+    (1..=w_max)
+        .map(|w| Fig11Point {
+            w,
+            mm2: scalable_roof(w, m, false),
+            kmm2: scalable_roof(w, m, true),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recursion_levels_eq13() {
+        assert_eq!(recursion_levels(8, 8), 0);
+        assert_eq!(recursion_levels(9, 8), 1);
+        assert_eq!(recursion_levels(16, 8), 1);
+        assert_eq!(recursion_levels(17, 8), 2);
+        assert_eq!(recursion_levels(32, 8), 2);
+        assert_eq!(recursion_levels(64, 8), 3);
+        assert_eq!(recursion_levels(64, 16), 2);
+        assert_eq!(recursion_levels(1, 8), 0);
+    }
+
+    #[test]
+    fn conventional_submults_pow4() {
+        assert_eq!(conventional_submults(8, 8), 1);
+        assert_eq!(conventional_submults(16, 8), 4);
+        assert_eq!(conventional_submults(32, 8), 16);
+        assert_eq!(conventional_submults(64, 8), 64);
+    }
+
+    #[test]
+    fn roofs_match_paper() {
+        assert_eq!(MM_ROOF, 1.0);
+        assert!((kmm_roof(1) - 4.0 / 3.0).abs() < 1e-12);
+        assert!((kmm_roof(2) - 16.0 / 9.0).abs() < 1e-12);
+        assert!((kmm_roof(3) - 64.0 / 27.0).abs() < 1e-12);
+        assert_eq!(FFIP_ROOF, 2.0);
+        assert!((ffip_kmm_roof(1) - 8.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig11_regions() {
+        // m=8: KMM₂ roof is 1 for w ≤ 8, 4/3 for 9..=14, 1 for 15..=16.
+        let s = fig11_series(8, 16);
+        for p in &s {
+            assert_eq!(p.mm2, 1.0, "MM₂ roof is flat");
+            let expect = if (9..=14).contains(&p.w) { 4.0 / 3.0 } else { 1.0 };
+            assert!((p.kmm2 - expect).abs() < 1e-12, "w={}", p.w);
+        }
+    }
+
+    #[test]
+    fn execution_metrics() {
+        // 64×64 array, fully utilized on 8-bit inputs: one w-bit mult per
+        // multiplier per cycle → efficiency exactly 1.
+        let e = Execution {
+            wbit_mults: 4096 * 1000,
+            w: 8,
+            m: 8,
+            cycles: 1000,
+            multipliers: 4096,
+            freq_mhz: 326.0,
+        };
+        assert!((e.wbit_efficiency() - 1.0).abs() < 1e-12);
+        assert!((e.mbit_efficiency() - 1.0).abs() < 1e-12);
+        // GOPS = 2 · 4.096M mults / (1000 cycles / 326 MHz) / 1e9 ≈ 2671.
+        assert!((e.gops() - 2.0 * 4096.0 * 326e6 / 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn kmm_window_efficiency_exceeds_one() {
+        // w=12 on m=8 via KMM₂: 3 tile reads per tile-set instead of 4 →
+        // cycles = 3× the 8-bit case, effective mults = 4× → 4/3.
+        let e = Execution {
+            wbit_mults: 4096 * 1000,
+            w: 12,
+            m: 8,
+            cycles: 3000,
+            multipliers: 4096,
+            freq_mhz: 326.0,
+        };
+        assert!((e.mbit_efficiency() - 4.0 / 3.0).abs() < 1e-12);
+        // And the MM₂ schedule on the same workload: 4 reads → exactly 1.
+        let e_mm = Execution { cycles: 4000, ..e };
+        assert!((e_mm.mbit_efficiency() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gops_scales_inverse_with_reads() {
+        // Table I: GOPS at w∈9..14 is 1/3 (KMM) or 1/4 (MM) of the
+        // 8-bit GOPS at equal frequency.
+        let base = Execution {
+            wbit_mults: 1 << 30,
+            w: 8,
+            m: 8,
+            cycles: 1 << 18,
+            multipliers: 4096,
+            freq_mhz: 326.0,
+        };
+        let kmm12 = Execution { w: 12, cycles: base.cycles * 3, ..base };
+        let mm12 = Execution { w: 12, cycles: base.cycles * 4, ..base };
+        assert!((base.gops() / kmm12.gops() - 3.0).abs() < 1e-9);
+        assert!((base.gops() / mm12.gops() - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! The L3 runtime coordinator: precision-aware scheduling, batched
+//! request serving, backend dispatch, quantization, and the paper's
+//! performance metrics (eqs. 11–15, 23).
+
+pub mod dispatch;
+pub mod metrics;
+pub mod pipeline;
+pub mod quantize;
+pub mod scheduler;
+pub mod server;
+
+pub use dispatch::{FunctionalBackend, GemmBackend, GemmResult, PjrtBackend};
+pub use metrics::{recursion_levels, scalable_roof, Execution};
+pub use pipeline::{mlp_pipeline, Pipeline, PipelineLayer, Requant};
+pub use quantize::{adjust_zero_point, lift_signed, signed_gemm_via_unsigned, LayerPrecision};
+pub use scheduler::{schedule, workload_gops, LayerPlan, Schedule};
+pub use server::{Request, Response, Server, ServerConfig, ServerStats};

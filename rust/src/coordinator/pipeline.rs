@@ -1,0 +1,225 @@
+//! Layer pipeline: run a multi-layer quantized integer network through
+//! any [`GemmBackend`], with power-of-two requantization between layers
+//! — the L3 counterpart of the L2 model in `python/compile/model.py`.
+//!
+//! The strongest cross-stack test in the repo lives here: the pipeline
+//! configured like the Python MLP, executed layer-by-layer on the PJRT
+//! *GEMM tile* artifacts with requantization in Rust, reproduces the
+//! logits of the single fused `mlp_fwd` artifact bit-for-bit.
+
+use crate::algo::matrix::{Mat, MatAcc};
+use crate::coordinator::dispatch::GemmBackend;
+use anyhow::{Context, Result};
+
+/// Power-of-two requantization: `clip(max(v >> shift, 0), 0, 2^out_width − 1)`
+/// — integer-exact, mirrors `model._requant`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Requant {
+    pub shift: u32,
+    pub out_width: u32,
+}
+
+impl Requant {
+    /// Apply to one accumulator value.
+    pub fn apply(&self, v: i128) -> u64 {
+        let q = v >> self.shift;
+        let q = q.max(0);
+        q.min(((1i128 << self.out_width) - 1) as i128) as u64
+    }
+
+    /// Apply elementwise, producing the next layer's input matrix.
+    pub fn apply_mat(&self, acc: &MatAcc) -> Mat {
+        Mat::from_fn(acc.rows, acc.cols, |i, j| {
+            self.apply(acc[(i, j)].to_i128().expect("requant range"))
+        })
+    }
+}
+
+/// One pipeline layer: a weight matrix at an input bitwidth, optionally
+/// followed by requantization.
+#[derive(Debug, Clone)]
+pub struct PipelineLayer {
+    pub label: String,
+    pub weight: Mat,
+    /// Input bitwidth the layer's GEMM runs at (drives mode selection).
+    pub w: u32,
+    /// Inter-layer requantization (None on the final logits layer).
+    pub requant: Option<Requant>,
+}
+
+/// A sequential quantized network.
+#[derive(Debug, Clone, Default)]
+pub struct Pipeline {
+    pub layers: Vec<PipelineLayer>,
+}
+
+/// Result of one pipeline inference.
+#[derive(Debug)]
+pub struct PipelineRun {
+    /// Final-layer accumulator outputs (logits).
+    pub output: MatAcc,
+    /// Total deterministic device cycles across layers.
+    pub cycles: u64,
+    /// Per-layer (label, mode, cycles).
+    pub per_layer: Vec<(String, crate::arch::scalable::Mode, u64)>,
+}
+
+impl Pipeline {
+    pub fn push(
+        &mut self,
+        label: impl Into<String>,
+        weight: Mat,
+        w: u32,
+        requant: Option<Requant>,
+    ) -> &mut Self {
+        self.layers.push(PipelineLayer {
+            label: label.into(),
+            weight,
+            w,
+            requant,
+        });
+        self
+    }
+
+    /// Run `x` through every layer on `backend`.
+    pub fn run(&self, x: &Mat, backend: &mut dyn GemmBackend) -> Result<PipelineRun> {
+        assert!(!self.layers.is_empty(), "empty pipeline");
+        let mut act = x.clone();
+        let mut cycles = 0;
+        let mut per_layer = Vec::with_capacity(self.layers.len());
+        let mut out: Option<MatAcc> = None;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let res = backend
+                .gemm(&act, &layer.weight, layer.w)
+                .with_context(|| format!("layer {} ({})", li, layer.label))?;
+            cycles += res.stats.cycles;
+            per_layer.push((layer.label.clone(), res.mode, res.stats.cycles));
+            match &layer.requant {
+                Some(rq) => act = rq.apply_mat(&res.c),
+                None => {
+                    assert_eq!(li + 1, self.layers.len(), "requant missing mid-pipeline");
+                }
+            }
+            out = Some(res.c);
+        }
+        Ok(PipelineRun {
+            output: out.expect("nonempty"),
+            cycles,
+            per_layer,
+        })
+    }
+}
+
+/// Build the pipeline equivalent of `python/compile/model.py`'s MLP from
+/// its weight matrices (the `mlp_vectors.json` w1/w2/w3).
+pub fn mlp_pipeline(w1: Mat, w2: Mat, w3: Mat) -> Pipeline {
+    let mut p = Pipeline::default();
+    // Layer plan mirrors model.py: widths (8, 12, 8), shifts (8, 10).
+    p.push("fc1", w1, 8, Some(Requant { shift: 8, out_width: 12 }));
+    p.push("fc2", w2, 12, Some(Requant { shift: 10, out_width: 8 }));
+    p.push("fc3", w3, 8, None);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::matmul_oracle;
+    use crate::arch::mxu::SystolicSpec;
+    use crate::arch::scalable::{Mode, ScalableKmm};
+    use crate::coordinator::dispatch::{FunctionalBackend, PjrtBackend};
+    use crate::runtime::Runtime;
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+
+    fn backend() -> FunctionalBackend {
+        FunctionalBackend {
+            arch: ScalableKmm {
+                mxu: SystolicSpec { x: 8, y: 8, p: 4 },
+                m: 8,
+                kmm_enabled: true,
+            },
+        }
+    }
+
+    #[test]
+    fn requant_matches_python_semantics() {
+        let rq = Requant { shift: 2, out_width: 8 };
+        assert_eq!(rq.apply(-5), 0);
+        assert_eq!(rq.apply(0), 0);
+        assert_eq!(rq.apply(1 << 20), 255);
+        assert_eq!(rq.apply(300), 75);
+    }
+
+    #[test]
+    fn two_layer_pipeline_matches_reference() {
+        let mut rng = Rng::new(21);
+        let x = Mat::random(6, 32, 8, &mut rng);
+        let w1 = Mat::random(32, 16, 8, &mut rng);
+        let w2 = Mat::random(16, 4, 12, &mut rng);
+        let rq = Requant { shift: 6, out_width: 12 };
+        let mut p = Pipeline::default();
+        p.push("l1", w1.clone(), 8, Some(rq));
+        p.push("l2", w2.clone(), 12, None);
+        let run = p.run(&x, &mut backend()).unwrap();
+        // Reference: oracle GEMM + same requant.
+        let h = rq.apply_mat(&matmul_oracle(&x, &w1));
+        let want = matmul_oracle(&h, &w2);
+        assert_eq!(run.output, want);
+        assert_eq!(run.per_layer.len(), 2);
+        assert_eq!(run.per_layer[0].1, Mode::Mm1);
+        assert_eq!(run.per_layer[1].1, Mode::Kmm2);
+        assert!(run.cycles > 0);
+    }
+
+    /// The cross-stack golden test: the Rust pipeline on PJRT GEMM tile
+    /// artifacts reproduces the fused Python `mlp_fwd` logits bit-for-bit.
+    #[test]
+    fn mlp_pipeline_reproduces_python_golden_vectors() {
+        let dir = crate::runtime::default_dir();
+        if !dir.join("mlp_vectors.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let v = Json::parse(&std::fs::read_to_string(dir.join("mlp_vectors.json")).unwrap())
+            .unwrap();
+        let mat = |key: &str, rows: usize, cols: usize| {
+            let data = v.get(key).unwrap().flatten_i64().unwrap();
+            Mat::from_fn(rows, cols, |i, j| data[i * cols + j] as u64)
+        };
+        let x = mat("x", 32, 256);
+        let p = mlp_pipeline(mat("w1", 256, 512), mat("w2", 512, 512), mat("w3", 512, 10));
+        let want = v.get("logits").unwrap().flatten_i64().unwrap();
+
+        // Through the PJRT tile artifacts...
+        let mut pjrt = PjrtBackend::new(Runtime::from_dir(&dir).unwrap());
+        let run = p.run(&x, &mut pjrt).unwrap();
+        let got: Vec<i64> = run
+            .output
+            .to_i128_vec()
+            .unwrap()
+            .iter()
+            .map(|&x| x as i64)
+            .collect();
+        assert_eq!(got, want, "PJRT pipeline == Python fused artifact");
+
+        // ... and through the functional architecture model.
+        let mut func = FunctionalBackend::paper();
+        let run2 = p.run(&x, &mut func).unwrap();
+        assert_eq!(run2.output, run.output, "functional == PJRT");
+        // Layer modes follow the §IV-C windows: 8 → MM1, 12 → KMM2.
+        let modes: Vec<Mode> = run2.per_layer.iter().map(|l| l.1).collect();
+        assert_eq!(modes, vec![Mode::Mm1, Mode::Kmm2, Mode::Mm1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "requant missing mid-pipeline")]
+    fn missing_requant_detected() {
+        let mut rng = Rng::new(22);
+        let x = Mat::random(2, 4, 8, &mut rng);
+        let mut p = Pipeline::default();
+        p.push("l1", Mat::random(4, 4, 8, &mut rng), 8, None);
+        p.push("l2", Mat::random(4, 4, 8, &mut rng), 8, None);
+        let _ = p.run(&x, &mut backend());
+    }
+}

@@ -1,0 +1,161 @@
+//! Workload scheduling: map a GEMM workload onto a precision-scalable
+//! architecture, choosing the per-layer execution mode (§IV-C) and
+//! producing the cycle-accurate trace the throughput tables are built
+//! from.
+
+use crate::arch::ffip::TileEngine;
+use crate::arch::scalable::{select_mode, Mode, ScalableKmm, WidthError};
+use crate::coordinator::metrics::Execution;
+use crate::model::workload::Workload;
+use crate::sim::gemm::simulate_cycles;
+use crate::sim::tiler::TileGrid;
+use crate::sim::trace::Trace;
+
+/// One scheduled layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub label: String,
+    pub w: u32,
+    pub mode: Mode,
+    pub cycles: u64,
+    pub macs: u64,
+}
+
+/// A scheduled workload: per-layer plans plus the aggregate trace.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub layers: Vec<LayerPlan>,
+    pub trace: Trace,
+}
+
+impl Schedule {
+    pub fn cycles(&self) -> u64 {
+        self.trace.cycles()
+    }
+
+    /// Package into the eq. (11)/(12) measurement for a given hardware
+    /// multiplier count and clock.
+    pub fn execution(&self, w: u32, m: u32, multipliers: u64, freq_mhz: f64) -> Execution {
+        self.trace.execution(w, m, multipliers, freq_mhz)
+    }
+}
+
+/// Plan `workload` on `arch` analytically (no functional execution):
+/// per layer, the mode controller picks MM₁/KMM₂/MM₂ and the §IV-D tile
+/// schedule gives the cycle count.
+pub fn schedule<E: TileEngine>(
+    workload: &Workload,
+    arch: &ScalableKmm<E>,
+) -> Result<Schedule, WidthError> {
+    let spec = arch.mxu.spec();
+    let mut layers = Vec::with_capacity(workload.gemms.len());
+    let mut trace = Trace::new();
+    for g in &workload.gemms {
+        let mode = select_mode(g.w, arch.m, arch.kmm_enabled)?;
+        let grid = TileGrid::new(g.m, g.k, g.n, spec.x, spec.y);
+        let stats = simulate_cycles(&grid, &spec, mode.reads());
+        layers.push(LayerPlan {
+            label: g.label.clone(),
+            w: g.w,
+            mode,
+            cycles: stats.cycles,
+            macs: stats.macs,
+        });
+        trace.push(g.label.clone(), g.w, mode.reads(), stats);
+    }
+    Ok(Schedule { layers, trace })
+}
+
+/// Throughput (GOPS) of `workload` on `arch` at `freq_mhz` — the Table
+/// I/II cell generator.
+pub fn workload_gops<E: TileEngine>(
+    workload: &Workload,
+    arch: &ScalableKmm<E>,
+    freq_mhz: f64,
+) -> Result<f64, WidthError> {
+    let s = schedule(workload, arch)?;
+    let w = s.trace.dominant_w();
+    Ok(s.execution(w, arch.m, arch.mxu.mults() as u64, freq_mhz).gops())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::mxu::SystolicSpec;
+    use crate::model::resnet::{resnet, ResNet};
+    use crate::model::workload::synthetic_square;
+
+    fn arch(kmm: bool) -> ScalableKmm {
+        ScalableKmm {
+            mxu: SystolicSpec::paper_64(),
+            m: 8,
+            kmm_enabled: kmm,
+        }
+    }
+
+    #[test]
+    fn per_layer_modes_follow_windows() {
+        let wl = synthetic_square("s", 256, 2, 8);
+        let s = schedule(&wl, &arch(true)).unwrap();
+        assert!(s.layers.iter().all(|l| l.mode == Mode::Mm1));
+        let s = schedule(&wl.at_bitwidth(12), &arch(true)).unwrap();
+        assert!(s.layers.iter().all(|l| l.mode == Mode::Kmm2));
+        let s = schedule(&wl.at_bitwidth(16), &arch(true)).unwrap();
+        assert!(s.layers.iter().all(|l| l.mode == Mode::Mm2));
+    }
+
+    #[test]
+    fn resnet_cycle_ratios_between_windows() {
+        // Table I shape: w∈9..14 GOPS ≈ 8-bit GOPS / 3 on KMM, / 4 on MM.
+        let r50 = resnet(ResNet::R50, 8);
+        let kmm = arch(true);
+        let c8 = schedule(&r50, &kmm).unwrap().cycles();
+        let c12 = schedule(&r50.at_bitwidth(12), &kmm).unwrap().cycles();
+        let c16 = schedule(&r50.at_bitwidth(16), &kmm).unwrap().cycles();
+        let r12 = c12 as f64 / c8 as f64;
+        let r16 = c16 as f64 / c8 as f64;
+        assert!((r12 - 3.0).abs() < 0.05, "r12 = {r12}");
+        assert!((r16 - 4.0).abs() < 0.05, "r16 = {r16}");
+        // Baseline MM arch pays 4× in the KMM window.
+        let mm = arch(false);
+        let m12 = schedule(&r50.at_bitwidth(12), &mm).unwrap().cycles();
+        let ratio = m12 as f64 / c12 as f64;
+        assert!((ratio - 4.0 / 3.0).abs() < 0.01, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn mixed_precision_workload_schedules_per_layer() {
+        let mut wl = synthetic_square("mix", 128, 1, 8);
+        wl.gemms.extend(synthetic_square("x", 128, 1, 12).gemms);
+        wl.gemms.extend(synthetic_square("y", 128, 1, 16).gemms);
+        let s = schedule(&wl, &arch(true)).unwrap();
+        let modes: Vec<Mode> = s.layers.iter().map(|l| l.mode).collect();
+        assert_eq!(modes, vec![Mode::Mm1, Mode::Kmm2, Mode::Mm2]);
+    }
+
+    #[test]
+    fn rejects_overwide_layer() {
+        let wl = synthetic_square("wide", 64, 1, 17);
+        assert!(schedule(&wl, &arch(true)).is_err());
+    }
+
+    #[test]
+    fn gops_sanity_on_resnet50() {
+        // Paper Table I: KMM₂ 64×64 at 326 MHz reaches 2147 GOPS on
+        // ResNet-50 at w≤8. Our deterministic model must land in the
+        // same regime (>1500 GOPS; exact value checked in the bench
+        // against the table).
+        let g = workload_gops(&resnet(ResNet::R50, 8), &arch(true), 326.0).unwrap();
+        assert!(g > 1500.0 && g < 2800.0, "GOPS = {g}");
+    }
+
+    #[test]
+    fn efficiency_in_kmm_window_exceeds_one() {
+        let r50 = resnet(ResNet::R50, 12);
+        let a = arch(true);
+        let s = schedule(&r50, &a).unwrap();
+        let e = s.execution(12, 8, 4096, 326.0);
+        assert!(e.mbit_efficiency() > 1.0, "eff = {}", e.mbit_efficiency());
+        assert!(e.mbit_efficiency() < 4.0 / 3.0 + 1e-9);
+    }
+}

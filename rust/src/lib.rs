@@ -1,0 +1,31 @@
+//! # KMM — Karatsuba Matrix Multiplication
+//!
+//! A reproduction of *"Karatsuba Matrix Multiplication and its Efficient
+//! Custom Hardware Implementations"* (Pogue & Nicolici, IEEE Trans.
+//! Computers, 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - [`algo`] — exact executable Algorithms 1–5 with operation counting,
+//!   plus the closed-form complexity equations (2)–(8).
+//! - `arch` — structural + cycle-timed models of the paper's hardware:
+//!   the baseline MM₁ systolic array, the fixed-precision KMM architecture,
+//!   the precision-scalable KMM architecture, and the FFIP baseline.
+//! - `area` — Area-Unit and FPGA resource/frequency models (eqs. 16–23).
+//! - `sim` — cycle-level GEMM simulation (tiling, tile re-read streams,
+//!   out-of-array accumulation).
+//! - `coordinator` — the L3 runtime: scheduler, precision-mode control,
+//!   batched request serving, metrics (eqs. 11–15, 23).
+//! - `runtime` — PJRT executable loading (AOT HLO-text artifacts produced
+//!   by `python/compile/aot.py`).
+//! - `model` — ResNet/VGG GEMM workload tables and generators.
+//! - `report` — regenerators for every table and figure in the paper.
+//! - [`util`] — dependency-free RNG, property harness, wide ints, CLI.
+
+pub mod algo;
+pub mod arch;
+pub mod area;
+pub mod coordinator;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,224 @@
+//! `kmm` — CLI launcher for the KMM accelerator system.
+//!
+//! Subcommands:
+//!   table1 | table2 | table3      regenerate the paper's tables
+//!   fig5 | fig11 | fig12          regenerate the paper's figures
+//!   gemm --m --k --n --w [--backend pjrt] one GEMM through the stack
+//!   serve [--requests N]          batched serving demo (functional)
+//!   schedule --workload FILE|resnet50|resnet101|resnet152|vgg16 [--w W]
+//!                                 per-layer plan + aggregate metrics
+//!   export --model resnet50 --w 8 [--out FILE]  dump a workload JSON
+//!   info                          artifact/runtime status
+
+use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::area::au::ArrayCfg;
+use kmm::coordinator::dispatch::{FunctionalBackend, GemmBackend, PjrtBackend};
+use kmm::coordinator::scheduler::schedule;
+use kmm::coordinator::server::{Server, ServerConfig};
+use kmm::arch::scalable::ScalableKmm;
+use kmm::model::io::{workload_from_json, workload_to_json};
+use kmm::model::resnet::{resnet, ResNet};
+use kmm::model::vgg::{vgg, Vgg};
+use kmm::model::workload::Workload;
+use kmm::report;
+use kmm::report::layers::layer_report;
+use kmm::runtime::{default_dir, Runtime};
+use kmm::util::cli::Args;
+use kmm::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command() {
+        Some("table1") => print_ok(report::table1().0),
+        Some("table2") => print_ok(report::table2().0),
+        Some("table3") => print_ok(report::table3().0),
+        Some("fig5") => print_ok(report::fig5(64, 32).0),
+        Some("fig11") => print_ok(report::fig11(8, 16).0),
+        Some("fig12") => print_ok(report::fig12(&ArrayCfg::paper_64()).0),
+        Some("gemm") => cmd_gemm(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("schedule") => cmd_schedule(&args),
+        Some("export") => cmd_export(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|serve|schedule|export|info> [options]\n{}",
+                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend pjrt|functional]\n  serve    [--requests 32]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_ok(s: String) -> i32 {
+    println!("{s}");
+    0
+}
+
+fn cmd_gemm(args: &Args) -> i32 {
+    let m: usize = args.get("m", 128).unwrap();
+    let k: usize = args.get("k", 256).unwrap();
+    let n: usize = args.get("n", 128).unwrap();
+    let w: u32 = args.get("w", 12).unwrap();
+    let backend = args.get_str("backend", "functional");
+    let mut rng = Rng::new(args.get("seed", 1u64).unwrap());
+    let a = Mat::random(m, k, w, &mut rng);
+    let b = Mat::random(k, n, w, &mut rng);
+
+    let mut be: Box<dyn GemmBackend> = match backend.as_str() {
+        "pjrt" => match Runtime::from_dir(default_dir()) {
+            Ok(rt) => Box::new(PjrtBackend::new(rt)),
+            Err(e) => {
+                eprintln!("pjrt backend unavailable ({e:#}); run `make artifacts`");
+                return 2;
+            }
+        },
+        _ => Box::new(FunctionalBackend::paper()),
+    };
+    match be.gemm(&a, &b, w) {
+        Ok(r) => {
+            let exact = r.c == matmul_oracle(&a, &b);
+            println!(
+                "GEMM {m}x{k}x{n} w={w} via {}: mode {:?}, {} cycles, {} tile jobs, exact={exact}",
+                be.name(),
+                r.mode,
+                r.stats.cycles,
+                r.stats.tile_jobs
+            );
+            i32::from(!exact)
+        }
+        Err(e) => {
+            eprintln!("rejected: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let requests: usize = args.get("requests", 32).unwrap();
+    let mut srv = Server::start(
+        || Box::new(FunctionalBackend::paper()),
+        ServerConfig::default(),
+    );
+    let mut rng = Rng::new(5);
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let w = [8u32, 12, 16][i % 3];
+        let a = Mat::random(rng.range(16, 128), rng.range(16, 256), w, &mut rng);
+        let b = Mat::random(a.cols, rng.range(16, 128), w, &mut rng);
+        rxs.push(srv.submit(a, b, w).1);
+    }
+    let mut cycles = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        if resp.result.is_err() {
+            eprintln!("request {} rejected", resp.id);
+            return 1;
+        }
+        cycles += resp.cycles;
+    }
+    let stats = srv.shutdown();
+    println!(
+        "served {} requests / {} batches; modes {:?}; device {:.3} ms @326 MHz",
+        stats.requests,
+        stats.batches,
+        stats.by_mode,
+        cycles as f64 / 326e6 * 1e3
+    );
+    0
+}
+
+fn named_workload(name: &str, w: u32) -> Option<Workload> {
+    Some(match name {
+        "resnet50" => resnet(ResNet::R50, w),
+        "resnet101" => resnet(ResNet::R101, w),
+        "resnet152" => resnet(ResNet::R152, w),
+        "vgg16" => vgg(Vgg::V16, w),
+        "vgg11" => vgg(Vgg::V11, w),
+        _ => return None,
+    })
+}
+
+fn cmd_schedule(args: &Args) -> i32 {
+    let which = args.get_str("workload", "resnet50");
+    let w: u32 = args.get("w", 8).unwrap();
+    let wl = match named_workload(&which, w) {
+        Some(wl) => wl,
+        None => match std::fs::read_to_string(&which) {
+            Ok(text) => match workload_from_json(&text) {
+                Ok(wl) => wl.at_bitwidth(w),
+                Err(e) => {
+                    eprintln!("cannot parse {which}: {e}");
+                    return 2;
+                }
+            },
+            Err(e) => {
+                eprintln!("unknown workload `{which}` and not a readable file: {e}");
+                return 2;
+            }
+        },
+    };
+    let arch = ScalableKmm::paper_kmm();
+    match layer_report(&wl, &arch) {
+        Ok((txt, _)) => {
+            println!("{txt}");
+            let s = schedule(&wl, &arch).unwrap();
+            let e = s.execution(w, arch.m, 4160, 326.0);
+            println!(
+                "aggregate: {:.0} GOPS @326 MHz, eq.(12) efficiency {:.3}, {:.2} ms/pass",
+                e.gops(),
+                e.mbit_efficiency(),
+                e.seconds() * 1e3
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("schedule failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_export(args: &Args) -> i32 {
+    let model = args.get_str("model", "resnet50");
+    let w: u32 = args.get("w", 8).unwrap();
+    let Some(wl) = named_workload(&model, w) else {
+        eprintln!("unknown model `{model}` (resnet50|resnet101|resnet152|vgg16|vgg11)");
+        return 2;
+    };
+    let text = workload_to_json(&wl);
+    match args.get_str("out", "-").as_str() {
+        "-" => {
+            println!("{text}");
+            0
+        }
+        path => match std::fs::write(path, &text) {
+            Ok(()) => {
+                println!("wrote {path} ({} layers)", wl.len());
+                0
+            }
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                1
+            }
+        },
+    }
+}
+
+fn cmd_info() -> i32 {
+    let dir = default_dir();
+    println!("artifacts dir: {dir:?}");
+    match Runtime::from_dir(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("entrypoints: {:?}", rt.names());
+            println!("tile size: {}", rt.manifest().tile);
+            0
+        }
+        Err(e) => {
+            println!("runtime unavailable: {e:#} (run `make artifacts`)");
+            1
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Workload import/export: JSON GEMM traces so external tools (or the
+//! CLI) can feed custom workloads to the scheduler and server.
+//!
+//! Format:
+//! ```json
+//! { "name": "my-net",
+//!   "gemms": [ {"label": "l1", "m": 128, "k": 256, "n": 64, "w": 8}, … ] }
+//! ```
+
+use crate::model::workload::{Gemm, Workload};
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Workload parse failure.
+#[derive(Debug, thiserror::Error)]
+pub enum WorkloadIoError {
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("workload field missing or invalid: {0}")]
+    Field(String),
+}
+
+fn field(g: &Json, idx: usize, key: &str) -> Result<i64, WorkloadIoError> {
+    g.get(key)
+        .and_then(Json::as_i64)
+        .filter(|&v| v > 0)
+        .ok_or_else(|| WorkloadIoError::Field(format!("gemms[{idx}].{key}")))
+}
+
+/// Parse a workload from JSON text.
+pub fn workload_from_json(text: &str) -> Result<Workload, WorkloadIoError> {
+    let j = Json::parse(text)?;
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| WorkloadIoError::Field("name".into()))?;
+    let gemms = j
+        .get("gemms")
+        .and_then(Json::as_array)
+        .ok_or_else(|| WorkloadIoError::Field("gemms".into()))?;
+    let mut out = Vec::with_capacity(gemms.len());
+    for (i, g) in gemms.iter().enumerate() {
+        let label = g
+            .get("label")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("gemm{i}"));
+        out.push(Gemm::new(
+            label,
+            field(g, i, "m")? as usize,
+            field(g, i, "k")? as usize,
+            field(g, i, "n")? as usize,
+            field(g, i, "w")? as u32,
+        ));
+    }
+    if out.is_empty() {
+        return Err(WorkloadIoError::Field("gemms is empty".into()));
+    }
+    Ok(Workload::new(name, out))
+}
+
+/// Serialize a workload to JSON text (inverse of [`workload_from_json`]).
+pub fn workload_to_json(wl: &Workload) -> String {
+    let mut s = String::new();
+    let _ = write!(s, "{{\"name\": {:?}, \"gemms\": [", wl.name);
+    for (i, g) in wl.gemms.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "\n  {{\"label\": {:?}, \"m\": {}, \"k\": {}, \"n\": {}, \"w\": {}}}",
+            g.label, g.m, g.k, g.n, g.w
+        );
+    }
+    s.push_str("\n]}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::resnet::{resnet, ResNet};
+    use crate::model::workload::synthetic_square;
+
+    #[test]
+    fn roundtrip_synthetic() {
+        let wl = synthetic_square("sq", 64, 3, 12);
+        let text = workload_to_json(&wl);
+        let back = workload_from_json(&text).unwrap();
+        assert_eq!(back, wl);
+    }
+
+    #[test]
+    fn roundtrip_resnet50() {
+        let wl = resnet(ResNet::R50, 8);
+        let back = workload_from_json(&workload_to_json(&wl)).unwrap();
+        assert_eq!(back, wl);
+        assert_eq!(back.macs(), wl.macs());
+    }
+
+    #[test]
+    fn parses_minimal_document() {
+        let wl = workload_from_json(
+            r#"{"name": "t", "gemms": [{"m": 4, "k": 5, "n": 6, "w": 8}]}"#,
+        )
+        .unwrap();
+        assert_eq!(wl.gemms[0].label, "gemm0");
+        assert_eq!(wl.gemms[0].macs(), 120);
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(workload_from_json("{").is_err());
+        assert!(workload_from_json(r#"{"gemms": []}"#).is_err());
+        assert!(workload_from_json(r#"{"name": "t", "gemms": []}"#).is_err());
+        let e = workload_from_json(r#"{"name":"t","gemms":[{"m":0,"k":1,"n":1,"w":8}]}"#)
+            .unwrap_err();
+        assert!(e.to_string().contains("gemms[0].m"));
+        assert!(
+            workload_from_json(r#"{"name":"t","gemms":[{"m":2,"k":1,"n":1}]}"#).is_err(),
+            "missing w"
+        );
+    }
+}

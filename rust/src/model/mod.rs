@@ -1,0 +1,12 @@
+//! Neural-network workload tables: the GEMM traces the paper's evaluation
+//! runs (ResNet-50/101/152, VGG-11/16) plus synthetic generators.
+
+pub mod io;
+pub mod resnet;
+pub mod vgg;
+pub mod workload;
+
+pub use io::{workload_from_json, workload_to_json};
+pub use resnet::{resnet, ResNet};
+pub use vgg::{vgg, Vgg};
+pub use workload::{conv_gemm, synthetic_ragged, synthetic_square, Gemm, Workload};

@@ -1,0 +1,154 @@
+//! ResNet-50/101/152 layer-shape tables (He et al., CVPR 2016) lowered to
+//! im2col GEMMs — the workloads of Tables I–II.
+//!
+//! The bottleneck architecture at 224×224 input:
+//!
+//! | stage   | output  | block (×depth)                    | 50 | 101 | 152 |
+//! |---------|---------|-----------------------------------|----|-----|-----|
+//! | conv1   | 112×112 | 7×7, 64, stride 2                 |  1 |  1  |  1  |
+//! | conv2_x | 56×56   | [1×1,64 / 3×3,64 / 1×1,256]       |  3 |  3  |  3  |
+//! | conv3_x | 28×28   | [1×1,128 / 3×3,128 / 1×1,512]     |  4 |  4  |  8  |
+//! | conv4_x | 14×14   | [1×1,256 / 3×3,256 / 1×1,1024]    |  6 | 23  | 36  |
+//! | conv5_x | 7×7     | [1×1,512 / 3×3,512 / 1×1,2048]    |  3 |  3  |  3  |
+//! | fc      | 1×1     | 1000-way                          |  1 |  1  |  1  |
+//!
+//! Each stage's first block also carries a 1×1 projection (downsample)
+//! convolution on its shortcut.
+
+use crate::model::workload::{conv_gemm, Gemm, Workload};
+
+/// ResNet variant depth selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResNet {
+    R50,
+    R101,
+    R152,
+}
+
+impl ResNet {
+    /// Blocks per stage (conv2_x, conv3_x, conv4_x, conv5_x).
+    pub fn blocks(&self) -> [usize; 4] {
+        match self {
+            ResNet::R50 => [3, 4, 6, 3],
+            ResNet::R101 => [3, 4, 23, 3],
+            ResNet::R152 => [3, 8, 36, 3],
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResNet::R50 => "ResNet-50",
+            ResNet::R101 => "ResNet-101",
+            ResNet::R152 => "ResNet-152",
+        }
+    }
+}
+
+/// Build the inference GEMM workload for `variant` at bitwidth `w`
+/// (224×224 input, batch 1).
+pub fn resnet(variant: ResNet, w: u32) -> Workload {
+    let mut gemms: Vec<Gemm> = Vec::new();
+    // conv1: 7×7, stride 2, 3 → 64 channels, 112×112 outputs.
+    gemms.push(conv_gemm("conv1", 112, 112, 7, 7, 3, 64, w));
+
+    // Bottleneck stages. `width` is the block's internal channel count;
+    // outputs are 4× wider.
+    let stages = [
+        // (stage, spatial, width, in_channels at stage entry)
+        (2usize, 56usize, 64usize, 64usize),
+        (3, 28, 128, 256),
+        (4, 14, 256, 512),
+        (5, 7, 512, 1024),
+    ];
+    let blocks = variant.blocks();
+
+    for (si, &(stage, s, width, c_in_entry)) in stages.iter().enumerate() {
+        let c_out = 4 * width;
+        for b in 0..blocks[si] {
+            let c_in = if b == 0 { c_in_entry } else { c_out };
+            let tag = format!("conv{stage}_{}", b + 1);
+            // 1×1 reduce (stride lives here in the v1.5 convention for
+            // stages 3–5; spatial `s` is already the post-stride size).
+            gemms.push(conv_gemm(format!("{tag}.1x1a"), s, s, 1, 1, c_in, width, w));
+            // 3×3 spatial.
+            gemms.push(conv_gemm(format!("{tag}.3x3"), s, s, 3, 3, width, width, w));
+            // 1×1 expand.
+            gemms.push(conv_gemm(format!("{tag}.1x1b"), s, s, 1, 1, width, c_out, w));
+            // Projection shortcut on the first block of each stage.
+            if b == 0 {
+                gemms.push(conv_gemm(format!("{tag}.proj"), s, s, 1, 1, c_in, c_out, w));
+            }
+        }
+    }
+
+    // Global-average-pooled 2048-feature FC to 1000 classes.
+    gemms.push(Gemm::new("fc1000", 1, 2048, 1000, w));
+
+    Workload::new(variant.name(), gemms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts() {
+        // 50 = 1 conv1 + 3·(3+4+6+3) bottleneck convs + 1 fc, plus 4
+        // projection convs (not counted in the "50" naming).
+        let r50 = resnet(ResNet::R50, 8);
+        assert_eq!(r50.len(), 1 + 3 * 16 + 4 + 1);
+        let r101 = resnet(ResNet::R101, 8);
+        assert_eq!(r101.len(), 1 + 3 * 33 + 4 + 1);
+        let r152 = resnet(ResNet::R152, 8);
+        assert_eq!(r152.len(), 1 + 3 * 50 + 4 + 1);
+    }
+
+    #[test]
+    fn mac_totals_match_paper_flops() {
+        // He et al. quote 3.8 / 7.6 / 11.3 GFLOPs (multiply-adds) for
+        // ResNet-50/101/152; our conv+fc GEMM totals must land within 5%.
+        let macs50 = resnet(ResNet::R50, 8).macs() as f64;
+        let macs101 = resnet(ResNet::R101, 8).macs() as f64;
+        let macs152 = resnet(ResNet::R152, 8).macs() as f64;
+        assert!((macs50 / 3.8e9 - 1.0).abs() < 0.05, "R50 = {macs50:.3e}");
+        assert!((macs101 / 7.6e9 - 1.0).abs() < 0.05, "R101 = {macs101:.3e}");
+        assert!((macs152 / 11.3e9 - 1.0).abs() < 0.05, "R152 = {macs152:.3e}");
+    }
+
+    #[test]
+    fn stage_shapes_spotcheck() {
+        let r50 = resnet(ResNet::R50, 8);
+        let find = |label: &str| {
+            r50.gemms
+                .iter()
+                .find(|g| g.label == label)
+                .unwrap_or_else(|| panic!("missing {label}"))
+        };
+        // conv2_1 3×3: 56² outputs, K = 9·64, N = 64.
+        let g = find("conv2_1.3x3");
+        assert_eq!((g.m, g.k, g.n), (3136, 576, 64));
+        // conv5_3 1×1 expand: 7² outputs, K = 512, N = 2048.
+        let g = find("conv5_3.1x1b");
+        assert_eq!((g.m, g.k, g.n), (49, 512, 2048));
+        // First block of conv3 sees 256 input channels.
+        let g = find("conv3_1.1x1a");
+        assert_eq!((g.m, g.k, g.n), (784, 256, 128));
+        // Projection shortcut of conv4: 512 → 1024.
+        let g = find("conv4_1.proj");
+        assert_eq!((g.m, g.k, g.n), (196, 512, 1024));
+    }
+
+    #[test]
+    fn deeper_variants_strictly_larger() {
+        let m50 = resnet(ResNet::R50, 8).macs();
+        let m101 = resnet(ResNet::R101, 8).macs();
+        let m152 = resnet(ResNet::R152, 8).macs();
+        assert!(m50 < m101 && m101 < m152);
+    }
+
+    #[test]
+    fn bitwidth_propagates() {
+        let r = resnet(ResNet::R50, 12);
+        assert!(r.gemms.iter().all(|g| g.w == 12));
+    }
+}

@@ -1,0 +1,99 @@
+//! VGG-16 and VGG-11 layer-shape tables (Simonyan & Zisserman, 2015)
+//! lowered to im2col GEMMs — the workloads several Table I prior-work
+//! columns report (Liu et al. VGG16, Fan et al. Bayes-VGG11).
+
+use crate::model::workload::{conv_gemm, Gemm, Workload};
+
+/// VGG configuration selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vgg {
+    /// Configuration A: 8 conv + 3 FC.
+    V11,
+    /// Configuration D: 13 conv + 3 FC.
+    V16,
+}
+
+impl Vgg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Vgg::V11 => "VGG-11",
+            Vgg::V16 => "VGG-16",
+        }
+    }
+
+    /// Conv layers per stage (all 3×3; stages end with 2×2 max-pool).
+    pub fn convs_per_stage(&self) -> [usize; 5] {
+        match self {
+            Vgg::V11 => [1, 1, 2, 2, 2],
+            Vgg::V16 => [2, 2, 3, 3, 3],
+        }
+    }
+}
+
+/// Build the inference GEMM workload for `variant` at bitwidth `w`
+/// (224×224 input, batch 1).
+pub fn vgg(variant: Vgg, w: u32) -> Workload {
+    let mut gemms: Vec<Gemm> = Vec::new();
+    let stage_channels = [64usize, 128, 256, 512, 512];
+    let stage_spatial = [224usize, 112, 56, 28, 14];
+    let mut c_in = 3usize;
+    for (si, (&c, &s)) in stage_channels.iter().zip(&stage_spatial).enumerate() {
+        for li in 0..variant.convs_per_stage()[si] {
+            gemms.push(conv_gemm(
+                format!("conv{}_{}", si + 1, li + 1),
+                s,
+                s,
+                3,
+                3,
+                c_in,
+                c,
+                w,
+            ));
+            c_in = c;
+        }
+    }
+    // Classifier: 7×7×512 → 4096 → 4096 → 1000.
+    gemms.push(Gemm::new("fc6", 1, 7 * 7 * 512, 4096, w));
+    gemms.push(Gemm::new("fc7", 1, 4096, 4096, w));
+    gemms.push(Gemm::new("fc8", 1, 4096, 1000, w));
+    Workload::new(variant.name(), gemms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts() {
+        assert_eq!(vgg(Vgg::V16, 8).len(), 13 + 3);
+        assert_eq!(vgg(Vgg::V11, 8).len(), 8 + 3);
+    }
+
+    #[test]
+    fn vgg16_macs_match_literature() {
+        // VGG-16 is commonly quoted at ~15.5 GMACs (conv + fc) at 224².
+        let macs = vgg(Vgg::V16, 8).macs() as f64;
+        assert!((macs / 15.5e9 - 1.0).abs() < 0.02, "VGG16 = {macs:.3e}");
+    }
+
+    #[test]
+    fn first_and_heaviest_layers() {
+        let v = vgg(Vgg::V16, 8);
+        let g0 = &v.gemms[0];
+        assert_eq!((g0.m, g0.k, g0.n), (224 * 224, 27, 64));
+        // conv2_x layers at 112² with 128 channels are the MAC-heaviest
+        // conv stage per layer.
+        let g = v.gemms.iter().find(|g| g.label == "conv2_2").unwrap();
+        assert_eq!((g.m, g.k, g.n), (112 * 112, 9 * 128, 128));
+        // fc6 dominates the classifier.
+        let fc6 = v.gemms.iter().find(|g| g.label == "fc6").unwrap();
+        assert_eq!(fc6.macs(), 25088 * 4096);
+    }
+
+    #[test]
+    fn v11_subset_of_v16_structure() {
+        let m11 = vgg(Vgg::V11, 8).macs();
+        let m16 = vgg(Vgg::V16, 8).macs();
+        assert!(m11 < m16);
+    }
+}

@@ -1,0 +1,190 @@
+//! GEMM workload descriptions: the shapes a neural-network inference
+//! decomposes into (im2col convolutions + fully-connected layers), plus
+//! synthetic generators for tests and benches.
+//!
+//! Throughput on the paper's deterministic accelerator depends only on the
+//! GEMM dimensions and input bitwidths — not on trained weights (§V-B) —
+//! so layer-shape tables are a faithful substitute for the real models.
+
+use crate::algo::matrix::Mat;
+use crate::util::rng::Rng;
+
+/// One GEMM in a workload: `C[M×N] = A[M×K] · B[K×N]` on `w`-bit inputs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Gemm {
+    /// Layer label, e.g. `conv2_1.3x3`.
+    pub label: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Input bitwidth this layer runs at.
+    pub w: u32,
+}
+
+impl Gemm {
+    pub fn new(label: impl Into<String>, m: usize, k: usize, n: usize, w: u32) -> Self {
+        Gemm {
+            label: label.into(),
+            m,
+            k,
+            n,
+            w,
+        }
+    }
+
+    /// Multiply-accumulates of the layer: `M·K·N`.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// Materialize random `w`-bit operand matrices (functional testing).
+    pub fn random_operands(&self, rng: &mut Rng) -> (Mat, Mat) {
+        (
+            Mat::random(self.m, self.k, self.w, rng),
+            Mat::random(self.k, self.n, self.w, rng),
+        )
+    }
+}
+
+/// A named workload: an ordered list of GEMMs (one inference pass).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Workload {
+    pub name: String,
+    pub gemms: Vec<Gemm>,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>, gemms: Vec<Gemm>) -> Self {
+        Workload {
+            name: name.into(),
+            gemms,
+        }
+    }
+
+    /// Total multiply-accumulates over the workload.
+    pub fn macs(&self) -> u64 {
+        self.gemms.iter().map(Gemm::macs).sum()
+    }
+
+    /// Re-quantize every layer to bitwidth `w` (the Tables I–II sweeps
+    /// evaluate each model at uniform w buckets).
+    pub fn at_bitwidth(&self, w: u32) -> Workload {
+        Workload {
+            name: format!("{}@w{}", self.name, w),
+            gemms: self
+                .gemms
+                .iter()
+                .map(|g| Gemm { w, ..g.clone() })
+                .collect(),
+        }
+    }
+
+    /// Layer count.
+    pub fn len(&self) -> usize {
+        self.gemms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gemms.is_empty()
+    }
+}
+
+/// The GEMM a convolution lowers to under im2col:
+/// `M = H_out·W_out`, `K = kh·kw·C_in`, `N = C_out`.
+pub fn conv_gemm(
+    label: impl Into<String>,
+    h_out: usize,
+    w_out: usize,
+    kh: usize,
+    kw: usize,
+    c_in: usize,
+    c_out: usize,
+    w_bits: u32,
+) -> Gemm {
+    Gemm::new(label, h_out * w_out, kh * kw * c_in, c_out, w_bits)
+}
+
+/// Synthetic square-GEMM workload (benches and stress tests).
+pub fn synthetic_square(name: &str, d: usize, layers: usize, w: u32) -> Workload {
+    Workload::new(
+        name,
+        (0..layers)
+            .map(|i| Gemm::new(format!("sq{i}.{d}"), d, d, d, w))
+            .collect(),
+    )
+}
+
+/// Synthetic ragged workload exercising padding edge cases: dims drawn
+/// from `[1, max_dim]`.
+pub fn synthetic_ragged(name: &str, layers: usize, max_dim: usize, w: u32, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed);
+    Workload::new(
+        name,
+        (0..layers)
+            .map(|i| {
+                Gemm::new(
+                    format!("rag{i}"),
+                    rng.range(1, max_dim),
+                    rng.range(1, max_dim),
+                    rng.range(1, max_dim),
+                    w,
+                )
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_gemm_im2col_dims() {
+        // ResNet conv1: 7×7×3 → 64 channels over 112×112 outputs.
+        let g = conv_gemm("conv1", 112, 112, 7, 7, 3, 64, 8);
+        assert_eq!(g.m, 12544);
+        assert_eq!(g.k, 147);
+        assert_eq!(g.n, 64);
+        assert_eq!(g.macs(), 12544 * 147 * 64);
+    }
+
+    #[test]
+    fn workload_totals() {
+        let w = synthetic_square("s", 64, 3, 8);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.macs(), 3 * 64 * 64 * 64);
+    }
+
+    #[test]
+    fn requantization_changes_only_w() {
+        let w = synthetic_square("s", 32, 2, 8);
+        let w12 = w.at_bitwidth(12);
+        assert_eq!(w12.gemms[0].w, 12);
+        assert_eq!(w12.gemms[0].m, 32);
+        assert_eq!(w12.macs(), w.macs());
+        assert!(w12.name.contains("@w12"));
+    }
+
+    #[test]
+    fn ragged_within_bounds() {
+        let w = synthetic_ragged("r", 10, 100, 8, 42);
+        assert_eq!(w.len(), 10);
+        for g in &w.gemms {
+            assert!(g.m >= 1 && g.m <= 100);
+            assert!(g.k >= 1 && g.k <= 100);
+            assert!(g.n >= 1 && g.n <= 100);
+        }
+        // Deterministic for a fixed seed.
+        assert_eq!(w, synthetic_ragged("r", 10, 100, 8, 42));
+    }
+
+    #[test]
+    fn random_operands_fit_width() {
+        let g = Gemm::new("g", 5, 7, 3, 11);
+        let mut rng = Rng::new(1);
+        let (a, b) = g.random_operands(&mut rng);
+        assert_eq!((a.rows, a.cols), (5, 7));
+        assert_eq!((b.rows, b.cols), (7, 3));
+        assert!(a.fits(11) && b.fits(11));
+    }
+}

@@ -1,0 +1,179 @@
+//! ASCII table and plot rendering for the bench regenerators.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column widths; first column left-aligned, the rest
+    /// right-aligned.
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut width = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = width[i] - c.chars().count();
+                if i == 0 {
+                    s.push_str(&format!(" {}{} |", c, " ".repeat(pad)));
+                } else {
+                    s.push_str(&format!(" {}{} |", " ".repeat(pad), c));
+                }
+            }
+            s
+        };
+        let sep = {
+            let mut s = String::from("|");
+            for w in &width {
+                s.push_str(&format!("{}|", "-".repeat(w + 2)));
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render an ASCII line chart of one or more labelled series sharing x
+/// positions. Heights are scaled to `height` rows; `x_labels` annotate
+/// the axis.
+pub fn line_plot(
+    title: &str,
+    series: &[(&str, Vec<f64>)],
+    x_labels: &[String],
+    height: usize,
+) -> String {
+    assert!(!series.is_empty());
+    let n = series[0].1.len();
+    assert!(series.iter().all(|(_, v)| v.len() == n));
+    let max = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().copied())
+        .fold(f64::MIN, f64::max);
+    let min = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().copied())
+        .fold(f64::MAX, f64::min);
+    let span = (max - min).max(1e-12);
+    let marks = ['*', 'o', '+', 'x', '#'];
+    let mut grid = vec![vec![' '; n * 3 + 8]; height];
+    for (si, (_, vals)) in series.iter().enumerate() {
+        for (xi, v) in vals.iter().enumerate() {
+            let r = ((v - min) / span * (height - 1) as f64).round() as usize;
+            let row = height - 1 - r;
+            let col = 8 + xi * 3;
+            grid[row][col] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}\n");
+    for (ri, row) in grid.iter().enumerate() {
+        let yval = max - span * ri as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:7.2} {}\n", row[8..].iter().collect::<String>()));
+    }
+    out.push_str("        ");
+    for l in x_labels {
+        out.push_str(&format!("{l:<3}"));
+    }
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {name}\n", marks[si % marks.len()]));
+    }
+    out
+}
+
+/// Format a float with engineering-style precision for table cells.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Thousands-separated integer rendering (resource counts).
+pub fn thousands(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "12345".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(lines[0].contains("name"));
+        assert!(lines[3].contains("12,345".replace(',', "").as_str()));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn plot_contains_all_series_marks() {
+        let s = line_plot(
+            "t",
+            &[("one", vec![1.0, 2.0, 3.0]), ("two", vec![3.0, 2.0, 1.0])],
+            &["a".into(), "b".into(), "c".into()],
+            5,
+        );
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+        assert!(s.contains("one"));
+        assert!(s.contains("two"));
+    }
+
+    #[test]
+    fn thousands_grouping() {
+        assert_eq!(thousands(0), "0");
+        assert_eq!(thousands(999), "999");
+        assert_eq!(thousands(1000), "1,000");
+        assert_eq!(thousands(1234567), "1,234,567");
+    }
+}

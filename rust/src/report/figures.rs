@@ -1,0 +1,142 @@
+//! Regenerators for the paper's figures (5, 11, 12) as ASCII reports.
+//!
+//! Each function returns both the rendered report and the underlying
+//! series so tests can assert the paper's qualitative claims (who wins,
+//! where the crossovers fall) without string-scraping.
+
+use crate::algo::complexity::{fig5_series, Fig5Point};
+use crate::area::au::{fig12_series, ArrayCfg, Fig12Point, FIG12_WIDTHS};
+use crate::coordinator::metrics::{fig11_series, Fig11Point};
+use crate::report::ascii::{f, line_plot, Table};
+
+/// Fig. 5 — arithmetic complexity of MMₙ and KSMMₙ relative to KMMₙ for
+/// d = 64 (eqs. 6–8).
+pub fn fig5(d: u64, n_max: u32) -> (String, Vec<Fig5Point>) {
+    let series = fig5_series(d, n_max);
+    let mut t = Table::new(&["n", "C(MMn)/C(KMMn)", "C(KSMMn)/C(KMMn)"]);
+    for p in &series {
+        t.row(vec![p.n.to_string(), f(p.mm_over_kmm, 3), f(p.ksmm_over_kmm, 3)]);
+    }
+    let plot = line_plot(
+        &format!("Fig. 5 — relative #operations vs KMMn (d = {d})"),
+        &[
+            ("MMn / KMMn", series.iter().map(|p| p.mm_over_kmm).collect()),
+            ("KSMMn / KMMn", series.iter().map(|p| p.ksmm_over_kmm).collect()),
+        ],
+        &series.iter().map(|p| p.n.to_string()).collect::<Vec<_>>(),
+        12,
+    );
+    (format!("{}\n{}", t.render(), plot), series)
+}
+
+/// Fig. 11 — multiplier compute-efficiency roofs of the precision-scalable
+/// MM₂ vs KMM₂ architectures (m = 8, w = 1..16).
+pub fn fig11(m: u32, w_max: u32) -> (String, Vec<Fig11Point>) {
+    let series = fig11_series(m, w_max);
+    let mut t = Table::new(&["w", "MM2 roof", "KMM2 roof"]);
+    for p in &series {
+        t.row(vec![p.w.to_string(), f(p.mm2, 3), f(p.kmm2, 3)]);
+    }
+    let plot = line_plot(
+        &format!("Fig. 11 — eq. (12) roofs, precision-scalable, m = {m}"),
+        &[
+            ("MM2", series.iter().map(|p| p.mm2).collect()),
+            ("KMM2", series.iter().map(|p| p.kmm2).collect()),
+        ],
+        &series.iter().map(|p| p.w.to_string()).collect::<Vec<_>>(),
+        8,
+    );
+    (format!("{}\n{}", t.render(), plot), series)
+}
+
+/// Fig. 12 — AU compute-efficiency limits of the fixed-precision MM₁,
+/// KSMM, KMM architectures across bitwidths (X = Y = 64).
+pub fn fig12(cfg: &ArrayCfg) -> (String, Vec<Fig12Point>) {
+    let series = fig12_series(&FIG12_WIDTHS, cfg);
+    let mut t = Table::new(&["w", "KMM n", "MM1", "KSMM2", "KMMn"]);
+    for p in &series {
+        t.row(vec![
+            p.w.to_string(),
+            p.kmm_n.to_string(),
+            f(p.mm1, 3),
+            f(p.ksmm, 3),
+            f(p.kmm, 3),
+        ]);
+    }
+    let plot = line_plot(
+        "Fig. 12 — AU compute-efficiency limits vs MM1 (X = Y = 64)",
+        &[
+            ("MM1", series.iter().map(|p| p.mm1).collect()),
+            ("KSMM", series.iter().map(|p| p.ksmm).collect()),
+            ("KMM", series.iter().map(|p| p.kmm).collect()),
+        ],
+        &series.iter().map(|p| p.w.to_string()).collect::<Vec<_>>(),
+        12,
+    );
+    (format!("{}\n{}", t.render(), plot), series)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Fig. 5 claims: KSMMn > 1.75·KMMn everywhere; KMMn beats MMn
+    /// from n = 2; KSMMn only beats MMn for n > 4.
+    #[test]
+    fn fig5_claims_hold() {
+        let (_, s) = fig5(64, 32);
+        for p in &s {
+            assert!(p.ksmm_over_kmm > 1.75, "n={}: {}", p.n, p.ksmm_over_kmm);
+            assert!(p.mm_over_kmm > 1.0, "KMM wins from n=2 (n={})", p.n);
+        }
+        let at = |n: u32| s.iter().find(|p| p.n == n).unwrap();
+        // "KSMMn does not fall below MMn until n > 4": KSMM costs *more*
+        // than MM at n = 2 and n = 4, less from n = 8.
+        assert!(at(2).ksmm_over_kmm > at(2).mm_over_kmm, "KSMM above MM at n=2");
+        assert!(at(4).ksmm_over_kmm > at(4).mm_over_kmm, "KSMM still worse at n=4");
+        assert!(at(8).ksmm_over_kmm < at(8).mm_over_kmm, "KSMM below MM for n=8");
+    }
+
+    /// Paper Fig. 11: KMM₂ roof = 4/3 exactly on 9..=14, 1 elsewhere.
+    #[test]
+    fn fig11_window() {
+        let (txt, s) = fig11(8, 16);
+        for p in &s {
+            let expect = if (9..=14).contains(&p.w) { 4.0 / 3.0 } else { 1.0 };
+            assert_eq!(p.kmm2, expect, "w={}", p.w);
+            assert_eq!(p.mm2, 1.0);
+        }
+        assert!(txt.contains("1.333"));
+    }
+
+    /// Paper Fig. 12 claims (§V-C.2): KMM ≥ KSMM for every width; KMM
+    /// crosses above MM₁ at a lower bitwidth than KSMM; recursion levels
+    /// are 1 for 8–32, 2 for 40–56, 3 for 64.
+    #[test]
+    fn fig12_claims_hold() {
+        let cfg = ArrayCfg::paper_64();
+        let (_, s) = fig12(&cfg);
+        for p in &s {
+            assert!(p.kmm >= p.ksmm, "w={}: KMM {} < KSMM {}", p.w, p.kmm, p.ksmm);
+        }
+        let first_kmm_above = s.iter().find(|p| p.kmm > 1.0).map(|p| p.w).unwrap();
+        let first_ksmm_above = s.iter().find(|p| p.ksmm > 1.0).map(|p| p.w).unwrap_or(u32::MAX);
+        assert!(first_kmm_above < first_ksmm_above);
+        for p in &s {
+            let expect_n = match p.w {
+                8..=32 => 2,
+                40..=56 => 4,
+                64 => 8,
+                _ => unreachable!(),
+            };
+            assert_eq!(p.kmm_n, expect_n, "w={}", p.w);
+        }
+    }
+
+    #[test]
+    fn reports_render_nonempty() {
+        assert!(fig5(64, 32).0.len() > 100);
+        assert!(fig11(8, 16).0.len() > 100);
+        assert!(fig12(&ArrayCfg::paper_64()).0.len() > 100);
+    }
+}

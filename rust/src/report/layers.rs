@@ -1,0 +1,110 @@
+//! Per-layer scheduling report: the diagnostic view behind the Table I
+//! aggregates — which layers pad badly, which dominate runtime, what
+//! mode each runs in.
+
+use crate::arch::ffip::TileEngine;
+use crate::arch::scalable::ScalableKmm;
+use crate::coordinator::scheduler::schedule;
+use crate::model::workload::Workload;
+use crate::report::ascii::{f, thousands, Table};
+
+/// One analyzed layer.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub label: String,
+    pub w: u32,
+    pub mode: &'static str,
+    pub cycles: u64,
+    pub macs: u64,
+    /// Fraction of the workload's total cycles.
+    pub share: f64,
+    /// Logical MACs per multiplier-cycle (padding + re-read losses).
+    pub utilization: f64,
+}
+
+/// Analyze `workload` on `arch`; returns the rendered table and the
+/// per-layer records sorted by cycle share (descending).
+pub fn layer_report<E: TileEngine>(
+    workload: &Workload,
+    arch: &ScalableKmm<E>,
+) -> Result<(String, Vec<LayerReport>), crate::arch::scalable::WidthError> {
+    let s = schedule(workload, arch)?;
+    let mults = arch.mxu.spec().mults() as f64;
+    let total: u64 = s.trace.cycles();
+    let mut layers: Vec<LayerReport> = s
+        .layers
+        .iter()
+        .map(|l| LayerReport {
+            label: l.label.clone(),
+            w: l.w,
+            mode: match l.mode {
+                crate::arch::scalable::Mode::Mm1 => "MM1",
+                crate::arch::scalable::Mode::Kmm2 => "KMM2",
+                crate::arch::scalable::Mode::Mm2 => "MM2",
+            },
+            cycles: l.cycles,
+            macs: l.macs,
+            share: l.cycles as f64 / total as f64,
+            utilization: l.macs as f64 / (l.cycles as f64 * mults),
+        })
+        .collect();
+    layers.sort_by(|a, b| b.cycles.cmp(&a.cycles));
+
+    let mut t = Table::new(&["layer", "w", "mode", "cycles", "share %", "util"]);
+    for l in &layers {
+        t.row(vec![
+            l.label.clone(),
+            l.w.to_string(),
+            l.mode.into(),
+            thousands(l.cycles),
+            f(l.share * 100.0, 1),
+            f(l.utilization, 3),
+        ]);
+    }
+    let header = format!(
+        "{} on {}×{} (m = {}): {} layers, {} cycles total\n\n",
+        workload.name,
+        arch.mxu.spec().x,
+        arch.mxu.spec().y,
+        arch.m,
+        layers.len(),
+        thousands(total),
+    );
+    Ok((header + &t.render(), layers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::resnet::{resnet, ResNet};
+
+    #[test]
+    fn resnet50_report_shape() {
+        let arch = ScalableKmm::paper_kmm();
+        let (txt, layers) = layer_report(&resnet(ResNet::R50, 8), &arch).unwrap();
+        assert_eq!(layers.len(), 54);
+        // Sorted by cycles, shares sum to 1.
+        assert!(layers.windows(2).all(|w| w[0].cycles >= w[1].cycles));
+        let total: f64 = layers.iter().map(|l| l.share).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // conv1 (K = 147, heavy padding) must show depressed utilization
+        // vs a clean conv4 3×3 layer (K = 2304).
+        let find = |s: &str| layers.iter().find(|l| l.label == s).unwrap().utilization;
+        assert!(find("conv1") < 0.8, "K=147 pads to 192: {}", find("conv1"));
+        assert!(find("conv4_2.3x3") > 0.9);
+        assert!(find("conv1") < find("conv4_2.3x3"));
+        assert!(txt.contains("ResNet-50"));
+    }
+
+    #[test]
+    fn kmm_window_reduces_utilization_by_reads() {
+        // At w = 12, logical utilization drops ~3× (3 reads per set).
+        let arch = ScalableKmm::paper_kmm();
+        let (_, l8) = layer_report(&resnet(ResNet::R50, 8), &arch).unwrap();
+        let (_, l12) = layer_report(&resnet(ResNet::R50, 12), &arch).unwrap();
+        let u8 = l8.iter().find(|l| l.label == "conv4_2.3x3").unwrap().utilization;
+        let u12 = l12.iter().find(|l| l.label == "conv4_2.3x3").unwrap().utilization;
+        assert!((u8 / u12 - 3.0).abs() < 0.05, "{u8} / {u12}");
+        assert!(l12.iter().all(|l| l.mode == "KMM2"));
+    }
+}

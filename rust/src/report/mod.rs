@@ -1,0 +1,12 @@
+//! Report generation: one regenerator per table and figure in the
+//! paper's evaluation section, rendered as ASCII and returned as
+//! structured data for the benches and tests.
+
+pub mod ascii;
+pub mod figures;
+pub mod layers;
+pub mod tables;
+
+pub use layers::layer_report;
+pub use figures::{fig11, fig12, fig5};
+pub use tables::{table1, table2, table3};

@@ -1,0 +1,526 @@
+//! Regenerators for the paper's Tables I–III.
+//!
+//! Prior-work cells are constants quoted from the paper (they play the
+//! same comparison-context role as in the paper); our architecture cells
+//! are *computed* from the deterministic system model: the §IV-C/IV-D
+//! tile schedule for throughput, eq. (12) for compute efficiency, and the
+//! calibrated FPGA resource model for Table III.
+
+use crate::arch::ffip::{FfipMxu, TileEngine};
+use crate::arch::scalable::ScalableKmm;
+use crate::area::au::ArrayCfg;
+use crate::area::fpga::{arria_system, synth_fixed, FixedArch, FixedSynth};
+use crate::coordinator::scheduler::schedule;
+use crate::model::resnet::{resnet, ResNet};
+use crate::report::ascii::{f, thousands, Table};
+
+/// One computed throughput/efficiency cell of Tables I–II.
+#[derive(Debug, Clone, Copy)]
+pub struct Cell {
+    /// Representative bitwidth of the bucket (8 / 12 / 16).
+    pub w: u32,
+    pub gops: f64,
+    /// eq. (12) multiplier compute efficiency.
+    pub eff: f64,
+}
+
+/// One model row (ResNet variant) of a scalable-architecture column.
+#[derive(Debug, Clone)]
+pub struct ModelRow {
+    pub model: &'static str,
+    pub cells: Vec<Cell>,
+}
+
+/// A computed architecture column of Tables I–II.
+#[derive(Debug, Clone)]
+pub struct ArchColumn {
+    pub name: &'static str,
+    pub freq_mhz: f64,
+    pub multipliers: u64,
+    pub rows: Vec<ModelRow>,
+}
+
+const RESNETS: [ResNet; 3] = [ResNet::R50, ResNet::R101, ResNet::R152];
+
+/// Evaluate one scalable architecture over the ResNet suite at the
+/// bucket-representative bitwidths.
+pub fn eval_scalable<E: TileEngine>(
+    name: &'static str,
+    arch: &ScalableKmm<E>,
+    multipliers: u64,
+    freq_mhz: f64,
+    widths: &[u32],
+) -> ArchColumn {
+    let rows = RESNETS
+        .iter()
+        .map(|&v| {
+            let cells = widths
+                .iter()
+                .map(|&w| {
+                    let wl = resnet(v, w);
+                    let s = schedule(&wl, arch).expect("within ceiling");
+                    let e = s.execution(w, arch.m, multipliers, freq_mhz);
+                    Cell {
+                        w,
+                        gops: e.gops(),
+                        eff: e.mbit_efficiency(),
+                    }
+                })
+                .collect();
+            ModelRow {
+                model: v.name(),
+                cells,
+            }
+        })
+        .collect();
+    ArchColumn {
+        name,
+        freq_mhz,
+        multipliers,
+        rows,
+    }
+}
+
+/// Prior-work context rows quoted from the paper (Table I).
+pub const TABLE1_PRIOR: &[(&str, &str, u32, f64, f64)] = &[
+    // (work, model, w, GOPS, 8-bit mults/multiplier/cycle)
+    ("TNNLS'22 [25]", "ResNet-50", 8, 1519.0, 0.645),
+    ("TNNLS'22 [25]", "VGG16", 8, 1295.0, 0.550),
+    ("TCAD'22 [26]", "Bayes ResNet-18", 8, 1590.0, 0.639),
+    ("TCAD'22 [26]", "Bayes VGG11", 8, 534.0, 0.206),
+    ("Entropy'22 [27]", "R-CNN (ResNet-50)", 8, 719.0, 0.696),
+    ("Entropy'22 [27]", "R-CNN (VGG16)", 8, 865.0, 0.837),
+];
+
+/// Paper-reported cells for our two Table I columns (validation targets).
+pub const TABLE1_PAPER_KMM_GOPS: [[f64; 3]; 3] = [
+    [2147.0, 716.0, 537.0],
+    [2347.0, 782.0, 587.0],
+    [2435.0, 812.0, 609.0],
+];
+pub const TABLE1_PAPER_KMM_EFF: [[f64; 3]; 3] = [
+    [0.792, 1.055, 0.792],
+    [0.865, 1.154, 0.865],
+    [0.898, 1.197, 0.898],
+];
+
+/// Table I — precision-scalable KMM vs baseline MM + prior works on
+/// Arria 10 GX 1150 (ResNet-50/101/152; buckets w ≤ 8 / 9–14 / 15–16).
+pub fn table1() -> (String, Vec<ArchColumn>) {
+    // 64×64 MXU multipliers + 64 in the Post-GEMM unit (§V-B).
+    let mults = (64 * 64 + 64) as u64;
+    let mm = eval_scalable(
+        "MM2 64x64",
+        &ScalableKmm::paper_mm(),
+        mults,
+        arria_system::MM2_MHZ,
+        &[8, 12, 16],
+    );
+    let kmm = eval_scalable(
+        "KMM2 64x64",
+        &ScalableKmm::paper_kmm(),
+        mults,
+        arria_system::KMM2_MHZ,
+        &[8, 12, 16],
+    );
+
+    let mut out = String::from(
+        "Table I — precision-scalable KMM vs baseline MM and prior work\n\
+         (buckets: w 1-8 / 9-14 / 15-16 at representative w = 8 / 12 / 16)\n\n",
+    );
+    let mut prior = Table::new(&["prior work", "model", "w", "GOPS", "eff"]);
+    for &(work, model, w, gops, eff) in TABLE1_PRIOR {
+        prior.row(vec![
+            work.into(),
+            model.into(),
+            w.to_string(),
+            f(gops, 0),
+            f(eff, 3),
+        ]);
+    }
+    out.push_str(&prior.render());
+    out.push('\n');
+
+    let mut t = Table::new(&[
+        "arch / model",
+        "GOPS w<=8",
+        "GOPS 9-14",
+        "GOPS 15-16",
+        "eff w<=8",
+        "eff 9-14",
+        "eff 15-16",
+    ]);
+    for col in [&mm, &kmm] {
+        for row in &col.rows {
+            t.row(vec![
+                format!("{} {}", col.name, row.model),
+                f(row.cells[0].gops, 0),
+                f(row.cells[1].gops, 0),
+                f(row.cells[2].gops, 0),
+                f(row.cells[0].eff, 3),
+                f(row.cells[1].eff, 3),
+                f(row.cells[2].eff, 3),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nresources (model): DSPs={} (paper 1056)  multipliers={}  \
+         freq MM/KMM = {}/{} MHz (system critical path, §V-B)\n",
+        thousands(mults.div_ceil(4)),
+        thousands(mults),
+        arria_system::MM2_MHZ,
+        arria_system::KMM2_MHZ,
+    ));
+    (out, vec![mm, kmm])
+}
+
+/// Paper-reported FFIP+KMM efficiencies (Table II validation targets).
+pub const TABLE2_PAPER_FFIP_EFF: [f64; 3] = [1.521, 1.655, 1.707];
+pub const TABLE2_PAPER_FFIP_KMM_EFF: [[f64; 3]; 3] = [
+    [1.536, 2.048, 1.536],
+    [1.679, 2.239, 1.679],
+    [1.742, 2.322, 1.742],
+];
+
+/// Table II — FFIP \[6\] vs combined FFIP+KMM₂ precision-scalable arrays.
+pub fn table2() -> (String, Vec<ArchColumn>) {
+    // FFIP 64×64: 64×32 array multipliers + 32 post-GEMM (§V-B).
+    let mults = (64 * 32 + 32) as u64;
+    let ffip_only = eval_scalable(
+        "FFIP 64x64",
+        &ScalableKmm {
+            mxu: FfipMxu::paper_64(),
+            m: 8,
+            kmm_enabled: false,
+        },
+        mults,
+        arria_system::FFIP_MHZ,
+        &[8],
+    );
+    let ffip_kmm = eval_scalable(
+        "FFIP+KMM2 64x64",
+        &ScalableKmm::paper_ffip_kmm(),
+        mults,
+        arria_system::FFIP_KMM2_MHZ,
+        &[8, 12, 16],
+    );
+    let ffip_kmm_packed = eval_scalable(
+        "FFIP+KMM2 64x64 (DSP-packed)",
+        &ScalableKmm::paper_ffip_kmm(),
+        mults,
+        arria_system::FFIP_KMM2_PACKED_MHZ,
+        &[8, 12, 16],
+    );
+
+    let mut out = String::from(
+        "Table II — FFIP [6] vs FFIP+KMM2 precision-scalable systolic arrays\n\n",
+    );
+    let mut t = Table::new(&[
+        "arch / model",
+        "GOPS w<=8",
+        "GOPS 9-14",
+        "GOPS 15-16",
+        "eff w<=8",
+        "eff 9-14",
+        "eff 15-16",
+    ]);
+    for col in [&ffip_only, &ffip_kmm, &ffip_kmm_packed] {
+        for row in &col.rows {
+            let c = |i: usize, g: bool| -> String {
+                match row.cells.get(i) {
+                    Some(cell) => f(if g { cell.gops } else { cell.eff }, if g { 0 } else { 3 }),
+                    None => "-".into(),
+                }
+            };
+            t.row(vec![
+                format!("{} {}", col.name, row.model),
+                c(0, true),
+                c(1, true),
+                c(2, true),
+                c(0, false),
+                c(1, false),
+                c(2, false),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nmultipliers={} (64x32 FFIP array + 32 post-GEMM); \
+         freq FFIP/FFIP+KMM/packed = {}/{}/{} MHz\n",
+        thousands(mults),
+        arria_system::FFIP_MHZ,
+        arria_system::FFIP_KMM2_MHZ,
+        arria_system::FFIP_KMM2_PACKED_MHZ,
+    ));
+    (out, vec![ffip_only, ffip_kmm, ffip_kmm_packed])
+}
+
+/// The paper's Table III design points.
+pub fn table3_designs() -> Vec<FixedSynth> {
+    let cfg = ArrayCfg {
+        x: 32,
+        y: 32,
+        p: 4,
+    };
+    let mut out = Vec::new();
+    for &(w, n) in &[(32u32, 2u32), (64, 4)] {
+        for pipelined in [false, true] {
+            out.push(synth_fixed(FixedArch::Mm1, w, n, &cfg, pipelined));
+        }
+        for pipelined in [false, true] {
+            out.push(synth_fixed(FixedArch::Ksmm, w, n, &cfg, pipelined));
+        }
+        out.push(synth_fixed(FixedArch::Kmm, w, n, &cfg, true));
+    }
+    out
+}
+
+/// Paper-reported Table III values for shape validation:
+/// (arch, w, pipelined, dsps, alms, registers, fmax, roof_gops).
+pub const TABLE3_PAPER: &[(&str, u32, bool, u64, u64, u64, f64, f64)] = &[
+    ("MM1", 32, false, 2048, 64_000, 165_000, 450.0, 922.0),
+    ("MM1", 32, true, 2048, 69_000, 225_000, 569.0, 1165.0),
+    ("KSMM", 32, false, 1536, 138_000, 306_000, 386.0, 791.0),
+    ("KSMM", 32, true, 1536, 147_000, 481_000, 537.0, 1100.0),
+    ("KMM", 32, true, 1536, 68_000, 257_000, 622.0, 1274.0),
+    ("MM1", 64, false, 8704, 240_000, 237_000, 203.0, 416.0),
+    ("MM1", 64, true, 8704, 266_000, 712_000, 341.0, 698.0),
+    ("KSMM", 64, false, 4608, 554_000, 447_000, 147.0, 302.0),
+    ("KSMM", 64, true, 4608, 557_000, 1_126_000, 345.0, 707.0),
+    ("KMM", 64, true, 4608, 212_000, 806_000, 552.0, 1131.0),
+];
+
+/// Table III — fixed-precision MM₁ / KSMM / KMM 32×32 arrays in isolation
+/// on Agilex 7 (w = 32, n = 2 and w = 64, n = 4).
+pub fn table3() -> (String, Vec<FixedSynth>) {
+    let designs = table3_designs();
+    let mut t = Table::new(&[
+        "design",
+        "w",
+        "pipelined",
+        "DSPs",
+        "ALMs",
+        "registers",
+        "Fmax (MHz)",
+        "roof (GOPS)",
+    ]);
+    for d in &designs {
+        t.row(vec![
+            format!("{:?}{}", d.arch, if d.n > 1 { format!("_{}", d.n) } else { String::new() }),
+            d.w.to_string(),
+            d.pipelined.to_string(),
+            thousands(d.dsps),
+            thousands(d.alms),
+            thousands(d.registers),
+            f(d.fmax_mhz, 0),
+            f(d.throughput_roof_gops, 0),
+        ]);
+    }
+    let out = format!(
+        "Table III — fixed-precision architectures in isolation (32x32 PEs, Agilex 7 model)\n\n{}",
+        t.render()
+    );
+    (out, designs)
+}
+
+/// DSP counts per Table III column are exact functions of the algorithm
+/// (n² vs 3^r sub-multiplications) — exposed for the bench's check.
+pub fn table3_dsp_expectations() -> Vec<(FixedArch, u32, u64)> {
+    vec![
+        (FixedArch::Mm1, 2, 2048),
+        (FixedArch::Ksmm, 2, 1536),
+        (FixedArch::Kmm, 2, 1536),
+        // Paper reports 8704 for MM₁^[64] — the model's exact n²-mults
+        // count is 8192 (+6% synthesis slack in the paper's build).
+        (FixedArch::Mm1, 4, 8192),
+        (FixedArch::Ksmm, 4, 4608),
+        (FixedArch::Kmm, 4, 4608),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I shape claims: (a) KMM's 9–14 bucket efficiency exceeds the
+    /// MM roof of 1 and approaches 4/3; (b) MM and KMM agree at w ≤ 8;
+    /// (c) KMM beats every prior-work efficiency; (d) GOPS at 9–14 is
+    /// ~4/3 of the MM architecture's.
+    #[test]
+    fn table1_shape() {
+        let (_, cols) = table1();
+        let (mm, kmm) = (&cols[0], &cols[1]);
+        for (mr, kr) in mm.rows.iter().zip(&kmm.rows) {
+            assert!(kr.cells[1].eff > 1.0, "{}: {}", kr.model, kr.cells[1].eff);
+            assert!(kr.cells[1].eff <= 4.0 / 3.0 + 1e-9);
+            // Same w≤8 efficiency (same schedule, same array).
+            assert!((mr.cells[0].eff - kr.cells[0].eff).abs() < 1e-9);
+            // 4/3 GOPS advantage in the window (modulo the small clock
+            // difference between the two builds).
+            let adv = kr.cells[1].gops / mr.cells[1].gops;
+            let clock = kmm.freq_mhz / mm.freq_mhz;
+            assert!((adv / clock - 4.0 / 3.0).abs() < 0.02, "adv = {adv}");
+        }
+        let best_prior = TABLE1_PRIOR.iter().map(|p| p.4).fold(0.0, f64::max);
+        for kr in &kmm.rows {
+            assert!(kr.cells[1].eff > best_prior);
+        }
+    }
+
+    /// Our computed Table I KMM cells must track the paper's within 13%.
+    /// The residual (our model is 5–12% optimistic) is the SoC memory
+    /// subsystem the paper's build pays for and our deterministic model
+    /// deliberately omits; every *ratio* (bucket scaling, KMM-vs-MM
+    /// advantage) matches exactly — see EXPERIMENTS.md §Table I.
+    #[test]
+    fn table1_matches_paper_within_tolerance() {
+        let (_, cols) = table1();
+        let kmm = &cols[1];
+        for (ri, row) in kmm.rows.iter().enumerate() {
+            for (ci, cell) in row.cells.iter().enumerate() {
+                let pg = TABLE1_PAPER_KMM_GOPS[ri][ci];
+                let pe = TABLE1_PAPER_KMM_EFF[ri][ci];
+                let dg = cell.gops / pg - 1.0;
+                let de = cell.eff / pe - 1.0;
+                assert!(
+                    dg.abs() < 0.13 && dg > -0.02,
+                    "{} w={} GOPS {} vs paper {}",
+                    row.model,
+                    cell.w,
+                    cell.gops,
+                    pg
+                );
+                assert!(
+                    de.abs() < 0.13 && de > -0.02,
+                    "{} w={} eff {} vs paper {}",
+                    row.model,
+                    cell.w,
+                    cell.eff,
+                    pe
+                );
+            }
+        }
+    }
+
+    /// Table II shape: FFIP efficiency exceeds the MM roof of 1 and
+    /// approaches 2; FFIP+KMM's 9–14 bucket exceeds 2 and approaches 8/3.
+    #[test]
+    fn table2_shape() {
+        let (_, cols) = table2();
+        let (ffip, ffip_kmm) = (&cols[0], &cols[1]);
+        for row in &ffip.rows {
+            assert!(row.cells[0].eff > 1.4 && row.cells[0].eff < 2.0);
+        }
+        for (ri, row) in ffip_kmm.rows.iter().enumerate() {
+            assert!(row.cells[1].eff > 2.0, "{}", row.cells[1].eff);
+            assert!(row.cells[1].eff < 8.0 / 3.0);
+            // Within 16% of the paper, never below (same optimism as
+            // Table I — see EXPERIMENTS.md §Table II).
+            let pe = TABLE2_PAPER_FFIP_KMM_EFF[ri][1];
+            let d = row.cells[1].eff / pe - 1.0;
+            assert!(
+                d < 0.17 && d > -0.02,
+                "eff {} vs paper {}",
+                row.cells[1].eff,
+                pe
+            );
+        }
+    }
+
+    /// Table III shape: DSP counts exact; KMM uses far fewer ALMs than
+    /// KSMM; KMM clocks highest; paper resource values tracked loosely
+    /// (≤ 35% — it's a synthesis substitute, not a re-synthesis).
+    #[test]
+    fn table3_shape() {
+        let (_, designs) = table3();
+        for (arch, n, dsps) in table3_dsp_expectations() {
+            let d = designs
+                .iter()
+                .find(|d| d.arch == arch && d.n == n)
+                .unwrap();
+            assert_eq!(d.dsps, dsps, "{arch:?} n={n}");
+        }
+        for &(w, n) in &[(32u32, 2u32), (64, 4)] {
+            let kmm = designs.iter().find(|d| d.arch == FixedArch::Kmm && d.w == w).unwrap();
+            let ksmm = designs
+                .iter()
+                .filter(|d| d.arch == FixedArch::Ksmm && d.w == w)
+                .min_by(|a, b| a.alms.cmp(&b.alms))
+                .unwrap();
+            let mm1 = designs
+                .iter()
+                .filter(|d| d.arch == FixedArch::Mm1 && d.w == w)
+                .map(|d| d.fmax_mhz)
+                .fold(0.0, f64::max);
+            assert!(kmm.alms * 2 < ksmm.alms, "w={w}: KMM ALMs {} vs KSMM {}", kmm.alms, ksmm.alms);
+            assert!(kmm.fmax_mhz > mm1, "KMM clocks above best MM1 (w={w})");
+            assert_eq!(n, kmm.n);
+        }
+    }
+
+    #[test]
+    fn table3_tracks_paper_values() {
+        let (_, designs) = table3();
+        for &(arch, w, pipelined, dsps, alms, _regs, fmax, _roof) in TABLE3_PAPER {
+            let a = match arch {
+                "MM1" => FixedArch::Mm1,
+                "KSMM" => FixedArch::Ksmm,
+                _ => FixedArch::Kmm,
+            };
+            let d = designs
+                .iter()
+                .find(|d| d.arch == a && d.w == w && d.pipelined == pipelined)
+                .unwrap();
+            // DSPs exact except the paper's MM₁^[64] +6% synthesis slack.
+            assert!(
+                (d.dsps as f64 / dsps as f64 - 1.0).abs() < 0.07,
+                "{arch} w={w}: DSPs {} vs paper {}",
+                d.dsps,
+                dsps
+            );
+            // Calibrated ALM model: all ten points within 8%.
+            assert!(
+                (d.alms as f64 / alms as f64 - 1.0).abs() < 0.08,
+                "{arch} w={w} pipelined={pipelined}: ALMs {} vs paper {}",
+                d.alms,
+                alms
+            );
+            assert!(
+                (d.fmax_mhz / fmax - 1.0).abs() < 0.10,
+                "{arch} w={w} pipelined={pipelined}: fmax {} vs paper {}",
+                d.fmax_mhz,
+                fmax
+            );
+        }
+    }
+
+    /// Register trends (the paper's qualitative claim — absolute counts
+    /// depend on synthesis retiming we do not model): pipelined variants
+    /// carry far more registers; KMM carries its post-adder pipeline.
+    #[test]
+    fn table3_register_trends() {
+        let (_, designs) = table3();
+        for &(w, n) in &[(32u32, 2u32), (64, 4)] {
+            let get = |a: FixedArch, p: bool| {
+                designs
+                    .iter()
+                    .find(|d| d.arch == a && d.w == w && d.pipelined == p)
+                    .unwrap()
+                    .registers
+            };
+            assert!(get(FixedArch::Mm1, true) > get(FixedArch::Mm1, false), "w={w}");
+            assert!(get(FixedArch::Ksmm, true) > get(FixedArch::Ksmm, false), "w={w}");
+            // KMM ≥ unpipelined baselines (its natural pipeline ranks).
+            assert!(get(FixedArch::Kmm, true) > get(FixedArch::Mm1, false).min(get(FixedArch::Ksmm, false)));
+            let _ = n;
+        }
+    }
+
+    #[test]
+    fn renders_nonempty() {
+        assert!(table1().0.len() > 200);
+        assert!(table2().0.len() > 200);
+        assert!(table3().0.len() > 200);
+    }
+}

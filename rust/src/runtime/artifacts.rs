@@ -1,0 +1,239 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every AOT-lowered entrypoint (HLO-text path, input/output shapes and
+//! dtypes). The Rust runtime loads the manifest once and compiles each
+//! referenced module on the PJRT CPU client.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Tensor shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entrypoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entrypoint {
+    pub name: String,
+    /// HLO-text file, relative to the artifacts directory.
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// GEMM tile size the tile entrypoints were lowered at.
+    pub tile: usize,
+    pub entrypoints: Vec<Entrypoint>,
+}
+
+/// Manifest loading/validation failure.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Parse(#[from] crate::util::json::JsonError),
+    #[error("manifest missing field `{0}`")]
+    Missing(&'static str),
+    #[error("artifact file missing: {0}")]
+    MissingArtifact(PathBuf),
+}
+
+fn specs(j: &Json) -> Result<Vec<TensorSpec>, ManifestError> {
+    let arr = j.as_array().ok_or(ManifestError::Missing("inputs/outputs"))?;
+    arr.iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")
+                .and_then(|x| x.flatten_i64().ok())
+                .ok_or(ManifestError::Missing("shape"))?
+                .into_iter()
+                .map(|v| v as usize)
+                .collect();
+            let dtype = s
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or(ManifestError::Missing("dtype"))?
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`; every referenced HLO file
+    /// must exist.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|source| ManifestError::Io {
+            path: path.clone(),
+            source,
+        })?;
+        let j = Json::parse(&text)?;
+        let tile = j
+            .get("tile")
+            .and_then(Json::as_i64)
+            .ok_or(ManifestError::Missing("tile"))? as usize;
+        let eps = j
+            .get("entrypoints")
+            .and_then(Json::as_object)
+            .ok_or(ManifestError::Missing("entrypoints"))?;
+        let mut entrypoints = Vec::new();
+        for (name, e) in eps {
+            let rel = e
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or(ManifestError::Missing("path"))?;
+            let full = dir.join(rel);
+            if !full.exists() {
+                return Err(ManifestError::MissingArtifact(full));
+            }
+            entrypoints.push(Entrypoint {
+                name: name.clone(),
+                path: PathBuf::from(rel),
+                inputs: specs(e.get("inputs").ok_or(ManifestError::Missing("inputs"))?)?,
+                outputs: specs(e.get("outputs").ok_or(ManifestError::Missing("outputs"))?)?,
+            });
+        }
+        Ok(Manifest {
+            dir,
+            tile,
+            entrypoints,
+        })
+    }
+
+    /// Find an entrypoint by name.
+    pub fn entrypoint(&self, name: &str) -> Option<&Entrypoint> {
+        self.entrypoints.iter().find(|e| e.name == name)
+    }
+
+    /// Absolute path of an entrypoint's HLO file.
+    pub fn hlo_path(&self, e: &Entrypoint) -> PathBuf {
+        self.dir.join(&e.path)
+    }
+}
+
+/// Default artifacts directory: `$KMM_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("KMM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        for f in files {
+            std::fs::write(dir.join(f), "HloModule m\n").unwrap();
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("kmm_manifest_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    const BODY: &str = r#"{
+      "tile": 128,
+      "entrypoints": {
+        "gemm_mm1_tile": {
+          "path": "gemm_mm1_tile.hlo.txt",
+          "inputs": [
+            {"shape": [128, 128], "dtype": "int64"},
+            {"shape": [128, 128], "dtype": "int64"}
+          ],
+          "outputs": [{"shape": [128, 128], "dtype": "int64"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn loads_valid_manifest() {
+        let d = tmp("ok");
+        write_manifest(&d, BODY, &["gemm_mm1_tile.hlo.txt"]);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.tile, 128);
+        let e = m.entrypoint("gemm_mm1_tile").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![128, 128]);
+        assert_eq!(e.inputs[0].elements(), 16384);
+        assert_eq!(e.outputs[0].dtype, "int64");
+        assert!(m.hlo_path(e).exists());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rejects_missing_artifact_file() {
+        let d = tmp("missing");
+        write_manifest(&d, BODY, &[]);
+        match Manifest::load(&d) {
+            Err(ManifestError::MissingArtifact(p)) => {
+                assert!(p.ends_with("gemm_mm1_tile.hlo.txt"))
+            }
+            other => panic!("expected MissingArtifact, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        let d = tmp("bad");
+        write_manifest(&d, "{not json", &[]);
+        assert!(matches!(Manifest::load(&d), Err(ManifestError::Parse(_))));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_io_error() {
+        assert!(matches!(
+            Manifest::load("/nonexistent/kmm"),
+            Err(ManifestError::Io { .. })
+        ));
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must load and
+        // list the four entrypoints aot.py exports.
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts present");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in [
+            "gemm_mm1_tile",
+            "gemm_kmm2_tile",
+            "gemm_mm2_tile",
+            "mlp_fwd",
+        ] {
+            assert!(m.entrypoint(name).is_some(), "missing {name}");
+        }
+        assert_eq!(m.tile, 128);
+    }
+}

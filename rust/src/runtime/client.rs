@@ -1,0 +1,162 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! Rust hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! One compiled executable per entrypoint, cached for the lifetime of the
+//! runtime; Python is never on this path.
+
+use crate::runtime::artifacts::{Entrypoint, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// A typed host tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i64>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i64>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        HostTensor { shape, data }
+    }
+
+    /// Row-major element access for 2-D tensors.
+    pub fn at2(&self, i: usize, j: usize) -> i64 {
+        assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+}
+
+/// The PJRT-backed executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+    /// Executions performed (observability).
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and compile every manifest entrypoint.
+    pub fn load(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for e in &manifest.entrypoints {
+            let path = manifest.hlo_path(e);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", e.name))?;
+            exes.insert(e.name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            exes,
+            manifest,
+            executions: 0,
+        })
+    }
+
+    /// Convenience: load from an artifacts directory.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        Ok(Self::load(Manifest::load(dir)?)?)
+    }
+
+    /// The manifest this runtime serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Entrypoints available.
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.entrypoints.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    fn entry(&self, name: &str) -> Result<&Entrypoint> {
+        self.manifest
+            .entrypoint(name)
+            .with_context(|| format!("unknown entrypoint `{name}`"))
+    }
+
+    /// Execute `name` on host tensors, checking shapes against the
+    /// manifest. Returns the output tensors (the jax lowering wraps
+    /// outputs in a 1-tuple — unwrapped here).
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let e = self.entry(name)?.clone();
+        if inputs.len() != e.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                e.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, t) in e.inputs.iter().zip(inputs) {
+            if spec.shape != t.shape {
+                bail!(
+                    "{name}: input shape mismatch: manifest {:?} vs given {:?}",
+                    spec.shape,
+                    t.shape
+                );
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = match spec.dtype.as_str() {
+                "int64" => xla::Literal::vec1(&t.data).reshape(&dims)?,
+                "int32" => {
+                    let v: Vec<i32> = t.data.iter().map(|&x| x as i32).collect();
+                    xla::Literal::vec1(&v).reshape(&dims)?
+                }
+                other => bail!("{name}: unsupported input dtype {other}"),
+            };
+            literals.push(lit);
+        }
+        let exe = self.exes.get(name).expect("compiled at load");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.executions += 1;
+        // return_tuple=True lowering: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let spec = &e.outputs[0];
+        let data: Vec<i64> = match spec.dtype.as_str() {
+            "int64" => out.to_vec::<i64>()?,
+            "int32" => out.to_vec::<i32>()?.into_iter().map(i64::from).collect(),
+            other => bail!("{name}: unsupported output dtype {other}"),
+        };
+        Ok(vec![HostTensor::new(spec.shape.clone(), data)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_invariants() {
+        let t = HostTensor::new(vec![2, 3], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.at2(0, 2), 3);
+        assert_eq!(t.at2(1, 0), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn host_tensor_rejects_bad_shape() {
+        HostTensor::new(vec![2, 2], vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: AOT artifact loading and execution (L3 ↔ L2 boundary).
+//!
+//! Python lowers the L2 graph once (`make artifacts`); everything here
+//! consumes the emitted HLO text through the PJRT C API with no Python
+//! on the request path.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{default_dir, Entrypoint, Manifest, TensorSpec};
+pub use client::{HostTensor, Runtime};

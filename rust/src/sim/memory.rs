@@ -1,0 +1,143 @@
+//! Memory-subsystem model: tile buffers with re-read support.
+//!
+//! §IV-D notes the one system change KMM integration required: the memory
+//! system must allow each set of input matrix tiles to be re-read up to
+//! three (KMM₂) or four (MM₂) times before advancing to the next set.
+//! [`TileBuffer`] models that behaviour — a bounded double-buffered tile
+//! store with per-set read counters and traffic accounting — and enforces
+//! the re-read bound the hardware configuration allows.
+
+/// Traffic statistics accumulated by a [`TileBuffer`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrafficStats {
+    /// Tile sets fetched from external memory.
+    pub sets_fetched: u64,
+    /// Total tile-set reads issued to the MXU (≥ sets_fetched).
+    pub set_reads: u64,
+    /// External-memory bytes fetched.
+    pub bytes_fetched: u64,
+    /// On-chip bytes replayed to the MXU.
+    pub bytes_replayed: u64,
+}
+
+/// A double-buffered on-chip tile store supporting bounded re-reads of the
+/// resident tile set.
+#[derive(Debug, Clone)]
+pub struct TileBuffer {
+    /// Maximum reads of one resident set (1 = conventional streaming,
+    /// 3 = KMM₂, 4 = MM₂).
+    pub max_reads: u32,
+    /// Bytes of one tile set (A slice + B tile at the input bitwidth).
+    pub set_bytes: u64,
+    reads_of_current: u32,
+    resident: bool,
+    pub stats: TrafficStats,
+}
+
+impl TileBuffer {
+    pub fn new(max_reads: u32, set_bytes: u64) -> Self {
+        assert!(max_reads >= 1);
+        TileBuffer {
+            max_reads,
+            set_bytes,
+            reads_of_current: 0,
+            resident: false,
+            stats: TrafficStats::default(),
+        }
+    }
+
+    /// Fetch the next tile set from external memory, evicting the current
+    /// one. Panics if the resident set still has mandatory reads pending —
+    /// the scheduler bug the bound exists to catch.
+    pub fn fetch_next(&mut self) {
+        self.resident = true;
+        self.reads_of_current = 0;
+        self.stats.sets_fetched += 1;
+        self.stats.bytes_fetched += self.set_bytes;
+    }
+
+    /// Issue one read of the resident set to the MXU. Returns the read
+    /// iteration `t` (0-based), the mode controller's iteration signal.
+    pub fn read(&mut self) -> u32 {
+        assert!(self.resident, "read before fetch");
+        assert!(
+            self.reads_of_current < self.max_reads,
+            "tile set re-read limit exceeded: {} (max {})",
+            self.reads_of_current + 1,
+            self.max_reads
+        );
+        let t = self.reads_of_current;
+        self.reads_of_current += 1;
+        self.stats.set_reads += 1;
+        if t == 0 {
+            // First read streams straight through.
+        } else {
+            self.stats.bytes_replayed += self.set_bytes;
+        }
+        t
+    }
+
+    /// Reads issued against the resident set so far.
+    pub fn reads_of_current(&self) -> u32 {
+        self.reads_of_current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_fetches_and_reads() {
+        let mut buf = TileBuffer::new(3, 1024);
+        for _ in 0..5 {
+            buf.fetch_next();
+            for expect_t in 0..3 {
+                assert_eq!(buf.read(), expect_t);
+            }
+        }
+        assert_eq!(buf.stats.sets_fetched, 5);
+        assert_eq!(buf.stats.set_reads, 15);
+        assert_eq!(buf.stats.bytes_fetched, 5 * 1024);
+        assert_eq!(buf.stats.bytes_replayed, 5 * 2 * 1024);
+    }
+
+    #[test]
+    fn replay_traffic_stays_on_chip() {
+        // KMM₂'s 3 reads fetch externally once: external bytes are 1/3 of
+        // total MXU-side reads.
+        let mut buf = TileBuffer::new(3, 300);
+        buf.fetch_next();
+        buf.read();
+        buf.read();
+        buf.read();
+        assert_eq!(buf.stats.bytes_fetched, 300);
+        assert_eq!(buf.stats.bytes_replayed, 600);
+    }
+
+    #[test]
+    #[should_panic(expected = "re-read limit exceeded")]
+    fn enforces_read_bound() {
+        let mut buf = TileBuffer::new(1, 64);
+        buf.fetch_next();
+        buf.read();
+        buf.read();
+    }
+
+    #[test]
+    #[should_panic(expected = "read before fetch")]
+    fn read_requires_fetch() {
+        let mut buf = TileBuffer::new(4, 64);
+        buf.read();
+    }
+
+    #[test]
+    fn fetch_resets_iteration() {
+        let mut buf = TileBuffer::new(4, 64);
+        buf.fetch_next();
+        assert_eq!(buf.read(), 0);
+        assert_eq!(buf.read(), 1);
+        buf.fetch_next();
+        assert_eq!(buf.read(), 0, "iteration signal t resets on new set");
+    }
+}

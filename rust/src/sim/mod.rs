@@ -1,0 +1,16 @@
+//! Cycle-level GEMM simulation — the substitute for the paper's FPGA
+//! testbed throughput measurements (§V-B: the authors themselves use "an
+//! accurate throughput estimation model based on \[their\] highly
+//! deterministic and time-predictable system implementation"; we
+//! re-implement that model and validate it against a cycle-stepped
+//! pipeline simulator on small arrays).
+
+pub mod gemm;
+pub mod memory;
+pub mod tiler;
+pub mod trace;
+
+pub use gemm::{run_functional, simulate_cycles, GemmStats};
+pub use memory::{TileBuffer, TrafficStats};
+pub use tiler::{TileGrid, TileJob};
+pub use trace::{Trace, TraceEntry};

@@ -1,0 +1,180 @@
+//! GEMM tiling for systolic execution — §IV-D System Integration.
+//!
+//! Input matrices of arbitrary size are divided into tiles and fed to the
+//! MXU one by one: `B` is chunked into X×Y stationary tiles (zero-padded at
+//! the edges); for each `B` tile, every `A` row streams its matching X-wide
+//! slice. Partial tile products accumulate *outside* the MXU (the standard
+//! GEMM tile accumulator the precision-scalable modes also reuse).
+
+use crate::algo::matrix::Mat;
+
+/// The tile grid of one GEMM onto an X×Y array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGrid {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub x: usize,
+    pub y: usize,
+}
+
+/// One stationary-tile job: stream all `rows` A-rows against B-tile
+/// `(kb, nb)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileJob {
+    /// K-dimension tile index (which X-wide slice of A/B rows).
+    pub kb: usize,
+    /// N-dimension tile index (which Y-wide slice of B cols).
+    pub nb: usize,
+    /// A-rows streamed (always the full M — row blocking happens upstream).
+    pub rows: usize,
+}
+
+impl TileGrid {
+    pub fn new(m: usize, k: usize, n: usize, x: usize, y: usize) -> Self {
+        assert!(m > 0 && k > 0 && n > 0 && x > 0 && y > 0);
+        TileGrid { m, k, n, x, y }
+    }
+
+    /// Tiles along K.
+    pub fn k_tiles(&self) -> usize {
+        self.k.div_ceil(self.x)
+    }
+
+    /// Tiles along N.
+    pub fn n_tiles(&self) -> usize {
+        self.n.div_ceil(self.y)
+    }
+
+    /// Total stationary-tile jobs.
+    pub fn jobs(&self) -> usize {
+        self.k_tiles() * self.n_tiles()
+    }
+
+    /// Iterate jobs in K-major order (accumulation-friendly: all K tiles
+    /// of one output column block complete consecutively).
+    pub fn iter_jobs(&self) -> impl Iterator<Item = TileJob> + '_ {
+        let (kt, nt, m) = (self.k_tiles(), self.n_tiles(), self.m);
+        (0..nt).flat_map(move |nb| (0..kt).map(move |kb| TileJob { kb, nb, rows: m }))
+    }
+
+    /// Extract (zero-padded) A tile for K-block `kb`: M×X.
+    pub fn a_tile(&self, a: &Mat, kb: usize) -> Mat {
+        assert_eq!((a.rows, a.cols), (self.m, self.k));
+        Mat::from_fn(self.m, self.x, |i, xx| {
+            let kk = kb * self.x + xx;
+            if kk < self.k {
+                a[(i, kk)]
+            } else {
+                0
+            }
+        })
+    }
+
+    /// Extract (zero-padded) B tile `(kb, nb)`: X×Y.
+    pub fn b_tile(&self, b: &Mat, kb: usize, nb: usize) -> Mat {
+        assert_eq!((b.rows, b.cols), (self.k, self.n));
+        Mat::from_fn(self.x, self.y, |xx, yy| {
+            let kk = kb * self.x + xx;
+            let nn = nb * self.y + yy;
+            if kk < self.k && nn < self.n {
+                b[(kk, nn)]
+            } else {
+                0
+            }
+        })
+    }
+
+    /// Logical (unpadded) multiply-accumulate count: `M·K·N`.
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.n) as u64
+    }
+
+    /// Padded MAC slots the array actually cycles through.
+    pub fn padded_macs(&self) -> u64 {
+        (self.m * self.k_tiles() * self.x * self.n_tiles() * self.y) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matrix::{matmul_oracle, MatAcc};
+    use crate::arch::mxu::SystolicSpec;
+    use crate::util::prop::{forall, prop_assert_eq, Config};
+
+    #[test]
+    fn tile_counts() {
+        let g = TileGrid::new(10, 100, 30, 64, 64);
+        assert_eq!(g.k_tiles(), 2);
+        assert_eq!(g.n_tiles(), 1);
+        assert_eq!(g.jobs(), 2);
+        let g2 = TileGrid::new(10, 64, 64, 64, 64);
+        assert_eq!(g2.jobs(), 1);
+    }
+
+    #[test]
+    fn job_iteration_covers_grid() {
+        let g = TileGrid::new(3, 130, 70, 64, 64);
+        let jobs: Vec<_> = g.iter_jobs().collect();
+        assert_eq!(jobs.len(), g.jobs());
+        assert_eq!(jobs.len(), 3 * 2);
+        assert!(jobs.iter().all(|j| j.rows == 3));
+        // K-major within each N block.
+        assert_eq!((jobs[0].kb, jobs[0].nb), (0, 0));
+        assert_eq!((jobs[1].kb, jobs[1].nb), (1, 0));
+        assert_eq!((jobs[2].kb, jobs[2].nb), (2, 0));
+        assert_eq!((jobs[3].kb, jobs[3].nb), (0, 1));
+    }
+
+    #[test]
+    fn padded_tiles_reassemble_gemm() {
+        // Accumulating tile products over the grid reproduces the oracle —
+        // the out-of-MXU accumulation path (§IV-D).
+        forall(Config::default().cases(30), |rng| {
+            let (m, k, n) = (rng.range(1, 7), rng.range(1, 20), rng.range(1, 12));
+            let (x, y) = (rng.range(1, 6), rng.range(1, 6));
+            let g = TileGrid::new(m, k, n, x, y);
+            let spec = SystolicSpec { x, y, p: 2 };
+            let a = Mat::random(m, k, 8, rng);
+            let b = Mat::random(k, n, 8, rng);
+            let mut acc = MatAcc::zeros(m, n);
+            for job in g.iter_jobs() {
+                let at = g.a_tile(&a, job.kb);
+                let bt = g.b_tile(&b, job.kb, job.nb);
+                let part = spec.tile_product(&at, &bt);
+                for i in 0..m {
+                    for yy in 0..y {
+                        let nn = job.nb * y + yy;
+                        if nn < n {
+                            acc[(i, nn)] += part[(i, yy)];
+                        }
+                    }
+                }
+            }
+            prop_assert_eq(acc, matmul_oracle(&a, &b), "tiled == oracle")
+        });
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let g = TileGrid::new(2, 3, 3, 4, 4);
+        let a = Mat::from_rows(2, 3, &[1, 2, 3, 4, 5, 6]);
+        let at = g.a_tile(&a, 0);
+        assert_eq!(at[(0, 3)], 0);
+        assert_eq!(at[(1, 2)], 6);
+        let b = Mat::from_rows(3, 3, &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let bt = g.b_tile(&b, 0, 0);
+        assert_eq!(bt[(3, 0)], 0);
+        assert_eq!(bt[(0, 3)], 0);
+        assert_eq!(bt[(2, 2)], 9);
+    }
+
+    #[test]
+    fn mac_accounting() {
+        let g = TileGrid::new(10, 100, 30, 64, 64);
+        assert_eq!(g.macs(), 10 * 100 * 30);
+        assert_eq!(g.padded_macs(), 10 * 128 * 64);
+        assert!(g.padded_macs() > g.macs());
+    }
+}

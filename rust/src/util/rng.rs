@@ -1,0 +1,189 @@
+//! Deterministic pseudo-random number generation for tests, property
+//! harnesses, and synthetic workload generation.
+//!
+//! The vendored dependency set has no `rand` crate, so we implement
+//! SplitMix64 (Steele et al., "Fast splittable pseudorandom number
+//! generators", OOPSLA 2014). It is statistically strong enough for test
+//! input generation and is fully deterministic from its seed, which keeps
+//! every property-test failure reproducible.
+
+/// SplitMix64 PRNG. One u64 of state; each `next_u64` advances by the
+/// golden-gamma constant and mixes.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Equal seeds yield equal streams.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be nonzero.
+    /// Uses Lemire-style rejection to avoid modulo bias.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "Rng::below requires bound > 0");
+        // Rejection sampling on the widening multiply.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]`.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        if lo == 0 && hi == u64::MAX {
+            return self.next_u64();
+        }
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]` for usize.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// A uniformly random unsigned value of exactly `w` bits (top bit free,
+    /// i.e. uniform over `[0, 2^w)`), `1 <= w <= 64`.
+    pub fn bits(&mut self, w: u32) -> u64 {
+        assert!((1..=64).contains(&w));
+        if w == 64 {
+            self.next_u64()
+        } else {
+            self.next_u64() & ((1u64 << w) - 1)
+        }
+    }
+
+    /// Random bool with probability `num/denom`.
+    pub fn chance(&mut self, num: u64, denom: u64) -> bool {
+        self.below(denom) < num
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element of a non-empty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Derive an independent child generator (split).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for bound in [1u64, 2, 3, 10, 1000, u64::MAX] {
+            for _ in 0..200 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn below_covers_small_range() {
+        let mut r = Rng::new(11);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            seen[r.below(8) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn bits_width() {
+        let mut r = Rng::new(3);
+        for w in 1..=64u32 {
+            for _ in 0..50 {
+                let v = r.bits(w);
+                if w < 64 {
+                    assert!(v < (1u64 << w), "w={w} v={v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bits_hits_top_bit() {
+        // The top bit of an 8-bit draw should appear with ~1/2 probability.
+        let mut r = Rng::new(5);
+        let hits = (0..200).filter(|_| r.bits(8) >= 128).count();
+        assert!(hits > 50 && hits < 150, "hits={hits}");
+    }
+
+    #[test]
+    fn range_inclusive_bounds() {
+        let mut r = Rng::new(9);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..2000 {
+            let v = r.range(3, 6);
+            assert!((3..=6).contains(&v));
+            lo_seen |= v == 3;
+            hi_seen |= v == 6;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut xs: Vec<u32> = (0..32).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_independent() {
+        let mut r = Rng::new(17);
+        let mut c1 = r.split();
+        let mut c2 = r.split();
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+}

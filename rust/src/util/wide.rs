@@ -1,0 +1,369 @@
+//! 256-bit signed integer arithmetic (`I256`).
+//!
+//! KMM accumulates products of up-to-64-bit operands: a single product needs
+//! up to 128 bits and a GEMM accumulation adds `⌈log2 K⌉` more, while the
+//! Karatsuba recombination shifts partial sums left by up to `w` bits.
+//! `i128` therefore cannot hold every intermediate for `w = 64`; `I256`
+//! (two's-complement, four little-endian `u64` limbs) covers the full input
+//! domain with margin.
+//!
+//! Only the operations the algorithms need are implemented: add, sub, neg,
+//! left shift, comparison, and conversions. Each is exact (panics are
+//! impossible: 256 bits is provably sufficient headroom for w ≤ 64,
+//! d ≤ 2^32 workloads — see the bound check in `algo::kmm` tests).
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Neg, Shl, Sub, SubAssign};
+
+/// Two's-complement 256-bit signed integer. Limbs are little-endian.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct I256 {
+    limbs: [u64; 4],
+}
+
+pub const ZERO: I256 = I256 { limbs: [0; 4] };
+
+impl I256 {
+    /// The zero value.
+    pub const fn zero() -> Self {
+        ZERO
+    }
+
+    /// Construct from raw little-endian limbs.
+    pub const fn from_limbs(limbs: [u64; 4]) -> Self {
+        I256 { limbs }
+    }
+
+    /// Raw little-endian limbs.
+    pub const fn limbs(&self) -> [u64; 4] {
+        self.limbs
+    }
+
+    /// Sign-extend an `i128` into 256 bits.
+    pub fn from_i128(v: i128) -> Self {
+        let lo = v as u128;
+        let ext = if v < 0 { u64::MAX } else { 0 };
+        I256 {
+            limbs: [lo as u64, (lo >> 64) as u64, ext, ext],
+        }
+    }
+
+    /// Zero-extend a `u128` into 256 bits.
+    pub fn from_u128(v: u128) -> Self {
+        I256 {
+            limbs: [v as u64, (v >> 64) as u64, 0, 0],
+        }
+    }
+
+    /// Zero-extend a `u64`.
+    pub fn from_u64(v: u64) -> Self {
+        I256 {
+            limbs: [v, 0, 0, 0],
+        }
+    }
+
+    /// The full 128-bit product of two unsigned 64-bit values.
+    pub fn from_prod(a: u64, b: u64) -> Self {
+        Self::from_u128((a as u128) * (b as u128))
+    }
+
+    /// True iff the value is negative (top bit set).
+    pub fn is_negative(&self) -> bool {
+        self.limbs[3] >> 63 == 1
+    }
+
+    /// True iff zero.
+    pub fn is_zero(&self) -> bool {
+        self.limbs == [0; 4]
+    }
+
+    /// Checked narrowing to `i128`; `None` if out of range.
+    pub fn to_i128(&self) -> Option<i128> {
+        let lo = (self.limbs[0] as u128) | ((self.limbs[1] as u128) << 64);
+        let hi_ok_pos = self.limbs[2] == 0 && self.limbs[3] == 0 && (lo >> 127) == 0;
+        let hi_ok_neg =
+            self.limbs[2] == u64::MAX && self.limbs[3] == u64::MAX && (lo >> 127) == 1;
+        if hi_ok_pos || hi_ok_neg {
+            Some(lo as i128)
+        } else {
+            None
+        }
+    }
+
+    /// Checked narrowing to `u128`; `None` if negative or out of range.
+    pub fn to_u128(&self) -> Option<u128> {
+        if self.limbs[2] == 0 && self.limbs[3] == 0 {
+            Some((self.limbs[0] as u128) | ((self.limbs[1] as u128) << 64))
+        } else {
+            None
+        }
+    }
+
+    /// Wrapping addition (mod 2^256); overflow cannot occur for in-domain
+    /// KMM intermediates, making this exact in practice.
+    pub fn wrapping_add(self, rhs: Self) -> Self {
+        let mut out = [0u64; 4];
+        let mut carry = 0u64;
+        for i in 0..4 {
+            let (s1, c1) = self.limbs[i].overflowing_add(rhs.limbs[i]);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        I256 { limbs: out }
+    }
+
+    /// Wrapping negation.
+    pub fn wrapping_neg(self) -> Self {
+        let mut out = [0u64; 4];
+        let mut carry = 1u64;
+        for i in 0..4 {
+            let (s, c) = (!self.limbs[i]).overflowing_add(carry);
+            out[i] = s;
+            carry = c as u64;
+        }
+        I256 { limbs: out }
+    }
+
+    /// Left shift by `s` bits (0 ≤ s < 256).
+    pub fn shl(self, s: u32) -> Self {
+        assert!(s < 256, "shift amount out of range: {s}");
+        if s == 0 {
+            return self;
+        }
+        let limb_shift = (s / 64) as usize;
+        let bit_shift = s % 64;
+        let mut out = [0u64; 4];
+        for i in (limb_shift..4).rev() {
+            let src = i - limb_shift;
+            out[i] = self.limbs[src] << bit_shift;
+            if bit_shift > 0 && src > 0 {
+                out[i] |= self.limbs[src - 1] >> (64 - bit_shift);
+            }
+        }
+        I256 { limbs: out }
+    }
+
+    /// Number of significant bits in the absolute value (0 for zero).
+    /// Used to check bitwidth bounds in the complexity analysis.
+    pub fn abs_bits(&self) -> u32 {
+        let a = if self.is_negative() {
+            self.wrapping_neg()
+        } else {
+            *self
+        };
+        for i in (0..4).rev() {
+            if a.limbs[i] != 0 {
+                return 64 * i as u32 + (64 - a.limbs[i].leading_zeros());
+            }
+        }
+        0
+    }
+}
+
+impl Add for I256 {
+    type Output = I256;
+    fn add(self, rhs: Self) -> Self {
+        self.wrapping_add(rhs)
+    }
+}
+
+impl AddAssign for I256 {
+    fn add_assign(&mut self, rhs: Self) {
+        *self = self.wrapping_add(rhs);
+    }
+}
+
+impl Sub for I256 {
+    type Output = I256;
+    fn sub(self, rhs: Self) -> Self {
+        self.wrapping_add(rhs.wrapping_neg())
+    }
+}
+
+impl SubAssign for I256 {
+    fn sub_assign(&mut self, rhs: Self) {
+        *self = *self - rhs;
+    }
+}
+
+impl Neg for I256 {
+    type Output = I256;
+    fn neg(self) -> Self {
+        self.wrapping_neg()
+    }
+}
+
+impl Shl<u32> for I256 {
+    type Output = I256;
+    fn shl(self, s: u32) -> Self {
+        I256::shl(self, s)
+    }
+}
+
+impl Ord for I256 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        match (self.is_negative(), other.is_negative()) {
+            (true, false) => Ordering::Less,
+            (false, true) => Ordering::Greater,
+            // Same sign: two's-complement compares like unsigned.
+            _ => self.limbs.iter().rev().cmp(other.limbs.iter().rev()),
+        }
+    }
+}
+
+impl PartialOrd for I256 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl From<i128> for I256 {
+    fn from(v: i128) -> Self {
+        I256::from_i128(v)
+    }
+}
+
+impl From<u64> for I256 {
+    fn from(v: u64) -> Self {
+        I256::from_u64(v)
+    }
+}
+
+impl fmt::Debug for I256 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let Some(v) = self.to_i128() {
+            write!(f, "{v}")
+        } else {
+            write!(
+                f,
+                "I256(0x{:016x}{:016x}{:016x}{:016x})",
+                self.limbs[3], self.limbs[2], self.limbs[1], self.limbs[0]
+            )
+        }
+    }
+}
+
+impl fmt::Display for I256 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn i(v: i128) -> I256 {
+        I256::from_i128(v)
+    }
+
+    #[test]
+    fn roundtrip_i128() {
+        for v in [0i128, 1, -1, i128::MAX, i128::MIN, 42, -99999999999] {
+            assert_eq!(i(v).to_i128(), Some(v));
+        }
+    }
+
+    #[test]
+    fn add_sub_match_i128() {
+        let mut r = Rng::new(1);
+        for _ in 0..500 {
+            let a = r.next_u64() as i64 as i128;
+            let b = r.next_u64() as i64 as i128;
+            assert_eq!((i(a) + i(b)).to_i128(), Some(a + b));
+            assert_eq!((i(a) - i(b)).to_i128(), Some(a - b));
+        }
+    }
+
+    #[test]
+    fn neg_matches() {
+        for v in [0i128, 5, -5, 1 << 100, -(1 << 100)] {
+            assert_eq!((-i(v)).to_i128(), Some(-v));
+        }
+    }
+
+    #[test]
+    fn shl_matches_i128_in_range() {
+        let mut r = Rng::new(2);
+        for _ in 0..500 {
+            let a = r.bits(48) as i128;
+            let s = r.range(0, 70) as u32;
+            assert_eq!((i(a) << s).to_i128(), Some(a << s));
+        }
+    }
+
+    #[test]
+    fn shl_across_limbs() {
+        let v = I256::from_u64(1);
+        let shifted = v << 200;
+        assert_eq!(shifted.limbs()[3], 1u64 << 8);
+        assert_eq!(shifted.abs_bits(), 201);
+    }
+
+    #[test]
+    fn prod_exact() {
+        let mut r = Rng::new(3);
+        for _ in 0..500 {
+            let a = r.next_u64();
+            let b = r.next_u64();
+            assert_eq!(
+                I256::from_prod(a, b).to_u128(),
+                Some(a as u128 * b as u128)
+            );
+        }
+    }
+
+    #[test]
+    fn ordering_matches_i128() {
+        let mut r = Rng::new(4);
+        for _ in 0..500 {
+            let a = r.next_u64() as i64 as i128;
+            let b = r.next_u64() as i64 as i128;
+            assert_eq!(i(a).cmp(&i(b)), a.cmp(&b));
+        }
+    }
+
+    #[test]
+    fn ordering_mixed_signs_large() {
+        let big_pos = I256::from_u128(u128::MAX) << 64;
+        let big_neg = -big_pos;
+        assert!(big_neg < big_pos);
+        assert!(big_neg < I256::zero());
+        assert!(big_pos > I256::zero());
+    }
+
+    #[test]
+    fn to_i128_detects_overflow() {
+        let too_big = I256::from_u128(u128::MAX);
+        assert_eq!(too_big.to_i128(), None);
+        assert_eq!(too_big.to_u128(), Some(u128::MAX));
+        let way_big = too_big << 10;
+        assert_eq!(way_big.to_u128(), None);
+    }
+
+    #[test]
+    fn abs_bits_examples() {
+        assert_eq!(I256::zero().abs_bits(), 0);
+        assert_eq!(I256::from_u64(1).abs_bits(), 1);
+        assert_eq!(I256::from_u64(255).abs_bits(), 8);
+        assert_eq!(i(-256).abs_bits(), 9); // |−256| = 256 needs 9 bits
+        assert_eq!((I256::from_u64(1) << 255u32).abs_bits(), 256);
+    }
+
+    #[test]
+    fn karatsuba_headroom_bound() {
+        // Worst-case |value| during KMM on w=64, d=2^32:
+        // 2w + log2(d) + small constants < 256. Demonstrate with the max
+        // product accumulated 2^32 times then shifted by w.
+        let max_prod = I256::from_prod(u64::MAX, u64::MAX); // 128 bits
+        let mut acc = I256::zero();
+        // Simulate the bit growth by shifting instead of 2^32 adds.
+        acc += max_prod << 32; // ~160 bits
+        let recombined = acc << 64; // ~224 bits
+        assert!(recombined.abs_bits() <= 224);
+        assert!(!recombined.is_negative());
+    }
+}

@@ -1,0 +1,160 @@
+//! Cross-module algorithm integration: every multiplication algorithm in
+//! the crate (scalar and matrix, all digit counts) agrees with direct
+//! wide-integer arithmetic, and their counted costs remain consistent
+//! with each other under composition.
+
+use ::kmm::algo::matrix::{matmul_oracle, Mat};
+use ::kmm::algo::opcount::{OpKind, Tally};
+use ::kmm::algo::{kmm as kmm_alg, kmm_with_base, ksm, ksmm, mm, mm1_preaccum, sm, BaseMm};
+use ::kmm::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+use ::kmm::util::rng::Rng;
+
+#[test]
+fn all_scalar_algorithms_agree() {
+    forall(Config::default().cases(300), |rng| {
+        let n = *rng.pick(&[1u32, 2, 4, 8, 16]);
+        let w = rng.range(n.max(2) as usize, 64) as u32;
+        let (a, b) = (rng.bits(w), rng.bits(w));
+        let want = a as u128 * b as u128;
+        let mut t = Tally::new();
+        prop_assert_eq(sm(a, b, w, n, &mut t), want, "SM")?;
+        prop_assert_eq(ksm(a, b, w, n, &mut t), want, "KSM")
+    });
+}
+
+#[test]
+fn all_matrix_algorithms_agree() {
+    forall(Config::default().cases(120), |rng| {
+        let n = *rng.pick(&[1u32, 2, 4, 8]);
+        let w = rng.range(n.max(2) as usize, 40) as u32;
+        let (m, k, nn) = (rng.range(1, 6), rng.range(1, 8), rng.range(1, 6));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, nn, w, rng);
+        let want = matmul_oracle(&a, &b);
+        let mut t = Tally::new();
+        prop_assert_eq(mm(&a, &b, w, n, &mut t), want.clone(), "MM")?;
+        prop_assert_eq(ksmm(&a, &b, w, n, &mut t), want.clone(), "KSMM")?;
+        prop_assert_eq(kmm_alg(&a, &b, w, n, &mut t), want.clone(), "KMM")?;
+        prop_assert_eq(
+            kmm_with_base(&a, &b, w, n, BaseMm::PreAccum(4), &mut t),
+            want,
+            "KMM+Alg5",
+        )
+    });
+}
+
+#[test]
+fn kmm_multiplication_savings_vs_mm() {
+    // The headline complexity claim, measured on executed algorithms:
+    // KMM_n uses (3/4)^r of MM_n's multiplications, at every recursion
+    // depth, while both remain exact.
+    let mut rng = Rng::new(11);
+    for (n, w) in [(2u32, 16u32), (4, 32), (8, 64)] {
+        let r = n.trailing_zeros();
+        let a = Mat::random(6, 6, w, &mut rng);
+        let b = Mat::random(6, 6, w, &mut rng);
+        let mut tm = Tally::new();
+        mm(&a, &b, w, n, &mut tm);
+        let mut tk = Tally::new();
+        kmm_alg(&a, &b, w, n, &mut tk);
+        let mults_mm = tm.count_kind(OpKind::Mult);
+        let mults_kmm = tk.count_kind(OpKind::Mult);
+        assert_eq!(mults_mm, 6 * 6 * 6 * 4u128.pow(r));
+        assert_eq!(mults_kmm, 6 * 6 * 6 * 3u128.pow(r));
+    }
+}
+
+#[test]
+fn kmm_addition_growth_is_d2_not_d3() {
+    // §III: KMM's extra adds occur O(d²) times vs KSMM's O(d³).
+    let mut rng = Rng::new(13);
+    let w = 16;
+    let count_adds = |d: usize, rng: &mut Rng| {
+        let a = Mat::random(d, d, w, rng);
+        let b = Mat::random(d, d, w, rng);
+        let mut tk = Tally::new();
+        kmm_alg(&a, &b, w, 2, &mut tk);
+        let mut ts = Tally::new();
+        ksmm(&a, &b, w, 2, &mut ts);
+        (
+            tk.count_kind(OpKind::Add),
+            ts.count_kind(OpKind::Add),
+        )
+    };
+    let (kmm4, ksmm4) = count_adds(4, &mut rng);
+    let (kmm8, ksmm8) = count_adds(8, &mut rng);
+    // Doubling d: KMM extra adds grow ~4× (d²-dominated once the d³
+    // accumulations are excluded — compare via the non-accum metric):
+    // here adds include recombination only; KSMM adds grow ~8× (d³).
+    let kmm_growth = kmm8 as f64 / kmm4 as f64;
+    let ksmm_growth = ksmm8 as f64 / ksmm4 as f64;
+    assert!(kmm_growth < 4.6, "KMM add growth {kmm_growth}");
+    assert!(ksmm_growth > 7.0, "KSMM add growth {ksmm_growth}");
+}
+
+#[test]
+fn alg5_reduces_wide_accumulations() {
+    // §III-C: pre-accumulation trades p·ADD^[2w+wa] for 1 wide +
+    // (p−1) narrow — visible in the tally widths.
+    let mut rng = Rng::new(17);
+    let a = Mat::random(8, 16, 8, &mut rng);
+    let b = Mat::random(16, 8, 8, &mut rng);
+    let mut plain = Tally::new();
+    kmm_with_base(&a, &b, 8, 2, BaseMm::Plain, &mut plain);
+    let mut pre = Tally::new();
+    kmm_with_base(&a, &b, 8, 2, BaseMm::PreAccum(4), &mut pre);
+    // Same multiplication count either way.
+    assert_eq!(
+        plain.count_kind(OpKind::Mult),
+        pre.count_kind(OpKind::Mult)
+    );
+    // Expanding the plain ACCUM entries to hardware adders (eq. 9) and
+    // comparing against the Alg. 5 decomposition (eq. 10): the Alg. 5
+    // version is strictly cheaper in weighted add width.
+    let wa = ::kmm::algo::mm::wa_for_depth(16);
+    let conv = plain.expand_accum_conventional(wa);
+    assert_eq!(pre.count_kind(OpKind::Accum), 0, "Alg5 records ADDs only");
+    let plain_waw = conv.weighted_width(OpKind::Add);
+    let pre_waw = pre.weighted_width(OpKind::Add);
+    assert!(pre_waw < plain_waw, "{pre_waw} !< {plain_waw}");
+    // And the structural identity: plain expanded by Alg. 5 == recorded.
+    assert_eq!(plain.expand_accum_alg5(4, wa), pre);
+}
+
+#[test]
+fn mm1_preaccum_matches_plain_for_all_p() {
+    forall(Config::default().cases(80), |rng| {
+        let w = rng.range(1, 16) as u32;
+        let p = rng.range(1, 9);
+        let (m, k, n) = (rng.range(1, 6), rng.range(1, 20), rng.range(1, 6));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let mut t = Tally::new();
+        prop_assert_eq(
+            mm1_preaccum(&a, &b, w, p, &mut t),
+            matmul_oracle(&a, &b),
+            "Alg5 MM1 exact for every p",
+        )
+    });
+}
+
+#[test]
+fn extreme_values_all_algorithms() {
+    // All-ones (max digit sums) and single-bit patterns at boundary
+    // widths — the adversarial cases for carry handling.
+    for w in [2u32, 3, 8, 15, 16, 31, 32, 63, 64] {
+        for n in [1u32, 2, 4] {
+            if w < n {
+                continue;
+            }
+            let top = if w >= 64 { u64::MAX } else { (1u64 << w) - 1 };
+            let a = Mat::from_fn(3, 3, |_, _| top);
+            let b = Mat::from_fn(3, 3, |_, _| top);
+            let want = matmul_oracle(&a, &b);
+            let mut t = Tally::new();
+            assert_eq!(kmm_alg(&a, &b, w, n, &mut t), want, "KMM w={w} n={n}");
+            assert_eq!(mm(&a, &b, w, n, &mut t), want, "MM w={w} n={n}");
+            prop_assert(true, "ok").unwrap();
+        }
+    }
+}

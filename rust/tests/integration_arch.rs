@@ -1,0 +1,158 @@
+//! Architecture-level integration: the hardware structural models
+//! (fixed-precision tree, precision-scalable mode machine, FFIP engine,
+//! cycle simulator) compose with the algorithms and with each other.
+
+use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::arch::ffip::{FfipMxu, TileEngine};
+use kmm::arch::fixed_kmm::FixedKmm;
+use kmm::arch::mxu::{CycleSim, SystolicSpec};
+use kmm::arch::scalable::{Mode, ScalableKmm};
+use kmm::sim::gemm::run_functional;
+use kmm::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+use kmm::util::rng::Rng;
+
+#[test]
+fn cycle_sim_equals_functional_equals_oracle() {
+    // Invariant 5 of DESIGN.md: cycle-sim == functional model == oracle.
+    forall(Config::default().cases(40), |rng| {
+        let spec = SystolicSpec {
+            x: rng.range(2, 8),
+            y: rng.range(2, 8),
+            p: rng.range(1, 5),
+        };
+        let rows = rng.range(1, 10);
+        let w = rng.range(1, 14) as u32;
+        let a = Mat::random(rows, spec.x, w, rng);
+        let b = Mat::random(spec.x, spec.y, w, rng);
+        let (sim_out, timing) = CycleSim::new(spec, &a, &b).run_to_completion();
+        let func = spec.tile_product(&a, &b);
+        prop_assert_eq(sim_out, func.clone(), "cycle sim == functional")?;
+        prop_assert_eq(func, matmul_oracle(&a, &b), "functional == oracle")?;
+        prop_assert_eq(
+            timing.cycles,
+            spec.stream_cycles(rows, true),
+            "closed-form timing == simulated",
+        )
+    });
+}
+
+#[test]
+fn scalable_gemm_equals_tiled_sim_on_mm1_window() {
+    // The scalable architecture in MM₁ mode is exactly the plain tiled
+    // GEMM simulator.
+    forall(Config::default().cases(30), |rng| {
+        let spec = SystolicSpec {
+            x: rng.range(2, 6),
+            y: rng.range(2, 6),
+            p: 2,
+        };
+        let arch = ScalableKmm {
+            mxu: spec,
+            m: 8,
+            kmm_enabled: true,
+        };
+        let (m, k, n) = (rng.range(1, 9), rng.range(1, 12), rng.range(1, 9));
+        let a = Mat::random(m, k, 8, rng);
+        let b = Mat::random(k, n, 8, rng);
+        let (c1, run) = arch.gemm(&a, &b, 8).unwrap();
+        let (c2, stats) = run_functional(&a, &b, &spec);
+        prop_assert_eq(c1, c2, "scalable MM1 == tiled sim")?;
+        prop_assert_eq(run.stats.cycles, stats.cycles, "same cycle count")?;
+        prop_assert(run.mode == Mode::Mm1, "mode is MM1")
+    });
+}
+
+#[test]
+fn fixed_kmm_equals_scalable_kmm_products() {
+    // Two different hardware organizations of the same algebra: the
+    // fixed-precision Fig. 8 tree and the scalable Fig. 10 schedule must
+    // produce identical (exact) results.
+    forall(Config::default().cases(25), |rng| {
+        let w = rng.range(9, 14) as u32;
+        let leaf = SystolicSpec { x: 4, y: 4, p: 2 };
+        let fixed = FixedKmm::new(w, 2, leaf);
+        let scalable = ScalableKmm {
+            mxu: leaf,
+            m: 8,
+            kmm_enabled: true,
+        };
+        let a = Mat::random(4, 4, w, rng);
+        let b = Mat::random(4, 4, w, rng);
+        let (cf, _) = fixed.tile_product(&a, &b);
+        let (cs, run) = scalable.gemm(&a, &b, w).unwrap();
+        prop_assert_eq(cf, cs, "fixed == scalable")?;
+        prop_assert(run.mode == Mode::Kmm2, "in the KMM window")
+    });
+}
+
+#[test]
+fn ffip_core_composes_with_kmm_modes() {
+    // Table II's FFIP+KMM: the FFIP engine under the scalable mode
+    // machine stays exact in every window.
+    forall(Config::default().cases(25), |rng| {
+        let arch = ScalableKmm {
+            mxu: FfipMxu {
+                x: 8,
+                y: 4,
+                p: 2,
+            },
+            m: 8,
+            kmm_enabled: true,
+        };
+        let w = rng.range(1, 16) as u32;
+        let (m, k, n) = (rng.range(1, 7), rng.range(1, 18), rng.range(1, 7));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let (c, _) = arch.gemm(&a, &b, w).unwrap();
+        prop_assert_eq(c, matmul_oracle(&a, &b), "FFIP+KMM exact")
+    });
+}
+
+#[test]
+fn ffip_halves_multipliers_at_same_throughput_shape() {
+    let mm = SystolicSpec { x: 64, y: 64, p: 4 };
+    let ffip = FfipMxu::paper_64();
+    assert_eq!(TileEngine::mults(&mm), 4096);
+    assert_eq!(TileEngine::mults(&ffip), 2048);
+    assert_eq!(ffip.spec().stream_cycles(64, true), mm.stream_cycles(64, true));
+}
+
+#[test]
+fn deep_recursion_fixed_tree_exact_at_64_bits() {
+    // KMM₈^[64]: 27 leaf MXUs, digits down to 8/9/10 bits.
+    let mut rng = Rng::new(3);
+    let arch = FixedKmm::new(64, 8, SystolicSpec { x: 4, y: 4, p: 4 });
+    assert_eq!(arch.tree.leaves(), 27);
+    let a = Mat::random(4, 4, 64, &mut rng);
+    let b = Mat::random(4, 4, 64, &mut rng);
+    let (c, _) = arch.tile_product(&a, &b);
+    assert_eq!(c, matmul_oracle(&a, &b));
+}
+
+#[test]
+fn mode_boundaries_are_exact_for_every_m() {
+    // The §IV-C windows for multiplier widths beyond the paper's m = 8.
+    for m in [4u32, 6, 8, 12, 16] {
+        let arch = ScalableKmm {
+            mxu: SystolicSpec { x: 4, y: 4, p: 2 },
+            m,
+            kmm_enabled: true,
+        };
+        let mut rng = Rng::new(m as u64);
+        for w in 1..=(2 * m) {
+            let a = Mat::random(3, 5, w, &mut rng);
+            let b = Mat::random(5, 3, w, &mut rng);
+            let (c, run) = arch.gemm(&a, &b, w).unwrap();
+            assert_eq!(c, matmul_oracle(&a, &b), "m={m} w={w}");
+            let expect = if w <= m {
+                Mode::Mm1
+            } else if w <= 2 * m - 2 {
+                Mode::Kmm2
+            } else {
+                Mode::Mm2
+            };
+            assert_eq!(run.mode, expect, "m={m} w={w}");
+        }
+        assert!(arch.gemm(&Mat::zeros(2, 2), &Mat::zeros(2, 2), 2 * m + 1).is_err());
+    }
+}

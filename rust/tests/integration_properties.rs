@@ -1,0 +1,180 @@
+//! Metamorphic and algebraic property tests across the whole stack:
+//! relations that must hold between *different* computations (not just
+//! algorithm-vs-oracle), catching errors an absolute check can miss.
+
+use ::kmm::algo::matrix::{matmul_oracle, Mat, MatAcc};
+use ::kmm::algo::opcount::Tally;
+use ::kmm::algo::{kmm as kmm_alg, mm};
+use ::kmm::arch::mxu::SystolicSpec;
+use ::kmm::arch::scalable::ScalableKmm;
+use ::kmm::util::prop::{forall, prop_assert, prop_assert_eq, Config};
+use ::kmm::util::wide::I256;
+
+fn arch() -> ScalableKmm {
+    ScalableKmm {
+        mxu: SystolicSpec { x: 4, y: 4, p: 2 },
+        m: 8,
+        kmm_enabled: true,
+    }
+}
+
+fn add_mats(a: &Mat, b: &Mat) -> Mat {
+    Mat::from_fn(a.rows, a.cols, |i, j| a[(i, j)] + b[(i, j)])
+}
+
+/// Right-distributivity: A·(B + C) == A·B + A·C, through KMM.
+#[test]
+fn kmm_distributes_over_addition() {
+    forall(Config::default().cases(60), |rng| {
+        let w = rng.range(2, 14) as u32;
+        let (m, k, n) = (rng.range(1, 5), rng.range(1, 6), rng.range(1, 5));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let c = Mat::random(k, n, w, rng);
+        let mut t = Tally::new();
+        // B + C may carry w+1 bits; run KMM at w+1.
+        let lhs = kmm_alg(&a, &add_mats(&b, &c), w + 1, 2, &mut t);
+        let rhs = kmm_alg(&a, &b, w, 2, &mut t).add(&kmm_alg(&a, &c, w, 2, &mut t));
+        prop_assert_eq(lhs, rhs, "A(B+C) == AB + AC")
+    });
+}
+
+/// Transpose relation: (A·B)ᵀ == Bᵀ·Aᵀ, KMM on both sides.
+#[test]
+fn kmm_transpose_relation() {
+    forall(Config::default().cases(60), |rng| {
+        let w = rng.range(2, 16) as u32;
+        let (m, k, n) = (rng.range(1, 6), rng.range(1, 6), rng.range(1, 6));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let at = Mat::from_fn(k, m, |i, j| a[(j, i)]);
+        let bt = Mat::from_fn(n, k, |i, j| b[(j, i)]);
+        let mut t = Tally::new();
+        let ab = kmm_alg(&a, &b, w, 2, &mut t);
+        let btat = kmm_alg(&bt, &at, w, 2, &mut t);
+        for i in 0..m {
+            for j in 0..n {
+                prop_assert_eq(ab[(i, j)], btat[(j, i)], "(AB)^T == B^T A^T")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Block-composition: multiplying in two K-halves and summing equals the
+/// single multiplication — the algebra behind §IV-D tile accumulation.
+#[test]
+fn k_splitting_composes() {
+    forall(Config::default().cases(60), |rng| {
+        let w = rng.range(1, 15) as u32;
+        let (m, k1, k2, n) = (
+            rng.range(1, 5),
+            rng.range(1, 6),
+            rng.range(1, 6),
+            rng.range(1, 5),
+        );
+        let a = Mat::random(m, k1 + k2, w, rng);
+        let b = Mat::random(k1 + k2, n, w, rng);
+        let a1 = Mat::from_fn(m, k1, |i, j| a[(i, j)]);
+        let a2 = Mat::from_fn(m, k2, |i, j| a[(i, k1 + j)]);
+        let b1 = Mat::from_fn(k1, n, |i, j| b[(i, j)]);
+        let b2 = Mat::from_fn(k2, n, |i, j| b[(k1 + i, j)]);
+        let whole = matmul_oracle(&a, &b);
+        let parts = matmul_oracle(&a1, &b1).add(&matmul_oracle(&a2, &b2));
+        prop_assert_eq(whole, parts, "K-split sums")
+    });
+}
+
+/// Scaling: (c·A)·B == c·(A·B) for scalar c — exercised through the
+/// scalable architecture at a width covering the scaled values.
+#[test]
+fn scalar_scaling_through_architecture() {
+    forall(Config::default().cases(40), |rng| {
+        let w = rng.range(2, 12) as u32;
+        let c = rng.range(1, 15) as u64;
+        let (m, k, n) = (rng.range(1, 5), rng.range(1, 6), rng.range(1, 5));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let ca = Mat::from_fn(m, k, |i, j| c * a[(i, j)]);
+        let wc = w + 4; // c < 16 adds ≤ 4 bits
+        if wc > 16 {
+            return Ok(()); // outside the one-level ceiling
+        }
+        let (lhs, _) = arch().gemm(&ca, &b, wc).unwrap();
+        let (base, _) = arch().gemm(&a, &b, w).unwrap();
+        let rhs = MatAcc::from_fn(m, n, |i, j| {
+            // c·(A·B): multiply each accumulator by c.
+            let mut s = I256::zero();
+            for _ in 0..c {
+                s += base[(i, j)];
+            }
+            s
+        });
+        prop_assert_eq(lhs, rhs, "(cA)B == c(AB)")
+    });
+}
+
+/// Mode invariance: the scalable architecture's result is independent of
+/// the mode window it lands in — forcing KMM on/off must not change
+/// numerics, only cycles.
+#[test]
+fn mode_choice_never_changes_numerics() {
+    forall(Config::default().cases(60), |rng| {
+        let w = rng.range(9, 14) as u32; // the window where modes differ
+        let (m, k, n) = (rng.range(1, 6), rng.range(1, 8), rng.range(1, 6));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let kmm_on = arch();
+        let kmm_off = ScalableKmm {
+            kmm_enabled: false,
+            ..arch()
+        };
+        let (c1, r1) = kmm_on.gemm(&a, &b, w).unwrap();
+        let (c2, r2) = kmm_off.gemm(&a, &b, w).unwrap();
+        prop_assert_eq(c1, c2, "numerics mode-invariant")?;
+        prop_assert(r1.stats.cycles < r2.stats.cycles, "KMM strictly faster in-window")
+    });
+}
+
+/// Monotonicity of the cost model: more reads, more cycles; wider GEMMs,
+/// more cycles; never fewer MACs than cycles·mults can deliver.
+#[test]
+fn cost_model_monotone_and_bounded() {
+    forall(Config::default().cases(60), |rng| {
+        let spec = SystolicSpec { x: 8, y: 8, p: 4 };
+        let (m, k, n) = (rng.range(1, 40), rng.range(1, 40), rng.range(1, 40));
+        let grid = ::kmm::sim::tiler::TileGrid::new(m, k, n, spec.x, spec.y);
+        let s1 = ::kmm::sim::gemm::simulate_cycles(&grid, &spec, 1);
+        let s3 = ::kmm::sim::gemm::simulate_cycles(&grid, &spec, 3);
+        let s4 = ::kmm::sim::gemm::simulate_cycles(&grid, &spec, 4);
+        prop_assert(s1.cycles < s3.cycles && s3.cycles < s4.cycles, "reads monotone")?;
+        let bigger = ::kmm::sim::tiler::TileGrid::new(m + 8, k, n, spec.x, spec.y);
+        let sb = ::kmm::sim::gemm::simulate_cycles(&bigger, &spec, 1);
+        prop_assert(sb.cycles > s1.cycles, "M monotone")?;
+        // Physical bound: logical MACs ≤ cycles × multipliers.
+        prop_assert(
+            s1.macs <= s1.cycles * spec.mults() as u64,
+            "utilization ≤ 1",
+        )
+    });
+}
+
+/// Tally accounting is additive: running two multiplications into one
+/// tally equals the sum of separate tallies.
+#[test]
+fn tallies_compose_additively() {
+    forall(Config::default().cases(40), |rng| {
+        let w = rng.range(2, 20) as u32;
+        let a = Mat::random(3, 3, w, rng);
+        let b = Mat::random(3, 3, w, rng);
+        let mut joint = Tally::new();
+        mm(&a, &b, w, 2, &mut joint);
+        kmm_alg(&a, &b, w, 2, &mut joint);
+        let mut t1 = Tally::new();
+        mm(&a, &b, w, 2, &mut t1);
+        let mut t2 = Tally::new();
+        kmm_alg(&a, &b, w, 2, &mut t2);
+        t1.merge(&t2);
+        prop_assert_eq(joint, t1, "tally merge == joint run")
+    });
+}

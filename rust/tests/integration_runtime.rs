@@ -1,0 +1,125 @@
+//! Runtime integration: load the real `artifacts/` produced by
+//! `make artifacts`, execute on the PJRT CPU client, and verify the
+//! results bit-for-bit against the Rust algorithmic oracles and the
+//! Python-side golden vectors.
+//!
+//! Tests skip (with a notice) when artifacts are absent so plain
+//! `cargo test` still passes before the first `make artifacts`.
+
+use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::runtime::{default_dir, HostTensor, Manifest, Runtime};
+use kmm::util::json::Json;
+use kmm::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first (looked in {dir:?})");
+        return None;
+    }
+    Some(Runtime::from_dir(dir).expect("artifacts load"))
+}
+
+fn tile_tensor(m: &Mat) -> HostTensor {
+    HostTensor::new(
+        vec![m.rows, m.cols],
+        m.data().iter().map(|&x| x as i64).collect(),
+    )
+}
+
+fn check_tile_gemm(rt: &mut Runtime, name: &str, w: u32) {
+    let tile = rt.manifest().tile;
+    let mut rng = Rng::new(0xA0 + w as u64);
+    let a = Mat::random(tile, tile, w, &mut rng);
+    let b = Mat::random(tile, tile, w, &mut rng);
+    let out = rt
+        .execute(name, &[tile_tensor(&a), tile_tensor(&b)])
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    assert_eq!(out.len(), 1);
+    let got = &out[0];
+    assert_eq!(got.shape, vec![tile, tile]);
+    let want = matmul_oracle(&a, &b);
+    for i in 0..tile {
+        for j in 0..tile {
+            assert_eq!(
+                Some(got.at2(i, j) as i128),
+                want[(i, j)].to_i128(),
+                "{name} mismatch at ({i},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn mm1_tile_artifact_matches_oracle() {
+    let Some(mut rt) = runtime() else { return };
+    check_tile_gemm(&mut rt, "gemm_mm1_tile", 8);
+}
+
+#[test]
+fn kmm2_tile_artifact_matches_oracle() {
+    let Some(mut rt) = runtime() else { return };
+    check_tile_gemm(&mut rt, "gemm_kmm2_tile", 12);
+}
+
+#[test]
+fn mm2_tile_artifact_matches_oracle() {
+    let Some(mut rt) = runtime() else { return };
+    check_tile_gemm(&mut rt, "gemm_mm2_tile", 16);
+}
+
+#[test]
+fn mlp_artifact_reproduces_python_golden_vectors() {
+    // The L2 model lowered by aot.py, executed from Rust, must reproduce
+    // the Python-side logits bit-for-bit: the full L1→L2→L3 stack agrees.
+    let Some(mut rt) = runtime() else { return };
+    let dir = default_dir();
+    let vec_text = std::fs::read_to_string(dir.join("mlp_vectors.json")).unwrap();
+    let v = Json::parse(&vec_text).unwrap();
+    let e = rt.manifest().entrypoint("mlp_fwd").unwrap().clone();
+
+    let tensors: Vec<HostTensor> = ["x", "w1", "w2", "w3"]
+        .iter()
+        .zip(&e.inputs)
+        .map(|(key, spec)| {
+            HostTensor::new(
+                spec.shape.clone(),
+                v.get(key).unwrap().flatten_i64().unwrap(),
+            )
+        })
+        .collect();
+    let want = v.get("logits").unwrap().flatten_i64().unwrap();
+
+    let out = rt.execute("mlp_fwd", &tensors).expect("mlp_fwd execution");
+    assert_eq!(out[0].shape, e.outputs[0].shape);
+    assert_eq!(out[0].data, want, "logits must match Python bit-for-bit");
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some(mut rt) = runtime() else { return };
+    let bad = HostTensor::new(vec![2, 2], vec![0; 4]);
+    let err = rt.execute("gemm_mm1_tile", &[bad.clone(), bad]).unwrap_err();
+    assert!(err.to_string().contains("shape mismatch"), "{err:#}");
+}
+
+#[test]
+fn unknown_entrypoint_rejected() {
+    let Some(mut rt) = runtime() else { return };
+    let t = HostTensor::new(vec![1], vec![0]);
+    let err = rt.execute("nope", &[t]).unwrap_err();
+    assert!(err.to_string().contains("unknown entrypoint"));
+}
+
+#[test]
+fn manifest_loads_and_names_exposed() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.names();
+    for n in ["gemm_mm1_tile", "gemm_kmm2_tile", "gemm_mm2_tile", "mlp_fwd"] {
+        assert!(names.contains(&n), "missing {n}");
+    }
+    assert_eq!(rt.platform(), "cpu");
+    // Manifest re-loads independently.
+    let m = Manifest::load(default_dir()).unwrap();
+    assert_eq!(m.entrypoints.len(), 4);
+}
