@@ -27,6 +27,10 @@ use kmm::util::rng::Rng;
 use std::time::Instant;
 
 fn main() {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("this example executes PJRT artifacts — rebuild with `--features pjrt`");
+        std::process::exit(2);
+    }
     let dir = default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("artifacts missing — run `make artifacts` first (looked in {dir:?})");

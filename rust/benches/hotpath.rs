@@ -6,19 +6,30 @@
 //!   2. `ScalableKmm::gemm`           — full scalable GEMM (KMM2 window)
 //!   3. `schedule(ResNet-50)`         — analytic workload scheduling
 //!   4. oracle `matmul_oracle`        — wide-int reference matmul
+//!   5. the `fast` engine             — blocked fast-MM and fast-KMM vs
+//!      the exact tallied references (`algo::mm1`, `algo::kmm`)
+//!
+//! Section 5 is the acceptance check for the fast subsystem: on a
+//! ≥64×64×64 GEMM the native blocked engine must beat the tallied
+//! `I256` reference path by a wide margin (it exists precisely to
+//! remove the instrumentation and wide-integer overhead from serving).
 //!
 //! Run: `cargo bench --bench hotpath`
 
 use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::algo::opcount::Tally;
+use kmm::algo::{kmm as kmm_ref, mm1};
 use kmm::arch::mxu::SystolicSpec;
 use kmm::arch::scalable::ScalableKmm;
 use kmm::coordinator::scheduler::schedule;
+use kmm::fast;
 use kmm::model::resnet::{resnet, ResNet};
 use kmm::util::rng::Rng;
 use std::time::Instant;
 
-/// Median wall time of `iters` runs of `f`, in seconds.
-fn bench(name: &str, iters: usize, mut f: impl FnMut() -> u64) {
+/// Median wall time of `iters` runs of `f` in seconds (also printed,
+/// with an ops/s rate derived from `f`'s returned work count).
+fn bench(name: &str, iters: usize, mut f: impl FnMut() -> u64) -> f64 {
     let mut times = Vec::with_capacity(iters);
     let mut work = 0u64;
     for _ in 0..iters {
@@ -30,6 +41,7 @@ fn bench(name: &str, iters: usize, mut f: impl FnMut() -> u64) {
     let med = times[times.len() / 2];
     let rate = work as f64 / med / 1e6;
     println!("{name:<44} median {:>9.3} ms   {:>9.1} Mops/s", med * 1e3, rate);
+    med
 }
 
 fn main() {
@@ -72,4 +84,60 @@ fn main() {
         std::hint::black_box(&c);
         256 * 256 * 256
     });
+
+    // 5. The fast engine vs the tallied references, same 96^3 w16 GEMM
+    //    (exceeds the 64^3 acceptance floor). All four are bit-exact
+    //    against each other; only the execution machinery differs.
+    println!("-- fast engine vs tallied reference (96^3, w = 16) --");
+    let d = 96usize;
+    let w = 16u32;
+    let fa = Mat::random(d, d, w, &mut rng);
+    let fb = Mat::random(d, d, w, &mut rng);
+    let macs = (d * d * d) as u64;
+
+    let t_fast_mm = bench("fast-MM blocked 96^3 w16 (MACs/s)", 20, || {
+        let c = fast::mm(fa.data(), fb.data(), d, d, d);
+        std::hint::black_box(&c);
+        macs
+    });
+    let t_fast_kmm = bench("fast-KMM n=2 96^3 w16 (MACs/s)", 20, || {
+        let c = fast::kmm_digits(fa.data(), fb.data(), d, d, d, w, 2);
+        std::hint::black_box(&c);
+        macs
+    });
+    let t_ref_mm = bench("algo::mm1 tallied 96^3 w16 (MACs/s)", 3, || {
+        let mut t = Tally::new();
+        let c = mm1(&fa, &fb, w, &mut t);
+        std::hint::black_box(&(c, t));
+        macs
+    });
+    let t_ref_kmm = bench("algo::kmm tallied n=2 96^3 w16 (MACs/s)", 3, || {
+        let mut t = Tally::new();
+        let c = kmm_ref(&fa, &fb, w, 2, &mut t);
+        std::hint::black_box(&(c, t));
+        macs
+    });
+
+    println!(
+        "speedup fast-MM  vs tallied mm1:  {:>7.1}x",
+        t_ref_mm / t_fast_mm
+    );
+    println!(
+        "speedup fast-KMM vs tallied kmm:  {:>7.1}x",
+        t_ref_kmm / t_fast_kmm
+    );
+    println!(
+        "software digit-slice overhead (fast-KMM / fast-MM): {:.2}x",
+        t_fast_kmm / t_fast_mm
+    );
+    // Wall-clock gate, but not a tight one: the references pay I256
+    // arithmetic plus per-op Tally bookkeeping on every MAC, so the
+    // expected margin is 1–2 orders of magnitude. Require 2x so shared
+    // CI runners can't flake this; if the ratio ever approaches 2, the
+    // fast path has effectively regressed to reference speed.
+    assert!(
+        t_fast_mm * 2.0 < t_ref_mm && t_fast_kmm * 2.0 < t_ref_kmm,
+        "fast engine must beat the tallied reference path by >= 2x"
+    );
+    println!("fast path beats tallied reference: OK");
 }

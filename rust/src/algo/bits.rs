@@ -77,6 +77,37 @@ pub fn karatsuba_subwidths(w: u32) -> (u32, u32, u32) {
     (hi_width(w), lo_width(w) + 1, lo_width(w))
 }
 
+/// Split every element of a flat slice at width `w` into preallocated
+/// high/low digit planes — the paper's `(A1, A0)` formation over raw
+/// row-major storage. Shared by [`crate::algo::matrix::Mat::split`] and
+/// the [`crate::fast`] engine's digit-slice drivers, so both layers use
+/// one definition of the split.
+pub fn split_planes(src: &[u64], w: u32, hi: &mut [u64], lo: &mut [u64]) {
+    assert_eq!(src.len(), hi.len(), "hi plane length mismatch");
+    assert_eq!(src.len(), lo.len(), "lo plane length mismatch");
+    for (i, &x) in src.iter().enumerate() {
+        let (h, l) = split(x, w);
+        hi[i] = h;
+        lo[i] = l;
+    }
+}
+
+/// Allocating convenience over [`split_planes`]: returns `(hi, lo)`.
+pub fn split_planes_vec(src: &[u64], w: u32) -> (Vec<u64>, Vec<u64>) {
+    let mut hi = vec![0u64; src.len()];
+    let mut lo = vec![0u64; src.len()];
+    split_planes(src, w, &mut hi, &mut lo);
+    (hi, lo)
+}
+
+/// Elementwise digit-sum plane `hi + lo` — the `As = A1 + A0` formation
+/// of Algorithms 2 and 4 over flat storage. Sums of `⌈w/2⌉`-bit digits
+/// fit `⌈w/2⌉ + 1` bits, far below `u64` range for `w ≤ 64`.
+pub fn digit_sum_plane(hi: &[u64], lo: &[u64]) -> Vec<u64> {
+    assert_eq!(hi.len(), lo.len());
+    hi.iter().zip(lo).map(|(&h, &l)| h + l).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +184,25 @@ mod tests {
         assert!(!config_valid(3, 8)); // not a power of two
         assert!(!config_valid(16, 8)); // more digits than bits
         assert!(!config_valid(2, 65)); // too wide
+    }
+
+    #[test]
+    fn plane_helpers_match_elementwise_split() {
+        forall(Config::default().cases(100), |rng| {
+            let w = rng.range(2, 32) as u32;
+            let src: Vec<u64> = (0..13).map(|_| rng.bits(w)).collect();
+            let (hi, lo) = split_planes_vec(&src, w);
+            for i in 0..src.len() {
+                let (h, l) = split(src[i], w);
+                crate::util::prop::prop_assert_eq(hi[i], h, "hi plane")?;
+                crate::util::prop::prop_assert_eq(lo[i], l, "lo plane")?;
+            }
+            let sums = digit_sum_plane(&hi, &lo);
+            for i in 0..src.len() {
+                crate::util::prop::prop_assert_eq(sums[i], hi[i] + lo[i], "digit sum")?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

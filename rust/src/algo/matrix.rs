@@ -97,11 +97,7 @@ impl Mat {
     pub fn split(&self, w: u32) -> (Mat, Mat) {
         let mut hi = Mat::zeros(self.rows, self.cols);
         let mut lo = Mat::zeros(self.rows, self.cols);
-        for idx in 0..self.data.len() {
-            let (h, l) = bits::split(self.data[idx], w);
-            hi.data[idx] = h;
-            lo.data[idx] = l;
-        }
+        bits::split_planes(&self.data, w, &mut hi.data, &mut lo.data);
         (hi, lo)
     }
 

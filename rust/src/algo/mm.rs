@@ -26,6 +26,20 @@ pub fn wa_for_depth(k: usize) -> u32 {
 
 /// `MM_1^[w]` (eq. 1): direct matrix multiplication. Records
 /// `M·K·N (MULT^[w] + ACCUM^[2w])` — eq. (2b).
+///
+/// # Examples
+///
+/// ```
+/// use kmm::algo::{mm1, Mat, OpKind, Tally};
+///
+/// let a = Mat::from_rows(2, 2, &[1, 2, 3, 4]);
+/// let b = Mat::from_rows(2, 2, &[5, 6, 7, 8]);
+/// let mut tally = Tally::new();
+/// let c = mm1(&a, &b, 8, &mut tally);
+/// assert_eq!(c.to_i128_vec().unwrap(), vec![19, 22, 43, 50]);
+/// // 2·2·2 multiply-accumulates, all on 8-bit operands.
+/// assert_eq!(tally.count(OpKind::Mult, 8), 8);
+/// ```
 pub fn mm1(a: &Mat, b: &Mat, w: u32, tally: &mut Tally) -> MatAcc {
     assert_eq!(a.cols, b.rows);
     assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");

@@ -50,13 +50,24 @@ impl Mode {
 }
 
 /// Mode-selection error: the one-level scalable design tops out at `2m`.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("input bitwidth w={w} exceeds the 2m={max} ceiling of the one-level scalable architecture (m={m})")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WidthError {
     pub w: u32,
     pub m: u32,
     pub max: u32,
 }
+
+impl std::fmt::Display for WidthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "input bitwidth w={} exceeds the 2m={} ceiling of the one-level scalable architecture (m={})",
+            self.w, self.max, self.m
+        )
+    }
+}
+
+impl std::error::Error for WidthError {}
 
 /// The §IV-C mode controller. `kmm_enabled = false` models the baseline
 /// precision-scalable MM₂ architecture (MM₁ below m, MM₂ above).

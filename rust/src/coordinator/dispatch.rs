@@ -1,4 +1,4 @@
-//! Backend dispatch: the coordinator serves GEMMs through one of three
+//! Backend dispatch: the coordinator serves GEMMs through one of the
 //! interchangeable engines, all bit-exact and cross-validated:
 //!
 //! - [`FunctionalBackend`] — the architecture model ([`ScalableKmm`]),
@@ -8,7 +8,11 @@
 //!   `gemm_*_tile` PJRT executables produced by `make artifacts`
 //!   (Pallas kernels lowered through L2), accumulating partial tile
 //!   products in Rust exactly as §IV-D accumulates outside the MXU.
-//! - Both report the deterministic cycle model, so serving returns
+//! - [`FastBackend`] — the software hot path: the [`crate::fast`]
+//!   blocked engine (native `u64`/`u128` microkernels, no tallying),
+//!   running either conventional MM or the Algorithm 4 digit-slice
+//!   decomposition.
+//! - All report the deterministic cycle model, so serving returns
 //!   timing alongside numerics.
 
 use crate::algo::matrix::{Mat, MatAcc};
@@ -17,7 +21,7 @@ use crate::arch::scalable::{select_mode, Mode, ScalableKmm};
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::gemm::{simulate_cycles, GemmStats};
 use crate::sim::tiler::TileGrid;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Result of one dispatched GEMM.
 #[derive(Debug, Clone)]
@@ -179,6 +183,97 @@ impl GemmBackend for PjrtBackend {
     }
 }
 
+/// Digit decomposition run by the software [`FastBackend`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FastAlgo {
+    /// Conventional blocked GEMM: one native multiplication per MAC.
+    Mm,
+    /// Karatsuba digit slicing (Algorithm 4, one level) above the
+    /// native window: three sub-GEMMs plus shift recombination.
+    Kmm,
+}
+
+/// The software hot-path backend: the [`crate::fast`] blocked engine
+/// behind the same interface as the cycle-model backends.
+///
+/// Numerics run natively (no tallying, no wide temporaries); the
+/// reported statistics come from the same deterministic §IV-D cycle
+/// schedule the other backends use — mirroring [`PjrtBackend`], where
+/// the artifact computes and the architecture model accounts — so
+/// serving metrics stay comparable across backends. Unlike the
+/// hardware-window backends it accepts any `w ≤ 32` (the fast engine's
+/// `u128` headroom ceiling); the reported [`Mode`] reflects whether the
+/// request ran native (`w ≤ m`) or digit-sliced.
+pub struct FastBackend {
+    /// Which decomposition the engine runs above the native window.
+    pub algo: FastAlgo,
+    /// Native width threshold mirroring the scalable controller: at or
+    /// below `m`, inputs run as a single plain blocked GEMM.
+    pub m: u32,
+    /// Timing model used for reported stats (numerics are native).
+    timing: SystolicSpec,
+}
+
+impl FastBackend {
+    /// Default configuration: the paper's m = 8 window boundary and
+    /// 64×64 timing model.
+    pub fn new(algo: FastAlgo) -> Self {
+        FastBackend {
+            algo,
+            m: 8,
+            timing: SystolicSpec::paper_64(),
+        }
+    }
+
+    /// Mode label and digit count for a `w`-bit request.
+    fn plan(&self, w: u32) -> Result<(Mode, u32)> {
+        if w > crate::fast::MAX_W {
+            bail!(
+                "w={w} exceeds the fast engine's {}-bit ceiling",
+                crate::fast::MAX_W
+            );
+        }
+        Ok(if w <= self.m {
+            (Mode::Mm1, 1)
+        } else {
+            match self.algo {
+                FastAlgo::Kmm => (Mode::Kmm2, 2),
+                FastAlgo::Mm => (Mode::Mm2, 1),
+            }
+        })
+    }
+}
+
+impl GemmBackend for FastBackend {
+    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult> {
+        let (mode, digits) = self.plan(w)?;
+        assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");
+        assert_eq!(a.cols, b.rows, "dimension mismatch");
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let raw = if digits == 1 {
+            crate::fast::mm(a.data(), b.data(), m, k, n)
+        } else {
+            crate::fast::kmm_digits(a.data(), b.data(), m, k, n, w, digits)
+        };
+        let mut c = MatAcc::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                c[(i, j)] = crate::util::wide::I256::from_u128(raw[i * n + j]);
+            }
+        }
+        let grid = TileGrid::new(m, k, n, self.timing.x, self.timing.y);
+        let stats = simulate_cycles(&grid, &self.timing, mode.reads());
+        Ok(GemmResult { c, mode, stats })
+    }
+
+    fn name(&self) -> &'static str {
+        match self.algo {
+            FastAlgo::Mm => "fast-mm",
+            FastAlgo::Kmm => "fast-kmm",
+        }
+    }
+}
+
 /// Cross-validation helper: run both backends on the same inputs and
 /// assert bit-identical products (used by integration tests and the
 /// `--verify` serving mode).
@@ -257,7 +352,67 @@ mod tests {
     }
 
     #[test]
+    fn fast_backends_exact() {
+        forall(Config::default().cases(30), |rng| {
+            let w = rng.range(1, 32) as u32;
+            let a = Mat::random(7, 9, w, rng);
+            let b = Mat::random(9, 5, w, rng);
+            let want = matmul_oracle(&a, &b);
+            for algo in [FastAlgo::Mm, FastAlgo::Kmm] {
+                let mut be = FastBackend::new(algo);
+                let r = be.gemm(&a, &b, w).unwrap();
+                prop_assert_eq(r.c, want.clone(), &format!("{} exact at w={w}", be.name()))?;
+                prop_assert(r.stats.cycles > 0, "cycles reported")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fast_backend_modes_and_names() {
+        let mut kmm = FastBackend::new(FastAlgo::Kmm);
+        let mut mm = FastBackend::new(FastAlgo::Mm);
+        assert_eq!(kmm.name(), "fast-kmm");
+        assert_eq!(mm.name(), "fast-mm");
+        let mut rng = Rng::new(8);
+        let a = Mat::random(4, 4, 8, &mut rng);
+        let b = Mat::random(4, 4, 8, &mut rng);
+        // Native window: both label MM1.
+        assert_eq!(kmm.gemm(&a, &b, 8).unwrap().mode, Mode::Mm1);
+        assert_eq!(mm.gemm(&a, &b, 8).unwrap().mode, Mode::Mm1);
+        // Above the window: the decomposition shows in the label.
+        let a = Mat::random(4, 4, 12, &mut rng);
+        let b = Mat::random(4, 4, 12, &mut rng);
+        assert_eq!(kmm.gemm(&a, &b, 12).unwrap().mode, Mode::Kmm2);
+        assert_eq!(mm.gemm(&a, &b, 12).unwrap().mode, Mode::Mm2);
+    }
+
+    #[test]
+    fn fast_backend_rejects_overwide() {
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let a = Mat::zeros(2, 2);
+        let err = be.gemm(&a, &a, 33).unwrap_err();
+        assert!(err.to_string().contains("ceiling"), "{err:#}");
+    }
+
+    #[test]
+    fn fast_cross_validates_against_functional() {
+        let mut rng = Rng::new(14);
+        for w in [6u32, 11, 16] {
+            let a = Mat::random(6, 10, w, &mut rng);
+            let b = Mat::random(10, 6, w, &mut rng);
+            let mut fast = FastBackend::new(FastAlgo::Kmm);
+            let mut func = FunctionalBackend::paper();
+            assert!(cross_validate(&mut fast, &mut func, &a, &b, w).unwrap(), "w={w}");
+        }
+    }
+
+    #[test]
     fn pjrt_backend_exact_if_artifacts_present() {
+        if cfg!(not(feature = "pjrt")) {
+            eprintln!("skipping: built without the `pjrt` feature");
+            return;
+        }
         let dir = crate::runtime::default_dir();
         if !dir.join("manifest.json").exists() {
             eprintln!("skipping: no artifacts");

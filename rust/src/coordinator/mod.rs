@@ -9,7 +9,9 @@ pub mod quantize;
 pub mod scheduler;
 pub mod server;
 
-pub use dispatch::{FunctionalBackend, GemmBackend, GemmResult, PjrtBackend};
+pub use dispatch::{
+    FastAlgo, FastBackend, FunctionalBackend, GemmBackend, GemmResult, PjrtBackend,
+};
 pub use metrics::{recursion_levels, scalable_roof, Execution};
 pub use pipeline::{mlp_pipeline, Pipeline, PipelineLayer, Requant};
 pub use quantize::{adjust_zero_point, lift_signed, signed_gemm_via_unsigned, LayerPrecision};

@@ -9,7 +9,7 @@
 
 use crate::algo::matrix::{Mat, MatAcc};
 use crate::coordinator::dispatch::GemmBackend;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// Power-of-two requantization: `clip(max(v >> shift, 0), 0, 2^out_width − 1)`
 /// — integer-exact, mirrors `model._requant`.
@@ -176,6 +176,10 @@ mod tests {
     /// artifacts reproduces the fused Python `mlp_fwd` logits bit-for-bit.
     #[test]
     fn mlp_pipeline_reproduces_python_golden_vectors() {
+        if cfg!(not(feature = "pjrt")) {
+            eprintln!("skipping: built without the `pjrt` feature");
+            return;
+        }
         let dir = crate::runtime::default_dir();
         if !dir.join("mlp_vectors.json").exists() {
             eprintln!("skipping: run `make artifacts` first");

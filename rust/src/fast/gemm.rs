@@ -1,0 +1,216 @@
+//! The blocked GEMM driver: cache blocking around a [`Kernel`].
+//!
+//! Loop structure (outside → inside), following the classic
+//! BLIS/GotoBLAS decomposition the rten engine also uses:
+//!
+//! ```text
+//!   jc: columns of C in NC-wide slabs        (B slab → L3-resident)
+//!    pc: depth in KC-deep blocks             (pack B → depth-major panels)
+//!     ic: rows of C in MC-tall blocks        (pack A → depth-major panels)
+//!      jp, ip: NR×MR register tiles          (microkernel over kc)
+//! ```
+//!
+//! Each `(pc)` block contributes a partial product that the driver
+//! **adds** into `C`, so one zeroed output buffer accumulates across all
+//! depth blocks, exactly like the out-of-array accumulation of §IV-D.
+//!
+//! This driver is the fast engine's conventional path (`MM₁` in the
+//! paper's terms: one native multiplication per MAC); the Karatsuba
+//! digit-slice path in [`crate::fast::kmm`] runs three of these per
+//! recursion level on narrower operands.
+
+use crate::fast::kernel::Kernel;
+use crate::fast::pack::{pack_a, pack_b};
+
+/// Cache-blocking parameters (elements, not bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blocking {
+    /// Row-block height (A block `mc × kc` sized for L2).
+    pub mc: usize,
+    /// Depth-block length.
+    pub kc: usize,
+    /// Column-slab width (B slab `kc × nc` sized for L3).
+    pub nc: usize,
+}
+
+impl Default for Blocking {
+    fn default() -> Self {
+        // u64 elements: A block 64×128×8 B = 64 KiB (L2-comfortable),
+        // B slab 128×512×8 B = 512 KiB (L3-resident).
+        Blocking {
+            mc: 64,
+            kc: 128,
+            nc: 512,
+        }
+    }
+}
+
+/// Compute `C = A·B` over row-major `u64` slices with the default
+/// blocking, returning a freshly allocated row-major `u128` product.
+///
+/// Exactness contract: every product `a·b` fits `u128` by construction
+/// (64×64→128 widening multiply); accumulation is exact while
+/// `k · max(a)·max(b) < 2^128`, which holds for all operands up to
+/// [`crate::fast::MAX_W`] bits at any practical depth.
+pub fn gemm<K: Kernel>(kernel: &K, a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<u128> {
+    let mut c = vec![0u128; m * n];
+    gemm_into(kernel, &Blocking::default(), a, b, m, k, n, &mut c);
+    c
+}
+
+/// Blocked GEMM accumulating into `c` (`c += A·B`), with explicit
+/// blocking parameters. `a` is `m × k`, `b` is `k × n`, `c` is `m × n`,
+/// all row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into<K: Kernel>(
+    kernel: &K,
+    bl: &Blocking,
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [u128],
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    assert!(bl.mc > 0 && bl.kc > 0 && bl.nc > 0, "degenerate blocking");
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let (mr, nr) = (K::MR, K::NR);
+    let mut a_buf: Vec<u64> = Vec::new();
+    let mut b_buf: Vec<u64> = Vec::new();
+    let mut acc = vec![0u128; mr * nr];
+
+    for jc in (0..n).step_by(bl.nc) {
+        let ncb = bl.nc.min(n - jc);
+        for pc in (0..k).step_by(bl.kc) {
+            let kcb = bl.kc.min(k - pc);
+            pack_b(&mut b_buf, b, n, pc, kcb, jc, ncb, nr);
+            for ic in (0..m).step_by(bl.mc) {
+                let mcb = bl.mc.min(m - ic);
+                pack_a(&mut a_buf, a, k, ic, mcb, pc, kcb, mr);
+                let m_panels = mcb.div_ceil(mr);
+                let n_panels = ncb.div_ceil(nr);
+                for jp in 0..n_panels {
+                    let b_panel = &b_buf[jp * kcb * nr..(jp + 1) * kcb * nr];
+                    for ip in 0..m_panels {
+                        let a_panel = &a_buf[ip * kcb * mr..(ip + 1) * kcb * mr];
+                        kernel.run(&mut acc, a_panel, b_panel, kcb);
+                        // Writeback, skipping zero-padded tile edges.
+                        let r_max = mr.min(mcb - ip * mr);
+                        let c_max = nr.min(ncb - jp * nr);
+                        for r in 0..r_max {
+                            let row = ic + ip * mr + r;
+                            let dst = &mut c[row * n + jc + jp * nr..][..c_max];
+                            for (cc, d) in dst.iter_mut().enumerate() {
+                                *d += acc[r * nr + cc];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fast::kernel::{Kernel1x1, Kernel8x4};
+    use crate::util::prop::{forall, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    /// Naive reference over the same flat representation.
+    fn naive(a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<u128> {
+        let mut c = vec![0u128; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk] as u128;
+                for j in 0..n {
+                    c[i * n + j] += av * b[kk * n + j] as u128;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_prop() {
+        forall(Config::default().cases(80), |rng| {
+            let (m, k, n) = (rng.range(1, 40), rng.range(1, 40), rng.range(1, 40));
+            let w = *rng.pick(&[4u32, 8, 16, 32]);
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            prop_assert_eq(
+                gemm(&Kernel8x4, &a, &b, m, k, n),
+                naive(&a, &b, m, k, n),
+                &format!("blocked == naive ({m}x{k}x{n} w={w})"),
+            )
+        });
+    }
+
+    #[test]
+    fn kernels_agree_prop() {
+        forall(Config::default().cases(40), |rng| {
+            let (m, k, n) = (rng.range(1, 30), rng.range(1, 30), rng.range(1, 30));
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(32)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(32)).collect();
+            prop_assert_eq(
+                gemm(&Kernel8x4, &a, &b, m, k, n),
+                gemm(&Kernel1x1, &a, &b, m, k, n),
+                "8x4 kernel == 1x1 reference kernel",
+            )
+        });
+    }
+
+    #[test]
+    fn tiny_blocking_still_exact() {
+        // Pathological blocking exercises every packing edge case.
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (11, 13, 9);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(16)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(16)).collect();
+        for bl in [
+            Blocking { mc: 1, kc: 1, nc: 1 },
+            Blocking { mc: 3, kc: 2, nc: 5 },
+            Blocking { mc: 16, kc: 64, nc: 7 },
+        ] {
+            let mut c = vec![0u128; m * n];
+            gemm_into(&Kernel8x4, &bl, &a, &b, m, k, n, &mut c);
+            assert_eq!(c, naive(&a, &b, m, k, n), "{bl:?}");
+        }
+    }
+
+    #[test]
+    fn accumulates_across_calls() {
+        // gemm_into adds into C: two identical calls double the result.
+        let mut rng = Rng::new(6);
+        let (m, k, n) = (5, 7, 6);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(12)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(12)).collect();
+        let mut c = vec![0u128; m * n];
+        let bl = Blocking::default();
+        gemm_into(&Kernel8x4, &bl, &a, &b, m, k, n, &mut c);
+        gemm_into(&Kernel8x4, &bl, &a, &b, m, k, n, &mut c);
+        let want: Vec<u128> = naive(&a, &b, m, k, n).iter().map(|&v| 2 * v).collect();
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn identity_and_edge_shapes() {
+        // 1×1×1, row×col, and identity sanity checks.
+        assert_eq!(gemm(&Kernel8x4, &[7], &[6], 1, 1, 1), vec![42u128]);
+        let a = [1u64, 2, 3]; // 1×3
+        let b = [4u64, 5, 6]; // 3×1
+        assert_eq!(gemm(&Kernel8x4, &a, &b, 1, 3, 1), vec![32u128]);
+        let id: Vec<u64> = (0..9).map(|i| u64::from(i % 4 == 0)).collect();
+        let x: Vec<u64> = (1..=9).collect();
+        assert_eq!(
+            gemm(&Kernel8x4, &id, &x, 3, 3, 3),
+            x.iter().map(|&v| v as u128).collect::<Vec<_>>()
+        );
+    }
+}

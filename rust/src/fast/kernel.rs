@@ -1,0 +1,159 @@
+//! Register-tile microkernels: the innermost loop of the fast engine.
+//!
+//! A [`Kernel`] computes one `MR × NR` tile of `C` from packed operand
+//! panels (see [`crate::fast::pack`]): `MR` rows of `A` and `NR` columns
+//! of `B`, both laid out depth-major so the `kc`-long inner loop walks
+//! each panel contiguously. Accumulation is native `u128` — products of
+//! `u64` operands are formed with the 64×64→128 widening multiply, so
+//! the microkernel is exact for any operands up to [`MAX_W`] bits at any
+//! practical GEMM depth (headroom `≥ 2^{64}` summands).
+//!
+//! The shape follows the rten/BLIS design: a fixed register tile sized
+//! so the `MR × NR` accumulators live in registers across the whole
+//! `kc` loop, with all edge handling pushed into zero-padded packing.
+
+/// Largest operand bitwidth the native engine guarantees exact results
+/// for (`u128` accumulator headroom covers `2w + ⌈log₂ K⌉ + shifts` for
+/// every digit-slice recombination at `w ≤ 32`). Wider inputs belong to
+/// the exact wide-integer reference path ([`crate::algo`]).
+pub const MAX_W: u32 = 32;
+
+/// An `MR × NR` register-tile microkernel over packed panels.
+pub trait Kernel {
+    /// Register-tile height: rows of `C` produced per call.
+    const MR: usize;
+    /// Register-tile width: columns of `C` produced per call.
+    const NR: usize;
+    /// Short label for benches and logs.
+    const NAME: &'static str;
+
+    /// Compute the `kc`-deep product of one packed A panel (`kc × MR`,
+    /// depth-major) and one packed B panel (`kc × NR`, depth-major),
+    /// overwriting `acc` (row-major `MR × NR`):
+    ///
+    /// `acc[r·NR + c] = Σ_k a_panel[k·MR + r] · b_panel[k·NR + c]`
+    fn run(&self, acc: &mut [u128], a_panel: &[u64], b_panel: &[u64], kc: usize);
+}
+
+/// The default 8×4 microkernel: 32 `u128` accumulators, fully unrolled
+/// over `NR`, broadcast of each `A` element against a contiguous `B`
+/// row. 8×4 keeps the accumulator set within the register budget of
+/// x86-64/aarch64 while giving the compiler independent chains to
+/// schedule.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Kernel8x4;
+
+impl Kernel for Kernel8x4 {
+    const MR: usize = 8;
+    const NR: usize = 4;
+    const NAME: &'static str = "8x4";
+
+    fn run(&self, acc: &mut [u128], a_panel: &[u64], b_panel: &[u64], kc: usize) {
+        debug_assert_eq!(acc.len(), Self::MR * Self::NR);
+        debug_assert!(a_panel.len() >= kc * Self::MR);
+        debug_assert!(b_panel.len() >= kc * Self::NR);
+        let mut t = [[0u128; 4]; 8];
+        for kk in 0..kc {
+            let ak: &[u64; 8] = a_panel[kk * 8..kk * 8 + 8].try_into().unwrap();
+            let bk: &[u64; 4] = b_panel[kk * 4..kk * 4 + 4].try_into().unwrap();
+            let b0 = bk[0] as u128;
+            let b1 = bk[1] as u128;
+            let b2 = bk[2] as u128;
+            let b3 = bk[3] as u128;
+            for r in 0..8 {
+                let av = ak[r] as u128;
+                t[r][0] += av * b0;
+                t[r][1] += av * b1;
+                t[r][2] += av * b2;
+                t[r][3] += av * b3;
+            }
+        }
+        for r in 0..8 {
+            for c in 0..4 {
+                acc[r * 4 + c] = t[r][c];
+            }
+        }
+    }
+}
+
+/// Scalar 1×1 reference kernel: the simplest possible implementation,
+/// used to cross-check the blocked driver and the packed layouts
+/// independently of any unrolling.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Kernel1x1;
+
+impl Kernel for Kernel1x1 {
+    const MR: usize = 1;
+    const NR: usize = 1;
+    const NAME: &'static str = "1x1-reference";
+
+    fn run(&self, acc: &mut [u128], a_panel: &[u64], b_panel: &[u64], kc: usize) {
+        debug_assert_eq!(acc.len(), 1);
+        let mut sum = 0u128;
+        for kk in 0..kc {
+            sum += a_panel[kk] as u128 * b_panel[kk] as u128;
+        }
+        acc[0] = sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Direct (unpacked) dot products for comparison.
+    fn expect_tile(a: &[u64], b: &[u64], mr: usize, nr: usize, kc: usize) -> Vec<u128> {
+        let mut out = vec![0u128; mr * nr];
+        for r in 0..mr {
+            for c in 0..nr {
+                for kk in 0..kc {
+                    out[r * nr + c] += a[kk * mr + r] as u128 * b[kk * nr + c] as u128;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn kernel8x4_matches_reference_tile() {
+        let mut rng = Rng::new(1);
+        for kc in [1usize, 2, 7, 64] {
+            let a: Vec<u64> = (0..kc * 8).map(|_| rng.bits(32)).collect();
+            let b: Vec<u64> = (0..kc * 4).map(|_| rng.bits(32)).collect();
+            let mut acc = vec![0u128; 32];
+            Kernel8x4.run(&mut acc, &a, &b, kc);
+            assert_eq!(acc, expect_tile(&a, &b, 8, 4, kc), "kc={kc}");
+        }
+    }
+
+    #[test]
+    fn kernel8x4_overwrites_stale_acc() {
+        let mut rng = Rng::new(2);
+        let a: Vec<u64> = (0..8).map(|_| rng.bits(16)).collect();
+        let b: Vec<u64> = (0..4).map(|_| rng.bits(16)).collect();
+        let mut acc = vec![u128::MAX; 32];
+        Kernel8x4.run(&mut acc, &a, &b, 1);
+        assert_eq!(acc, expect_tile(&a, &b, 8, 4, 1));
+    }
+
+    #[test]
+    fn kernel1x1_is_a_dot_product() {
+        let a = [3u64, 5, 7];
+        let b = [2u64, 4, 6];
+        let mut acc = [0u128; 1];
+        Kernel1x1.run(&mut acc, &a, &b, 3);
+        assert_eq!(acc[0], (6 + 20 + 42) as u128);
+    }
+
+    #[test]
+    fn max_width_operands_do_not_overflow() {
+        // 2^32−1 squared, 64 deep: the largest tile the contract allows.
+        let a = vec![u32::MAX as u64; 64 * 8];
+        let b = vec![u32::MAX as u64; 64 * 4];
+        let mut acc = vec![0u128; 32];
+        Kernel8x4.run(&mut acc, &a, &b, 64);
+        let want = (u32::MAX as u128 * u32::MAX as u128) * 64;
+        assert!(acc.iter().all(|&v| v == want));
+    }
+}

@@ -1,0 +1,184 @@
+//! The Karatsuba digit-slice GEMM driver — Algorithm 4 on the fast
+//! engine, without the op-count machinery.
+//!
+//! One recursion level splits every `w`-bit element into high/low digit
+//! planes, forms the digit-sum planes, and runs **three** sub-GEMMs on
+//! the blocked driver instead of the conventional four:
+//!
+//! ```text
+//!   (A1, A0) = split(A, w);   As = A1 + A0        (O(d²) adds)
+//!   (B1, B0) = split(B, w);   Bs = B1 + B0
+//!   C1 = A1·B1,  Cs = As·Bs,  C0 = A0·B0          (3 sub-GEMMs)
+//!   C  = C1 ≪ 2⌈w/2⌉  +  (Cs − C1 − C0) ≪ ⌈w/2⌉  +  C0
+//! ```
+//!
+//! This is line-for-line the recombination of [`crate::algo::kmm()`]
+//! (including the ≪ 2⌈w/2⌉ erratum shift), with [`Tally`] bookkeeping
+//! replaced by native `u128` arithmetic and the digit-plane formation
+//! shared through [`crate::algo::bits::split_planes`]. `n = 2^r` digits
+//! recurse `r` levels, giving `3^r` leaf GEMMs (vs the conventional
+//! `4^r`) — the paper's multiplication saving, here traded against the
+//! fact that a software `u64` multiplier is equally fast at every
+//! width, which is exactly why the bench pits `fast::kmm` against
+//! [`fast::gemm`](crate::fast::gemm::gemm) and both against the tallied
+//! references.
+//!
+//! The cross term `Cs − C1 − C0` is elementwise non-negative
+//! (§III-B.4), so unsigned `u128` subtraction is exact.
+//!
+//! [`Tally`]: crate::algo::opcount::Tally
+
+use crate::algo::bits;
+use crate::fast::gemm::{gemm_into, Blocking};
+use crate::fast::kernel::{Kernel, MAX_W};
+
+/// Compute `C = A·B` by the `digits = 2^r`-digit Karatsuba matrix
+/// decomposition over `w`-bit elements (`digits = 1` degenerates to the
+/// plain blocked GEMM). Returns the row-major `u128` product.
+///
+/// Requires a valid `(digits, w)` configuration (power-of-two digits,
+/// `digits ≤ w`) and `w ≤` [`MAX_W`] so every shifted partial fits the
+/// `u128` accumulators; operands must fit `w` bits.
+pub fn kmm<K: Kernel>(
+    kernel: &K,
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+) -> Vec<u128> {
+    assert!(
+        bits::config_valid(digits, w),
+        "invalid KMM config digits={digits} w={w}"
+    );
+    assert!(
+        w <= MAX_W,
+        "w={w} exceeds the fast engine's {MAX_W}-bit ceiling (use algo::kmm)"
+    );
+    debug_assert!(
+        a.iter().chain(b).all(|&x| bits::fits(x, w)),
+        "operand exceeds w={w} bits"
+    );
+    let mut out = vec![0u128; m * n];
+    kmm_rec(kernel, a, b, m, k, n, w, digits, &mut out);
+    out
+}
+
+/// Recursive worker: accumulates `A·B` into `out` (callers pass zeroed
+/// or partially accumulated buffers, mirroring `gemm_into`).
+#[allow(clippy::too_many_arguments)]
+fn kmm_rec<K: Kernel>(
+    kernel: &K,
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+    out: &mut [u128],
+) {
+    if digits == 1 {
+        gemm_into(kernel, &Blocking::default(), a, b, m, k, n, out);
+        return;
+    }
+    let wl = bits::lo_width(w);
+    let wh = bits::hi_width(w);
+    let (a1, a0) = bits::split_planes_vec(a, w);
+    let (b1, b0) = bits::split_planes_vec(b, w);
+    let a_s = bits::digit_sum_plane(&a1, &a0);
+    let b_s = bits::digit_sum_plane(&b1, &b0);
+
+    let mut c1 = vec![0u128; m * n];
+    let mut c_s = vec![0u128; m * n];
+    let mut c0 = vec![0u128; m * n];
+    kmm_rec(kernel, &a1, &b1, m, k, n, wh, digits / 2, &mut c1);
+    kmm_rec(kernel, &a_s, &b_s, m, k, n, wl + 1, digits / 2, &mut c_s);
+    kmm_rec(kernel, &a0, &b0, m, k, n, wl, digits / 2, &mut c0);
+
+    for i in 0..m * n {
+        // Non-negative by Σ(a1+a0)(b1+b0) ≥ Σa1b1 + Σa0b0 elementwise.
+        let cross = c_s[i] - c1[i] - c0[i];
+        out[i] += (c1[i] << (2 * wl)) + (cross << wl) + c0[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fast::gemm::gemm;
+    use crate::fast::kernel::Kernel8x4;
+    use crate::util::prop::{forall, prop_assert_eq, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kmm_known_2x2() {
+        let a = [0x12u64, 0x34, 0x56, 0x78];
+        let b = [0x9Au64, 0xBC, 0xDE, 0xF0];
+        let got = kmm(&Kernel8x4, &a, &b, 2, 2, 2, 8, 2);
+        let want = gemm(&Kernel8x4, &a, &b, 2, 2, 2);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn kmm_matches_plain_gemm_prop() {
+        forall(Config::default().cases(80), |rng| {
+            let digits = *rng.pick(&[1u32, 2, 4, 8]);
+            let widths: Vec<u32> = [4u32, 8, 16, 32].into_iter().filter(|&w| w >= digits).collect();
+            let w = *rng.pick(&widths);
+            let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            prop_assert_eq(
+                kmm(&Kernel8x4, &a, &b, m, k, n, w, digits),
+                gemm(&Kernel8x4, &a, &b, m, k, n),
+                &format!("fast KMM_{digits}^[{w}] == fast MM ({m}x{k}x{n})"),
+            )
+        });
+    }
+
+    #[test]
+    fn kmm_max_width_all_ones() {
+        // Adversarial w = 32 all-ones inputs maximize every digit sum
+        // and recombination shift; deep K stresses accumulator headroom.
+        let (m, k, n) = (4usize, 64usize, 4usize);
+        let a = vec![u32::MAX as u64; m * k];
+        let b = vec![u32::MAX as u64; k * n];
+        for digits in [2u32, 4, 8] {
+            assert_eq!(
+                kmm(&Kernel8x4, &a, &b, m, k, n, 32, digits),
+                gemm(&Kernel8x4, &a, &b, m, k, n),
+                "digits={digits}"
+            );
+        }
+    }
+
+    #[test]
+    fn kmm_odd_widths_exact() {
+        let mut rng = Rng::new(9);
+        for w in [3u32, 5, 7, 13, 21, 31] {
+            let (m, k, n) = (3, 5, 4);
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            assert_eq!(
+                kmm(&Kernel8x4, &a, &b, m, k, n, w, 2),
+                gemm(&Kernel8x4, &a, &b, m, k, n),
+                "w={w}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid KMM config")]
+    fn kmm_rejects_non_power_of_two_digits() {
+        kmm(&Kernel8x4, &[1], &[1], 1, 1, 1, 8, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the fast engine")]
+    fn kmm_rejects_overwide() {
+        kmm(&Kernel8x4, &[1], &[1], 1, 1, 1, 40, 2);
+    }
+}

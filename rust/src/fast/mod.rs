@@ -1,0 +1,88 @@
+//! The fast GEMM execution engine: a production software hot path for
+//! integer matrix multiplication, with both conventional and Karatsuba
+//! digit-slice drivers.
+//!
+//! Everything in [`crate::algo`] is *instrumented ground truth*: every
+//! element flows through [`I256`] accumulators and a [`Tally`], which
+//! makes those implementations ideal for validating complexity claims
+//! and useless as a serving hot path. This module is the opposite
+//! trade: native `u64`/`u128` arithmetic, no tallying, cache-aware
+//! blocking — and bit-exact agreement with the references, enforced by
+//! property tests (`tests/integration_fast.rs`).
+//!
+//! # Design
+//!
+//! Three layers, innermost first (the rten/BLIS shape):
+//!
+//! - [`kernel`] — the [`Kernel`] trait: fixed `MR × NR` register-tile
+//!   microkernels whose accumulators stay in registers across the whole
+//!   depth loop. [`Kernel8x4`] is the default; [`Kernel1x1`] is the
+//!   scalar cross-check.
+//! - [`pack`] — operand packing into depth-major panels: contiguous
+//!   kernel reads, and zero-padded edges so the microkernel never
+//!   branches on bounds.
+//! - [`gemm`] — the blocked driver: `NC`-wide B slabs, `KC`-deep packed
+//!   blocks, `MC`-tall packed A blocks, register tiles innermost; each
+//!   depth block accumulates into the shared `u128` output buffer.
+//!
+//! # The KMM digit-slice driver
+//!
+//! [`kmm`] lifts Algorithm 4 onto this engine: split `w`-bit inputs
+//! into digit planes (via [`crate::algo::bits::split_planes`], the same
+//! primitive the exact layer uses), run `A1·B1`, `As·Bs`, `A0·B0` as
+//! three native sub-GEMMs, and recombine with the paper's shifts. Per
+//! recursion level that is 3 sub-GEMMs against the conventional 4 —
+//! the multiplication saving the custom hardware exploits — while the
+//! extra digit-plane additions stay O(d²).
+//!
+//! On *software*, a `u64` multiplier costs the same at every operand
+//! width, so the digit-slice detour does not pay off the way it does in
+//! hardware; `benches/hotpath.rs` measures exactly this trade
+//! (fast-KMM vs fast-MM vs the tallied references). The point of
+//! `fast::kmm` is a bit-exact, natively-fast executable model of the
+//! decomposition the accelerator runs, behind the same [`GemmBackend`]
+//! interface the cycle-model backends serve.
+//!
+//! # Width contract
+//!
+//! The engine is exact for operands up to [`MAX_W`] (= 32) bits: a
+//! product fits 64 bits, `u128` accumulation has ≥ 2⁶⁴ summands of
+//! headroom, and every Karatsuba recombination shift keeps values below
+//! 2¹²⁸. Wider inputs (up to the paper's w = 64) stay on the exact
+//! [`I256`] reference path.
+//!
+//! [`I256`]: crate::util::wide::I256
+//! [`Tally`]: crate::algo::opcount::Tally
+//! [`GemmBackend`]: crate::coordinator::dispatch::GemmBackend
+//! [`Kernel`]: kernel::Kernel
+//! [`Kernel8x4`]: kernel::Kernel8x4
+//! [`Kernel1x1`]: kernel::Kernel1x1
+//! [`kmm`]: kmm::kmm
+
+pub mod gemm;
+pub mod kernel;
+pub mod kmm;
+pub mod pack;
+
+pub use gemm::{gemm_into, Blocking};
+pub use kernel::{Kernel, Kernel1x1, Kernel8x4, MAX_W};
+
+/// Conventional blocked GEMM with the default kernel and blocking:
+/// `C = A·B` over row-major `w ≤ 32`-bit inputs (see [`gemm::gemm`]).
+pub fn mm(a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<u128> {
+    gemm::gemm(&Kernel8x4, a, b, m, k, n)
+}
+
+/// Karatsuba digit-slice GEMM with the default kernel: Algorithm 4 with
+/// `digits = 2^r` over the blocked driver (see [`kmm::kmm`]).
+pub fn kmm_digits(
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+) -> Vec<u128> {
+    kmm::kmm(&Kernel8x4, a, b, m, k, n, w, digits)
+}

@@ -1,0 +1,138 @@
+//! Operand packing: rearrange cache blocks of `A` and `B` into the
+//! depth-major panel layouts the microkernels consume.
+//!
+//! Packing serves two purposes (the rten/BLIS rationale):
+//!
+//! 1. **Contiguity** — inside the `kc` loop the kernel reads one `MR`-
+//!    wide (resp. `NR`-wide) chunk per step, sequentially. Without
+//!    packing, the B walk would stride by the full row length `n` every
+//!    iteration and the A walk by `k`.
+//! 2. **Edge-free microkernels** — blocks whose height/width is not a
+//!    multiple of `MR`/`NR` are zero-padded during packing, so the
+//!    kernel never branches on bounds; `0 · x` contributes nothing and
+//!    the driver simply skips padded rows/columns on writeback.
+//!
+//! Panel layouts (`p` indexes panels, `kk` the depth within the block):
+//!
+//! ```text
+//!   A block (rows × kc)  →  ⌈rows/MR⌉ panels of [kk][r]   (kc × MR each)
+//!   B block (kc × cols)  →  ⌈cols/NR⌉ panels of [kk][c]   (kc × NR each)
+//! ```
+
+/// Pack the `rows × cols` block of row-major `src` (row stride `lda`)
+/// starting at `(row0, col0)` into `MR`-row panels, zero-padding the
+/// final panel. `dst` is cleared and refilled; its final length is
+/// `⌈rows/mr⌉ · cols · mr`.
+pub fn pack_a(
+    dst: &mut Vec<u64>,
+    src: &[u64],
+    lda: usize,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    mr: usize,
+) {
+    let panels = rows.div_ceil(mr);
+    dst.clear();
+    dst.reserve(panels * cols * mr);
+    for p in 0..panels {
+        for kk in 0..cols {
+            for r in 0..mr {
+                let row = p * mr + r;
+                dst.push(if row < rows {
+                    src[(row0 + row) * lda + col0 + kk]
+                } else {
+                    0
+                });
+            }
+        }
+    }
+}
+
+/// Pack the `rows × cols` block of row-major `src` (row stride `ldb`)
+/// starting at `(row0, col0)` into `NR`-column panels, zero-padding the
+/// final panel. `dst` is cleared and refilled; its final length is
+/// `⌈cols/nr⌉ · rows · nr`.
+pub fn pack_b(
+    dst: &mut Vec<u64>,
+    src: &[u64],
+    ldb: usize,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    nr: usize,
+) {
+    let panels = cols.div_ceil(nr);
+    dst.clear();
+    dst.reserve(panels * rows * nr);
+    for p in 0..panels {
+        for kk in 0..rows {
+            for c in 0..nr {
+                let col = p * nr + c;
+                dst.push(if col < cols {
+                    src[(row0 + kk) * ldb + col0 + col]
+                } else {
+                    0
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_exact_multiple() {
+        // 4×2 block of a 4×3 matrix, MR = 2 → 2 panels, depth-major.
+        let src: Vec<u64> = (1..=12).collect(); // 4×3 row-major
+        let mut dst = Vec::new();
+        pack_a(&mut dst, &src, 3, 0, 4, 0, 2, 2);
+        // Panel 0 (rows 0–1): k=0 → [1, 4], k=1 → [2, 5]
+        // Panel 1 (rows 2–3): k=0 → [7, 10], k=1 → [8, 11]
+        assert_eq!(dst, vec![1, 4, 2, 5, 7, 10, 8, 11]);
+    }
+
+    #[test]
+    fn pack_a_zero_pads_ragged_tail() {
+        let src: Vec<u64> = (1..=6).collect(); // 3×2
+        let mut dst = Vec::new();
+        pack_a(&mut dst, &src, 2, 0, 3, 0, 2, 2);
+        // Panel 1 holds row 2 plus a zero row.
+        assert_eq!(dst, vec![1, 3, 2, 4, 5, 0, 6, 0]);
+    }
+
+    #[test]
+    fn pack_b_exact_multiple() {
+        let src: Vec<u64> = (1..=12).collect(); // 3×4
+        let mut dst = Vec::new();
+        pack_b(&mut dst, &src, 4, 0, 3, 0, 4, 2);
+        // Panel 0 (cols 0–1): rows 0,1,2 → [1,2], [5,6], [9,10]
+        // Panel 1 (cols 2–3): [3,4], [7,8], [11,12]
+        assert_eq!(dst, vec![1, 2, 5, 6, 9, 10, 3, 4, 7, 8, 11, 12]);
+    }
+
+    #[test]
+    fn pack_b_zero_pads_ragged_tail() {
+        let src: Vec<u64> = (1..=6).collect(); // 2×3
+        let mut dst = Vec::new();
+        pack_b(&mut dst, &src, 3, 0, 2, 0, 3, 2);
+        // Panel 1 holds col 2 plus a zero column.
+        assert_eq!(dst, vec![1, 2, 4, 5, 3, 0, 6, 0]);
+    }
+
+    #[test]
+    fn packs_interior_blocks() {
+        // Offsets row0/col0 select an interior sub-block.
+        let src: Vec<u64> = (0..20).collect(); // 4×5
+        let mut dst = Vec::new();
+        pack_a(&mut dst, &src, 5, 1, 2, 2, 2, 2);
+        // Rows 1–2, cols 2–3: elements 7,8 / 12,13, depth-major.
+        assert_eq!(dst, vec![7, 12, 8, 13]);
+        pack_b(&mut dst, &src, 5, 1, 2, 2, 2, 2);
+        assert_eq!(dst, vec![7, 8, 12, 13]);
+    }
+}

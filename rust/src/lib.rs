@@ -2,28 +2,56 @@
 //!
 //! A reproduction of *"Karatsuba Matrix Multiplication and its Efficient
 //! Custom Hardware Implementations"* (Pogue & Nicolici, IEEE Trans.
-//! Computers, 2025) as a three-layer Rust + JAX + Pallas system:
+//! Computers, 2025; arXiv:2501.08889) as a three-layer Rust + JAX +
+//! Pallas system:
 //!
 //! - [`algo`] — exact executable Algorithms 1–5 with operation counting,
 //!   plus the closed-form complexity equations (2)–(8).
-//! - `arch` — structural + cycle-timed models of the paper's hardware:
+//! - [`arch`] — structural + cycle-timed models of the paper's hardware:
 //!   the baseline MM₁ systolic array, the fixed-precision KMM architecture,
 //!   the precision-scalable KMM architecture, and the FFIP baseline.
-//! - `area` — Area-Unit and FPGA resource/frequency models (eqs. 16–23).
-//! - `sim` — cycle-level GEMM simulation (tiling, tile re-read streams,
+//! - [`area`] — Area-Unit and FPGA resource/frequency models (eqs. 16–23).
+//! - [`fast`] — the software hot path: a blocked GEMM execution engine
+//!   with register-tile microkernels, packing, and both conventional and
+//!   Karatsuba digit-slice drivers (native arithmetic, no tallying).
+//! - [`sim`] — cycle-level GEMM simulation (tiling, tile re-read streams,
 //!   out-of-array accumulation).
-//! - `coordinator` — the L3 runtime: scheduler, precision-mode control,
-//!   batched request serving, metrics (eqs. 11–15, 23).
-//! - `runtime` — PJRT executable loading (AOT HLO-text artifacts produced
-//!   by `python/compile/aot.py`).
-//! - `model` — ResNet/VGG GEMM workload tables and generators.
-//! - `report` — regenerators for every table and figure in the paper.
-//! - [`util`] — dependency-free RNG, property harness, wide ints, CLI.
+//! - [`coordinator`] — the L3 runtime: scheduler, precision-mode control,
+//!   backend dispatch, batched request serving, metrics (eqs. 11–15, 23).
+//! - [`runtime`] — PJRT executable loading (AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py`; requires the `pjrt` feature).
+//! - [`model`] — ResNet/VGG GEMM workload tables and generators.
+//! - [`report`] — regenerators for every table and figure in the paper.
+//! - [`util`] — dependency-free RNG, property harness, wide ints, JSON,
+//!   error handling, CLI.
+//!
+//! # Quickstart
+//!
+//! Multiply two 8-bit matrices three ways — the exact tallied reference
+//! ([`algo::kmm()`]), the fast engine ([`fast::kmm_digits`]), and the
+//! oracle — and observe bit-identical results:
+//!
+//! ```
+//! use kmm::algo::{matmul_oracle, Mat, Tally};
+//! use kmm::fast;
+//!
+//! let a = Mat::from_rows(2, 2, &[0x12, 0x34, 0x56, 0x78]);
+//! let b = Mat::from_rows(2, 2, &[0x9A, 0xBC, 0xDE, 0xF0]);
+//!
+//! let mut tally = Tally::new();
+//! let exact = kmm::algo::kmm(&a, &b, 8, 2, &mut tally);
+//! assert_eq!(exact, matmul_oracle(&a, &b));
+//!
+//! let fast_c = fast::kmm_digits(a.data(), b.data(), 2, 2, 2, 8, 2);
+//! let fast_i128: Vec<i128> = fast_c.iter().map(|&v| v as i128).collect();
+//! assert_eq!(exact.to_i128_vec().unwrap(), fast_i128);
+//! ```
 
 pub mod algo;
 pub mod arch;
 pub mod area;
 pub mod coordinator;
+pub mod fast;
 pub mod model;
 pub mod report;
 pub mod runtime;

@@ -3,8 +3,10 @@
 //! Subcommands:
 //!   table1 | table2 | table3      regenerate the paper's tables
 //!   fig5 | fig11 | fig12          regenerate the paper's figures
-//!   gemm --m --k --n --w [--backend pjrt] one GEMM through the stack
-//!   serve [--requests N]          batched serving demo (functional)
+//!   gemm --m --k --n --w [--backend functional|pjrt|fast-kmm|fast-mm]
+//!                                 one GEMM through the stack
+//!   serve [--requests N] [--backend functional|fast-kmm|fast-mm]
+//!                                 batched serving demo
 //!   schedule --workload FILE|resnet50|resnet101|resnet152|vgg16 [--w W]
 //!                                 per-layer plan + aggregate metrics
 //!   export --model resnet50 --w 8 [--out FILE]  dump a workload JSON
@@ -12,7 +14,7 @@
 
 use kmm::algo::matrix::{matmul_oracle, Mat};
 use kmm::area::au::ArrayCfg;
-use kmm::coordinator::dispatch::{FunctionalBackend, GemmBackend, PjrtBackend};
+use kmm::coordinator::dispatch::{FastAlgo, FastBackend, FunctionalBackend, GemmBackend, PjrtBackend};
 use kmm::coordinator::scheduler::schedule;
 use kmm::coordinator::server::{Server, ServerConfig};
 use kmm::arch::scalable::ScalableKmm;
@@ -43,7 +45,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|serve|schedule|export|info> [options]\n{}",
-                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend pjrt|functional]\n  serve    [--requests 32]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]"
+                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]"
             );
             2
         }
@@ -54,6 +56,22 @@ fn main() {
 fn print_ok(s: String) -> i32 {
     println!("{s}");
     0
+}
+
+/// The `--backend` names servable without thread-affine setup (the
+/// `pjrt` backend is handled separately where supported: it must be
+/// built on the thread that will use it).
+const SOFTWARE_BACKENDS: &[&str] = &["functional", "fast-kmm", "fast-mm"];
+
+/// Build a software backend by name; `None` for names outside
+/// [`SOFTWARE_BACKENDS`].
+fn software_backend(name: &str) -> Option<Box<dyn GemmBackend>> {
+    match name {
+        "functional" => Some(Box::new(FunctionalBackend::paper())),
+        "fast-kmm" => Some(Box::new(FastBackend::new(FastAlgo::Kmm))),
+        "fast-mm" => Some(Box::new(FastBackend::new(FastAlgo::Mm))),
+        _ => None,
+    }
 }
 
 fn cmd_gemm(args: &Args) -> i32 {
@@ -74,7 +92,15 @@ fn cmd_gemm(args: &Args) -> i32 {
                 return 2;
             }
         },
-        _ => Box::new(FunctionalBackend::paper()),
+        name => match software_backend(name) {
+            Some(be) => be,
+            None => {
+                eprintln!(
+                    "unknown backend `{name}` (functional|pjrt|fast-kmm|fast-mm)"
+                );
+                return 2;
+            }
+        },
     };
     match be.gemm(&a, &b, w) {
         Ok(r) => {
@@ -97,8 +123,15 @@ fn cmd_gemm(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     let requests: usize = args.get("requests", 32).unwrap();
+    let backend = args.get_str("backend", "functional");
+    // Validate the name up front (the worker factory runs too late for
+    // a friendly error; `pjrt` is thread-affine and not servable here).
+    if !SOFTWARE_BACKENDS.contains(&backend.as_str()) {
+        eprintln!("unknown serve backend `{backend}` (functional|fast-kmm|fast-mm)");
+        return 2;
+    }
     let mut srv = Server::start(
-        || Box::new(FunctionalBackend::paper()),
+        move || software_backend(&backend).expect("name validated above"),
         ServerConfig::default(),
     );
     let mut rng = Rng::new(5);

@@ -12,12 +12,34 @@ use crate::util::json::Json;
 use std::fmt::Write as _;
 
 /// Workload parse failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WorkloadIoError {
-    #[error("json: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("workload field missing or invalid: {0}")]
+    Json(crate::util::json::JsonError),
     Field(String),
+}
+
+impl std::fmt::Display for WorkloadIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkloadIoError::Json(e) => write!(f, "json: {e}"),
+            WorkloadIoError::Field(s) => write!(f, "workload field missing or invalid: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for WorkloadIoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WorkloadIoError::Json(e) => Some(e),
+            WorkloadIoError::Field(_) => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for WorkloadIoError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        WorkloadIoError::Json(e)
+    }
 }
 
 fn field(g: &Json, idx: usize, key: &str) -> Result<i64, WorkloadIoError> {

@@ -43,19 +43,46 @@ pub struct Manifest {
 }
 
 /// Manifest loading/validation failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {path}: {source}")]
     Io {
         path: PathBuf,
         source: std::io::Error,
     },
-    #[error("manifest parse error: {0}")]
-    Parse(#[from] crate::util::json::JsonError),
-    #[error("manifest missing field `{0}`")]
+    Parse(crate::util::json::JsonError),
     Missing(&'static str),
-    #[error("artifact file missing: {0}")]
     MissingArtifact(PathBuf),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io { path, source } => {
+                write!(f, "cannot read {}: {source}", path.display())
+            }
+            ManifestError::Parse(e) => write!(f, "manifest parse error: {e}"),
+            ManifestError::Missing(field) => write!(f, "manifest missing field `{field}`"),
+            ManifestError::MissingArtifact(path) => {
+                write!(f, "artifact file missing: {}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io { source, .. } => Some(source),
+            ManifestError::Parse(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for ManifestError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        ManifestError::Parse(e)
+    }
 }
 
 fn specs(j: &Json) -> Result<Vec<TensorSpec>, ManifestError> {

@@ -1,17 +1,29 @@
 //! PJRT runtime: load AOT HLO-text artifacts and execute them from the
 //! Rust hot path.
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! HLO *text* is the interchange format — jax ≥ 0.5 emits protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! With the `pjrt` cargo feature enabled this wraps the `xla` crate
+//! (PJRT C API): `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute`. HLO *text* is the interchange format
+//! — jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
 //!
-//! One compiled executable per entrypoint, cached for the lifetime of the
-//! runtime; Python is never on this path.
+//! One compiled executable per entrypoint, cached for the lifetime of
+//! the runtime; Python is never on this path.
+//!
+//! Without the feature (the default — the offline dependency set has no
+//! `xla` crate), a stub [`Runtime`] is compiled whose `load` returns a
+//! descriptive error, so every artifact-dependent caller degrades to
+//! its "artifacts unavailable" path and the rest of the crate is
+//! unaffected.
 
-use crate::runtime::artifacts::{Entrypoint, Manifest};
-use anyhow::{bail, Context, Result};
+use crate::runtime::artifacts::Manifest;
+use crate::util::error::Result;
+
+#[cfg(feature = "pjrt")]
+use crate::runtime::artifacts::Entrypoint;
+#[cfg(feature = "pjrt")]
+use crate::util::error::{bail, Context};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 
 /// A typed host tensor crossing the runtime boundary.
@@ -40,13 +52,37 @@ impl HostTensor {
 
 /// The PJRT-backed executable cache.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
     manifest: Manifest,
     /// Executions performed (observability).
     pub executions: u64,
 }
 
+impl Runtime {
+    /// Convenience: load from an artifacts directory.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        Self::load(Manifest::load(dir)?)
+    }
+
+    /// The manifest this runtime serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Entrypoints available.
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest
+            .entrypoints
+            .iter()
+            .map(|e| e.name.as_str())
+            .collect()
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client and compile every manifest entrypoint.
     pub fn load(manifest: Manifest) -> Result<Runtime> {
@@ -70,24 +106,9 @@ impl Runtime {
         })
     }
 
-    /// Convenience: load from an artifacts directory.
-    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
-        Ok(Self::load(Manifest::load(dir)?)?)
-    }
-
-    /// The manifest this runtime serves.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
     /// PJRT platform string (diagnostics).
     pub fn platform(&self) -> String {
         self.client.platform_name()
-    }
-
-    /// Entrypoints available.
-    pub fn names(&self) -> Vec<&str> {
-        self.manifest.entrypoints.iter().map(|e| e.name.as_str()).collect()
     }
 
     fn entry(&self, name: &str) -> Result<&Entrypoint> {
@@ -143,6 +164,31 @@ impl Runtime {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub: the crate was built without the `pjrt` feature, so no PJRT
+    /// client exists. Always errors; artifact-dependent callers fall
+    /// back exactly as when artifacts are absent.
+    pub fn load(manifest: Manifest) -> Result<Runtime> {
+        let _ = manifest;
+        crate::bail!(
+            "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+             (add the `xla` crate to rust/Cargo.toml and build with --features pjrt)"
+        )
+    }
+
+    /// Stub platform string.
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Stub execute: always errors (a stub `Runtime` cannot be
+    /// constructed, so this is unreachable in practice).
+    pub fn execute(&mut self, name: &str, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        crate::bail!("PJRT runtime unavailable: cannot execute `{name}` without the `pjrt` feature")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,5 +204,20 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn host_tensor_rejects_bad_shape() {
         HostTensor::new(vec![2, 2], vec![1, 2, 3]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let dir = std::env::temp_dir().join(format!("kmm_stub_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"tile": 128, "entrypoints": {}}"#,
+        )
+        .unwrap();
+        let err = Runtime::from_dir(&dir).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,217 @@
+//! Minimal `anyhow`-style error handling.
+//!
+//! The offline dependency set has no `anyhow` crate, so this module
+//! provides the small subset the coordinator and runtime use: an opaque
+//! [`Error`] holding a message chain, a [`Result`] alias, the
+//! [`Context`] extension trait for `Result`/`Option`, and the [`bail!`]
+//! and [`format_err!`] macros.
+//!
+//! Formatting follows `anyhow` conventions: `{}` prints the outermost
+//! message only, `{:#}` prints the whole chain separated by `": "`.
+//!
+//! [`bail!`]: crate::bail
+//! [`format_err!`]: crate::format_err
+
+use std::fmt;
+
+/// An opaque error: a chain of human-readable messages, outermost first.
+///
+/// Any `std::error::Error` converts into it (capturing its `source()`
+/// chain), so `?` works across concrete error types exactly as with
+/// `anyhow::Error`.
+pub struct Error {
+    /// Message chain, outermost context first, root cause last.
+    chain: Vec<String>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a single message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        for cause in &self.chain[1..] {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// The `anyhow` coherence trick: `Error` deliberately does NOT implement
+// `std::error::Error`, which lets this blanket conversion exist without
+// overlapping the reflexive `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)).into())
+    };
+}
+
+/// Build an [`Error`] from a format string (the `anyhow!` equivalent).
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+// Path-based imports (`use crate::util::error::bail`) for the exported
+// macros, so call sites read like the `anyhow` originals.
+pub use crate::{bail, format_err};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Leaf;
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "leaf failure")
+        }
+    }
+    impl std::error::Error for Leaf {}
+
+    fn fails() -> Result<()> {
+        Err(Leaf)?;
+        Ok(())
+    }
+
+    #[test]
+    fn display_outermost_only() {
+        let e = Error::msg("root").context("outer");
+        assert_eq!(e.to_string(), "outer");
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "leaf failure");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), Leaf> = Err(Leaf);
+        let e = r.context("while doing x").unwrap_err();
+        assert_eq!(format!("{e:#}"), "while doing x: leaf failure");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "y")).unwrap_err();
+        assert_eq!(e.to_string(), "missing y");
+        assert_eq!(Some(1).context("present").unwrap(), 1);
+    }
+
+    #[test]
+    fn source_chain_captured() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "inner io");
+        let e: Error = Error::from(io).context("reading file");
+        assert_eq!(format!("{e:#}"), "reading file: inner io");
+    }
+
+    #[test]
+    fn bail_and_format_err() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("x must be nonzero (got {x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "x must be nonzero (got 0)");
+        let e = format_err!("w={} too wide", 99);
+        assert_eq!(e.to_string(), "w=99 too wide");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer") && d.contains("Caused by") && d.contains("root"));
+    }
+}

@@ -1,7 +1,9 @@
 //! Dependency-free utilities: deterministic RNG, property-test harness,
-//! wide integer arithmetic, and a small CLI argument parser.
+//! wide integer arithmetic, error handling, and a small CLI argument
+//! parser.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,184 @@
+//! Fast-engine integration: the native blocked GEMM engine
+//! (`fast::mm`, `fast::kmm_digits`, and the `FastBackend` serving path)
+//! must be **bit-exact** against the instrumented exact references in
+//! `algo` (`mm1`, `kmm`) across random shapes, the deployment bitwidths
+//! `w ∈ {4, 8, 16, 32}`, and every supported digit count.
+
+use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::algo::opcount::Tally;
+use kmm::algo::{kmm as kmm_ref, mm1};
+use kmm::coordinator::dispatch::{FastAlgo, FastBackend, GemmBackend};
+use kmm::coordinator::server::{Server, ServerConfig};
+use kmm::fast;
+use kmm::fast::gemm::gemm;
+use kmm::fast::kernel::{Kernel1x1, Kernel8x4};
+use kmm::util::prop::{forall, forall_pairs, prop_assert, prop_assert_eq, Config};
+use kmm::util::rng::Rng;
+
+/// The fast engine's `u128` results, widened for comparison against the
+/// references' `I256` accumulators (all values are non-negative).
+fn fast_as_i128(c: &[u128]) -> Vec<i128> {
+    c.iter()
+        .map(|&v| i128::try_from(v).expect("fast value exceeds i128"))
+        .collect()
+}
+
+#[test]
+fn fast_mm_matches_mm1_reference_prop() {
+    forall(Config::default().cases(120), |rng| {
+        let w = *rng.pick(&[4u32, 8, 16, 32]);
+        let (m, k, n) = (rng.range(1, 24), rng.range(1, 24), rng.range(1, 24));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let mut tally = Tally::new();
+        let want = mm1(&a, &b, w, &mut tally).to_i128_vec().unwrap();
+        let got = fast_as_i128(&fast::mm(a.data(), b.data(), m, k, n));
+        prop_assert_eq(got, want, &format!("fast MM == mm1 ({m}x{k}x{n} w={w})"))
+    });
+}
+
+#[test]
+fn fast_kmm_matches_kmm_reference_all_digit_counts() {
+    // Exhaustive (digits, w) grid at the deployment widths, random
+    // shapes inside each cell.
+    forall_pairs(&[1u32, 2, 4, 8], &[4u32, 8, 16, 32], |digits, w| {
+        if w < digits {
+            return Ok(()); // invalid config (more digits than bits)
+        }
+        let mut rng = Rng::new(u64::from(digits) << 8 | u64::from(w));
+        for _ in 0..12 {
+            let (m, k, n) = (rng.range(1, 16), rng.range(1, 16), rng.range(1, 16));
+            let a = Mat::random(m, k, w, &mut rng);
+            let b = Mat::random(k, n, w, &mut rng);
+            let mut tally = Tally::new();
+            let want = kmm_ref(&a, &b, w, digits, &mut tally).to_i128_vec().unwrap();
+            let got = fast_as_i128(&fast::kmm_digits(a.data(), b.data(), m, k, n, w, digits));
+            prop_assert_eq(
+                got,
+                want,
+                &format!("fast KMM_{digits}^[{w}] == algo::kmm ({m}x{k}x{n})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fast_paths_match_oracle_adversarial_inputs() {
+    // All-ones operands maximize digit sums, recombination shifts, and
+    // accumulator magnitudes at every width.
+    for w in [4u32, 8, 16, 32] {
+        let a = Mat::from_fn(5, 33, |_, _| (1u64 << w) - 1);
+        let b = Mat::from_fn(33, 5, |_, _| (1u64 << w) - 1);
+        let want = matmul_oracle(&a, &b).to_i128_vec().unwrap();
+        assert_eq!(
+            fast_as_i128(&fast::mm(a.data(), b.data(), 5, 33, 5)),
+            want,
+            "fast MM all-ones w={w}"
+        );
+        for digits in [2u32, 4] {
+            if w >= digits {
+                assert_eq!(
+                    fast_as_i128(&fast::kmm_digits(a.data(), b.data(), 5, 33, 5, w, digits)),
+                    want,
+                    "fast KMM n={digits} all-ones w={w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_deep_accumulation_is_exact() {
+    // K = 512 at w = 32: the deepest accumulation the suite exercises,
+    // probing u128 headroom well past the 2w bits of a single product.
+    let mut rng = Rng::new(77);
+    let (m, k, n) = (3usize, 512usize, 3usize);
+    let a = Mat::random(m, k, 32, &mut rng);
+    let b = Mat::random(k, n, 32, &mut rng);
+    let want = matmul_oracle(&a, &b).to_i128_vec().unwrap();
+    assert_eq!(fast_as_i128(&fast::mm(a.data(), b.data(), m, k, n)), want);
+    assert_eq!(
+        fast_as_i128(&fast::kmm_digits(a.data(), b.data(), m, k, n, 32, 2)),
+        want
+    );
+}
+
+#[test]
+fn microkernels_agree_on_ragged_shapes() {
+    // The unrolled 8x4 kernel and the scalar reference kernel must be
+    // indistinguishable through the blocked driver, including shapes
+    // that exercise every packing edge.
+    forall(Config::default().cases(40), |rng| {
+        let (m, k, n) = (rng.range(1, 35), rng.range(1, 35), rng.range(1, 35));
+        let w = *rng.pick(&[4u32, 8, 16, 32]);
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        prop_assert_eq(
+            gemm(&Kernel8x4, a.data(), b.data(), m, k, n),
+            gemm(&Kernel1x1, a.data(), b.data(), m, k, n),
+            &format!("kernel parity ({m}x{k}x{n} w={w})"),
+        )
+    });
+}
+
+#[test]
+fn fast_backend_serves_batches_bit_exactly() {
+    // End to end through the L3 server: batched requests over the fast
+    // KMM backend, widths spanning native, digit-sliced, and the
+    // >2m region only the software engine accepts.
+    let mut srv = Server::start(
+        || Box::new(FastBackend::new(FastAlgo::Kmm)) as Box<dyn GemmBackend>,
+        ServerConfig::default(),
+    );
+    let mut rng = Rng::new(99);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..12 {
+        let w = [4u32, 8, 16, 32][i % 4];
+        let a = Mat::random(6, 10, w, &mut rng);
+        let b = Mat::random(10, 5, w, &mut rng);
+        expected.push(matmul_oracle(&a, &b));
+        rxs.push(srv.submit(a, b, w).1);
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.result.unwrap(), want);
+        assert!(resp.cycles > 0);
+    }
+    let stats = srv.shutdown();
+    assert_eq!(stats.requests, 12);
+    assert_eq!(stats.rejected, 0);
+    // Native window (w ≤ 8) and digit-sliced (w > 8) both served.
+    assert_eq!(stats.by_mode.get("mm1"), Some(&6));
+    assert_eq!(stats.by_mode.get("kmm2"), Some(&6));
+}
+
+#[test]
+fn fast_mm_backend_cross_checks_fast_kmm_backend() {
+    let mut rng = Rng::new(5);
+    for w in [7u32, 13, 25, 32] {
+        let a = Mat::random(9, 17, w, &mut rng);
+        let b = Mat::random(17, 8, w, &mut rng);
+        let mut mm_be = FastBackend::new(FastAlgo::Mm);
+        let mut kmm_be = FastBackend::new(FastAlgo::Kmm);
+        let rm = mm_be.gemm(&a, &b, w).unwrap();
+        let rk = kmm_be.gemm(&a, &b, w).unwrap();
+        assert_eq!(rm.c, rk.c, "w={w}");
+        assert_eq!(rm.c, matmul_oracle(&a, &b), "w={w}");
+    }
+}
+
+#[test]
+fn fast_values_stay_within_i128() {
+    // Sanity for the widening conversion used throughout: the engine's
+    // w ≤ 32 contract keeps every output strictly below 2^127.
+    let a = Mat::from_fn(2, 64, |_, _| u32::MAX as u64);
+    let b = Mat::from_fn(64, 2, |_, _| u32::MAX as u64);
+    let c = fast::kmm_digits(a.data(), b.data(), 2, 64, 2, 32, 4);
+    prop_assert(
+        c.iter().all(|&v| v <= i128::MAX as u128),
+        "outputs fit i128",
+    )
+    .unwrap();
+}

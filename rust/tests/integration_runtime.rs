@@ -12,6 +12,10 @@ use kmm::util::json::Json;
 use kmm::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let dir = default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first (looked in {dir:?})");
