@@ -88,7 +88,12 @@ fn main() {
     println!("\n== coordinator: batched mixed-precision GEMMs on the PJRT tile engine ==");
     let mut srv = Server::start(
         || Box::new(PjrtBackend::new(Runtime::from_dir(default_dir()).unwrap())),
-        ServerConfig { batch_max: 8 },
+        // One shard: each worker would load its own PJRT runtime, and a
+        // single artifact set serves this demo fine.
+        ServerConfig {
+            batch_max: 8,
+            workers: 1,
+        },
     );
     let mut rng = Rng::new(99);
     let mut pending = Vec::new();

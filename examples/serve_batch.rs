@@ -12,9 +12,14 @@ use kmm::util::rng::Rng;
 use std::time::Instant;
 
 fn main() {
+    // Two shards: each worker owns its own functional-model instance,
+    // and the front door round-robins requests across them.
     let mut srv = Server::start(
         || Box::new(FunctionalBackend::paper()),
-        ServerConfig { batch_max: 16 },
+        ServerConfig {
+            batch_max: 16,
+            workers: 2,
+        },
     );
     let mut rng = Rng::new(1234);
 

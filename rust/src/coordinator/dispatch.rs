@@ -210,17 +210,27 @@ pub struct FastBackend {
     /// Native width threshold mirroring the scalable controller: at or
     /// below `m`, inputs run as a single plain blocked GEMM.
     pub m: u32,
+    /// Worker threads for the engine (1 = the sequential driver; more
+    /// run the scoped-thread parallel driver, bit-exact at any count).
+    pub threads: usize,
     /// Timing model used for reported stats (numerics are native).
     timing: SystolicSpec,
 }
 
 impl FastBackend {
-    /// Default configuration: the paper's m = 8 window boundary and
-    /// 64×64 timing model.
+    /// Default configuration: the paper's m = 8 window boundary, 64×64
+    /// timing model, single-threaded engine.
     pub fn new(algo: FastAlgo) -> Self {
+        Self::with_threads(algo, 1)
+    }
+
+    /// Like [`FastBackend::new`] with an explicit engine thread count
+    /// (clamped to at least 1).
+    pub fn with_threads(algo: FastAlgo, threads: usize) -> Self {
         FastBackend {
             algo,
             m: 8,
+            threads: threads.max(1),
             timing: SystolicSpec::paper_64(),
         }
     }
@@ -251,9 +261,9 @@ impl GemmBackend for FastBackend {
         assert_eq!(a.cols, b.rows, "dimension mismatch");
         let (m, k, n) = (a.rows, a.cols, b.cols);
         let raw = if digits == 1 {
-            crate::fast::mm(a.data(), b.data(), m, k, n)
+            crate::fast::mm_threads(a.data(), b.data(), m, k, n, self.threads)
         } else {
-            crate::fast::kmm_digits(a.data(), b.data(), m, k, n, w, digits)
+            crate::fast::kmm_digits_threads(a.data(), b.data(), m, k, n, w, digits, self.threads)
         };
         let mut c = MatAcc::zeros(m, n);
         for i in 0..m {
@@ -363,6 +373,27 @@ mod tests {
                 let r = be.gemm(&a, &b, w).unwrap();
                 prop_assert_eq(r.c, want.clone(), &format!("{} exact at w={w}", be.name()))?;
                 prop_assert(r.stats.cycles > 0, "cycles reported")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fast_backend_parallel_threads_exact() {
+        forall(Config::default().cases(15), |rng| {
+            let w = rng.range(1, 32) as u32;
+            let threads = *rng.pick(&[2usize, 4]);
+            let a = Mat::random(23, 17, w, rng);
+            let b = Mat::random(17, 11, w, rng);
+            let want = matmul_oracle(&a, &b);
+            for algo in [FastAlgo::Mm, FastAlgo::Kmm] {
+                let mut be = FastBackend::with_threads(algo, threads);
+                let r = be.gemm(&a, &b, w).unwrap();
+                prop_assert_eq(
+                    r.c,
+                    want.clone(),
+                    &format!("{} exact at w={w} threads={threads}", be.name()),
+                )?;
             }
             Ok(())
         });

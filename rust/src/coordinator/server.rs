@@ -1,17 +1,29 @@
-//! Batched request serving — the L3 event loop.
+//! Batched request serving — the L3 event loop, sharded across a worker
+//! pool.
 //!
-//! A worker thread owns the [`GemmBackend`] (the hardware is a single
-//! resource); clients submit GEMM requests through an MPSC queue. The
-//! batcher drains the queue and groups consecutive requests by input
-//! bitwidth so the precision-scalable array stays in one mode per batch
-//! — mode switches change the tile re-read schedule (§IV-C), and
-//! grouping amortizes them exactly like the paper's per-layer execution.
+//! The server owns `cfg.workers` worker threads, each with its **own**
+//! [`GemmBackend`] instance and its own MPSC queue; clients submit GEMM
+//! requests through [`Server::submit`], which dispatches round-robin
+//! across the shards. Within a shard, the batcher drains its queue and
+//! groups consecutive requests by input bitwidth so the
+//! precision-scalable array stays in one mode per batch — mode switches
+//! change the tile re-read schedule (§IV-C), and grouping amortizes them
+//! exactly like the paper's per-layer execution. Batch ids are allocated
+//! from one shared atomic counter so they stay globally unique and
+//! dense, and per-shard statistics are merged at shutdown.
+//!
+//! One shard (`workers = 1`, the default) reproduces the single-owner
+//! model of the hardware exactly; N shards model N array instances
+//! serving one front door, which is how the software stack scales to
+//! "heavy traffic" while each backend instance stays single-owner.
 
 use crate::algo::matrix::{Mat, MatAcc};
 use crate::arch::scalable::Mode;
 use crate::coordinator::dispatch::GemmBackend;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// One GEMM inference request.
@@ -32,7 +44,7 @@ pub struct Response {
     pub mode: Option<Mode>,
     /// Deterministic device cycles attributed to this request.
     pub cycles: u64,
-    /// Batch this request was served in.
+    /// Batch this request was served in (globally unique across shards).
     pub batch: u64,
 }
 
@@ -41,15 +53,29 @@ pub struct Response {
 pub struct ServerConfig {
     /// Maximum requests drained into one batch.
     pub batch_max: usize,
+    /// Worker shards, each owning one backend instance (min 1).
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { batch_max: 16 }
+        ServerConfig {
+            batch_max: 16,
+            workers: 1,
+        }
     }
 }
 
-/// Aggregate serving statistics.
+impl ServerConfig {
+    /// Override the shard count (clamped to at least 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+}
+
+/// Aggregate serving statistics (per shard while running; merged across
+/// shards by [`Server::shutdown`]).
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub requests: u64,
@@ -60,6 +86,19 @@ pub struct ServerStats {
     pub by_mode: HashMap<&'static str, u64>,
 }
 
+impl ServerStats {
+    /// Fold another shard's statistics into this one.
+    pub fn merge(&mut self, other: &ServerStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.rejected += other.rejected;
+        self.total_cycles += other.total_cycles;
+        for (mode, count) in &other.by_mode {
+            *self.by_mode.entry(mode).or_insert(0) += count;
+        }
+    }
+}
+
 enum Msg {
     Req(Request, Sender<Response>),
     Shutdown(Sender<ServerStats>),
@@ -67,103 +106,55 @@ enum Msg {
 
 /// Handle to a running server.
 pub struct Server {
-    tx: Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
+    txs: Vec<Sender<Msg>>,
+    workers: Vec<JoinHandle<()>>,
     next_id: u64,
 }
 
 impl Server {
-    /// Start the worker thread; `factory` builds the backend *on* the
-    /// worker (the PJRT client holds thread-affine state).
+    /// Start `cfg.workers` worker threads; `factory` builds one backend
+    /// *on* each worker (backends may hold thread-affine state, so they
+    /// are constructed where they run, never moved).
     pub fn start<F>(factory: F, cfg: ServerConfig) -> Server
     where
-        F: FnOnce() -> Box<dyn GemmBackend> + Send + 'static,
+        F: Fn() -> Box<dyn GemmBackend> + Send + Sync + 'static,
     {
-        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
-        let worker = std::thread::spawn(move || {
-            let mut backend = factory();
-            let mut stats = ServerStats::default();
-            let mut batch_id = 0u64;
-            loop {
-                // Block for the first message...
-                let first = match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => return, // all senders dropped
-                };
-                let mut pending: Vec<(Request, Sender<Response>)> = Vec::new();
-                let mut shutdown: Option<Sender<ServerStats>> = None;
-                match first {
-                    Msg::Req(r, c) => pending.push((r, c)),
-                    Msg::Shutdown(s) => shutdown = Some(s),
-                }
-                // ... then drain whatever else arrived (the batcher).
-                while shutdown.is_none() && pending.len() < cfg.batch_max {
-                    match rx.try_recv() {
-                        Ok(Msg::Req(r, c)) => pending.push((r, c)),
-                        Ok(Msg::Shutdown(s)) => {
-                            shutdown = Some(s);
-                            break;
-                        }
-                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-                    }
-                }
-
-                if !pending.is_empty() {
-                    batch_id += 1;
-                    // Group by bitwidth: one array mode per group.
-                    pending.sort_by_key(|(r, _)| r.w);
-                    for (req, reply) in pending {
-                        stats.requests += 1;
-                        let resp = match backend.gemm(&req.a, &req.b, req.w) {
-                            Ok(res) => {
-                                stats.total_cycles += res.stats.cycles;
-                                *stats
-                                    .by_mode
-                                    .entry(mode_name(res.mode))
-                                    .or_insert(0) += 1;
-                                Response {
-                                    id: req.id,
-                                    result: Ok(res.c),
-                                    mode: Some(res.mode),
-                                    cycles: res.stats.cycles,
-                                    batch: batch_id,
-                                }
-                            }
-                            Err(e) => {
-                                stats.rejected += 1;
-                                Response {
-                                    id: req.id,
-                                    result: Err(format!("{e:#}")),
-                                    mode: None,
-                                    cycles: 0,
-                                    batch: batch_id,
-                                }
-                            }
-                        };
-                        let _ = reply.send(resp);
-                    }
-                    stats.batches += 1;
-                }
-
-                if let Some(s) = shutdown {
-                    let _ = s.send(stats);
-                    return;
-                }
-            }
-        });
+        let shards = cfg.workers.max(1);
+        let factory = Arc::new(factory);
+        // Batch ids are drawn from one shared counter: globally unique,
+        // dense, and `max(id) == total batches` regardless of sharding.
+        let batch_counter = Arc::new(AtomicU64::new(0));
+        let mut txs = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+            let factory = Arc::clone(&factory);
+            let counter = Arc::clone(&batch_counter);
+            workers.push(std::thread::spawn(move || {
+                worker_loop(factory.as_ref(), rx, cfg, &counter)
+            }));
+            txs.push(tx);
+        }
         Server {
-            tx,
-            worker: Some(worker),
+            txs,
+            workers,
             next_id: 0,
         }
     }
 
-    /// Submit a GEMM; returns the receiver for its response.
+    /// Worker shards currently serving.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Submit a GEMM; returns the receiver for its response. Requests
+    /// are dispatched round-robin across the worker shards.
     pub fn submit(&mut self, a: Mat, b: Mat, w: u32) -> (u64, Receiver<Response>) {
         self.next_id += 1;
         let id = self.next_id;
+        let shard = (id as usize - 1) % self.txs.len();
         let (rtx, rrx) = channel();
-        self.tx
+        self.txs[shard]
             .send(Msg::Req(Request { id, a, b, w }, rtx))
             .expect("server alive");
         (id, rrx)
@@ -175,15 +166,95 @@ impl Server {
         rx.recv().expect("worker alive")
     }
 
-    /// Stop the worker and collect final statistics.
+    /// Stop every worker and collect the merged statistics.
     pub fn shutdown(mut self) -> ServerStats {
-        let (stx, srx) = channel();
-        self.tx.send(Msg::Shutdown(stx)).expect("server alive");
-        let stats = srx.recv().expect("worker replies");
-        if let Some(h) = self.worker.take() {
+        let mut stats = ServerStats::default();
+        for tx in &self.txs {
+            let (stx, srx) = channel();
+            tx.send(Msg::Shutdown(stx)).expect("server alive");
+            stats.merge(&srx.recv().expect("worker replies"));
+        }
+        self.txs.clear();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
         stats
+    }
+}
+
+/// One shard's event loop: block for a request, drain a batch, group by
+/// bitwidth, serve, repeat — until shutdown (reply with this shard's
+/// statistics) or every sender is dropped.
+fn worker_loop(
+    factory: &(dyn Fn() -> Box<dyn GemmBackend> + Send + Sync),
+    rx: Receiver<Msg>,
+    cfg: ServerConfig,
+    batch_counter: &AtomicU64,
+) {
+    let mut backend = factory();
+    let mut stats = ServerStats::default();
+    loop {
+        // Block for the first message...
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // all senders dropped
+        };
+        let mut pending: Vec<(Request, Sender<Response>)> = Vec::new();
+        let mut shutdown: Option<Sender<ServerStats>> = None;
+        match first {
+            Msg::Req(r, c) => pending.push((r, c)),
+            Msg::Shutdown(s) => shutdown = Some(s),
+        }
+        // ... then drain whatever else arrived (the batcher).
+        while shutdown.is_none() && pending.len() < cfg.batch_max {
+            match rx.try_recv() {
+                Ok(Msg::Req(r, c)) => pending.push((r, c)),
+                Ok(Msg::Shutdown(s)) => {
+                    shutdown = Some(s);
+                    break;
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+
+        if !pending.is_empty() {
+            let batch_id = batch_counter.fetch_add(1, Ordering::Relaxed) + 1;
+            // Group by bitwidth: one array mode per group.
+            pending.sort_by_key(|(r, _)| r.w);
+            for (req, reply) in pending {
+                stats.requests += 1;
+                let resp = match backend.gemm(&req.a, &req.b, req.w) {
+                    Ok(res) => {
+                        stats.total_cycles += res.stats.cycles;
+                        *stats.by_mode.entry(mode_name(res.mode)).or_insert(0) += 1;
+                        Response {
+                            id: req.id,
+                            result: Ok(res.c),
+                            mode: Some(res.mode),
+                            cycles: res.stats.cycles,
+                            batch: batch_id,
+                        }
+                    }
+                    Err(e) => {
+                        stats.rejected += 1;
+                        Response {
+                            id: req.id,
+                            result: Err(format!("{e:#}")),
+                            mode: None,
+                            cycles: 0,
+                            batch: batch_id,
+                        }
+                    }
+                };
+                let _ = reply.send(resp);
+            }
+            stats.batches += 1;
+        }
+
+        if let Some(s) = shutdown {
+            let _ = s.send(stats);
+            return;
+        }
     }
 }
 
@@ -201,10 +272,10 @@ mod tests {
     use crate::algo::matrix::matmul_oracle;
     use crate::arch::mxu::SystolicSpec;
     use crate::arch::scalable::ScalableKmm;
-    use crate::coordinator::dispatch::FunctionalBackend;
+    use crate::coordinator::dispatch::{FastAlgo, FastBackend, FunctionalBackend};
     use crate::util::rng::Rng;
 
-    fn small_server() -> Server {
+    fn small_server_cfg(cfg: ServerConfig) -> Server {
         Server::start(
             || {
                 Box::new(FunctionalBackend {
@@ -215,8 +286,12 @@ mod tests {
                     },
                 })
             },
-            ServerConfig::default(),
+            cfg,
         )
+    }
+
+    fn small_server() -> Server {
+        small_server_cfg(ServerConfig::default())
     }
 
     #[test]
@@ -297,5 +372,70 @@ mod tests {
         let stats = srv.shutdown();
         assert_eq!(stats.total_cycles, total);
         assert_eq!(stats.by_mode.get("kmm2"), Some(&3));
+    }
+
+    #[test]
+    fn sharded_server_serves_bit_exactly() {
+        // Four shards, interleaved widths: every response exact, stats
+        // merged across shards, batch ids globally consistent.
+        let mut srv = small_server_cfg(ServerConfig::default().workers(4));
+        assert_eq!(srv.shards(), 4);
+        let mut rng = Rng::new(21);
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..24 {
+            let w = [6u32, 9, 14][i % 3];
+            let a = Mat::random(4, 7, w, &mut rng);
+            let b = Mat::random(7, 5, w, &mut rng);
+            expected.push(matmul_oracle(&a, &b));
+            rxs.push(srv.submit(a, b, w).1);
+        }
+        let mut max_batch = 0;
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.result.unwrap(), want);
+            max_batch = max_batch.max(resp.batch);
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 24);
+        assert_eq!(stats.rejected, 0);
+        // Shared counter: the merged batch count equals the highest id.
+        assert_eq!(stats.batches, max_batch);
+        assert_eq!(stats.by_mode.values().sum::<u64>(), 24);
+    }
+
+    #[test]
+    fn sharded_fast_backend_round_robins() {
+        // Shards over the software hot path: a rejection on one shard
+        // leaves the other shards serving.
+        let mut srv = Server::start(
+            || Box::new(FastBackend::new(FastAlgo::Kmm)) as Box<dyn GemmBackend>,
+            ServerConfig {
+                batch_max: 4,
+                workers: 3,
+            },
+        );
+        let bad = Mat::zeros(2, 2);
+        assert!(srv.submit_sync(bad.clone(), bad, 33).result.is_err());
+        let mut rng = Rng::new(22);
+        for _ in 0..9 {
+            let a = Mat::random(5, 8, 16, &mut rng);
+            let b = Mat::random(8, 6, 16, &mut rng);
+            let want = matmul_oracle(&a, &b);
+            assert_eq!(srv.submit_sync(a, b, 16).result.unwrap(), want);
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 10);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.by_mode.get("kmm2"), Some(&9));
+    }
+
+    #[test]
+    fn workers_builder_clamps_to_one() {
+        let cfg = ServerConfig::default().workers(0);
+        assert_eq!(cfg.workers, 1);
+        let srv = small_server_cfg(cfg);
+        assert_eq!(srv.shards(), 1);
+        srv.shutdown();
     }
 }

@@ -18,9 +18,21 @@
 //! paper's terms: one native multiplication per MAC); the Karatsuba
 //! digit-slice path in [`crate::fast::kmm`] runs three of these per
 //! recursion level on narrower operands.
+//!
+//! # Parallel execution
+//!
+//! [`gemm_into_threads`] parallelizes the driver across the `ic` row
+//! strips, mirroring how the paper's architectures scale across parallel
+//! PEs: for each `(jc, pc)` slab the packed-B panels are formed once and
+//! shared read-only by every worker, while each worker packs its own A
+//! strip and writes a **disjoint** row strip of `C` — so the `u128`
+//! accumulator buffer needs no locking and the parallel result is
+//! bit-identical to the sequential one at every thread count (enforced
+//! by `tests/integration_parallel.rs`).
 
 use crate::fast::kernel::Kernel;
 use crate::fast::pack::{pack_a, pack_b};
+use crate::util::pool;
 
 /// Cache-blocking parameters (elements, not bytes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,37 +91,173 @@ pub fn gemm_into<K: Kernel>(
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    let (mr, nr) = (K::MR, K::NR);
     let mut a_buf: Vec<u64> = Vec::new();
     let mut b_buf: Vec<u64> = Vec::new();
-    let mut acc = vec![0u128; mr * nr];
+    let mut acc = vec![0u128; K::MR * K::NR];
 
     for jc in (0..n).step_by(bl.nc) {
         let ncb = bl.nc.min(n - jc);
         for pc in (0..k).step_by(bl.kc) {
             let kcb = bl.kc.min(k - pc);
-            pack_b(&mut b_buf, b, n, pc, kcb, jc, ncb, nr);
+            pack_b(&mut b_buf, b, n, pc, kcb, jc, ncb, K::NR);
             for ic in (0..m).step_by(bl.mc) {
                 let mcb = bl.mc.min(m - ic);
-                pack_a(&mut a_buf, a, k, ic, mcb, pc, kcb, mr);
-                let m_panels = mcb.div_ceil(mr);
-                let n_panels = ncb.div_ceil(nr);
-                for jp in 0..n_panels {
-                    let b_panel = &b_buf[jp * kcb * nr..(jp + 1) * kcb * nr];
-                    for ip in 0..m_panels {
-                        let a_panel = &a_buf[ip * kcb * mr..(ip + 1) * kcb * mr];
-                        kernel.run(&mut acc, a_panel, b_panel, kcb);
-                        // Writeback, skipping zero-padded tile edges.
-                        let r_max = mr.min(mcb - ip * mr);
-                        let c_max = nr.min(ncb - jp * nr);
-                        for r in 0..r_max {
-                            let row = ic + ip * mr + r;
-                            let dst = &mut c[row * n + jc + jp * nr..][..c_max];
-                            for (cc, d) in dst.iter_mut().enumerate() {
-                                *d += acc[r * nr + cc];
-                            }
-                        }
-                    }
+                let strip = &mut c[ic * n..(ic + mcb) * n];
+                let blk = StripBlock {
+                    k,
+                    n,
+                    ic,
+                    rows: mcb,
+                    pc,
+                    kcb,
+                    jc,
+                    ncb,
+                };
+                run_strip(kernel, a, &b_buf, &mut a_buf, &mut acc, &blk, strip);
+            }
+        }
+    }
+}
+
+/// Blocked GEMM accumulating into `c` across up to `threads` scoped
+/// worker threads (`threads <= 1` delegates to the sequential
+/// [`gemm_into`], so both paths share one inner loop and agree
+/// bit-for-bit).
+///
+/// Parallel decomposition: per `(jc, pc)` slab, packed-B panels are
+/// formed once on the calling thread and shared read-only; the `M`
+/// dimension is cut into register-tile-aligned row strips (at most `MC`
+/// tall, enough of them to feed every worker), and each worker packs its
+/// own A strip and accumulates into its own disjoint rows of `c`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_threads<K: Kernel + Sync>(
+    kernel: &K,
+    bl: &Blocking,
+    threads: usize,
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [u128],
+) {
+    if threads <= 1 || m < 2 * K::MR {
+        gemm_into(kernel, bl, a, b, m, k, n, c);
+        return;
+    }
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    assert!(bl.mc > 0 && bl.kc > 0 && bl.nc > 0, "degenerate blocking");
+    if k == 0 || n == 0 {
+        return;
+    }
+    let mr = K::MR;
+    // Strip height: enough strips to feed every worker, rounded up to the
+    // register-tile height, capped at MC to preserve the L2 blocking.
+    let strip_rows = (m.div_ceil(threads).div_ceil(mr) * mr).clamp(mr, bl.mc.max(mr));
+    let mut b_buf: Vec<u64> = Vec::new();
+    for jc in (0..n).step_by(bl.nc) {
+        let ncb = bl.nc.min(n - jc);
+        for pc in (0..k).step_by(bl.kc) {
+            let kcb = bl.kc.min(k - pc);
+            pack_b(&mut b_buf, b, n, pc, kcb, jc, ncb, K::NR);
+            let b_slab = &b_buf;
+            // Per-worker scratch (packed-A buffer + register-tile
+            // accumulator) is allocated once per worker, not per strip.
+            pool::parallel_chunks_mut_with(
+                threads,
+                c,
+                strip_rows * n,
+                || (Vec::<u64>::new(), vec![0u128; K::MR * K::NR]),
+                |(a_buf, acc), strip_idx, strip| {
+                    let ic = strip_idx * strip_rows;
+                    let rows = strip.len() / n;
+                    let blk = StripBlock {
+                        k,
+                        n,
+                        ic,
+                        rows,
+                        pc,
+                        kcb,
+                        jc,
+                        ncb,
+                    };
+                    run_strip(kernel, a, b_slab, a_buf, acc, &blk, strip);
+                },
+            );
+        }
+    }
+}
+
+/// Compute `C = A·B` with the default blocking across `threads` scoped
+/// worker threads; `threads = 1` is exactly [`gemm`].
+pub fn gemm_threads<K: Kernel + Sync>(
+    kernel: &K,
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<u128> {
+    let mut c = vec![0u128; m * n];
+    gemm_into_threads(kernel, &Blocking::default(), threads, a, b, m, k, n, &mut c);
+    c
+}
+
+/// Coordinates of one strip's work item: which A rows, which depth
+/// block, and which column slab (all in elements of the full matrices).
+struct StripBlock {
+    /// A's row stride (the full depth).
+    k: usize,
+    /// C's row stride (the full width).
+    n: usize,
+    /// First global row of the strip.
+    ic: usize,
+    /// Strip height.
+    rows: usize,
+    /// First depth index of the current KC block.
+    pc: usize,
+    /// Depth of the current KC block.
+    kcb: usize,
+    /// First global column of the current NC slab.
+    jc: usize,
+    /// Width of the current NC slab.
+    ncb: usize,
+}
+
+/// One `(jc, pc)` slab against one A row strip: pack the strip's A block
+/// and run the register-tile loop, accumulating into `strip` — the
+/// `rows × n` row-major slice of `C` that starts at global row `ic`.
+/// Shared by the sequential and parallel drivers; in the parallel driver
+/// each worker calls it on a disjoint strip with the shared packed-B
+/// slab.
+fn run_strip<K: Kernel>(
+    kernel: &K,
+    a: &[u64],
+    b_slab: &[u64],
+    a_buf: &mut Vec<u64>,
+    acc: &mut [u128],
+    blk: &StripBlock,
+    strip: &mut [u128],
+) {
+    let (mr, nr) = (K::MR, K::NR);
+    pack_a(a_buf, a, blk.k, blk.ic, blk.rows, blk.pc, blk.kcb, mr);
+    let m_panels = blk.rows.div_ceil(mr);
+    let n_panels = blk.ncb.div_ceil(nr);
+    for jp in 0..n_panels {
+        let b_panel = &b_slab[jp * blk.kcb * nr..(jp + 1) * blk.kcb * nr];
+        for ip in 0..m_panels {
+            let a_panel = &a_buf[ip * blk.kcb * mr..(ip + 1) * blk.kcb * mr];
+            kernel.run(acc, a_panel, b_panel, blk.kcb);
+            // Writeback, skipping zero-padded tile edges.
+            let r_max = mr.min(blk.rows - ip * mr);
+            let c_max = nr.min(blk.ncb - jp * nr);
+            for r in 0..r_max {
+                let dst = &mut strip[(ip * mr + r) * blk.n + blk.jc + jp * nr..][..c_max];
+                for (cc, d) in dst.iter_mut().enumerate() {
+                    *d += acc[r * nr + cc];
                 }
             }
         }
@@ -195,6 +343,58 @@ mod tests {
         let bl = Blocking::default();
         gemm_into(&Kernel8x4, &bl, &a, &b, m, k, n, &mut c);
         gemm_into(&Kernel8x4, &bl, &a, &b, m, k, n, &mut c);
+        let want: Vec<u128> = naive(&a, &b, m, k, n).iter().map(|&v| 2 * v).collect();
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_prop() {
+        forall(Config::default().cases(40), |rng| {
+            let (m, k, n) = (rng.range(1, 80), rng.range(1, 40), rng.range(1, 40));
+            let threads = *rng.pick(&[2usize, 3, 4, 8]);
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(32)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(32)).collect();
+            prop_assert_eq(
+                gemm_threads(&Kernel8x4, &a, &b, m, k, n, threads),
+                gemm(&Kernel8x4, &a, &b, m, k, n),
+                &format!("parallel == sequential ({m}x{k}x{n} t={threads})"),
+            )
+        });
+    }
+
+    #[test]
+    fn parallel_tiny_blocking_still_exact() {
+        // Pathological blockings force many slabs and ragged strips
+        // through the parallel path.
+        let mut rng = Rng::new(7);
+        let (m, k, n) = (37, 13, 9);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(16)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(16)).collect();
+        let want = naive(&a, &b, m, k, n);
+        for bl in [
+            Blocking { mc: 1, kc: 1, nc: 1 },
+            Blocking { mc: 3, kc: 2, nc: 5 },
+            Blocking { mc: 16, kc: 64, nc: 7 },
+        ] {
+            for threads in [2usize, 4, 16] {
+                let mut c = vec![0u128; m * n];
+                gemm_into_threads(&Kernel8x4, &bl, threads, &a, &b, m, k, n, &mut c);
+                assert_eq!(c, want, "{bl:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_accumulates_across_calls() {
+        // gemm_into_threads adds into C exactly like gemm_into.
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (33, 7, 6);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(12)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(12)).collect();
+        let mut c = vec![0u128; m * n];
+        let bl = Blocking::default();
+        gemm_into_threads(&Kernel8x4, &bl, 4, &a, &b, m, k, n, &mut c);
+        gemm_into_threads(&Kernel8x4, &bl, 4, &a, &b, m, k, n, &mut c);
         let want: Vec<u128> = naive(&a, &b, m, k, n).iter().map(|&v| 2 * v).collect();
         assert_eq!(c, want);
     }

@@ -26,11 +26,23 @@
 //! The cross term `Cs − C1 − C0` is elementwise non-negative
 //! (§III-B.4), so unsigned `u128` subtraction is exact.
 //!
+//! # Parallel execution
+//!
+//! [`kmm_threads`] mirrors the hardware's PE-level parallelism in
+//! software: the three digit-plane sub-GEMMs are independent until the
+//! shift-recombine, so they run concurrently via
+//! [`crate::util::pool::join3`], each with a third of the thread budget
+//! for its own blocked driver
+//! ([`gemm_into_threads`](crate::fast::gemm::gemm_into_threads)). At
+//! `threads = 1` every fork degrades to the sequential path, so the
+//! parallel driver is bit-exact with [`kmm`] by construction.
+//!
 //! [`Tally`]: crate::algo::opcount::Tally
 
 use crate::algo::bits;
-use crate::fast::gemm::{gemm_into, Blocking};
+use crate::fast::gemm::{gemm_into, gemm_into_threads, Blocking};
 use crate::fast::kernel::{Kernel, MAX_W};
+use crate::util::pool;
 
 /// Compute `C = A·B` by the `digits = 2^r`-digit Karatsuba matrix
 /// decomposition over `w`-bit elements (`digits = 1` degenerates to the
@@ -39,7 +51,7 @@ use crate::fast::kernel::{Kernel, MAX_W};
 /// Requires a valid `(digits, w)` configuration (power-of-two digits,
 /// `digits ≤ w`) and `w ≤` [`MAX_W`] so every shifted partial fits the
 /// `u128` accumulators; operands must fit `w` bits.
-pub fn kmm<K: Kernel>(
+pub fn kmm<K: Kernel + Sync>(
     kernel: &K,
     a: &[u64],
     b: &[u64],
@@ -48,6 +60,25 @@ pub fn kmm<K: Kernel>(
     n: usize,
     w: u32,
     digits: u32,
+) -> Vec<u128> {
+    kmm_threads(kernel, a, b, m, k, n, w, digits, 1)
+}
+
+/// [`kmm`] across up to `threads` scoped worker threads: per recursion
+/// level the three digit-plane sub-GEMMs run concurrently (each with a
+/// third of the thread budget for its own blocked driver), then the
+/// calling thread recombines. `threads <= 1` is exactly [`kmm`].
+#[allow(clippy::too_many_arguments)]
+pub fn kmm_threads<K: Kernel + Sync>(
+    kernel: &K,
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+    threads: usize,
 ) -> Vec<u128> {
     assert!(
         bits::config_valid(digits, w),
@@ -62,14 +93,16 @@ pub fn kmm<K: Kernel>(
         "operand exceeds w={w} bits"
     );
     let mut out = vec![0u128; m * n];
-    kmm_rec(kernel, a, b, m, k, n, w, digits, &mut out);
+    kmm_rec(kernel, a, b, m, k, n, w, digits, threads, &mut out);
     out
 }
 
 /// Recursive worker: accumulates `A·B` into `out` (callers pass zeroed
-/// or partially accumulated buffers, mirroring `gemm_into`).
+/// or partially accumulated buffers, mirroring `gemm_into`). With
+/// `threads > 1` the three sub-products fork onto scoped threads; each
+/// leaf GEMM then spreads its share of the budget across row strips.
 #[allow(clippy::too_many_arguments)]
-fn kmm_rec<K: Kernel>(
+fn kmm_rec<K: Kernel + Sync>(
     kernel: &K,
     a: &[u64],
     b: &[u64],
@@ -78,10 +111,15 @@ fn kmm_rec<K: Kernel>(
     n: usize,
     w: u32,
     digits: u32,
+    threads: usize,
     out: &mut [u128],
 ) {
     if digits == 1 {
-        gemm_into(kernel, &Blocking::default(), a, b, m, k, n, out);
+        if threads <= 1 {
+            gemm_into(kernel, &Blocking::default(), a, b, m, k, n, out);
+        } else {
+            gemm_into_threads(kernel, &Blocking::default(), threads, a, b, m, k, n, out);
+        }
         return;
     }
     let wl = bits::lo_width(w);
@@ -91,12 +129,24 @@ fn kmm_rec<K: Kernel>(
     let a_s = bits::digit_sum_plane(&a1, &a0);
     let b_s = bits::digit_sum_plane(&b1, &b0);
 
-    let mut c1 = vec![0u128; m * n];
-    let mut c_s = vec![0u128; m * n];
-    let mut c0 = vec![0u128; m * n];
-    kmm_rec(kernel, &a1, &b1, m, k, n, wh, digits / 2, &mut c1);
-    kmm_rec(kernel, &a_s, &b_s, m, k, n, wl + 1, digits / 2, &mut c_s);
-    kmm_rec(kernel, &a0, &b0, m, k, n, wl, digits / 2, &mut c0);
+    // Ceiling split keeps every core busy (threads = 4 → 2 per branch)
+    // at the cost of mild transient oversubscription; the forked threads
+    // are pure compute, so the scheduler absorbs it.
+    let sub = threads.div_ceil(3);
+    let run = |x: &[u64], y: &[u64], ww: u32| -> Vec<u128> {
+        let mut c = vec![0u128; m * n];
+        kmm_rec(kernel, x, y, m, k, n, ww, digits / 2, sub, &mut c);
+        c
+    };
+    let (c1, c_s, c0) = if threads > 1 {
+        pool::join3(
+            || run(&a1, &b1, wh),
+            || run(&a_s, &b_s, wl + 1),
+            || run(&a0, &b0, wl),
+        )
+    } else {
+        (run(&a1, &b1, wh), run(&a_s, &b_s, wl + 1), run(&a0, &b0, wl))
+    };
 
     for i in 0..m * n {
         // Non-negative by Σ(a1+a0)(b1+b0) ≥ Σa1b1 + Σa0b0 elementwise.
@@ -168,6 +218,49 @@ mod tests {
                 "w={w}"
             );
         }
+    }
+
+    #[test]
+    fn kmm_threads_matches_sequential_prop() {
+        forall(Config::default().cases(60), |rng| {
+            let digits = *rng.pick(&[2u32, 4, 8]);
+            let widths: Vec<u32> =
+                [8u32, 16, 32].into_iter().filter(|&w| w >= digits).collect();
+            let w = *rng.pick(&widths);
+            let threads = *rng.pick(&[2usize, 3, 4, 6]);
+            let (m, k, n) = (rng.range(1, 40), rng.range(1, 20), rng.range(1, 20));
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            prop_assert_eq(
+                kmm_threads(&Kernel8x4, &a, &b, m, k, n, w, digits, threads),
+                kmm(&Kernel8x4, &a, &b, m, k, n, w, digits),
+                &format!("parallel KMM_{digits}^[{w}] == sequential ({m}x{k}x{n} t={threads})"),
+            )
+        });
+    }
+
+    #[test]
+    fn kmm_threads_max_width_all_ones() {
+        // The adversarial recombination case through the concurrent path.
+        let (m, k, n) = (17usize, 64usize, 5usize);
+        let a = vec![u32::MAX as u64; m * k];
+        let b = vec![u32::MAX as u64; k * n];
+        let want = gemm(&Kernel8x4, &a, &b, m, k, n);
+        for digits in [2u32, 4, 8] {
+            for threads in [2usize, 4] {
+                assert_eq!(
+                    kmm_threads(&Kernel8x4, &a, &b, m, k, n, 32, digits, threads),
+                    want,
+                    "digits={digits} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid KMM config")]
+    fn kmm_threads_rejects_invalid_config() {
+        kmm_threads(&Kernel8x4, &[1], &[1], 1, 1, 1, 8, 3, 4);
     }
 
     #[test]

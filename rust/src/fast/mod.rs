@@ -43,6 +43,18 @@
 //! decomposition the accelerator runs, behind the same [`GemmBackend`]
 //! interface the cycle-model backends serve.
 //!
+//! # Parallel execution
+//!
+//! Every driver has a `*_threads` variant running on the scoped-thread
+//! pool in [`crate::util::pool`]: [`mm_threads`] parallelizes the
+//! blocked driver over disjoint output row strips (packed-B slab shared
+//! read-only), and [`kmm_digits_threads`] additionally forks the three
+//! digit-plane sub-GEMMs per recursion level — the software mirror of
+//! the paper's PE-level parallelism. All parallel paths are bit-exact
+//! with their sequential counterparts at every thread count
+//! (`tests/integration_parallel.rs`), and `threads = 1` *is* the
+//! sequential path.
+//!
 //! # Width contract
 //!
 //! The engine is exact for operands up to [`MAX_W`] (= 32) bits: a
@@ -64,7 +76,7 @@ pub mod kernel;
 pub mod kmm;
 pub mod pack;
 
-pub use gemm::{gemm_into, Blocking};
+pub use gemm::{gemm_into, gemm_into_threads, Blocking};
 pub use kernel::{Kernel, Kernel1x1, Kernel8x4, MAX_W};
 
 /// Conventional blocked GEMM with the default kernel and blocking:
@@ -85,4 +97,34 @@ pub fn kmm_digits(
     digits: u32,
 ) -> Vec<u128> {
     kmm::kmm(&Kernel8x4, a, b, m, k, n, w, digits)
+}
+
+/// [`mm`] across up to `threads` scoped worker threads (bit-exact at
+/// every thread count; see [`gemm::gemm_into_threads`]).
+pub fn mm_threads(
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<u128> {
+    gemm::gemm_threads(&Kernel8x4, a, b, m, k, n, threads)
+}
+
+/// [`kmm_digits`] across up to `threads` scoped worker threads: the
+/// three digit-plane sub-GEMMs run concurrently per recursion level
+/// (bit-exact at every thread count; see [`kmm::kmm_threads`]).
+#[allow(clippy::too_many_arguments)]
+pub fn kmm_digits_threads(
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+    threads: usize,
+) -> Vec<u128> {
+    kmm::kmm_threads(&Kernel8x4, a, b, m, k, n, w, digits, threads)
 }

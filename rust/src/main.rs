@@ -4,9 +4,10 @@
 //!   table1 | table2 | table3      regenerate the paper's tables
 //!   fig5 | fig11 | fig12          regenerate the paper's figures
 //!   gemm --m --k --n --w [--backend functional|pjrt|fast-kmm|fast-mm]
-//!                                 one GEMM through the stack
+//!        [--threads N]            one GEMM through the stack (N engine
+//!                                 worker threads on the fast backends)
 //!   serve [--requests N] [--backend functional|fast-kmm|fast-mm]
-//!                                 batched serving demo
+//!         [--threads N]           batched serving demo (N server shards)
 //!   schedule --workload FILE|resnet50|resnet101|resnet152|vgg16 [--w W]
 //!                                 per-layer plan + aggregate metrics
 //!   export --model resnet50 --w 8 [--out FILE]  dump a workload JSON
@@ -26,6 +27,7 @@ use kmm::report;
 use kmm::report::layers::layer_report;
 use kmm::runtime::{default_dir, Runtime};
 use kmm::util::cli::Args;
+use kmm::util::pool;
 use kmm::util::rng::Rng;
 
 fn main() {
@@ -45,7 +47,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|serve|schedule|export|info> [options]\n{}",
-                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]"
+                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm] [--threads N]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm] [--threads N]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm = engine worker threads; serve = server worker shards)"
             );
             2
         }
@@ -64,12 +66,13 @@ fn print_ok(s: String) -> i32 {
 const SOFTWARE_BACKENDS: &[&str] = &["functional", "fast-kmm", "fast-mm"];
 
 /// Build a software backend by name; `None` for names outside
-/// [`SOFTWARE_BACKENDS`].
-fn software_backend(name: &str) -> Option<Box<dyn GemmBackend>> {
+/// [`SOFTWARE_BACKENDS`]. `threads` sets the fast engine's worker count
+/// (the functional model is inherently single-owner and ignores it).
+fn software_backend(name: &str, threads: usize) -> Option<Box<dyn GemmBackend>> {
     match name {
         "functional" => Some(Box::new(FunctionalBackend::paper())),
-        "fast-kmm" => Some(Box::new(FastBackend::new(FastAlgo::Kmm))),
-        "fast-mm" => Some(Box::new(FastBackend::new(FastAlgo::Mm))),
+        "fast-kmm" => Some(Box::new(FastBackend::with_threads(FastAlgo::Kmm, threads))),
+        "fast-mm" => Some(Box::new(FastBackend::with_threads(FastAlgo::Mm, threads))),
         _ => None,
     }
 }
@@ -79,6 +82,7 @@ fn cmd_gemm(args: &Args) -> i32 {
     let k: usize = args.get("k", 256).unwrap();
     let n: usize = args.get("n", 128).unwrap();
     let w: u32 = args.get("w", 12).unwrap();
+    let threads: usize = args.get("threads", pool::env_threads_or(1)).unwrap().max(1);
     let backend = args.get_str("backend", "functional");
     let mut rng = Rng::new(args.get("seed", 1u64).unwrap());
     let a = Mat::random(m, k, w, &mut rng);
@@ -92,7 +96,7 @@ fn cmd_gemm(args: &Args) -> i32 {
                 return 2;
             }
         },
-        name => match software_backend(name) {
+        name => match software_backend(name, threads) {
             Some(be) => be,
             None => {
                 eprintln!(
@@ -106,8 +110,9 @@ fn cmd_gemm(args: &Args) -> i32 {
         Ok(r) => {
             let exact = r.c == matmul_oracle(&a, &b);
             println!(
-                "GEMM {m}x{k}x{n} w={w} via {}: mode {:?}, {} cycles, {} tile jobs, exact={exact}",
+                "GEMM {m}x{k}x{n} w={w} via {} ({threads} thread{}): mode {:?}, {} cycles, {} tile jobs, exact={exact}",
                 be.name(),
+                if threads == 1 { "" } else { "s" },
                 r.mode,
                 r.stats.cycles,
                 r.stats.tile_jobs
@@ -123,6 +128,7 @@ fn cmd_gemm(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     let requests: usize = args.get("requests", 32).unwrap();
+    let threads: usize = args.get("threads", pool::env_threads_or(1)).unwrap().max(1);
     let backend = args.get_str("backend", "functional");
     // Validate the name up front (the worker factory runs too late for
     // a friendly error; `pjrt` is thread-affine and not servable here).
@@ -130,9 +136,11 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("unknown serve backend `{backend}` (functional|fast-kmm|fast-mm)");
         return 2;
     }
+    // `--threads` shards the server: N workers, each owning its own
+    // single-threaded backend instance (shard-level parallelism).
     let mut srv = Server::start(
-        move || software_backend(&backend).expect("name validated above"),
-        ServerConfig::default(),
+        move || software_backend(&backend, 1).expect("name validated above"),
+        ServerConfig::default().workers(threads),
     );
     let mut rng = Rng::new(5);
     let mut rxs = Vec::new();
@@ -153,9 +161,11 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let stats = srv.shutdown();
     println!(
-        "served {} requests / {} batches; modes {:?}; device {:.3} ms @326 MHz",
+        "served {} requests / {} batches on {} shard{}; modes {:?}; device {:.3} ms @326 MHz",
         stats.requests,
         stats.batches,
+        threads,
+        if threads == 1 { "" } else { "s" },
         stats.by_mode,
         cycles as f64 / 326e6 * 1e3
     );

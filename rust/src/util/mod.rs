@@ -1,10 +1,11 @@
 //! Dependency-free utilities: deterministic RNG, property-test harness,
-//! wide integer arithmetic, error handling, and a small CLI argument
-//! parser.
+//! wide integer arithmetic, error handling, a small CLI argument parser,
+//! and scoped-thread pool primitives.
 
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod wide;

@@ -1,0 +1,228 @@
+//! Zero-dependency scoped-thread fork-join primitives.
+//!
+//! The fast engine ([`crate::fast`]) needs data parallelism inside one
+//! GEMM call, but the crate is intentionally dependency-free (no
+//! `rayon`), so this module provides the two fork-join shapes the
+//! engine actually uses, built directly on [`std::thread::scope`]:
+//!
+//! - [`parallel_chunks_mut`] — split a mutable slice into fixed-size
+//!   chunks and process them on up to `threads` OS threads. Chunks are
+//!   disjoint `&mut` borrows, so workers never synchronize on the data;
+//!   this is the shape of the blocked GEMM driver's independent `MC`-row
+//!   output strips.
+//! - [`join3`] — run three closures concurrently and return all three
+//!   results; the shape of the Karatsuba driver's `A1·B1`, `As·Bs`,
+//!   `A0·B0` sub-GEMM fan-out.
+//!
+//! (The batch server's shards are *long-lived* workers that outlive any
+//! call, so [`crate::coordinator::server`] spawns plain owned threads
+//! instead of borrowing this scoped machinery.)
+//!
+//! Both entry points degrade to plain sequential loops when `threads <= 1`
+//! (or when there is less work than threads), so a single code path
+//! serves both the serial and parallel engines and the parallel engine
+//! is trivially bit-exact at `threads = 1`.
+//!
+//! Scoped threads borrow from the caller's stack frame, so operands can
+//! be shared by reference (the packed-B slab is read by every worker)
+//! without `Arc` or `'static` bounds, and a worker panic propagates to
+//! the caller when the scope joins.
+
+/// Number of hardware threads the OS reports (at least 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The `KMM_THREADS` environment variable when set to a positive
+/// integer, otherwise `fallback`. The CLI defaults through this with
+/// `fallback = 1` (opt-in parallelism), the bench with
+/// [`available_threads`].
+pub fn env_threads_or(fallback: usize) -> usize {
+    std::env::var("KMM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(fallback)
+}
+
+/// Default worker count: `KMM_THREADS` when set, otherwise
+/// [`available_threads`].
+pub fn default_threads() -> usize {
+    env_threads_or(available_threads())
+}
+
+/// Process the chunks of `data` (each `chunk_len` long, last one ragged)
+/// on up to `threads` scoped threads. `f` receives `(chunk_index, chunk)`;
+/// chunk `i` covers `data[i * chunk_len ..]`. Chunks are distributed
+/// round-robin, which keeps the static partition balanced for the
+/// uniform-cost strips the GEMM driver produces.
+pub fn parallel_chunks_mut<T, F>(threads: usize, data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    parallel_chunks_mut_with(threads, data, chunk_len, || (), |_, i, chunk| f(i, chunk));
+}
+
+/// [`parallel_chunks_mut`] with per-worker scratch state: `init` runs
+/// once on each worker (including the caller, which processes its own
+/// share instead of idling) and the resulting state is threaded through
+/// every `f` call that worker makes — so reusable buffers are allocated
+/// once per worker, not once per chunk.
+pub fn parallel_chunks_mut_with<T, S, I, F>(
+    threads: usize,
+    data: &mut [T],
+    chunk_len: usize,
+    init: I,
+    f: F,
+) where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [T]) + Sync,
+{
+    fn run_tasks<T, S>(
+        init: &(impl Fn() -> S),
+        f: &(impl Fn(&mut S, usize, &mut [T])),
+        tasks: Vec<(usize, &mut [T])>,
+    ) {
+        let mut state = init();
+        for (i, chunk) in tasks {
+            f(&mut state, i, chunk);
+        }
+    }
+
+    assert!(chunk_len > 0, "degenerate chunk length");
+    if data.is_empty() {
+        return;
+    }
+    let nchunks = data.len().div_ceil(chunk_len);
+    let threads = threads.clamp(1, nchunks);
+    if threads <= 1 {
+        let mut state = init();
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(&mut state, i, chunk);
+        }
+        return;
+    }
+    let mut per_thread: Vec<Vec<(usize, &mut [T])>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+        per_thread[i % threads].push((i, chunk));
+    }
+    let (init, f) = (&init, &f);
+    std::thread::scope(|s| {
+        let mut shares = per_thread.into_iter();
+        let own_share = shares.next().expect("threads >= 2 implies a first share");
+        for tasks in shares {
+            s.spawn(move || run_tasks(init, f, tasks));
+        }
+        // The caller works its own share instead of idling in the join.
+        run_tasks(init, f, own_share);
+    });
+}
+
+/// Run three closures concurrently (`fb` and `fc` on scoped threads,
+/// `fa` on the caller) and return `(fa(), fb(), fc())`. A panic in any
+/// closure propagates to the caller.
+pub fn join3<RA, RB, RC>(
+    fa: impl FnOnce() -> RA,
+    fb: impl FnOnce() -> RB + Send,
+    fc: impl FnOnce() -> RC + Send,
+) -> (RA, RB, RC)
+where
+    RB: Send,
+    RC: Send,
+{
+    std::thread::scope(|s| {
+        let hb = s.spawn(fb);
+        let hc = s.spawn(fc);
+        let ra = fa();
+        let rb = match hb.join() {
+            Ok(v) => v,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        let rc = match hc.join() {
+            Ok(v) => v,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        (ra, rb, rc)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_counts_are_positive() {
+        assert!(available_threads() >= 1);
+        assert!(default_threads() >= 1);
+        // With the variable unset (the test environment default) the
+        // fallback passes through untouched.
+        assert!(env_threads_or(1) >= 1);
+    }
+
+    #[test]
+    fn chunks_cover_every_element_once() {
+        // Each chunk stamps its elements with the chunk index; the
+        // result must be identical at every thread count.
+        let stamp = |threads: usize| {
+            let mut v = vec![0usize; 103];
+            parallel_chunks_mut(threads, &mut v, 10, |i, chunk| {
+                for x in chunk {
+                    *x += i + 1;
+                }
+            });
+            v
+        };
+        let want = stamp(1);
+        for threads in [2, 3, 8, 64] {
+            assert_eq!(stamp(threads), want, "threads={threads}");
+        }
+        // 103 = 10 full chunks + ragged tail of 3.
+        assert_eq!(want[99], 10);
+        assert_eq!(want[100], 11);
+    }
+
+    #[test]
+    fn chunks_handle_empty_and_oversized() {
+        let mut empty: Vec<u8> = Vec::new();
+        parallel_chunks_mut(4, &mut empty, 5, |_, _| panic!("no chunks"));
+        let mut one = vec![0u8; 3];
+        parallel_chunks_mut(16, &mut one, 100, |i, chunk| {
+            assert_eq!(i, 0);
+            chunk.fill(7);
+        });
+        assert_eq!(one, vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn chunks_with_state_reuses_per_worker_scratch() {
+        // 6 chunks round-robined over 3 workers: each worker processes
+        // exactly 2 chunks with one scratch buffer, so elements are
+        // stamped with that worker's running chunk count (1 then 2).
+        let mut v = vec![0usize; 60];
+        parallel_chunks_mut_with(3, &mut v, 10, Vec::<usize>::new, |scratch, i, chunk| {
+            scratch.push(i);
+            for x in chunk {
+                *x = scratch.len();
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1 || x == 2));
+        assert_eq!(v.iter().filter(|&&x| x == 1).count(), 30);
+        assert_eq!(v.iter().filter(|&&x| x == 2).count(), 30);
+    }
+
+    #[test]
+    fn join3_returns_all_three() {
+        let (a, b, c) = join3(|| 1u32, || "two", || vec![3u8]);
+        assert_eq!((a, b, c), (1, "two", vec![3]));
+    }
+
+    #[test]
+    #[should_panic(expected = "worker boom")]
+    fn join3_propagates_worker_panic() {
+        let _ = join3(|| 0u8, || panic!("worker boom"), || 0u8);
+    }
+}

@@ -1,0 +1,219 @@
+//! Parallel-engine integration: the scoped-thread parallel drivers
+//! (`fast::mm_threads`, `fast::kmm_digits_threads`, the `FastBackend`
+//! `--threads` path, and the sharded `Server`) must be **bit-exact**
+//! with the single-threaded engine and with the instrumented exact
+//! references (`algo::mm1`, `algo::kmm`) at every thread count —
+//! parallelism may only change wall-clock, never a single bit.
+
+use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::algo::opcount::Tally;
+use kmm::algo::{kmm as kmm_ref, mm1};
+use kmm::coordinator::dispatch::{FastAlgo, FastBackend, GemmBackend};
+use kmm::coordinator::server::{Server, ServerConfig};
+use kmm::fast;
+use kmm::util::prop::{forall, forall_pairs, prop_assert_eq, Config};
+use kmm::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+const WIDTHS: [u32; 4] = [4, 8, 16, 32];
+
+/// The fast engine's `u128` results, widened for comparison against the
+/// references' `I256` accumulators (all values are non-negative).
+fn fast_as_i128(c: &[u128]) -> Vec<i128> {
+    c.iter()
+        .map(|&v| i128::try_from(v).expect("fast value exceeds i128"))
+        .collect()
+}
+
+#[test]
+fn parallel_mm_matches_serial_and_reference_prop() {
+    forall(Config::default().cases(60), |rng| {
+        let w = *rng.pick(&WIDTHS);
+        let threads = *rng.pick(&THREAD_COUNTS);
+        let (m, k, n) = (rng.range(1, 48), rng.range(1, 24), rng.range(1, 24));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let par = fast::mm_threads(a.data(), b.data(), m, k, n, threads);
+        prop_assert_eq(
+            par.clone(),
+            fast::mm(a.data(), b.data(), m, k, n),
+            &format!("parallel == serial MM ({m}x{k}x{n} w={w} t={threads})"),
+        )?;
+        let mut tally = Tally::new();
+        let want = mm1(&a, &b, w, &mut tally).to_i128_vec().unwrap();
+        prop_assert_eq(
+            fast_as_i128(&par),
+            want,
+            &format!("parallel MM == algo::mm1 ({m}x{k}x{n} w={w} t={threads})"),
+        )
+    });
+}
+
+#[test]
+fn parallel_kmm_matches_serial_and_reference_prop() {
+    forall(Config::default().cases(60), |rng| {
+        let digits = *rng.pick(&[2u32, 4, 8]);
+        let widths: Vec<u32> = WIDTHS.into_iter().filter(|&w| w >= digits).collect();
+        let w = *rng.pick(&widths);
+        let threads = *rng.pick(&THREAD_COUNTS);
+        let (m, k, n) = (rng.range(1, 32), rng.range(1, 16), rng.range(1, 16));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let par = fast::kmm_digits_threads(a.data(), b.data(), m, k, n, w, digits, threads);
+        prop_assert_eq(
+            par.clone(),
+            fast::kmm_digits(a.data(), b.data(), m, k, n, w, digits),
+            &format!("parallel == serial KMM_{digits} ({m}x{k}x{n} w={w} t={threads})"),
+        )?;
+        let mut tally = Tally::new();
+        let want = kmm_ref(&a, &b, w, digits, &mut tally).to_i128_vec().unwrap();
+        prop_assert_eq(
+            fast_as_i128(&par),
+            want,
+            &format!("parallel KMM_{digits} == algo::kmm ({m}x{k}x{n} w={w} t={threads})"),
+        )
+    });
+}
+
+#[test]
+fn parallel_engine_exact_on_non_divisible_shape() {
+    // 67×53×41: indivisible by MR (8), NR (4), and every default block
+    // size, so every strip, panel, and slab edge is ragged.
+    let (m, k, n) = (67usize, 53usize, 41usize);
+    let mut rng = Rng::new(4242);
+    for &w in &WIDTHS {
+        let a = Mat::random(m, k, w, &mut rng);
+        let b = Mat::random(k, n, w, &mut rng);
+        let want = matmul_oracle(&a, &b).to_i128_vec().unwrap();
+        for &threads in &THREAD_COUNTS {
+            assert_eq!(
+                fast_as_i128(&fast::mm_threads(a.data(), b.data(), m, k, n, threads)),
+                want,
+                "MM 67x53x41 w={w} threads={threads}"
+            );
+            for digits in [2u32, 4] {
+                if w >= digits {
+                    assert_eq!(
+                        fast_as_i128(&fast::kmm_digits_threads(
+                            a.data(),
+                            b.data(),
+                            m,
+                            k,
+                            n,
+                            w,
+                            digits,
+                            threads
+                        )),
+                        want,
+                        "KMM_{digits} 67x53x41 w={w} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_engine_exact_on_thread_width_grid() {
+    // The full (threads, w) grid from the acceptance criteria, random
+    // shapes inside each cell, checked against the exact references.
+    forall_pairs(&[1u32, 2, 4], &WIDTHS, |threads, w| {
+        let threads = threads as usize;
+        let mut rng = Rng::new((threads as u64) << 8 | u64::from(w));
+        for _ in 0..6 {
+            let (m, k, n) = (rng.range(1, 40), rng.range(1, 20), rng.range(1, 20));
+            let a = Mat::random(m, k, w, &mut rng);
+            let b = Mat::random(k, n, w, &mut rng);
+            let mut tally = Tally::new();
+            let want = mm1(&a, &b, w, &mut tally).to_i128_vec().unwrap();
+            prop_assert_eq(
+                fast_as_i128(&fast::mm_threads(a.data(), b.data(), m, k, n, threads)),
+                want.clone(),
+                &format!("MM grid ({m}x{k}x{n} w={w} t={threads})"),
+            )?;
+            if w >= 2 {
+                prop_assert_eq(
+                    fast_as_i128(&fast::kmm_digits_threads(
+                        a.data(),
+                        b.data(),
+                        m,
+                        k,
+                        n,
+                        w,
+                        2,
+                        threads,
+                    )),
+                    want,
+                    &format!("KMM grid ({m}x{k}x{n} w={w} t={threads})"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_adversarial_all_ones() {
+    // All-ones inputs maximize digit sums, recombination shifts, and
+    // accumulator magnitudes — through every thread count.
+    for &w in &WIDTHS {
+        let a = Mat::from_fn(19, 67, |_, _| (1u64 << w) - 1);
+        let b = Mat::from_fn(67, 9, |_, _| (1u64 << w) - 1);
+        let want = matmul_oracle(&a, &b).to_i128_vec().unwrap();
+        for &threads in &THREAD_COUNTS {
+            assert_eq!(
+                fast_as_i128(&fast::mm_threads(a.data(), b.data(), 19, 67, 9, threads)),
+                want,
+                "all-ones MM w={w} threads={threads}"
+            );
+            if w >= 2 {
+                assert_eq!(
+                    fast_as_i128(&fast::kmm_digits_threads(
+                        a.data(),
+                        b.data(),
+                        19,
+                        67,
+                        9,
+                        w,
+                        2,
+                        threads
+                    )),
+                    want,
+                    "all-ones KMM w={w} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_server_with_parallel_backend_serves_exactly() {
+    // The full stack: sharded server, each shard owning a 2-thread fast
+    // engine — shard parallelism × engine parallelism, still bit-exact.
+    let mut srv = Server::start(
+        || Box::new(FastBackend::with_threads(FastAlgo::Kmm, 2)) as Box<dyn GemmBackend>,
+        ServerConfig {
+            batch_max: 4,
+            workers: 3,
+        },
+    );
+    let mut rng = Rng::new(31);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..18 {
+        let w = WIDTHS[i % 4];
+        let a = Mat::random(21, 15, w, &mut rng);
+        let b = Mat::random(15, 13, w, &mut rng);
+        expected.push(matmul_oracle(&a, &b));
+        rxs.push(srv.submit(a, b, w).1);
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.result.unwrap(), want);
+        assert!(resp.cycles > 0);
+    }
+    let stats = srv.shutdown();
+    assert_eq!(stats.requests, 18);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.by_mode.values().sum::<u64>(), 18);
+}
