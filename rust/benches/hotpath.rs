@@ -35,7 +35,7 @@ use kmm::coordinator::scheduler::schedule;
 use kmm::fast;
 use kmm::model::resnet::{resnet, ResNet};
 use kmm::util::cli::Args;
-use kmm::util::json::Json;
+use kmm::util::json::{finite, Json};
 use kmm::util::pool;
 use kmm::util::rng::Rng;
 use std::collections::BTreeMap;
@@ -50,15 +50,6 @@ struct Section {
     threads: usize,
     shape: (usize, usize, usize),
     w: u32,
-}
-
-/// JSON has no Inf/NaN; clamp the pathological cases to 0.
-fn finite(v: f64) -> f64 {
-    if v.is_finite() {
-        v
-    } else {
-        0.0
-    }
 }
 
 impl Section {

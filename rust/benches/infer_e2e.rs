@@ -1,0 +1,190 @@
+//! End-to-end inference benchmark: whole model workloads through the
+//! fast engine, weight-stationary vs per-call packing, emitting a
+//! machine-readable `BENCH_infer.json` next to `BENCH_hotpath.json`.
+//!
+//! Two sections:
+//!
+//! 1. **Full pass** — ResNet-50 at w = 8 served cached (weights
+//!    registered + prepacked once): whole-model and per-layer ops/s,
+//!    the headline "new workload" trajectory numbers.
+//! 2. **Serving comparison** — the same ResNet-50 layer trace in
+//!    batched-serving form (a few activation rows per request, several
+//!    requests streamed per registered weight, w = 16 so the Karatsuba
+//!    digit-plane cache is exercised), cached vs fresh-pack, median of
+//!    several repetitions. Small batches make the per-call B packing +
+//!    digit-plane formation a large fraction of each request, and the
+//!    request stream is what the one-time registration amortizes over —
+//!    exactly the regime weight-stationary serving exists for. The gate
+//!    asserts the cached path wins **including** its one-time prepack
+//!    cost (with one re-measure retry so noisy CI runners cannot flake
+//!    it), so the win is genuine amortization, not bookkeeping.
+//!
+//! The emitted document is schema-versioned and self-validated through
+//! `util::json` before the bench exits. Override the output path with
+//! `KMM_INFER_OUT`.
+//!
+//! Run: `cargo bench --bench infer_e2e [-- --threads N]`
+
+use kmm::coordinator::dispatch::{FastAlgo, FastBackend};
+use kmm::infer::{run_workload, InferConfig, InferRun};
+use kmm::model::resnet::{resnet, ResNet};
+use kmm::util::cli::Args;
+use kmm::util::json::{finite, Json};
+use kmm::util::pool;
+use std::collections::BTreeMap;
+
+/// Median of the runs' serving times; returns the medians plus the run
+/// whose time is the median (for the per-layer payload).
+fn median_run(mut runs: Vec<InferRun>) -> (f64, InferRun) {
+    runs.sort_by(|a, b| f64::total_cmp(&a.total_seconds(), &b.total_seconds()));
+    let mid = runs.len() / 2;
+    let run = runs.swap_remove(mid);
+    (run.total_seconds(), run)
+}
+
+/// One serving-comparison measurement: `reps` repetitions of the batched
+/// trace (`streams` requests per registered weight), cached or fresh,
+/// median total serving seconds.
+fn measure(par: usize, cached: bool, batch: usize, streams: usize, reps: usize) -> (f64, InferRun) {
+    let wl = resnet(ResNet::R50, 16);
+    let mut runs = Vec::with_capacity(reps);
+    for rep in 0..reps {
+        let mut be = FastBackend::with_threads(FastAlgo::Kmm, par);
+        let cfg = InferConfig {
+            batch: Some(batch),
+            streams,
+            cached,
+            seed: 7 + rep as u64,
+            verify: false,
+        };
+        runs.push(run_workload(&wl, &mut be, par, &cfg).expect("trace serves"));
+    }
+    median_run(runs)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let par: usize = args
+        .get("threads", 0usize)
+        .expect("--threads must be a positive integer");
+    let par = if par > 0 {
+        par
+    } else {
+        pool::default_threads().clamp(2, 8)
+    };
+    println!("== infer e2e bench (fast engine, {par} threads) ==");
+
+    // ---- 1. full ResNet-50 pass, weights prepacked once ---------------
+    let wl = resnet(ResNet::R50, 8);
+    let mut be = FastBackend::with_threads(FastAlgo::Kmm, par);
+    let full = run_workload(&wl, &mut be, par, &InferConfig::default()).expect("full pass serves");
+    println!(
+        "full {} w8 cached: {:.1} GMACs in {:.2} s ({:.1} Mops/s, prepack {:.1} ms)",
+        full.model,
+        full.total_macs() as f64 / 1e9,
+        full.total_seconds(),
+        full.ops_per_s() / 1e6,
+        full.prepack_seconds * 1e3
+    );
+
+    // ---- 2. batched serving: cached vs fresh-pack ---------------------
+    // The gate compares amortized cost: cached serving PLUS its one-time
+    // prepack must beat fresh serving, so the win is real reuse (each
+    // registration serves STREAMS requests), not bookkeeping that merely
+    // moves the pack out of the timed window.
+    const BATCH: usize = 4;
+    const STREAMS: usize = 3;
+    const REPS: usize = 3;
+    const MARGIN: f64 = 1.05;
+    println!(
+        "-- serving comparison (ResNet-50 trace, w = 16, batch = {BATCH}, \
+         {STREAMS} requests/weight, {REPS} reps) --"
+    );
+    let amortized = |serve: f64, run: &InferRun| serve + run.prepack_seconds;
+    let (mut t_fresh, mut fresh_run) = measure(par, false, BATCH, STREAMS, REPS);
+    let (mut t_cached, mut cached_run) = measure(par, true, BATCH, STREAMS, REPS);
+    let mut retried = false;
+    if amortized(t_cached, &cached_run) * MARGIN >= t_fresh {
+        println!("cache gate missed on the first sample; re-measuring once (noisy runner?)");
+        retried = true;
+        (t_fresh, fresh_run) = measure(par, false, BATCH, STREAMS, REPS);
+        (t_cached, cached_run) = measure(par, true, BATCH, STREAMS, REPS);
+    }
+    let speedup = t_fresh / t_cached;
+    let speedup_amortized = t_fresh / amortized(t_cached, &cached_run);
+    println!(
+        "fresh-pack {:.1} ms vs cached {:.1} ms + {:.1} ms one-time prepack: \
+         {speedup:.2}x serving, {speedup_amortized:.2}x amortized",
+        t_fresh * 1e3,
+        t_cached * 1e3,
+        cached_run.prepack_seconds * 1e3
+    );
+    let gate_ok = amortized(t_cached, &cached_run) * MARGIN < t_fresh;
+
+    // ---- machine-readable output --------------------------------------
+    let mut serving = BTreeMap::new();
+    serving.insert("model".to_string(), Json::Str(fresh_run.model.clone()));
+    serving.insert("w".to_string(), Json::Int(16));
+    serving.insert("batch".to_string(), Json::Int(BATCH as i64));
+    serving.insert("streams".to_string(), Json::Int(STREAMS as i64));
+    serving.insert("reps".to_string(), Json::Int(REPS as i64));
+    serving.insert("fresh_total_s".to_string(), Json::Float(finite(t_fresh)));
+    serving.insert("cached_total_s".to_string(), Json::Float(finite(t_cached)));
+    serving.insert(
+        "cached_prepack_s".to_string(),
+        Json::Float(finite(cached_run.prepack_seconds)),
+    );
+    serving.insert("fresh".to_string(), fresh_run.to_json());
+    serving.insert("cached".to_string(), cached_run.to_json());
+    let mut speedups = BTreeMap::new();
+    speedups.insert(
+        "cached_vs_fresh_pack".to_string(),
+        Json::Float(finite(speedup)),
+    );
+    speedups.insert(
+        "cached_amortized_vs_fresh_pack".to_string(),
+        Json::Float(finite(speedup_amortized)),
+    );
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("infer_e2e".to_string()));
+    top.insert("schema".to_string(), Json::Int(1));
+    top.insert("threads".to_string(), Json::Int(par as i64));
+    top.insert("cache_gate_retried".to_string(), Json::Bool(retried));
+    top.insert("full".to_string(), full.to_json());
+    top.insert("serving".to_string(), Json::Object(serving));
+    top.insert("speedups".to_string(), Json::Object(speedups));
+    let doc = Json::Object(top).to_string();
+
+    // Self-validate: round-trip through the crate's own parser, and the
+    // payload must cover the full pass (every layer) plus both serving
+    // modes.
+    let parsed = Json::parse(&doc).expect("BENCH_infer.json must parse via util::json");
+    let layers = parsed
+        .get("full")
+        .and_then(|f| f.get("layers"))
+        .and_then(Json::as_array)
+        .expect("full.layers array");
+    assert_eq!(layers.len(), resnet(ResNet::R50, 8).len(), "one record per layer");
+    for mode in ["fresh", "cached"] {
+        assert!(
+            parsed
+                .get("serving")
+                .and_then(|s| s.get(mode))
+                .and_then(|r| r.get("total_s"))
+                .is_some(),
+            "missing serving.{mode}"
+        );
+    }
+    let out_path =
+        std::env::var("KMM_INFER_OUT").unwrap_or_else(|_| "BENCH_infer.json".to_string());
+    std::fs::write(&out_path, &doc).expect("write bench json");
+    println!("wrote {out_path} ({} bytes)", doc.len());
+
+    assert!(
+        gate_ok,
+        "cached-weight serving (including its one-time prepack) must beat per-call \
+         packing by >= {MARGIN}x on the batched ResNet-50 trace (after one retry); \
+         got {speedup_amortized:.3}x amortized"
+    );
+    println!("weight-stationary cache beats per-call packing (amortized): OK");
+}

@@ -18,6 +18,7 @@
 use crate::algo::matrix::{Mat, MatAcc};
 use crate::arch::mxu::SystolicSpec;
 use crate::arch::scalable::{select_mode, Mode, ScalableKmm};
+use crate::coordinator::registry::{PackPlan, PackedWeight, NATIVE_W};
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::gemm::{simulate_cycles, GemmStats};
 use crate::sim::tiler::TileGrid;
@@ -38,6 +39,24 @@ pub struct GemmResult {
 pub trait GemmBackend {
     /// Execute `A·B` exactly on `w`-bit inputs.
     fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult>;
+
+    /// Execute `A·W` against a registered weight (weight-stationary
+    /// serving). The default implementation serves from the weight's
+    /// raw matrix — correct on every backend — while backends with a
+    /// prepacked hot path ([`FastBackend`]) override it to skip all
+    /// per-call packing. Bit-exact with `gemm(a, weight.raw(),
+    /// weight.w())` either way.
+    fn gemm_packed(&mut self, a: &Mat, weight: &PackedWeight) -> Result<GemmResult> {
+        self.gemm(a, weight.raw(), weight.w())
+    }
+
+    /// Which [`PackPlan`] weights should be registered under for this
+    /// backend — the packing its `gemm_packed` actually reads. The
+    /// default matches the default `gemm_packed` (raw-matrix serving):
+    /// pack nothing. Backends with a prepacked hot path override both.
+    fn preferred_plan(&self) -> PackPlan {
+        PackPlan::Raw
+    }
 
     /// Short backend label for logs/metrics.
     fn name(&self) -> &'static str;
@@ -252,19 +271,11 @@ impl FastBackend {
             }
         })
     }
-}
 
-impl GemmBackend for FastBackend {
-    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult> {
-        let (mode, digits) = self.plan(w)?;
-        assert!(a.fits(w) && b.fits(w), "operand exceeds w={w} bits");
-        assert_eq!(a.cols, b.rows, "dimension mismatch");
-        let (m, k, n) = (a.rows, a.cols, b.cols);
-        let raw = if digits == 1 {
-            crate::fast::mm_threads(a.data(), b.data(), m, k, n, self.threads)
-        } else {
-            crate::fast::kmm_digits_threads(a.data(), b.data(), m, k, n, w, digits, self.threads)
-        };
+    /// Wrap a raw engine product in the served result shape: `u128`
+    /// elements lifted into the accumulator matrix, cycles from the
+    /// same deterministic §IV-D schedule every backend reports.
+    fn finish(&self, raw: &[u128], m: usize, k: usize, n: usize, mode: Mode) -> GemmResult {
         let mut c = MatAcc::zeros(m, n);
         for i in 0..m {
             for j in 0..n {
@@ -273,7 +284,101 @@ impl GemmBackend for FastBackend {
         }
         let grid = TileGrid::new(m, k, n, self.timing.x, self.timing.y);
         let stats = simulate_cycles(&grid, &self.timing, mode.reads());
-        Ok(GemmResult { c, mode, stats })
+        GemmResult { c, mode, stats }
+    }
+}
+
+impl GemmBackend for FastBackend {
+    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult> {
+        let (mode, digits) = self.plan(w)?;
+        // Malformed requests are client errors: serve an Err (the
+        // sharded server turns it into a rejection) rather than
+        // panicking the worker that happens to own this backend.
+        if !(a.fits(w) && b.fits(w)) {
+            bail!("operand exceeds w={w} bits");
+        }
+        if a.cols != b.rows {
+            bail!(
+                "dimension mismatch: A is {}x{}, B is {}x{}",
+                a.rows,
+                a.cols,
+                b.rows,
+                b.cols
+            );
+        }
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let raw = if digits == 1 {
+            crate::fast::mm_threads(a.data(), b.data(), m, k, n, self.threads)
+        } else {
+            crate::fast::kmm_digits_threads(a.data(), b.data(), m, k, n, w, digits, self.threads)
+        };
+        Ok(self.finish(&raw, m, k, n, mode))
+    }
+
+    /// The weight-stationary hot path: serve from the registry's cached
+    /// packings — the prepacked blocked driver below the digit-slice
+    /// window (or for the conventional decomposition), the cached
+    /// digit-plane tree above it — performing zero per-call B-packing
+    /// or plane-splitting work. Falls back to the raw matrix only if
+    /// the cache lacks the needed decomposition (registered under a
+    /// different width regime than this backend routes).
+    fn gemm_packed(&mut self, a: &Mat, weight: &PackedWeight) -> Result<GemmResult> {
+        let w = weight.w();
+        let (mode, digits) = self.plan(w)?;
+        // The weight's width is implicit in the handle, so an activation
+        // that exceeds it is a client error the server must *reject*
+        // (serve an Err), not a process-killing precondition.
+        if !a.fits(w) {
+            bail!("activation exceeds the weight's registered width w={w}");
+        }
+        if a.cols != weight.rows() {
+            bail!(
+                "dimension mismatch: activation is {}x{}, weight is {}x{}",
+                a.rows,
+                a.cols,
+                weight.rows(),
+                weight.cols()
+            );
+        }
+        let (m, k, n) = (a.rows, a.cols, weight.cols());
+        let raw = if digits == 1 {
+            let Some(panels) = weight.mm() else {
+                return self.gemm(a, weight.raw(), w);
+            };
+            crate::fast::gemm::gemm_prepacked_threads(
+                &crate::fast::Kernel8x4,
+                a.data(),
+                panels,
+                m,
+                self.threads,
+            )
+        } else if let Some(planes) = weight.kmm().filter(|p| p.digits() == digits) {
+            crate::fast::kmm::kmm_prepacked_threads(
+                &crate::fast::Kernel8x4,
+                a.data(),
+                planes,
+                m,
+                self.threads,
+            )
+        } else {
+            return self.gemm(a, weight.raw(), w);
+        };
+        Ok(self.finish(&raw, m, k, n, mode))
+    }
+
+    /// Pack only the decomposition this backend's routing reads — and,
+    /// when the instance runs a nonstandard window (`m !=`
+    /// [`NATIVE_W`], which the registry's pack rules are keyed to),
+    /// fall back to the agnostic plan so the cache always holds
+    /// whatever `plan()` ends up asking for.
+    fn preferred_plan(&self) -> PackPlan {
+        if self.m != NATIVE_W {
+            return PackPlan::Both;
+        }
+        match self.algo {
+            FastAlgo::Mm => PackPlan::Mm,
+            FastAlgo::Kmm => PackPlan::Kmm,
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -416,6 +521,116 @@ mod tests {
         let b = Mat::random(4, 4, 12, &mut rng);
         assert_eq!(kmm.gemm(&a, &b, 12).unwrap().mode, Mode::Kmm2);
         assert_eq!(mm.gemm(&a, &b, 12).unwrap().mode, Mode::Mm2);
+    }
+
+    #[test]
+    fn fast_backend_packed_matches_fresh_prop() {
+        // The weight-stationary hot path == per-call packing == oracle,
+        // across the native window, both decompositions, and threads.
+        forall(Config::default().cases(20), |rng| {
+            let w = rng.range(1, 32) as u32;
+            let threads = *rng.pick(&[1usize, 2, 4]);
+            let a = Mat::random(9, 7, w, rng);
+            let b = Mat::random(7, 6, w, rng);
+            let pw = crate::coordinator::registry::PackedWeight::new(b.clone(), w).unwrap();
+            let want = matmul_oracle(&a, &b);
+            for algo in [FastAlgo::Mm, FastAlgo::Kmm] {
+                let mut be = FastBackend::with_threads(algo, threads);
+                let packed = be.gemm_packed(&a, &pw).unwrap();
+                let fresh = be.gemm(&a, &b, w).unwrap();
+                prop_assert_eq(
+                    packed.c.clone(),
+                    want.clone(),
+                    &format!("{} packed exact at w={w}", be.name()),
+                )?;
+                prop_assert_eq(packed.c, fresh.c, "packed == fresh")?;
+                prop_assert_eq(packed.mode, fresh.mode, "same reported mode")?;
+                prop_assert_eq(packed.stats.cycles, fresh.stats.cycles, "same cycle model")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn preferred_plans_match_backend_routing() {
+        // Each fast backend asks for exactly the packing its plan()
+        // routes to; a nonstandard window keeps every packing; backends
+        // without a prepacked path keep the agnostic default.
+        assert_eq!(FastBackend::new(FastAlgo::Kmm).preferred_plan(), PackPlan::Kmm);
+        assert_eq!(FastBackend::new(FastAlgo::Mm).preferred_plan(), PackPlan::Mm);
+        let mut wide_window = FastBackend::new(FastAlgo::Kmm);
+        wide_window.m = 16;
+        assert_eq!(wide_window.preferred_plan(), PackPlan::Both);
+        // Raw-serving backends ask for no packing at all.
+        assert_eq!(FunctionalBackend::paper().preferred_plan(), PackPlan::Raw);
+    }
+
+    #[test]
+    fn plan_mismatched_weights_fall_back_to_raw_serving() {
+        // A weight packed for one decomposition served by the other
+        // backend: the cache lacks the needed packing, so the raw
+        // fallback runs — still bit-exact, and over-wide activations
+        // are rejected (served Err), never a panic.
+        use crate::coordinator::registry::{PackPlan, PackedWeight};
+        let mut rng = Rng::new(17);
+        let a = Mat::random(6, 8, 12, &mut rng);
+        let b = Mat::random(8, 5, 12, &mut rng);
+        let want = matmul_oracle(&a, &b);
+        let mm_only = PackedWeight::with_plan(b.clone(), 12, PackPlan::Mm).unwrap();
+        let kmm_only = PackedWeight::with_plan(b.clone(), 12, PackPlan::Kmm).unwrap();
+        let mut kmm_be = FastBackend::new(FastAlgo::Kmm);
+        let mut mm_be = FastBackend::new(FastAlgo::Mm);
+        // fast-kmm serving an Mm-planned weight (no digit planes).
+        assert_eq!(kmm_be.gemm_packed(&a, &mm_only).unwrap().c, want);
+        // fast-mm serving a Kmm-planned weight (no conventional panels).
+        assert_eq!(mm_be.gemm_packed(&a, &kmm_only).unwrap().c, want);
+        // Matched plans serve from the cache and agree too.
+        assert_eq!(kmm_be.gemm_packed(&a, &kmm_only).unwrap().c, want);
+        assert_eq!(mm_be.gemm_packed(&a, &mm_only).unwrap().c, want);
+        // Over-wide activation: a served rejection, not a panic.
+        let wide = Mat::from_rows(1, 8, &[1 << 13; 8]);
+        let err = kmm_be.gemm_packed(&wide, &kmm_only).unwrap_err();
+        assert!(err.to_string().contains("registered width"), "{err:#}");
+    }
+
+    #[test]
+    fn functional_backend_serves_packed_via_fallback() {
+        // The default trait impl serves registered weights from the raw
+        // matrix — correct, just without the pack saving.
+        let mut rng = Rng::new(15);
+        let a = Mat::random(5, 6, 12, &mut rng);
+        let b = Mat::random(6, 4, 12, &mut rng);
+        let pw = crate::coordinator::registry::PackedWeight::new(b.clone(), 12).unwrap();
+        let mut be = FunctionalBackend::paper();
+        let r = be.gemm_packed(&a, &pw).unwrap();
+        assert_eq!(r.c, matmul_oracle(&a, &b));
+    }
+
+    #[test]
+    fn fast_backend_packed_rejects_dimension_mismatch() {
+        let mut rng = Rng::new(16);
+        let b = Mat::random(6, 4, 8, &mut rng);
+        let pw = crate::coordinator::registry::PackedWeight::new(b, 8).unwrap();
+        let a = Mat::random(5, 7, 8, &mut rng); // a.cols != weight.rows
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let err = be.gemm_packed(&a, &pw).unwrap_err();
+        assert!(err.to_string().contains("dimension mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn fast_backend_serves_errors_for_malformed_raw_requests() {
+        // Shard-safety: client mistakes come back as served Errs, never
+        // worker-killing panics.
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let mut rng = Rng::new(18);
+        let a = Mat::random(3, 4, 8, &mut rng);
+        let b = Mat::random(5, 2, 8, &mut rng); // a.cols != b.rows
+        let err = be.gemm(&a, &b, 8).unwrap_err();
+        assert!(err.to_string().contains("dimension mismatch"), "{err:#}");
+        let wide = Mat::from_rows(1, 1, &[300]);
+        let ok = Mat::from_rows(1, 1, &[1]);
+        let err = be.gemm(&wide, &ok, 8).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err:#}");
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! The L3 runtime coordinator: precision-aware scheduling, batched
-//! request serving, backend dispatch, quantization, and the paper's
-//! performance metrics (eqs. 11–15, 23).
+//! request serving, backend dispatch, the weight-stationary registry,
+//! quantization, and the paper's performance metrics (eqs. 11–15, 23).
 
 pub mod dispatch;
 pub mod metrics;
 pub mod pipeline;
 pub mod quantize;
+pub mod registry;
 pub mod scheduler;
 pub mod server;
 
@@ -15,5 +16,6 @@ pub use dispatch::{
 pub use metrics::{recursion_levels, scalable_roof, Execution};
 pub use pipeline::{mlp_pipeline, Pipeline, PipelineLayer, Requant};
 pub use quantize::{adjust_zero_point, lift_signed, signed_gemm_via_unsigned, LayerPrecision};
+pub use registry::{PackPlan, PackedWeight, WeightHandle, WeightRegistry};
 pub use scheduler::{schedule, workload_gops, LayerPlan, Schedule};
-pub use server::{Request, Response, Server, ServerConfig, ServerStats};
+pub use server::{PackedRequest, Request, Response, Server, ServerConfig, ServerStats};

@@ -1,0 +1,362 @@
+//! The weight registry: a shared cache of prepacked stationary operands
+//! for weight-stationary serving.
+//!
+//! The paper's accelerators load weights into the PEs once and stream
+//! activations against them (§IV); the software counterpart is to pack
+//! a weight matrix once — [`PackedB`] panels, plus the full Karatsuba
+//! digit-plane decomposition ([`PackedKmmB`]) when the width calls for
+//! digit slicing — and serve any number of requests against the cached
+//! [`PackedWeight`] with zero per-request pack work.
+//!
+//! One [`WeightRegistry`] is shared (behind an `Arc`) by **all** shards
+//! of the batch server, so a handle registered through any front door is
+//! visible to every worker — the sharded server models N array
+//! instances, but the weight store, like the hardware's weight memory,
+//! is one. Interior mutability is a plain `RwLock` (registration is
+//! rare, lookup is the hot path and takes the read lock), and entries
+//! hand out `Arc<PackedWeight>` clones so serving never holds the lock
+//! across a GEMM.
+//!
+//! ```
+//! use kmm::algo::matrix::Mat;
+//! use kmm::coordinator::dispatch::{FastAlgo, FastBackend, GemmBackend};
+//! use kmm::coordinator::registry::WeightRegistry;
+//!
+//! let registry = WeightRegistry::new();
+//! // Register the stationary operand once...
+//! let weight = Mat::from_rows(2, 2, &[1, 2, 3, 4]);
+//! let handle = registry.register(weight, 8).unwrap();
+//! // ...then stream activations against the handle.
+//! let packed = registry.get(handle).unwrap();
+//! let mut backend = FastBackend::new(FastAlgo::Kmm);
+//! let activation = Mat::from_rows(1, 2, &[5, 6]);
+//! let r = backend.gemm_packed(&activation, &packed).unwrap();
+//! assert_eq!(r.c.to_i128_vec().unwrap(), vec![23, 34]);
+//! assert_eq!(registry.packs(), 1); // one pack event, however many requests
+//! ```
+
+use crate::algo::matrix::Mat;
+use crate::fast::{Blocking, Kernel8x4, PackedB, PackedKmmB, MAX_W};
+use crate::util::error::{bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// The native width window of the default serving backends (the paper's
+/// `m = 8`): registered weights wider than this also get a Karatsuba
+/// digit-plane cache so the `fast-kmm` backend can serve them without
+/// any per-call splitting.
+pub const NATIVE_W: u32 = 8;
+
+/// Opaque identifier of a registered weight (unique per registry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WeightHandle(pub u64);
+
+/// Which decompositions a registered weight is prepacked for. A packed
+/// weight is weight-*sized* state: above the native window the
+/// conventional panels cost one weight copy and the digit-plane tree
+/// about three, so a registry that knows its serving backend should
+/// pack only what that backend reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackPlan {
+    /// Pack for every fast decomposition (backend-agnostic; the
+    /// memory-heaviest choice).
+    Both,
+    /// Serving backend routes conventionally (`fast-mm`): conventional
+    /// panels only.
+    Mm,
+    /// Serving backend digit-slices above the native window
+    /// (`fast-kmm`): the digit-plane tree, plus conventional panels
+    /// only at widths the window serves natively.
+    Kmm,
+    /// Pack nothing — for backends whose `gemm_packed` serves from the
+    /// raw matrix (e.g. `functional`), where any packing would be pure
+    /// waste.
+    Raw,
+}
+
+/// One registered weight: the raw matrix (for fallback backends and
+/// cross-validation) plus the packings its [`PackPlan`] calls for.
+///
+/// All packing work happens here, once, at construction — the serving
+/// paths only read. `mm` serves both the native window and the
+/// conventional-MM decomposition; `kmm` is the Karatsuba digit-plane
+/// tree used for `w >` [`NATIVE_W`] digit-sliced serving. A packing the
+/// plan skipped reads as `None`, and [`FastBackend`] falls back to the
+/// raw matrix — correct, just without the saving.
+///
+/// [`FastBackend`]: crate::coordinator::dispatch::FastBackend
+#[derive(Debug, Clone)]
+pub struct PackedWeight {
+    raw: Mat,
+    w: u32,
+    mm: Option<PackedB>,
+    kmm: Option<PackedKmmB>,
+}
+
+impl PackedWeight {
+    /// Pack `b` (a `k × n` weight on `w`-bit elements) for serving on
+    /// any fast backend ([`PackPlan::Both`]). Fails on widths outside
+    /// the fast engine's window or operands exceeding `w` bits.
+    pub fn new(b: Mat, w: u32) -> Result<PackedWeight> {
+        PackedWeight::with_plan(b, w, PackPlan::Both)
+    }
+
+    /// [`PackedWeight::new`] packing only what `plan` serves from.
+    pub fn with_plan(b: Mat, w: u32, plan: PackPlan) -> Result<PackedWeight> {
+        if w == 0 || w > MAX_W {
+            bail!("w={w} outside the fast engine's 1..={MAX_W} window");
+        }
+        if !b.fits(w) {
+            bail!("weight exceeds w={w} bits");
+        }
+        let (k, n) = (b.rows, b.cols);
+        // Below the native window every decomposition degenerates to the
+        // plain blocked GEMM, so the conventional panels are the one
+        // packing any plan serves from there.
+        let build_mm = match plan {
+            PackPlan::Both | PackPlan::Mm => true,
+            PackPlan::Kmm => w <= NATIVE_W,
+            PackPlan::Raw => false,
+        };
+        // `config_valid(2, w)` holds for every w in 9..=32, so width
+        // alone decides: above the native window the digit-slicing
+        // plans always get their plane tree.
+        let build_kmm = w > NATIVE_W && matches!(plan, PackPlan::Both | PackPlan::Kmm);
+        let mm =
+            build_mm.then(|| PackedB::pack(&Kernel8x4, b.data(), k, n, &Blocking::default()));
+        let kmm = build_kmm.then(|| PackedKmmB::pack(&Kernel8x4, b.data(), k, n, w, 2));
+        Ok(PackedWeight { raw: b, w, mm, kmm })
+    }
+
+    /// The raw (unpacked) weight matrix.
+    pub fn raw(&self) -> &Mat {
+        &self.raw
+    }
+
+    /// Element bitwidth the weight was registered at.
+    pub fn w(&self) -> u32 {
+        self.w
+    }
+
+    /// Weight row count (the GEMM depth `k`).
+    pub fn rows(&self) -> usize {
+        self.raw.rows
+    }
+
+    /// Weight column count (the GEMM width `n`).
+    pub fn cols(&self) -> usize {
+        self.raw.cols
+    }
+
+    /// The conventional blocked-GEMM packing, when the plan built one.
+    pub fn mm(&self) -> Option<&PackedB> {
+        self.mm.as_ref()
+    }
+
+    /// The Karatsuba digit-plane cache, when width and plan call for one.
+    pub fn kmm(&self) -> Option<&PackedKmmB> {
+        self.kmm.as_ref()
+    }
+
+    /// Total packed bytes held by this entry (cache observability).
+    pub fn bytes(&self) -> usize {
+        self.mm.as_ref().map_or(0, PackedB::bytes)
+            + self.kmm.as_ref().map_or(0, PackedKmmB::bytes)
+    }
+}
+
+/// Thread-safe store of registered weights, shared by every server
+/// shard. See the [module docs](self) for the serving model.
+#[derive(Debug, Default)]
+pub struct WeightRegistry {
+    weights: RwLock<HashMap<u64, Arc<PackedWeight>>>,
+    next: AtomicU64,
+    packs: AtomicU64,
+}
+
+impl WeightRegistry {
+    /// An empty registry.
+    pub fn new() -> WeightRegistry {
+        WeightRegistry::default()
+    }
+
+    /// Pack and store a weight for any backend ([`PackPlan::Both`]);
+    /// the returned handle serves any number of subsequent requests
+    /// with zero further pack work.
+    pub fn register(&self, b: Mat, w: u32) -> Result<WeightHandle> {
+        self.register_with_plan(b, w, PackPlan::Both)
+    }
+
+    /// [`register`](Self::register) packing only what `plan` serves
+    /// from — use when the serving backend is known, to keep the
+    /// registry at the bytes it actually reads.
+    pub fn register_with_plan(&self, b: Mat, w: u32, plan: PackPlan) -> Result<WeightHandle> {
+        let packed = Arc::new(PackedWeight::with_plan(b, w, plan)?);
+        self.packs.fetch_add(1, Ordering::Relaxed);
+        let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
+        self.weights
+            .write()
+            .expect("registry lock poisoned")
+            .insert(id, packed);
+        Ok(WeightHandle(id))
+    }
+
+    /// Look up a handle; the `Arc` clone lets callers serve from the
+    /// entry without holding the registry lock.
+    pub fn get(&self, handle: WeightHandle) -> Option<Arc<PackedWeight>> {
+        self.weights
+            .read()
+            .expect("registry lock poisoned")
+            .get(&handle.0)
+            .cloned()
+    }
+
+    /// Drop a registered weight; returns whether the handle was live.
+    /// In-flight requests holding the `Arc` complete unaffected.
+    pub fn unregister(&self, handle: WeightHandle) -> bool {
+        self.weights
+            .write()
+            .expect("registry lock poisoned")
+            .remove(&handle.0)
+            .is_some()
+    }
+
+    /// Number of currently registered weights.
+    pub fn len(&self) -> usize {
+        self.weights.read().expect("registry lock poisoned").len()
+    }
+
+    /// Whether the registry holds no weights.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total pack events since creation (one per successful
+    /// [`register`](Self::register) — serving never packs, so this
+    /// staying flat across requests *is* the cache-effectiveness
+    /// guarantee the tests assert).
+    pub fn packs(&self) -> u64 {
+        self.packs.load(Ordering::Relaxed)
+    }
+
+    /// Total packed bytes across live entries (cache observability).
+    pub fn bytes(&self) -> usize {
+        self.weights
+            .read()
+            .expect("registry lock poisoned")
+            .values()
+            .map(|w| w.bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn register_get_unregister_lifecycle() {
+        let reg = WeightRegistry::new();
+        assert!(reg.is_empty());
+        let mut rng = Rng::new(3);
+        let b = Mat::random(6, 5, 12, &mut rng);
+        let h = reg.register(b.clone(), 12).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.packs(), 1);
+        let pw = reg.get(h).expect("registered");
+        assert_eq!(pw.raw(), &b);
+        assert_eq!(pw.w(), 12);
+        assert_eq!((pw.rows(), pw.cols()), (6, 5));
+        assert!(pw.bytes() > 0);
+        assert!(reg.bytes() >= pw.bytes());
+        assert!(reg.unregister(h));
+        assert!(!reg.unregister(h));
+        assert!(reg.get(h).is_none());
+        assert!(reg.is_empty());
+        // Pack count records history, not liveness.
+        assert_eq!(reg.packs(), 1);
+    }
+
+    #[test]
+    fn handles_are_unique_and_lookups_independent() {
+        let reg = WeightRegistry::new();
+        let mut rng = Rng::new(4);
+        let b1 = Mat::random(3, 4, 8, &mut rng);
+        let b2 = Mat::random(5, 2, 8, &mut rng);
+        let h1 = reg.register(b1.clone(), 8).unwrap();
+        let h2 = reg.register(b2.clone(), 8).unwrap();
+        assert_ne!(h1, h2);
+        assert_eq!(reg.get(h1).unwrap().raw(), &b1);
+        assert_eq!(reg.get(h2).unwrap().raw(), &b2);
+        assert_eq!(reg.packs(), 2);
+    }
+
+    #[test]
+    fn digit_plane_cache_follows_the_width_window() {
+        let mut rng = Rng::new(5);
+        // At or below the native window: no digit-plane cache.
+        let pw = PackedWeight::new(Mat::random(4, 4, 8, &mut rng), 8).unwrap();
+        assert!(pw.mm().is_some());
+        assert!(pw.kmm().is_none());
+        // Above it: the KMM2 plane tree is prebuilt alongside the panels.
+        let pw = PackedWeight::new(Mat::random(4, 4, 12, &mut rng), 12).unwrap();
+        assert!(pw.mm().is_some());
+        let planes = pw.kmm().expect("digit planes for w > NATIVE_W");
+        assert_eq!((planes.w(), planes.digits()), (12, 2));
+    }
+
+    #[test]
+    fn pack_plan_builds_only_what_it_serves() {
+        let mut rng = Rng::new(7);
+        let b = Mat::random(6, 5, 12, &mut rng);
+        // Mm: conventional panels only, at any width.
+        let pw = PackedWeight::with_plan(b.clone(), 12, PackPlan::Mm).unwrap();
+        assert!(pw.mm().is_some() && pw.kmm().is_none());
+        // Kmm above the window: digit planes only.
+        let pw = PackedWeight::with_plan(b.clone(), 12, PackPlan::Kmm).unwrap();
+        assert!(pw.mm().is_none() && pw.kmm().is_some());
+        // Kmm at/below the window degenerates to the plain panels.
+        let narrow = Mat::random(6, 5, 8, &mut rng);
+        let pw = PackedWeight::with_plan(narrow, 8, PackPlan::Kmm).unwrap();
+        assert!(pw.mm().is_some() && pw.kmm().is_none());
+        // Raw packs nothing at all (backends that serve from the raw
+        // matrix), so the entry costs only the matrix itself.
+        let pw_raw = PackedWeight::with_plan(b.clone(), 12, PackPlan::Raw).unwrap();
+        assert!(pw_raw.mm().is_none() && pw_raw.kmm().is_none());
+        assert_eq!(pw_raw.bytes(), 0);
+        // Both holds strictly more bytes than a single-plan entry of
+        // the same shape.
+        let both = PackedWeight::with_plan(b, 12, PackPlan::Both).unwrap();
+        assert!(both.bytes() > pw.bytes());
+    }
+
+    #[test]
+    fn rejects_overwide_and_misfit_weights() {
+        let reg = WeightRegistry::new();
+        let err = reg.register(Mat::zeros(2, 2), 33).unwrap_err();
+        assert!(err.to_string().contains("window"), "{err:#}");
+        let b = Mat::from_rows(1, 1, &[200]);
+        let err = reg.register(b, 4).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err:#}");
+        assert_eq!(reg.packs(), 0, "failed registrations pack nothing");
+    }
+
+    #[test]
+    fn registry_is_shared_across_threads() {
+        // The Arc + RwLock contract the sharded server relies on.
+        let reg = Arc::new(WeightRegistry::new());
+        let mut rng = Rng::new(6);
+        let h = reg.register(Mat::random(3, 3, 8, &mut rng), 8).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let reg = Arc::clone(&reg);
+                s.spawn(move || {
+                    assert!(reg.get(h).is_some());
+                });
+            }
+        });
+        assert_eq!(reg.packs(), 1);
+    }
+}

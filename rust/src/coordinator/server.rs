@@ -20,6 +20,8 @@
 use crate::algo::matrix::{Mat, MatAcc};
 use crate::arch::scalable::Mode;
 use crate::coordinator::dispatch::GemmBackend;
+use crate::coordinator::registry::{PackedWeight, WeightHandle, WeightRegistry};
+use crate::util::error::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -33,6 +35,15 @@ pub struct Request {
     pub a: Mat,
     pub b: Mat,
     pub w: u32,
+}
+
+/// One weight-stationary GEMM request: an activation streamed against a
+/// weight previously registered through the server's [`WeightRegistry`].
+#[derive(Debug, Clone)]
+pub struct PackedRequest {
+    pub id: u64,
+    pub a: Mat,
+    pub handle: WeightHandle,
 }
 
 /// The served result.
@@ -82,6 +93,15 @@ pub struct ServerStats {
     pub batches: u64,
     pub rejected: u64,
     pub total_cycles: u64,
+    /// Weight-stationary requests whose handle resolved in the shared
+    /// registry. Whether the serve came from a prepacked path or the
+    /// raw fallback depends on the entry's `PackPlan` matching the
+    /// backend's routing; the pack-work guarantee itself is
+    /// `WeightRegistry::packs()` staying flat across requests.
+    pub weight_hits: u64,
+    /// Weight-stationary requests naming an unknown (or unregistered)
+    /// handle; always rejected.
+    pub weight_misses: u64,
     /// Requests per mode.
     pub by_mode: HashMap<&'static str, u64>,
 }
@@ -93,6 +113,8 @@ impl ServerStats {
         self.batches += other.batches;
         self.rejected += other.rejected;
         self.total_cycles += other.total_cycles;
+        self.weight_hits += other.weight_hits;
+        self.weight_misses += other.weight_misses;
         for (mode, count) in &other.by_mode {
             *self.by_mode.entry(mode).or_insert(0) += count;
         }
@@ -101,6 +123,7 @@ impl ServerStats {
 
 enum Msg {
     Req(Request, Sender<Response>),
+    Packed(PackedRequest, Sender<Response>),
     Shutdown(Sender<ServerStats>),
 }
 
@@ -109,13 +132,31 @@ pub struct Server {
     txs: Vec<Sender<Msg>>,
     workers: Vec<JoinHandle<()>>,
     next_id: u64,
+    registry: Arc<WeightRegistry>,
 }
 
 impl Server {
-    /// Start `cfg.workers` worker threads; `factory` builds one backend
-    /// *on* each worker (backends may hold thread-affine state, so they
-    /// are constructed where they run, never moved).
+    /// Start `cfg.workers` worker threads with a fresh (empty) weight
+    /// registry; `factory` builds one backend *on* each worker
+    /// (backends may hold thread-affine state, so they are constructed
+    /// where they run, never moved).
     pub fn start<F>(factory: F, cfg: ServerConfig) -> Server
+    where
+        F: Fn() -> Box<dyn GemmBackend> + Send + Sync + 'static,
+    {
+        Server::start_with_registry(factory, cfg, Arc::new(WeightRegistry::new()))
+    }
+
+    /// [`Server::start`] against an existing weight registry. The one
+    /// registry is shared by **every** shard (each worker holds an
+    /// `Arc` clone), so a handle registered through any path — this
+    /// server, another server, or the registry directly — is visible to
+    /// all workers regardless of which shard a request lands on.
+    pub fn start_with_registry<F>(
+        factory: F,
+        cfg: ServerConfig,
+        registry: Arc<WeightRegistry>,
+    ) -> Server
     where
         F: Fn() -> Box<dyn GemmBackend> + Send + Sync + 'static,
     {
@@ -130,8 +171,9 @@ impl Server {
             let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
             let factory = Arc::clone(&factory);
             let counter = Arc::clone(&batch_counter);
+            let registry = Arc::clone(&registry);
             workers.push(std::thread::spawn(move || {
-                worker_loop(factory.as_ref(), rx, cfg, &counter)
+                worker_loop(factory.as_ref(), rx, cfg, &counter, &registry)
             }));
             txs.push(tx);
         }
@@ -139,6 +181,7 @@ impl Server {
             txs,
             workers,
             next_id: 0,
+            registry,
         }
     }
 
@@ -147,22 +190,76 @@ impl Server {
         self.txs.len()
     }
 
-    /// Submit a GEMM; returns the receiver for its response. Requests
-    /// are dispatched round-robin across the worker shards.
-    pub fn submit(&mut self, a: Mat, b: Mat, w: u32) -> (u64, Receiver<Response>) {
+    /// The weight registry shared by every shard.
+    pub fn registry(&self) -> Arc<WeightRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Pack and register a stationary weight; the handle is valid for
+    /// [`submit_packed`](Self::submit_packed) on every shard.
+    ///
+    /// Packs for every decomposition ([`PackPlan::Both`]) — the safe
+    /// default, since backends are built *on* their worker threads
+    /// (possibly thread-affine) and cannot be probed for a preference
+    /// here. When the shard backend is known, use
+    /// [`register_weight_with_plan`](Self::register_weight_with_plan)
+    /// with its `preferred_plan()` to avoid packing decompositions the
+    /// workers never read.
+    ///
+    /// [`PackPlan::Both`]: crate::coordinator::registry::PackPlan::Both
+    pub fn register_weight(&self, b: Mat, w: u32) -> Result<WeightHandle> {
+        self.registry.register(b, w)
+    }
+
+    /// [`register_weight`](Self::register_weight) packing only what
+    /// `plan` serves from (see
+    /// [`GemmBackend::preferred_plan`](crate::coordinator::dispatch::GemmBackend::preferred_plan)).
+    pub fn register_weight_with_plan(
+        &self,
+        b: Mat,
+        w: u32,
+        plan: crate::coordinator::registry::PackPlan,
+    ) -> Result<WeightHandle> {
+        self.registry.register_with_plan(b, w, plan)
+    }
+
+    /// Allocate a request id, pick its shard (round-robin), and send
+    /// the message `make` builds from the id and reply channel — the
+    /// one routing policy both request kinds share.
+    fn dispatch(
+        &mut self,
+        make: impl FnOnce(u64, Sender<Response>) -> Msg,
+    ) -> (u64, Receiver<Response>) {
         self.next_id += 1;
         let id = self.next_id;
         let shard = (id as usize - 1) % self.txs.len();
         let (rtx, rrx) = channel();
-        self.txs[shard]
-            .send(Msg::Req(Request { id, a, b, w }, rtx))
-            .expect("server alive");
+        self.txs[shard].send(make(id, rtx)).expect("server alive");
         (id, rrx)
+    }
+
+    /// Submit a GEMM; returns the receiver for its response. Requests
+    /// are dispatched round-robin across the worker shards.
+    pub fn submit(&mut self, a: Mat, b: Mat, w: u32) -> (u64, Receiver<Response>) {
+        self.dispatch(|id, rtx| Msg::Req(Request { id, a, b, w }, rtx))
     }
 
     /// Submit and block for the result.
     pub fn submit_sync(&mut self, a: Mat, b: Mat, w: u32) -> Response {
         let (_, rx) = self.submit(a, b, w);
+        rx.recv().expect("worker alive")
+    }
+
+    /// Submit an activation against a registered weight; returns the
+    /// receiver for its response. Round-robins across shards exactly
+    /// like [`submit`](Self::submit) — any shard can serve any handle.
+    pub fn submit_packed(&mut self, a: Mat, handle: WeightHandle) -> (u64, Receiver<Response>) {
+        self.dispatch(|id, rtx| Msg::Packed(PackedRequest { id, a, handle }, rtx))
+    }
+
+    /// Submit against a registered weight and block for the result.
+    pub fn submit_packed_sync(&mut self, a: Mat, handle: WeightHandle) -> Response {
+        let (_, rx) = self.submit_packed(a, handle);
         rx.recv().expect("worker alive")
     }
 
@@ -182,6 +279,25 @@ impl Server {
     }
 }
 
+/// One unit of drained work: a raw request, or a packed request with
+/// its registry entry resolved at drain time (`None` = unknown handle).
+enum Work {
+    Raw(Request),
+    Packed(PackedRequest, Option<Arc<PackedWeight>>),
+}
+
+impl Work {
+    /// Bitwidth sort key for mode grouping (misses sort last — they
+    /// reject without touching the array).
+    fn width(&self) -> u32 {
+        match self {
+            Work::Raw(r) => r.w,
+            Work::Packed(_, Some(pw)) => pw.w(),
+            Work::Packed(_, None) => u32::MAX,
+        }
+    }
+}
+
 /// One shard's event loop: block for a request, drain a batch, group by
 /// bitwidth, serve, repeat — until shutdown (reply with this shard's
 /// statistics) or every sender is dropped.
@@ -190,6 +306,7 @@ fn worker_loop(
     rx: Receiver<Msg>,
     cfg: ServerConfig,
     batch_counter: &AtomicU64,
+    registry: &WeightRegistry,
 ) {
     let mut backend = factory();
     let mut stats = ServerStats::default();
@@ -199,20 +316,28 @@ fn worker_loop(
             Ok(m) => m,
             Err(_) => return, // all senders dropped
         };
-        let mut pending: Vec<(Request, Sender<Response>)> = Vec::new();
+        let mut pending: Vec<(Work, Sender<Response>)> = Vec::new();
         let mut shutdown: Option<Sender<ServerStats>> = None;
+        let enqueue = |msg: Msg, pending: &mut Vec<(Work, Sender<Response>)>| match msg {
+            Msg::Req(r, c) => pending.push((Work::Raw(r), c)),
+            Msg::Packed(r, c) => {
+                let weight = registry.get(r.handle);
+                pending.push((Work::Packed(r, weight), c));
+            }
+            Msg::Shutdown(_) => unreachable!("shutdown handled by the caller"),
+        };
         match first {
-            Msg::Req(r, c) => pending.push((r, c)),
             Msg::Shutdown(s) => shutdown = Some(s),
+            msg => enqueue(msg, &mut pending),
         }
         // ... then drain whatever else arrived (the batcher).
         while shutdown.is_none() && pending.len() < cfg.batch_max {
             match rx.try_recv() {
-                Ok(Msg::Req(r, c)) => pending.push((r, c)),
                 Ok(Msg::Shutdown(s)) => {
                     shutdown = Some(s);
                     break;
                 }
+                Ok(msg) => enqueue(msg, &mut pending),
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
@@ -220,15 +345,27 @@ fn worker_loop(
         if !pending.is_empty() {
             let batch_id = batch_counter.fetch_add(1, Ordering::Relaxed) + 1;
             // Group by bitwidth: one array mode per group.
-            pending.sort_by_key(|(r, _)| r.w);
-            for (req, reply) in pending {
+            pending.sort_by_key(|(work, _)| work.width());
+            for (work, reply) in pending {
                 stats.requests += 1;
-                let resp = match backend.gemm(&req.a, &req.b, req.w) {
+                let (id, result) = match &work {
+                    Work::Raw(req) => (req.id, backend.gemm(&req.a, &req.b, req.w)),
+                    Work::Packed(req, Some(weight)) => {
+                        stats.weight_hits += 1;
+                        (req.id, backend.gemm_packed(&req.a, weight))
+                    }
+                    Work::Packed(req, None) => {
+                        stats.weight_misses += 1;
+                        let e = crate::format_err!("unknown weight handle {}", req.handle.0);
+                        (req.id, Err(e))
+                    }
+                };
+                let resp = match result {
                     Ok(res) => {
                         stats.total_cycles += res.stats.cycles;
                         *stats.by_mode.entry(mode_name(res.mode)).or_insert(0) += 1;
                         Response {
-                            id: req.id,
+                            id,
                             result: Ok(res.c),
                             mode: Some(res.mode),
                             cycles: res.stats.cycles,
@@ -238,7 +375,7 @@ fn worker_loop(
                     Err(e) => {
                         stats.rejected += 1;
                         Response {
-                            id: req.id,
+                            id,
                             result: Err(format!("{e:#}")),
                             mode: None,
                             cycles: 0,
@@ -428,6 +565,113 @@ mod tests {
         assert_eq!(stats.requests, 10);
         assert_eq!(stats.rejected, 1);
         assert_eq!(stats.by_mode.get("kmm2"), Some(&9));
+    }
+
+    #[test]
+    fn packed_serving_hits_and_misses() {
+        let mut srv = Server::start(
+            || Box::new(FastBackend::new(FastAlgo::Kmm)) as Box<dyn GemmBackend>,
+            ServerConfig::default(),
+        );
+        let mut rng = Rng::new(31);
+        let b = Mat::random(7, 5, 12, &mut rng);
+        // The shard backends are fast-kmm, so pack only the digit planes.
+        let h = srv
+            .register_weight_with_plan(b.clone(), 12, crate::coordinator::registry::PackPlan::Kmm)
+            .unwrap();
+        // Two requests against one handle: both hits, one pack event.
+        for _ in 0..2 {
+            let a = Mat::random(4, 7, 12, &mut rng);
+            let want = matmul_oracle(&a, &b);
+            let resp = srv.submit_packed_sync(a, h);
+            assert_eq!(resp.result.unwrap(), want);
+            assert_eq!(resp.mode, Some(Mode::Kmm2));
+        }
+        // Unknown handle: rejected, counted as a miss, server survives.
+        let bogus = crate::coordinator::registry::WeightHandle(999);
+        let a = Mat::random(4, 7, 12, &mut rng);
+        let resp = srv.submit_packed_sync(a, bogus);
+        assert!(resp.result.unwrap_err().contains("unknown weight handle"));
+        let reg = srv.registry();
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.weight_hits, 2);
+        assert_eq!(stats.weight_misses, 1);
+        assert_eq!(stats.rejected, 1);
+        // The cache packed exactly once, however many requests it served.
+        assert_eq!(reg.packs(), 1);
+    }
+
+    #[test]
+    fn registered_weight_visible_to_every_shard() {
+        // Regression test for cross-shard handle visibility: shards own
+        // their backends, but the weight registry is one shared store —
+        // a handle registered before (or after) startup must serve on
+        // whichever shard round-robin lands each request on.
+        let mut srv = Server::start(
+            || Box::new(FastBackend::new(FastAlgo::Kmm)) as Box<dyn GemmBackend>,
+            ServerConfig::default().workers(4),
+        );
+        assert_eq!(srv.shards(), 4);
+        let mut rng = Rng::new(32);
+        let b = Mat::random(6, 8, 16, &mut rng);
+        let h = srv.register_weight(b.clone(), 16).unwrap();
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        // 12 requests over 4 shards: every shard serves the handle 3x.
+        for _ in 0..12 {
+            let a = Mat::random(5, 6, 16, &mut rng);
+            expected.push(matmul_oracle(&a, &b));
+            rxs.push(srv.submit_packed(a, h).1);
+        }
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.result.unwrap(), want);
+        }
+        let reg = srv.registry();
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 12);
+        assert_eq!(stats.weight_hits, 12);
+        assert_eq!(stats.weight_misses, 0);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(reg.packs(), 1, "one shared pack serves all four shards");
+    }
+
+    #[test]
+    fn mixed_raw_and_packed_batches_group_by_width() {
+        // Raw and packed requests drain into one batch and both serve
+        // exactly; the registry is pre-seeded via start_with_registry.
+        let registry = Arc::new(WeightRegistry::new());
+        let mut rng = Rng::new(33);
+        let b = Mat::random(5, 4, 9, &mut rng);
+        let h = registry
+            .register(b.clone(), 9)
+            .expect("registration succeeds");
+        let mut srv = Server::start_with_registry(
+            || Box::new(FastBackend::new(FastAlgo::Kmm)) as Box<dyn GemmBackend>,
+            ServerConfig::default(),
+            Arc::clone(&registry),
+        );
+        let mut rxs = Vec::new();
+        let mut expected = Vec::new();
+        for i in 0..8 {
+            let a = Mat::random(3, 5, 9, &mut rng);
+            if i % 2 == 0 {
+                expected.push(matmul_oracle(&a, &b));
+                rxs.push(srv.submit_packed(a, h).1);
+            } else {
+                let b2 = Mat::random(5, 4, 9, &mut rng);
+                expected.push(matmul_oracle(&a, &b2));
+                rxs.push(srv.submit(a, b2, 9).1);
+            }
+        }
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            assert_eq!(rx.recv().unwrap().result.unwrap(), want);
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 8);
+        assert_eq!(stats.weight_hits, 4);
+        assert_eq!(stats.by_mode.get("kmm2"), Some(&8));
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! by `tests/integration_parallel.rs`).
 
 use crate::fast::kernel::Kernel;
-use crate::fast::pack::{pack_a, pack_b};
+use crate::fast::pack::{pack_a, pack_b, PackedB};
 use crate::util::pool;
 
 /// Cache-blocking parameters (elements, not bytes).
@@ -203,6 +203,144 @@ pub fn gemm_threads<K: Kernel + Sync>(
 ) -> Vec<u128> {
     let mut c = vec![0u128; m * n];
     gemm_into_threads(kernel, &Blocking::default(), threads, a, b, m, k, n, &mut c);
+    c
+}
+
+/// Compute `C = A·B` against a prepacked B operand (see
+/// [`PackedB::pack`]), returning a freshly allocated row-major `u128`
+/// product. Bit-exact with [`gemm`] on the same inputs; the only
+/// difference is that no B-packing work happens per call.
+pub fn gemm_prepacked<K: Kernel>(kernel: &K, a: &[u64], packed: &PackedB, m: usize) -> Vec<u128> {
+    let mut c = vec![0u128; m * packed.cols()];
+    gemm_prepacked_into(kernel, a, packed, m, &mut c);
+    c
+}
+
+/// Blocked GEMM accumulating into `c` (`c += A·B`) against a prepacked
+/// B operand. The blocking comes from the cache entry itself (slab
+/// boundaries were cut at pack time); the kernel's `NR` must match the
+/// width the panels were padded for.
+pub fn gemm_prepacked_into<K: Kernel>(
+    kernel: &K,
+    a: &[u64],
+    packed: &PackedB,
+    m: usize,
+    c: &mut [u128],
+) {
+    let (k, n) = (packed.rows(), packed.cols());
+    let bl = *packed.blocking();
+    assert_eq!(
+        K::NR,
+        packed.nr(),
+        "PackedB was packed for NR={}, kernel has NR={}",
+        packed.nr(),
+        K::NR
+    );
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut a_buf: Vec<u64> = Vec::new();
+    let mut acc = vec![0u128; K::MR * K::NR];
+    for (jc_idx, jc) in (0..n).step_by(bl.nc).enumerate() {
+        let ncb = bl.nc.min(n - jc);
+        for (pc_idx, pc) in (0..k).step_by(bl.kc).enumerate() {
+            let kcb = bl.kc.min(k - pc);
+            let b_slab = packed.slab(jc_idx, pc_idx);
+            for ic in (0..m).step_by(bl.mc) {
+                let mcb = bl.mc.min(m - ic);
+                let strip = &mut c[ic * n..(ic + mcb) * n];
+                let blk = StripBlock {
+                    k,
+                    n,
+                    ic,
+                    rows: mcb,
+                    pc,
+                    kcb,
+                    jc,
+                    ncb,
+                };
+                run_strip(kernel, a, b_slab, &mut a_buf, &mut acc, &blk, strip);
+            }
+        }
+    }
+}
+
+/// [`gemm_prepacked_into`] across up to `threads` scoped worker threads
+/// (`threads <= 1` delegates to the sequential driver). The parallel
+/// decomposition matches [`gemm_into_threads`] — disjoint MR-aligned C
+/// row strips per worker, the cached B slab shared read-only — so the
+/// result is bit-identical at every thread count.
+pub fn gemm_prepacked_into_threads<K: Kernel + Sync>(
+    kernel: &K,
+    threads: usize,
+    a: &[u64],
+    packed: &PackedB,
+    m: usize,
+    c: &mut [u128],
+) {
+    if threads <= 1 || m < 2 * K::MR {
+        gemm_prepacked_into(kernel, a, packed, m, c);
+        return;
+    }
+    let (k, n) = (packed.rows(), packed.cols());
+    let bl = *packed.blocking();
+    assert_eq!(
+        K::NR,
+        packed.nr(),
+        "PackedB was packed for NR={}, kernel has NR={}",
+        packed.nr(),
+        K::NR
+    );
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    if k == 0 || n == 0 {
+        return;
+    }
+    let mr = K::MR;
+    let strip_rows = (m.div_ceil(threads).div_ceil(mr) * mr).clamp(mr, bl.mc.max(mr));
+    for (jc_idx, jc) in (0..n).step_by(bl.nc).enumerate() {
+        let ncb = bl.nc.min(n - jc);
+        for (pc_idx, pc) in (0..k).step_by(bl.kc).enumerate() {
+            let kcb = bl.kc.min(k - pc);
+            let b_slab = packed.slab(jc_idx, pc_idx);
+            pool::parallel_chunks_mut_with(
+                threads,
+                c,
+                strip_rows * n,
+                || (Vec::<u64>::new(), vec![0u128; K::MR * K::NR]),
+                |(a_buf, acc), strip_idx, strip| {
+                    let ic = strip_idx * strip_rows;
+                    let rows = strip.len() / n;
+                    let blk = StripBlock {
+                        k,
+                        n,
+                        ic,
+                        rows,
+                        pc,
+                        kcb,
+                        jc,
+                        ncb,
+                    };
+                    run_strip(kernel, a, b_slab, a_buf, acc, &blk, strip);
+                },
+            );
+        }
+    }
+}
+
+/// Compute `C = A·B` against a prepacked B across `threads` scoped
+/// worker threads; `threads = 1` is exactly [`gemm_prepacked`].
+pub fn gemm_prepacked_threads<K: Kernel + Sync>(
+    kernel: &K,
+    a: &[u64],
+    packed: &PackedB,
+    m: usize,
+    threads: usize,
+) -> Vec<u128> {
+    let mut c = vec![0u128; m * packed.cols()];
+    gemm_prepacked_into_threads(kernel, threads, a, packed, m, &mut c);
     c
 }
 
@@ -397,6 +535,101 @@ mod tests {
         gemm_into_threads(&Kernel8x4, &bl, 4, &a, &b, m, k, n, &mut c);
         let want: Vec<u128> = naive(&a, &b, m, k, n).iter().map(|&v| 2 * v).collect();
         assert_eq!(c, want);
+    }
+
+    #[test]
+    fn prepacked_matches_fresh_prop() {
+        forall(Config::default().cases(60), |rng| {
+            let (m, k, n) = (rng.range(1, 40), rng.range(1, 40), rng.range(1, 40));
+            let w = *rng.pick(&[4u32, 8, 16, 32]);
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            let packed = PackedB::pack(&Kernel8x4, &b, k, n, &Blocking::default());
+            prop_assert_eq(
+                gemm_prepacked(&Kernel8x4, &a, &packed, m),
+                gemm(&Kernel8x4, &a, &b, m, k, n),
+                &format!("prepacked == fresh ({m}x{k}x{n} w={w})"),
+            )
+        });
+    }
+
+    #[test]
+    fn prepacked_reuse_is_bit_identical() {
+        // One cache entry, many calls: every call yields the same bits,
+        // and a *different* activation still agrees with the fresh path.
+        let mut rng = Rng::new(10);
+        let (m, k, n) = (11, 13, 9);
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(16)).collect();
+        let packed = PackedB::pack(&Kernel8x4, &b, k, n, &Blocking::default());
+        for _ in 0..3 {
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(16)).collect();
+            let first = gemm_prepacked(&Kernel8x4, &a, &packed, m);
+            let second = gemm_prepacked(&Kernel8x4, &a, &packed, m);
+            assert_eq!(first, second);
+            assert_eq!(first, gemm(&Kernel8x4, &a, &b, m, k, n));
+        }
+    }
+
+    #[test]
+    fn prepacked_tiny_blocking_still_exact() {
+        // Pathological blockings cut many slabs; the cache must index
+        // them all correctly.
+        let mut rng = Rng::new(12);
+        let (m, k, n) = (17, 13, 9);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(16)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(16)).collect();
+        let want = naive(&a, &b, m, k, n);
+        for bl in [
+            Blocking { mc: 1, kc: 1, nc: 1 },
+            Blocking { mc: 3, kc: 2, nc: 5 },
+            Blocking { mc: 16, kc: 64, nc: 7 },
+        ] {
+            let packed = PackedB::pack(&Kernel8x4, &b, k, n, &bl);
+            for threads in [1usize, 2, 4] {
+                let mut c = vec![0u128; m * n];
+                gemm_prepacked_into_threads(&Kernel8x4, threads, &a, &packed, m, &mut c);
+                assert_eq!(c, want, "{bl:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_parallel_matches_sequential_prop() {
+        forall(Config::default().cases(30), |rng| {
+            let (m, k, n) = (rng.range(1, 80), rng.range(1, 40), rng.range(1, 40));
+            let threads = *rng.pick(&[2usize, 3, 4, 8]);
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(32)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(32)).collect();
+            let packed = PackedB::pack(&Kernel8x4, &b, k, n, &Blocking::default());
+            prop_assert_eq(
+                gemm_prepacked_threads(&Kernel8x4, &a, &packed, m, threads),
+                gemm_prepacked(&Kernel8x4, &a, &packed, m),
+                &format!("prepacked parallel == sequential ({m}x{k}x{n} t={threads})"),
+            )
+        });
+    }
+
+    #[test]
+    fn prepacked_accumulates_across_calls() {
+        // gemm_prepacked_into adds into C exactly like gemm_into.
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (5, 7, 6);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(12)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(12)).collect();
+        let packed = PackedB::pack(&Kernel8x4, &b, k, n, &Blocking::default());
+        let mut c = vec![0u128; m * n];
+        gemm_prepacked_into(&Kernel8x4, &a, &packed, m, &mut c);
+        gemm_prepacked_into(&Kernel8x4, &a, &packed, m, &mut c);
+        let want: Vec<u128> = naive(&a, &b, m, k, n).iter().map(|&v| 2 * v).collect();
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "PackedB was packed for NR=1")]
+    fn prepacked_rejects_kernel_mismatch() {
+        let packed = PackedB::pack(&Kernel1x1, &[1, 2], 2, 1, &Blocking::default());
+        let mut c = vec![0u128; 1];
+        gemm_prepacked_into(&Kernel8x4, &[3, 4], &packed, 1, &mut c);
     }
 
     #[test]

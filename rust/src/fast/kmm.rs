@@ -40,8 +40,11 @@
 //! [`Tally`]: crate::algo::opcount::Tally
 
 use crate::algo::bits;
-use crate::fast::gemm::{gemm_into, gemm_into_threads, Blocking};
+use crate::fast::gemm::{
+    gemm_into, gemm_into_threads, gemm_prepacked_into, gemm_prepacked_into_threads, Blocking,
+};
 use crate::fast::kernel::{Kernel, MAX_W};
+use crate::fast::pack::PackedB;
 use crate::util::pool;
 
 /// Compute `C = A·B` by the `digits = 2^r`-digit Karatsuba matrix
@@ -155,6 +158,226 @@ fn kmm_rec<K: Kernel + Sync>(
     }
 }
 
+/// A weight operand's full Karatsuba digit-plane decomposition, packed
+/// once for weight-stationary serving.
+///
+/// Recursively splits the `w`-bit operand into high/low/digit-sum
+/// planes exactly as [`kmm`] does per call, then packs every leaf plane
+/// into a [`PackedB`] — so a cached weight pays neither the digit-plane
+/// formation (`split_planes` + `digit_sum_plane`, both `O(k·n)`) nor
+/// the per-slab B packing on any subsequent call. Activations still
+/// split per call (they change per request); only the stationary
+/// operand is cached.
+///
+/// ```
+/// use kmm::fast::kmm::{kmm, kmm_prepacked, PackedKmmB};
+/// use kmm::fast::Kernel8x4;
+///
+/// let (m, k, n, w) = (2, 3, 2, 12);
+/// let a: Vec<u64> = (0..(m * k) as u64).map(|x| x * 99 % 4001).collect();
+/// let b: Vec<u64> = (0..(k * n) as u64).map(|x| x * 77 % 4001).collect();
+/// let packed = PackedKmmB::pack(&Kernel8x4, &b, k, n, w, 2);
+/// assert_eq!(
+///     kmm_prepacked(&Kernel8x4, &a, &packed, m),
+///     kmm(&Kernel8x4, &a, &b, m, k, n, w, 2),
+/// );
+/// ```
+#[derive(Debug, Clone)]
+pub struct PackedKmmB {
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+    root: Plane,
+}
+
+/// One node of the digit-plane tree: leaves hold packed planes, splits
+/// hold the three sub-planes of one Karatsuba recursion level.
+#[derive(Debug, Clone)]
+enum Plane {
+    Leaf(PackedB),
+    Split {
+        hi: Box<Plane>,
+        sum: Box<Plane>,
+        lo: Box<Plane>,
+    },
+}
+
+impl Plane {
+    fn bytes(&self) -> usize {
+        match self {
+            Plane::Leaf(p) => p.bytes(),
+            Plane::Split { hi, sum, lo } => hi.bytes() + sum.bytes() + lo.bytes(),
+        }
+    }
+}
+
+fn pack_plane<K: Kernel>(kernel: &K, b: &[u64], k: usize, n: usize, w: u32, digits: u32) -> Plane {
+    if digits == 1 {
+        return Plane::Leaf(PackedB::pack(kernel, b, k, n, &Blocking::default()));
+    }
+    let wl = bits::lo_width(w);
+    let (b1, b0) = bits::split_planes_vec(b, w);
+    let b_s = bits::digit_sum_plane(&b1, &b0);
+    Plane::Split {
+        hi: Box::new(pack_plane(kernel, &b1, k, n, bits::hi_width(w), digits / 2)),
+        sum: Box::new(pack_plane(kernel, &b_s, k, n, wl + 1, digits / 2)),
+        lo: Box::new(pack_plane(kernel, &b0, k, n, wl, digits / 2)),
+    }
+}
+
+impl PackedKmmB {
+    /// Decompose and pack the row-major `k × n` operand `b` for the
+    /// `(digits, w)` Karatsuba configuration (`digits = 1` degenerates
+    /// to a single plain [`PackedB`]). Panics on an invalid
+    /// configuration, `w >` [`MAX_W`], or operands exceeding `w` bits —
+    /// the same contract as [`kmm`].
+    pub fn pack<K: Kernel>(
+        kernel: &K,
+        b: &[u64],
+        k: usize,
+        n: usize,
+        w: u32,
+        digits: u32,
+    ) -> PackedKmmB {
+        assert!(
+            bits::config_valid(digits, w),
+            "invalid KMM config digits={digits} w={w}"
+        );
+        assert!(
+            w <= MAX_W,
+            "w={w} exceeds the fast engine's {MAX_W}-bit ceiling (use algo::kmm)"
+        );
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        debug_assert!(
+            b.iter().all(|&x| bits::fits(x, w)),
+            "operand exceeds w={w} bits"
+        );
+        PackedKmmB {
+            k,
+            n,
+            w,
+            digits,
+            root: pack_plane(kernel, b, k, n, w, digits),
+        }
+    }
+
+    /// B's row count (the GEMM depth `k`).
+    pub fn rows(&self) -> usize {
+        self.k
+    }
+
+    /// B's column count (the GEMM width `n`).
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// Element bitwidth the planes were split at.
+    pub fn w(&self) -> u32 {
+        self.w
+    }
+
+    /// Digit count of the decomposition (`2^r` digits = `r` levels).
+    pub fn digits(&self) -> u32 {
+        self.digits
+    }
+
+    /// Total owned size of all packed leaf planes in bytes.
+    pub fn bytes(&self) -> usize {
+        self.root.bytes()
+    }
+}
+
+/// [`kmm`] against a prepacked digit-plane cache: the stationary B
+/// operand was split and packed once; only the activation splits per
+/// call. Bit-exact with [`kmm`] at the cache's `(w, digits)`.
+pub fn kmm_prepacked<K: Kernel + Sync>(
+    kernel: &K,
+    a: &[u64],
+    packed: &PackedKmmB,
+    m: usize,
+) -> Vec<u128> {
+    kmm_prepacked_threads(kernel, a, packed, m, 1)
+}
+
+/// [`kmm_prepacked`] across up to `threads` scoped worker threads,
+/// forking the three digit-plane sub-GEMMs per recursion level exactly
+/// like [`kmm_threads`]. `threads <= 1` is exactly [`kmm_prepacked`].
+pub fn kmm_prepacked_threads<K: Kernel + Sync>(
+    kernel: &K,
+    a: &[u64],
+    packed: &PackedKmmB,
+    m: usize,
+    threads: usize,
+) -> Vec<u128> {
+    let (k, n, w, digits) = (packed.k, packed.n, packed.w, packed.digits);
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    debug_assert!(
+        a.iter().all(|&x| bits::fits(x, w)),
+        "operand exceeds w={w} bits"
+    );
+    let mut out = vec![0u128; m * n];
+    kmm_prepacked_rec(kernel, a, &packed.root, m, k, n, w, digits, threads, &mut out);
+    out
+}
+
+/// Recursive worker mirroring [`kmm_rec`], with the B side read from
+/// the cached plane tree instead of being split and packed per level.
+#[allow(clippy::too_many_arguments)]
+fn kmm_prepacked_rec<K: Kernel + Sync>(
+    kernel: &K,
+    a: &[u64],
+    plane: &Plane,
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+    threads: usize,
+    out: &mut [u128],
+) {
+    if digits == 1 {
+        let Plane::Leaf(pb) = plane else {
+            panic!("digit-plane tree deeper than the requested digits");
+        };
+        if threads <= 1 {
+            gemm_prepacked_into(kernel, a, pb, m, out);
+        } else {
+            gemm_prepacked_into_threads(kernel, threads, a, pb, m, out);
+        }
+        return;
+    }
+    let Plane::Split { hi, sum, lo } = plane else {
+        panic!("digit-plane tree shallower than the requested digits");
+    };
+    let wl = bits::lo_width(w);
+    let wh = bits::hi_width(w);
+    let (a1, a0) = bits::split_planes_vec(a, w);
+    let a_s = bits::digit_sum_plane(&a1, &a0);
+
+    let sub = threads.div_ceil(3);
+    let run = |x: &[u64], p: &Plane, ww: u32| -> Vec<u128> {
+        let mut c = vec![0u128; m * n];
+        kmm_prepacked_rec(kernel, x, p, m, k, n, ww, digits / 2, sub, &mut c);
+        c
+    };
+    let (c1, c_s, c0) = if threads > 1 {
+        pool::join3(
+            || run(&a1, hi, wh),
+            || run(&a_s, sum, wl + 1),
+            || run(&a0, lo, wl),
+        )
+    } else {
+        (run(&a1, hi, wh), run(&a_s, sum, wl + 1), run(&a0, lo, wl))
+    };
+
+    for i in 0..m * n {
+        // Non-negative by Σ(a1+a0)(b1+b0) ≥ Σa1b1 + Σa0b0 elementwise.
+        let cross = c_s[i] - c1[i] - c0[i];
+        out[i] += (c1[i] << (2 * wl)) + (cross << wl) + c0[i];
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +478,67 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn kmm_prepacked_matches_fresh_prop() {
+        forall(Config::default().cases(60), |rng| {
+            let digits = *rng.pick(&[1u32, 2, 4, 8]);
+            let widths: Vec<u32> = [8u32, 16, 32].into_iter().filter(|&w| w >= digits).collect();
+            let w = *rng.pick(&widths);
+            let threads = *rng.pick(&[1usize, 2, 4]);
+            let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            let packed = PackedKmmB::pack(&Kernel8x4, &b, k, n, w, digits);
+            prop_assert_eq(
+                kmm_prepacked_threads(&Kernel8x4, &a, &packed, m, threads),
+                kmm(&Kernel8x4, &a, &b, m, k, n, w, digits),
+                &format!("prepacked KMM_{digits}^[{w}] == fresh ({m}x{k}x{n} t={threads})"),
+            )
+        });
+    }
+
+    #[test]
+    fn kmm_prepacked_reuse_bit_identical() {
+        let mut rng = Rng::new(17);
+        let (m, k, n, w) = (9, 11, 7, 16);
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let packed = PackedKmmB::pack(&Kernel8x4, &b, k, n, w, 2);
+        assert_eq!((packed.rows(), packed.cols()), (k, n));
+        assert_eq!((packed.w(), packed.digits()), (w, 2));
+        assert!(packed.bytes() > 0);
+        for _ in 0..3 {
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let first = kmm_prepacked(&Kernel8x4, &a, &packed, m);
+            assert_eq!(first, kmm_prepacked(&Kernel8x4, &a, &packed, m));
+            assert_eq!(first, kmm(&Kernel8x4, &a, &b, m, k, n, w, 2));
+        }
+    }
+
+    #[test]
+    fn kmm_prepacked_max_width_all_ones() {
+        // Adversarial recombination through the cached plane tree.
+        let (m, k, n) = (9usize, 64usize, 5usize);
+        let a = vec![u32::MAX as u64; m * k];
+        let b = vec![u32::MAX as u64; k * n];
+        let want = gemm(&Kernel8x4, &a, &b, m, k, n);
+        for digits in [2u32, 4, 8] {
+            let packed = PackedKmmB::pack(&Kernel8x4, &b, k, n, 32, digits);
+            for threads in [1usize, 2, 4] {
+                assert_eq!(
+                    kmm_prepacked_threads(&Kernel8x4, &a, &packed, m, threads),
+                    want,
+                    "digits={digits} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid KMM config")]
+    fn kmm_prepacked_rejects_invalid_config() {
+        PackedKmmB::pack(&Kernel8x4, &[1], 1, 1, 8, 3);
     }
 
     #[test]

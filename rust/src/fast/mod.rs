@@ -55,6 +55,22 @@
 //! (`tests/integration_parallel.rs`), and `threads = 1` *is* the
 //! sequential path.
 //!
+//! # Prepacked operands (weight-stationary serving)
+//!
+//! The paper's accelerators are weight-stationary: weights load into
+//! the PEs once and are reused across the whole activation stream
+//! (§IV). The software mirror is the prepacked-operand cache:
+//! [`PackedB`] packs a stationary B operand once (slab-for-slab
+//! identical to what the fresh path packs per call), and
+//! [`PackedKmmB`] additionally caches the full Karatsuba digit-plane
+//! decomposition, so cached serving skips both the `O(k·n)` per-call
+//! packing and the digit-plane formation. The
+//! `gemm_prepacked{,_threads}` and `kmm_prepacked{,_threads}` drivers
+//! are bit-exact with their fresh-pack counterparts at every shape and
+//! thread count (enforced by `tests/integration_prepack.rs`). The
+//! coordinator's [`WeightRegistry`] builds on these to serve registered
+//! weights across server shards.
+//!
 //! # Width contract
 //!
 //! The engine is exact for operands up to [`MAX_W`] (= 32) bits: a
@@ -66,6 +82,7 @@
 //! [`I256`]: crate::util::wide::I256
 //! [`Tally`]: crate::algo::opcount::Tally
 //! [`GemmBackend`]: crate::coordinator::dispatch::GemmBackend
+//! [`WeightRegistry`]: crate::coordinator::registry::WeightRegistry
 //! [`Kernel`]: kernel::Kernel
 //! [`Kernel8x4`]: kernel::Kernel8x4
 //! [`Kernel1x1`]: kernel::Kernel1x1
@@ -76,8 +93,13 @@ pub mod kernel;
 pub mod kmm;
 pub mod pack;
 
-pub use gemm::{gemm_into, gemm_into_threads, Blocking};
+pub use gemm::{
+    gemm_into, gemm_into_threads, gemm_prepacked, gemm_prepacked_into,
+    gemm_prepacked_into_threads, gemm_prepacked_threads, Blocking,
+};
 pub use kernel::{Kernel, Kernel1x1, Kernel8x4, MAX_W};
+pub use kmm::PackedKmmB;
+pub use pack::PackedB;
 
 /// Conventional blocked GEMM with the default kernel and blocking:
 /// `C = A·B` over row-major `w ≤ 32`-bit inputs (see [`gemm::gemm`]).

@@ -18,6 +18,22 @@
 //!   A block (rows × kc)  →  ⌈rows/MR⌉ panels of [kk][r]   (kc × MR each)
 //!   B block (kc × cols)  →  ⌈cols/NR⌉ panels of [kk][c]   (kc × NR each)
 //! ```
+//!
+//! # Prepacked operands
+//!
+//! [`PackedB`] is the *owned* counterpart of the per-call [`pack_b`]
+//! scratch buffer: the whole `k × n` operand packed once, slab by slab,
+//! in exactly the order the blocked driver consumes it. It exists for
+//! weight-stationary serving (the paper's §IV discipline: weights are
+//! loaded into the PEs once and reused across the activation stream) —
+//! pack a weight matrix once, then run any number of
+//! [`gemm_prepacked`](crate::fast::gemm::gemm_prepacked) calls against
+//! it with zero per-call B-packing work. The packed slabs are
+//! bit-identical to what the fresh path produces, so prepacked results
+//! are bit-exact with per-call packing by construction.
+
+use crate::fast::gemm::Blocking;
+use crate::fast::kernel::Kernel;
 
 /// Pack the `rows × cols` block of row-major `src` (row stride `lda`)
 /// starting at `(row0, col0)` into `MR`-row panels, zero-padding the
@@ -81,6 +97,134 @@ pub fn pack_b(
     }
 }
 
+/// A whole `k × n` B operand packed once into depth-major `NR`-column
+/// panel slabs, reusable across any number of GEMM calls.
+///
+/// The slabs are laid out in the exact `(jc, pc)` order the blocked
+/// driver walks them (`NC`-wide column slabs outer, `KC`-deep depth
+/// blocks inner), each slab being precisely what [`pack_b`] would have
+/// produced for that block — so the prepacked drivers
+/// ([`gemm_prepacked`], [`gemm_prepacked_threads`]) are bit-exact with
+/// the fresh-pack path at every shape and thread count.
+///
+/// A `PackedB` remembers the kernel register width (`NR`) and
+/// [`Blocking`] it was packed for; the drivers assert both, so a cache
+/// entry can never silently be consumed by an incompatible kernel.
+///
+/// ```
+/// use kmm::fast::gemm::{gemm, gemm_prepacked, Blocking};
+/// use kmm::fast::pack::PackedB;
+/// use kmm::fast::Kernel8x4;
+///
+/// let (m, k, n) = (3, 5, 4);
+/// let a: Vec<u64> = (0..(m * k) as u64).collect();
+/// let b: Vec<u64> = (0..(k * n) as u64).collect();
+/// // Pack the weight once...
+/// let packed = PackedB::pack(&Kernel8x4, &b, k, n, &Blocking::default());
+/// // ...then serve against it with zero per-call B-packing work.
+/// let fresh = gemm(&Kernel8x4, &a, &b, m, k, n);
+/// assert_eq!(gemm_prepacked(&Kernel8x4, &a, &packed, m), fresh);
+/// assert_eq!(gemm_prepacked(&Kernel8x4, &a, &packed, m), fresh); // reuse
+/// ```
+///
+/// [`gemm_prepacked`]: crate::fast::gemm::gemm_prepacked
+/// [`gemm_prepacked_threads`]: crate::fast::gemm::gemm_prepacked_threads
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedB {
+    /// All slabs, concatenated in `(jc, pc)` driver order.
+    data: Vec<u64>,
+    /// Slab start offsets (`jc_idx * pc_blocks + pc_idx`), plus one
+    /// trailing sentinel equal to `data.len()`.
+    offsets: Vec<usize>,
+    /// B's row count (the GEMM depth `k`).
+    k: usize,
+    /// B's column count (the GEMM width `n`).
+    n: usize,
+    /// Kernel register-tile width the panels were padded for.
+    nr: usize,
+    /// Blocking the slab boundaries were cut for.
+    bl: Blocking,
+}
+
+impl PackedB {
+    /// Pack the row-major `k × n` operand `b` for `K`'s register width
+    /// and the given blocking. Each `NC`-wide column slab zero-pads its
+    /// ragged panel edge independently, so the result owns
+    /// `k · Σ_slabs ⌈ncb/NR⌉·NR` elements — exactly `⌈n/NR⌉·NR·k`
+    /// whenever `bl.nc` is a multiple of `NR` (the default blocking
+    /// is), slightly more otherwise.
+    pub fn pack<K: Kernel>(_kernel: &K, b: &[u64], k: usize, n: usize, bl: &Blocking) -> PackedB {
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert!(bl.mc > 0 && bl.kc > 0 && bl.nc > 0, "degenerate blocking");
+        let nr = K::NR;
+        let jc_blocks = n.div_ceil(bl.nc);
+        let pc_blocks = k.div_ceil(bl.kc);
+        let padded_cols: usize = (0..n)
+            .step_by(bl.nc)
+            .map(|jc| bl.nc.min(n - jc).div_ceil(nr) * nr)
+            .sum();
+        let mut data = Vec::with_capacity(padded_cols * k);
+        let mut offsets = Vec::with_capacity(jc_blocks * pc_blocks + 1);
+        let mut slab = Vec::new();
+        for jc in (0..n).step_by(bl.nc) {
+            let ncb = bl.nc.min(n - jc);
+            for pc in (0..k).step_by(bl.kc) {
+                let kcb = bl.kc.min(k - pc);
+                offsets.push(data.len());
+                pack_b(&mut slab, b, n, pc, kcb, jc, ncb, nr);
+                data.extend_from_slice(&slab);
+            }
+        }
+        offsets.push(data.len());
+        PackedB {
+            data,
+            offsets,
+            k,
+            n,
+            nr,
+            bl: *bl,
+        }
+    }
+
+    /// B's row count (the GEMM depth `k`).
+    pub fn rows(&self) -> usize {
+        self.k
+    }
+
+    /// B's column count (the GEMM width `n`).
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// Kernel register-tile width (`NR`) the panels were padded for.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// Blocking the slab boundaries were cut for.
+    pub fn blocking(&self) -> &Blocking {
+        &self.bl
+    }
+
+    /// Owned size of the packed data in bytes (cache observability).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Depth blocks per column slab.
+    fn pc_blocks(&self) -> usize {
+        self.k.div_ceil(self.bl.kc)
+    }
+
+    /// The packed slab for column-slab index `jc_idx` and depth-block
+    /// index `pc_idx` — identical to the [`pack_b`] output for that
+    /// `(jc, pc)` block.
+    pub(crate) fn slab(&self, jc_idx: usize, pc_idx: usize) -> &[u64] {
+        let i = jc_idx * self.pc_blocks() + pc_idx;
+        &self.data[self.offsets[i]..self.offsets[i + 1]]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +278,57 @@ mod tests {
         assert_eq!(dst, vec![7, 12, 8, 13]);
         pack_b(&mut dst, &src, 5, 1, 2, 2, 2, 2);
         assert_eq!(dst, vec![7, 8, 12, 13]);
+    }
+
+    #[test]
+    fn packed_b_slabs_match_fresh_pack_b() {
+        use crate::fast::kernel::Kernel8x4;
+        use crate::util::rng::Rng;
+        // Ragged k and n against a tiny blocking: every slab of the
+        // owned cache must equal the per-call pack_b output.
+        let mut rng = Rng::new(11);
+        let (k, n) = (13usize, 9usize);
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(16)).collect();
+        let bl = Blocking { mc: 4, kc: 5, nc: 6 };
+        let packed = PackedB::pack(&Kernel8x4, &b, k, n, &bl);
+        assert_eq!(packed.rows(), k);
+        assert_eq!(packed.cols(), n);
+        assert_eq!(packed.nr(), 4);
+        assert_eq!(packed.blocking(), &bl);
+        let mut fresh = Vec::new();
+        for (jc_idx, jc) in (0..n).step_by(bl.nc).enumerate() {
+            let ncb = bl.nc.min(n - jc);
+            for (pc_idx, pc) in (0..k).step_by(bl.kc).enumerate() {
+                let kcb = bl.kc.min(k - pc);
+                pack_b(&mut fresh, &b, n, pc, kcb, jc, ncb, 4);
+                assert_eq!(packed.slab(jc_idx, pc_idx), &fresh[..], "jc={jc} pc={pc}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_b_size_is_padded_operand_size() {
+        use crate::fast::kernel::Kernel8x4;
+        // NR-aligned slab widths: n = 9 pads to 12 columns at NR = 4.
+        let (k, n) = (7usize, 9usize);
+        let b = vec![1u64; k * n];
+        for bl in [Blocking::default(), Blocking { mc: 2, kc: 3, nc: 4 }] {
+            let packed = PackedB::pack(&Kernel8x4, &b, k, n, &bl);
+            assert_eq!(packed.bytes(), 12 * k * std::mem::size_of::<u64>(), "{bl:?}");
+        }
+        // nc = 6 is not a multiple of NR = 4: each slab pads its own
+        // edge (8 cols: 6 → 8, then 2 → 4), so 12 columns, not ⌈8/4⌉·4.
+        let (k, n) = (3usize, 8usize);
+        let b = vec![1u64; k * n];
+        let packed = PackedB::pack(&Kernel8x4, &b, k, n, &Blocking { mc: 2, kc: 3, nc: 6 });
+        assert_eq!(packed.bytes(), 12 * k * std::mem::size_of::<u64>());
+    }
+
+    #[test]
+    fn packed_b_empty_operand() {
+        use crate::fast::kernel::Kernel8x4;
+        let packed = PackedB::pack(&Kernel8x4, &[], 0, 0, &Blocking::default());
+        assert_eq!(packed.bytes(), 0);
+        assert_eq!((packed.rows(), packed.cols()), (0, 0));
     }
 }

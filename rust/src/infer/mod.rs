@@ -1,0 +1,453 @@
+//! End-to-end model inference through the serving stack: run a whole
+//! [`Workload`] (ResNet/VGG GEMM trace) layer by layer on a
+//! [`GemmBackend`], weight-stationary by default.
+//!
+//! This is the software mirror of how the paper's accelerator executes
+//! a network (§V): weights are stationary — prepacked once into the
+//! same [`PackedWeight`] entries the coordinator's
+//! [`WeightRegistry`](crate::coordinator::registry::WeightRegistry)
+//! serves — and per-layer activations stream against the cached
+//! entries. The per-layer wall times and the deterministic cycle model
+//! are both recorded, so one [`InferRun`] yields whole-model and
+//! per-layer throughput for `BENCH_infer.json` and the `kmm infer`
+//! CLI.
+//!
+//! Throughput on this stack depends only on the GEMM shapes and
+//! bitwidths, not on trained values (§V-B), so operands are seeded
+//! random matrices: weights fixed per layer (registered up front),
+//! activations fresh per layer. Setting
+//! [`cached`](InferConfig::cached)` = false` skips the registry and
+//! re-packs the weight on every call — the baseline the benches compare
+//! cached serving against.
+//!
+//! ```
+//! use kmm::coordinator::dispatch::{FastAlgo, FastBackend};
+//! use kmm::infer::{run_workload, InferConfig};
+//! use kmm::model::workload::synthetic_square;
+//!
+//! let wl = synthetic_square("demo", 24, 3, 8);
+//! let mut backend = FastBackend::new(FastAlgo::Kmm);
+//! let cfg = InferConfig { verify: true, ..InferConfig::default() };
+//! let run = run_workload(&wl, &mut backend, 1, &cfg).unwrap();
+//! assert_eq!(run.layers.len(), 3);
+//! assert_eq!(run.total_macs(), wl.macs());
+//! ```
+
+use crate::algo::matrix::{matmul_oracle, Mat};
+use crate::coordinator::dispatch::GemmBackend;
+use crate::coordinator::registry::PackedWeight;
+use crate::model::workload::Workload;
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::{finite, Json};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Inference-run settings (see the [module docs](self)).
+#[derive(Debug, Clone)]
+pub struct InferConfig {
+    /// Activation rows streamed per layer: `None` serves each layer's
+    /// full im2col `M` (one whole inference pass); `Some(rows)` models
+    /// batched serving — `rows` activation rows per request against the
+    /// stationary weights (total MACs change accordingly).
+    pub batch: Option<usize>,
+    /// Requests served per layer (clamped to at least 1), each with a
+    /// fresh activation against the *same* stationary weight — the knob
+    /// that lets one registration amortize over a request stream.
+    pub streams: usize,
+    /// Weight-stationary serving (register + prepack every weight up
+    /// front) vs per-call packing.
+    pub cached: bool,
+    /// Operand RNG seed; a fixed seed makes cached and fresh runs use
+    /// identical operands.
+    pub seed: u64,
+    /// Cross-check layers of up to 2²² MACs against the exact oracle
+    /// (larger layers would dominate the run with `I256` reference
+    /// work).
+    pub verify: bool,
+}
+
+impl Default for InferConfig {
+    fn default() -> Self {
+        InferConfig {
+            batch: None,
+            streams: 1,
+            cached: true,
+            seed: 1,
+            verify: false,
+        }
+    }
+}
+
+/// Oracle-verification ceiling (MACs) for [`InferConfig::verify`].
+const VERIFY_MACS_MAX: u64 = 1 << 22;
+
+/// One served layer's outcome.
+#[derive(Debug, Clone)]
+pub struct LayerRun {
+    pub label: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub w: u32,
+    /// Multiply-accumulates of the layer (`m·k·n`).
+    pub macs: u64,
+    /// Serving wall time of the layer's GEMM call.
+    pub seconds: f64,
+    /// Deterministic device cycles from the backend's timing model.
+    pub cycles: u64,
+}
+
+impl LayerRun {
+    /// Layer throughput in MACs per second (0 if unmeasurably fast).
+    pub fn ops_per_s(&self) -> f64 {
+        finite(self.macs as f64 / self.seconds)
+    }
+}
+
+/// One full inference pass: per-layer results plus run-level metadata.
+#[derive(Debug, Clone)]
+pub struct InferRun {
+    pub model: String,
+    pub backend: String,
+    /// Engine worker threads the backend was configured with.
+    pub threads: usize,
+    /// Whether weights served from the prepacked registry cache.
+    pub cached: bool,
+    /// Wall time spent registering (packing) weights up front; 0 for
+    /// fresh-pack runs.
+    pub prepack_seconds: f64,
+    pub layers: Vec<LayerRun>,
+}
+
+impl InferRun {
+    /// Total serving wall time (excludes prepack).
+    pub fn total_seconds(&self) -> f64 {
+        self.layers.iter().map(|l| l.seconds).sum()
+    }
+
+    /// Total multiply-accumulates served.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Whole-model throughput in MACs per second.
+    pub fn ops_per_s(&self) -> f64 {
+        finite(self.total_macs() as f64 / self.total_seconds())
+    }
+
+    /// Total deterministic device cycles across layers.
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+
+    /// Machine-readable form (the per-run payload of `BENCH_infer.json`).
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut o = BTreeMap::new();
+                o.insert("label".to_string(), Json::Str(l.label.clone()));
+                o.insert("m".to_string(), Json::Int(l.m as i64));
+                o.insert("k".to_string(), Json::Int(l.k as i64));
+                o.insert("n".to_string(), Json::Int(l.n as i64));
+                o.insert("w".to_string(), Json::Int(i64::from(l.w)));
+                o.insert("macs".to_string(), Json::Int(l.macs as i64));
+                o.insert("seconds".to_string(), Json::Float(finite(l.seconds)));
+                o.insert("ops_per_s".to_string(), Json::Float(l.ops_per_s()));
+                o.insert("cycles".to_string(), Json::Int(l.cycles as i64));
+                Json::Object(o)
+            })
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("model".to_string(), Json::Str(self.model.clone()));
+        o.insert("backend".to_string(), Json::Str(self.backend.clone()));
+        o.insert("threads".to_string(), Json::Int(self.threads as i64));
+        o.insert("cached".to_string(), Json::Bool(self.cached));
+        o.insert(
+            "prepack_s".to_string(),
+            Json::Float(finite(self.prepack_seconds)),
+        );
+        o.insert("total_s".to_string(), Json::Float(finite(self.total_seconds())));
+        o.insert("total_macs".to_string(), Json::Int(self.total_macs() as i64));
+        o.insert("ops_per_s".to_string(), Json::Float(self.ops_per_s()));
+        o.insert("total_cycles".to_string(), Json::Int(self.total_cycles() as i64));
+        o.insert("layers".to_string(), Json::Array(layers));
+        Json::Object(o)
+    }
+
+    /// Human-readable per-layer table (the `kmm infer` output).
+    pub fn table(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{} via {} ({} thread{}, {} weights):",
+            self.model,
+            self.backend,
+            self.threads,
+            if self.threads == 1 { "" } else { "s" },
+            if self.cached { "prepacked" } else { "packed per call" },
+        );
+        let _ = writeln!(
+            s,
+            "{:<16} {:>7} {:>7} {:>7} {:>3} {:>12} {:>10}",
+            "layer", "M", "K", "N", "w", "ms", "Mops/s"
+        );
+        for l in &self.layers {
+            let _ = writeln!(
+                s,
+                "{:<16} {:>7} {:>7} {:>7} {:>3} {:>12.3} {:>10.1}",
+                l.label,
+                l.m,
+                l.k,
+                l.n,
+                l.w,
+                l.seconds * 1e3,
+                l.ops_per_s() / 1e6
+            );
+        }
+        let _ = write!(
+            s,
+            "total: {:.1} MMACs in {:.1} ms ({:.1} Mops/s); prepack {:.1} ms; {} device cycles",
+            self.total_macs() as f64 / 1e6,
+            self.total_seconds() * 1e3,
+            self.ops_per_s() / 1e6,
+            self.prepack_seconds * 1e3,
+            self.total_cycles()
+        );
+        s
+    }
+}
+
+/// Execute `wl` layer by layer on `backend`, weight-stationary when
+/// `cfg.cached` (prepack every weight into a [`PackedWeight`] up
+/// front, then stream activations against the cached entries).
+/// `threads` is recorded in the report only — the backend already owns
+/// its worker configuration.
+///
+/// Operands are seeded from `cfg.seed`, so two runs with the same
+/// config — or one cached and one fresh run — see identical matrices.
+pub fn run_workload(
+    wl: &Workload,
+    backend: &mut dyn GemmBackend,
+    threads: usize,
+    cfg: &InferConfig,
+) -> Result<InferRun> {
+    if wl.is_empty() {
+        bail!("workload {} has no layers", wl.name);
+    }
+    let gemms: Vec<_> = wl
+        .gemms
+        .iter()
+        .map(|g| {
+            let mut g = g.clone();
+            if let Some(rows) = cfg.batch {
+                g.m = rows.max(1);
+            }
+            g
+        })
+        .collect();
+
+    // Weights are fixed per layer: materialize them all first (weight
+    // RNG draws are identical for cached and fresh runs) ...
+    let mut rng = Rng::new(cfg.seed);
+    let weights: Vec<Mat> = gemms
+        .iter()
+        .map(|g| Mat::random(g.k, g.n, g.w, &mut rng))
+        .collect();
+
+    // ... then, for cached serving, prepack them up front — the
+    // weight-stationary load phase, timed separately from serving. The
+    // backend reports which decomposition it reads, so only that is
+    // packed (a packed weight is weight-sized state). These are the
+    // same `PackedWeight` entries a served `WeightRegistry` would hand
+    // out, held directly since no cross-component sharing happens here;
+    // per-layer wall times then measure the GEMM, nothing else.
+    let mut packed: Vec<PackedWeight> = Vec::new();
+    let mut prepack_seconds = 0.0;
+    if cfg.cached {
+        let plan = backend.preferred_plan();
+        let t0 = Instant::now();
+        for (g, b) in gemms.iter().zip(&weights) {
+            let pw = PackedWeight::with_plan(b.clone(), g.w, plan)
+                .with_context(|| format!("packing weights for layer {}", g.label))?;
+            packed.push(pw);
+        }
+        prepack_seconds = t0.elapsed().as_secs_f64();
+    }
+
+    // Serve: `streams` requests per layer in layer order, each with a
+    // fresh activation against that layer's stationary weight — so a
+    // single registration amortizes over the whole request stream.
+    let streams = cfg.streams.max(1);
+    let mut layers = Vec::with_capacity(gemms.len());
+    for (i, (g, b)) in gemms.iter().zip(&weights).enumerate() {
+        let mut seconds = 0.0;
+        let mut cycles = 0u64;
+        for stream in 0..streams {
+            let a = Mat::random(g.m, g.k, g.w, &mut rng);
+            let t0 = Instant::now();
+            let served = match packed.get(i) {
+                Some(pw) => backend.gemm_packed(&a, pw),
+                None => backend.gemm(&a, b, g.w),
+            };
+            let res = served.with_context(|| format!("serving layer {}", g.label))?;
+            seconds += t0.elapsed().as_secs_f64();
+            cycles += res.stats.cycles;
+            // Oracle work would swamp the timings; check the first
+            // stream of each small layer only.
+            if cfg.verify
+                && stream == 0
+                && g.macs() <= VERIFY_MACS_MAX
+                && res.c != matmul_oracle(&a, b)
+            {
+                bail!("layer {} result mismatches the exact oracle", g.label);
+            }
+        }
+        layers.push(LayerRun {
+            label: g.label.clone(),
+            m: g.m,
+            k: g.k,
+            n: g.n,
+            w: g.w,
+            macs: g.macs() * streams as u64,
+            seconds,
+            cycles,
+        });
+    }
+    Ok(InferRun {
+        model: wl.name.clone(),
+        backend: backend.name().to_string(),
+        threads,
+        cached: cfg.cached,
+        prepack_seconds,
+        layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dispatch::{FastAlgo, FastBackend, FunctionalBackend};
+    use crate::model::workload::{synthetic_ragged, synthetic_square};
+
+    #[test]
+    fn cached_and_fresh_runs_cover_the_same_work() {
+        let wl = synthetic_square("sq", 16, 4, 12);
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let cached = run_workload(
+            &wl,
+            &mut be,
+            1,
+            &InferConfig { verify: true, ..InferConfig::default() },
+        )
+        .unwrap();
+        let fresh = run_workload(
+            &wl,
+            &mut be,
+            1,
+            &InferConfig { cached: false, verify: true, ..InferConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(cached.total_macs(), wl.macs());
+        assert_eq!(fresh.total_macs(), wl.macs());
+        assert_eq!(cached.total_cycles(), fresh.total_cycles());
+        assert!(cached.cached && !fresh.cached);
+        assert!(cached.prepack_seconds > 0.0);
+        assert_eq!(fresh.prepack_seconds, 0.0);
+        assert_eq!(cached.layers.len(), 4);
+    }
+
+    #[test]
+    fn ragged_workload_verifies_on_both_decompositions() {
+        // Ragged shapes through the oracle check, conventional and
+        // digit-sliced, single- and multi-threaded engines.
+        let wl = synthetic_ragged("rag", 5, 30, 16, 7);
+        for algo in [FastAlgo::Mm, FastAlgo::Kmm] {
+            for threads in [1usize, 2] {
+                let mut be = FastBackend::with_threads(algo, threads);
+                let run = run_workload(
+                    &wl,
+                    &mut be,
+                    threads,
+                    &InferConfig { verify: true, ..InferConfig::default() },
+                )
+                .unwrap();
+                assert_eq!(run.layers.len(), 5);
+                assert!(run.total_cycles() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn functional_backend_serves_cached_workloads() {
+        // The registry path works on backends without a prepacked hot
+        // path (default trait fallback).
+        let wl = synthetic_square("sq", 8, 2, 8);
+        let mut be = FunctionalBackend::paper();
+        let run = run_workload(
+            &wl,
+            &mut be,
+            1,
+            &InferConfig { verify: true, ..InferConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(run.backend, "functional");
+        assert_eq!(run.total_macs(), wl.macs());
+    }
+
+    #[test]
+    fn batch_override_replaces_m() {
+        let wl = synthetic_square("sq", 32, 3, 8);
+        let mut be = FastBackend::new(FastAlgo::Mm);
+        let cfg = InferConfig { batch: Some(4), verify: true, ..InferConfig::default() };
+        let run = run_workload(&wl, &mut be, 1, &cfg).unwrap();
+        assert!(run.layers.iter().all(|l| l.m == 4));
+        assert_eq!(run.total_macs(), 3 * 4 * 32 * 32);
+    }
+
+    #[test]
+    fn streams_amortize_one_registration_over_many_requests() {
+        let wl = synthetic_square("sq", 16, 3, 12);
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let cfg = InferConfig { streams: 4, verify: true, ..InferConfig::default() };
+        let run = run_workload(&wl, &mut be, 1, &cfg).unwrap();
+        // 4 requests per layer against one registration each.
+        assert_eq!(run.total_macs(), 4 * wl.macs());
+        assert_eq!(run.layers.len(), 3);
+        // Cycles scale with the request count too.
+        let single = run_workload(&wl, &mut be, 1, &InferConfig::default()).unwrap();
+        assert_eq!(run.total_cycles(), 4 * single.total_cycles());
+    }
+
+    #[test]
+    fn empty_workload_is_rejected() {
+        let wl = Workload::new("empty", Vec::new());
+        let mut be = FastBackend::new(FastAlgo::Mm);
+        let err = run_workload(&wl, &mut be, 1, &InferConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("no layers"), "{err:#}");
+    }
+
+    #[test]
+    fn report_json_roundtrips_through_the_parser() {
+        let wl = synthetic_square("sq", 12, 2, 8);
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let run = run_workload(&wl, &mut be, 1, &InferConfig::default()).unwrap();
+        let doc = run.to_json().to_string();
+        let parsed = Json::parse(&doc).expect("report must parse via util::json");
+        assert_eq!(parsed.get("model").and_then(Json::as_str), Some("sq"));
+        assert_eq!(parsed.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(
+            parsed.get("layers").and_then(Json::as_array).map(<[Json]>::len),
+            Some(2)
+        );
+        assert_eq!(
+            parsed.get("total_macs").and_then(Json::as_i64),
+            Some((2 * 12 * 12 * 12) as i64)
+        );
+        // The human table mentions the same totals.
+        assert!(run.table().contains("total:"));
+    }
+}

@@ -17,7 +17,10 @@
 //! - [`sim`] — cycle-level GEMM simulation (tiling, tile re-read streams,
 //!   out-of-array accumulation).
 //! - [`coordinator`] — the L3 runtime: scheduler, precision-mode control,
-//!   backend dispatch, batched request serving, metrics (eqs. 11–15, 23).
+//!   backend dispatch, batched request serving, the weight-stationary
+//!   registry, metrics (eqs. 11–15, 23).
+//! - [`infer`] — end-to-end model inference: whole ResNet/VGG workloads
+//!   served layer by layer through a backend, weights prepacked once.
 //! - [`runtime`] — PJRT executable loading (AOT HLO-text artifacts
 //!   produced by `python/compile/aot.py`; requires the `pjrt` feature).
 //! - [`model`] — ResNet/VGG GEMM workload tables and generators.
@@ -52,6 +55,7 @@ pub mod arch;
 pub mod area;
 pub mod coordinator;
 pub mod fast;
+pub mod infer;
 pub mod model;
 pub mod report;
 pub mod runtime;

@@ -8,6 +8,12 @@
 //!                                 worker threads on the fast backends)
 //!   serve [--requests N] [--backend functional|fast-kmm|fast-mm]
 //!         [--threads N]           batched serving demo (N server shards)
+//!   infer --model resnet50 [--backend fast-kmm|fast-mm|functional]
+//!         [--threads N] [--w 8] [--batch M] [--streams S] [--fresh]
+//!         [--verify] [--json FILE]  whole-model inference, weights
+//!                                 prepacked once and reused across S
+//!                                 requests per layer (--fresh re-packs
+//!                                 per call), per-layer timing table
 //!   schedule --workload FILE|resnet50|resnet101|resnet152|vgg16 [--w W]
 //!                                 per-layer plan + aggregate metrics
 //!   export --model resnet50 --w 8 [--out FILE]  dump a workload JSON
@@ -19,6 +25,7 @@ use kmm::coordinator::dispatch::{FastAlgo, FastBackend, FunctionalBackend, GemmB
 use kmm::coordinator::scheduler::schedule;
 use kmm::coordinator::server::{Server, ServerConfig};
 use kmm::arch::scalable::ScalableKmm;
+use kmm::infer::{run_workload, InferConfig};
 use kmm::model::io::{workload_from_json, workload_to_json};
 use kmm::model::resnet::{resnet, ResNet};
 use kmm::model::vgg::{vgg, Vgg};
@@ -41,13 +48,14 @@ fn main() {
         Some("fig12") => print_ok(report::fig12(&ArrayCfg::paper_64()).0),
         Some("gemm") => cmd_gemm(&args),
         Some("serve") => cmd_serve(&args),
+        Some("infer") => cmd_infer(&args),
         Some("schedule") => cmd_schedule(&args),
         Some("export") => cmd_export(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|serve|schedule|export|info> [options]\n{}",
-                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm] [--threads N]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm] [--threads N]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm = engine worker threads; serve = server worker shards)"
+                "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|serve|infer|schedule|export|info> [options]\n{}",
+                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm] [--threads N]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm] [--threads N]\n  infer    --model resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--backend fast-kmm|fast-mm|functional]\n           [--threads N] [--w 8] [--batch M] [--streams S] [--fresh] [--verify] [--json FILE]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm/infer = engine worker threads; serve = server worker shards)"
             );
             2
         }
@@ -172,6 +180,73 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
+/// Resolve `--model`/`--workload` names to a workload: a built-in table
+/// at bitwidth `w`, or a JSON trace file (re-quantized to `w` only when
+/// `--w` was passed explicitly).
+fn resolve_workload(which: &str, w: u32, w_explicit: bool) -> Result<Workload, i32> {
+    if let Some(wl) = named_workload(which, w) {
+        return Ok(wl);
+    }
+    match std::fs::read_to_string(which) {
+        Ok(text) => match workload_from_json(&text) {
+            Ok(wl) => Ok(if w_explicit { wl.at_bitwidth(w) } else { wl }),
+            Err(e) => {
+                eprintln!("cannot parse {which}: {e}");
+                Err(2)
+            }
+        },
+        Err(e) => {
+            eprintln!("unknown workload `{which}` and not a readable file: {e}");
+            Err(2)
+        }
+    }
+}
+
+fn cmd_infer(args: &Args) -> i32 {
+    let model = args.get_str("model", "resnet50");
+    let backend = args.get_str("backend", "fast-kmm");
+    let threads: usize = args.get("threads", pool::env_threads_or(1)).unwrap().max(1);
+    let w: u32 = args.get("w", 8).unwrap();
+    let batch: usize = args.get("batch", 0).unwrap();
+    let wl = match resolve_workload(&model, w, args.options.contains_key("w")) {
+        Ok(wl) => wl,
+        Err(code) => return code,
+    };
+    let Some(mut be) = software_backend(&backend, threads) else {
+        eprintln!("unknown infer backend `{backend}` (fast-kmm|fast-mm|functional)");
+        return 2;
+    };
+    let cfg = InferConfig {
+        batch: (batch > 0).then_some(batch),
+        streams: args.get("streams", 1usize).unwrap().max(1),
+        cached: !args.flag("fresh"),
+        seed: args.get("seed", 1u64).unwrap(),
+        verify: args.flag("verify"),
+    };
+    match run_workload(&wl, be.as_mut(), threads, &cfg) {
+        Ok(run) => {
+            println!("{}", run.table());
+            match args.get_str("json", "").as_str() {
+                "" => 0,
+                path => match std::fs::write(path, run.to_json().to_string()) {
+                    Ok(()) => {
+                        println!("wrote {path}");
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("cannot write {path}: {e}");
+                        1
+                    }
+                },
+            }
+        }
+        Err(e) => {
+            eprintln!("inference failed: {e:#}");
+            1
+        }
+    }
+}
+
 fn named_workload(name: &str, w: u32) -> Option<Workload> {
     Some(match name {
         "resnet50" => resnet(ResNet::R50, w),
@@ -186,21 +261,11 @@ fn named_workload(name: &str, w: u32) -> Option<Workload> {
 fn cmd_schedule(args: &Args) -> i32 {
     let which = args.get_str("workload", "resnet50");
     let w: u32 = args.get("w", 8).unwrap();
-    let wl = match named_workload(&which, w) {
-        Some(wl) => wl,
-        None => match std::fs::read_to_string(&which) {
-            Ok(text) => match workload_from_json(&text) {
-                Ok(wl) => wl.at_bitwidth(w),
-                Err(e) => {
-                    eprintln!("cannot parse {which}: {e}");
-                    return 2;
-                }
-            },
-            Err(e) => {
-                eprintln!("unknown workload `{which}` and not a readable file: {e}");
-                return 2;
-            }
-        },
+    // File traces are always re-quantized to `w` here: the schedule is
+    // evaluated at one uniform bitwidth (the Tables I–II convention).
+    let wl = match resolve_workload(&which, w, true) {
+        Ok(wl) => wl,
+        Err(code) => return code,
     };
     let arch = ScalableKmm::paper_kmm();
     match layer_report(&wl, &arch) {

@@ -115,6 +115,17 @@ impl Json {
     }
 }
 
+/// Clamp non-finite floats to 0 before emission: JSON has no Inf/NaN,
+/// and [`Json::Float`] prints with `{}` — the shared rule every bench
+/// and report emitter uses for pathological rates.
+pub fn finite(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
 /// Parse failure with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {

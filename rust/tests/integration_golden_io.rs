@@ -1,0 +1,92 @@
+//! Golden-file round-trip tests for the workload JSON codec
+//! (`model/io.rs`): checked-in ResNet-50 and VGG-16 traces must parse
+//! to exactly the built-in tables, the serializer must round-trip them,
+//! and malformed documents must yield errors, never panics.
+//!
+//! The golden files pin the *external* contract: a workload exported by
+//! one version of the tool keeps parsing identically in the next —
+//! renaming a layer or reshaping a table shows up as a test diff here,
+//! not as a silent drift in downstream traces.
+
+use kmm::model::io::{workload_from_json, workload_to_json};
+use kmm::model::resnet::{resnet, ResNet};
+use kmm::model::vgg::{vgg, Vgg};
+
+const GOLDEN_RESNET50: &str = include_str!("golden/resnet50_w8.json");
+const GOLDEN_VGG16: &str = include_str!("golden/vgg16_w8.json");
+
+#[test]
+fn golden_resnet50_parses_to_the_builtin_table() {
+    let golden = workload_from_json(GOLDEN_RESNET50).expect("golden file parses");
+    let builtin = resnet(ResNet::R50, 8);
+    assert_eq!(golden, builtin);
+    assert_eq!(golden.macs(), builtin.macs());
+    assert_eq!(golden.len(), 54);
+}
+
+#[test]
+fn golden_vgg16_parses_to_the_builtin_table() {
+    let golden = workload_from_json(GOLDEN_VGG16).expect("golden file parses");
+    let builtin = vgg(Vgg::V16, 8);
+    assert_eq!(golden, builtin);
+    assert_eq!(golden.macs(), builtin.macs());
+    assert_eq!(golden.len(), 16);
+}
+
+#[test]
+fn serializer_round_trips_the_golden_tables() {
+    // serialize → parse → compare equal, both models; the serialized
+    // form also re-parses to the same document (idempotent round trip).
+    for wl in [resnet(ResNet::R50, 8), vgg(Vgg::V16, 8)] {
+        let text = workload_to_json(&wl);
+        let back = workload_from_json(&text).unwrap_or_else(|e| panic!("{}: {e}", wl.name));
+        assert_eq!(back, wl, "{}", wl.name);
+        let twice = workload_from_json(&workload_to_json(&back)).unwrap();
+        assert_eq!(twice, wl, "{}", wl.name);
+    }
+}
+
+#[test]
+fn golden_files_survive_requantization() {
+    // The trace is shape data; re-quantizing only rewrites w.
+    let golden = workload_from_json(GOLDEN_RESNET50).unwrap();
+    let w16 = golden.at_bitwidth(16);
+    assert_eq!(w16.macs(), golden.macs());
+    assert!(w16.gemms.iter().all(|g| g.w == 16));
+    assert_eq!(
+        workload_from_json(&workload_to_json(&w16)).unwrap(),
+        w16,
+        "re-quantized traces round-trip too"
+    );
+}
+
+#[test]
+fn malformed_documents_error_instead_of_panicking() {
+    let bad_docs: &[&str] = &[
+        "",
+        "{",
+        "null",
+        "[]",
+        r#"{"gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}]}"#, // no name
+        r#"{"name": 3, "gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}]}"#, // non-string name
+        r#"{"name": "t"}"#,                                // no gemms
+        r#"{"name": "t", "gemms": {}}"#,                   // gemms not an array
+        r#"{"name": "t", "gemms": []}"#,                   // empty trace
+        r#"{"name": "t", "gemms": [42]}"#,                 // gemm not an object
+        r#"{"name": "t", "gemms": [{"m": 0, "k": 1, "n": 1, "w": 8}]}"#, // zero dim
+        r#"{"name": "t", "gemms": [{"m": -4, "k": 1, "n": 1, "w": 8}]}"#, // negative dim
+        r#"{"name": "t", "gemms": [{"m": "four", "k": 1, "n": 1, "w": 8}]}"#, // non-numeric
+        r#"{"name": "t", "gemms": [{"m": 1, "k": 1, "n": 1}]}"#, // missing w
+        r#"{"name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}"#, // truncated
+    ];
+    for doc in bad_docs {
+        assert!(
+            workload_from_json(doc).is_err(),
+            "must reject: {doc:?}"
+        );
+    }
+    // Truncating the golden file anywhere must error, not panic.
+    for cut in [1, GOLDEN_RESNET50.len() / 2, GOLDEN_RESNET50.len() - 2] {
+        assert!(workload_from_json(&GOLDEN_RESNET50[..cut]).is_err(), "cut at {cut}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Integration tests for the prepacked-operand cache and
+//! weight-stationary serving (ISSUE 3):
+//!
+//! - packing edge geometry: shapes where M, K, N are not multiples of
+//!   MR/NR/KC, validated against the exact tallied references;
+//! - `PackedB` reuse bit-identical to fresh packing across 100 random
+//!   shapes;
+//! - the registered-weight serving differential: cached == per-call
+//!   packing == `algo::mm1`/`algo::kmm` across threads × widths, with
+//!   the pack-work counter proving the cache actually caches;
+//! - cross-shard handle visibility on the sharded server.
+
+use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::algo::opcount::Tally;
+use kmm::algo::{kmm as kmm_ref, mm1};
+use kmm::coordinator::dispatch::{FastAlgo, FastBackend, GemmBackend};
+use kmm::coordinator::registry::{PackedWeight, WeightRegistry};
+use kmm::coordinator::server::{Server, ServerConfig};
+use kmm::fast::gemm::{gemm, gemm_prepacked, gemm_prepacked_threads};
+use kmm::fast::kmm::{kmm as fast_kmm, kmm_prepacked_threads, PackedKmmB};
+use kmm::fast::pack::PackedB;
+use kmm::fast::{Blocking, Kernel8x4};
+use kmm::util::prop::{forall, prop_assert_eq, Config};
+use kmm::util::rng::Rng;
+use std::sync::Arc;
+
+/// The tallied exact reference as flat `u128`s (products of unsigned
+/// inputs are non-negative, so the lift is total).
+fn mm1_flat(a: &Mat, b: &Mat, w: u32) -> Vec<u128> {
+    let mut tally = Tally::new();
+    mm1(a, b, w, &mut tally)
+        .to_i128_vec()
+        .expect("fits i128")
+        .into_iter()
+        .map(|v| v as u128)
+        .collect()
+}
+
+/// `algo::kmm` (Algorithm 4, tallied) as flat `u128`s.
+fn kmm_flat(a: &Mat, b: &Mat, w: u32, digits: u32) -> Vec<u128> {
+    let mut tally = Tally::new();
+    kmm_ref(a, b, w, digits, &mut tally)
+        .to_i128_vec()
+        .expect("fits i128")
+        .into_iter()
+        .map(|v| v as u128)
+        .collect()
+}
+
+#[test]
+fn prepacked_edge_geometry_matches_mm1() {
+    // MR = 8, NR = 4, KC = 128: probe 1, tile−1, tile, tile+1 in every
+    // dimension, plus the canonical ragged 67×53×41.
+    let mut rng = Rng::new(101);
+    let mut shapes: Vec<(usize, usize, usize)> = Vec::new();
+    for &m in &[1usize, 7, 8, 9] {
+        for &k in &[1usize, 127, 128, 129] {
+            for &n in &[1usize, 3, 4, 5] {
+                shapes.push((m, k, n));
+            }
+        }
+    }
+    shapes.push((67, 53, 41));
+    for (m, k, n) in shapes {
+        let w = 16;
+        let a = Mat::random(m, k, w, &mut rng);
+        let b = Mat::random(k, n, w, &mut rng);
+        let packed = PackedB::pack(&Kernel8x4, b.data(), k, n, &Blocking::default());
+        let got = gemm_prepacked(&Kernel8x4, a.data(), &packed, m);
+        assert_eq!(got, mm1_flat(&a, &b, w), "prepacked vs mm1 at {m}x{k}x{n}");
+        assert_eq!(
+            got,
+            gemm(&Kernel8x4, a.data(), b.data(), m, k, n),
+            "prepacked vs fresh at {m}x{k}x{n}"
+        );
+    }
+}
+
+#[test]
+fn prepacked_reuse_bit_identical_across_100_random_shapes() {
+    forall(Config::default().cases(100), |rng| {
+        let (m, k, n) = (rng.range(1, 48), rng.range(1, 48), rng.range(1, 48));
+        let w = *rng.pick(&[4u32, 8, 16, 32]);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let packed = PackedB::pack(&Kernel8x4, &b, k, n, &Blocking::default());
+        let fresh = gemm(&Kernel8x4, &a, &b, m, k, n);
+        let first = gemm_prepacked(&Kernel8x4, &a, &packed, m);
+        let second = gemm_prepacked(&Kernel8x4, &a, &packed, m);
+        prop_assert_eq(first.clone(), fresh, &format!("reuse == fresh ({m}x{k}x{n} w={w})"))?;
+        prop_assert_eq(first, second, "second use of one cache entry is bit-identical")
+    });
+}
+
+#[test]
+fn prepacked_parallel_drivers_match_references() {
+    forall(Config::default().cases(40), |rng| {
+        let (m, k, n) = (rng.range(1, 64), rng.range(1, 32), rng.range(1, 32));
+        let w = *rng.pick(&[8u32, 16, 32]);
+        let threads = *rng.pick(&[1usize, 2, 4]);
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let packed = PackedB::pack(&Kernel8x4, b.data(), k, n, &Blocking::default());
+        prop_assert_eq(
+            gemm_prepacked_threads(&Kernel8x4, a.data(), &packed, m, threads),
+            mm1_flat(&a, &b, w),
+            &format!("prepacked t={threads} == mm1 ({m}x{k}x{n} w={w})"),
+        )
+    });
+}
+
+#[test]
+fn kmm_prepacked_matches_algo_kmm() {
+    forall(Config::default().cases(40), |rng| {
+        let digits = *rng.pick(&[2u32, 4]);
+        let w = *rng.pick(&[8u32, 16, 32]);
+        let threads = *rng.pick(&[1usize, 2, 4]);
+        let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+        let a = Mat::random(m, k, w, rng);
+        let b = Mat::random(k, n, w, rng);
+        let packed = PackedKmmB::pack(&Kernel8x4, b.data(), k, n, w, digits);
+        let got = kmm_prepacked_threads(&Kernel8x4, a.data(), &packed, m, threads);
+        prop_assert_eq(
+            got.clone(),
+            kmm_flat(&a, &b, w, digits),
+            &format!("prepacked KMM_{digits}^[{w}] == algo::kmm ({m}x{k}x{n} t={threads})"),
+        )?;
+        prop_assert_eq(
+            got,
+            fast_kmm(&Kernel8x4, a.data(), b.data(), m, k, n, w, digits),
+            "prepacked KMM == fresh fast KMM",
+        )
+    });
+}
+
+/// Satellite: the full serving differential. Registered-weight serving
+/// == per-call packing == the exact tallied references, for server
+/// shard counts {1, 2, 4} × widths {4, 8, 16, 32} — and the second
+/// request against a handle performs zero pack work (the registry pack
+/// counter stays at one per weight).
+#[test]
+fn registered_weight_serving_differential() {
+    for &threads in &[1usize, 2, 4] {
+        for &w in &[4u32, 8, 16, 32] {
+            let registry = Arc::new(WeightRegistry::new());
+            let mut srv = Server::start_with_registry(
+                || Box::new(FastBackend::new(FastAlgo::Kmm)) as Box<dyn GemmBackend>,
+                ServerConfig::default().workers(threads),
+                Arc::clone(&registry),
+            );
+            let mut rng = Rng::new(1000 + u64::from(w) + threads as u64);
+            let (m, k, n) = (9usize, 11usize, 7usize);
+            let b = Mat::random(k, n, w, &mut rng);
+            let h = srv.register_weight(b.clone(), w).unwrap();
+            assert_eq!(registry.packs(), 1);
+
+            // Two requests per (threads, w) cell, same handle: the
+            // second must be served entirely from the cache.
+            for round in 0..2 {
+                let a = Mat::random(m, k, w, &mut rng);
+                let reference = mm1_flat(&a, &b, w);
+                // algo::kmm agrees wherever the digit config is valid.
+                if w >= 2 {
+                    assert_eq!(kmm_flat(&a, &b, w, 2), reference, "w={w}");
+                }
+                let cached = srv.submit_packed_sync(a.clone(), h);
+                let fresh = srv.submit_sync(a.clone(), b.clone(), w);
+                let cached_c = cached.result.expect("cached serves");
+                let fresh_c = fresh.result.expect("fresh serves");
+                assert_eq!(cached_c, fresh_c, "w={w} threads={threads} round={round}");
+                assert_eq!(
+                    cached_c.to_i128_vec().unwrap(),
+                    reference.iter().map(|&v| v as i128).collect::<Vec<_>>(),
+                    "w={w} threads={threads} round={round}"
+                );
+                assert_eq!(
+                    registry.packs(),
+                    1,
+                    "request round {round} must add zero pack work"
+                );
+            }
+            let stats = srv.shutdown();
+            assert_eq!(stats.requests, 4);
+            assert_eq!(stats.weight_hits, 2);
+            assert_eq!(stats.weight_misses, 0);
+            assert_eq!(stats.rejected, 0);
+        }
+    }
+}
+
+/// Satellite regression test: shards each construct their own backend,
+/// so a weight registered once must be visible to *all* shards. Spread
+/// enough round-robin requests that every shard serves the handle, and
+/// require zero misses.
+#[test]
+fn registered_weight_visible_across_all_shards() {
+    let shards = 4;
+    let mut srv = Server::start(
+        || Box::new(FastBackend::new(FastAlgo::Kmm)) as Box<dyn GemmBackend>,
+        ServerConfig::default().workers(shards),
+    );
+    assert_eq!(srv.shards(), shards);
+    let mut rng = Rng::new(77);
+    let b = Mat::random(10, 6, 12, &mut rng);
+    let h = srv.register_weight(b.clone(), 12).unwrap();
+    let mut rxs = Vec::new();
+    let mut expected = Vec::new();
+    for _ in 0..4 * shards {
+        let a = Mat::random(5, 10, 12, &mut rng);
+        expected.push(matmul_oracle(&a, &b));
+        rxs.push(srv.submit_packed(a, h).1);
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.result.expect("every shard resolves the handle"), want);
+    }
+    let registry = srv.registry();
+    let stats = srv.shutdown();
+    assert_eq!(stats.weight_hits, 4 * shards as u64);
+    assert_eq!(stats.weight_misses, 0);
+    assert_eq!(registry.packs(), 1, "one pack event serves every shard");
+}
+
+#[test]
+fn packed_weight_serves_through_multithreaded_engines() {
+    // Engine-level threading (not server shards): the same PackedWeight
+    // entry served by backends at several worker counts stays bit-exact.
+    forall(Config::default().cases(10), |rng| {
+        let w = *rng.pick(&[8u32, 16, 32]);
+        let a = Mat::random(33, 14, w, rng);
+        let b = Mat::random(14, 9, w, rng);
+        let pw = PackedWeight::new(b.clone(), w).unwrap();
+        let want = matmul_oracle(&a, &b);
+        for algo in [FastAlgo::Mm, FastAlgo::Kmm] {
+            for threads in [1usize, 2, 4] {
+                let mut be = FastBackend::with_threads(algo, threads);
+                let r = be.gemm_packed(&a, &pw).unwrap();
+                prop_assert_eq(
+                    r.c,
+                    want.clone(),
+                    &format!("algo={algo:?} threads={threads} w={w}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_weight_all_ones_width_ceiling() {
+    // Adversarial all-ones at the w = 32 ceiling through the cache:
+    // maximal digit sums and recombination shifts, deep-K accumulation.
+    let (m, k, n) = (17usize, 40usize, 6usize);
+    let ones_a = Mat::from_rows(m, k, &vec![u32::MAX as u64; m * k]);
+    let ones_b = Mat::from_rows(k, n, &vec![u32::MAX as u64; k * n]);
+    let pw = PackedWeight::new(ones_b.clone(), 32).unwrap();
+    let want = matmul_oracle(&ones_a, &ones_b);
+    for threads in [1usize, 4] {
+        let mut be = FastBackend::with_threads(FastAlgo::Kmm, threads);
+        assert_eq!(be.gemm_packed(&ones_a, &pw).unwrap().c, want, "threads={threads}");
+    }
+}
