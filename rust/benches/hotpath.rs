@@ -8,21 +8,27 @@
 //!   3. `schedule(ResNet-50)`         — analytic workload scheduling
 //!   4. oracle `matmul_oracle`        — wide-int reference matmul
 //!   5. the `fast` engine             — blocked fast-MM and fast-KMM vs
-//!      the exact tallied references (`algo::mm1`, `algo::kmm`)
+//!      the exact tallied references (`algo::mm1`, `algo::kmm`),
+//!      routed through lane selection like the serving path
 //!   6. the parallel engine           — fast-MM / fast-KMM at
 //!      `--threads N` vs single-threaded on a larger GEMM
+//!   7. width-specialized lanes       — the w = 8 narrow (`u16`) lane
+//!      vs the `u64` lane on the same 160³ GEMM
 //!
 //! Section 5 is the acceptance check for the fast subsystem: on a
 //! ≥64×64×64 GEMM the native blocked engine must beat the tallied
 //! `I256` reference path. The gate uses a wide (1.5×) margin on an
 //! expected 1–2 order-of-magnitude ratio and re-measures once before
-//! failing, so noisy shared CI runners cannot flake it.
+//! failing, so noisy shared CI runners cannot flake it. Section 7 adds
+//! the lane gate: at w = 8 the selected narrow lane must beat the
+//! always-`u64` lane (same one-retry discipline).
 //!
 //! Every section is recorded into `BENCH_hotpath.json` (override the
-//! path with `KMM_BENCH_OUT`): per-section median seconds, Mops/s,
-//! iteration count, thread count, and GEMM shape, plus the headline
-//! speedup ratios. The file is self-validated through `util::json`
-//! before the bench exits.
+//! path with `KMM_BENCH_OUT`): **schema 2** — per-section median
+//! seconds, Mops/s, iteration count, thread count, GEMM shape, and the
+//! element lane that ran (`"lane": "u16"|"u32"|"u64"`, `null` for
+//! non-engine sections) — plus the headline speedup ratios. The file is
+//! self-validated through `util::json` before the bench exits.
 //!
 //! Run: `cargo bench --bench hotpath [-- --threads N]`
 
@@ -50,6 +56,9 @@ struct Section {
     threads: usize,
     shape: (usize, usize, usize),
     w: u32,
+    /// The fast-engine element lane the section ran (schema 2); `None`
+    /// for sections outside the lane-routed engine.
+    lane: Option<kmm::fast::LaneId>,
 }
 
 impl Section {
@@ -72,6 +81,10 @@ impl Section {
             ]),
         );
         m.insert("w".to_string(), Json::Int(i64::from(self.w)));
+        m.insert(
+            "lane".to_string(),
+            kmm::fast::LaneId::to_json(self.lane),
+        );
         Json::Object(m)
     }
 }
@@ -87,6 +100,7 @@ fn bench(
     threads: usize,
     shape: (usize, usize, usize),
     w: u32,
+    lane: Option<kmm::fast::LaneId>,
     mut f: impl FnMut() -> u64,
 ) -> f64 {
     let mut times = Vec::with_capacity(iters);
@@ -108,6 +122,7 @@ fn bench(
         threads,
         shape,
         w,
+        lane,
     });
     med
 }
@@ -152,6 +167,7 @@ fn main() {
         1,
         (64, 64, 64),
         8,
+        None,
         || {
             let out = spec.tile_product(&a, &b);
             std::hint::black_box(&out);
@@ -170,6 +186,7 @@ fn main() {
         1,
         (256, 256, 256),
         12,
+        None,
         || {
             let (c, _) = arch.gemm(&a2, &b2, 12).unwrap();
             std::hint::black_box(&c);
@@ -186,6 +203,7 @@ fn main() {
         1,
         (0, 0, 0),
         12,
+        None,
         || {
             let s = schedule(&r50, &arch).unwrap();
             std::hint::black_box(&s);
@@ -203,6 +221,7 @@ fn main() {
         1,
         (256, 256, 256),
         16,
+        None,
         || {
             let c = matmul_oracle(&a3, &b3);
             std::hint::black_box(&c);
@@ -212,13 +231,17 @@ fn main() {
 
     // 5. The fast engine vs the tallied references, same 96^3 w16 GEMM
     //    (exceeds the 64^3 acceptance floor). All four are bit-exact
-    //    against each other; only the execution machinery differs.
+    //    against each other; only the execution machinery differs. The
+    //    engine sections run through lane routing exactly like the
+    //    serving path (select_lane picks u32 for w=16 at this depth).
     println!("-- fast engine vs tallied reference (96^3, w = 16) --");
     let d = 96usize;
     let w = 16u32;
     let fa = Mat::random(d, d, w, &mut rng);
     let fb = Mat::random(d, d, w, &mut rng);
     let macs = (d * d * d) as u64;
+    let mm_lane16 = fast::select_lane(w, d, 1).expect("w=16 in window");
+    let kmm_lane16 = fast::select_lane(w, d, 2).expect("w=16 in window");
 
     let t_fast_mm = bench(
         &mut sections,
@@ -227,8 +250,9 @@ fn main() {
         1,
         (d, d, d),
         w,
+        Some(mm_lane16),
         || {
-            let c = fast::mm(fa.data(), fb.data(), d, d, d);
+            let (c, _) = fast::mm_lane(fa.data(), fb.data(), d, d, d, w, 1);
             std::hint::black_box(&c);
             macs
         },
@@ -240,8 +264,9 @@ fn main() {
         1,
         (d, d, d),
         w,
+        Some(kmm_lane16),
         || {
-            let c = fast::kmm_digits(fa.data(), fb.data(), d, d, d, w, 2);
+            let (c, _) = fast::kmm_lane(fa.data(), fb.data(), d, d, d, w, 2, 1);
             std::hint::black_box(&c);
             macs
         },
@@ -253,6 +278,7 @@ fn main() {
         1,
         (d, d, d),
         w,
+        None,
         || {
             let mut t = Tally::new();
             let c = mm1(&fa, &fb, w, &mut t);
@@ -267,6 +293,7 @@ fn main() {
         1,
         (d, d, d),
         w,
+        None,
         || {
             let mut t = Tally::new();
             let c = kmm_ref(&fa, &fb, w, 2, &mut t);
@@ -296,6 +323,8 @@ fn main() {
     let pb = Mat::random(dp, dp, w, &mut rng);
     let pmacs = (dp * dp * dp) as u64;
 
+    let par_mm_lane = fast::select_lane(w, dp, 1).expect("w=16 in window");
+    let par_kmm_lane = fast::select_lane(w, dp, 2).expect("w=16 in window");
     let t_mm_1 = bench(
         &mut sections,
         "fast-MM 160^3 w16 threads=1 (MACs/s)",
@@ -303,8 +332,9 @@ fn main() {
         1,
         (dp, dp, dp),
         w,
+        Some(par_mm_lane),
         || {
-            let c = fast::mm_threads(pa.data(), pb.data(), dp, dp, dp, 1);
+            let (c, _) = fast::mm_lane(pa.data(), pb.data(), dp, dp, dp, w, 1);
             std::hint::black_box(&c);
             pmacs
         },
@@ -320,8 +350,9 @@ fn main() {
             par,
             (dp, dp, dp),
             w,
+            Some(par_mm_lane),
             || {
-                let c = fast::mm_threads(pa.data(), pb.data(), dp, dp, dp, par);
+                let (c, _) = fast::mm_lane(pa.data(), pb.data(), dp, dp, dp, w, par);
                 std::hint::black_box(&c);
                 pmacs
             },
@@ -336,8 +367,9 @@ fn main() {
         1,
         (dp, dp, dp),
         w,
+        Some(par_kmm_lane),
         || {
-            let c = fast::kmm_digits_threads(pa.data(), pb.data(), dp, dp, dp, w, 2, 1);
+            let (c, _) = fast::kmm_lane(pa.data(), pb.data(), dp, dp, dp, w, 2, 1);
             std::hint::black_box(&c);
             pmacs
         },
@@ -350,8 +382,9 @@ fn main() {
             par,
             (dp, dp, dp),
             w,
+            Some(par_kmm_lane),
             || {
-                let c = fast::kmm_digits_threads(pa.data(), pb.data(), dp, dp, dp, w, 2, par);
+                let (c, _) = fast::kmm_lane(pa.data(), pb.data(), dp, dp, dp, w, 2, par);
                 std::hint::black_box(&c);
                 pmacs
             },
@@ -368,11 +401,60 @@ fn main() {
         t_kmm_1 / t_kmm_n
     );
     // Bit-exactness is enforced by the test suite; here just sanity-check
-    // one parallel result against the serial engine.
+    // one parallel lane-routed result against the serial u64 engine.
     assert_eq!(
-        fast::mm_threads(pa.data(), pb.data(), dp, dp, dp, par),
+        fast::mm_lane(pa.data(), pb.data(), dp, dp, dp, w, par).0,
         fast::mm(pa.data(), pb.data(), dp, dp, dp),
-        "parallel engine must be bit-exact"
+        "parallel lane-routed engine must be bit-exact"
+    );
+
+    // 7. Width-specialized lanes: the same 160^3 GEMM at w = 8, on the
+    //    lane the selector picks (u16 storage / u32 accumulation) vs
+    //    forced onto the old always-u64 lane. The narrow lane moves a
+    //    quarter of the packed bytes per slab and runs a 4x-narrower
+    //    multiplier — this section is where that shows up as wall time.
+    let w8 = 8u32;
+    let narrow = fast::select_lane(w8, dp, 1).expect("w=8 in window");
+    assert_eq!(narrow, fast::LaneId::U16, "w=8 at 160 deep selects u16");
+    println!("-- width-specialized lanes (160^3, w = 8, lane {narrow} vs u64) --");
+    let la = Mat::random(dp, dp, w8, &mut rng);
+    let lb = Mat::random(dp, dp, w8, &mut rng);
+    let t_lane_narrow = bench(
+        &mut sections,
+        &format!("fast-MM 160^3 w8 lane={narrow} (MACs/s)"),
+        10,
+        1,
+        (dp, dp, dp),
+        w8,
+        Some(narrow),
+        || {
+            let c = fast::mm_in_lane(narrow, la.data(), lb.data(), dp, dp, dp, w8, 1);
+            std::hint::black_box(&c);
+            pmacs
+        },
+    );
+    let t_lane_u64 = bench(
+        &mut sections,
+        "fast-MM 160^3 w8 lane=u64 (MACs/s)",
+        10,
+        1,
+        (dp, dp, dp),
+        w8,
+        Some(fast::LaneId::U64),
+        || {
+            let c = fast::mm_in_lane(fast::LaneId::U64, la.data(), lb.data(), dp, dp, dp, w8, 1);
+            std::hint::black_box(&c);
+            pmacs
+        },
+    );
+    println!(
+        "lane speedup {narrow} vs u64 at w=8: {:>5.2}x",
+        t_lane_u64 / t_lane_narrow
+    );
+    assert_eq!(
+        fast::mm_in_lane(narrow, la.data(), lb.data(), dp, dp, dp, w8, 1),
+        fast::mm_in_lane(fast::LaneId::U64, la.data(), lb.data(), dp, dp, dp, w8, 1),
+        "lanes must be bit-exact"
     );
 
     // ---- the speedup gate measurement ---------------------------------
@@ -393,10 +475,10 @@ fn main() {
         println!("speedup gate missed on the first sample; re-measuring once (noisy runner?)");
         retried = true;
         g_fast_mm = time_median(10, || {
-            std::hint::black_box(fast::mm(fa.data(), fb.data(), d, d, d));
+            std::hint::black_box(fast::mm_lane(fa.data(), fb.data(), d, d, d, w, 1));
         });
         g_fast_kmm = time_median(10, || {
-            std::hint::black_box(fast::kmm_digits(fa.data(), fb.data(), d, d, d, w, 2));
+            std::hint::black_box(fast::kmm_lane(fa.data(), fb.data(), d, d, d, w, 2, 1));
         });
         g_ref_mm = time_median(3, || {
             let mut t = Tally::new();
@@ -412,6 +494,37 @@ fn main() {
             g_ref_kmm / g_fast_kmm
         );
         gate_ok = g_fast_mm * MARGIN < g_ref_mm && g_fast_kmm * MARGIN < g_ref_kmm;
+    }
+
+    // ---- the lane gate measurement ------------------------------------
+    // At w = 8 on the 160^3 shape the selected narrow lane must beat the
+    // always-u64 lane: a quarter of the packed-slab traffic and a
+    // narrower multiplier should never lose to the wide path. Modest
+    // margin plus the same one-retry discipline as the speedup gate.
+    const LANE_MARGIN: f64 = 1.05;
+    let (mut g_lane_narrow, mut g_lane_u64) = (t_lane_narrow, t_lane_u64);
+    let mut lane_retried = false;
+    let mut lane_gate_ok = g_lane_narrow * LANE_MARGIN < g_lane_u64;
+    if !lane_gate_ok {
+        println!("lane gate missed on the first sample; re-measuring once (noisy runner?)");
+        lane_retried = true;
+        g_lane_narrow = time_median(10, || {
+            std::hint::black_box(fast::mm_in_lane(narrow, la.data(), lb.data(), dp, dp, dp, w8, 1));
+        });
+        g_lane_u64 = time_median(10, || {
+            std::hint::black_box(fast::mm_in_lane(
+                fast::LaneId::U64,
+                la.data(),
+                lb.data(),
+                dp,
+                dp,
+                dp,
+                w8,
+                1,
+            ));
+        });
+        println!("retry ratio: lane {narrow} {:.2}x vs u64", g_lane_u64 / g_lane_narrow);
+        lane_gate_ok = g_lane_narrow * LANE_MARGIN < g_lane_u64;
     }
 
     // ---- machine-readable output --------------------------------------
@@ -432,11 +545,18 @@ fn main() {
         "fast_kmm_parallel_vs_serial".to_string(),
         Json::Float(finite(t_kmm_1 / t_kmm_n)),
     );
+    speedups.insert(
+        "lane_narrow_vs_u64_w8".to_string(),
+        Json::Float(finite(g_lane_u64 / g_lane_narrow)),
+    );
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
-    top.insert("schema".to_string(), Json::Int(1));
+    // Schema 2: sections carry a "lane" field and the w=8 lane
+    // comparison (+ its gate) is recorded.
+    top.insert("schema".to_string(), Json::Int(2));
     top.insert("threads_max".to_string(), Json::Int(par as i64));
     top.insert("speedup_gate_retried".to_string(), Json::Bool(retried));
+    top.insert("lane_gate_retried".to_string(), Json::Bool(lane_retried));
     top.insert(
         "sections".to_string(),
         Json::Array(sections.iter().map(Section::to_json).collect()),
@@ -462,6 +582,21 @@ fn main() {
             "missing section: {driver} at threads={threads}"
         );
     }
+    // Schema 2: every section records its lane (string or null), and
+    // both sides of the w=8 lane comparison are present.
+    assert!(
+        secs.iter().all(|s| s.get("lane").is_some()),
+        "schema 2 requires a lane field on every section"
+    );
+    for lane in [narrow.name(), "u64"] {
+        assert!(
+            secs.iter().any(|s| {
+                s.get("w").and_then(Json::as_i64) == Some(8)
+                    && s.get("lane").and_then(Json::as_str) == Some(lane)
+            }),
+            "missing w=8 lane section: {lane}"
+        );
+    }
     let out_path =
         std::env::var("KMM_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     std::fs::write(&out_path, &doc).expect("write bench json");
@@ -472,4 +607,11 @@ fn main() {
         "fast engine must beat the tallied reference path by >= {MARGIN}x (after one retry)"
     );
     println!("fast path beats tallied reference: OK");
+    assert!(
+        lane_gate_ok,
+        "the selected narrow lane must beat the u64 lane by >= {LANE_MARGIN}x at w=8 on 160^3 \
+         (after one retry); got {:.3}x",
+        g_lane_u64 / g_lane_narrow
+    );
+    println!("narrow lane beats u64 lane at w=8: OK");
 }

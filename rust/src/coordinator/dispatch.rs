@@ -9,9 +9,11 @@
 //!   (Pallas kernels lowered through L2), accumulating partial tile
 //!   products in Rust exactly as §IV-D accumulates outside the MXU.
 //! - [`FastBackend`] — the software hot path: the [`crate::fast`]
-//!   blocked engine (native `u64`/`u128` microkernels, no tallying),
+//!   blocked engine (width-specialized lane microkernels, no tallying),
 //!   running either conventional MM or the Algorithm 4 digit-slice
-//!   decomposition.
+//!   decomposition on the narrowest element lane that is provably exact
+//!   for the request (`select_lane`); the served [`GemmResult`] reports
+//!   which lane ran.
 //! - All report the deterministic cycle model, so serving returns
 //!   timing alongside numerics.
 
@@ -19,6 +21,7 @@ use crate::algo::matrix::{Mat, MatAcc};
 use crate::arch::mxu::SystolicSpec;
 use crate::arch::scalable::{select_mode, Mode, ScalableKmm};
 use crate::coordinator::registry::{PackPlan, PackedWeight, NATIVE_W};
+use crate::fast::{check_width, select_lane, LaneId};
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::gemm::{simulate_cycles, GemmStats};
 use crate::sim::tiler::TileGrid;
@@ -30,6 +33,10 @@ pub struct GemmResult {
     pub c: MatAcc,
     pub mode: Mode,
     pub stats: GemmStats,
+    /// The fast engine's element-storage lane that served the request
+    /// (`None` on backends without width-specialized lanes: the
+    /// functional model and PJRT execute at fixed width).
+    pub lane: Option<LaneId>,
 }
 
 /// A GEMM execution engine the server can own.
@@ -82,6 +89,7 @@ impl GemmBackend for FunctionalBackend {
             c,
             mode: run.mode,
             stats: run.stats,
+            lane: None,
         })
     }
 
@@ -194,6 +202,7 @@ impl GemmBackend for PjrtBackend {
             c: acc,
             mode,
             stats,
+            lane: None,
         })
     }
 
@@ -254,14 +263,11 @@ impl FastBackend {
         }
     }
 
-    /// Mode label and digit count for a `w`-bit request.
+    /// Mode label and digit count for a `w`-bit request (width
+    /// validation goes through the engine's shared
+    /// [`check_width`] gate, so every layer rejects with one message).
     fn plan(&self, w: u32) -> Result<(Mode, u32)> {
-        if w > crate::fast::MAX_W {
-            bail!(
-                "w={w} exceeds the fast engine's {}-bit ceiling",
-                crate::fast::MAX_W
-            );
-        }
+        check_width(w)?;
         Ok(if w <= self.m {
             (Mode::Mm1, 1)
         } else {
@@ -273,9 +279,18 @@ impl FastBackend {
     }
 
     /// Wrap a raw engine product in the served result shape: `u128`
-    /// elements lifted into the accumulator matrix, cycles from the
-    /// same deterministic §IV-D schedule every backend reports.
-    fn finish(&self, raw: &[u128], m: usize, k: usize, n: usize, mode: Mode) -> GemmResult {
+    /// elements lifted into the accumulator matrix, the lane that ran
+    /// recorded, cycles from the same deterministic §IV-D schedule
+    /// every backend reports.
+    fn finish(
+        &self,
+        raw: &[u128],
+        m: usize,
+        k: usize,
+        n: usize,
+        mode: Mode,
+        lane: LaneId,
+    ) -> GemmResult {
         let mut c = MatAcc::zeros(m, n);
         for i in 0..m {
             for j in 0..n {
@@ -284,7 +299,12 @@ impl FastBackend {
         }
         let grid = TileGrid::new(m, k, n, self.timing.x, self.timing.y);
         let stats = simulate_cycles(&grid, &self.timing, mode.reads());
-        GemmResult { c, mode, stats }
+        GemmResult {
+            c,
+            mode,
+            stats,
+            lane: Some(lane),
+        }
     }
 }
 
@@ -307,21 +327,23 @@ impl GemmBackend for FastBackend {
             );
         }
         let (m, k, n) = (a.rows, a.cols, b.cols);
-        let raw = if digits == 1 {
-            crate::fast::mm_threads(a.data(), b.data(), m, k, n, self.threads)
+        let (raw, lane) = if digits == 1 {
+            crate::fast::mm_lane(a.data(), b.data(), m, k, n, w, self.threads)
         } else {
-            crate::fast::kmm_digits_threads(a.data(), b.data(), m, k, n, w, digits, self.threads)
+            crate::fast::kmm_lane(a.data(), b.data(), m, k, n, w, digits, self.threads)
         };
-        Ok(self.finish(&raw, m, k, n, mode))
+        Ok(self.finish(&raw, m, k, n, mode, lane))
     }
 
     /// The weight-stationary hot path: serve from the registry's cached
     /// packings — the prepacked blocked driver below the digit-slice
     /// window (or for the conventional decomposition), the cached
     /// digit-plane tree above it — performing zero per-call B-packing
-    /// or plane-splitting work. Falls back to the raw matrix only if
-    /// the cache lacks the needed decomposition (registered under a
-    /// different width regime than this backend routes).
+    /// or plane-splitting work. The request's selected lane must match
+    /// the lane the cache entry records; on a mismatch (or when the
+    /// cache lacks the needed decomposition) the backend falls back to
+    /// the raw matrix, re-packing per call in the *request's* lane —
+    /// still bit-exact, just without the cache saving.
     fn gemm_packed(&mut self, a: &Mat, weight: &PackedWeight) -> Result<GemmResult> {
         let w = weight.w();
         let (mode, digits) = self.plan(w)?;
@@ -341,29 +363,23 @@ impl GemmBackend for FastBackend {
             );
         }
         let (m, k, n) = (a.rows, a.cols, weight.cols());
+        // The lane this request routes to — the same select_lane rule
+        // the registry packed under, so matched entries verify equal.
+        let lane = select_lane(w, k, digits).expect("plan() validated the width");
         let raw = if digits == 1 {
-            let Some(panels) = weight.mm() else {
+            let Some(panels) = weight.mm().filter(|p| p.lane() == lane) else {
                 return self.gemm(a, weight.raw(), w);
             };
-            crate::fast::gemm::gemm_prepacked_threads(
-                &crate::fast::Kernel8x4,
-                a.data(),
-                panels,
-                m,
-                self.threads,
-            )
-        } else if let Some(planes) = weight.kmm().filter(|p| p.digits() == digits) {
-            crate::fast::kmm::kmm_prepacked_threads(
-                &crate::fast::Kernel8x4,
-                a.data(),
-                planes,
-                m,
-                self.threads,
-            )
+            panels.gemm(a.data(), m, self.threads)
+        } else if let Some(planes) = weight
+            .kmm()
+            .filter(|p| p.digits() == digits && p.lane() == lane)
+        {
+            planes.kmm(a.data(), m, self.threads)
         } else {
             return self.gemm(a, weight.raw(), w);
         };
-        Ok(self.finish(&raw, m, k, n, mode))
+        Ok(self.finish(&raw, m, k, n, mode, lane))
     }
 
     /// Pack only the decomposition this backend's routing reads — and,
@@ -549,6 +565,51 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fast_backend_reports_the_selected_lane() {
+        // The served result names the lane select_lane picks for the
+        // request's (w, k, digits); the cycle-model backends report none.
+        let mut rng = Rng::new(19);
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let a = Mat::random(6, 9, 8, &mut rng);
+        let b = Mat::random(9, 5, 8, &mut rng);
+        let r = be.gemm(&a, &b, 8).unwrap();
+        assert_eq!(r.lane, Some(LaneId::U16), "w=8 shallow rides u16");
+        assert_eq!(r.lane, select_lane(8, 9, 1));
+        let a = Mat::random(6, 9, 32, &mut rng);
+        let b = Mat::random(9, 5, 32, &mut rng);
+        let r = be.gemm(&a, &b, 32).unwrap();
+        assert_eq!(r.lane, Some(LaneId::U64));
+        let mut func = FunctionalBackend::paper();
+        let a = Mat::random(3, 3, 8, &mut rng);
+        assert_eq!(func.gemm(&a, &a, 8).unwrap().lane, None);
+    }
+
+    #[test]
+    fn lane_mismatched_cache_falls_back_to_fresh_packing() {
+        // A weight forced into the u64 lane while the request selects
+        // u16: the backend must *reject the cache entry* (re-pack per
+        // call) rather than serve from an unverified lane — and the
+        // result stays bit-exact with the matched-lane path.
+        use crate::coordinator::registry::{PackPlan, PackedWeight};
+        let mut rng = Rng::new(23);
+        let a = Mat::random(5, 7, 8, &mut rng);
+        let b = Mat::random(7, 4, 8, &mut rng);
+        let want = matmul_oracle(&a, &b);
+        let matched = PackedWeight::with_plan(b.clone(), 8, PackPlan::Mm).unwrap();
+        let forced = PackedWeight::with_plan_in_lane(b, 8, PackPlan::Mm, LaneId::U64).unwrap();
+        assert_eq!(matched.mm_lane(), Some(LaneId::U16));
+        assert_eq!(forced.mm_lane(), Some(LaneId::U64));
+        let mut be = FastBackend::new(FastAlgo::Mm);
+        let hit = be.gemm_packed(&a, &matched).unwrap();
+        let fallback = be.gemm_packed(&a, &forced).unwrap();
+        assert_eq!(hit.c, want);
+        assert_eq!(fallback.c, want);
+        // Both report the lane the request actually ran in.
+        assert_eq!(hit.lane, Some(LaneId::U16));
+        assert_eq!(fallback.lane, Some(LaneId::U16));
     }
 
     #[test]

@@ -3,10 +3,18 @@
 //!
 //! The paper's accelerators load weights into the PEs once and stream
 //! activations against them (§IV); the software counterpart is to pack
-//! a weight matrix once — [`PackedB`] panels, plus the full Karatsuba
-//! digit-plane decomposition ([`PackedKmmB`]) when the width calls for
-//! digit slicing — and serve any number of requests against the cached
-//! [`PackedWeight`] with zero per-request pack work.
+//! a weight matrix once — [`LanePackedB`] panels, plus the full
+//! Karatsuba digit-plane decomposition ([`LanePackedKmmB`]) when the
+//! width calls for digit slicing — and serve any number of requests
+//! against the cached [`PackedWeight`] with zero per-request pack work.
+//!
+//! Every packing is built in the lane the engine's selector
+//! ([`select_lane`](crate::fast::select_lane)) picks for the weight's
+//! `(w, k)` — a `w = 8` weight's panels live in `u16` storage, a
+//! quarter of the bytes of the old always-`u64` cache — and the entry
+//! **records** that lane, so the serving backend can verify the lane a
+//! request routes to matches the lane the cache holds before reading
+//! the panels (and fall back to a fresh re-pack when it does not).
 //!
 //! One [`WeightRegistry`] is shared (behind an `Arc`) by **all** shards
 //! of the batch server, so a handle registered through any front door is
@@ -36,7 +44,7 @@
 //! ```
 
 use crate::algo::matrix::Mat;
-use crate::fast::{Blocking, Kernel8x4, PackedB, PackedKmmB, MAX_W};
+use crate::fast::{check_width, Blocking, LaneId, LanePackedB, LanePackedKmmB};
 use crate::util::error::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -55,8 +63,9 @@ pub struct WeightHandle(pub u64);
 /// Which decompositions a registered weight is prepacked for. A packed
 /// weight is weight-*sized* state: above the native window the
 /// conventional panels cost one weight copy and the digit-plane tree
-/// about three, so a registry that knows its serving backend should
-/// pack only what that backend reads.
+/// about three (scaled by the selected lane's storage width), so a
+/// registry that knows its serving backend should pack only what that
+/// backend reads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PackPlan {
     /// Pack for every fast decomposition (backend-agnostic; the
@@ -76,22 +85,27 @@ pub enum PackPlan {
 }
 
 /// One registered weight: the raw matrix (for fallback backends and
-/// cross-validation) plus the packings its [`PackPlan`] calls for.
+/// cross-validation) plus the packings its [`PackPlan`] calls for, each
+/// built in — and tagged with — the lane the selector picked.
 ///
 /// All packing work happens here, once, at construction — the serving
 /// paths only read. `mm` serves both the native window and the
 /// conventional-MM decomposition; `kmm` is the Karatsuba digit-plane
 /// tree used for `w >` [`NATIVE_W`] digit-sliced serving. A packing the
 /// plan skipped reads as `None`, and [`FastBackend`] falls back to the
-/// raw matrix — correct, just without the saving.
+/// raw matrix — correct, just without the saving. The same fallback
+/// runs on a **lane mismatch** (an entry packed for a different lane
+/// than the request selects, e.g. via
+/// [`with_plan_in_lane`](PackedWeight::with_plan_in_lane)): the backend
+/// re-packs per call rather than serving from an unverified cache.
 ///
 /// [`FastBackend`]: crate::coordinator::dispatch::FastBackend
 #[derive(Debug, Clone)]
 pub struct PackedWeight {
     raw: Mat,
     w: u32,
-    mm: Option<PackedB>,
-    kmm: Option<PackedKmmB>,
+    mm: Option<LanePackedB>,
+    kmm: Option<LanePackedKmmB>,
 }
 
 impl PackedWeight {
@@ -102,11 +116,33 @@ impl PackedWeight {
         PackedWeight::with_plan(b, w, PackPlan::Both)
     }
 
-    /// [`PackedWeight::new`] packing only what `plan` serves from.
+    /// [`PackedWeight::new`] packing only what `plan` serves from, in
+    /// the lane [`select_lane`](crate::fast::select_lane) picks for the
+    /// weight's `(w, k)` — the same rule the serving path applies, so
+    /// cache and request lanes agree by construction.
     pub fn with_plan(b: Mat, w: u32, plan: PackPlan) -> Result<PackedWeight> {
-        if w == 0 || w > MAX_W {
-            bail!("w={w} outside the fast engine's 1..={MAX_W} window");
+        PackedWeight::build(b, w, plan, None)
+    }
+
+    /// [`with_plan`](PackedWeight::with_plan) forcing every packing
+    /// into an explicit `lane` instead of the selected one. The serving
+    /// backend verifies lanes at request time and falls back to raw
+    /// serving on a mismatch, so a forced entry is *safe* but possibly
+    /// *useless* — this exists for lane-migration tooling and the
+    /// mismatch tests, not the serving path. Fails when `lane` is not
+    /// provably exact for the weight.
+    pub fn with_plan_in_lane(b: Mat, w: u32, plan: PackPlan, lane: LaneId) -> Result<PackedWeight> {
+        if !crate::fast::lane_exact(lane, w, b.rows, 1) {
+            bail!(
+                "lane {lane} is not exact for a w={w} weight of depth {} (headroom rule)",
+                b.rows
+            );
         }
+        PackedWeight::build(b, w, plan, Some(lane))
+    }
+
+    fn build(b: Mat, w: u32, plan: PackPlan, lane: Option<LaneId>) -> Result<PackedWeight> {
+        check_width(w)?;
         if !b.fits(w) {
             bail!("weight exceeds w={w} bits");
         }
@@ -123,9 +159,15 @@ impl PackedWeight {
         // alone decides: above the native window the digit-slicing
         // plans always get their plane tree.
         let build_kmm = w > NATIVE_W && matches!(plan, PackPlan::Both | PackPlan::Kmm);
-        let mm =
-            build_mm.then(|| PackedB::pack(&Kernel8x4, b.data(), k, n, &Blocking::default()));
-        let kmm = build_kmm.then(|| PackedKmmB::pack(&Kernel8x4, b.data(), k, n, w, 2));
+        let bl = Blocking::default();
+        let mm = build_mm.then(|| match lane {
+            Some(l) => LanePackedB::pack_in(l, b.data(), k, n, w, &bl),
+            None => LanePackedB::pack_select(b.data(), k, n, w, &bl),
+        });
+        let kmm = build_kmm.then(|| match lane {
+            Some(l) => LanePackedKmmB::pack_in(l, b.data(), k, n, w, 2),
+            None => LanePackedKmmB::pack_select(b.data(), k, n, w, 2),
+        });
         Ok(PackedWeight { raw: b, w, mm, kmm })
     }
 
@@ -150,19 +192,31 @@ impl PackedWeight {
     }
 
     /// The conventional blocked-GEMM packing, when the plan built one.
-    pub fn mm(&self) -> Option<&PackedB> {
+    pub fn mm(&self) -> Option<&LanePackedB> {
         self.mm.as_ref()
     }
 
     /// The Karatsuba digit-plane cache, when width and plan call for one.
-    pub fn kmm(&self) -> Option<&PackedKmmB> {
+    pub fn kmm(&self) -> Option<&LanePackedKmmB> {
         self.kmm.as_ref()
     }
 
-    /// Total packed bytes held by this entry (cache observability).
+    /// The lane the conventional panels were packed for, when present —
+    /// what the serving backend checks its selected lane against.
+    pub fn mm_lane(&self) -> Option<LaneId> {
+        self.mm.as_ref().map(LanePackedB::lane)
+    }
+
+    /// The lane the digit-plane tree was packed for, when present.
+    pub fn kmm_lane(&self) -> Option<LaneId> {
+        self.kmm.as_ref().map(LanePackedKmmB::lane)
+    }
+
+    /// Total packed bytes held by this entry (cache observability —
+    /// narrow-lane entries hold `elem_bits/64` of the `u64` footprint).
     pub fn bytes(&self) -> usize {
-        self.mm.as_ref().map_or(0, PackedB::bytes)
-            + self.kmm.as_ref().map_or(0, PackedKmmB::bytes)
+        self.mm.as_ref().map_or(0, LanePackedB::bytes)
+            + self.kmm.as_ref().map_or(0, LanePackedKmmB::bytes)
     }
 }
 
@@ -308,6 +362,52 @@ mod tests {
     }
 
     #[test]
+    fn entries_record_the_selected_lane() {
+        let mut rng = Rng::new(6);
+        // w=8 shallow weight: both packings ride the u16 lane (the
+        // selector's headroom rule admits it), at a quarter of the
+        // always-u64 bytes.
+        let pw = PackedWeight::new(Mat::random(6, 5, 8, &mut rng), 8).unwrap();
+        assert_eq!(pw.mm_lane(), Some(LaneId::U16));
+        assert_eq!(pw.kmm_lane(), None);
+        // w=12 shallow: still u16 (24 + ceil(log2 6) = 27 <= 32).
+        let pw = PackedWeight::new(Mat::random(6, 5, 12, &mut rng), 12).unwrap();
+        assert_eq!(pw.mm_lane(), Some(LaneId::U16));
+        assert_eq!(pw.kmm_lane(), Some(LaneId::U16));
+        // w=32 always needs the u64/u128 lane beyond trivial depth.
+        let pw = PackedWeight::new(Mat::random(6, 5, 32, &mut rng), 32).unwrap();
+        assert_eq!(pw.mm_lane(), Some(LaneId::U64));
+        assert_eq!(pw.kmm_lane(), Some(LaneId::U64));
+        // A forced off-selection lane is recorded as such.
+        let pw = PackedWeight::with_plan_in_lane(
+            Mat::random(6, 5, 8, &mut rng),
+            8,
+            PackPlan::Mm,
+            LaneId::U64,
+        )
+        .unwrap();
+        assert_eq!(pw.mm_lane(), Some(LaneId::U64));
+        // Forcing a lane that violates the headroom rule is rejected.
+        let err = PackedWeight::with_plan_in_lane(
+            Mat::random(6, 5, 32, &mut rng),
+            32,
+            PackPlan::Mm,
+            LaneId::U16,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not exact"), "{err:#}");
+    }
+
+    #[test]
+    fn narrow_lane_entries_shrink_the_cache() {
+        let mut rng = Rng::new(8);
+        let b = Mat::random(64, 40, 8, &mut rng);
+        let narrow = PackedWeight::with_plan(b.clone(), 8, PackPlan::Mm).unwrap();
+        let wide = PackedWeight::with_plan_in_lane(b, 8, PackPlan::Mm, LaneId::U64).unwrap();
+        assert_eq!(wide.bytes(), 4 * narrow.bytes());
+    }
+
+    #[test]
     fn pack_plan_builds_only_what_it_serves() {
         let mut rng = Rng::new(7);
         let b = Mat::random(6, 5, 12, &mut rng);
@@ -326,6 +426,7 @@ mod tests {
         let pw_raw = PackedWeight::with_plan(b.clone(), 12, PackPlan::Raw).unwrap();
         assert!(pw_raw.mm().is_none() && pw_raw.kmm().is_none());
         assert_eq!(pw_raw.bytes(), 0);
+        assert_eq!((pw_raw.mm_lane(), pw_raw.kmm_lane()), (None, None));
         // Both holds strictly more bytes than a single-plan entry of
         // the same shape.
         let both = PackedWeight::with_plan(b, 12, PackPlan::Both).unwrap();

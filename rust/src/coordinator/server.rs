@@ -21,6 +21,7 @@ use crate::algo::matrix::{Mat, MatAcc};
 use crate::arch::scalable::Mode;
 use crate::coordinator::dispatch::GemmBackend;
 use crate::coordinator::registry::{PackedWeight, WeightHandle, WeightRegistry};
+use crate::fast::LaneId;
 use crate::util::error::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -53,6 +54,9 @@ pub struct Response {
     /// Product, or the error string for rejected requests.
     pub result: Result<MatAcc, String>,
     pub mode: Option<Mode>,
+    /// The fast engine's element-storage lane that served the request
+    /// (`None` for rejections and for backends without lanes).
+    pub lane: Option<LaneId>,
     /// Deterministic device cycles attributed to this request.
     pub cycles: u64,
     /// Batch this request was served in (globally unique across shards).
@@ -95,8 +99,9 @@ pub struct ServerStats {
     pub total_cycles: u64,
     /// Weight-stationary requests whose handle resolved in the shared
     /// registry. Whether the serve came from a prepacked path or the
-    /// raw fallback depends on the entry's `PackPlan` matching the
-    /// backend's routing; the pack-work guarantee itself is
+    /// raw fallback depends on the entry's `PackPlan` *and* recorded
+    /// lane matching the backend's routing (a mismatched entry re-packs
+    /// per call); the pack-work guarantee itself is
     /// `WeightRegistry::packs()` staying flat across requests.
     pub weight_hits: u64,
     /// Weight-stationary requests naming an unknown (or unregistered)
@@ -104,6 +109,9 @@ pub struct ServerStats {
     pub weight_misses: u64,
     /// Requests per mode.
     pub by_mode: HashMap<&'static str, u64>,
+    /// Served requests per fast-engine lane (`u16`/`u32`/`u64`); empty
+    /// for backends without width-specialized lanes.
+    pub by_lane: HashMap<&'static str, u64>,
 }
 
 impl ServerStats {
@@ -117,6 +125,9 @@ impl ServerStats {
         self.weight_misses += other.weight_misses;
         for (mode, count) in &other.by_mode {
             *self.by_mode.entry(mode).or_insert(0) += count;
+        }
+        for (lane, count) in &other.by_lane {
+            *self.by_lane.entry(lane).or_insert(0) += count;
         }
     }
 }
@@ -364,10 +375,14 @@ fn worker_loop(
                     Ok(res) => {
                         stats.total_cycles += res.stats.cycles;
                         *stats.by_mode.entry(mode_name(res.mode)).or_insert(0) += 1;
+                        if let Some(lane) = res.lane {
+                            *stats.by_lane.entry(lane.name()).or_insert(0) += 1;
+                        }
                         Response {
                             id,
                             result: Ok(res.c),
                             mode: Some(res.mode),
+                            lane: res.lane,
                             cycles: res.stats.cycles,
                             batch: batch_id,
                         }
@@ -378,6 +393,7 @@ fn worker_loop(
                             id,
                             result: Err(format!("{e:#}")),
                             mode: None,
+                            lane: None,
                             cycles: 0,
                             batch: batch_id,
                         }
@@ -565,6 +581,40 @@ mod tests {
         assert_eq!(stats.requests, 10);
         assert_eq!(stats.rejected, 1);
         assert_eq!(stats.by_mode.get("kmm2"), Some(&9));
+        // w=16 depth-8 requests ride the u32 lane; the rejection counts
+        // toward no lane.
+        assert_eq!(stats.by_lane.get("u32"), Some(&9));
+        assert_eq!(stats.by_lane.values().sum::<u64>(), 9);
+    }
+
+    #[test]
+    fn lane_counters_follow_request_widths() {
+        // One server, widths spanning all three lanes: the merged stats
+        // attribute each served request to the lane that ran it, and
+        // each response names its lane. The functional backend (no
+        // lanes) keeps the map empty.
+        let mut srv = Server::start(
+            || Box::new(FastBackend::new(FastAlgo::Mm)) as Box<dyn GemmBackend>,
+            ServerConfig::default().workers(2),
+        );
+        let mut rng = Rng::new(41);
+        for (w, lane) in [(8u32, LaneId::U16), (16, LaneId::U32), (32, LaneId::U64)] {
+            let a = Mat::random(4, 9, w, &mut rng);
+            let b = Mat::random(9, 4, w, &mut rng);
+            let want = matmul_oracle(&a, &b);
+            let resp = srv.submit_sync(a, b, w);
+            assert_eq!(resp.result.unwrap(), want, "w={w}");
+            assert_eq!(resp.lane, Some(lane), "w={w}");
+        }
+        let stats = srv.shutdown();
+        for lane in ["u16", "u32", "u64"] {
+            assert_eq!(stats.by_lane.get(lane), Some(&1), "{lane}");
+        }
+        let mut func = small_server();
+        let a = Mat::random(3, 3, 8, &mut rng);
+        let b = Mat::random(3, 3, 8, &mut rng);
+        assert_eq!(func.submit_sync(a, b, 8).lane, None);
+        assert!(func.shutdown().by_lane.is_empty());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The blocked GEMM driver: cache blocking around a [`Kernel`].
+//! The blocked GEMM driver: cache blocking around a [`Kernel`], generic
+//! over the [`Element`] lane the operands are stored in.
 //!
 //! Loop structure (outside → inside), following the classic
 //! BLIS/GotoBLAS decomposition the rten engine also uses:
@@ -13,6 +14,9 @@
 //! Each `(pc)` block contributes a partial product that the driver
 //! **adds** into `C`, so one zeroed output buffer accumulates across all
 //! depth blocks, exactly like the out-of-array accumulation of §IV-D.
+//! Every buffer — packed panels, register tiles, the output — lives in
+//! the lane's storage/accumulator types, so a `w = 8` GEMM on the `u16`
+//! lane streams a quarter of the packed bytes the `u64` lane would.
 //!
 //! This driver is the fast engine's conventional path (`MM₁` in the
 //! paper's terms: one native multiplication per MAC); the Karatsuba
@@ -25,12 +29,13 @@
 //! strips, mirroring how the paper's architectures scale across parallel
 //! PEs: for each `(jc, pc)` slab the packed-B panels are formed once and
 //! shared read-only by every worker, while each worker packs its own A
-//! strip and writes a **disjoint** row strip of `C` — so the `u128`
+//! strip and writes a **disjoint** row strip of `C` — so the lane's
 //! accumulator buffer needs no locking and the parallel result is
 //! bit-identical to the sequential one at every thread count (enforced
 //! by `tests/integration_parallel.rs`).
 
 use crate::fast::kernel::Kernel;
+use crate::fast::lane::Element;
 use crate::fast::pack::{pack_a, pack_b, PackedB};
 use crate::util::pool;
 
@@ -47,8 +52,10 @@ pub struct Blocking {
 
 impl Default for Blocking {
     fn default() -> Self {
-        // u64 elements: A block 64×128×8 B = 64 KiB (L2-comfortable),
-        // B slab 128×512×8 B = 512 KiB (L3-resident).
+        // Sized for u64 elements: A block 64×128×8 B = 64 KiB
+        // (L2-comfortable), B slab 128×512×8 B = 512 KiB (L3-resident).
+        // Narrow lanes fit the same element counts in proportionally
+        // fewer bytes, so the default stays cache-safe on every lane.
         Blocking {
             mc: 64,
             kc: 128,
@@ -57,15 +64,25 @@ impl Default for Blocking {
     }
 }
 
-/// Compute `C = A·B` over row-major `u64` slices with the default
-/// blocking, returning a freshly allocated row-major `u128` product.
+/// Compute `C = A·B` over row-major lane-element slices with the
+/// default blocking, returning a freshly allocated row-major product in
+/// the lane's accumulator type.
 ///
-/// Exactness contract: every product `a·b` fits `u128` by construction
-/// (64×64→128 widening multiply); accumulation is exact while
-/// `k · max(a)·max(b) < 2^128`, which holds for all operands up to
-/// [`crate::fast::MAX_W`] bits at any practical depth.
-pub fn gemm<K: Kernel>(kernel: &K, a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<u128> {
-    let mut c = vec![0u128; m * n];
+/// Exactness contract: every product `a·b` fits the accumulator by
+/// construction (the lane's widening multiply); accumulation is exact
+/// while `2w + ⌈log₂ k⌉ ≤` the lane's accumulator bits — the
+/// [`required_acc_bits`](crate::fast::lane::required_acc_bits) rule the
+/// lane selector enforces (any depth on the `u64` lane at `w ≤`
+/// [`crate::fast::MAX_W`]).
+pub fn gemm<E: Element, K: Kernel<E>>(
+    kernel: &K,
+    a: &[E],
+    b: &[E],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<E::Acc> {
+    let mut c = vec![<E::Acc>::default(); m * n];
     gemm_into(kernel, &Blocking::default(), a, b, m, k, n, &mut c);
     c
 }
@@ -74,15 +91,15 @@ pub fn gemm<K: Kernel>(kernel: &K, a: &[u64], b: &[u64], m: usize, k: usize, n: 
 /// blocking parameters. `a` is `m × k`, `b` is `k × n`, `c` is `m × n`,
 /// all row-major.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_into<K: Kernel>(
+pub fn gemm_into<E: Element, K: Kernel<E>>(
     kernel: &K,
     bl: &Blocking,
-    a: &[u64],
-    b: &[u64],
+    a: &[E],
+    b: &[E],
     m: usize,
     k: usize,
     n: usize,
-    c: &mut [u128],
+    c: &mut [E::Acc],
 ) {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
@@ -91,9 +108,9 @@ pub fn gemm_into<K: Kernel>(
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    let mut a_buf: Vec<u64> = Vec::new();
-    let mut b_buf: Vec<u64> = Vec::new();
-    let mut acc = vec![0u128; K::MR * K::NR];
+    let mut a_buf: Vec<E> = Vec::new();
+    let mut b_buf: Vec<E> = Vec::new();
+    let mut acc = vec![<E::Acc>::default(); K::MR * K::NR];
 
     for jc in (0..n).step_by(bl.nc) {
         let ncb = bl.nc.min(n - jc);
@@ -130,16 +147,16 @@ pub fn gemm_into<K: Kernel>(
 /// tall, enough of them to feed every worker), and each worker packs its
 /// own A strip and accumulates into its own disjoint rows of `c`.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_into_threads<K: Kernel + Sync>(
+pub fn gemm_into_threads<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
     bl: &Blocking,
     threads: usize,
-    a: &[u64],
-    b: &[u64],
+    a: &[E],
+    b: &[E],
     m: usize,
     k: usize,
     n: usize,
-    c: &mut [u128],
+    c: &mut [E::Acc],
 ) {
     if threads <= 1 || m < 2 * K::MR {
         gemm_into(kernel, bl, a, b, m, k, n, c);
@@ -156,7 +173,7 @@ pub fn gemm_into_threads<K: Kernel + Sync>(
     // Strip height: enough strips to feed every worker, rounded up to the
     // register-tile height, capped at MC to preserve the L2 blocking.
     let strip_rows = (m.div_ceil(threads).div_ceil(mr) * mr).clamp(mr, bl.mc.max(mr));
-    let mut b_buf: Vec<u64> = Vec::new();
+    let mut b_buf: Vec<E> = Vec::new();
     for jc in (0..n).step_by(bl.nc) {
         let ncb = bl.nc.min(n - jc);
         for pc in (0..k).step_by(bl.kc) {
@@ -169,7 +186,7 @@ pub fn gemm_into_threads<K: Kernel + Sync>(
                 threads,
                 c,
                 strip_rows * n,
-                || (Vec::<u64>::new(), vec![0u128; K::MR * K::NR]),
+                || (Vec::<E>::new(), vec![<E::Acc>::default(); K::MR * K::NR]),
                 |(a_buf, acc), strip_idx, strip| {
                     let ic = strip_idx * strip_rows;
                     let rows = strip.len() / n;
@@ -192,26 +209,32 @@ pub fn gemm_into_threads<K: Kernel + Sync>(
 
 /// Compute `C = A·B` with the default blocking across `threads` scoped
 /// worker threads; `threads = 1` is exactly [`gemm`].
-pub fn gemm_threads<K: Kernel + Sync>(
+pub fn gemm_threads<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
-    a: &[u64],
-    b: &[u64],
+    a: &[E],
+    b: &[E],
     m: usize,
     k: usize,
     n: usize,
     threads: usize,
-) -> Vec<u128> {
-    let mut c = vec![0u128; m * n];
+) -> Vec<E::Acc> {
+    let mut c = vec![<E::Acc>::default(); m * n];
     gemm_into_threads(kernel, &Blocking::default(), threads, a, b, m, k, n, &mut c);
     c
 }
 
 /// Compute `C = A·B` against a prepacked B operand (see
-/// [`PackedB::pack`]), returning a freshly allocated row-major `u128`
-/// product. Bit-exact with [`gemm`] on the same inputs; the only
-/// difference is that no B-packing work happens per call.
-pub fn gemm_prepacked<K: Kernel>(kernel: &K, a: &[u64], packed: &PackedB, m: usize) -> Vec<u128> {
-    let mut c = vec![0u128; m * packed.cols()];
+/// [`PackedB::pack`]), returning a freshly allocated row-major product
+/// in the lane's accumulator type. Bit-exact with [`gemm`] on the same
+/// inputs; the only difference is that no B-packing work happens per
+/// call.
+pub fn gemm_prepacked<E: Element, K: Kernel<E>>(
+    kernel: &K,
+    a: &[E],
+    packed: &PackedB<E>,
+    m: usize,
+) -> Vec<E::Acc> {
+    let mut c = vec![<E::Acc>::default(); m * packed.cols()];
     gemm_prepacked_into(kernel, a, packed, m, &mut c);
     c
 }
@@ -219,13 +242,14 @@ pub fn gemm_prepacked<K: Kernel>(kernel: &K, a: &[u64], packed: &PackedB, m: usi
 /// Blocked GEMM accumulating into `c` (`c += A·B`) against a prepacked
 /// B operand. The blocking comes from the cache entry itself (slab
 /// boundaries were cut at pack time); the kernel's `NR` must match the
-/// width the panels were padded for.
-pub fn gemm_prepacked_into<K: Kernel>(
+/// width the panels were padded for, and the entry's lane is fixed by
+/// its element type.
+pub fn gemm_prepacked_into<E: Element, K: Kernel<E>>(
     kernel: &K,
-    a: &[u64],
-    packed: &PackedB,
+    a: &[E],
+    packed: &PackedB<E>,
     m: usize,
-    c: &mut [u128],
+    c: &mut [E::Acc],
 ) {
     let (k, n) = (packed.rows(), packed.cols());
     let bl = *packed.blocking();
@@ -241,8 +265,8 @@ pub fn gemm_prepacked_into<K: Kernel>(
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    let mut a_buf: Vec<u64> = Vec::new();
-    let mut acc = vec![0u128; K::MR * K::NR];
+    let mut a_buf: Vec<E> = Vec::new();
+    let mut acc = vec![<E::Acc>::default(); K::MR * K::NR];
     for (jc_idx, jc) in (0..n).step_by(bl.nc).enumerate() {
         let ncb = bl.nc.min(n - jc);
         for (pc_idx, pc) in (0..k).step_by(bl.kc).enumerate() {
@@ -272,13 +296,13 @@ pub fn gemm_prepacked_into<K: Kernel>(
 /// decomposition matches [`gemm_into_threads`] — disjoint MR-aligned C
 /// row strips per worker, the cached B slab shared read-only — so the
 /// result is bit-identical at every thread count.
-pub fn gemm_prepacked_into_threads<K: Kernel + Sync>(
+pub fn gemm_prepacked_into_threads<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
     threads: usize,
-    a: &[u64],
-    packed: &PackedB,
+    a: &[E],
+    packed: &PackedB<E>,
     m: usize,
-    c: &mut [u128],
+    c: &mut [E::Acc],
 ) {
     if threads <= 1 || m < 2 * K::MR {
         gemm_prepacked_into(kernel, a, packed, m, c);
@@ -309,7 +333,7 @@ pub fn gemm_prepacked_into_threads<K: Kernel + Sync>(
                 threads,
                 c,
                 strip_rows * n,
-                || (Vec::<u64>::new(), vec![0u128; K::MR * K::NR]),
+                || (Vec::<E>::new(), vec![<E::Acc>::default(); K::MR * K::NR]),
                 |(a_buf, acc), strip_idx, strip| {
                     let ic = strip_idx * strip_rows;
                     let rows = strip.len() / n;
@@ -332,14 +356,14 @@ pub fn gemm_prepacked_into_threads<K: Kernel + Sync>(
 
 /// Compute `C = A·B` against a prepacked B across `threads` scoped
 /// worker threads; `threads = 1` is exactly [`gemm_prepacked`].
-pub fn gemm_prepacked_threads<K: Kernel + Sync>(
+pub fn gemm_prepacked_threads<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
-    a: &[u64],
-    packed: &PackedB,
+    a: &[E],
+    packed: &PackedB<E>,
     m: usize,
     threads: usize,
-) -> Vec<u128> {
-    let mut c = vec![0u128; m * packed.cols()];
+) -> Vec<E::Acc> {
+    let mut c = vec![<E::Acc>::default(); m * packed.cols()];
     gemm_prepacked_into_threads(kernel, threads, a, packed, m, &mut c);
     c
 }
@@ -371,14 +395,14 @@ struct StripBlock {
 /// Shared by the sequential and parallel drivers; in the parallel driver
 /// each worker calls it on a disjoint strip with the shared packed-B
 /// slab.
-fn run_strip<K: Kernel>(
+fn run_strip<E: Element, K: Kernel<E>>(
     kernel: &K,
-    a: &[u64],
-    b_slab: &[u64],
-    a_buf: &mut Vec<u64>,
-    acc: &mut [u128],
+    a: &[E],
+    b_slab: &[E],
+    a_buf: &mut Vec<E>,
+    acc: &mut [E::Acc],
     blk: &StripBlock,
-    strip: &mut [u128],
+    strip: &mut [E::Acc],
 ) {
     let (mr, nr) = (K::MR, K::NR);
     pack_a(a_buf, a, blk.k, blk.ic, blk.rows, blk.pc, blk.kcb, mr);
@@ -395,7 +419,7 @@ fn run_strip<K: Kernel>(
             for r in 0..r_max {
                 let dst = &mut strip[(ip * mr + r) * blk.n + blk.jc + jp * nr..][..c_max];
                 for (cc, d) in dst.iter_mut().enumerate() {
-                    *d += acc[r * nr + cc];
+                    *d = E::acc_add(*d, acc[r * nr + cc]);
                 }
             }
         }
@@ -435,6 +459,33 @@ mod tests {
                 naive(&a, &b, m, k, n),
                 &format!("blocked == naive ({m}x{k}x{n} w={w})"),
             )
+        });
+    }
+
+    #[test]
+    fn narrow_lanes_match_the_u64_lane_prop() {
+        // The same random GEMM on every lane that is exact for its
+        // (w, k): identical values after widening back to u128.
+        forall(Config::default().cases(60), |rng| {
+            let (m, k, n) = (rng.range(1, 40), rng.range(1, 40), rng.range(1, 40));
+            let w = *rng.pick(&[4u32, 8]);
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            let want = gemm(&Kernel8x4, &a, &b, m, k, n);
+            let a16: Vec<u16> = a.iter().map(|&x| x as u16).collect();
+            let b16: Vec<u16> = b.iter().map(|&x| x as u16).collect();
+            let got16: Vec<u128> = gemm(&Kernel8x4, &a16, &b16, m, k, n)
+                .into_iter()
+                .map(u128::from)
+                .collect();
+            prop_assert_eq(got16, want.clone(), &format!("u16 lane ({m}x{k}x{n} w={w})"))?;
+            let a32: Vec<u32> = a.iter().map(|&x| x as u32).collect();
+            let b32: Vec<u32> = b.iter().map(|&x| x as u32).collect();
+            let got32: Vec<u128> = gemm(&Kernel8x4, &a32, &b32, m, k, n)
+                .into_iter()
+                .map(u128::from)
+                .collect();
+            prop_assert_eq(got32, want, &format!("u32 lane ({m}x{k}x{n} w={w})"))
         });
     }
 
@@ -498,6 +549,24 @@ mod tests {
                 &format!("parallel == sequential ({m}x{k}x{n} t={threads})"),
             )
         });
+    }
+
+    #[test]
+    fn parallel_narrow_lane_matches_sequential() {
+        // The scoped-thread driver is lane-agnostic: u16 panels shared
+        // read-only across workers, disjoint u32 output strips.
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (53usize, 17usize, 11usize);
+        let a: Vec<u16> = (0..m * k).map(|_| rng.bits(8) as u16).collect();
+        let b: Vec<u16> = (0..k * n).map(|_| rng.bits(8) as u16).collect();
+        let want = gemm(&Kernel8x4, &a, &b, m, k, n);
+        for threads in [2usize, 4, 16] {
+            assert_eq!(
+                gemm_threads(&Kernel8x4, &a, &b, m, k, n, threads),
+                want,
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]
@@ -571,6 +640,23 @@ mod tests {
     }
 
     #[test]
+    fn prepacked_narrow_lane_matches_fresh() {
+        // The owned cache works identically on a narrow lane.
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (17usize, 13usize, 9usize);
+        let a: Vec<u16> = (0..m * k).map(|_| rng.bits(8) as u16).collect();
+        let b: Vec<u16> = (0..k * n).map(|_| rng.bits(8) as u16).collect();
+        let packed = PackedB::pack(&Kernel8x4, &b, k, n, &Blocking::default());
+        for threads in [1usize, 2, 4] {
+            assert_eq!(
+                gemm_prepacked_threads(&Kernel8x4, &a, &packed, m, threads),
+                gemm(&Kernel8x4, &a, &b, m, k, n),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
     fn prepacked_tiny_blocking_still_exact() {
         // Pathological blockings cut many slabs; the cache must index
         // them all correctly.
@@ -627,15 +713,15 @@ mod tests {
     #[test]
     #[should_panic(expected = "PackedB was packed for NR=1")]
     fn prepacked_rejects_kernel_mismatch() {
-        let packed = PackedB::pack(&Kernel1x1, &[1, 2], 2, 1, &Blocking::default());
+        let packed = PackedB::<u64>::pack(&Kernel1x1, &[1, 2], 2, 1, &Blocking::default());
         let mut c = vec![0u128; 1];
-        gemm_prepacked_into(&Kernel8x4, &[3, 4], &packed, 1, &mut c);
+        gemm_prepacked_into(&Kernel8x4, &[3u64, 4], &packed, 1, &mut c);
     }
 
     #[test]
     fn identity_and_edge_shapes() {
         // 1×1×1, row×col, and identity sanity checks.
-        assert_eq!(gemm(&Kernel8x4, &[7], &[6], 1, 1, 1), vec![42u128]);
+        assert_eq!(gemm(&Kernel8x4, &[7u64], &[6u64], 1, 1, 1), vec![42u128]);
         let a = [1u64, 2, 3]; // 1×3
         let b = [4u64, 5, 6]; // 3×1
         assert_eq!(gemm(&Kernel8x4, &a, &b, 1, 3, 1), vec![32u128]);

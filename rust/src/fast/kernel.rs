@@ -3,23 +3,24 @@
 //! A [`Kernel`] computes one `MR × NR` tile of `C` from packed operand
 //! panels (see [`crate::fast::pack`]): `MR` rows of `A` and `NR` columns
 //! of `B`, both laid out depth-major so the `kc`-long inner loop walks
-//! each panel contiguously. Accumulation is native `u128` — products of
-//! `u64` operands are formed with the 64×64→128 widening multiply, so
-//! the microkernel is exact for any operands up to [`MAX_W`] bits at any
-//! practical GEMM depth (headroom `≥ 2^{64}` summands).
+//! each panel contiguously. The kernels are generic over an [`Element`]
+//! lane: operands live in the lane's storage type and accumulate through
+//! its widening multiply (`u16×u16→u32`, `u32×u32→u64`, `u64×u64→u128`),
+//! so the same microkernel monomorphizes into one datapath per lane —
+//! the software mirror of the paper sizing multipliers to the operand
+//! width. Each instantiation is exact under the lane's headroom contract
+//! ([`crate::fast::lane::required_acc_bits`]).
 //!
 //! The shape follows the rten/BLIS design: a fixed register tile sized
 //! so the `MR × NR` accumulators live in registers across the whole
 //! `kc` loop, with all edge handling pushed into zero-padded packing.
 
-/// Largest operand bitwidth the native engine guarantees exact results
-/// for (`u128` accumulator headroom covers `2w + ⌈log₂ K⌉ + shifts` for
-/// every digit-slice recombination at `w ≤ 32`). Wider inputs belong to
-/// the exact wide-integer reference path ([`crate::algo`]).
-pub const MAX_W: u32 = 32;
+use crate::fast::lane::Element;
+pub use crate::fast::lane::MAX_W;
 
-/// An `MR × NR` register-tile microkernel over packed panels.
-pub trait Kernel {
+/// An `MR × NR` register-tile microkernel over packed panels in lane
+/// `E`'s storage.
+pub trait Kernel<E: Element> {
     /// Register-tile height: rows of `C` produced per call.
     const MR: usize;
     /// Register-tile width: columns of `C` produced per call.
@@ -32,40 +33,38 @@ pub trait Kernel {
     /// overwriting `acc` (row-major `MR × NR`):
     ///
     /// `acc[r·NR + c] = Σ_k a_panel[k·MR + r] · b_panel[k·NR + c]`
-    fn run(&self, acc: &mut [u128], a_panel: &[u64], b_panel: &[u64], kc: usize);
+    fn run(&self, acc: &mut [E::Acc], a_panel: &[E], b_panel: &[E], kc: usize);
 }
 
-/// The default 8×4 microkernel: 32 `u128` accumulators, fully unrolled
+/// The default 8×4 microkernel: 32 lane accumulators, fully unrolled
 /// over `NR`, broadcast of each `A` element against a contiguous `B`
 /// row. 8×4 keeps the accumulator set within the register budget of
-/// x86-64/aarch64 while giving the compiler independent chains to
-/// schedule.
+/// x86-64/aarch64 at every lane width while giving the compiler
+/// independent chains to schedule (and, on the narrow lanes, room to
+/// vectorize the widening multiplies).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Kernel8x4;
 
-impl Kernel for Kernel8x4 {
+impl<E: Element> Kernel<E> for Kernel8x4 {
     const MR: usize = 8;
     const NR: usize = 4;
     const NAME: &'static str = "8x4";
 
-    fn run(&self, acc: &mut [u128], a_panel: &[u64], b_panel: &[u64], kc: usize) {
-        debug_assert_eq!(acc.len(), Self::MR * Self::NR);
-        debug_assert!(a_panel.len() >= kc * Self::MR);
-        debug_assert!(b_panel.len() >= kc * Self::NR);
-        let mut t = [[0u128; 4]; 8];
+    fn run(&self, acc: &mut [E::Acc], a_panel: &[E], b_panel: &[E], kc: usize) {
+        debug_assert_eq!(acc.len(), 8 * 4);
+        debug_assert!(a_panel.len() >= kc * 8);
+        debug_assert!(b_panel.len() >= kc * 4);
+        let zero: E::Acc = Default::default();
+        let mut t = [[zero; 4]; 8];
         for kk in 0..kc {
-            let ak: &[u64; 8] = a_panel[kk * 8..kk * 8 + 8].try_into().unwrap();
-            let bk: &[u64; 4] = b_panel[kk * 4..kk * 4 + 4].try_into().unwrap();
-            let b0 = bk[0] as u128;
-            let b1 = bk[1] as u128;
-            let b2 = bk[2] as u128;
-            let b3 = bk[3] as u128;
+            let ak: &[E; 8] = a_panel[kk * 8..kk * 8 + 8].try_into().unwrap();
+            let bk: &[E; 4] = b_panel[kk * 4..kk * 4 + 4].try_into().unwrap();
             for r in 0..8 {
-                let av = ak[r] as u128;
-                t[r][0] += av * b0;
-                t[r][1] += av * b1;
-                t[r][2] += av * b2;
-                t[r][3] += av * b3;
+                let av = ak[r];
+                t[r][0] = E::madd(t[r][0], av, bk[0]);
+                t[r][1] = E::madd(t[r][1], av, bk[1]);
+                t[r][2] = E::madd(t[r][2], av, bk[2]);
+                t[r][3] = E::madd(t[r][3], av, bk[3]);
             }
         }
         for r in 0..8 {
@@ -82,16 +81,16 @@ impl Kernel for Kernel8x4 {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Kernel1x1;
 
-impl Kernel for Kernel1x1 {
+impl<E: Element> Kernel<E> for Kernel1x1 {
     const MR: usize = 1;
     const NR: usize = 1;
     const NAME: &'static str = "1x1-reference";
 
-    fn run(&self, acc: &mut [u128], a_panel: &[u64], b_panel: &[u64], kc: usize) {
+    fn run(&self, acc: &mut [E::Acc], a_panel: &[E], b_panel: &[E], kc: usize) {
         debug_assert_eq!(acc.len(), 1);
-        let mut sum = 0u128;
+        let mut sum: E::Acc = Default::default();
         for kk in 0..kc {
-            sum += a_panel[kk] as u128 * b_panel[kk] as u128;
+            sum = E::madd(sum, a_panel[kk], b_panel[kk]);
         }
         acc[0] = sum;
     }
@@ -147,13 +146,57 @@ mod tests {
     }
 
     #[test]
+    fn narrow_lanes_agree_with_the_u64_lane() {
+        // The same tile driven through every lane: identical values,
+        // only the storage/accumulator types differ.
+        let mut rng = Rng::new(3);
+        for kc in [1usize, 5, 33] {
+            let a: Vec<u64> = (0..kc * 8).map(|_| rng.bits(8)).collect();
+            let b: Vec<u64> = (0..kc * 4).map(|_| rng.bits(8)).collect();
+            let want = expect_tile(&a, &b, 8, 4, kc);
+            let a16: Vec<u16> = a.iter().map(|&x| x as u16).collect();
+            let b16: Vec<u16> = b.iter().map(|&x| x as u16).collect();
+            let mut acc16 = vec![0u32; 32];
+            Kernel8x4.run(&mut acc16, &a16, &b16, kc);
+            assert_eq!(
+                acc16.iter().map(|&v| v as u128).collect::<Vec<_>>(),
+                want,
+                "u16 lane kc={kc}"
+            );
+            let a32: Vec<u32> = a.iter().map(|&x| x as u32).collect();
+            let b32: Vec<u32> = b.iter().map(|&x| x as u32).collect();
+            let mut acc32 = vec![0u64; 32];
+            Kernel8x4.run(&mut acc32, &a32, &b32, kc);
+            assert_eq!(
+                acc32.iter().map(|&v| v as u128).collect::<Vec<_>>(),
+                want,
+                "u32 lane kc={kc}"
+            );
+        }
+    }
+
+    #[test]
     fn max_width_operands_do_not_overflow() {
-        // 2^32−1 squared, 64 deep: the largest tile the contract allows.
+        // 2^32−1 squared, 64 deep on the u64 lane: the largest tile the
+        // engine-wide contract allows.
         let a = vec![u32::MAX as u64; 64 * 8];
         let b = vec![u32::MAX as u64; 64 * 4];
         let mut acc = vec![0u128; 32];
         Kernel8x4.run(&mut acc, &a, &b, 64);
         let want = (u32::MAX as u128 * u32::MAX as u128) * 64;
         assert!(acc.iter().all(|&v| v == want));
+    }
+
+    #[test]
+    fn narrow_lane_headroom_boundary_tile() {
+        // u16 lane at its exact limit: w = 12 all-ones, kc = 256 gives
+        // 256·(2^12−1)² = 4 292 870 400 < 2^32 — the largest all-ones
+        // tile the 32-bit accumulator admits.
+        let a = vec![(1u16 << 12) - 1; 256 * 8];
+        let b = vec![(1u16 << 12) - 1; 256 * 4];
+        let mut acc = vec![0u32; 32];
+        Kernel8x4.run(&mut acc, &a, &b, 256);
+        let want = ((1u64 << 12) - 1).pow(2) * 256;
+        assert!(u64::from(acc[0]) == want && acc.iter().all(|&v| v == acc[0]));
     }
 }

@@ -1,5 +1,6 @@
 //! The Karatsuba digit-slice GEMM driver — Algorithm 4 on the fast
-//! engine, without the op-count machinery.
+//! engine, without the op-count machinery, generic over the
+//! [`Element`] lane the digit planes are stored in.
 //!
 //! One recursion level splits every `w`-bit element into high/low digit
 //! planes, forms the digit-sum planes, and runs **three** sub-GEMMs on
@@ -14,17 +15,19 @@
 //!
 //! This is line-for-line the recombination of [`crate::algo::kmm()`]
 //! (including the ≪ 2⌈w/2⌉ erratum shift), with [`Tally`] bookkeeping
-//! replaced by native `u128` arithmetic and the digit-plane formation
-//! shared through [`crate::algo::bits::split_planes`]. `n = 2^r` digits
-//! recurse `r` levels, giving `3^r` leaf GEMMs (vs the conventional
-//! `4^r`) — the paper's multiplication saving, here traded against the
-//! fact that a software `u64` multiplier is equally fast at every
-//! width, which is exactly why the bench pits `fast::kmm` against
+//! replaced by native lane arithmetic and the per-element split shared
+//! with [`crate::algo::bits::split`]. `n = 2^r` digits recurse `r`
+//! levels, giving `3^r` leaf GEMMs (vs the conventional `4^r`) — the
+//! paper's multiplication saving, here traded against the fact that a
+//! native multiplier is equally fast at every width *within one lane*,
+//! which is exactly why the bench pits `fast::kmm` against
 //! [`fast::gemm`](crate::fast::gemm::gemm) and both against the tallied
 //! references.
 //!
 //! The cross term `Cs − C1 − C0` is elementwise non-negative
-//! (§III-B.4), so unsigned `u128` subtraction is exact.
+//! (§III-B.4), so unsigned lane subtraction is exact; every shifted
+//! recombination term is a summand of the final product, so the lane
+//! selector's [`required_acc_bits`] bound covers the whole recursion.
 //!
 //! # Parallel execution
 //!
@@ -38,32 +41,66 @@
 //! parallel driver is bit-exact with [`kmm`] by construction.
 //!
 //! [`Tally`]: crate::algo::opcount::Tally
+//! [`required_acc_bits`]: crate::fast::lane::required_acc_bits
 
 use crate::algo::bits;
 use crate::fast::gemm::{
     gemm_into, gemm_into_threads, gemm_prepacked_into, gemm_prepacked_into_threads, Blocking,
 };
-use crate::fast::kernel::{Kernel, MAX_W};
+use crate::fast::kernel::{Kernel, Kernel8x4};
+use crate::fast::lane::{
+    check_width, digit_sum_plane_elems, narrow_plane, required_acc_bits, select_lane,
+    split_planes_elems, widen_acc, Element, LaneId,
+};
 use crate::fast::pack::PackedB;
 use crate::util::pool;
 
+/// Panic unless the `(w, digits, k)` configuration is valid for lane
+/// `E`: a valid digit config, `w` inside the engine window (via the
+/// shared [`check_width`] gate), operands storable, and accumulator
+/// headroom per [`required_acc_bits`] — the lane selector never routes
+/// a violating request here, so a panic means a caller bypassed it.
+fn assert_lane_config<E: Element>(w: u32, digits: u32, k: usize) {
+    assert!(
+        bits::config_valid(digits, w),
+        "invalid KMM config digits={digits} w={w}"
+    );
+    check_width(w).unwrap_or_else(|e| panic!("{e}"));
+    assert!(
+        w <= E::BITS,
+        "w={w} operands do not fit the {} lane's storage",
+        E::LANE.name()
+    );
+    assert!(
+        required_acc_bits(w, k, digits) <= E::ACC_BITS,
+        "lane {}: accumulator headroom exceeded (need {} bits for w={w} k={k} \
+         digits={digits}, have {})",
+        E::LANE.name(),
+        required_acc_bits(w, k, digits),
+        E::ACC_BITS
+    );
+}
+
 /// Compute `C = A·B` by the `digits = 2^r`-digit Karatsuba matrix
 /// decomposition over `w`-bit elements (`digits = 1` degenerates to the
-/// plain blocked GEMM). Returns the row-major `u128` product.
+/// plain blocked GEMM). Returns the row-major product in the lane's
+/// accumulator type.
 ///
 /// Requires a valid `(digits, w)` configuration (power-of-two digits,
-/// `digits ≤ w`) and `w ≤` [`MAX_W`] so every shifted partial fits the
-/// `u128` accumulators; operands must fit `w` bits.
-pub fn kmm<K: Kernel + Sync>(
+/// `digits ≤ w`), `w` inside the engine window, and the lane's
+/// headroom contract ([`required_acc_bits`]); operands must fit `w`
+/// bits.
+#[allow(clippy::too_many_arguments)]
+pub fn kmm<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
-    a: &[u64],
-    b: &[u64],
+    a: &[E],
+    b: &[E],
     m: usize,
     k: usize,
     n: usize,
     w: u32,
     digits: u32,
-) -> Vec<u128> {
+) -> Vec<E::Acc> {
     kmm_threads(kernel, a, b, m, k, n, w, digits, 1)
 }
 
@@ -72,30 +109,23 @@ pub fn kmm<K: Kernel + Sync>(
 /// third of the thread budget for its own blocked driver), then the
 /// calling thread recombines. `threads <= 1` is exactly [`kmm`].
 #[allow(clippy::too_many_arguments)]
-pub fn kmm_threads<K: Kernel + Sync>(
+pub fn kmm_threads<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
-    a: &[u64],
-    b: &[u64],
+    a: &[E],
+    b: &[E],
     m: usize,
     k: usize,
     n: usize,
     w: u32,
     digits: u32,
     threads: usize,
-) -> Vec<u128> {
-    assert!(
-        bits::config_valid(digits, w),
-        "invalid KMM config digits={digits} w={w}"
-    );
-    assert!(
-        w <= MAX_W,
-        "w={w} exceeds the fast engine's {MAX_W}-bit ceiling (use algo::kmm)"
-    );
+) -> Vec<E::Acc> {
+    assert_lane_config::<E>(w, digits, k);
     debug_assert!(
-        a.iter().chain(b).all(|&x| bits::fits(x, w)),
+        a.iter().chain(b).all(|&x| bits::fits(x.to_u64(), w)),
         "operand exceeds w={w} bits"
     );
-    let mut out = vec![0u128; m * n];
+    let mut out = vec![<E::Acc>::default(); m * n];
     kmm_rec(kernel, a, b, m, k, n, w, digits, threads, &mut out);
     out
 }
@@ -105,17 +135,17 @@ pub fn kmm_threads<K: Kernel + Sync>(
 /// `threads > 1` the three sub-products fork onto scoped threads; each
 /// leaf GEMM then spreads its share of the budget across row strips.
 #[allow(clippy::too_many_arguments)]
-fn kmm_rec<K: Kernel + Sync>(
+fn kmm_rec<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
-    a: &[u64],
-    b: &[u64],
+    a: &[E],
+    b: &[E],
     m: usize,
     k: usize,
     n: usize,
     w: u32,
     digits: u32,
     threads: usize,
-    out: &mut [u128],
+    out: &mut [E::Acc],
 ) {
     if digits == 1 {
         if threads <= 1 {
@@ -127,17 +157,17 @@ fn kmm_rec<K: Kernel + Sync>(
     }
     let wl = bits::lo_width(w);
     let wh = bits::hi_width(w);
-    let (a1, a0) = bits::split_planes_vec(a, w);
-    let (b1, b0) = bits::split_planes_vec(b, w);
-    let a_s = bits::digit_sum_plane(&a1, &a0);
-    let b_s = bits::digit_sum_plane(&b1, &b0);
+    let (a1, a0) = split_planes_elems(a, w);
+    let (b1, b0) = split_planes_elems(b, w);
+    let a_s = digit_sum_plane_elems(&a1, &a0);
+    let b_s = digit_sum_plane_elems(&b1, &b0);
 
     // Ceiling split keeps every core busy (threads = 4 → 2 per branch)
     // at the cost of mild transient oversubscription; the forked threads
     // are pure compute, so the scheduler absorbs it.
     let sub = threads.div_ceil(3);
-    let run = |x: &[u64], y: &[u64], ww: u32| -> Vec<u128> {
-        let mut c = vec![0u128; m * n];
+    let run = |x: &[E], y: &[E], ww: u32| -> Vec<E::Acc> {
+        let mut c = vec![<E::Acc>::default(); m * n];
         kmm_rec(kernel, x, y, m, k, n, ww, digits / 2, sub, &mut c);
         c
     };
@@ -150,24 +180,39 @@ fn kmm_rec<K: Kernel + Sync>(
     } else {
         (run(&a1, &b1, wh), run(&a_s, &b_s, wl + 1), run(&a0, &b0, wl))
     };
+    recombine::<E>(out, &c1, &c_s, &c0, wl);
+}
 
-    for i in 0..m * n {
-        // Non-negative by Σ(a1+a0)(b1+b0) ≥ Σa1b1 + Σa0b0 elementwise.
-        let cross = c_s[i] - c1[i] - c0[i];
-        out[i] += (c1[i] << (2 * wl)) + (cross << wl) + c0[i];
+/// The shift-recombine shared by the fresh and prepacked recursions:
+/// `out += (C1 ≪ 2wl) + ((Cs − C1 − C0) ≪ wl) + C0`. The cross term is
+/// elementwise non-negative (Σ(a1+a0)(b1+b0) ≥ Σa1b1 + Σa0b0), so the
+/// unsigned subtraction is exact.
+fn recombine<E: Element>(
+    out: &mut [E::Acc],
+    c1: &[E::Acc],
+    c_s: &[E::Acc],
+    c0: &[E::Acc],
+    wl: u32,
+) {
+    for i in 0..out.len() {
+        let cross = E::acc_sub(c_s[i], E::acc_add(c1[i], c0[i]));
+        let term = E::acc_add(
+            E::acc_add(E::acc_shl(c1[i], 2 * wl), E::acc_shl(cross, wl)),
+            c0[i],
+        );
+        out[i] = E::acc_add(out[i], term);
     }
 }
 
 /// A weight operand's full Karatsuba digit-plane decomposition, packed
-/// once for weight-stationary serving.
+/// once in lane `E`'s storage for weight-stationary serving.
 ///
 /// Recursively splits the `w`-bit operand into high/low/digit-sum
 /// planes exactly as [`kmm`] does per call, then packs every leaf plane
 /// into a [`PackedB`] — so a cached weight pays neither the digit-plane
-/// formation (`split_planes` + `digit_sum_plane`, both `O(k·n)`) nor
-/// the per-slab B packing on any subsequent call. Activations still
-/// split per call (they change per request); only the stationary
-/// operand is cached.
+/// formation nor the per-slab B packing on any subsequent call.
+/// Activations still split per call (they change per request); only the
+/// stationary operand is cached.
 ///
 /// ```
 /// use kmm::fast::kmm::{kmm, kmm_prepacked, PackedKmmB};
@@ -183,27 +228,27 @@ fn kmm_rec<K: Kernel + Sync>(
 /// );
 /// ```
 #[derive(Debug, Clone)]
-pub struct PackedKmmB {
+pub struct PackedKmmB<E: Element = u64> {
     k: usize,
     n: usize,
     w: u32,
     digits: u32,
-    root: Plane,
+    root: Plane<E>,
 }
 
 /// One node of the digit-plane tree: leaves hold packed planes, splits
 /// hold the three sub-planes of one Karatsuba recursion level.
 #[derive(Debug, Clone)]
-enum Plane {
-    Leaf(PackedB),
+enum Plane<E: Element> {
+    Leaf(PackedB<E>),
     Split {
-        hi: Box<Plane>,
-        sum: Box<Plane>,
-        lo: Box<Plane>,
+        hi: Box<Plane<E>>,
+        sum: Box<Plane<E>>,
+        lo: Box<Plane<E>>,
     },
 }
 
-impl Plane {
+impl<E: Element> Plane<E> {
     fn bytes(&self) -> usize {
         match self {
             Plane::Leaf(p) => p.bytes(),
@@ -212,13 +257,20 @@ impl Plane {
     }
 }
 
-fn pack_plane<K: Kernel>(kernel: &K, b: &[u64], k: usize, n: usize, w: u32, digits: u32) -> Plane {
+fn pack_plane<E: Element, K: Kernel<E>>(
+    kernel: &K,
+    b: &[E],
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+) -> Plane<E> {
     if digits == 1 {
         return Plane::Leaf(PackedB::pack(kernel, b, k, n, &Blocking::default()));
     }
     let wl = bits::lo_width(w);
-    let (b1, b0) = bits::split_planes_vec(b, w);
-    let b_s = bits::digit_sum_plane(&b1, &b0);
+    let (b1, b0) = split_planes_elems(b, w);
+    let b_s = digit_sum_plane_elems(&b1, &b0);
     Plane::Split {
         hi: Box::new(pack_plane(kernel, &b1, k, n, bits::hi_width(w), digits / 2)),
         sum: Box::new(pack_plane(kernel, &b_s, k, n, wl + 1, digits / 2)),
@@ -226,31 +278,25 @@ fn pack_plane<K: Kernel>(kernel: &K, b: &[u64], k: usize, n: usize, w: u32, digi
     }
 }
 
-impl PackedKmmB {
+impl<E: Element> PackedKmmB<E> {
     /// Decompose and pack the row-major `k × n` operand `b` for the
     /// `(digits, w)` Karatsuba configuration (`digits = 1` degenerates
     /// to a single plain [`PackedB`]). Panics on an invalid
-    /// configuration, `w >` [`MAX_W`], or operands exceeding `w` bits —
-    /// the same contract as [`kmm`].
-    pub fn pack<K: Kernel>(
+    /// configuration, a width outside the engine window or the lane's
+    /// contract, or operands exceeding `w` bits — the same contract as
+    /// [`kmm`].
+    pub fn pack<K: Kernel<E>>(
         kernel: &K,
-        b: &[u64],
+        b: &[E],
         k: usize,
         n: usize,
         w: u32,
         digits: u32,
-    ) -> PackedKmmB {
-        assert!(
-            bits::config_valid(digits, w),
-            "invalid KMM config digits={digits} w={w}"
-        );
-        assert!(
-            w <= MAX_W,
-            "w={w} exceeds the fast engine's {MAX_W}-bit ceiling (use algo::kmm)"
-        );
+    ) -> PackedKmmB<E> {
+        assert_lane_config::<E>(w, digits, k);
         assert_eq!(b.len(), k * n, "B shape mismatch");
         debug_assert!(
-            b.iter().all(|&x| bits::fits(x, w)),
+            b.iter().all(|&x| bits::fits(x.to_u64(), w)),
             "operand exceeds w={w} bits"
         );
         PackedKmmB {
@@ -282,6 +328,11 @@ impl PackedKmmB {
         self.digits
     }
 
+    /// The lane the leaf planes are stored in.
+    pub fn lane(&self) -> LaneId {
+        E::LANE
+    }
+
     /// Total owned size of all packed leaf planes in bytes.
     pub fn bytes(&self) -> usize {
         self.root.bytes()
@@ -291,32 +342,32 @@ impl PackedKmmB {
 /// [`kmm`] against a prepacked digit-plane cache: the stationary B
 /// operand was split and packed once; only the activation splits per
 /// call. Bit-exact with [`kmm`] at the cache's `(w, digits)`.
-pub fn kmm_prepacked<K: Kernel + Sync>(
+pub fn kmm_prepacked<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
-    a: &[u64],
-    packed: &PackedKmmB,
+    a: &[E],
+    packed: &PackedKmmB<E>,
     m: usize,
-) -> Vec<u128> {
+) -> Vec<E::Acc> {
     kmm_prepacked_threads(kernel, a, packed, m, 1)
 }
 
 /// [`kmm_prepacked`] across up to `threads` scoped worker threads,
 /// forking the three digit-plane sub-GEMMs per recursion level exactly
 /// like [`kmm_threads`]. `threads <= 1` is exactly [`kmm_prepacked`].
-pub fn kmm_prepacked_threads<K: Kernel + Sync>(
+pub fn kmm_prepacked_threads<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
-    a: &[u64],
-    packed: &PackedKmmB,
+    a: &[E],
+    packed: &PackedKmmB<E>,
     m: usize,
     threads: usize,
-) -> Vec<u128> {
+) -> Vec<E::Acc> {
     let (k, n, w, digits) = (packed.k, packed.n, packed.w, packed.digits);
     assert_eq!(a.len(), m * k, "A shape mismatch");
     debug_assert!(
-        a.iter().all(|&x| bits::fits(x, w)),
+        a.iter().all(|&x| bits::fits(x.to_u64(), w)),
         "operand exceeds w={w} bits"
     );
-    let mut out = vec![0u128; m * n];
+    let mut out = vec![<E::Acc>::default(); m * n];
     kmm_prepacked_rec(kernel, a, &packed.root, m, k, n, w, digits, threads, &mut out);
     out
 }
@@ -324,17 +375,17 @@ pub fn kmm_prepacked_threads<K: Kernel + Sync>(
 /// Recursive worker mirroring [`kmm_rec`], with the B side read from
 /// the cached plane tree instead of being split and packed per level.
 #[allow(clippy::too_many_arguments)]
-fn kmm_prepacked_rec<K: Kernel + Sync>(
+fn kmm_prepacked_rec<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
-    a: &[u64],
-    plane: &Plane,
+    a: &[E],
+    plane: &Plane<E>,
     m: usize,
     k: usize,
     n: usize,
     w: u32,
     digits: u32,
     threads: usize,
-    out: &mut [u128],
+    out: &mut [E::Acc],
 ) {
     if digits == 1 {
         let Plane::Leaf(pb) = plane else {
@@ -352,12 +403,12 @@ fn kmm_prepacked_rec<K: Kernel + Sync>(
     };
     let wl = bits::lo_width(w);
     let wh = bits::hi_width(w);
-    let (a1, a0) = bits::split_planes_vec(a, w);
-    let a_s = bits::digit_sum_plane(&a1, &a0);
+    let (a1, a0) = split_planes_elems(a, w);
+    let a_s = digit_sum_plane_elems(&a1, &a0);
 
     let sub = threads.div_ceil(3);
-    let run = |x: &[u64], p: &Plane, ww: u32| -> Vec<u128> {
-        let mut c = vec![0u128; m * n];
+    let run = |x: &[E], p: &Plane<E>, ww: u32| -> Vec<E::Acc> {
+        let mut c = vec![<E::Acc>::default(); m * n];
         kmm_prepacked_rec(kernel, x, p, m, k, n, ww, digits / 2, sub, &mut c);
         c
     };
@@ -370,11 +421,153 @@ fn kmm_prepacked_rec<K: Kernel + Sync>(
     } else {
         (run(&a1, hi, wh), run(&a_s, sum, wl + 1), run(&a0, lo, wl))
     };
+    recombine::<E>(out, &c1, &c_s, &c0, wl);
+}
 
-    for i in 0..m * n {
-        // Non-negative by Σ(a1+a0)(b1+b0) ≥ Σa1b1 + Σa0b0 elementwise.
-        let cross = c_s[i] - c1[i] - c0[i];
-        out[i] += (c1[i] << (2 * wl)) + (cross << wl) + c0[i];
+/// A [`PackedKmmB`] in whichever lane the selector chose for the
+/// weight, behind a runtime tag — the digit-sliced counterpart of
+/// [`LanePackedB`](crate::fast::pack::LanePackedB), stored by the
+/// coordinator's weight registry with the lane recorded for serve-time
+/// verification.
+#[derive(Debug, Clone)]
+pub enum LanePackedKmmB {
+    /// Digit planes in `u16` storage (`u32` accumulation).
+    U16(PackedKmmB<u16>),
+    /// Digit planes in `u32` storage (`u64` accumulation).
+    U32(PackedKmmB<u32>),
+    /// Digit planes in `u64` storage (`u128` accumulation).
+    U64(PackedKmmB<u64>),
+}
+
+impl LanePackedKmmB {
+    /// Decompose and pack `b` into an explicit `lane`. Panics unless
+    /// the lane is provably exact for `(w, k, digits)` — checked up
+    /// front with the same message as
+    /// [`LanePackedB::pack_in`](crate::fast::pack::LanePackedB::pack_in),
+    /// before any narrowing work.
+    pub fn pack_in(
+        lane: LaneId,
+        b: &[u64],
+        k: usize,
+        n: usize,
+        w: u32,
+        digits: u32,
+    ) -> LanePackedKmmB {
+        assert!(
+            crate::fast::lane::lane_exact(lane, w, k, digits),
+            "lane {}: not provably exact for w={w} at depth k={k} \
+             (storage {} bits, accumulator {} bits < required {})",
+            lane.name(),
+            lane.elem_bits(),
+            lane.acc_bits(),
+            required_acc_bits(w, k, digits)
+        );
+        match lane {
+            LaneId::U16 => LanePackedKmmB::U16(PackedKmmB::pack(
+                &Kernel8x4,
+                &narrow_plane::<u16>(b),
+                k,
+                n,
+                w,
+                digits,
+            )),
+            LaneId::U32 => LanePackedKmmB::U32(PackedKmmB::pack(
+                &Kernel8x4,
+                &narrow_plane::<u32>(b),
+                k,
+                n,
+                w,
+                digits,
+            )),
+            LaneId::U64 => LanePackedKmmB::U64(PackedKmmB::pack(&Kernel8x4, b, k, n, w, digits)),
+        }
+    }
+
+    /// Decompose and pack `b` into the narrowest lane that is provably
+    /// exact for the `(w, k, digits)` decomposition — the same
+    /// [`select_lane`] rule the serving path uses, so pack-time and
+    /// serve-time lanes agree by construction.
+    pub fn pack_select(b: &[u64], k: usize, n: usize, w: u32, digits: u32) -> LanePackedKmmB {
+        let lane = select_lane(w, k, digits)
+            .unwrap_or_else(|| panic!("no lane serves w={w} (engine window exceeded)"));
+        LanePackedKmmB::pack_in(lane, b, k, n, w, digits)
+    }
+
+    /// The lane the planes were packed for.
+    pub fn lane(&self) -> LaneId {
+        match self {
+            LanePackedKmmB::U16(_) => LaneId::U16,
+            LanePackedKmmB::U32(_) => LaneId::U32,
+            LanePackedKmmB::U64(_) => LaneId::U64,
+        }
+    }
+
+    /// Digit count of the cached decomposition.
+    pub fn digits(&self) -> u32 {
+        match self {
+            LanePackedKmmB::U16(p) => p.digits(),
+            LanePackedKmmB::U32(p) => p.digits(),
+            LanePackedKmmB::U64(p) => p.digits(),
+        }
+    }
+
+    /// Element bitwidth the planes were split at.
+    pub fn w(&self) -> u32 {
+        match self {
+            LanePackedKmmB::U16(p) => p.w(),
+            LanePackedKmmB::U32(p) => p.w(),
+            LanePackedKmmB::U64(p) => p.w(),
+        }
+    }
+
+    /// B's row count (the GEMM depth `k`).
+    pub fn rows(&self) -> usize {
+        match self {
+            LanePackedKmmB::U16(p) => p.rows(),
+            LanePackedKmmB::U32(p) => p.rows(),
+            LanePackedKmmB::U64(p) => p.rows(),
+        }
+    }
+
+    /// B's column count (the GEMM width `n`).
+    pub fn cols(&self) -> usize {
+        match self {
+            LanePackedKmmB::U16(p) => p.cols(),
+            LanePackedKmmB::U32(p) => p.cols(),
+            LanePackedKmmB::U64(p) => p.cols(),
+        }
+    }
+
+    /// Total owned size of all packed leaf planes in bytes.
+    pub fn bytes(&self) -> usize {
+        match self {
+            LanePackedKmmB::U16(p) => p.bytes(),
+            LanePackedKmmB::U32(p) => p.bytes(),
+            LanePackedKmmB::U64(p) => p.bytes(),
+        }
+    }
+
+    /// Serve `C = A·B` against the cached digit-plane tree across up to
+    /// `threads` workers, narrowing the `u64`-boundary activation into
+    /// the entry's lane and widening the result back to `u128`.
+    pub fn kmm(&self, a: &[u64], m: usize, threads: usize) -> Vec<u128> {
+        match self {
+            LanePackedKmmB::U16(p) => widen_acc::<u16>(kmm_prepacked_threads(
+                &Kernel8x4,
+                &narrow_plane::<u16>(a),
+                p,
+                m,
+                threads,
+            )),
+            LanePackedKmmB::U32(p) => widen_acc::<u32>(kmm_prepacked_threads(
+                &Kernel8x4,
+                &narrow_plane::<u32>(a),
+                p,
+                m,
+                threads,
+            )),
+            LanePackedKmmB::U64(p) => kmm_prepacked_threads(&Kernel8x4, a, p, m, threads),
+        }
     }
 }
 
@@ -382,7 +575,6 @@ fn kmm_prepacked_rec<K: Kernel + Sync>(
 mod tests {
     use super::*;
     use crate::fast::gemm::gemm;
-    use crate::fast::kernel::Kernel8x4;
     use crate::util::prop::{forall, prop_assert_eq, Config};
     use crate::util::rng::Rng;
 
@@ -409,6 +601,29 @@ mod tests {
                 gemm(&Kernel8x4, &a, &b, m, k, n),
                 &format!("fast KMM_{digits}^[{w}] == fast MM ({m}x{k}x{n})"),
             )
+        });
+    }
+
+    #[test]
+    fn kmm_narrow_lane_matches_u64_lane_prop() {
+        // The full digit recursion on the u16 and u32 lanes agrees
+        // bit-for-bit with the u64 lane wherever the headroom contract
+        // admits the narrow lane.
+        forall(Config::default().cases(50), |rng| {
+            let digits = *rng.pick(&[1u32, 2, 4]);
+            let w = 8u32.max(digits);
+            let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            let want = kmm(&Kernel8x4, &a, &b, m, k, n, w, digits);
+            let a16 = narrow_plane::<u16>(&a);
+            let b16 = narrow_plane::<u16>(&b);
+            let got16 = widen_acc::<u16>(kmm(&Kernel8x4, &a16, &b16, m, k, n, w, digits));
+            prop_assert_eq(got16, want.clone(), &format!("u16 KMM_{digits} ({m}x{k}x{n})"))?;
+            let a32 = narrow_plane::<u32>(&a);
+            let b32 = narrow_plane::<u32>(&b);
+            let got32 = widen_acc::<u32>(kmm(&Kernel8x4, &a32, &b32, m, k, n, w, digits));
+            prop_assert_eq(got32, want, &format!("u32 KMM_{digits} ({m}x{k}x{n})"))
         });
     }
 
@@ -507,6 +722,7 @@ mod tests {
         let packed = PackedKmmB::pack(&Kernel8x4, &b, k, n, w, 2);
         assert_eq!((packed.rows(), packed.cols()), (k, n));
         assert_eq!((packed.w(), packed.digits()), (w, 2));
+        assert_eq!(packed.lane(), LaneId::U64);
         assert!(packed.bytes() > 0);
         for _ in 0..3 {
             let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
@@ -536,26 +752,63 @@ mod tests {
     }
 
     #[test]
+    fn lane_packed_kmm_serves_all_lanes_identically() {
+        let mut rng = Rng::new(23);
+        let (m, k, n, w, digits) = (7usize, 19usize, 6usize, 8u32, 2u32);
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let selected = LanePackedKmmB::pack_select(&b, k, n, w, digits);
+        assert_eq!(selected.lane(), LaneId::U16, "w=8 digit planes ride u16");
+        assert_eq!((selected.w(), selected.digits()), (w, digits));
+        assert_eq!((selected.rows(), selected.cols()), (k, n));
+        let wide = LanePackedKmmB::pack_in(LaneId::U64, &b, k, n, w, digits);
+        assert_eq!(wide.bytes(), 4 * selected.bytes(), "u16 plane tree is 4x smaller");
+        let want = wide.kmm(&a, m, 1);
+        assert_eq!(selected.kmm(&a, m, 1), want);
+        assert_eq!(selected.kmm(&a, m, 3), want);
+        let mid = LanePackedKmmB::pack_in(LaneId::U32, &b, k, n, w, digits);
+        assert_eq!(mid.kmm(&a, m, 2), want);
+    }
+
+    #[test]
     #[should_panic(expected = "invalid KMM config")]
     fn kmm_prepacked_rejects_invalid_config() {
-        PackedKmmB::pack(&Kernel8x4, &[1], 1, 1, 8, 3);
+        PackedKmmB::<u64>::pack(&Kernel8x4, &[1], 1, 1, 8, 3);
     }
 
     #[test]
     #[should_panic(expected = "invalid KMM config")]
     fn kmm_threads_rejects_invalid_config() {
-        kmm_threads(&Kernel8x4, &[1], &[1], 1, 1, 1, 8, 3, 4);
+        kmm_threads(&Kernel8x4, &[1u64], &[1u64], 1, 1, 1, 8, 3, 4);
     }
 
     #[test]
     #[should_panic(expected = "invalid KMM config")]
     fn kmm_rejects_non_power_of_two_digits() {
-        kmm(&Kernel8x4, &[1], &[1], 1, 1, 1, 8, 3);
+        kmm(&Kernel8x4, &[1u64], &[1u64], 1, 1, 1, 8, 3);
     }
 
     #[test]
     #[should_panic(expected = "exceeds the fast engine")]
     fn kmm_rejects_overwide() {
-        kmm(&Kernel8x4, &[1], &[1], 1, 1, 1, 40, 2);
+        kmm(&Kernel8x4, &[1u64], &[1u64], 1, 1, 1, 40, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulator headroom exceeded")]
+    fn kmm_rejects_lane_past_its_headroom_bound() {
+        // w=16 on the u16 lane already saturates the u32 accumulator at
+        // k=1; k=2 is one step past the bound and must refuse, not wrap.
+        let a = vec![0u16; 2];
+        let b = vec![0u16; 2];
+        kmm(&Kernel8x4, &a, &b, 1, 2, 1, 16, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "do not fit")]
+    fn kmm_rejects_overwide_for_lane_storage() {
+        // w=20 operands cannot be stored in the u16 lane at all.
+        let a = vec![0u16; 1];
+        kmm(&Kernel8x4, &a, &a, 1, 1, 1, 20, 2);
     }
 }

@@ -1,0 +1,435 @@
+//! Width-specialized element lanes: the storage/accumulator pairs the
+//! fast engine is generic over, and the proven-exact rule that picks one.
+//!
+//! The paper's core argument is that arithmetic cost should scale with
+//! operand *bitwidth* — its precision-scalable architectures size every
+//! datapath to `w` (Tables 1/3, §IV). The software mirror is an
+//! [`Element`] lane: a storage type for packed operands plus the
+//! accumulator type its widening multiply feeds. Three lanes cover the
+//! engine's `w ≤ 32` window:
+//!
+//! | lane  | storage | accumulator | exact while                      |
+//! |-------|---------|-------------|----------------------------------|
+//! | `u16` | 16 bit  | 32 bit      | `w ≤ 16` and `2w + ⌈log₂k⌉ ≤ 32` |
+//! | `u32` | 32 bit  | 64 bit      | `w ≤ 32` and `2w + ⌈log₂k⌉ ≤ 64` |
+//! | `u64` | 64 bit  | 128 bit     | `w ≤ 32` (headroom for any `k`)  |
+//!
+//! A `w = 8` model trace served on the `u16` lane moves 4× fewer packed
+//! bytes per B slab than the old always-`u64` hot path — the memory-
+//! traffic analogue of sizing the multiplier to the digit width.
+//!
+//! # The selection rule
+//!
+//! [`select_lane`]`(w, k, digits)` returns the **narrowest** lane whose
+//! accumulator headroom provably covers the computation, via
+//! [`required_acc_bits`]: a `w`-bit GEMM of depth `k` produces values
+//! `≤ k·(2^w−1)² < 2^(2w + ⌈log₂k⌉)`, and every Karatsuba recombination
+//! term (`C1 ≪ 2⌈w/2⌉`, `(Cs−C1−C0) ≪ ⌈w/2⌉`, `C0`) is a non-negative
+//! summand of that product, so it is bounded by the same quantity. The
+//! rule walks the digit-recursion tree anyway (sum planes grow to
+//! `⌈w/2⌉+1` bits per level) so the bound is computed, not assumed; the
+//! boundary tests in `tests/integration_lanes.rs` drive all-ones
+//! operands at each lane's exact limit and one step past it.
+
+use crate::algo::bits;
+use crate::util::error::{bail, Result};
+
+/// Largest operand bitwidth any lane guarantees exact results for: at
+/// `w ≤ 32` the `u64` lane's 128-bit accumulator covers
+/// `2w + ⌈log₂ k⌉` for every representable depth. Wider inputs (up to
+/// the paper's w = 64) stay on the exact [`I256`] reference path.
+///
+/// [`I256`]: crate::util::wide::I256
+pub const MAX_W: u32 = 32;
+
+/// Runtime identifier of an [`Element`] lane — what the coordinator
+/// records per packed weight and the benches report per section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LaneId {
+    /// `u16` storage, `u32` accumulation.
+    U16,
+    /// `u32` storage, `u64` accumulation.
+    U32,
+    /// `u64` storage, `u128` accumulation (the former always-on path).
+    U64,
+}
+
+impl LaneId {
+    /// Every lane, narrowest first — the order [`select_lane`] probes.
+    pub const ALL: [LaneId; 3] = [LaneId::U16, LaneId::U32, LaneId::U64];
+
+    /// Storage bits of one packed operand element.
+    pub fn elem_bits(self) -> u32 {
+        match self {
+            LaneId::U16 => 16,
+            LaneId::U32 => 32,
+            LaneId::U64 => 64,
+        }
+    }
+
+    /// Accumulator bits (always `2 × elem_bits`).
+    pub fn acc_bits(self) -> u32 {
+        2 * self.elem_bits()
+    }
+
+    /// Short label for registries, logs, and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            LaneId::U16 => "u16",
+            LaneId::U32 => "u32",
+            LaneId::U64 => "u64",
+        }
+    }
+}
+
+impl LaneId {
+    /// The one `Option<LaneId>` → JSON convention every schema shares
+    /// (`BENCH_hotpath.json` sections, `BENCH_infer.json` layers):
+    /// `"u16"|"u32"|"u64"` for a lane, `null` for sections/backends
+    /// outside the lane-routed engine.
+    pub fn to_json(lane: Option<LaneId>) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        match lane {
+            Some(l) => Json::Str(l.name().to_string()),
+            None => Json::Null,
+        }
+    }
+}
+
+impl std::fmt::Display for LaneId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One storage/accumulator lane the engine monomorphizes over: packed
+/// panels hold `Self`, register tiles accumulate in `Self::Acc`, and
+/// the widening multiply bridges the two. Implemented for `u16`, `u32`,
+/// and `u64`; the kernels, packing, and both GEMM drivers are generic
+/// over it.
+pub trait Element:
+    Copy + Default + Send + Sync + PartialEq + Eq + std::fmt::Debug + 'static
+{
+    /// Accumulator type (twice the storage width, so one widening
+    /// multiply per MAC and headroom per [`required_acc_bits`]).
+    type Acc: Copy + Default + Send + Sync + PartialEq + Eq + std::fmt::Debug + 'static;
+
+    /// Storage bits.
+    const BITS: u32;
+    /// Accumulator bits.
+    const ACC_BITS: u32;
+    /// The runtime identifier of this lane.
+    const LANE: LaneId;
+
+    /// Narrow a `u64` boundary value into lane storage (callers
+    /// guarantee it fits; debug builds assert).
+    fn from_u64(x: u64) -> Self;
+
+    /// Widen lane storage back to the `u64` boundary type.
+    fn to_u64(self) -> u64;
+
+    /// `acc + a·b` via the lane's widening multiply.
+    fn madd(acc: Self::Acc, a: Self, b: Self) -> Self::Acc;
+
+    /// Accumulator addition (exact under the lane contract).
+    fn acc_add(x: Self::Acc, y: Self::Acc) -> Self::Acc;
+
+    /// Accumulator subtraction (the Karatsuba cross term is
+    /// elementwise non-negative, §III-B.4, so this never underflows).
+    fn acc_sub(x: Self::Acc, y: Self::Acc) -> Self::Acc;
+
+    /// Accumulator left shift (digit recombination).
+    fn acc_shl(x: Self::Acc, s: u32) -> Self::Acc;
+
+    /// Widen an accumulator to the `u128` serving boundary.
+    fn acc_to_u128(x: Self::Acc) -> u128;
+}
+
+macro_rules! impl_element {
+    ($elem:ty, $acc:ty, $lane:expr) => {
+        impl Element for $elem {
+            type Acc = $acc;
+            const BITS: u32 = <$elem>::BITS;
+            const ACC_BITS: u32 = <$acc>::BITS;
+            const LANE: LaneId = $lane;
+
+            #[inline(always)]
+            fn from_u64(x: u64) -> Self {
+                debug_assert!(
+                    x <= <$elem>::MAX as u64,
+                    "value {x:#x} exceeds the {} lane's storage",
+                    $lane.name()
+                );
+                x as $elem
+            }
+
+            #[inline(always)]
+            fn to_u64(self) -> u64 {
+                self as u64
+            }
+
+            #[inline(always)]
+            fn madd(acc: $acc, a: $elem, b: $elem) -> $acc {
+                acc + a as $acc * b as $acc
+            }
+
+            #[inline(always)]
+            fn acc_add(x: $acc, y: $acc) -> $acc {
+                x + y
+            }
+
+            #[inline(always)]
+            fn acc_sub(x: $acc, y: $acc) -> $acc {
+                x - y
+            }
+
+            #[inline(always)]
+            fn acc_shl(x: $acc, s: u32) -> $acc {
+                x << s
+            }
+
+            #[inline(always)]
+            fn acc_to_u128(x: $acc) -> u128 {
+                x as u128
+            }
+        }
+    };
+}
+
+impl_element!(u16, u32, LaneId::U16);
+impl_element!(u32, u64, LaneId::U32);
+impl_element!(u64, u128, LaneId::U64);
+
+/// `⌈log₂ k⌉` for the depth term of the headroom bound (`0` for
+/// `k ≤ 1`): the extra bits `k`-deep accumulation can add on top of one
+/// product's `2w`.
+pub fn ceil_log2(k: usize) -> u32 {
+    if k <= 1 {
+        0
+    } else {
+        usize::BITS - (k - 1).leading_zeros()
+    }
+}
+
+/// Accumulator bits a `(w, k, digits)` computation provably needs:
+/// `2w + ⌈log₂ k⌉` at this node (values are `≤ k·(2^w−1)²`, and each
+/// shifted Karatsuba recombination term is a non-negative summand of
+/// that product), recursed over the digit tree's high / digit-sum /
+/// low sub-widths so sum-plane growth (`⌈w/2⌉ + 1` bits per level) is
+/// measured rather than assumed. `digits = 1` is the plain blocked
+/// GEMM.
+pub fn required_acc_bits(w: u32, k: usize, digits: u32) -> u32 {
+    let here = 2 * w + ceil_log2(k);
+    if digits <= 1 {
+        return here;
+    }
+    let (wh, ws, wl) = bits::karatsuba_subwidths(w);
+    here.max(required_acc_bits(wh, k, digits / 2))
+        .max(required_acc_bits(ws, k, digits / 2))
+        .max(required_acc_bits(wl, k, digits / 2))
+}
+
+/// Whether `lane` is provably exact for a `w`-bit, depth-`k` GEMM under
+/// the `digits`-digit decomposition: the operands (and every digit
+/// plane, all of which are `≤ w` bits) fit the lane's storage, and the
+/// accumulator covers [`required_acc_bits`]. `w` outside the engine
+/// window (`1..=`[`MAX_W`]) is exact on no lane.
+pub fn lane_exact(lane: LaneId, w: u32, k: usize, digits: u32) -> bool {
+    w >= 1
+        && w <= MAX_W
+        && w <= lane.elem_bits()
+        && required_acc_bits(w, k, digits) <= lane.acc_bits()
+}
+
+/// The narrowest lane that is [`lane_exact`] for `(w, k, digits)`, or
+/// `None` when `w` is outside the engine window. For any `w ≤`
+/// [`MAX_W`] the `u64` lane qualifies (its 128-bit accumulator covers
+/// every representable depth), so in-window selection never fails.
+pub fn select_lane(w: u32, k: usize, digits: u32) -> Option<LaneId> {
+    LaneId::ALL
+        .into_iter()
+        .find(|&lane| lane_exact(lane, w, k, digits))
+}
+
+/// The one width-validation gate every fast-engine entry point shares
+/// (the drivers, the weight registry, and backend dispatch all route
+/// through it, so rejections carry one message instead of three
+/// diverging ones). `Err` for `w = 0` or `w >` [`MAX_W`].
+pub fn check_width(w: u32) -> Result<()> {
+    if w == 0 {
+        bail!("w=0 is outside the fast engine's lane window (1..={MAX_W} bits)");
+    }
+    if w > MAX_W {
+        bail!(
+            "w={w} exceeds the fast engine's lane window (1..={MAX_W} bits): even the widest \
+             u64/u128 lane's accumulator ceiling cannot serve it exactly; use the exact \
+             algo:: (I256) path"
+        );
+    }
+    Ok(())
+}
+
+/// Narrow a `u64`-boundary operand into lane storage (the `O(len)`
+/// staging cost a narrow lane pays once per operand, repaid by moving
+/// `elem_bits/64` of the bytes through the whole blocked hot loop).
+pub fn narrow_plane<E: Element>(src: &[u64]) -> Vec<E> {
+    src.iter().map(|&x| E::from_u64(x)).collect()
+}
+
+/// Widen a lane's accumulator buffer to the `u128` serving boundary.
+pub fn widen_acc<E: Element>(src: Vec<E::Acc>) -> Vec<u128> {
+    src.into_iter().map(E::acc_to_u128).collect()
+}
+
+/// [`crate::algo::bits::split_planes_vec`] over lane storage: split
+/// every element at width `w` into `(hi, lo)` digit planes, delegating
+/// to the one shared [`bits::split`] definition per element.
+pub fn split_planes_elems<E: Element>(src: &[E], w: u32) -> (Vec<E>, Vec<E>) {
+    let mut hi = Vec::with_capacity(src.len());
+    let mut lo = Vec::with_capacity(src.len());
+    for &x in src {
+        let (h, l) = bits::split(x.to_u64(), w);
+        hi.push(E::from_u64(h));
+        lo.push(E::from_u64(l));
+    }
+    (hi, lo)
+}
+
+/// [`crate::algo::bits::digit_sum_plane`] over lane storage: the
+/// elementwise `hi + lo` digit-sum plane (`⌈w/2⌉ + 1 ≤ w` bits, so it
+/// always fits the lane that held the operand).
+pub fn digit_sum_plane_elems<E: Element>(hi: &[E], lo: &[E]) -> Vec<E> {
+    assert_eq!(hi.len(), lo.len());
+    hi.iter()
+        .zip(lo)
+        .map(|(&h, &l)| E::from_u64(h.to_u64() + l.to_u64()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_tables_are_consistent() {
+        for lane in LaneId::ALL {
+            assert_eq!(lane.acc_bits(), 2 * lane.elem_bits(), "{lane}");
+        }
+        assert_eq!(<u16 as Element>::BITS, 16);
+        assert_eq!(<u16 as Element>::ACC_BITS, 32);
+        assert_eq!(<u32 as Element>::LANE, LaneId::U32);
+        assert_eq!(<u64 as Element>::LANE.name(), "u64");
+    }
+
+    #[test]
+    fn ceil_log2_examples() {
+        assert_eq!(ceil_log2(0), 0);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1 << 20), 20);
+        assert_eq!(ceil_log2((1 << 20) + 1), 21);
+    }
+
+    #[test]
+    fn required_bits_match_the_closed_form_at_the_root() {
+        // The recursion's max is always the root term 2w + ceil(log2 k)
+        // (every sub-width is <= w for w >= 2), so the tree walk must
+        // agree with the closed form while still being the thing we
+        // trust if the split convention ever changes.
+        for w in 2..=32 {
+            for k in [1usize, 2, 100, 4096] {
+                for digits in [1u32, 2, 4, 8] {
+                    if digits > w {
+                        continue;
+                    }
+                    assert_eq!(
+                        required_acc_bits(w, k, digits),
+                        2 * w + ceil_log2(k),
+                        "w={w} k={k} digits={digits}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn selector_picks_the_narrowest_exact_lane() {
+        // w=8: u16 storage fits and 16 + ceil(log2 k) <= 32 holds up to
+        // k = 2^16, so every model-trace depth rides the narrow lane.
+        assert_eq!(select_lane(8, 160, 1), Some(LaneId::U16));
+        assert_eq!(select_lane(8, 1 << 16, 1), Some(LaneId::U16));
+        assert_eq!(select_lane(8, (1 << 16) + 1, 1), Some(LaneId::U32));
+        // w=16 at k=1 exactly saturates the u16 accumulator (32 bits);
+        // any depth pushes it to u32.
+        assert_eq!(select_lane(16, 1, 1), Some(LaneId::U16));
+        assert_eq!(select_lane(16, 2, 1), Some(LaneId::U32));
+        // w=32 always needs the u128 accumulator beyond trivial depth.
+        assert_eq!(select_lane(32, 64, 2), Some(LaneId::U64));
+        // Out-of-window widths select nothing.
+        assert_eq!(select_lane(0, 4, 1), None);
+        assert_eq!(select_lane(33, 4, 1), None);
+    }
+
+    #[test]
+    fn selection_is_digit_aware_only_through_headroom() {
+        // The digit tree's sub-widths never exceed the root, so the
+        // same lane serves MM and KMM at equal (w, k).
+        for w in [4u32, 8, 16, 32] {
+            for k in [1usize, 7, 96, 4096] {
+                assert_eq!(select_lane(w, k, 1), select_lane(w, k, 2), "w={w} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn check_width_messages_are_the_shared_gate() {
+        assert!(check_width(1).is_ok());
+        assert!(check_width(MAX_W).is_ok());
+        let err = check_width(0).unwrap_err().to_string();
+        assert!(err.contains("window"), "{err}");
+        let err = check_width(MAX_W + 1).unwrap_err().to_string();
+        // The one message all three former call sites' tests key on.
+        assert!(err.contains("exceeds the fast engine"), "{err}");
+        assert!(err.contains("window"), "{err}");
+        assert!(err.contains("ceiling"), "{err}");
+    }
+
+    #[test]
+    fn narrow_widen_roundtrip() {
+        let src: Vec<u64> = vec![0, 1, 255, 65535];
+        let narrow: Vec<u16> = narrow_plane(&src);
+        assert_eq!(narrow, vec![0u16, 1, 255, 65535]);
+        assert_eq!(narrow.iter().map(|&x| x.to_u64()).collect::<Vec<_>>(), src);
+        let acc: Vec<u32> = vec![7, u32::MAX];
+        assert_eq!(widen_acc::<u16>(acc), vec![7u128, u32::MAX as u128]);
+    }
+
+    #[test]
+    fn lane_split_matches_bits_split() {
+        let src: Vec<u32> = vec![0xAE, 0x12, 0xFF];
+        let (hi, lo) = split_planes_elems(&src, 8);
+        assert_eq!(hi, vec![0xAu32, 0x1, 0xF]);
+        assert_eq!(lo, vec![0xEu32, 0x2, 0xF]);
+        let sums = digit_sum_plane_elems(&hi, &lo);
+        assert_eq!(sums, vec![0x18u32, 0x3, 0x1E]);
+    }
+
+    #[test]
+    fn lane_json_convention() {
+        use crate::util::json::Json;
+        assert_eq!(LaneId::to_json(Some(LaneId::U16)), Json::Str("u16".into()));
+        assert_eq!(LaneId::to_json(None), Json::Null);
+    }
+
+    #[test]
+    fn madd_is_the_widening_multiply() {
+        assert_eq!(<u16 as Element>::madd(1, u16::MAX, u16::MAX), 1 + 0xFFFE_0001);
+        assert_eq!(
+            <u64 as Element>::madd(0, u64::MAX, 2),
+            u64::MAX as u128 * 2
+        );
+    }
+}

@@ -1,47 +1,79 @@
 //! The fast GEMM execution engine: a production software hot path for
 //! integer matrix multiplication, with both conventional and Karatsuba
-//! digit-slice drivers.
+//! digit-slice drivers, width-specialized over element-storage lanes.
 //!
 //! Everything in [`crate::algo`] is *instrumented ground truth*: every
 //! element flows through [`I256`] accumulators and a [`Tally`], which
 //! makes those implementations ideal for validating complexity claims
 //! and useless as a serving hot path. This module is the opposite
-//! trade: native `u64`/`u128` arithmetic, no tallying, cache-aware
-//! blocking — and bit-exact agreement with the references, enforced by
-//! property tests (`tests/integration_fast.rs`).
+//! trade: native lane arithmetic, no tallying, cache-aware blocking —
+//! and bit-exact agreement with the references, enforced by property
+//! tests (`tests/integration_fast.rs`, `tests/integration_lanes.rs`).
 //!
 //! # Design
 //!
-//! Three layers, innermost first (the rten/BLIS shape):
+//! Four layers, innermost first (the rten/BLIS shape):
 //!
+//! - [`lane`] — the [`Element`] lanes: storage/accumulator type pairs
+//!   (`u16/u32`, `u32/u64`, `u64/u128`) the whole stack is generic
+//!   over, the proven-exact [`select_lane`] rule, and the shared
+//!   [`check_width`] gate.
 //! - [`kernel`] — the [`Kernel`] trait: fixed `MR × NR` register-tile
 //!   microkernels whose accumulators stay in registers across the whole
-//!   depth loop. [`Kernel8x4`] is the default; [`Kernel1x1`] is the
-//!   scalar cross-check.
-//! - [`pack`] — operand packing into depth-major panels: contiguous
-//!   kernel reads, and zero-padded edges so the microkernel never
-//!   branches on bounds.
+//!   depth loop, monomorphized per lane. [`Kernel8x4`] is the default;
+//!   [`Kernel1x1`] is the scalar cross-check.
+//! - [`pack`] — operand packing into depth-major panels in the lane's
+//!   storage width: contiguous kernel reads, zero-padded edges so the
+//!   microkernel never branches on bounds.
 //! - [`gemm`] — the blocked driver: `NC`-wide B slabs, `KC`-deep packed
 //!   blocks, `MC`-tall packed A blocks, register tiles innermost; each
-//!   depth block accumulates into the shared `u128` output buffer.
+//!   depth block accumulates into the shared lane-accumulator output.
 //!
 //! # The KMM digit-slice driver
 //!
 //! [`kmm`] lifts Algorithm 4 onto this engine: split `w`-bit inputs
-//! into digit planes (via [`crate::algo::bits::split_planes`], the same
-//! primitive the exact layer uses), run `A1·B1`, `As·Bs`, `A0·B0` as
-//! three native sub-GEMMs, and recombine with the paper's shifts. Per
-//! recursion level that is 3 sub-GEMMs against the conventional 4 —
-//! the multiplication saving the custom hardware exploits — while the
-//! extra digit-plane additions stay O(d²).
+//! into digit planes (the same [`crate::algo::bits::split`] definition
+//! the exact layer uses), run `A1·B1`, `As·Bs`, `A0·B0` as three native
+//! sub-GEMMs, and recombine with the paper's shifts. Per recursion
+//! level that is 3 sub-GEMMs against the conventional 4 — the
+//! multiplication saving the custom hardware exploits — while the extra
+//! digit-plane additions stay O(d²).
 //!
-//! On *software*, a `u64` multiplier costs the same at every operand
-//! width, so the digit-slice detour does not pay off the way it does in
-//! hardware; `benches/hotpath.rs` measures exactly this trade
-//! (fast-KMM vs fast-MM vs the tallied references). The point of
-//! `fast::kmm` is a bit-exact, natively-fast executable model of the
-//! decomposition the accelerator runs, behind the same [`GemmBackend`]
-//! interface the cycle-model backends serve.
+//! # Lane selection
+//!
+//! The paper's precision-scalable architectures size every datapath to
+//! the operand width `w` (Tables 1/3, §IV); the software mirror is to
+//! pick the narrowest [`Element`] lane whose accumulator provably
+//! covers the computation. [`select_lane`]`(w, k, digits)` applies the
+//! headroom rule [`required_acc_bits`]`(w, k, digits) ≤ acc_bits` —
+//! `2w` bits per product, `⌈log₂ k⌉` bits of depth accumulation, with
+//! the Karatsuba recombination shifts bounded by the same quantity
+//! because every shifted term is a non-negative summand of the final
+//! product:
+//!
+//! | lane  | storage | accumulator | exact while                        |
+//! |-------|---------|-------------|------------------------------------|
+//! | `u16` | 16 bit  | `u32`       | `w ≤ 16` and `2w + ⌈log₂ k⌉ ≤ 32`  |
+//! | `u32` | 32 bit  | `u64`       | `w ≤ 32` and `2w + ⌈log₂ k⌉ ≤ 64`  |
+//! | `u64` | 64 bit  | `u128`      | `w ≤ 32`, any representable depth  |
+//!
+//! Concretely: `w = 8` model traces (ResNet-50/VGG-16) ride the `u16`
+//! lane up to `k = 2¹⁶` deep — 4× less packed-B traffic per slab and a
+//! 4×-narrower multiplier than the old always-`u64` path — while
+//! `w = 16` at practical depths rides `u32`, and `w = 32` stays on
+//! `u64/u128`. Every lane is bit-exact against `algo::mm1`/`algo::kmm`
+//! (property grid in `tests/integration_lanes.rs`, including all-ones
+//! operands at each lane's exact boundary); widths past [`MAX_W`] (up
+//! to the paper's w = 64) stay on the exact [`I256`] reference path,
+//! and [`check_width`] is the one gate every entry point shares.
+//!
+//! The [`mm_lane`]/[`kmm_lane`] routers apply the rule to
+//! `u64`-boundary operands (narrow → compute → widen; the `O(m·k+k·n)`
+//! staging is repaid across the `O(m·k·n)` hot loop), and
+//! [`mm_in_lane`]/[`kmm_in_lane`] force an explicit lane for
+//! cross-lane benchmarks. The coordinator records the selected lane
+//! per packed weight and re-routes or falls back when a request's lane
+//! disagrees with the cache.
 //!
 //! # Parallel execution
 //!
@@ -63,52 +95,54 @@
 //! [`PackedB`] packs a stationary B operand once (slab-for-slab
 //! identical to what the fresh path packs per call), and
 //! [`PackedKmmB`] additionally caches the full Karatsuba digit-plane
-//! decomposition, so cached serving skips both the `O(k·n)` per-call
-//! packing and the digit-plane formation. The
-//! `gemm_prepacked{,_threads}` and `kmm_prepacked{,_threads}` drivers
-//! are bit-exact with their fresh-pack counterparts at every shape and
-//! thread count (enforced by `tests/integration_prepack.rs`). The
-//! coordinator's [`WeightRegistry`] builds on these to serve registered
-//! weights across server shards.
-//!
-//! # Width contract
-//!
-//! The engine is exact for operands up to [`MAX_W`] (= 32) bits: a
-//! product fits 64 bits, `u128` accumulation has ≥ 2⁶⁴ summands of
-//! headroom, and every Karatsuba recombination shift keeps values below
-//! 2¹²⁸. Wider inputs (up to the paper's w = 64) stay on the exact
-//! [`I256`] reference path.
+//! decomposition — both in the selected lane's storage, wrapped in
+//! [`LanePackedB`]/[`LanePackedKmmB`] runtime tags so the coordinator's
+//! [`WeightRegistry`] records which lane each weight was packed for and
+//! verifies the match before serving. The `gemm_prepacked{,_threads}`
+//! and `kmm_prepacked{,_threads}` drivers are bit-exact with their
+//! fresh-pack counterparts at every shape, lane, and thread count
+//! (enforced by `tests/integration_prepack.rs`).
 //!
 //! [`I256`]: crate::util::wide::I256
 //! [`Tally`]: crate::algo::opcount::Tally
-//! [`GemmBackend`]: crate::coordinator::dispatch::GemmBackend
 //! [`WeightRegistry`]: crate::coordinator::registry::WeightRegistry
 //! [`Kernel`]: kernel::Kernel
 //! [`Kernel8x4`]: kernel::Kernel8x4
 //! [`Kernel1x1`]: kernel::Kernel1x1
 //! [`kmm`]: kmm::kmm
+//! [`Element`]: lane::Element
+//! [`required_acc_bits`]: lane::required_acc_bits
 
 pub mod gemm;
 pub mod kernel;
 pub mod kmm;
+pub mod lane;
 pub mod pack;
 
 pub use gemm::{
     gemm_into, gemm_into_threads, gemm_prepacked, gemm_prepacked_into,
     gemm_prepacked_into_threads, gemm_prepacked_threads, Blocking,
 };
-pub use kernel::{Kernel, Kernel1x1, Kernel8x4, MAX_W};
-pub use kmm::PackedKmmB;
-pub use pack::PackedB;
+pub use kernel::{Kernel, Kernel1x1, Kernel8x4};
+pub use kmm::{LanePackedKmmB, PackedKmmB};
+pub use lane::{
+    check_width, lane_exact, required_acc_bits, select_lane, Element, LaneId, MAX_W,
+};
+pub use pack::{LanePackedB, PackedB};
 
-/// Conventional blocked GEMM with the default kernel and blocking:
-/// `C = A·B` over row-major `w ≤ 32`-bit inputs (see [`gemm::gemm`]).
+use lane::{narrow_plane, widen_acc};
+
+/// Conventional blocked GEMM with the default kernel and blocking on
+/// the `u64` lane: `C = A·B` over row-major `w ≤ 32`-bit inputs (see
+/// [`gemm::gemm`]). Width-aware callers should prefer [`mm_lane`],
+/// which routes through the narrowest exact lane.
 pub fn mm(a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<u128> {
     gemm::gemm(&Kernel8x4, a, b, m, k, n)
 }
 
-/// Karatsuba digit-slice GEMM with the default kernel: Algorithm 4 with
-/// `digits = 2^r` over the blocked driver (see [`kmm::kmm`]).
+/// Karatsuba digit-slice GEMM with the default kernel on the `u64`
+/// lane: Algorithm 4 with `digits = 2^r` over the blocked driver (see
+/// [`kmm::kmm`]). Width-aware callers should prefer [`kmm_lane`].
 pub fn kmm_digits(
     a: &[u64],
     b: &[u64],
@@ -149,4 +183,197 @@ pub fn kmm_digits_threads(
     threads: usize,
 ) -> Vec<u128> {
     kmm::kmm_threads(&Kernel8x4, a, b, m, k, n, w, digits, threads)
+}
+
+/// Conventional blocked GEMM on an explicit lane: narrow the
+/// `u64`-boundary operands into `lane` storage, run the blocked driver
+/// there, and widen the product back to `u128`. Panics unless
+/// [`lane_exact`]`(lane, w, k, 1)` — the same contract the KMM driver
+/// asserts — so a forced lane past its headroom bound refuses instead
+/// of silently wrapping. Use [`mm_lane`] to have the selector pick for
+/// you; this entry exists for cross-lane comparison (benches, boundary
+/// tests). Operands must fit `w` bits — checked in debug builds; in
+/// release the serving layers' `fits(w)` validation is the guard, and
+/// an out-of-contract value narrows with truncation.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_in_lane(
+    lane: LaneId,
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    threads: usize,
+) -> Vec<u128> {
+    debug_assert!(
+        a.iter().chain(b).all(|&x| crate::algo::bits::fits(x, w)),
+        "operand exceeds w={w} bits"
+    );
+    assert!(
+        lane_exact(lane, w, k, 1),
+        "lane {}: not provably exact for w={w} at depth k={k} \
+         (storage {} bits, accumulator {} bits < required {})",
+        lane.name(),
+        lane.elem_bits(),
+        lane.acc_bits(),
+        required_acc_bits(w, k, 1)
+    );
+    match lane {
+        LaneId::U16 => widen_acc::<u16>(gemm::gemm_threads(
+            &Kernel8x4,
+            &narrow_plane::<u16>(a),
+            &narrow_plane::<u16>(b),
+            m,
+            k,
+            n,
+            threads,
+        )),
+        LaneId::U32 => widen_acc::<u32>(gemm::gemm_threads(
+            &Kernel8x4,
+            &narrow_plane::<u32>(a),
+            &narrow_plane::<u32>(b),
+            m,
+            k,
+            n,
+            threads,
+        )),
+        LaneId::U64 => gemm::gemm_threads(&Kernel8x4, a, b, m, k, n, threads),
+    }
+}
+
+/// Karatsuba digit-slice GEMM on an explicit lane (see [`mm_in_lane`];
+/// the driver asserts the lane's headroom contract for `(w, k,
+/// digits)`).
+#[allow(clippy::too_many_arguments)]
+pub fn kmm_in_lane(
+    lane: LaneId,
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+    threads: usize,
+) -> Vec<u128> {
+    match lane {
+        LaneId::U16 => widen_acc::<u16>(kmm::kmm_threads(
+            &Kernel8x4,
+            &narrow_plane::<u16>(a),
+            &narrow_plane::<u16>(b),
+            m,
+            k,
+            n,
+            w,
+            digits,
+            threads,
+        )),
+        LaneId::U32 => widen_acc::<u32>(kmm::kmm_threads(
+            &Kernel8x4,
+            &narrow_plane::<u32>(a),
+            &narrow_plane::<u32>(b),
+            m,
+            k,
+            n,
+            w,
+            digits,
+            threads,
+        )),
+        LaneId::U64 => kmm::kmm_threads(&Kernel8x4, a, b, m, k, n, w, digits, threads),
+    }
+}
+
+/// Width-routed conventional GEMM: pick the narrowest lane that is
+/// provably exact for a `w`-bit depth-`k` GEMM ([`select_lane`]), run
+/// [`mm_in_lane`] there, and report which lane served. Panics when `w`
+/// is outside the engine window — serving layers gate with
+/// [`check_width`] first.
+pub fn mm_lane(
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    threads: usize,
+) -> (Vec<u128>, LaneId) {
+    let lane = select_lane(w, k, 1)
+        .unwrap_or_else(|| panic!("no lane serves w={w} (engine window exceeded)"));
+    (mm_in_lane(lane, a, b, m, k, n, w, threads), lane)
+}
+
+/// Width-routed Karatsuba digit-slice GEMM (see [`mm_lane`]).
+#[allow(clippy::too_many_arguments)]
+pub fn kmm_lane(
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+    threads: usize,
+) -> (Vec<u128>, LaneId) {
+    let lane = select_lane(w, k, digits)
+        .unwrap_or_else(|| panic!("no lane serves w={w} (engine window exceeded)"));
+    (kmm_in_lane(lane, a, b, m, k, n, w, digits, threads), lane)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lane_routers_agree_with_the_u64_wrappers() {
+        let mut rng = Rng::new(41);
+        for (w, digits) in [(4u32, 1u32), (8, 2), (16, 2), (32, 4)] {
+            let (m, k, n) = (9usize, 14usize, 7usize);
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            let (got_mm, lane_mm) = mm_lane(&a, &b, m, k, n, w, 2);
+            assert_eq!(got_mm, mm(&a, &b, m, k, n), "mm w={w}");
+            assert_eq!(Some(lane_mm), select_lane(w, k, 1));
+            if digits > 1 {
+                let (got_kmm, lane_kmm) = kmm_lane(&a, &b, m, k, n, w, digits, 2);
+                assert_eq!(got_kmm, kmm_digits(&a, &b, m, k, n, w, digits), "kmm w={w}");
+                assert_eq!(Some(lane_kmm), select_lane(w, k, digits));
+            }
+        }
+    }
+
+    #[test]
+    fn forced_lanes_are_bit_identical_where_exact() {
+        let mut rng = Rng::new(43);
+        let (m, k, n, w) = (11usize, 23usize, 8usize, 8u32);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let want = mm_in_lane(LaneId::U64, &a, &b, m, k, n, w, 1);
+        for lane in LaneId::ALL {
+            assert!(lane_exact(lane, w, k, 1), "{lane}");
+            for threads in [1usize, 3] {
+                assert_eq!(mm_in_lane(lane, &a, &b, m, k, n, w, threads), want, "{lane}");
+                assert_eq!(
+                    kmm_in_lane(lane, &a, &b, m, k, n, w, 2, threads),
+                    want,
+                    "{lane} kmm"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no lane serves")]
+    fn routers_refuse_out_of_window_widths() {
+        mm_lane(&[1], &[1], 1, 1, 1, 40, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not provably exact")]
+    fn forced_mm_lane_refuses_past_its_headroom_bound() {
+        // w=16 saturates the u16 accumulator at k=1; k=2 must refuse
+        // (mirroring the KMM driver's assert), never silently wrap.
+        mm_in_lane(LaneId::U16, &[1, 1], &[1, 1], 1, 2, 1, 16, 1);
+    }
 }

@@ -12,6 +12,11 @@
 //!    kernel never branches on bounds; `0 · x` contributes nothing and
 //!    the driver simply skips padded rows/columns on writeback.
 //!
+//! Panels are stored in the selected [`Element`] lane's storage type:
+//! a `w = 8` operand packed on the `u16` lane moves a quarter of the
+//! bytes the old always-`u64` panels did through every slab re-read —
+//! the packed-B-traffic half of the lane win.
+//!
 //! Panel layouts (`p` indexes panels, `kk` the depth within the block):
 //!
 //! ```text
@@ -29,19 +34,23 @@
 //! pack a weight matrix once, then run any number of
 //! [`gemm_prepacked`](crate::fast::gemm::gemm_prepacked) calls against
 //! it with zero per-call B-packing work. The packed slabs are
-//! bit-identical to what the fresh path produces, so prepacked results
-//! are bit-exact with per-call packing by construction.
+//! bit-identical to what the fresh path packs, so prepacked results are
+//! bit-exact with per-call packing by construction. [`LanePackedB`]
+//! wraps one `PackedB` per selected lane behind a runtime tag — the
+//! form the coordinator's weight registry stores and routes on.
 
 use crate::fast::gemm::Blocking;
-use crate::fast::kernel::Kernel;
+use crate::fast::kernel::{Kernel, Kernel8x4};
+use crate::fast::lane::{narrow_plane, widen_acc, Element, LaneId};
 
 /// Pack the `rows × cols` block of row-major `src` (row stride `lda`)
 /// starting at `(row0, col0)` into `MR`-row panels, zero-padding the
 /// final panel. `dst` is cleared and refilled; its final length is
 /// `⌈rows/mr⌉ · cols · mr`.
-pub fn pack_a(
-    dst: &mut Vec<u64>,
-    src: &[u64],
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a<E: Element>(
+    dst: &mut Vec<E>,
+    src: &[E],
     lda: usize,
     row0: usize,
     rows: usize,
@@ -59,7 +68,7 @@ pub fn pack_a(
                 dst.push(if row < rows {
                     src[(row0 + row) * lda + col0 + kk]
                 } else {
-                    0
+                    E::default()
                 });
             }
         }
@@ -70,9 +79,10 @@ pub fn pack_a(
 /// starting at `(row0, col0)` into `NR`-column panels, zero-padding the
 /// final panel. `dst` is cleared and refilled; its final length is
 /// `⌈cols/nr⌉ · rows · nr`.
-pub fn pack_b(
-    dst: &mut Vec<u64>,
-    src: &[u64],
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b<E: Element>(
+    dst: &mut Vec<E>,
+    src: &[E],
     ldb: usize,
     row0: usize,
     rows: usize,
@@ -90,7 +100,7 @@ pub fn pack_b(
                 dst.push(if col < cols {
                     src[(row0 + kk) * ldb + col0 + col]
                 } else {
-                    0
+                    E::default()
                 });
             }
         }
@@ -98,7 +108,8 @@ pub fn pack_b(
 }
 
 /// A whole `k × n` B operand packed once into depth-major `NR`-column
-/// panel slabs, reusable across any number of GEMM calls.
+/// panel slabs in lane `E`'s storage, reusable across any number of
+/// GEMM calls.
 ///
 /// The slabs are laid out in the exact `(jc, pc)` order the blocked
 /// driver walks them (`NC`-wide column slabs outer, `KC`-deep depth
@@ -130,9 +141,9 @@ pub fn pack_b(
 /// [`gemm_prepacked`]: crate::fast::gemm::gemm_prepacked
 /// [`gemm_prepacked_threads`]: crate::fast::gemm::gemm_prepacked_threads
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct PackedB {
+pub struct PackedB<E: Element = u64> {
     /// All slabs, concatenated in `(jc, pc)` driver order.
-    data: Vec<u64>,
+    data: Vec<E>,
     /// Slab start offsets (`jc_idx * pc_blocks + pc_idx`), plus one
     /// trailing sentinel equal to `data.len()`.
     offsets: Vec<usize>,
@@ -146,14 +157,20 @@ pub struct PackedB {
     bl: Blocking,
 }
 
-impl PackedB {
+impl<E: Element> PackedB<E> {
     /// Pack the row-major `k × n` operand `b` for `K`'s register width
     /// and the given blocking. Each `NC`-wide column slab zero-pads its
     /// ragged panel edge independently, so the result owns
     /// `k · Σ_slabs ⌈ncb/NR⌉·NR` elements — exactly `⌈n/NR⌉·NR·k`
     /// whenever `bl.nc` is a multiple of `NR` (the default blocking
     /// is), slightly more otherwise.
-    pub fn pack<K: Kernel>(_kernel: &K, b: &[u64], k: usize, n: usize, bl: &Blocking) -> PackedB {
+    pub fn pack<K: Kernel<E>>(
+        _kernel: &K,
+        b: &[E],
+        k: usize,
+        n: usize,
+        bl: &Blocking,
+    ) -> PackedB<E> {
         assert_eq!(b.len(), k * n, "B shape mismatch");
         assert!(bl.mc > 0 && bl.kc > 0 && bl.nc > 0, "degenerate blocking");
         let nr = K::NR;
@@ -206,9 +223,15 @@ impl PackedB {
         &self.bl
     }
 
-    /// Owned size of the packed data in bytes (cache observability).
+    /// The lane the panels are stored in.
+    pub fn lane(&self) -> LaneId {
+        E::LANE
+    }
+
+    /// Owned size of the packed data in bytes (cache observability —
+    /// this is where a narrow lane's 4× slab-traffic saving shows).
     pub fn bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<u64>()
+        self.data.len() * std::mem::size_of::<E>()
     }
 
     /// Depth blocks per column slab.
@@ -219,9 +242,139 @@ impl PackedB {
     /// The packed slab for column-slab index `jc_idx` and depth-block
     /// index `pc_idx` — identical to the [`pack_b`] output for that
     /// `(jc, pc)` block.
-    pub(crate) fn slab(&self, jc_idx: usize, pc_idx: usize) -> &[u64] {
+    pub(crate) fn slab(&self, jc_idx: usize, pc_idx: usize) -> &[E] {
         let i = jc_idx * self.pc_blocks() + pc_idx;
         &self.data[self.offsets[i]..self.offsets[i + 1]]
+    }
+}
+
+/// A [`PackedB`] in whichever lane [`select_lane`] chose for the weight,
+/// behind a runtime tag: the form the coordinator's
+/// [`WeightRegistry`](crate::coordinator::registry::WeightRegistry)
+/// stores, so registry entries record the lane they were packed for and
+/// serving can verify the match before reading the panels.
+///
+/// [`select_lane`]: crate::fast::lane::select_lane
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LanePackedB {
+    /// Panels in `u16` storage (served with `u32` accumulation).
+    U16(PackedB<u16>),
+    /// Panels in `u32` storage (served with `u64` accumulation).
+    U32(PackedB<u32>),
+    /// Panels in `u64` storage (served with `u128` accumulation).
+    U64(PackedB<u64>),
+}
+
+impl LanePackedB {
+    /// Pack `b` (a `w`-bit operand) into an explicit `lane`. Panics
+    /// unless [`lane_exact`]`(lane, w, k, 1)` — the same contract the
+    /// drivers and the KMM sibling assert — so an entry whose
+    /// accumulator headroom cannot cover serving is refused at pack
+    /// time instead of wrapping at serve time.
+    ///
+    /// [`lane_exact`]: crate::fast::lane::lane_exact
+    pub fn pack_in(
+        lane: LaneId,
+        b: &[u64],
+        k: usize,
+        n: usize,
+        w: u32,
+        bl: &Blocking,
+    ) -> LanePackedB {
+        assert!(
+            crate::fast::lane::lane_exact(lane, w, k, 1),
+            "lane {}: not provably exact for w={w} at depth k={k} \
+             (storage {} bits, accumulator {} bits < required {})",
+            lane.name(),
+            lane.elem_bits(),
+            lane.acc_bits(),
+            crate::fast::lane::required_acc_bits(w, k, 1)
+        );
+        match lane {
+            LaneId::U16 => {
+                LanePackedB::U16(PackedB::pack(&Kernel8x4, &narrow_plane::<u16>(b), k, n, bl))
+            }
+            LaneId::U32 => {
+                LanePackedB::U32(PackedB::pack(&Kernel8x4, &narrow_plane::<u32>(b), k, n, bl))
+            }
+            LaneId::U64 => LanePackedB::U64(PackedB::pack(&Kernel8x4, b, k, n, bl)),
+        }
+    }
+
+    /// Pack `b` into the narrowest lane that is provably exact for a
+    /// `w`-bit depth-`k` conventional GEMM (the same
+    /// [`select_lane`](crate::fast::lane::select_lane)`(w, k, 1)` rule
+    /// the serving path uses, so pack-time and serve-time lanes agree
+    /// by construction). Panics outside the engine window — validate
+    /// with [`check_width`](crate::fast::lane::check_width) first.
+    pub fn pack_select(b: &[u64], k: usize, n: usize, w: u32, bl: &Blocking) -> LanePackedB {
+        let lane = crate::fast::lane::select_lane(w, k, 1)
+            .unwrap_or_else(|| panic!("no lane serves w={w} (engine window exceeded)"));
+        LanePackedB::pack_in(lane, b, k, n, w, bl)
+    }
+
+    /// The lane the panels were packed for.
+    pub fn lane(&self) -> LaneId {
+        match self {
+            LanePackedB::U16(_) => LaneId::U16,
+            LanePackedB::U32(_) => LaneId::U32,
+            LanePackedB::U64(_) => LaneId::U64,
+        }
+    }
+
+    /// B's row count (the GEMM depth `k`).
+    pub fn rows(&self) -> usize {
+        match self {
+            LanePackedB::U16(p) => p.rows(),
+            LanePackedB::U32(p) => p.rows(),
+            LanePackedB::U64(p) => p.rows(),
+        }
+    }
+
+    /// B's column count (the GEMM width `n`).
+    pub fn cols(&self) -> usize {
+        match self {
+            LanePackedB::U16(p) => p.cols(),
+            LanePackedB::U32(p) => p.cols(),
+            LanePackedB::U64(p) => p.cols(),
+        }
+    }
+
+    /// Owned packed bytes — `elem_bits/64` of what the `u64` lane holds
+    /// for the same operand.
+    pub fn bytes(&self) -> usize {
+        match self {
+            LanePackedB::U16(p) => p.bytes(),
+            LanePackedB::U32(p) => p.bytes(),
+            LanePackedB::U64(p) => p.bytes(),
+        }
+    }
+
+    /// Serve `C = A·B` against the cached panels across up to `threads`
+    /// workers, narrowing the `u64`-boundary activation into the entry's
+    /// lane and widening the result back to `u128` (bit-exact with the
+    /// fresh path at the lane's contract; the activation must fit the
+    /// lane's storage, which holds whenever it fits the width the entry
+    /// was packed for).
+    pub fn gemm(&self, a: &[u64], m: usize, threads: usize) -> Vec<u128> {
+        use crate::fast::gemm::gemm_prepacked_threads;
+        match self {
+            LanePackedB::U16(p) => widen_acc::<u16>(gemm_prepacked_threads(
+                &Kernel8x4,
+                &narrow_plane::<u16>(a),
+                p,
+                m,
+                threads,
+            )),
+            LanePackedB::U32(p) => widen_acc::<u32>(gemm_prepacked_threads(
+                &Kernel8x4,
+                &narrow_plane::<u32>(a),
+                p,
+                m,
+                threads,
+            )),
+            LanePackedB::U64(p) => gemm_prepacked_threads(&Kernel8x4, a, p, m, threads),
+        }
     }
 }
 
@@ -281,8 +434,20 @@ mod tests {
     }
 
     #[test]
+    fn packing_is_lane_independent() {
+        // The panel layout is pure index arithmetic: narrowing the
+        // storage must not change which element lands where.
+        let src: Vec<u64> = (0..20).collect(); // 4×5
+        let src16: Vec<u16> = src.iter().map(|&x| x as u16).collect();
+        let mut wide = Vec::new();
+        let mut narrow: Vec<u16> = Vec::new();
+        pack_b(&mut wide, &src, 5, 0, 4, 0, 5, 4);
+        pack_b(&mut narrow, &src16, 5, 0, 4, 0, 5, 4);
+        assert_eq!(narrow.iter().map(|&x| x as u64).collect::<Vec<_>>(), wide);
+    }
+
+    #[test]
     fn packed_b_slabs_match_fresh_pack_b() {
-        use crate::fast::kernel::Kernel8x4;
         use crate::util::rng::Rng;
         // Ragged k and n against a tiny blocking: every slab of the
         // owned cache must equal the per-call pack_b output.
@@ -295,6 +460,7 @@ mod tests {
         assert_eq!(packed.cols(), n);
         assert_eq!(packed.nr(), 4);
         assert_eq!(packed.blocking(), &bl);
+        assert_eq!(packed.lane(), LaneId::U64);
         let mut fresh = Vec::new();
         for (jc_idx, jc) in (0..n).step_by(bl.nc).enumerate() {
             let ncb = bl.nc.min(n - jc);
@@ -308,7 +474,6 @@ mod tests {
 
     #[test]
     fn packed_b_size_is_padded_operand_size() {
-        use crate::fast::kernel::Kernel8x4;
         // NR-aligned slab widths: n = 9 pads to 12 columns at NR = 4.
         let (k, n) = (7usize, 9usize);
         let b = vec![1u64; k * n];
@@ -326,9 +491,35 @@ mod tests {
 
     #[test]
     fn packed_b_empty_operand() {
-        use crate::fast::kernel::Kernel8x4;
-        let packed = PackedB::pack(&Kernel8x4, &[], 0, 0, &Blocking::default());
+        let packed = PackedB::<u64>::pack(&Kernel8x4, &[], 0, 0, &Blocking::default());
         assert_eq!(packed.bytes(), 0);
         assert_eq!((packed.rows(), packed.cols()), (0, 0));
+    }
+
+    #[test]
+    fn lane_packed_b_records_its_lane_and_shrinks() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(12);
+        let (k, n, w) = (96usize, 40usize, 8u32);
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let bl = Blocking::default();
+        let narrow = LanePackedB::pack_select(&b, k, n, w, &bl);
+        assert_eq!(narrow.lane(), LaneId::U16, "w=8 rides the narrow lane");
+        assert_eq!((narrow.rows(), narrow.cols()), (k, n));
+        let wide = LanePackedB::pack_in(LaneId::U64, &b, k, n, w, &bl);
+        assert_eq!(wide.bytes(), 4 * narrow.bytes(), "u16 panels are 4x smaller");
+        // Both lanes serve identical bits.
+        let m = 9;
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        assert_eq!(narrow.gemm(&a, m, 1), wide.gemm(&a, m, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "not provably exact")]
+    fn lane_packed_b_refuses_past_the_headroom_bound() {
+        // w=16 at depth 2 exceeds the u16 lane's u32 accumulator; the
+        // pack must refuse rather than build a cache entry that would
+        // wrap at serve time.
+        LanePackedB::pack_in(LaneId::U16, &[1, 1], 2, 1, 16, &Blocking::default());
     }
 }

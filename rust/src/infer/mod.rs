@@ -36,6 +36,7 @@
 use crate::algo::matrix::{matmul_oracle, Mat};
 use crate::coordinator::dispatch::GemmBackend;
 use crate::coordinator::registry::PackedWeight;
+use crate::fast::LaneId;
 use crate::model::workload::Workload;
 use crate::util::error::{bail, Context, Result};
 use crate::util::json::{finite, Json};
@@ -97,6 +98,9 @@ pub struct LayerRun {
     pub seconds: f64,
     /// Deterministic device cycles from the backend's timing model.
     pub cycles: u64,
+    /// The fast-engine lane the layer was served on (`None` on
+    /// backends without width-specialized lanes).
+    pub lane: Option<LaneId>,
 }
 
 impl LayerRun {
@@ -158,6 +162,7 @@ impl InferRun {
                 o.insert("seconds".to_string(), Json::Float(finite(l.seconds)));
                 o.insert("ops_per_s".to_string(), Json::Float(l.ops_per_s()));
                 o.insert("cycles".to_string(), Json::Int(l.cycles as i64));
+                o.insert("lane".to_string(), LaneId::to_json(l.lane));
                 Json::Object(o)
             })
             .collect();
@@ -192,18 +197,19 @@ impl InferRun {
         );
         let _ = writeln!(
             s,
-            "{:<16} {:>7} {:>7} {:>7} {:>3} {:>12} {:>10}",
-            "layer", "M", "K", "N", "w", "ms", "Mops/s"
+            "{:<16} {:>7} {:>7} {:>7} {:>3} {:>4} {:>12} {:>10}",
+            "layer", "M", "K", "N", "w", "lane", "ms", "Mops/s"
         );
         for l in &self.layers {
             let _ = writeln!(
                 s,
-                "{:<16} {:>7} {:>7} {:>7} {:>3} {:>12.3} {:>10.1}",
+                "{:<16} {:>7} {:>7} {:>7} {:>3} {:>4} {:>12.3} {:>10.1}",
                 l.label,
                 l.m,
                 l.k,
                 l.n,
                 l.w,
+                l.lane.map_or("-", LaneId::name),
                 l.seconds * 1e3,
                 l.ops_per_s() / 1e6
             );
@@ -286,6 +292,7 @@ pub fn run_workload(
     for (i, (g, b)) in gemms.iter().zip(&weights).enumerate() {
         let mut seconds = 0.0;
         let mut cycles = 0u64;
+        let mut lane: Option<LaneId> = None;
         for stream in 0..streams {
             let a = Mat::random(g.m, g.k, g.w, &mut rng);
             let t0 = Instant::now();
@@ -296,6 +303,9 @@ pub fn run_workload(
             let res = served.with_context(|| format!("serving layer {}", g.label))?;
             seconds += t0.elapsed().as_secs_f64();
             cycles += res.stats.cycles;
+            // Lane selection depends only on (w, k, digits), so every
+            // stream of a layer runs the same lane; record the first.
+            lane = lane.or(res.lane);
             // Oracle work would swamp the timings; check the first
             // stream of each small layer only.
             if cfg.verify
@@ -315,6 +325,7 @@ pub fn run_workload(
             macs: g.macs() * streams as u64,
             seconds,
             cycles,
+            lane,
         });
     }
     Ok(InferRun {
@@ -396,6 +407,30 @@ mod tests {
         .unwrap();
         assert_eq!(run.backend, "functional");
         assert_eq!(run.total_macs(), wl.macs());
+        // The functional model has no width-specialized lanes.
+        assert!(run.layers.iter().all(|l| l.lane.is_none()));
+    }
+
+    #[test]
+    fn fast_backend_layers_record_their_lane() {
+        // A w=8 trace of shallow layers rides the u16 lane end to end;
+        // the table prints the lane column.
+        let wl = synthetic_square("sq", 16, 3, 8);
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let run = run_workload(
+            &wl,
+            &mut be,
+            1,
+            &InferConfig { verify: true, ..InferConfig::default() },
+        )
+        .unwrap();
+        assert!(
+            run.layers.iter().all(|l| l.lane == Some(LaneId::U16)),
+            "{:?}",
+            run.layers.iter().map(|l| l.lane).collect::<Vec<_>>()
+        );
+        assert!(run.table().contains("lane"));
+        assert!(run.table().contains("u16"));
     }
 
     #[test]
@@ -443,6 +478,11 @@ mod tests {
             parsed.get("layers").and_then(Json::as_array).map(<[Json]>::len),
             Some(2)
         );
+        // Every layer record names the lane that served it (w=8 shallow
+        // layers ride u16 on the fast backend).
+        for layer in parsed.get("layers").and_then(Json::as_array).unwrap() {
+            assert_eq!(layer.get("lane").and_then(Json::as_str), Some("u16"));
+        }
         assert_eq!(
             parsed.get("total_macs").and_then(Json::as_i64),
             Some((2 * 12 * 12 * 12) as i64)

@@ -118,10 +118,11 @@ fn cmd_gemm(args: &Args) -> i32 {
         Ok(r) => {
             let exact = r.c == matmul_oracle(&a, &b);
             println!(
-                "GEMM {m}x{k}x{n} w={w} via {} ({threads} thread{}): mode {:?}, {} cycles, {} tile jobs, exact={exact}",
+                "GEMM {m}x{k}x{n} w={w} via {} ({threads} thread{}): mode {:?}, lane {}, {} cycles, {} tile jobs, exact={exact}",
                 be.name(),
                 if threads == 1 { "" } else { "s" },
                 r.mode,
+                r.lane.map_or("-", kmm::fast::LaneId::name),
                 r.stats.cycles,
                 r.stats.tile_jobs
             );

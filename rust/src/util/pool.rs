@@ -35,16 +35,39 @@ pub fn available_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Parse a `KMM_THREADS` value: a positive integer (surrounding
+/// whitespace tolerated), or `None` for anything malformed — empty,
+/// non-numeric, or zero (a zero worker count is meaningless; the
+/// clamping callers apply elsewhere is for *derived* counts, not user
+/// input). Split out from [`env_threads_or`] so the malformed cases
+/// are unit-testable without mutating process-global env state.
+pub fn parse_threads(raw: &str) -> Option<usize> {
+    raw.trim().parse::<usize>().ok().filter(|&n| n > 0)
+}
+
 /// The `KMM_THREADS` environment variable when set to a positive
 /// integer, otherwise `fallback`. The CLI defaults through this with
 /// `fallback = 1` (opt-in parallelism), the bench with
 /// [`available_threads`].
+///
+/// A set-but-malformed value (e.g. `KMM_THREADS=0` or
+/// `KMM_THREADS=abc`) falls back too, but **loudly**: one warning per
+/// process on stderr, so a typo'd deployment does not silently serve
+/// single-threaded.
 pub fn env_threads_or(fallback: usize) -> usize {
-    std::env::var("KMM_THREADS")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or(fallback)
+    match std::env::var("KMM_THREADS") {
+        Ok(raw) => parse_threads(&raw).unwrap_or_else(|| {
+            static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+            WARN_ONCE.call_once(|| {
+                eprintln!(
+                    "warning: KMM_THREADS={raw:?} is not a positive integer; \
+                     falling back to {fallback}"
+                );
+            });
+            fallback
+        }),
+        Err(_) => fallback,
+    }
 }
 
 /// Default worker count: `KMM_THREADS` when set, otherwise
@@ -161,6 +184,25 @@ mod tests {
         // With the variable unset (the test environment default) the
         // fallback passes through untouched.
         assert!(env_threads_or(1) >= 1);
+    }
+
+    #[test]
+    fn parse_threads_accepts_positive_integers() {
+        assert_eq!(parse_threads("1"), Some(1));
+        assert_eq!(parse_threads("8"), Some(8));
+        assert_eq!(parse_threads("  4 "), Some(4), "whitespace tolerated");
+    }
+
+    #[test]
+    fn parse_threads_rejects_malformed_values() {
+        // The cases env_threads_or must fall back (with a warning) on:
+        // zero, non-numeric, empty, negative, and fractional.
+        assert_eq!(parse_threads("0"), None, "zero workers is meaningless");
+        assert_eq!(parse_threads("abc"), None);
+        assert_eq!(parse_threads(""), None);
+        assert_eq!(parse_threads("-2"), None);
+        assert_eq!(parse_threads("2.5"), None);
+        assert_eq!(parse_threads("4x"), None);
     }
 
     #[test]

@@ -33,7 +33,16 @@ fn fast_mm_matches_mm1_reference_prop() {
         let mut tally = Tally::new();
         let want = mm1(&a, &b, w, &mut tally).to_i128_vec().unwrap();
         let got = fast_as_i128(&fast::mm(a.data(), b.data(), m, k, n));
-        prop_assert_eq(got, want, &format!("fast MM == mm1 ({m}x{k}x{n} w={w})"))
+        prop_assert_eq(got, want.clone(), &format!("fast MM == mm1 ({m}x{k}x{n} w={w})"))?;
+        // The lane-routed entry point (what FastBackend serves through)
+        // must agree while picking the selector's lane.
+        let (routed, lane) = fast::mm_lane(a.data(), b.data(), m, k, n, w, 1);
+        prop_assert_eq(
+            fast_as_i128(&routed),
+            want,
+            &format!("lane-routed MM == mm1 ({m}x{k}x{n} w={w} lane={lane})"),
+        )?;
+        prop_assert_eq(Some(lane), fast::select_lane(w, k, 1), "reported lane")
     });
 }
 
@@ -55,8 +64,15 @@ fn fast_kmm_matches_kmm_reference_all_digit_counts() {
             let got = fast_as_i128(&fast::kmm_digits(a.data(), b.data(), m, k, n, w, digits));
             prop_assert_eq(
                 got,
-                want,
+                want.clone(),
                 &format!("fast KMM_{digits}^[{w}] == algo::kmm ({m}x{k}x{n})"),
+            )?;
+            let (routed, lane) =
+                fast::kmm_lane(a.data(), b.data(), m, k, n, w, digits, 1);
+            prop_assert_eq(
+                fast_as_i128(&routed),
+                want,
+                &format!("lane-routed KMM_{digits}^[{w}] == algo::kmm ({m}x{k}x{n} lane={lane})"),
             )?;
         }
         Ok(())

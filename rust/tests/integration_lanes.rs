@@ -1,0 +1,258 @@
+//! Width-specialized lane integration: every element lane the fast
+//! engine can route to (`u16/u32`, `u32/u64`, `u64/u128`) must be
+//! **bit-exact** against the instrumented exact references (`algo::mm1`,
+//! `algo::kmm`) across the deployment property grid — w ∈ {4, 8, 16,
+//! 32}, threads ∈ {1, 2, 4}, fresh and prepacked — and the lane
+//! selector must be *provably* right at its boundaries: adversarial
+//! all-ones operands at each lane's maximum exact width/depth stay
+//! exact, and the selector refuses the lane one step past the bound.
+
+use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::algo::opcount::Tally;
+use kmm::algo::{kmm as kmm_ref, mm1};
+use kmm::fast::{self, lane_exact, required_acc_bits, select_lane, Blocking, LaneId};
+use kmm::util::rng::Rng;
+
+/// The fast engine's `u128` results, widened for comparison against the
+/// references' `I256` accumulators (all values are non-negative).
+fn fast_as_i128(c: &[u128]) -> Vec<i128> {
+    c.iter()
+        .map(|&v| i128::try_from(v).expect("fast value exceeds i128"))
+        .collect()
+}
+
+#[test]
+fn every_exact_lane_matches_mm1_across_the_grid() {
+    // The existing property grid, run per lane: for each (w, threads)
+    // cell and random shapes, every lane the headroom rule admits must
+    // reproduce algo::mm1 bit-for-bit, fresh and prepacked.
+    let mut rng = Rng::new(61);
+    for w in [4u32, 8, 16, 32] {
+        for threads in [1usize, 2, 4] {
+            for _ in 0..4 {
+                let (m, k, n) = (rng.range(1, 24), rng.range(1, 24), rng.range(1, 24));
+                let a = Mat::random(m, k, w, &mut rng);
+                let b = Mat::random(k, n, w, &mut rng);
+                let mut tally = Tally::new();
+                let want = mm1(&a, &b, w, &mut tally).to_i128_vec().unwrap();
+                for lane in LaneId::ALL {
+                    if !lane_exact(lane, w, k, 1) {
+                        continue;
+                    }
+                    let fresh =
+                        fast::mm_in_lane(lane, a.data(), b.data(), m, k, n, w, threads);
+                    assert_eq!(
+                        fast_as_i128(&fresh),
+                        want,
+                        "fresh {lane} ({m}x{k}x{n} w={w} t={threads})"
+                    );
+                    let packed = fast::LanePackedB::pack_in(
+                        lane,
+                        b.data(),
+                        k,
+                        n,
+                        w,
+                        &Blocking::default(),
+                    );
+                    assert_eq!(packed.lane(), lane);
+                    let served = packed.gemm(a.data(), m, threads);
+                    assert_eq!(
+                        fast_as_i128(&served),
+                        want,
+                        "prepacked {lane} ({m}x{k}x{n} w={w} t={threads})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_exact_lane_matches_kmm_reference_across_the_grid() {
+    // The digit-sliced counterpart: KMM₂ per lane against algo::kmm,
+    // fresh and through the prepacked digit-plane tree.
+    let mut rng = Rng::new(62);
+    for w in [4u32, 8, 16, 32] {
+        for threads in [1usize, 2, 4] {
+            for _ in 0..3 {
+                let (m, k, n) = (rng.range(1, 16), rng.range(1, 16), rng.range(1, 16));
+                let a = Mat::random(m, k, w, &mut rng);
+                let b = Mat::random(k, n, w, &mut rng);
+                let mut tally = Tally::new();
+                let want = kmm_ref(&a, &b, w, 2, &mut tally).to_i128_vec().unwrap();
+                for lane in LaneId::ALL {
+                    if !lane_exact(lane, w, k, 2) {
+                        continue;
+                    }
+                    let fresh =
+                        fast::kmm_in_lane(lane, a.data(), b.data(), m, k, n, w, 2, threads);
+                    assert_eq!(
+                        fast_as_i128(&fresh),
+                        want,
+                        "fresh KMM {lane} ({m}x{k}x{n} w={w} t={threads})"
+                    );
+                    let packed = fast::LanePackedKmmB::pack_in(lane, b.data(), k, n, w, 2);
+                    assert_eq!((packed.lane(), packed.digits()), (lane, 2));
+                    let served = packed.kmm(a.data(), m, threads);
+                    assert_eq!(
+                        fast_as_i128(&served),
+                        want,
+                        "prepacked KMM {lane} ({m}x{k}x{n} w={w} t={threads})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// All-ones `m × k` matrix of `w`-bit elements — the adversarial input
+/// that saturates every product, digit sum, and recombination shift.
+fn ones(rows: usize, cols: usize, w: u32) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| (1u64 << w) - 1)
+}
+
+#[test]
+fn u16_lane_is_exact_at_its_headroom_boundary() {
+    // w=12, k=256 is the u16 lane's all-ones limit: required bits are
+    // 2·12 + ⌈log₂ 256⌉ = 32 = the u32 accumulator, and the actual peak
+    // value 256·(2¹²−1)² = 4 292 870 400 sits 2 096 896 below 2³².
+    let (w, k) = (12u32, 256usize);
+    assert_eq!(required_acc_bits(w, k, 1), 32);
+    assert!(lane_exact(LaneId::U16, w, k, 1));
+    assert_eq!(select_lane(w, k, 1), Some(LaneId::U16));
+    let (m, n) = (4usize, 3usize);
+    let (a, b) = (ones(m, k, w), ones(k, n, w));
+    let mut tally = Tally::new();
+    let want = mm1(&a, &b, w, &mut tally).to_i128_vec().unwrap();
+    for threads in [1usize, 2, 4] {
+        let got = fast::mm_in_lane(LaneId::U16, a.data(), b.data(), m, k, n, w, threads);
+        assert_eq!(fast_as_i128(&got), want, "threads={threads}");
+    }
+    // One step past the bound: k=257 needs 33 bits, the selector must
+    // refuse u16 and hand the shape to u32.
+    assert!(!lane_exact(LaneId::U16, w, k + 1, 1));
+    assert_eq!(select_lane(w, k + 1, 1), Some(LaneId::U32));
+    // The width boundary behaves the same way: w=16 fits u16 storage
+    // and saturates its accumulator at k=1; any deeper refuses.
+    assert!(lane_exact(LaneId::U16, 16, 1, 1));
+    assert!(!lane_exact(LaneId::U16, 16, 2, 1));
+    assert_eq!(select_lane(16, 2, 1), Some(LaneId::U32));
+    // And w=17 does not fit u16 storage at any depth.
+    assert!(!lane_exact(LaneId::U16, 17, 1, 1));
+}
+
+#[test]
+fn u16_lane_kmm_is_exact_at_its_headroom_boundary() {
+    // The digit-sliced boundary: the recursion's recombination terms
+    // are bounded by the same 2w + ⌈log₂ k⌉ rule, so w=12 digits=2
+    // all-ones at k=256 is exact on u16 — against algo::kmm itself.
+    let (w, k, digits) = (12u32, 256usize, 2u32);
+    assert_eq!(required_acc_bits(w, k, digits), 32);
+    assert_eq!(select_lane(w, k, digits), Some(LaneId::U16));
+    let (m, n) = (3usize, 3usize);
+    let (a, b) = (ones(m, k, w), ones(k, n, w));
+    let mut tally = Tally::new();
+    let want = kmm_ref(&a, &b, w, digits, &mut tally).to_i128_vec().unwrap();
+    for threads in [1usize, 3] {
+        let got = fast::kmm_in_lane(LaneId::U16, a.data(), b.data(), m, k, n, w, digits, threads);
+        assert_eq!(fast_as_i128(&got), want, "threads={threads}");
+    }
+    assert_eq!(select_lane(w, k + 1, digits), Some(LaneId::U32));
+}
+
+#[test]
+fn u32_lane_is_exact_at_its_headroom_boundary() {
+    // w=28, k=256: 2·28 + 8 = 64 bits exactly saturates the u64
+    // accumulator; all-ones peaks at 256·(2²⁸−1)² ≈ 2⁶⁴ − 2³⁷.
+    let (w, k) = (28u32, 256usize);
+    assert_eq!(required_acc_bits(w, k, 1), 64);
+    assert!(lane_exact(LaneId::U32, w, k, 1));
+    assert_eq!(select_lane(w, k, 1), Some(LaneId::U32));
+    let (m, n) = (3usize, 3usize);
+    let (a, b) = (ones(m, k, w), ones(k, n, w));
+    let want = matmul_oracle(&a, &b).to_i128_vec().unwrap();
+    for threads in [1usize, 4] {
+        let got = fast::mm_in_lane(LaneId::U32, a.data(), b.data(), m, k, n, w, threads);
+        assert_eq!(fast_as_i128(&got), want, "threads={threads}");
+    }
+    // One step past: k=257 needs 65 bits — only the u64 lane serves it.
+    assert!(!lane_exact(LaneId::U32, w, k + 1, 1));
+    assert_eq!(select_lane(w, k + 1, 1), Some(LaneId::U64));
+}
+
+#[test]
+fn u64_lane_covers_the_window_and_nothing_covers_past_it() {
+    // w=32 all-ones at the suite's deepest K: exact on the widest lane
+    // (its 128-bit accumulator covers any representable depth), while
+    // w=33 selects no lane at all — the engine window boundary.
+    let (w, k) = (32u32, 512usize);
+    assert!(lane_exact(LaneId::U64, w, k, 1));
+    assert_eq!(select_lane(w, k, 1), Some(LaneId::U64));
+    let (m, n) = (3usize, 3usize);
+    let (a, b) = (ones(m, k, w), ones(k, n, w));
+    let want = matmul_oracle(&a, &b).to_i128_vec().unwrap();
+    let got = fast::mm_in_lane(LaneId::U64, a.data(), b.data(), m, k, n, w, 2);
+    assert_eq!(fast_as_i128(&got), want);
+    for lane in LaneId::ALL {
+        assert!(!lane_exact(lane, 33, 1, 1), "{lane} must refuse w=33");
+    }
+    assert_eq!(select_lane(33, 1, 1), None);
+    assert!(fast::check_width(33).is_err());
+    assert!(fast::check_width(0).is_err());
+}
+
+#[test]
+fn selector_depth_boundaries_match_the_headroom_rule_exactly() {
+    // Sweep the u16→u32 handoff depth across storable widths: the
+    // selector must flip lanes at precisely the depth where
+    // 2w + ⌈log₂ k⌉ crosses 32 — no off-by-one in either direction.
+    // (w ≥ 6 keeps the boundary depth 2^(32−2w) representable without
+    // saturating the sweep; narrower widths flip at depths ≥ 2²².)
+    for w in 6u32..=16 {
+        let boundary_k: usize = 1usize << (32 - 2 * w);
+        assert_eq!(
+            select_lane(w, boundary_k, 1),
+            Some(LaneId::U16),
+            "w={w} k={boundary_k} still u16"
+        );
+        assert_eq!(
+            select_lane(w, boundary_k + 1, 1),
+            Some(LaneId::U32),
+            "w={w} k={} flips to u32",
+            boundary_k + 1
+        );
+    }
+}
+
+#[test]
+fn serving_stack_routes_every_width_to_the_recorded_lane() {
+    // End to end: backend serving reports the lane the selector picks,
+    // and registry entries record the same lane the serve verifies —
+    // the tentpole's pack-time/serve-time agreement, observed from the
+    // outside.
+    use kmm::coordinator::dispatch::{FastAlgo, FastBackend, GemmBackend};
+    use kmm::coordinator::registry::{PackPlan, WeightRegistry};
+    let mut rng = Rng::new(63);
+    let registry = WeightRegistry::new();
+    for (w, expect) in [(8u32, LaneId::U16), (16, LaneId::U32), (32, LaneId::U64)] {
+        let k = 96usize;
+        let a = Mat::random(7, k, w, &mut rng);
+        let b = Mat::random(k, 6, w, &mut rng);
+        let want = matmul_oracle(&a, &b);
+        for algo in [FastAlgo::Mm, FastAlgo::Kmm] {
+            let mut be = FastBackend::with_threads(algo, 2);
+            let digits = if w > 8 && algo == FastAlgo::Kmm { 2 } else { 1 };
+            assert_eq!(select_lane(w, k, digits), Some(expect), "w={w}");
+            let fresh = be.gemm(&a, &b, w).unwrap();
+            assert_eq!(fresh.c, want, "w={w} {algo:?}");
+            assert_eq!(fresh.lane, Some(expect), "w={w} {algo:?}");
+            let h = registry
+                .register_with_plan(b.clone(), w, be.preferred_plan())
+                .unwrap();
+            let pw = registry.get(h).unwrap();
+            let served = be.gemm_packed(&a, &pw).unwrap();
+            assert_eq!(served.c, want, "w={w} {algo:?} packed");
+            assert_eq!(served.lane, Some(expect), "w={w} {algo:?} packed");
+        }
+    }
+}
