@@ -14,6 +14,14 @@
 //!      `--threads N` vs single-threaded on a larger GEMM
 //!   7. width-specialized lanes       — the w = 8 narrow (`u16`) lane
 //!      vs the `u64` lane on the same 160³ GEMM
+//!   8. plan reuse                    — a `BoundPlan` built once and
+//!      reused vs rebuilding (re-validating + re-binding) per call on
+//!      a batched-serving shape
+//!
+//! Every engine section executes through build-once `MatmulPlan`s —
+//! the same path the serving layers take — with the plan constructed
+//! outside the timed loop, so the loops measure execution, not
+//! re-validation.
 //!
 //! Section 5 is the acceptance check for the fast subsystem: on a
 //! ≥64×64×64 GEMM the native blocked engine must beat the tallied
@@ -21,14 +29,18 @@
 //! expected 1–2 order-of-magnitude ratio and re-measures once before
 //! failing, so noisy shared CI runners cannot flake it. Section 7 adds
 //! the lane gate: at w = 8 the selected narrow lane must beat the
-//! always-`u64` lane (same one-retry discipline).
+//! always-`u64` lane (same one-retry discipline). Section 8 adds the
+//! plan-reuse gate: reusing a bound plan must be at least as fast
+//! (≥ 1.0×) as rebuilding it per call — the hot-path saving the plan
+//! API exists for — with the same one-retry discipline.
 //!
 //! Every section is recorded into `BENCH_hotpath.json` (override the
-//! path with `KMM_BENCH_OUT`): **schema 2** — per-section median
+//! path with `KMM_BENCH_OUT`): **schema 3** — per-section median
 //! seconds, Mops/s, iteration count, thread count, GEMM shape, and the
 //! element lane that ran (`"lane": "u16"|"u32"|"u64"`, `null` for
-//! non-engine sections) — plus the headline speedup ratios. The file is
-//! self-validated through `util::json` before the bench exits.
+//! non-engine sections) — plus the headline speedup ratios, now
+//! including `plan_reuse_vs_rebuild` with its gate-retry flag. The
+//! file is self-validated through `util::json` before the bench exits.
 //!
 //! Run: `cargo bench --bench hotpath [-- --threads N]`
 
@@ -38,7 +50,7 @@ use kmm::algo::{kmm as kmm_ref, mm1};
 use kmm::arch::mxu::SystolicSpec;
 use kmm::arch::scalable::ScalableKmm;
 use kmm::coordinator::scheduler::schedule;
-use kmm::fast;
+use kmm::fast::{self, MatmulPlan, PlanSpec};
 use kmm::model::resnet::{resnet, ResNet};
 use kmm::util::cli::Args;
 use kmm::util::json::{finite, Json};
@@ -232,16 +244,19 @@ fn main() {
     // 5. The fast engine vs the tallied references, same 96^3 w16 GEMM
     //    (exceeds the 64^3 acceptance floor). All four are bit-exact
     //    against each other; only the execution machinery differs. The
-    //    engine sections run through lane routing exactly like the
-    //    serving path (select_lane picks u32 for w=16 at this depth).
+    //    engine sections execute through MatmulPlans built once outside
+    //    the timed loops — exactly the serving path's shape (the plan
+    //    resolves u32 for w=16 at this depth).
     println!("-- fast engine vs tallied reference (96^3, w = 16) --");
     let d = 96usize;
     let w = 16u32;
     let fa = Mat::random(d, d, w, &mut rng);
     let fb = Mat::random(d, d, w, &mut rng);
     let macs = (d * d * d) as u64;
-    let mm_lane16 = fast::select_lane(w, d, 1).expect("w=16 in window");
-    let kmm_lane16 = fast::select_lane(w, d, 2).expect("w=16 in window");
+    let plan_mm16 = MatmulPlan::build(PlanSpec::mm(d, d, d, w).with_threads(1))
+        .expect("w=16 in window");
+    let plan_kmm16 = MatmulPlan::build(PlanSpec::kmm(d, d, d, w, 2).with_threads(1))
+        .expect("w=16 in window");
 
     let t_fast_mm = bench(
         &mut sections,
@@ -250,9 +265,9 @@ fn main() {
         1,
         (d, d, d),
         w,
-        Some(mm_lane16),
+        Some(plan_mm16.lane()),
         || {
-            let (c, _) = fast::mm_lane(fa.data(), fb.data(), d, d, d, w, 1);
+            let c = plan_mm16.execute(fa.data(), fb.data());
             std::hint::black_box(&c);
             macs
         },
@@ -264,9 +279,9 @@ fn main() {
         1,
         (d, d, d),
         w,
-        Some(kmm_lane16),
+        Some(plan_kmm16.lane()),
         || {
-            let (c, _) = fast::kmm_lane(fa.data(), fb.data(), d, d, d, w, 2, 1);
+            let c = plan_kmm16.execute(fa.data(), fb.data());
             std::hint::black_box(&c);
             macs
         },
@@ -323,8 +338,14 @@ fn main() {
     let pb = Mat::random(dp, dp, w, &mut rng);
     let pmacs = (dp * dp * dp) as u64;
 
-    let par_mm_lane = fast::select_lane(w, dp, 1).expect("w=16 in window");
-    let par_kmm_lane = fast::select_lane(w, dp, 2).expect("w=16 in window");
+    let plan_mm_1 = MatmulPlan::build(PlanSpec::mm(dp, dp, dp, w).with_threads(1))
+        .expect("w=16 in window");
+    let plan_mm_n = MatmulPlan::build(PlanSpec::mm(dp, dp, dp, w).with_threads(par))
+        .expect("w=16 in window");
+    let plan_kmm_1 = MatmulPlan::build(PlanSpec::kmm(dp, dp, dp, w, 2).with_threads(1))
+        .expect("w=16 in window");
+    let plan_kmm_n = MatmulPlan::build(PlanSpec::kmm(dp, dp, dp, w, 2).with_threads(par))
+        .expect("w=16 in window");
     let t_mm_1 = bench(
         &mut sections,
         "fast-MM 160^3 w16 threads=1 (MACs/s)",
@@ -332,9 +353,9 @@ fn main() {
         1,
         (dp, dp, dp),
         w,
-        Some(par_mm_lane),
+        Some(plan_mm_1.lane()),
         || {
-            let (c, _) = fast::mm_lane(pa.data(), pb.data(), dp, dp, dp, w, 1);
+            let c = plan_mm_1.execute(pa.data(), pb.data());
             std::hint::black_box(&c);
             pmacs
         },
@@ -350,9 +371,9 @@ fn main() {
             par,
             (dp, dp, dp),
             w,
-            Some(par_mm_lane),
+            Some(plan_mm_n.lane()),
             || {
-                let (c, _) = fast::mm_lane(pa.data(), pb.data(), dp, dp, dp, w, par);
+                let c = plan_mm_n.execute(pa.data(), pb.data());
                 std::hint::black_box(&c);
                 pmacs
             },
@@ -367,9 +388,9 @@ fn main() {
         1,
         (dp, dp, dp),
         w,
-        Some(par_kmm_lane),
+        Some(plan_kmm_1.lane()),
         || {
-            let (c, _) = fast::kmm_lane(pa.data(), pb.data(), dp, dp, dp, w, 2, 1);
+            let c = plan_kmm_1.execute(pa.data(), pb.data());
             std::hint::black_box(&c);
             pmacs
         },
@@ -382,9 +403,9 @@ fn main() {
             par,
             (dp, dp, dp),
             w,
-            Some(par_kmm_lane),
+            Some(plan_kmm_n.lane()),
             || {
-                let (c, _) = fast::kmm_lane(pa.data(), pb.data(), dp, dp, dp, w, 2, par);
+                let c = plan_kmm_n.execute(pa.data(), pb.data());
                 std::hint::black_box(&c);
                 pmacs
             },
@@ -401,11 +422,15 @@ fn main() {
         t_kmm_1 / t_kmm_n
     );
     // Bit-exactness is enforced by the test suite; here just sanity-check
-    // one parallel lane-routed result against the serial u64 engine.
+    // one parallel plan-routed result against the serial forced-u64 plan.
+    let plan_u64_check = MatmulPlan::build(
+        PlanSpec::mm(dp, dp, dp, w).with_threads(1).in_lane(fast::LaneId::U64),
+    )
+    .expect("u64 lane covers w=16");
     assert_eq!(
-        fast::mm_lane(pa.data(), pb.data(), dp, dp, dp, w, par).0,
-        fast::mm(pa.data(), pb.data(), dp, dp, dp),
-        "parallel lane-routed engine must be bit-exact"
+        plan_mm_n.execute(pa.data(), pb.data()),
+        plan_u64_check.execute(pa.data(), pb.data()),
+        "parallel plan-routed engine must be bit-exact"
     );
 
     // 7. Width-specialized lanes: the same 160^3 GEMM at w = 8, on the
@@ -414,8 +439,14 @@ fn main() {
     //    quarter of the packed bytes per slab and runs a 4x-narrower
     //    multiplier — this section is where that shows up as wall time.
     let w8 = 8u32;
-    let narrow = fast::select_lane(w8, dp, 1).expect("w=8 in window");
+    let plan_narrow = MatmulPlan::build(PlanSpec::mm(dp, dp, dp, w8).with_threads(1))
+        .expect("w=8 in window");
+    let narrow = plan_narrow.lane();
     assert_eq!(narrow, fast::LaneId::U16, "w=8 at 160 deep selects u16");
+    let plan_wide = MatmulPlan::build(
+        PlanSpec::mm(dp, dp, dp, w8).with_threads(1).in_lane(fast::LaneId::U64),
+    )
+    .expect("u64 lane covers w=8");
     println!("-- width-specialized lanes (160^3, w = 8, lane {narrow} vs u64) --");
     let la = Mat::random(dp, dp, w8, &mut rng);
     let lb = Mat::random(dp, dp, w8, &mut rng);
@@ -428,7 +459,7 @@ fn main() {
         w8,
         Some(narrow),
         || {
-            let c = fast::mm_in_lane(narrow, la.data(), lb.data(), dp, dp, dp, w8, 1);
+            let c = plan_narrow.execute(la.data(), lb.data());
             std::hint::black_box(&c);
             pmacs
         },
@@ -442,7 +473,7 @@ fn main() {
         w8,
         Some(fast::LaneId::U64),
         || {
-            let c = fast::mm_in_lane(fast::LaneId::U64, la.data(), lb.data(), dp, dp, dp, w8, 1);
+            let c = plan_wide.execute(la.data(), lb.data());
             std::hint::black_box(&c);
             pmacs
         },
@@ -452,9 +483,56 @@ fn main() {
         t_lane_u64 / t_lane_narrow
     );
     assert_eq!(
-        fast::mm_in_lane(narrow, la.data(), lb.data(), dp, dp, dp, w8, 1),
-        fast::mm_in_lane(fast::LaneId::U64, la.data(), lb.data(), dp, dp, dp, w8, 1),
+        plan_narrow.execute(la.data(), lb.data()),
+        plan_wide.execute(la.data(), lb.data()),
         "lanes must be bit-exact"
+    );
+
+    // 8. Plan reuse vs rebuild: a batched-serving shape (few activation
+    //    rows against a large stationary operand) where per-call
+    //    re-validation + re-binding is a real fraction of each request.
+    //    The reuse side holds one BoundPlan; the rebuild side pays
+    //    MatmulPlan::build + bind_b on every call — what every caller
+    //    paid before the plan API.
+    let (bm, bk, bn, bw) = (4usize, 256usize, 256usize, 8u32);
+    let bmacs = (bm * bk * bn) as u64;
+    println!("-- plan reuse vs rebuild (kmm n=2, {bm}x{bk}x{bn}, w = {bw}) --");
+    let ba = Mat::random(bm, bk, bw, &mut rng);
+    let bb = Mat::random(bk, bn, bw, &mut rng);
+    let bound_spec = PlanSpec::kmm(bm, bk, bn, bw, 2).with_threads(1);
+    let bound = MatmulPlan::build(bound_spec).expect("w=8 in window").bind_b(bb.data());
+    let t_plan_reuse = bench(
+        &mut sections,
+        "plan-reuse kmm 4x256x256 w8 (MACs/s)",
+        30,
+        1,
+        (bm, bk, bn),
+        bw,
+        Some(bound.lane()),
+        || {
+            let c = bound.execute(ba.data());
+            std::hint::black_box(&c);
+            bmacs
+        },
+    );
+    let t_plan_rebuild = bench(
+        &mut sections,
+        "plan-rebuild kmm 4x256x256 w8 (MACs/s)",
+        30,
+        1,
+        (bm, bk, bn),
+        bw,
+        Some(bound.lane()),
+        || {
+            let fresh = MatmulPlan::build(bound_spec).expect("validated above").bind_b(bb.data());
+            let c = fresh.execute(ba.data());
+            std::hint::black_box(&c);
+            bmacs
+        },
+    );
+    println!(
+        "plan reuse vs rebuild: {:>5.2}x",
+        t_plan_rebuild / t_plan_reuse
     );
 
     // ---- the speedup gate measurement ---------------------------------
@@ -475,10 +553,10 @@ fn main() {
         println!("speedup gate missed on the first sample; re-measuring once (noisy runner?)");
         retried = true;
         g_fast_mm = time_median(10, || {
-            std::hint::black_box(fast::mm_lane(fa.data(), fb.data(), d, d, d, w, 1));
+            std::hint::black_box(plan_mm16.execute(fa.data(), fb.data()));
         });
         g_fast_kmm = time_median(10, || {
-            std::hint::black_box(fast::kmm_lane(fa.data(), fb.data(), d, d, d, w, 2, 1));
+            std::hint::black_box(plan_kmm16.execute(fa.data(), fb.data()));
         });
         g_ref_mm = time_median(3, || {
             let mut t = Tally::new();
@@ -509,22 +587,39 @@ fn main() {
         println!("lane gate missed on the first sample; re-measuring once (noisy runner?)");
         lane_retried = true;
         g_lane_narrow = time_median(10, || {
-            std::hint::black_box(fast::mm_in_lane(narrow, la.data(), lb.data(), dp, dp, dp, w8, 1));
+            std::hint::black_box(plan_narrow.execute(la.data(), lb.data()));
         });
         g_lane_u64 = time_median(10, || {
-            std::hint::black_box(fast::mm_in_lane(
-                fast::LaneId::U64,
-                la.data(),
-                lb.data(),
-                dp,
-                dp,
-                dp,
-                w8,
-                1,
-            ));
+            std::hint::black_box(plan_wide.execute(la.data(), lb.data()));
         });
         println!("retry ratio: lane {narrow} {:.2}x vs u64", g_lane_u64 / g_lane_narrow);
         lane_gate_ok = g_lane_narrow * LANE_MARGIN < g_lane_u64;
+    }
+
+    // ---- the plan-reuse gate measurement -------------------------------
+    // Reusing a bound plan must never lose to rebuilding it per call:
+    // the rebuild side does strictly more work (validation + packing +
+    // the same GEMM). Gate at >= 1.0x with the shared one-retry
+    // discipline so scheduler noise on tiny medians cannot flake it.
+    const PLAN_MARGIN: f64 = 1.0;
+    let (mut g_plan_reuse, mut g_plan_rebuild) = (t_plan_reuse, t_plan_rebuild);
+    let mut plan_retried = false;
+    let mut plan_gate_ok = g_plan_reuse * PLAN_MARGIN <= g_plan_rebuild;
+    if !plan_gate_ok {
+        println!("plan-reuse gate missed on the first sample; re-measuring once (noisy runner?)");
+        plan_retried = true;
+        g_plan_reuse = time_median(30, || {
+            std::hint::black_box(bound.execute(ba.data()));
+        });
+        g_plan_rebuild = time_median(30, || {
+            let fresh = MatmulPlan::build(bound_spec).expect("validated above").bind_b(bb.data());
+            std::hint::black_box(fresh.execute(ba.data()));
+        });
+        println!(
+            "retry ratio: plan reuse {:.2}x vs rebuild",
+            g_plan_rebuild / g_plan_reuse
+        );
+        plan_gate_ok = g_plan_reuse * PLAN_MARGIN <= g_plan_rebuild;
     }
 
     // ---- machine-readable output --------------------------------------
@@ -549,14 +644,19 @@ fn main() {
         "lane_narrow_vs_u64_w8".to_string(),
         Json::Float(finite(g_lane_u64 / g_lane_narrow)),
     );
+    speedups.insert(
+        "plan_reuse_vs_rebuild".to_string(),
+        Json::Float(finite(g_plan_rebuild / g_plan_reuse)),
+    );
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
-    // Schema 2: sections carry a "lane" field and the w=8 lane
-    // comparison (+ its gate) is recorded.
-    top.insert("schema".to_string(), Json::Int(2));
+    // Schema 3: schema 2 (per-section "lane") plus the plan-reuse
+    // sections, the plan_reuse_vs_rebuild speedup, and its gate flag.
+    top.insert("schema".to_string(), Json::Int(3));
     top.insert("threads_max".to_string(), Json::Int(par as i64));
     top.insert("speedup_gate_retried".to_string(), Json::Bool(retried));
     top.insert("lane_gate_retried".to_string(), Json::Bool(lane_retried));
+    top.insert("plan_gate_retried".to_string(), Json::Bool(plan_retried));
     top.insert(
         "sections".to_string(),
         Json::Array(sections.iter().map(Section::to_json).collect()),
@@ -582,11 +682,12 @@ fn main() {
             "missing section: {driver} at threads={threads}"
         );
     }
-    // Schema 2: every section records its lane (string or null), and
-    // both sides of the w=8 lane comparison are present.
+    // Schema 3: every section records its lane (string or null), both
+    // sides of the w=8 lane comparison are present, and so are both
+    // sides of the plan-reuse comparison plus its speedup.
     assert!(
         secs.iter().all(|s| s.get("lane").is_some()),
-        "schema 2 requires a lane field on every section"
+        "schema 3 requires a lane field on every section"
     );
     for lane in [narrow.name(), "u64"] {
         assert!(
@@ -597,6 +698,21 @@ fn main() {
             "missing w=8 lane section: {lane}"
         );
     }
+    for name in ["plan-reuse", "plan-rebuild"] {
+        assert!(
+            secs.iter().any(|s| {
+                s.get("name").and_then(Json::as_str).is_some_and(|n| n.contains(name))
+            }),
+            "missing section: {name}"
+        );
+    }
+    assert!(
+        parsed
+            .get("speedups")
+            .and_then(|s| s.get("plan_reuse_vs_rebuild"))
+            .is_some(),
+        "schema 3 requires the plan_reuse_vs_rebuild speedup"
+    );
     let out_path =
         std::env::var("KMM_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     std::fs::write(&out_path, &doc).expect("write bench json");
@@ -614,4 +730,11 @@ fn main() {
         g_lane_u64 / g_lane_narrow
     );
     println!("narrow lane beats u64 lane at w=8: OK");
+    assert!(
+        plan_gate_ok,
+        "reusing a bound plan must be >= {PLAN_MARGIN}x as fast as rebuilding it per call \
+         (after one retry); got {:.3}x",
+        g_plan_rebuild / g_plan_reuse
+    );
+    println!("plan reuse beats per-call rebuild: OK");
 }

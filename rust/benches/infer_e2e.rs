@@ -147,9 +147,10 @@ fn main() {
     );
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("infer_e2e".to_string()));
-    // Schema 2: every per-layer record names the fast-engine lane that
-    // served it ("lane": "u16"|"u32"|"u64", null for non-lane backends).
-    top.insert("schema".to_string(), Json::Int(2));
+    // Schema 3: schema 2 (per-layer "lane") plus per-layer "mode" — the
+    // resolved plan each layer served under ("mm1"|"kmm2"|"mm2"; null
+    // only for a layer that served zero streams).
+    top.insert("schema".to_string(), Json::Int(3));
     top.insert("threads".to_string(), Json::Int(par as i64));
     top.insert("cache_gate_retried".to_string(), Json::Bool(retried));
     top.insert("full".to_string(), full.to_json());
@@ -167,14 +168,20 @@ fn main() {
         .and_then(Json::as_array)
         .expect("full.layers array");
     assert_eq!(layers.len(), resnet(ResNet::R50, 8).len(), "one record per layer");
-    // Schema 2: the w=8 full pass runs on the fast engine, so every
-    // layer must name its lane — and at w=8 the selector's narrow u16
-    // lane serves every ResNet-50 depth.
+    // Schema 3: the w=8 full pass runs on the fast engine, so every
+    // layer must name its lane and resolved plan mode — at w=8 the
+    // selector's narrow u16 lane and the native mm1 window serve every
+    // ResNet-50 depth.
     for layer in layers {
         assert_eq!(
             layer.get("lane").and_then(Json::as_str),
             Some("u16"),
             "w=8 layer must record the narrow lane: {layer:?}"
+        );
+        assert_eq!(
+            layer.get("mode").and_then(Json::as_str),
+            Some("mm1"),
+            "w=8 layer must record its resolved plan mode: {layer:?}"
         );
     }
     for mode in ["fresh", "cached"] {

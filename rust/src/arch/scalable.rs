@@ -47,6 +47,16 @@ impl Mode {
             Mode::Mm2 => 4,
         }
     }
+
+    /// Short lowercase label for stats maps, plan descriptions, and
+    /// bench/infer JSON (`"mm1"`, `"kmm2"`, `"mm2"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Mm1 => "mm1",
+            Mode::Kmm2 => "kmm2",
+            Mode::Mm2 => "mm2",
+        }
+    }
 }
 
 /// Mode-selection error: the one-level scalable design tops out at `2m`.

@@ -9,19 +9,34 @@
 //!   (Pallas kernels lowered through L2), accumulating partial tile
 //!   products in Rust exactly as §IV-D accumulates outside the MXU.
 //! - [`FastBackend`] — the software hot path: the [`crate::fast`]
-//!   blocked engine (width-specialized lane microkernels, no tallying),
-//!   running either conventional MM or the Algorithm 4 digit-slice
-//!   decomposition on the narrowest element lane that is provably exact
-//!   for the request (`select_lane`); the served [`GemmResult`] reports
-//!   which lane ran.
+//!   blocked engine behind build-once [`MatmulPlan`]s (lane selection,
+//!   width gating, and thread budgeting resolved eagerly, typed
+//!   [`PlanError`](crate::fast::PlanError)s instead of panics); the
+//!   served [`GemmResult`] reports which lane ran.
 //! - All report the deterministic cycle model, so serving returns
 //!   timing alongside numerics.
+//!
+//! # Plan-based execution
+//!
+//! Mirroring the engine's plan API, a backend can specialize a request
+//! **once** and execute it many times: [`GemmBackend::resolve_spec`]
+//! maps a raw `(m, k, n, w)` request to the [`PlanSpec`] the backend's
+//! routing policy would run (decomposition from the width window, lane
+//! left to the selector, the backend's thread budget), and
+//! [`GemmBackend::plan`] builds it into an [`ExecutablePlan`] — a
+//! self-contained, validated configuration that executes without
+//! borrowing the backend. `gemm` is re-expressed through exactly this
+//! path, and `gemm_packed` serves from the registry's prebuilt
+//! [`BoundPlan`](crate::fast::BoundPlan)s, so per-call work on the
+//! serving path is the GEMM itself, nothing else.
 
 use crate::algo::matrix::{Mat, MatAcc};
 use crate::arch::mxu::SystolicSpec;
 use crate::arch::scalable::{select_mode, Mode, ScalableKmm};
 use crate::coordinator::registry::{PackPlan, PackedWeight, NATIVE_W};
-use crate::fast::{check_width, select_lane, LaneId};
+use crate::fast::{
+    check_width, select_lane, LaneChoice, LaneId, MatmulPlan, PlanAlgo, PlanSpec,
+};
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::gemm::{simulate_cycles, GemmStats};
 use crate::sim::tiler::TileGrid;
@@ -39,6 +54,28 @@ pub struct GemmResult {
     pub lane: Option<LaneId>,
 }
 
+/// A validated, backend-specialized execution configuration: built once
+/// by [`GemmBackend::plan`], executable any number of times without
+/// re-validating width, lane, digits, or thread budget — the
+/// coordinator-level face of [`MatmulPlan`].
+pub trait ExecutablePlan {
+    /// Execute `A·B` under this plan's fixed configuration. Operand
+    /// mistakes (shape or width violations) are served `Err`s — client
+    /// errors, not worker-killing panics.
+    fn execute(&self, a: &Mat, b: &Mat) -> Result<GemmResult>;
+
+    /// The precision mode this plan runs in.
+    fn mode(&self) -> Mode;
+
+    /// The fast-engine lane the plan resolved to (`None` for backends
+    /// without width-specialized lanes).
+    fn lane(&self) -> Option<LaneId>;
+
+    /// One-line human description of the resolved plan (what `kmm
+    /// gemm`/`kmm serve` print).
+    fn describe(&self) -> String;
+}
+
 /// A GEMM execution engine the server can own.
 ///
 /// Not `Send`: the PJRT client holds thread-affine state, so the server
@@ -50,11 +87,32 @@ pub trait GemmBackend {
     /// Execute `A·W` against a registered weight (weight-stationary
     /// serving). The default implementation serves from the weight's
     /// raw matrix — correct on every backend — while backends with a
-    /// prepacked hot path ([`FastBackend`]) override it to skip all
-    /// per-call packing. Bit-exact with `gemm(a, weight.raw(),
-    /// weight.w())` either way.
+    /// prepacked hot path ([`FastBackend`]) override it to serve from
+    /// the registry's prebuilt [`BoundPlan`]s. Bit-exact with
+    /// `gemm(a, weight.raw(), weight.w())` either way.
+    ///
+    /// [`BoundPlan`]: crate::fast::BoundPlan
     fn gemm_packed(&mut self, a: &Mat, weight: &PackedWeight) -> Result<GemmResult> {
         self.gemm(a, weight.raw(), weight.w())
+    }
+
+    /// The [`PlanSpec`] this backend's routing policy resolves a raw
+    /// `(m, k, n, w)` request to — algorithm from the width window,
+    /// lane left to the selector, thread budget from the backend's own
+    /// configuration. The default refuses: not every backend has a
+    /// plannable policy (PJRT executables are fixed at build time).
+    fn resolve_spec(&self, m: usize, k: usize, n: usize, w: u32) -> Result<PlanSpec> {
+        let _ = (m, k, n, w);
+        bail!("backend {} has no plan-based execution path", self.name());
+    }
+
+    /// Build `spec` into a self-contained [`ExecutablePlan`]: all
+    /// validation and specialization happens here, once, and the
+    /// returned plan executes without borrowing the backend. The
+    /// default refuses, matching [`resolve_spec`](Self::resolve_spec).
+    fn plan(&self, spec: &PlanSpec) -> Result<Box<dyn ExecutablePlan>> {
+        let _ = spec;
+        bail!("backend {} has no plan-based execution path", self.name());
     }
 
     /// Which [`PackPlan`] weights should be registered under for this
@@ -69,6 +127,35 @@ pub trait GemmBackend {
     fn name(&self) -> &'static str;
 }
 
+/// Lift a raw engine product into the served result shape: `u128`
+/// elements into the accumulator matrix, the lane that ran recorded,
+/// cycles from the same deterministic §IV-D schedule every backend
+/// reports. Shared by [`FastBackend`]'s plan and packed paths.
+fn finish_fast(
+    raw: &[u128],
+    m: usize,
+    k: usize,
+    n: usize,
+    mode: Mode,
+    lane: LaneId,
+    timing: &SystolicSpec,
+) -> GemmResult {
+    let mut c = MatAcc::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            c[(i, j)] = crate::util::wide::I256::from_u128(raw[i * n + j]);
+        }
+    }
+    let grid = TileGrid::new(m, k, n, timing.x, timing.y);
+    let stats = simulate_cycles(&grid, timing, mode.reads());
+    GemmResult {
+        c,
+        mode,
+        stats,
+        lane: Some(lane),
+    }
+}
+
 /// The architecture-model backend.
 pub struct FunctionalBackend {
     pub arch: ScalableKmm<SystolicSpec>,
@@ -80,17 +167,103 @@ impl FunctionalBackend {
             arch: ScalableKmm::paper_kmm(),
         }
     }
+
+    /// The mode the §IV-C controller resolves for a `w`-bit request —
+    /// the one derivation `resolve_spec` and `plan` share. Guards
+    /// `select_mode`'s `w >= 1` assert so a hand-built `w = 0` spec is
+    /// a served `Err`, never a panic.
+    fn mode_for(&self, w: u32) -> Result<Mode> {
+        if w == 0 {
+            bail!("w=0 is below the architecture's 1-bit floor");
+        }
+        select_mode(w, self.arch.m, self.arch.kmm_enabled).map_err(crate::util::error::Error::msg)
+    }
+
+    /// The plan decomposition a controller mode corresponds to.
+    fn algo_of(mode: Mode) -> PlanAlgo {
+        match mode {
+            Mode::Kmm2 => PlanAlgo::Kmm { digits: 2 },
+            Mode::Mm1 | Mode::Mm2 => PlanAlgo::Mm,
+        }
+    }
 }
 
-impl GemmBackend for FunctionalBackend {
-    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult> {
-        let (c, run) = self.arch.gemm(a, b, w)?;
+/// [`FunctionalBackend`]'s plan: the cloned architecture configuration
+/// plus the mode the controller resolved for the request width.
+struct FunctionalPlan {
+    arch: ScalableKmm<SystolicSpec>,
+    mode: Mode,
+    w: u32,
+}
+
+impl ExecutablePlan for FunctionalPlan {
+    fn execute(&self, a: &Mat, b: &Mat) -> Result<GemmResult> {
+        let (c, run) = self.arch.gemm(a, b, self.w)?;
         Ok(GemmResult {
             c,
             mode: run.mode,
             stats: run.stats,
             lane: None,
         })
+    }
+
+    fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    fn lane(&self) -> Option<LaneId> {
+        None
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "functional {} w={} (scalable array, m={}, cycle model)",
+            self.mode.name(),
+            self.w,
+            self.arch.m
+        )
+    }
+}
+
+impl GemmBackend for FunctionalBackend {
+    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult> {
+        let spec = self.resolve_spec(a.rows, a.cols, b.cols, w)?;
+        self.plan(&spec)?.execute(a, b)
+    }
+
+    fn resolve_spec(&self, m: usize, k: usize, n: usize, w: u32) -> Result<PlanSpec> {
+        let algo = FunctionalBackend::algo_of(self.mode_for(w)?);
+        Ok(PlanSpec {
+            m,
+            k,
+            n,
+            w,
+            algo,
+            // The functional model is inherently single-owner.
+            threads: Some(1),
+            lane: LaneChoice::Auto,
+        })
+    }
+
+    fn plan(&self, spec: &PlanSpec) -> Result<Box<dyn ExecutablePlan>> {
+        let mode = self.mode_for(spec.w)?;
+        // The controller, not the spec, owns the decomposition on this
+        // architecture: a hand-built spec that disagrees is a served
+        // Err, never a silently discarded field.
+        let expect = FunctionalBackend::algo_of(mode);
+        if spec.algo != expect {
+            bail!(
+                "functional controller resolves w={} to {} ({expect}), not {}",
+                spec.w,
+                mode.name(),
+                spec.algo
+            );
+        }
+        Ok(Box::new(FunctionalPlan {
+            arch: self.arch.clone(),
+            mode,
+            w: spec.w,
+        }))
     }
 
     fn name(&self) -> &'static str {
@@ -100,6 +273,9 @@ impl GemmBackend for FunctionalBackend {
 
 /// The PJRT artifact backend: GEMMs tile onto the fixed-shape AOT
 /// executables; partial tile products accumulate in Rust (§IV-D).
+/// Its executables are specialized at *build* time, so it keeps the
+/// default (refusing) [`GemmBackend::plan`] — the CLI falls back to
+/// direct dispatch for it.
 pub struct PjrtBackend {
     rt: Runtime,
     /// Tile size of the AOT GEMM entrypoints (from the manifest).
@@ -222,7 +398,8 @@ pub enum FastAlgo {
 }
 
 /// The software hot-path backend: the [`crate::fast`] blocked engine
-/// behind the same interface as the cycle-model backends.
+/// behind the same interface as the cycle-model backends, executing
+/// exclusively through build-once [`MatmulPlan`]s.
 ///
 /// Numerics run natively (no tallying, no wide temporaries); the
 /// reported statistics come from the same deterministic §IV-D cycle
@@ -240,80 +417,28 @@ pub struct FastBackend {
     pub m: u32,
     /// Worker threads for the engine (1 = the sequential driver; more
     /// run the scoped-thread parallel driver, bit-exact at any count).
+    /// Set explicitly (construction or `with_threads`), this always
+    /// overrides `KMM_THREADS` — the precedence documented on
+    /// [`crate::util::pool::env_threads_or`].
     pub threads: usize,
     /// Timing model used for reported stats (numerics are native).
     timing: SystolicSpec,
 }
 
-impl FastBackend {
-    /// Default configuration: the paper's m = 8 window boundary, 64×64
-    /// timing model, single-threaded engine.
-    pub fn new(algo: FastAlgo) -> Self {
-        Self::with_threads(algo, 1)
-    }
-
-    /// Like [`FastBackend::new`] with an explicit engine thread count
-    /// (clamped to at least 1).
-    pub fn with_threads(algo: FastAlgo, threads: usize) -> Self {
-        FastBackend {
-            algo,
-            m: 8,
-            threads: threads.max(1),
-            timing: SystolicSpec::paper_64(),
-        }
-    }
-
-    /// Mode label and digit count for a `w`-bit request (width
-    /// validation goes through the engine's shared
-    /// [`check_width`] gate, so every layer rejects with one message).
-    fn plan(&self, w: u32) -> Result<(Mode, u32)> {
-        check_width(w)?;
-        Ok(if w <= self.m {
-            (Mode::Mm1, 1)
-        } else {
-            match self.algo {
-                FastAlgo::Kmm => (Mode::Kmm2, 2),
-                FastAlgo::Mm => (Mode::Mm2, 1),
-            }
-        })
-    }
-
-    /// Wrap a raw engine product in the served result shape: `u128`
-    /// elements lifted into the accumulator matrix, the lane that ran
-    /// recorded, cycles from the same deterministic §IV-D schedule
-    /// every backend reports.
-    fn finish(
-        &self,
-        raw: &[u128],
-        m: usize,
-        k: usize,
-        n: usize,
-        mode: Mode,
-        lane: LaneId,
-    ) -> GemmResult {
-        let mut c = MatAcc::zeros(m, n);
-        for i in 0..m {
-            for j in 0..n {
-                c[(i, j)] = crate::util::wide::I256::from_u128(raw[i * n + j]);
-            }
-        }
-        let grid = TileGrid::new(m, k, n, self.timing.x, self.timing.y);
-        let stats = simulate_cycles(&grid, &self.timing, mode.reads());
-        GemmResult {
-            c,
-            mode,
-            stats,
-            lane: Some(lane),
-        }
-    }
+/// [`FastBackend`]'s plan: the engine [`MatmulPlan`] plus the mode
+/// label and timing model of the serving result.
+struct FastPlan {
+    plan: MatmulPlan,
+    mode: Mode,
+    timing: SystolicSpec,
 }
 
-impl GemmBackend for FastBackend {
-    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult> {
-        let (mode, digits) = self.plan(w)?;
+impl ExecutablePlan for FastPlan {
+    fn execute(&self, a: &Mat, b: &Mat) -> Result<GemmResult> {
+        let w = self.plan.w();
         // Malformed requests are client errors: serve an Err (the
         // sharded server turns it into a rejection) rather than
-        // panicking the worker that happens to own this backend.
+        // panicking the worker that happens to own this plan.
         if !(a.fits(w) && b.fits(w)) {
             bail!("operand exceeds w={w} bits");
         }
@@ -326,27 +451,118 @@ impl GemmBackend for FastBackend {
                 b.cols
             );
         }
-        let (m, k, n) = (a.rows, a.cols, b.cols);
-        let (raw, lane) = if digits == 1 {
-            crate::fast::mm_lane(a.data(), b.data(), m, k, n, w, self.threads)
-        } else {
-            crate::fast::kmm_lane(a.data(), b.data(), m, k, n, w, digits, self.threads)
-        };
-        Ok(self.finish(&raw, m, k, n, mode, lane))
+        if (a.rows, a.cols, b.cols) != (self.plan.m(), self.plan.k(), self.plan.n()) {
+            bail!(
+                "shape mismatch: plan is {}x{}x{}, request is {}x{}x{}",
+                self.plan.m(),
+                self.plan.k(),
+                self.plan.n(),
+                a.rows,
+                a.cols,
+                b.cols
+            );
+        }
+        let raw = self.plan.execute(a.data(), b.data());
+        Ok(finish_fast(
+            &raw,
+            self.plan.m(),
+            self.plan.k(),
+            self.plan.n(),
+            self.mode,
+            self.plan.lane(),
+            &self.timing,
+        ))
     }
 
-    /// The weight-stationary hot path: serve from the registry's cached
-    /// packings — the prepacked blocked driver below the digit-slice
-    /// window (or for the conventional decomposition), the cached
-    /// digit-plane tree above it — performing zero per-call B-packing
-    /// or plane-splitting work. The request's selected lane must match
-    /// the lane the cache entry records; on a mismatch (or when the
-    /// cache lacks the needed decomposition) the backend falls back to
-    /// the raw matrix, re-packing per call in the *request's* lane —
-    /// still bit-exact, just without the cache saving.
+    fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    fn lane(&self) -> Option<LaneId> {
+        Some(self.plan.lane())
+    }
+
+    fn describe(&self) -> String {
+        format!("{} [{}]", self.plan.describe(), self.mode.name())
+    }
+}
+
+impl FastBackend {
+    /// Default configuration: the paper's m = 8 window boundary, 64×64
+    /// timing model, single-threaded engine.
+    pub fn new(algo: FastAlgo) -> Self {
+        Self::with_threads(algo, 1)
+    }
+
+    /// Like [`FastBackend::new`] with an explicit engine thread count
+    /// (clamped to at least 1; always overrides `KMM_THREADS`).
+    pub fn with_threads(algo: FastAlgo, threads: usize) -> Self {
+        FastBackend {
+            algo,
+            m: 8,
+            threads: threads.max(1),
+            timing: SystolicSpec::paper_64(),
+        }
+    }
+
+    /// The mode label a spec serves under on this backend's window.
+    fn mode_of(&self, spec: &PlanSpec) -> Mode {
+        if spec.algo.digits() > 1 {
+            Mode::Kmm2
+        } else if spec.w <= self.m {
+            Mode::Mm1
+        } else {
+            Mode::Mm2
+        }
+    }
+}
+
+impl GemmBackend for FastBackend {
+    fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<GemmResult> {
+        if a.cols != b.rows {
+            bail!(
+                "dimension mismatch: A is {}x{}, B is {}x{}",
+                a.rows,
+                a.cols,
+                b.rows,
+                b.cols
+            );
+        }
+        let spec = self.resolve_spec(a.rows, a.cols, b.cols, w)?;
+        let (clamped, degenerate) = crate::fast::plan::clamp_degenerate(spec);
+        if degenerate {
+            // Legacy serving contract: a degenerate shape still
+            // validates width/operands/lane/digits and then serves an
+            // all-zero Ok result, exactly as the drivers' early-return
+            // did before the plan API.
+            if !(a.fits(w) && b.fits(w)) {
+                bail!("operand exceeds w={w} bits");
+            }
+            let plan = MatmulPlan::build(clamped)?;
+            let raw = vec![0u128; spec.m * spec.n];
+            return Ok(finish_fast(
+                &raw,
+                spec.m,
+                spec.k,
+                spec.n,
+                self.mode_of(&spec),
+                plan.lane(),
+                &self.timing,
+            ));
+        }
+        self.plan(&spec)?.execute(a, b)
+    }
+
+    /// The weight-stationary hot path: serve from the registry's
+    /// prebuilt [`BoundPlan`](crate::fast::BoundPlan)s — zero per-call
+    /// packing, plane-splitting, or lane re-validation. The lane this
+    /// request routes to must match the lane the bound plan records; on
+    /// a mismatch (or when the cache lacks the needed decomposition)
+    /// the backend falls back to the raw matrix, re-planning per call
+    /// in the *request's* lane — still bit-exact, just without the
+    /// cache saving.
     fn gemm_packed(&mut self, a: &Mat, weight: &PackedWeight) -> Result<GemmResult> {
         let w = weight.w();
-        let (mode, digits) = self.plan(w)?;
         // The weight's width is implicit in the handle, so an activation
         // that exceeds it is a client error the server must *reject*
         // (serve an Err), not a process-killing precondition.
@@ -363,30 +579,58 @@ impl GemmBackend for FastBackend {
             );
         }
         let (m, k, n) = (a.rows, a.cols, weight.cols());
+        let spec = self.resolve_spec(m, k, n, w)?;
+        let digits = spec.algo.digits();
         // The lane this request routes to — the same select_lane rule
-        // the registry packed under, so matched entries verify equal.
-        let lane = select_lane(w, k, digits).expect("plan() validated the width");
-        let raw = if digits == 1 {
-            let Some(panels) = weight.mm().filter(|p| p.lane() == lane) else {
-                return self.gemm(a, weight.raw(), w);
-            };
-            panels.gemm(a.data(), m, self.threads)
-        } else if let Some(planes) = weight
-            .kmm()
-            .filter(|p| p.digits() == digits && p.lane() == lane)
-        {
-            planes.kmm(a.data(), m, self.threads)
-        } else {
+        // the registry's plans were built under, so matched entries
+        // verify equal.
+        let lane = select_lane(w, k, digits).expect("resolve_spec validated the width");
+        let bound = if digits == 1 { weight.mm() } else { weight.kmm() };
+        let Some(bound) = bound.filter(|bp| bp.lane() == lane && bp.digits() == digits) else {
             return self.gemm(a, weight.raw(), w);
         };
-        Ok(self.finish(&raw, m, k, n, mode, lane))
+        let raw = bound.execute_with_threads(a.data(), self.threads);
+        Ok(finish_fast(&raw, m, k, n, self.mode_of(&spec), lane, &self.timing))
+    }
+
+    fn resolve_spec(&self, m: usize, k: usize, n: usize, w: u32) -> Result<PlanSpec> {
+        // Width validation goes through the engine's shared check_width
+        // gate, so every layer rejects with one message.
+        check_width(w)?;
+        let algo = if w <= self.m {
+            PlanAlgo::Mm
+        } else {
+            match self.algo {
+                FastAlgo::Kmm => PlanAlgo::Kmm { digits: 2 },
+                FastAlgo::Mm => PlanAlgo::Mm,
+            }
+        };
+        Ok(PlanSpec {
+            m,
+            k,
+            n,
+            w,
+            algo,
+            threads: Some(self.threads),
+            lane: LaneChoice::Auto,
+        })
+    }
+
+    fn plan(&self, spec: &PlanSpec) -> Result<Box<dyn ExecutablePlan>> {
+        let mode = self.mode_of(spec);
+        let plan = MatmulPlan::build(*spec)?;
+        Ok(Box::new(FastPlan {
+            plan,
+            mode,
+            timing: self.timing,
+        }))
     }
 
     /// Pack only the decomposition this backend's routing reads — and,
     /// when the instance runs a nonstandard window (`m !=`
     /// [`NATIVE_W`], which the registry's pack rules are keyed to),
     /// fall back to the agnostic plan so the cache always holds
-    /// whatever `plan()` ends up asking for.
+    /// whatever `resolve_spec` ends up asking for.
     fn preferred_plan(&self) -> PackPlan {
         if self.m != NATIVE_W {
             return PackPlan::Both;
@@ -467,6 +711,30 @@ mod tests {
     }
 
     #[test]
+    fn functional_backend_plans_and_describes() {
+        let be = FunctionalBackend::paper();
+        let spec = be.resolve_spec(5, 7, 5, 12).unwrap();
+        assert_eq!(spec.algo, PlanAlgo::Kmm { digits: 2 });
+        assert_eq!(spec.threads, Some(1));
+        let plan = be.plan(&spec).unwrap();
+        assert_eq!(plan.mode(), Mode::Kmm2);
+        assert_eq!(plan.lane(), None);
+        assert!(plan.describe().contains("functional"), "{}", plan.describe());
+        let mut rng = Rng::new(7);
+        let a = Mat::random(5, 7, 12, &mut rng);
+        let b = Mat::random(7, 5, 12, &mut rng);
+        let r = plan.execute(&a, &b).unwrap();
+        assert_eq!(r.c, matmul_oracle(&a, &b));
+        // The controller owns the decomposition: a spec that disagrees
+        // (w=12 resolves to kmm2 on the paper config) is rejected, and
+        // so is a hand-built w=0 spec (no select_mode panic).
+        let err = be.plan(&PlanSpec::mm(5, 7, 5, 12)).unwrap_err();
+        assert!(err.to_string().contains("controller resolves"), "{err:#}");
+        let err = be.plan(&PlanSpec::mm(5, 7, 5, 0)).unwrap_err();
+        assert!(err.to_string().contains("1-bit floor"), "{err:#}");
+    }
+
+    #[test]
     fn pjrt_routing_windows() {
         // Window routing is pure logic — no runtime needed.
         for (w, expect) in [
@@ -540,6 +808,63 @@ mod tests {
     }
 
     #[test]
+    fn fast_backend_plans_are_reusable() {
+        // One resolved spec, one built plan, many executions — the
+        // serving hot path pays validation exactly once.
+        let mut rng = Rng::new(29);
+        let be = FastBackend::with_threads(FastAlgo::Kmm, 2);
+        let spec = be.resolve_spec(6, 9, 5, 12).unwrap();
+        assert_eq!(spec.algo, PlanAlgo::Kmm { digits: 2 });
+        assert_eq!(spec.threads, Some(2), "backend budget wins over env");
+        let plan = be.plan(&spec).unwrap();
+        assert_eq!(plan.mode(), Mode::Kmm2);
+        assert!(plan.describe().contains("kmm[2]"), "{}", plan.describe());
+        for _ in 0..3 {
+            let a = Mat::random(6, 9, 12, &mut rng);
+            let b = Mat::random(9, 5, 12, &mut rng);
+            let r = plan.execute(&a, &b).unwrap();
+            assert_eq!(r.c, matmul_oracle(&a, &b));
+            assert_eq!(Some(r.mode), Some(Mode::Kmm2));
+        }
+        // A shape the plan was not built for is a served rejection.
+        let a = Mat::random(7, 9, 12, &mut rng);
+        let b = Mat::random(9, 5, 12, &mut rng);
+        let err = plan.execute(&a, &b).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn fast_backend_serves_degenerate_shapes_like_before() {
+        // The pre-plan drivers early-returned all-zero outputs for
+        // zero-dimension requests; the served contract keeps that (Ok,
+        // not a ZeroDim rejection), with width still gated first.
+        let mut rng = Rng::new(31);
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let b = Mat::random(4, 3, 12, &mut rng);
+        let r = be.gemm(&Mat::from_rows(0, 4, &[]), &b, 12).unwrap();
+        assert_eq!((r.c.rows, r.c.cols), (0, 3));
+        let r = be.gemm(&Mat::random(2, 4, 12, &mut rng), &Mat::from_rows(4, 0, &[]), 12).unwrap();
+        assert_eq!((r.c.rows, r.c.cols), (2, 0));
+        let err = be.gemm(&Mat::from_rows(0, 4, &[]), &Mat::from_rows(4, 0, &[]), 40).unwrap_err();
+        assert!(err.to_string().contains("exceeds the fast engine"), "{err:#}");
+    }
+
+    #[test]
+    fn fast_backend_plan_surfaces_typed_errors() {
+        // Build-time rejections are served Errs carrying the PlanError
+        // message, not panics.
+        let be = FastBackend::new(FastAlgo::Kmm);
+        let err = be.resolve_spec(2, 2, 2, 40).unwrap_err();
+        assert!(err.to_string().contains("exceeds the fast engine"), "{err:#}");
+        let bad = PlanSpec::kmm(2, 2, 2, 8, 3);
+        let err = be.plan(&bad).unwrap_err();
+        assert!(err.to_string().contains("invalid KMM config"), "{err:#}");
+        let zero = PlanSpec::mm(0, 2, 2, 8);
+        let err = be.plan(&zero).unwrap_err();
+        assert!(err.to_string().contains("zero dimension"), "{err:#}");
+    }
+
+    #[test]
     fn fast_backend_packed_matches_fresh_prop() {
         // The weight-stationary hot path == per-call packing == oracle,
         // across the native window, both decompositions, and threads.
@@ -569,7 +894,7 @@ mod tests {
 
     #[test]
     fn fast_backend_reports_the_selected_lane() {
-        // The served result names the lane select_lane picks for the
+        // The served result names the lane the plan resolved for the
         // request's (w, k, digits); the cycle-model backends report none.
         let mut rng = Rng::new(19);
         let mut be = FastBackend::new(FastAlgo::Kmm);
@@ -590,7 +915,7 @@ mod tests {
     #[test]
     fn lane_mismatched_cache_falls_back_to_fresh_packing() {
         // A weight forced into the u64 lane while the request selects
-        // u16: the backend must *reject the cache entry* (re-pack per
+        // u16: the backend must *reject the cache entry* (re-plan per
         // call) rather than serve from an unverified lane — and the
         // result stays bit-exact with the matched-lane path.
         use crate::coordinator::registry::{PackPlan, PackedWeight};
@@ -614,8 +939,8 @@ mod tests {
 
     #[test]
     fn preferred_plans_match_backend_routing() {
-        // Each fast backend asks for exactly the packing its plan()
-        // routes to; a nonstandard window keeps every packing; backends
+        // Each fast backend asks for exactly the packing its routing
+        // reads; a nonstandard window keeps every packing; backends
         // without a prepacked path keep the agnostic default.
         assert_eq!(FastBackend::new(FastAlgo::Kmm).preferred_plan(), PackPlan::Kmm);
         assert_eq!(FastBackend::new(FastAlgo::Mm).preferred_plan(), PackPlan::Mm);
@@ -629,7 +954,7 @@ mod tests {
     #[test]
     fn plan_mismatched_weights_fall_back_to_raw_serving() {
         // A weight packed for one decomposition served by the other
-        // backend: the cache lacks the needed packing, so the raw
+        // backend: the cache lacks the needed bound plan, so the raw
         // fallback runs — still bit-exact, and over-wide activations
         // are rejected (served Err), never a panic.
         use crate::coordinator::registry::{PackPlan, PackedWeight};
@@ -700,6 +1025,27 @@ mod tests {
         let a = Mat::zeros(2, 2);
         let err = be.gemm(&a, &a, 33).unwrap_err();
         assert!(err.to_string().contains("ceiling"), "{err:#}");
+    }
+
+    #[test]
+    fn pjrt_backend_has_no_plan_path() {
+        // The AOT executables are specialized at build time; the trait
+        // default refuses plan construction with a descriptive error.
+        let be = FastBackend::new(FastAlgo::Mm);
+        assert!(be.resolve_spec(2, 2, 2, 8).is_ok());
+        struct Stub;
+        impl GemmBackend for Stub {
+            fn gemm(&mut self, _: &Mat, _: &Mat, _: u32) -> Result<GemmResult> {
+                bail!("unused")
+            }
+            fn name(&self) -> &'static str {
+                "stub"
+            }
+        }
+        let err = Stub.resolve_spec(2, 2, 2, 8).unwrap_err();
+        assert!(err.to_string().contains("no plan-based execution"), "{err:#}");
+        let err = Stub.plan(&PlanSpec::mm(2, 2, 2, 8)).unwrap_err();
+        assert!(err.to_string().contains("no plan-based execution"), "{err:#}");
     }
 
     #[test]

@@ -2,19 +2,21 @@
 //! for weight-stationary serving.
 //!
 //! The paper's accelerators load weights into the PEs once and stream
-//! activations against them (§IV); the software counterpart is to pack
-//! a weight matrix once — [`LanePackedB`] panels, plus the full
-//! Karatsuba digit-plane decomposition ([`LanePackedKmmB`]) when the
-//! width calls for digit slicing — and serve any number of requests
-//! against the cached [`PackedWeight`] with zero per-request pack work.
+//! activations against them (§IV); the software counterpart is to
+//! **bind** a weight matrix into the fast engine's plan API once — a
+//! [`BoundPlan`] per decomposition the serving backend reads, each
+//! owning its prepacked panels (or the full Karatsuba digit-plane tree)
+//! — and serve any number of requests against the cached
+//! [`PackedWeight`] with zero per-request pack work.
 //!
-//! Every packing is built in the lane the engine's selector
-//! ([`select_lane`](crate::fast::select_lane)) picks for the weight's
-//! `(w, k)` — a `w = 8` weight's panels live in `u16` storage, a
-//! quarter of the bytes of the old always-`u64` cache — and the entry
-//! **records** that lane, so the serving backend can verify the lane a
-//! request routes to matches the lane the cache holds before reading
-//! the panels (and fall back to a fresh re-pack when it does not).
+//! Every bound plan is built through [`MatmulPlan::build`], so lane
+//! selection, width gating, and digit validation happen **once at
+//! registration**, with typed
+//! [`PlanError`](crate::fast::PlanError)-backed failures instead of
+//! serve-time panics. The entry records the lane each plan resolved to,
+//! and the serving backend verifies the lane a request routes to
+//! matches before reading the panels (falling back to a fresh re-plan
+//! when it does not).
 //!
 //! One [`WeightRegistry`] is shared (behind an `Arc`) by **all** shards
 //! of the batch server, so a handle registered through any front door is
@@ -31,7 +33,7 @@
 //! use kmm::coordinator::registry::WeightRegistry;
 //!
 //! let registry = WeightRegistry::new();
-//! // Register the stationary operand once...
+//! // Register (plan + bind) the stationary operand once...
 //! let weight = Mat::from_rows(2, 2, &[1, 2, 3, 4]);
 //! let handle = registry.register(weight, 8).unwrap();
 //! // ...then stream activations against the handle.
@@ -44,7 +46,7 @@
 //! ```
 
 use crate::algo::matrix::Mat;
-use crate::fast::{check_width, Blocking, LaneId, LanePackedB, LanePackedKmmB};
+use crate::fast::{check_width, BoundPlan, LaneId, MatmulPlan, PlanSpec};
 use crate::util::error::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -60,15 +62,15 @@ pub const NATIVE_W: u32 = 8;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct WeightHandle(pub u64);
 
-/// Which decompositions a registered weight is prepacked for. A packed
+/// Which decompositions a registered weight is bound for. A packed
 /// weight is weight-*sized* state: above the native window the
 /// conventional panels cost one weight copy and the digit-plane tree
 /// about three (scaled by the selected lane's storage width), so a
-/// registry that knows its serving backend should pack only what that
+/// registry that knows its serving backend should bind only what that
 /// backend reads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PackPlan {
-    /// Pack for every fast decomposition (backend-agnostic; the
+    /// Bind every fast decomposition (backend-agnostic; the
     /// memory-heaviest choice).
     Both,
     /// Serving backend routes conventionally (`fast-mm`): conventional
@@ -78,66 +80,69 @@ pub enum PackPlan {
     /// (`fast-kmm`): the digit-plane tree, plus conventional panels
     /// only at widths the window serves natively.
     Kmm,
-    /// Pack nothing — for backends whose `gemm_packed` serves from the
+    /// Bind nothing — for backends whose `gemm_packed` serves from the
     /// raw matrix (e.g. `functional`), where any packing would be pure
     /// waste.
     Raw,
 }
 
 /// One registered weight: the raw matrix (for fallback backends and
-/// cross-validation) plus the packings its [`PackPlan`] calls for, each
-/// built in — and tagged with — the lane the selector picked.
+/// cross-validation) plus the [`BoundPlan`]s its [`PackPlan`] calls
+/// for, each built — and lane-tagged — through [`MatmulPlan::build`].
 ///
-/// All packing work happens here, once, at construction — the serving
-/// paths only read. `mm` serves both the native window and the
-/// conventional-MM decomposition; `kmm` is the Karatsuba digit-plane
-/// tree used for `w >` [`NATIVE_W`] digit-sliced serving. A packing the
-/// plan skipped reads as `None`, and [`FastBackend`] falls back to the
-/// raw matrix — correct, just without the saving. The same fallback
-/// runs on a **lane mismatch** (an entry packed for a different lane
-/// than the request selects, e.g. via
+/// All planning and packing work happens here, once, at construction —
+/// the serving paths only read. `mm` serves both the native window and
+/// the conventional-MM decomposition; `kmm` is the Karatsuba
+/// digit-plane binding used for `w >` [`NATIVE_W`] digit-sliced
+/// serving. A binding the plan skipped reads as `None`, and
+/// [`FastBackend`] falls back to the raw matrix — correct, just without
+/// the saving. The same fallback runs on a **lane mismatch** (an entry
+/// bound in a different lane than the request selects, e.g. via
 /// [`with_plan_in_lane`](PackedWeight::with_plan_in_lane)): the backend
-/// re-packs per call rather than serving from an unverified cache.
+/// re-plans per call rather than serving from an unverified cache.
 ///
 /// [`FastBackend`]: crate::coordinator::dispatch::FastBackend
 #[derive(Debug, Clone)]
 pub struct PackedWeight {
     raw: Mat,
     w: u32,
-    mm: Option<LanePackedB>,
-    kmm: Option<LanePackedKmmB>,
+    mm: Option<BoundPlan>,
+    kmm: Option<BoundPlan>,
 }
 
 impl PackedWeight {
-    /// Pack `b` (a `k × n` weight on `w`-bit elements) for serving on
+    /// Bind `b` (a `k × n` weight on `w`-bit elements) for serving on
     /// any fast backend ([`PackPlan::Both`]). Fails on widths outside
     /// the fast engine's window or operands exceeding `w` bits.
     pub fn new(b: Mat, w: u32) -> Result<PackedWeight> {
         PackedWeight::with_plan(b, w, PackPlan::Both)
     }
 
-    /// [`PackedWeight::new`] packing only what `plan` serves from, in
-    /// the lane [`select_lane`](crate::fast::select_lane) picks for the
-    /// weight's `(w, k)` — the same rule the serving path applies, so
-    /// cache and request lanes agree by construction.
+    /// [`PackedWeight::new`] binding only what `plan` serves from, in
+    /// the lane the plan builder selects for the weight's `(w, k)` —
+    /// the same rule the serving path applies, so cache and request
+    /// lanes agree by construction.
     pub fn with_plan(b: Mat, w: u32, plan: PackPlan) -> Result<PackedWeight> {
         PackedWeight::build(b, w, plan, None)
     }
 
-    /// [`with_plan`](PackedWeight::with_plan) forcing every packing
+    /// [`with_plan`](PackedWeight::with_plan) forcing every binding
     /// into an explicit `lane` instead of the selected one. The serving
     /// backend verifies lanes at request time and falls back to raw
     /// serving on a mismatch, so a forced entry is *safe* but possibly
     /// *useless* — this exists for lane-migration tooling and the
     /// mismatch tests, not the serving path. Fails when `lane` is not
-    /// provably exact for the weight.
+    /// provably exact for the weight (the typed
+    /// [`PlanError::LaneHeadroom`](crate::fast::PlanError) surfaces
+    /// through the error chain).
     pub fn with_plan_in_lane(b: Mat, w: u32, plan: PackPlan, lane: LaneId) -> Result<PackedWeight> {
-        if !crate::fast::lane_exact(lane, w, b.rows, 1) {
-            bail!(
-                "lane {lane} is not exact for a w={w} weight of depth {} (headroom rule)",
-                b.rows
-            );
-        }
+        // Validate the forced lane eagerly even when `plan` binds
+        // nothing (PackPlan::Raw builds no MatmulPlan of its own), so
+        // the typed PlanError surfaces for every plan choice. The probe
+        // costs validation only — no packing.
+        MatmulPlan::build(
+            PlanSpec::mm(1, b.rows.max(1), b.cols.max(1), w).with_threads(1).in_lane(lane),
+        )?;
         PackedWeight::build(b, w, plan, Some(lane))
     }
 
@@ -147,27 +152,45 @@ impl PackedWeight {
             bail!("weight exceeds w={w} bits");
         }
         let (k, n) = (b.rows, b.cols);
+        // A zero-dimension weight binds nothing (MatmulPlan::build
+        // rejects zero dims): registration still succeeds, as it did
+        // before the plan API, and serving falls back to the raw
+        // matrix, where the degenerate shape serves all-zero results.
+        let degenerate = k == 0 || n == 0;
         // Below the native window every decomposition degenerates to the
-        // plain blocked GEMM, so the conventional panels are the one
-        // packing any plan serves from there.
-        let build_mm = match plan {
-            PackPlan::Both | PackPlan::Mm => true,
-            PackPlan::Kmm => w <= NATIVE_W,
-            PackPlan::Raw => false,
-        };
+        // plain blocked GEMM, so the conventional binding is the one
+        // plan any backend serves from there.
+        let build_mm = !degenerate
+            && match plan {
+                PackPlan::Both | PackPlan::Mm => true,
+                PackPlan::Kmm => w <= NATIVE_W,
+                PackPlan::Raw => false,
+            };
         // `config_valid(2, w)` holds for every w in 9..=32, so width
         // alone decides: above the native window the digit-slicing
         // plans always get their plane tree.
-        let build_kmm = w > NATIVE_W && matches!(plan, PackPlan::Both | PackPlan::Kmm);
-        let bl = Blocking::default();
-        let mm = build_mm.then(|| match lane {
-            Some(l) => LanePackedB::pack_in(l, b.data(), k, n, w, &bl),
-            None => LanePackedB::pack_select(b.data(), k, n, w, &bl),
-        });
-        let kmm = build_kmm.then(|| match lane {
-            Some(l) => LanePackedKmmB::pack_in(l, b.data(), k, n, w, 2),
-            None => LanePackedKmmB::pack_select(b.data(), k, n, w, 2),
-        });
+        let build_kmm =
+            !degenerate && w > NATIVE_W && matches!(plan, PackPlan::Both | PackPlan::Kmm);
+        // Bound entries are m-agnostic (each request's activation
+        // supplies its own row count) and thread-agnostic (the serving
+        // shard applies its backend's budget), so the specs pin m = 1
+        // and threads = 1.
+        let with_lane = |spec: PlanSpec| match lane {
+            Some(l) => spec.in_lane(l),
+            None => spec,
+        };
+        let mm = if build_mm {
+            let spec = with_lane(PlanSpec::mm(1, k, n, w).with_threads(1));
+            Some(MatmulPlan::build(spec)?.bind_b(b.data()))
+        } else {
+            None
+        };
+        let kmm = if build_kmm {
+            let spec = with_lane(PlanSpec::kmm(1, k, n, w, 2).with_threads(1));
+            Some(MatmulPlan::build(spec)?.bind_b(b.data()))
+        } else {
+            None
+        };
         Ok(PackedWeight { raw: b, w, mm, kmm })
     }
 
@@ -191,32 +214,34 @@ impl PackedWeight {
         self.raw.cols
     }
 
-    /// The conventional blocked-GEMM packing, when the plan built one.
-    pub fn mm(&self) -> Option<&LanePackedB> {
+    /// The conventional blocked-GEMM binding, when the plan built one.
+    pub fn mm(&self) -> Option<&BoundPlan> {
         self.mm.as_ref()
     }
 
-    /// The Karatsuba digit-plane cache, when width and plan call for one.
-    pub fn kmm(&self) -> Option<&LanePackedKmmB> {
+    /// The Karatsuba digit-plane binding, when width and plan call for
+    /// one.
+    pub fn kmm(&self) -> Option<&BoundPlan> {
         self.kmm.as_ref()
     }
 
-    /// The lane the conventional panels were packed for, when present —
+    /// The lane the conventional binding resolved to, when present —
     /// what the serving backend checks its selected lane against.
     pub fn mm_lane(&self) -> Option<LaneId> {
-        self.mm.as_ref().map(LanePackedB::lane)
+        self.mm.as_ref().map(BoundPlan::lane)
     }
 
-    /// The lane the digit-plane tree was packed for, when present.
+    /// The lane the digit-plane binding resolved to, when present.
     pub fn kmm_lane(&self) -> Option<LaneId> {
-        self.kmm.as_ref().map(LanePackedKmmB::lane)
+        self.kmm.as_ref().map(BoundPlan::lane)
     }
 
     /// Total packed bytes held by this entry (cache observability —
     /// narrow-lane entries hold `elem_bits/64` of the `u64` footprint).
     pub fn bytes(&self) -> usize {
-        self.mm.as_ref().map_or(0, LanePackedB::bytes)
-            + self.kmm.as_ref().map_or(0, LanePackedKmmB::bytes)
+        let mm = self.mm.as_ref().map_or(0, BoundPlan::bytes);
+        let kmm = self.kmm.as_ref().map_or(0, BoundPlan::bytes);
+        mm + kmm
     }
 }
 
@@ -235,14 +260,14 @@ impl WeightRegistry {
         WeightRegistry::default()
     }
 
-    /// Pack and store a weight for any backend ([`PackPlan::Both`]);
-    /// the returned handle serves any number of subsequent requests
-    /// with zero further pack work.
+    /// Plan, bind, and store a weight for any backend
+    /// ([`PackPlan::Both`]); the returned handle serves any number of
+    /// subsequent requests with zero further pack work.
     pub fn register(&self, b: Mat, w: u32) -> Result<WeightHandle> {
         self.register_with_plan(b, w, PackPlan::Both)
     }
 
-    /// [`register`](Self::register) packing only what `plan` serves
+    /// [`register`](Self::register) binding only what `plan` serves
     /// from — use when the serving backend is known, to keep the
     /// registry at the bytes it actually reads.
     pub fn register_with_plan(&self, b: Mat, w: u32, plan: PackPlan) -> Result<WeightHandle> {
@@ -350,21 +375,22 @@ mod tests {
     #[test]
     fn digit_plane_cache_follows_the_width_window() {
         let mut rng = Rng::new(5);
-        // At or below the native window: no digit-plane cache.
+        // At or below the native window: no digit-plane binding.
         let pw = PackedWeight::new(Mat::random(4, 4, 8, &mut rng), 8).unwrap();
         assert!(pw.mm().is_some());
         assert!(pw.kmm().is_none());
-        // Above it: the KMM2 plane tree is prebuilt alongside the panels.
+        // Above it: the KMM2 plane tree is prebound alongside the panels.
         let pw = PackedWeight::new(Mat::random(4, 4, 12, &mut rng), 12).unwrap();
         assert!(pw.mm().is_some());
         let planes = pw.kmm().expect("digit planes for w > NATIVE_W");
         assert_eq!((planes.w(), planes.digits()), (12, 2));
+        assert_eq!((planes.rows(), planes.cols()), (4, 4));
     }
 
     #[test]
     fn entries_record_the_selected_lane() {
         let mut rng = Rng::new(6);
-        // w=8 shallow weight: both packings ride the u16 lane (the
+        // w=8 shallow weight: both bindings ride the u16 lane (the
         // selector's headroom rule admits it), at a quarter of the
         // always-u64 bytes.
         let pw = PackedWeight::new(Mat::random(6, 5, 8, &mut rng), 8).unwrap();
@@ -387,7 +413,8 @@ mod tests {
         )
         .unwrap();
         assert_eq!(pw.mm_lane(), Some(LaneId::U64));
-        // Forcing a lane that violates the headroom rule is rejected.
+        // Forcing a lane whose storage cannot hold the width is
+        // rejected with the typed PlanError::LaneStorage message.
         let err = PackedWeight::with_plan_in_lane(
             Mat::random(6, 5, 32, &mut rng),
             32,
@@ -395,7 +422,26 @@ mod tests {
             LaneId::U16,
         )
         .unwrap_err();
-        assert!(err.to_string().contains("not exact"), "{err:#}");
+        assert!(err.to_string().contains("do not fit"), "{err:#}");
+        // A lane that stores the width but lacks accumulator headroom
+        // surfaces the typed PlanError::LaneHeadroom message.
+        let err = PackedWeight::with_plan_in_lane(
+            Mat::random(5, 4, 16, &mut rng),
+            16,
+            PackPlan::Mm,
+            LaneId::U16,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not provably exact"), "{err:#}");
+        // The lane is validated even for plans that bind nothing.
+        let err = PackedWeight::with_plan_in_lane(
+            Mat::random(5, 4, 16, &mut rng),
+            16,
+            PackPlan::Raw,
+            LaneId::U16,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not provably exact"), "{err:#}");
     }
 
     #[test]
@@ -421,7 +467,7 @@ mod tests {
         let narrow = Mat::random(6, 5, 8, &mut rng);
         let pw = PackedWeight::with_plan(narrow, 8, PackPlan::Kmm).unwrap();
         assert!(pw.mm().is_some() && pw.kmm().is_none());
-        // Raw packs nothing at all (backends that serve from the raw
+        // Raw binds nothing at all (backends that serve from the raw
         // matrix), so the entry costs only the matrix itself.
         let pw_raw = PackedWeight::with_plan(b.clone(), 12, PackPlan::Raw).unwrap();
         assert!(pw_raw.mm().is_none() && pw_raw.kmm().is_none());
@@ -431,6 +477,25 @@ mod tests {
         // the same shape.
         let both = PackedWeight::with_plan(b, 12, PackPlan::Both).unwrap();
         assert!(both.bytes() > pw.bytes());
+    }
+
+    #[test]
+    fn bound_entries_serve_any_batch_size() {
+        // The m-agnostic binding contract gemm_packed relies on: one
+        // registration serves activations of any row count, bit-exact
+        // with a fresh plan at that shape.
+        let mut rng = Rng::new(9);
+        let (k, n, w) = (11usize, 6usize, 12u32);
+        let b = Mat::random(k, n, w, &mut rng);
+        let pw = PackedWeight::with_plan(b.clone(), w, PackPlan::Kmm).unwrap();
+        let bound = pw.kmm().expect("digit planes above the window");
+        for m in [1usize, 3, 8] {
+            let a = Mat::random(m, k, w, &mut rng);
+            let fresh = MatmulPlan::build(PlanSpec::kmm(m, k, n, w, 2).with_threads(1))
+                .unwrap()
+                .execute(a.data(), b.data());
+            assert_eq!(bound.execute(a.data()), fresh, "m={m}");
+        }
     }
 
     #[test]

@@ -132,6 +132,30 @@ impl ServerStats {
     }
 }
 
+/// A request entering the front door — the one submission type the
+/// single [`Server::enqueue`] path accepts. The `submit*` convenience
+/// methods are thin constructors over it.
+#[derive(Debug, Clone)]
+pub enum Submission {
+    /// A raw GEMM: both operands travel with the request.
+    Raw {
+        /// Activation operand.
+        a: Mat,
+        /// Stationary-side operand (per request, unregistered).
+        b: Mat,
+        /// Operand bitwidth.
+        w: u32,
+    },
+    /// A weight-stationary GEMM: an activation against a handle
+    /// registered in the shared [`WeightRegistry`].
+    Packed {
+        /// Activation operand.
+        a: Mat,
+        /// Registered weight to serve against.
+        handle: WeightHandle,
+    },
+}
+
 enum Msg {
     Req(Request, Sender<Response>),
     Packed(PackedRequest, Sender<Response>),
@@ -234,44 +258,50 @@ impl Server {
         self.registry.register_with_plan(b, w, plan)
     }
 
-    /// Allocate a request id, pick its shard (round-robin), and send
-    /// the message `make` builds from the id and reply channel — the
-    /// one routing policy both request kinds share.
-    fn dispatch(
-        &mut self,
-        make: impl FnOnce(u64, Sender<Response>) -> Msg,
-    ) -> (u64, Receiver<Response>) {
+    /// The one enqueue path every `submit*` variant routes through:
+    /// request-id allocation, shard round-robin, and message
+    /// construction live here and nowhere else (batch-id allocation and
+    /// stats accounting live in the one worker loop), so the four
+    /// public variants cannot drift apart.
+    pub fn enqueue(&mut self, sub: Submission) -> (u64, Receiver<Response>) {
         self.next_id += 1;
         let id = self.next_id;
         let shard = (id as usize - 1) % self.txs.len();
         let (rtx, rrx) = channel();
-        self.txs[shard].send(make(id, rtx)).expect("server alive");
+        let msg = match sub {
+            Submission::Raw { a, b, w } => Msg::Req(Request { id, a, b, w }, rtx),
+            Submission::Packed { a, handle } => Msg::Packed(PackedRequest { id, a, handle }, rtx),
+        };
+        self.txs[shard].send(msg).expect("server alive");
         (id, rrx)
+    }
+
+    /// Block on an enqueued request's response.
+    fn wait((_, rx): (u64, Receiver<Response>)) -> Response {
+        rx.recv().expect("worker alive")
     }
 
     /// Submit a GEMM; returns the receiver for its response. Requests
     /// are dispatched round-robin across the worker shards.
     pub fn submit(&mut self, a: Mat, b: Mat, w: u32) -> (u64, Receiver<Response>) {
-        self.dispatch(|id, rtx| Msg::Req(Request { id, a, b, w }, rtx))
+        self.enqueue(Submission::Raw { a, b, w })
     }
 
     /// Submit and block for the result.
     pub fn submit_sync(&mut self, a: Mat, b: Mat, w: u32) -> Response {
-        let (_, rx) = self.submit(a, b, w);
-        rx.recv().expect("worker alive")
+        Self::wait(self.enqueue(Submission::Raw { a, b, w }))
     }
 
     /// Submit an activation against a registered weight; returns the
     /// receiver for its response. Round-robins across shards exactly
     /// like [`submit`](Self::submit) — any shard can serve any handle.
     pub fn submit_packed(&mut self, a: Mat, handle: WeightHandle) -> (u64, Receiver<Response>) {
-        self.dispatch(|id, rtx| Msg::Packed(PackedRequest { id, a, handle }, rtx))
+        self.enqueue(Submission::Packed { a, handle })
     }
 
     /// Submit against a registered weight and block for the result.
     pub fn submit_packed_sync(&mut self, a: Mat, handle: WeightHandle) -> Response {
-        let (_, rx) = self.submit_packed(a, handle);
-        rx.recv().expect("worker alive")
+        Self::wait(self.enqueue(Submission::Packed { a, handle }))
     }
 
     /// Stop every worker and collect the merged statistics.
@@ -374,7 +404,7 @@ fn worker_loop(
                 let resp = match result {
                     Ok(res) => {
                         stats.total_cycles += res.stats.cycles;
-                        *stats.by_mode.entry(mode_name(res.mode)).or_insert(0) += 1;
+                        *stats.by_mode.entry(res.mode.name()).or_insert(0) += 1;
                         if let Some(lane) = res.lane {
                             *stats.by_lane.entry(lane.name()).or_insert(0) += 1;
                         }
@@ -408,14 +438,6 @@ fn worker_loop(
             let _ = s.send(stats);
             return;
         }
-    }
-}
-
-fn mode_name(m: Mode) -> &'static str {
-    match m {
-        Mode::Mm1 => "mm1",
-        Mode::Kmm2 => "kmm2",
-        Mode::Mm2 => "mm2",
     }
 }
 
@@ -722,6 +744,40 @@ mod tests {
         assert_eq!(stats.requests, 8);
         assert_eq!(stats.weight_hits, 4);
         assert_eq!(stats.by_mode.get("kmm2"), Some(&8));
+    }
+
+    #[test]
+    fn all_submission_kinds_share_one_enqueue_path() {
+        // Raw and packed submissions draw from the same id sequence and
+        // the same round-robin — the single-enqueue contract. With 2
+        // shards, ids alternate shards regardless of submission kind.
+        let mut srv = Server::start(
+            || Box::new(FastBackend::new(FastAlgo::Mm)) as Box<dyn GemmBackend>,
+            ServerConfig::default().workers(2),
+        );
+        let mut rng = Rng::new(44);
+        let b = Mat::random(4, 3, 8, &mut rng);
+        let h = srv.register_weight(b.clone(), 8).unwrap();
+        let mut ids = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let a = Mat::random(2, 4, 8, &mut rng);
+            let (id, rx) = if i % 2 == 0 {
+                srv.enqueue(Submission::Packed { a, handle: h })
+            } else {
+                let b2 = Mat::random(4, 3, 8, &mut rng);
+                srv.enqueue(Submission::Raw { a, b: b2, w: 8 })
+            };
+            ids.push(id);
+            rxs.push(rx);
+        }
+        assert_eq!(ids, vec![1, 2, 3, 4, 5, 6], "one dense id sequence");
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.weight_hits, 3);
     }
 
     #[test]

@@ -21,7 +21,10 @@
 //! This driver is the fast engine's conventional path (`MM₁` in the
 //! paper's terms: one native multiplication per MAC); the Karatsuba
 //! digit-slice path in [`crate::fast::kmm`] runs three of these per
-//! recursion level on narrower operands.
+//! recursion level on narrower operands. Serving layers reach both
+//! through a validated [`MatmulPlan`](crate::fast::plan::MatmulPlan),
+//! which resolves lane and thread budget once and calls straight into
+//! these drivers.
 //!
 //! # Parallel execution
 //!

@@ -426,9 +426,12 @@ fn kmm_prepacked_rec<E: Element, K: Kernel<E> + Sync>(
 
 /// A [`PackedKmmB`] in whichever lane the selector chose for the
 /// weight, behind a runtime tag — the digit-sliced counterpart of
-/// [`LanePackedB`](crate::fast::pack::LanePackedB), stored by the
-/// coordinator's weight registry with the lane recorded for serve-time
-/// verification.
+/// [`LanePackedB`](crate::fast::pack::LanePackedB). Serving layers
+/// reach it through a
+/// [`BoundPlan`](crate::fast::plan::BoundPlan) (built by
+/// [`MatmulPlan::bind_b`](crate::fast::plan::MatmulPlan::bind_b)),
+/// which pairs the packing with its validated plan so the lane is
+/// verified at build time rather than per serve.
 #[derive(Debug, Clone)]
 pub enum LanePackedKmmB {
     /// Digit planes in `u16` storage (`u32` accumulation).

@@ -1,5 +1,6 @@
 //! The fast GEMM execution engine: a production software hot path for
-//! integer matrix multiplication, with both conventional and Karatsuba
+//! integer matrix multiplication, driven by **build-once execution
+//! plans** ([`MatmulPlan`]) with both conventional and Karatsuba
 //! digit-slice drivers, width-specialized over element-storage lanes.
 //!
 //! Everything in [`crate::algo`] is *instrumented ground truth*: every
@@ -8,11 +9,63 @@
 //! and useless as a serving hot path. This module is the opposite
 //! trade: native lane arithmetic, no tallying, cache-aware blocking —
 //! and bit-exact agreement with the references, enforced by property
-//! tests (`tests/integration_fast.rs`, `tests/integration_lanes.rs`).
+//! tests (`tests/integration_fast.rs`, `tests/integration_lanes.rs`,
+//! `tests/integration_plan.rs`).
+//!
+//! # The plan API
+//!
+//! The paper's accelerators are *configured once* — bitwidth, tile
+//! geometry, and recursion depth are baked into the datapath — and then
+//! stream operands through that fixed configuration (§IV). The engine
+//! mirrors that shape: a [`PlanSpec`] describes the request (shape,
+//! width, [`PlanAlgo`], thread budget, lane policy) and
+//! [`MatmulPlan::build`] validates and specializes it **once**, eagerly
+//! — width gating, digit-config validation, lane selection or
+//! forced-lane headroom proof, thread-budget resolution — returning a
+//! typed [`PlanError`] instead of a deep-driver panic. The built plan
+//! executes any number of times with zero per-call re-validation:
+//!
+//! ```
+//! use kmm::fast::{MatmulPlan, PlanSpec, LaneId};
+//!
+//! let plan = MatmulPlan::build(PlanSpec::mm(2, 3, 2, 8).with_threads(1)).unwrap();
+//! assert_eq!(plan.lane(), LaneId::U16); // resolved at build time
+//! let a = vec![1u64; 6];
+//! let b = vec![2u64; 6];
+//! assert_eq!(plan.execute(&a, &b), vec![6u128; 4]);
+//! ```
+//!
+//! For weight-stationary serving, [`MatmulPlan::bind_b`] pre-packs the
+//! stationary operand into a [`BoundPlan`] that owns the packed panels
+//! (or the full Karatsuba digit-plane tree) — the entry type the
+//! coordinator's [`WeightRegistry`] stores, serving any number of
+//! activations with zero per-call packing.
+//!
+//! # Migrating from the legacy entry points
+//!
+//! The original free functions remain as thin **compatibility shims**
+//! over plans (they build a plan per call, so hot paths should hold a
+//! plan instead):
+//!
+//! | legacy entry point            | plan equivalent                                        |
+//! |-------------------------------|--------------------------------------------------------|
+//! | [`mm`]`(a, b, m, k, n)`       | `PlanSpec::mm(m, k, n, 32).with_threads(1).in_lane(U64)` |
+//! | [`kmm_digits`]`(…, w, d)`     | `PlanSpec::kmm(m, k, n, w, d).with_threads(1).in_lane(U64)` |
+//! | [`mm_threads`]`(…, t)`        | `PlanSpec::mm(m, k, n, 32).with_threads(t).in_lane(U64)` |
+//! | [`kmm_digits_threads`]`(…, t)`| `PlanSpec::kmm(m, k, n, w, d).with_threads(t).in_lane(U64)` |
+//! | [`mm_lane`]`(…, w, t)`        | `PlanSpec::mm(m, k, n, w).with_threads(t)` (lane auto) |
+//! | [`kmm_lane`]`(…, w, d, t)`    | `PlanSpec::kmm(m, k, n, w, d).with_threads(t)`         |
+//! | [`mm_in_lane`]`(lane, …)`     | `PlanSpec::mm(m, k, n, w).with_threads(t).in_lane(lane)` |
+//! | [`kmm_in_lane`]`(lane, …)`    | `PlanSpec::kmm(m, k, n, w, d).with_threads(t).in_lane(lane)` |
+//!
+//! …each followed by `MatmulPlan::build(spec)?.execute(a, b)`. The
+//! shims preserve the historical panic-on-invalid behavior (they
+//! `panic!` with the [`PlanError`] message); plan-aware callers get the
+//! typed error instead.
 //!
 //! # Design
 //!
-//! Four layers, innermost first (the rten/BLIS shape):
+//! Five layers, innermost first (the rten/BLIS shape):
 //!
 //! - [`lane`] — the [`Element`] lanes: storage/accumulator type pairs
 //!   (`u16/u32`, `u32/u64`, `u64/u128`) the whole stack is generic
@@ -20,36 +73,22 @@
 //!   [`check_width`] gate.
 //! - [`kernel`] — the [`Kernel`] trait: fixed `MR × NR` register-tile
 //!   microkernels whose accumulators stay in registers across the whole
-//!   depth loop, monomorphized per lane. [`Kernel8x4`] is the default;
-//!   [`Kernel1x1`] is the scalar cross-check.
+//!   depth loop, monomorphized per lane.
 //! - [`pack`] — operand packing into depth-major panels in the lane's
-//!   storage width: contiguous kernel reads, zero-padded edges so the
-//!   microkernel never branches on bounds.
-//! - [`gemm`] — the blocked driver: `NC`-wide B slabs, `KC`-deep packed
-//!   blocks, `MC`-tall packed A blocks, register tiles innermost; each
-//!   depth block accumulates into the shared lane-accumulator output.
-//!
-//! # The KMM digit-slice driver
-//!
-//! [`kmm`] lifts Algorithm 4 onto this engine: split `w`-bit inputs
-//! into digit planes (the same [`crate::algo::bits::split`] definition
-//! the exact layer uses), run `A1·B1`, `As·Bs`, `A0·B0` as three native
-//! sub-GEMMs, and recombine with the paper's shifts. Per recursion
-//! level that is 3 sub-GEMMs against the conventional 4 — the
-//! multiplication saving the custom hardware exploits — while the extra
-//! digit-plane additions stay O(d²).
+//!   storage width; [`PackedB`] is the owned, reusable form.
+//! - [`gemm`] / [`kmm`] — the blocked conventional driver and the
+//!   Algorithm-4 digit-slice driver above it, fresh-pack and prepacked,
+//!   sequential and scoped-thread parallel.
+//! - [`plan`] — the build-once descriptor layer everything above routes
+//!   through: validation, lane selection, and thread budgeting happen
+//!   exactly once per configuration.
 //!
 //! # Lane selection
 //!
-//! The paper's precision-scalable architectures size every datapath to
-//! the operand width `w` (Tables 1/3, §IV); the software mirror is to
-//! pick the narrowest [`Element`] lane whose accumulator provably
-//! covers the computation. [`select_lane`]`(w, k, digits)` applies the
-//! headroom rule [`required_acc_bits`]`(w, k, digits) ≤ acc_bits` —
-//! `2w` bits per product, `⌈log₂ k⌉` bits of depth accumulation, with
-//! the Karatsuba recombination shifts bounded by the same quantity
-//! because every shifted term is a non-negative summand of the final
-//! product:
+//! [`select_lane`]`(w, k, digits)` picks the narrowest [`Element`] lane
+//! whose accumulator provably covers the computation via
+//! [`required_acc_bits`] (`2w + ⌈log₂ k⌉` bits, recursed over the digit
+//! tree):
 //!
 //! | lane  | storage | accumulator | exact while                        |
 //! |-------|---------|-------------|------------------------------------|
@@ -57,67 +96,51 @@
 //! | `u32` | 32 bit  | `u64`       | `w ≤ 32` and `2w + ⌈log₂ k⌉ ≤ 64`  |
 //! | `u64` | 64 bit  | `u128`      | `w ≤ 32`, any representable depth  |
 //!
-//! Concretely: `w = 8` model traces (ResNet-50/VGG-16) ride the `u16`
-//! lane up to `k = 2¹⁶` deep — 4× less packed-B traffic per slab and a
-//! 4×-narrower multiplier than the old always-`u64` path — while
-//! `w = 16` at practical depths rides `u32`, and `w = 32` stays on
-//! `u64/u128`. Every lane is bit-exact against `algo::mm1`/`algo::kmm`
-//! (property grid in `tests/integration_lanes.rs`, including all-ones
-//! operands at each lane's exact boundary); widths past [`MAX_W`] (up
-//! to the paper's w = 64) stay on the exact [`I256`] reference path,
-//! and [`check_width`] is the one gate every entry point shares.
-//!
-//! The [`mm_lane`]/[`kmm_lane`] routers apply the rule to
-//! `u64`-boundary operands (narrow → compute → widen; the `O(m·k+k·n)`
-//! staging is repaid across the `O(m·k·n)` hot loop), and
-//! [`mm_in_lane`]/[`kmm_in_lane`] force an explicit lane for
-//! cross-lane benchmarks. The coordinator records the selected lane
-//! per packed weight and re-routes or falls back when a request's lane
-//! disagrees with the cache.
+//! `w = 8` model traces ride the `u16` lane up to `k = 2¹⁶` deep — 4×
+//! less packed-B traffic per slab and a 4×-narrower multiplier than the
+//! always-`u64` path. Widths past [`MAX_W`] stay on the exact [`I256`]
+//! reference path; [`check_width`] is the one gate every entry point
+//! (and every plan build) shares. A plan records the resolved lane, and
+//! the coordinator verifies a cache entry's lane against the request's
+//! before serving from it.
 //!
 //! # Parallel execution
 //!
-//! Every driver has a `*_threads` variant running on the scoped-thread
-//! pool in [`crate::util::pool`]: [`mm_threads`] parallelizes the
-//! blocked driver over disjoint output row strips (packed-B slab shared
-//! read-only), and [`kmm_digits_threads`] additionally forks the three
-//! digit-plane sub-GEMMs per recursion level — the software mirror of
-//! the paper's PE-level parallelism. All parallel paths are bit-exact
-//! with their sequential counterparts at every thread count
+//! A plan's resolved thread budget drives the scoped-thread pool in
+//! [`crate::util::pool`]: the blocked driver parallelizes over disjoint
+//! output row strips (packed-B slab shared read-only), and the
+//! digit-slice driver additionally forks the three digit-plane
+//! sub-GEMMs per recursion level. All parallel paths are bit-exact with
+//! their sequential counterparts at every thread count
 //! (`tests/integration_parallel.rs`), and `threads = 1` *is* the
-//! sequential path.
+//! sequential path. Budget precedence (explicit > `KMM_THREADS` >
+//! fallback) is resolved once at plan build by
+//! [`crate::util::pool::resolve_threads`].
 //!
 //! # Prepacked operands (weight-stationary serving)
 //!
-//! The paper's accelerators are weight-stationary: weights load into
-//! the PEs once and are reused across the whole activation stream
-//! (§IV). The software mirror is the prepacked-operand cache:
-//! [`PackedB`] packs a stationary B operand once (slab-for-slab
-//! identical to what the fresh path packs per call), and
-//! [`PackedKmmB`] additionally caches the full Karatsuba digit-plane
-//! decomposition — both in the selected lane's storage, wrapped in
-//! [`LanePackedB`]/[`LanePackedKmmB`] runtime tags so the coordinator's
-//! [`WeightRegistry`] records which lane each weight was packed for and
-//! verifies the match before serving. The `gemm_prepacked{,_threads}`
-//! and `kmm_prepacked{,_threads}` drivers are bit-exact with their
-//! fresh-pack counterparts at every shape, lane, and thread count
-//! (enforced by `tests/integration_prepack.rs`).
+//! [`MatmulPlan::bind_b`] packs a stationary B operand once —
+//! [`PackedB`] panels for conventional plans, the [`PackedKmmB`]
+//! digit-plane tree for Karatsuba plans, both in the plan's lane — and
+//! the resulting [`BoundPlan`] serves any number of activations with
+//! zero per-call packing, bit-exact with fresh packing by construction
+//! (`tests/integration_prepack.rs`, `tests/integration_plan.rs`).
 //!
 //! [`I256`]: crate::util::wide::I256
 //! [`Tally`]: crate::algo::opcount::Tally
 //! [`WeightRegistry`]: crate::coordinator::registry::WeightRegistry
 //! [`Kernel`]: kernel::Kernel
-//! [`Kernel8x4`]: kernel::Kernel8x4
-//! [`Kernel1x1`]: kernel::Kernel1x1
 //! [`kmm`]: kmm::kmm
 //! [`Element`]: lane::Element
 //! [`required_acc_bits`]: lane::required_acc_bits
+//! [`PackedKmmB`]: kmm::PackedKmmB
 
 pub mod gemm;
 pub mod kernel;
 pub mod kmm;
 pub mod lane;
 pub mod pack;
+pub mod plan;
 
 pub use gemm::{
     gemm_into, gemm_into_threads, gemm_prepacked, gemm_prepacked_into,
@@ -129,20 +152,44 @@ pub use lane::{
     check_width, lane_exact, required_acc_bits, select_lane, Element, LaneId, MAX_W,
 };
 pub use pack::{LanePackedB, PackedB};
+pub use plan::{BoundPlan, LaneChoice, MatmulPlan, PlanAlgo, PlanError, PlanSpec};
 
-use lane::{narrow_plane, widen_acc};
-
-/// Conventional blocked GEMM with the default kernel and blocking on
-/// the `u64` lane: `C = A·B` over row-major `w ≤ 32`-bit inputs (see
-/// [`gemm::gemm`]). Width-aware callers should prefer [`mm_lane`],
-/// which routes through the narrowest exact lane.
-pub fn mm(a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<u128> {
-    gemm::gemm(&Kernel8x4, a, b, m, k, n)
+/// Build a plan from `spec`, preserving the legacy shim contract:
+/// panic (with the typed error's message) on an invalid configuration.
+fn plan_or_panic(spec: PlanSpec) -> MatmulPlan {
+    MatmulPlan::build(spec).unwrap_or_else(|e| panic!("{e}"))
 }
 
-/// Karatsuba digit-slice GEMM with the default kernel on the `u64`
-/// lane: Algorithm 4 with `digits = 2^r` over the blocked driver (see
-/// [`kmm::kmm`]). Width-aware callers should prefer [`kmm_lane`].
+/// Run a shim: validate `spec` (degenerate zero dimensions clamped to
+/// 1 by [`plan::clamp_degenerate`], so width/lane/digit validation
+/// still runs first, as the legacy wrappers' drivers did), then execute
+/// — or return the legacy all-zero `m × n` output for degenerate
+/// shapes. Returns the product plus the resolved lane for the router
+/// shims.
+fn shim_run(spec: PlanSpec, a: &[u64], b: &[u64]) -> (Vec<u128>, LaneId) {
+    let (clamped, degenerate) = plan::clamp_degenerate(spec);
+    let plan = plan_or_panic(clamped);
+    let lane = plan.lane();
+    if degenerate {
+        return (vec![0; spec.m * spec.n], lane);
+    }
+    (plan.execute(a, b), lane)
+}
+
+/// Compatibility shim: conventional blocked GEMM on the `u64` lane over
+/// row-major `w ≤ 32`-bit inputs. Equivalent to a
+/// `PlanSpec::mm(m, k, n, 32).with_threads(1).in_lane(LaneId::U64)`
+/// plan; width-aware callers should build a [`MatmulPlan`] (automatic
+/// lane selection) and reuse it instead.
+pub fn mm(a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<u128> {
+    shim_run(PlanSpec::mm(m, k, n, MAX_W).with_threads(1).in_lane(LaneId::U64), a, b).0
+}
+
+/// Compatibility shim: Karatsuba digit-slice GEMM (`digits = 2^r`) on
+/// the `u64` lane. Equivalent to a
+/// `PlanSpec::kmm(m, k, n, w, digits).with_threads(1).in_lane(LaneId::U64)`
+/// plan; panics on invalid configurations (plan builders get a typed
+/// [`PlanError`] instead).
 pub fn kmm_digits(
     a: &[u64],
     b: &[u64],
@@ -152,11 +199,11 @@ pub fn kmm_digits(
     w: u32,
     digits: u32,
 ) -> Vec<u128> {
-    kmm::kmm(&Kernel8x4, a, b, m, k, n, w, digits)
+    shim_run(PlanSpec::kmm(m, k, n, w, digits).with_threads(1).in_lane(LaneId::U64), a, b).0
 }
 
-/// [`mm`] across up to `threads` scoped worker threads (bit-exact at
-/// every thread count; see [`gemm::gemm_into_threads`]).
+/// Compatibility shim: [`mm`] across up to `threads` scoped worker
+/// threads (bit-exact at every thread count).
 pub fn mm_threads(
     a: &[u64],
     b: &[u64],
@@ -165,12 +212,12 @@ pub fn mm_threads(
     n: usize,
     threads: usize,
 ) -> Vec<u128> {
-    gemm::gemm_threads(&Kernel8x4, a, b, m, k, n, threads)
+    shim_run(PlanSpec::mm(m, k, n, MAX_W).with_threads(threads).in_lane(LaneId::U64), a, b).0
 }
 
-/// [`kmm_digits`] across up to `threads` scoped worker threads: the
-/// three digit-plane sub-GEMMs run concurrently per recursion level
-/// (bit-exact at every thread count; see [`kmm::kmm_threads`]).
+/// Compatibility shim: [`kmm_digits`] across up to `threads` scoped
+/// worker threads (the three digit-plane sub-GEMMs fork per recursion
+/// level; bit-exact at every thread count).
 #[allow(clippy::too_many_arguments)]
 pub fn kmm_digits_threads(
     a: &[u64],
@@ -182,19 +229,14 @@ pub fn kmm_digits_threads(
     digits: u32,
     threads: usize,
 ) -> Vec<u128> {
-    kmm::kmm_threads(&Kernel8x4, a, b, m, k, n, w, digits, threads)
+    shim_run(PlanSpec::kmm(m, k, n, w, digits).with_threads(threads).in_lane(LaneId::U64), a, b).0
 }
 
-/// Conventional blocked GEMM on an explicit lane: narrow the
-/// `u64`-boundary operands into `lane` storage, run the blocked driver
-/// there, and widen the product back to `u128`. Panics unless
-/// [`lane_exact`]`(lane, w, k, 1)` — the same contract the KMM driver
-/// asserts — so a forced lane past its headroom bound refuses instead
-/// of silently wrapping. Use [`mm_lane`] to have the selector pick for
-/// you; this entry exists for cross-lane comparison (benches, boundary
-/// tests). Operands must fit `w` bits — checked in debug builds; in
-/// release the serving layers' `fits(w)` validation is the guard, and
-/// an out-of-contract value narrows with truncation.
+/// Compatibility shim: conventional blocked GEMM on an explicit lane.
+/// Panics unless the lane is provably exact for `(w, k)` — the same
+/// contract [`MatmulPlan::build`] reports as a typed
+/// [`PlanError::LaneHeadroom`]. This entry exists for cross-lane
+/// comparison (benches, boundary tests).
 #[allow(clippy::too_many_arguments)]
 pub fn mm_in_lane(
     lane: LaneId,
@@ -206,45 +248,11 @@ pub fn mm_in_lane(
     w: u32,
     threads: usize,
 ) -> Vec<u128> {
-    debug_assert!(
-        a.iter().chain(b).all(|&x| crate::algo::bits::fits(x, w)),
-        "operand exceeds w={w} bits"
-    );
-    assert!(
-        lane_exact(lane, w, k, 1),
-        "lane {}: not provably exact for w={w} at depth k={k} \
-         (storage {} bits, accumulator {} bits < required {})",
-        lane.name(),
-        lane.elem_bits(),
-        lane.acc_bits(),
-        required_acc_bits(w, k, 1)
-    );
-    match lane {
-        LaneId::U16 => widen_acc::<u16>(gemm::gemm_threads(
-            &Kernel8x4,
-            &narrow_plane::<u16>(a),
-            &narrow_plane::<u16>(b),
-            m,
-            k,
-            n,
-            threads,
-        )),
-        LaneId::U32 => widen_acc::<u32>(gemm::gemm_threads(
-            &Kernel8x4,
-            &narrow_plane::<u32>(a),
-            &narrow_plane::<u32>(b),
-            m,
-            k,
-            n,
-            threads,
-        )),
-        LaneId::U64 => gemm::gemm_threads(&Kernel8x4, a, b, m, k, n, threads),
-    }
+    shim_run(PlanSpec::mm(m, k, n, w).with_threads(threads).in_lane(lane), a, b).0
 }
 
-/// Karatsuba digit-slice GEMM on an explicit lane (see [`mm_in_lane`];
-/// the driver asserts the lane's headroom contract for `(w, k,
-/// digits)`).
+/// Compatibility shim: Karatsuba digit-slice GEMM on an explicit lane
+/// (see [`mm_in_lane`]).
 #[allow(clippy::too_many_arguments)]
 pub fn kmm_in_lane(
     lane: LaneId,
@@ -257,38 +265,13 @@ pub fn kmm_in_lane(
     digits: u32,
     threads: usize,
 ) -> Vec<u128> {
-    match lane {
-        LaneId::U16 => widen_acc::<u16>(kmm::kmm_threads(
-            &Kernel8x4,
-            &narrow_plane::<u16>(a),
-            &narrow_plane::<u16>(b),
-            m,
-            k,
-            n,
-            w,
-            digits,
-            threads,
-        )),
-        LaneId::U32 => widen_acc::<u32>(kmm::kmm_threads(
-            &Kernel8x4,
-            &narrow_plane::<u32>(a),
-            &narrow_plane::<u32>(b),
-            m,
-            k,
-            n,
-            w,
-            digits,
-            threads,
-        )),
-        LaneId::U64 => kmm::kmm_threads(&Kernel8x4, a, b, m, k, n, w, digits, threads),
-    }
+    shim_run(PlanSpec::kmm(m, k, n, w, digits).with_threads(threads).in_lane(lane), a, b).0
 }
 
-/// Width-routed conventional GEMM: pick the narrowest lane that is
-/// provably exact for a `w`-bit depth-`k` GEMM ([`select_lane`]), run
-/// [`mm_in_lane`] there, and report which lane served. Panics when `w`
-/// is outside the engine window — serving layers gate with
-/// [`check_width`] first.
+/// Compatibility shim: width-routed conventional GEMM — build an
+/// auto-lane plan, execute it, and report which lane served. Panics
+/// when `w` is outside the engine window (plan builders get
+/// [`PlanError::Width`]).
 pub fn mm_lane(
     a: &[u64],
     b: &[u64],
@@ -298,12 +281,11 @@ pub fn mm_lane(
     w: u32,
     threads: usize,
 ) -> (Vec<u128>, LaneId) {
-    let lane = select_lane(w, k, 1)
-        .unwrap_or_else(|| panic!("no lane serves w={w} (engine window exceeded)"));
-    (mm_in_lane(lane, a, b, m, k, n, w, threads), lane)
+    shim_run(PlanSpec::mm(m, k, n, w).with_threads(threads), a, b)
 }
 
-/// Width-routed Karatsuba digit-slice GEMM (see [`mm_lane`]).
+/// Compatibility shim: width-routed Karatsuba digit-slice GEMM (see
+/// [`mm_lane`]).
 #[allow(clippy::too_many_arguments)]
 pub fn kmm_lane(
     a: &[u64],
@@ -315,9 +297,7 @@ pub fn kmm_lane(
     digits: u32,
     threads: usize,
 ) -> (Vec<u128>, LaneId) {
-    let lane = select_lane(w, k, digits)
-        .unwrap_or_else(|| panic!("no lane serves w={w} (engine window exceeded)"));
-    (kmm_in_lane(lane, a, b, m, k, n, w, digits, threads), lane)
+    shim_run(PlanSpec::kmm(m, k, n, w, digits).with_threads(threads), a, b)
 }
 
 #[cfg(test)]
@@ -364,7 +344,28 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "no lane serves")]
+    fn shims_preserve_zero_dim_behavior() {
+        // The legacy wrappers returned all-zero outputs for degenerate
+        // shapes (the drivers early-return); the shims keep that even
+        // though MatmulPlan::build reports ZeroDim to plan callers.
+        assert_eq!(mm(&[], &[], 0, 3, 2), Vec::<u128>::new());
+        assert_eq!(mm(&[], &[], 2, 0, 3), vec![0u128; 6]);
+        assert_eq!(mm_threads(&[], &[], 2, 3, 0, 4), Vec::<u128>::new());
+        assert_eq!(kmm_digits(&[], &[], 2, 0, 2, 8, 2), vec![0u128; 4]);
+        assert_eq!(kmm_digits_threads(&[], &[], 0, 2, 2, 8, 2, 2), Vec::<u128>::new());
+        // The lane shims too: width/lane validation still runs, then the
+        // all-zero output — and the routers report the lane the same
+        // depth would select (⌈log₂ 0⌉ == ⌈log₂ 1⌉ == 0).
+        assert_eq!(mm_in_lane(LaneId::U16, &[], &[], 0, 4, 3, 8, 1), Vec::<u128>::new());
+        assert_eq!(kmm_in_lane(LaneId::U64, &[], &[], 2, 0, 3, 12, 2, 1), vec![0u128; 6]);
+        let (c, lane) = mm_lane(&[], &[], 0, 4, 3, 8, 1);
+        assert_eq!((c, lane), (Vec::<u128>::new(), LaneId::U16));
+        let (c, lane) = kmm_lane(&[], &[], 3, 2, 0, 12, 2, 1);
+        assert_eq!((c, lane), (Vec::<u128>::new(), select_lane(12, 2, 2).unwrap()));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the fast engine")]
     fn routers_refuse_out_of_window_widths() {
         mm_lane(&[1], &[1], 1, 1, 1, 40, 1);
     }
@@ -373,7 +374,13 @@ mod tests {
     #[should_panic(expected = "not provably exact")]
     fn forced_mm_lane_refuses_past_its_headroom_bound() {
         // w=16 saturates the u16 accumulator at k=1; k=2 must refuse
-        // (mirroring the KMM driver's assert), never silently wrap.
+        // (the typed PlanError::LaneHeadroom), never silently wrap.
         mm_in_lane(LaneId::U16, &[1, 1], &[1, 1], 1, 2, 1, 16, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid KMM config")]
+    fn kmm_shim_refuses_invalid_digit_configs() {
+        kmm_digits(&[1], &[1], 1, 1, 1, 8, 3);
     }
 }

@@ -36,7 +36,11 @@
 //! it with zero per-call B-packing work. The packed slabs are
 //! bit-identical to what the fresh path packs, so prepacked results are
 //! bit-exact with per-call packing by construction. [`LanePackedB`]
-//! wraps one `PackedB` per selected lane behind a runtime tag — the
+//! wraps one `PackedB` per selected lane behind a runtime tag.
+//! Serving layers do not handle these types directly anymore: a
+//! [`MatmulPlan::bind_b`](crate::fast::plan::MatmulPlan::bind_b) call
+//! produces a [`BoundPlan`](crate::fast::plan::BoundPlan) that owns the
+//! packing together with its validated configuration, and that is the
 //! form the coordinator's weight registry stores and routes on.
 
 use crate::fast::gemm::Blocking;

@@ -1,0 +1,809 @@
+//! Build-once execution plans: the validated descriptor every serving
+//! layer routes through.
+//!
+//! The paper's accelerators are *configured once* — bitwidth, tile
+//! geometry, and Karatsuba recursion depth are baked into the datapath —
+//! and then stream operands through that fixed configuration (§IV). The
+//! software mirror is a [`MatmulPlan`]: a [`PlanSpec`] names the GEMM
+//! shape, operand width, decomposition, thread budget, and lane policy,
+//! and [`MatmulPlan::build`] performs **all** validation and
+//! specialization eagerly —
+//!
+//! - width gating through the shared [`check_width`] window,
+//! - digit-count validation against the Karatsuba configuration rules,
+//! - lane selection ([`select_lane`]) or forced-lane headroom proof
+//!   ([`required_acc_bits`]),
+//! - thread-budget resolution with the documented precedence
+//!   ([`crate::util::pool::resolve_threads`]: explicit request >
+//!   `KMM_THREADS` > fallback of 1)
+//!
+//! — returning a typed [`PlanError`] instead of panicking deep inside a
+//! driver. A built plan then executes any number of times with zero
+//! per-call re-validation: [`MatmulPlan::execute`] for one-shot
+//! operands, [`MatmulPlan::execute_into`] to accumulate into an
+//! existing buffer, and [`MatmulPlan::bind_b`] to pre-pack a stationary
+//! B operand into a [`BoundPlan`] — the weight-stationary form the
+//! coordinator's registry stores, which owns the packed panels (or the
+//! full Karatsuba digit-plane tree) and subsumes all
+//! [`LanePackedB`]/[`LanePackedKmmB`] handling.
+//!
+//! The legacy `fast::` free functions (`mm`, `kmm_digits`, `mm_lane`,
+//! …) survive as thin compatibility shims over plans — see
+//! [`crate::fast`] for the migration table.
+
+use crate::algo::bits;
+use crate::fast::gemm::{self, Blocking};
+use crate::fast::kernel::Kernel8x4;
+use crate::fast::kmm::{self, LanePackedKmmB};
+use crate::fast::lane::{
+    check_width, narrow_plane, required_acc_bits, select_lane, widen_acc, Element, LaneId,
+};
+use crate::fast::pack::LanePackedB;
+use crate::util::pool;
+use std::fmt;
+
+/// Which decomposition a plan runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanAlgo {
+    /// Conventional blocked GEMM: one native multiplication per MAC.
+    Mm,
+    /// Karatsuba digit slicing (Algorithm 4) with `digits = 2^r` digit
+    /// planes: three sub-GEMMs per recursion level plus shift
+    /// recombination.
+    Kmm {
+        /// Digit count of the decomposition (a power of two `≤ w`).
+        digits: u32,
+    },
+}
+
+impl PlanAlgo {
+    /// Digit count of the decomposition (`1` for the conventional path).
+    pub fn digits(self) -> u32 {
+        match self {
+            PlanAlgo::Mm => 1,
+            PlanAlgo::Kmm { digits } => digits,
+        }
+    }
+}
+
+impl fmt::Display for PlanAlgo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanAlgo::Mm => f.write_str("mm"),
+            PlanAlgo::Kmm { digits } => write!(f, "kmm[{digits}]"),
+        }
+    }
+}
+
+/// Lane policy of a [`PlanSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneChoice {
+    /// Let [`select_lane`] pick the narrowest provably exact lane (the
+    /// serving default).
+    Auto,
+    /// Force an explicit lane; [`MatmulPlan::build`] proves the
+    /// headroom contract or returns a typed [`PlanError`].
+    Forced(LaneId),
+}
+
+/// The request side of a plan: everything [`MatmulPlan::build`] needs
+/// to validate and specialize a GEMM configuration once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanSpec {
+    /// Output rows (activation rows for bound execution).
+    pub m: usize,
+    /// Depth (A columns == B rows).
+    pub k: usize,
+    /// Output columns (B columns).
+    pub n: usize,
+    /// Operand bitwidth the plan is exact for.
+    pub w: u32,
+    /// Decomposition to run.
+    pub algo: PlanAlgo,
+    /// Explicit worker-thread budget; `None` resolves through
+    /// `KMM_THREADS` and falls back to 1 (sequential). An explicit
+    /// `Some` always wins over the environment.
+    pub threads: Option<usize>,
+    /// Lane policy.
+    pub lane: LaneChoice,
+}
+
+impl PlanSpec {
+    /// A conventional-GEMM spec with automatic lane selection and
+    /// environment-resolved threads.
+    pub fn mm(m: usize, k: usize, n: usize, w: u32) -> PlanSpec {
+        PlanSpec {
+            m,
+            k,
+            n,
+            w,
+            algo: PlanAlgo::Mm,
+            threads: None,
+            lane: LaneChoice::Auto,
+        }
+    }
+
+    /// A Karatsuba digit-slice spec (`digits = 2^r`) with automatic
+    /// lane selection and environment-resolved threads.
+    pub fn kmm(m: usize, k: usize, n: usize, w: u32, digits: u32) -> PlanSpec {
+        PlanSpec {
+            algo: PlanAlgo::Kmm { digits },
+            ..PlanSpec::mm(m, k, n, w)
+        }
+    }
+
+    /// Set an explicit thread budget (always overrides `KMM_THREADS`).
+    pub fn with_threads(mut self, threads: usize) -> PlanSpec {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Force an explicit lane instead of the selector's choice.
+    pub fn in_lane(mut self, lane: LaneId) -> PlanSpec {
+        self.lane = LaneChoice::Forced(lane);
+        self
+    }
+}
+
+/// Typed build-time rejection of a [`PlanSpec`]. Every case that used
+/// to panic inside a driver (or silently defer to serve time) surfaces
+/// here, at plan construction, before any packing or compute happens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// One of `m`, `k`, `n` is zero — a degenerate GEMM no serving
+    /// layer should plan for.
+    ZeroDim {
+        /// Requested output rows.
+        m: usize,
+        /// Requested depth.
+        k: usize,
+        /// Requested output columns.
+        n: usize,
+    },
+    /// `w` is outside the engine's lane window (the shared
+    /// [`check_width`] gate; its message is preserved verbatim).
+    Width {
+        /// The rejected operand bitwidth.
+        w: u32,
+        /// The [`check_width`] message for this width.
+        reason: String,
+    },
+    /// The digit count is not a valid Karatsuba configuration for `w`
+    /// (must be a power of two no greater than the operand width).
+    InvalidDigits {
+        /// The rejected digit count.
+        digits: u32,
+        /// The operand bitwidth it was requested for.
+        w: u32,
+    },
+    /// A forced lane whose storage cannot hold `w`-bit operands at all.
+    LaneStorage {
+        /// The forced lane.
+        lane: LaneId,
+        /// The operand bitwidth that does not fit.
+        w: u32,
+    },
+    /// A forced lane whose accumulator headroom cannot cover the
+    /// `(w, k, digits)` computation ([`required_acc_bits`]).
+    LaneHeadroom {
+        /// The forced lane.
+        lane: LaneId,
+        /// Operand bitwidth.
+        w: u32,
+        /// GEMM depth.
+        k: usize,
+        /// Digit count of the decomposition.
+        digits: u32,
+        /// Accumulator bits the computation provably needs.
+        need: u32,
+        /// Accumulator bits the lane has.
+        have: u32,
+    },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::ZeroDim { m, k, n } => {
+                write!(f, "degenerate plan: zero dimension in {m}x{k}x{n}")
+            }
+            PlanError::Width { reason, .. } => f.write_str(reason),
+            PlanError::InvalidDigits { digits, w } => write!(
+                f,
+                "invalid KMM config digits={digits} w={w}: the digit count must be a \
+                 power of two no greater than the operand width"
+            ),
+            PlanError::LaneStorage { lane, w } => write!(
+                f,
+                "lane {}: w={w} operands do not fit the lane's {}-bit storage",
+                lane.name(),
+                lane.elem_bits()
+            ),
+            PlanError::LaneHeadroom {
+                lane,
+                w,
+                k,
+                digits,
+                need,
+                have,
+            } => write!(
+                f,
+                "lane {}: not provably exact for w={w} at depth k={k} with digits={digits} \
+                 (accumulator {have} bits < required {need})",
+                lane.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// A validated, fully specialized matmul configuration: shape, width,
+/// decomposition, the lane that will run, and the resolved thread
+/// budget — everything the drivers need, proven once at build time.
+///
+/// ```
+/// use kmm::fast::{MatmulPlan, PlanSpec, LaneId};
+///
+/// // Validate and specialize once...
+/// let plan = MatmulPlan::build(PlanSpec::mm(2, 3, 2, 8).with_threads(1)).unwrap();
+/// assert_eq!(plan.lane(), LaneId::U16); // w=8 shallow rides the narrow lane
+///
+/// // ...then execute many times with zero re-validation.
+/// let a = vec![1u64; 6];
+/// let b = vec![2u64; 6];
+/// assert_eq!(plan.execute(&a, &b), vec![6u128; 4]);
+/// assert_eq!(plan.execute(&a, &b), vec![6u128; 4]);
+///
+/// // Invalid configurations are typed errors, not panics.
+/// assert!(MatmulPlan::build(PlanSpec::mm(2, 3, 2, 40)).is_err());
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatmulPlan {
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    algo: PlanAlgo,
+    lane: LaneId,
+    threads: usize,
+}
+
+impl MatmulPlan {
+    /// Validate `spec` and specialize it into an executable plan. All
+    /// gating happens here — width window, digit configuration, lane
+    /// storage/headroom, thread resolution — so the execution paths
+    /// carry no per-call checks beyond shape asserts.
+    ///
+    /// ```
+    /// use kmm::fast::{LaneId, MatmulPlan, PlanError, PlanSpec};
+    ///
+    /// // A valid spec resolves its lane and thread budget eagerly.
+    /// let plan = MatmulPlan::build(PlanSpec::kmm(4, 64, 4, 16, 2).with_threads(2)).unwrap();
+    /// assert_eq!((plan.lane(), plan.threads(), plan.digits()), (LaneId::U32, 2, 2));
+    ///
+    /// // Invalid configurations are typed errors, not deep-driver panics.
+    /// let err = MatmulPlan::build(PlanSpec::kmm(4, 64, 4, 16, 3)).unwrap_err();
+    /// assert_eq!(err, PlanError::InvalidDigits { digits: 3, w: 16 });
+    /// ```
+    pub fn build(spec: PlanSpec) -> Result<MatmulPlan, PlanError> {
+        let PlanSpec {
+            m,
+            k,
+            n,
+            w,
+            algo,
+            threads,
+            lane,
+        } = spec;
+        if m == 0 || k == 0 || n == 0 {
+            return Err(PlanError::ZeroDim { m, k, n });
+        }
+        if let Err(e) = check_width(w) {
+            return Err(PlanError::Width {
+                w,
+                reason: e.to_string(),
+            });
+        }
+        if let PlanAlgo::Kmm { digits } = algo {
+            if !bits::config_valid(digits, w) {
+                return Err(PlanError::InvalidDigits { digits, w });
+            }
+        }
+        let digits = algo.digits();
+        let lane = match lane {
+            // In-window widths always admit the u64 lane, so Auto
+            // selection cannot fail past check_width.
+            LaneChoice::Auto => {
+                select_lane(w, k, digits).expect("check_width admitted w; the u64 lane qualifies")
+            }
+            LaneChoice::Forced(l) => {
+                if w > l.elem_bits() {
+                    return Err(PlanError::LaneStorage { lane: l, w });
+                }
+                let need = required_acc_bits(w, k, digits);
+                if need > l.acc_bits() {
+                    return Err(PlanError::LaneHeadroom {
+                        lane: l,
+                        w,
+                        k,
+                        digits,
+                        need,
+                        have: l.acc_bits(),
+                    });
+                }
+                l
+            }
+        };
+        let threads = pool::resolve_threads(threads, 1);
+        Ok(MatmulPlan {
+            m,
+            k,
+            n,
+            w,
+            algo,
+            lane,
+            threads,
+        })
+    }
+
+    /// Output rows the plan was built for.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// GEMM depth.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output columns.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Operand bitwidth the plan is exact for.
+    pub fn w(&self) -> u32 {
+        self.w
+    }
+
+    /// The decomposition the plan runs.
+    pub fn algo(&self) -> PlanAlgo {
+        self.algo
+    }
+
+    /// Digit count of the decomposition (`1` = conventional).
+    pub fn digits(&self) -> u32 {
+        self.algo.digits()
+    }
+
+    /// The element lane the plan resolved to (selected or proven).
+    pub fn lane(&self) -> LaneId {
+        self.lane
+    }
+
+    /// The resolved worker-thread budget (`1` = sequential driver).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// One-line human description of the resolved plan — what the CLI
+    /// prints so operators can see which configuration actually serves.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} {}x{}x{} w={} lane={} threads={}",
+            self.algo, self.m, self.k, self.n, self.w, self.lane, self.threads
+        )
+    }
+
+    /// Execute `C = A·B` over row-major `u64`-boundary operands (each
+    /// value fitting the plan's `w` bits; debug builds assert), running
+    /// the resolved lane and thread budget. Returns the row-major
+    /// product widened to the `u128` serving boundary.
+    pub fn execute(&self, a: &[u64], b: &[u64]) -> Vec<u128> {
+        assert_eq!(a.len(), self.m * self.k, "A shape mismatch");
+        assert_eq!(b.len(), self.k * self.n, "B shape mismatch");
+        debug_assert!(
+            a.iter().chain(b).all(|&x| bits::fits(x, self.w)),
+            "operand exceeds w={} bits",
+            self.w
+        );
+        match self.lane {
+            LaneId::U16 => {
+                widen_acc::<u16>(self.run(&narrow_plane::<u16>(a), &narrow_plane::<u16>(b)))
+            }
+            LaneId::U32 => {
+                widen_acc::<u32>(self.run(&narrow_plane::<u32>(a), &narrow_plane::<u32>(b)))
+            }
+            // The u64 lane's accumulator is already u128: no staging
+            // copies on the widest path.
+            LaneId::U64 => self.run::<u64>(a, b),
+        }
+    }
+
+    /// [`execute`](Self::execute) accumulating into an existing buffer:
+    /// `c += A·B` (the `gemm_into` convention), `c` being the row-major
+    /// `m × n` output in `u128`. On the `u64` conventional path the
+    /// blocked driver accumulates straight into `c`; narrow lanes and
+    /// the digit-slice path stage through a lane-width product first
+    /// (their accumulators are not `u128`-shaped).
+    pub fn execute_into(&self, a: &[u64], b: &[u64], c: &mut [u128]) {
+        assert_eq!(c.len(), self.m * self.n, "C shape mismatch");
+        if self.lane == LaneId::U64 && self.algo == PlanAlgo::Mm {
+            assert_eq!(a.len(), self.m * self.k, "A shape mismatch");
+            assert_eq!(b.len(), self.k * self.n, "B shape mismatch");
+            debug_assert!(
+                a.iter().chain(b).all(|&x| bits::fits(x, self.w)),
+                "operand exceeds w={} bits",
+                self.w
+            );
+            gemm::gemm_into_threads(
+                &Kernel8x4,
+                &Blocking::default(),
+                self.threads,
+                a,
+                b,
+                self.m,
+                self.k,
+                self.n,
+                c,
+            );
+            return;
+        }
+        for (dst, v) in c.iter_mut().zip(self.execute(a, b)) {
+            *dst += v;
+        }
+    }
+
+    /// The lane-monomorphized hot path: both decompositions through the
+    /// blocked drivers at the resolved thread budget.
+    fn run<E: Element>(&self, a: &[E], b: &[E]) -> Vec<E::Acc> {
+        match self.algo {
+            PlanAlgo::Mm => {
+                gemm::gemm_threads(&Kernel8x4, a, b, self.m, self.k, self.n, self.threads)
+            }
+            PlanAlgo::Kmm { digits } => kmm::kmm_threads(
+                &Kernel8x4,
+                a,
+                b,
+                self.m,
+                self.k,
+                self.n,
+                self.w,
+                digits,
+                self.threads,
+            ),
+        }
+    }
+
+    /// Pre-pack a stationary `k × n` B operand into the plan's lane and
+    /// decomposition, yielding a [`BoundPlan`] that serves any number
+    /// of activations with zero per-call packing or plane-splitting
+    /// work — the weight-stationary discipline of §IV, in plan form.
+    ///
+    /// The bound operand is `B`-shaped state: conventional plans own
+    /// one set of packed panels; Karatsuba plans own the full
+    /// digit-plane tree. The plan's `m` is *not* baked in — each
+    /// [`BoundPlan::execute`] derives the activation row count from the
+    /// activation itself, so one bound weight serves any batch size.
+    ///
+    /// ```
+    /// use kmm::fast::{MatmulPlan, PlanSpec};
+    ///
+    /// let (m, k, n, w) = (2, 5, 3, 12);
+    /// let b: Vec<u64> = (0..(k * n) as u64).map(|x| x * 131 % 4096).collect();
+    /// let a: Vec<u64> = (0..(m * k) as u64).map(|x| x * 257 % 4096).collect();
+    ///
+    /// let plan = MatmulPlan::build(PlanSpec::kmm(m, k, n, w, 2).with_threads(1)).unwrap();
+    /// // Pack the stationary operand once...
+    /// let bound = plan.bind_b(&b);
+    /// // ...then serve against it; bit-exact with the unbound plan.
+    /// assert_eq!(bound.execute(&a), plan.execute(&a, &b));
+    /// assert_eq!(bound.execute(&a), plan.execute(&a, &b)); // reuse
+    /// ```
+    pub fn bind_b(&self, b: &[u64]) -> BoundPlan {
+        assert_eq!(b.len(), self.k * self.n, "B shape mismatch");
+        debug_assert!(
+            b.iter().all(|&x| bits::fits(x, self.w)),
+            "operand exceeds w={} bits",
+            self.w
+        );
+        // build() proved the lane contract, so the pack-time asserts in
+        // pack_in can never fire from here.
+        let operand = match self.algo {
+            PlanAlgo::Mm => BoundOperand::Mm(LanePackedB::pack_in(
+                self.lane,
+                b,
+                self.k,
+                self.n,
+                self.w,
+                &Blocking::default(),
+            )),
+            PlanAlgo::Kmm { digits } => BoundOperand::Kmm(LanePackedKmmB::pack_in(
+                self.lane, b, self.k, self.n, self.w, digits,
+            )),
+        };
+        BoundPlan {
+            plan: self.clone(),
+            operand,
+        }
+    }
+}
+
+/// Clamp degenerate (zero) dimensions of `spec` to 1 for
+/// validation-only plan builds, reporting whether clamping occurred.
+/// `⌈log₂ 0⌉ == ⌈log₂ 1⌉ == 0`, so clamping `k` never changes the
+/// resolved lane or the headroom proof — the legacy-compatibility
+/// paths (the `fast::` shims, `FastBackend::gemm`) validate the
+/// clamped spec and then serve the all-zero `m × n` output the
+/// pre-plan drivers' early-return produced.
+pub(crate) fn clamp_degenerate(spec: PlanSpec) -> (PlanSpec, bool) {
+    let degenerate = spec.m == 0 || spec.k == 0 || spec.n == 0;
+    let clamped = PlanSpec {
+        m: spec.m.max(1),
+        k: spec.k.max(1),
+        n: spec.n.max(1),
+        ..spec
+    };
+    (clamped, degenerate)
+}
+
+/// The prepacked stationary operand a [`BoundPlan`] owns.
+#[derive(Debug, Clone)]
+enum BoundOperand {
+    /// Conventional packed panels.
+    Mm(LanePackedB),
+    /// The Karatsuba digit-plane tree.
+    Kmm(LanePackedKmmB),
+}
+
+/// A [`MatmulPlan`] with its stationary B operand bound and prepacked:
+/// the weight-stationary serving form. Owns the packed panels (or
+/// digit-plane tree) in the plan's lane, so serving performs zero
+/// per-call packing, plane-splitting, or re-validation — this is the
+/// entry type the coordinator's
+/// [`WeightRegistry`](crate::coordinator::registry::WeightRegistry)
+/// stores per registered weight.
+#[derive(Debug, Clone)]
+pub struct BoundPlan {
+    plan: MatmulPlan,
+    operand: BoundOperand,
+}
+
+impl BoundPlan {
+    /// The validated plan this operand was bound under.
+    pub fn plan(&self) -> &MatmulPlan {
+        &self.plan
+    }
+
+    /// The lane the operand was packed in (always the plan's lane).
+    pub fn lane(&self) -> LaneId {
+        self.plan.lane
+    }
+
+    /// Digit count of the bound decomposition (`1` = conventional).
+    pub fn digits(&self) -> u32 {
+        self.plan.digits()
+    }
+
+    /// Operand bitwidth the binding is exact for.
+    pub fn w(&self) -> u32 {
+        self.plan.w
+    }
+
+    /// Bound operand row count (the GEMM depth `k`).
+    pub fn rows(&self) -> usize {
+        self.plan.k
+    }
+
+    /// Bound operand column count (the GEMM width `n`).
+    pub fn cols(&self) -> usize {
+        self.plan.n
+    }
+
+    /// Owned packed bytes (cache observability; narrow lanes hold
+    /// `elem_bits/64` of the `u64` footprint).
+    pub fn bytes(&self) -> usize {
+        match &self.operand {
+            BoundOperand::Mm(p) => p.bytes(),
+            BoundOperand::Kmm(p) => p.bytes(),
+        }
+    }
+
+    /// One-line human description of the bound entry (activation rows
+    /// stream per request, so no `m` appears).
+    pub fn describe(&self) -> String {
+        format!(
+            "{} B={}x{} w={} lane={} ({} packed bytes)",
+            self.plan.algo,
+            self.plan.k,
+            self.plan.n,
+            self.plan.w,
+            self.plan.lane,
+            self.bytes()
+        )
+    }
+
+    /// Serve `C = A·B` against the bound operand at the plan's thread
+    /// budget. The activation's row count is derived from its length
+    /// (`a.len() / k`), so one binding serves any batch size.
+    pub fn execute(&self, a: &[u64]) -> Vec<u128> {
+        self.execute_with_threads(a, self.plan.threads)
+    }
+
+    /// [`execute`](Self::execute) with an explicit thread budget — the
+    /// serving shards' hook: a registry entry is shared process-wide,
+    /// but each shard applies its own backend's budget per request.
+    pub fn execute_with_threads(&self, a: &[u64], threads: usize) -> Vec<u128> {
+        let k = self.plan.k;
+        assert!(
+            a.len() % k == 0,
+            "activation length {} is not a multiple of the bound depth k={k}",
+            a.len()
+        );
+        let m = a.len() / k;
+        let threads = threads.max(1);
+        match &self.operand {
+            BoundOperand::Mm(p) => p.gemm(a, m, threads),
+            BoundOperand::Kmm(p) => p.kmm(a, m, threads),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fast::lane::MAX_W;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn build_resolves_lane_and_threads_eagerly() {
+        let plan = MatmulPlan::build(PlanSpec::mm(4, 96, 5, 8).with_threads(3)).unwrap();
+        assert_eq!(plan.lane(), LaneId::U16, "w=8 at depth 96 rides u16");
+        assert_eq!(plan.threads(), 3);
+        assert_eq!(plan.digits(), 1);
+        assert_eq!((plan.m(), plan.k(), plan.n(), plan.w()), (4, 96, 5, 8));
+        let kmm = MatmulPlan::build(PlanSpec::kmm(4, 96, 5, 16, 2).with_threads(1)).unwrap();
+        assert_eq!(kmm.lane(), LaneId::U32);
+        assert_eq!(kmm.digits(), 2);
+        assert!(kmm.describe().contains("kmm[2]"), "{}", kmm.describe());
+        assert!(kmm.describe().contains("lane=u32"), "{}", kmm.describe());
+    }
+
+    #[test]
+    fn build_rejects_zero_dims() {
+        for (m, k, n) in [(0usize, 3usize, 3usize), (3, 0, 3), (3, 3, 0)] {
+            let err = MatmulPlan::build(PlanSpec::mm(m, k, n, 8)).unwrap_err();
+            assert_eq!(err, PlanError::ZeroDim { m, k, n });
+            assert!(err.to_string().contains("zero dimension"), "{err}");
+        }
+    }
+
+    #[test]
+    fn build_rejects_out_of_window_widths() {
+        for w in [0u32, MAX_W + 1, 64] {
+            let err = MatmulPlan::build(PlanSpec::mm(2, 2, 2, w)).unwrap_err();
+            assert!(matches!(err, PlanError::Width { w: got, .. } if got == w), "{err:?}");
+            assert!(err.to_string().contains("window"), "{err}");
+        }
+        let err = MatmulPlan::build(PlanSpec::kmm(2, 2, 2, 40, 2)).unwrap_err();
+        assert!(err.to_string().contains("exceeds the fast engine"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_invalid_digit_configs() {
+        // Non-power-of-two and wider-than-w digit counts.
+        for (digits, w) in [(3u32, 8u32), (6, 16), (8, 4)] {
+            let err = MatmulPlan::build(PlanSpec::kmm(2, 2, 2, w, digits)).unwrap_err();
+            assert_eq!(err, PlanError::InvalidDigits { digits, w });
+            assert!(err.to_string().contains("invalid KMM config"), "{err}");
+        }
+    }
+
+    #[test]
+    fn build_rejects_forced_lanes_without_headroom() {
+        // w=16 saturates the u16 accumulator at k=1; depth 2 must refuse.
+        let err = MatmulPlan::build(PlanSpec::mm(1, 2, 1, 16).in_lane(LaneId::U16)).unwrap_err();
+        let PlanError::LaneHeadroom { lane, need, have, .. } = err.clone() else {
+            panic!("expected LaneHeadroom, got {err:?}");
+        };
+        assert_eq!((lane, need, have), (LaneId::U16, 33, 32));
+        assert!(err.to_string().contains("not provably exact"), "{err}");
+        // Storage refusal is the distinct earlier case.
+        let err = MatmulPlan::build(PlanSpec::mm(1, 1, 1, 20).in_lane(LaneId::U16)).unwrap_err();
+        assert_eq!(err, PlanError::LaneStorage { lane: LaneId::U16, w: 20 });
+        assert!(err.to_string().contains("do not fit"), "{err}");
+    }
+
+    #[test]
+    fn forced_lane_with_headroom_builds() {
+        let plan =
+            MatmulPlan::build(PlanSpec::mm(3, 7, 3, 8).with_threads(1).in_lane(LaneId::U64))
+                .unwrap();
+        assert_eq!(plan.lane(), LaneId::U64);
+    }
+
+    #[test]
+    fn execute_matches_across_lanes_and_algos() {
+        let mut rng = Rng::new(51);
+        let (m, k, n, w) = (9usize, 14usize, 7usize, 8u32);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let want = MatmulPlan::build(PlanSpec::mm(m, k, n, w).with_threads(1).in_lane(LaneId::U64))
+            .unwrap()
+            .execute(&a, &b);
+        for lane in LaneId::ALL {
+            for threads in [1usize, 3] {
+                let mm = MatmulPlan::build(
+                    PlanSpec::mm(m, k, n, w).with_threads(threads).in_lane(lane),
+                )
+                .unwrap();
+                assert_eq!(mm.execute(&a, &b), want, "{lane} mm threads={threads}");
+                let kmm = MatmulPlan::build(
+                    PlanSpec::kmm(m, k, n, w, 2).with_threads(threads).in_lane(lane),
+                )
+                .unwrap();
+                assert_eq!(kmm.execute(&a, &b), want, "{lane} kmm threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_into_accumulates() {
+        let mut rng = Rng::new(52);
+        let (m, k, n, w) = (5usize, 7usize, 6usize, 12u32);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let plan = MatmulPlan::build(PlanSpec::mm(m, k, n, w).with_threads(1)).unwrap();
+        let once = plan.execute(&a, &b);
+        let mut c = vec![0u128; m * n];
+        plan.execute_into(&a, &b, &mut c);
+        plan.execute_into(&a, &b, &mut c);
+        let want: Vec<u128> = once.iter().map(|&v| 2 * v).collect();
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn bound_plan_is_bit_exact_and_reusable() {
+        let mut rng = Rng::new(53);
+        let (k, n, w) = (19usize, 6usize, 12u32);
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let plan = MatmulPlan::build(PlanSpec::kmm(4, k, n, w, 2).with_threads(1)).unwrap();
+        let bound = plan.bind_b(&b);
+        assert_eq!(bound.lane(), plan.lane());
+        assert_eq!((bound.rows(), bound.cols(), bound.w()), (k, n, w));
+        assert_eq!(bound.digits(), 2);
+        assert!(bound.bytes() > 0);
+        assert!(bound.describe().contains("kmm[2]"), "{}", bound.describe());
+        // Batch sizes differing from the plan's m serve fine: m derives
+        // from the activation.
+        for m in [1usize, 4, 9] {
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let spec = PlanSpec::kmm(m, k, n, w, 2).with_threads(1);
+            let fresh = MatmulPlan::build(spec).unwrap().execute(&a, &b);
+            assert_eq!(bound.execute(&a), fresh, "m={m}");
+            assert_eq!(bound.execute_with_threads(&a, 4), fresh, "m={m} threads=4");
+        }
+    }
+
+    #[test]
+    fn auto_and_forced_lanes_agree_with_the_selector() {
+        for (w, k, digits) in [(8u32, 160usize, 1u32), (16, 96, 2), (32, 64, 4)] {
+            let spec = PlanSpec {
+                m: 2,
+                k,
+                n: 2,
+                w,
+                algo: if digits == 1 {
+                    PlanAlgo::Mm
+                } else {
+                    PlanAlgo::Kmm { digits }
+                },
+                threads: Some(1),
+                lane: LaneChoice::Auto,
+            };
+            let plan = MatmulPlan::build(spec).unwrap();
+            assert_eq!(Some(plan.lane()), select_lane(w, k, digits), "w={w}");
+        }
+    }
+}

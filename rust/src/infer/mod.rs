@@ -3,11 +3,14 @@
 //! [`GemmBackend`], weight-stationary by default.
 //!
 //! This is the software mirror of how the paper's accelerator executes
-//! a network (§V): weights are stationary — prepacked once into the
-//! same [`PackedWeight`] entries the coordinator's
+//! a network (§V): weights are stationary — planned and bound **once**
+//! into the same [`BoundPlan`](crate::fast::BoundPlan)-backed
+//! [`PackedWeight`] entries the coordinator's
 //! [`WeightRegistry`](crate::coordinator::registry::WeightRegistry)
 //! serves — and per-layer activations stream against the cached
-//! entries. The per-layer wall times and the deterministic cycle model
+//! entries, so the serving loop re-validates nothing per request. Each
+//! [`LayerRun`] records the resolved plan (mode + lane), which the
+//! `kmm infer` table prints per layer. The per-layer wall times and the deterministic cycle model
 //! are both recorded, so one [`InferRun`] yields whole-model and
 //! per-layer throughput for `BENCH_infer.json` and the `kmm infer`
 //! CLI.
@@ -34,6 +37,7 @@
 //! ```
 
 use crate::algo::matrix::{matmul_oracle, Mat};
+use crate::arch::scalable::Mode;
 use crate::coordinator::dispatch::GemmBackend;
 use crate::coordinator::registry::PackedWeight;
 use crate::fast::LaneId;
@@ -101,6 +105,12 @@ pub struct LayerRun {
     /// The fast-engine lane the layer was served on (`None` on
     /// backends without width-specialized lanes).
     pub lane: Option<LaneId>,
+    /// The precision mode the layer's resolved plan ran in (`mm1`,
+    /// `kmm2`, `mm2`) — together with [`lane`](Self::lane) and the
+    /// run-level thread count, the plan the serving layer executed.
+    /// Every served stream reports a mode, so this is `None` only for
+    /// a layer that served zero streams.
+    pub mode: Option<Mode>,
 }
 
 impl LayerRun {
@@ -163,6 +173,13 @@ impl InferRun {
                 o.insert("ops_per_s".to_string(), Json::Float(l.ops_per_s()));
                 o.insert("cycles".to_string(), Json::Int(l.cycles as i64));
                 o.insert("lane".to_string(), LaneId::to_json(l.lane));
+                o.insert(
+                    "mode".to_string(),
+                    match l.mode {
+                        Some(m) => Json::Str(m.name().to_string()),
+                        None => Json::Null,
+                    },
+                );
                 Json::Object(o)
             })
             .collect();
@@ -197,18 +214,19 @@ impl InferRun {
         );
         let _ = writeln!(
             s,
-            "{:<16} {:>7} {:>7} {:>7} {:>3} {:>4} {:>12} {:>10}",
-            "layer", "M", "K", "N", "w", "lane", "ms", "Mops/s"
+            "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>12} {:>10}",
+            "layer", "M", "K", "N", "w", "plan", "lane", "ms", "Mops/s"
         );
         for l in &self.layers {
             let _ = writeln!(
                 s,
-                "{:<16} {:>7} {:>7} {:>7} {:>3} {:>4} {:>12.3} {:>10.1}",
+                "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>12.3} {:>10.1}",
                 l.label,
                 l.m,
                 l.k,
                 l.n,
                 l.w,
+                l.mode.map_or("-", |m| m.name()),
                 l.lane.map_or("-", LaneId::name),
                 l.seconds * 1e3,
                 l.ops_per_s() / 1e6
@@ -293,6 +311,7 @@ pub fn run_workload(
         let mut seconds = 0.0;
         let mut cycles = 0u64;
         let mut lane: Option<LaneId> = None;
+        let mut mode: Option<Mode> = None;
         for stream in 0..streams {
             let a = Mat::random(g.m, g.k, g.w, &mut rng);
             let t0 = Instant::now();
@@ -303,9 +322,11 @@ pub fn run_workload(
             let res = served.with_context(|| format!("serving layer {}", g.label))?;
             seconds += t0.elapsed().as_secs_f64();
             cycles += res.stats.cycles;
-            // Lane selection depends only on (w, k, digits), so every
-            // stream of a layer runs the same lane; record the first.
+            // Plan resolution depends only on (w, k, digits), so every
+            // stream of a layer runs the same lane and mode; record the
+            // first.
             lane = lane.or(res.lane);
+            mode = mode.or(Some(res.mode));
             // Oracle work would swamp the timings; check the first
             // stream of each small layer only.
             if cfg.verify
@@ -326,6 +347,7 @@ pub fn run_workload(
             seconds,
             cycles,
             lane,
+            mode,
         });
     }
     Ok(InferRun {
@@ -431,6 +453,12 @@ mod tests {
         );
         assert!(run.table().contains("lane"));
         assert!(run.table().contains("u16"));
+        // The table's plan column names the resolved mode per layer.
+        assert!(run.table().contains("plan"));
+        assert!(
+            run.layers.iter().all(|l| l.mode == Some(Mode::Mm1)),
+            "w=8 layers resolve to the native mm1 plan"
+        );
     }
 
     #[test]
@@ -478,10 +506,11 @@ mod tests {
             parsed.get("layers").and_then(Json::as_array).map(<[Json]>::len),
             Some(2)
         );
-        // Every layer record names the lane that served it (w=8 shallow
-        // layers ride u16 on the fast backend).
+        // Every layer record names the lane and mode of its resolved
+        // plan (w=8 shallow layers ride u16 / mm1 on the fast backend).
         for layer in parsed.get("layers").and_then(Json::as_array).unwrap() {
             assert_eq!(layer.get("lane").and_then(Json::as_str), Some("u16"));
+            assert_eq!(layer.get("mode").and_then(Json::as_str), Some("mm1"));
         }
         assert_eq!(
             parsed.get("total_macs").and_then(Json::as_i64),

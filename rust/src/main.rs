@@ -73,6 +73,18 @@ fn print_ok(s: String) -> i32 {
 /// built on the thread that will use it).
 const SOFTWARE_BACKENDS: &[&str] = &["functional", "fast-kmm", "fast-mm"];
 
+/// Resolve the `--threads` budget with the documented precedence
+/// (`util::pool::resolve_threads`): an explicit `--threads` always
+/// overrides `KMM_THREADS`, which overrides `fallback`.
+fn cli_threads(args: &Args, fallback: usize) -> usize {
+    let explicit = if args.options.contains_key("threads") {
+        Some(args.get::<usize>("threads", 1).unwrap())
+    } else {
+        None
+    };
+    pool::resolve_threads(explicit, fallback)
+}
+
 /// Build a software backend by name; `None` for names outside
 /// [`SOFTWARE_BACKENDS`]. `threads` sets the fast engine's worker count
 /// (the functional model is inherently single-owner and ignores it).
@@ -90,7 +102,7 @@ fn cmd_gemm(args: &Args) -> i32 {
     let k: usize = args.get("k", 256).unwrap();
     let n: usize = args.get("n", 128).unwrap();
     let w: u32 = args.get("w", 12).unwrap();
-    let threads: usize = args.get("threads", pool::env_threads_or(1)).unwrap().max(1);
+    let threads = cli_threads(args, 1);
     let backend = args.get_str("backend", "functional");
     let mut rng = Rng::new(args.get("seed", 1u64).unwrap());
     let a = Mat::random(m, k, w, &mut rng);
@@ -114,7 +126,18 @@ fn cmd_gemm(args: &Args) -> i32 {
             }
         },
     };
-    match be.gemm(&a, &b, w) {
+    // Plan-capable backends resolve + build the plan once, print it,
+    // and execute through it; others (pjrt: executables fixed at build
+    // time) fall back to direct dispatch.
+    let planned = be.resolve_spec(m, k, n, w).and_then(|spec| be.plan(&spec));
+    let served = match planned {
+        Ok(plan) => {
+            println!("plan: {}", plan.describe());
+            plan.execute(&a, &b)
+        }
+        Err(_) => be.gemm(&a, &b, w),
+    };
+    match served {
         Ok(r) => {
             let exact = r.c == matmul_oracle(&a, &b);
             println!(
@@ -137,13 +160,22 @@ fn cmd_gemm(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     let requests: usize = args.get("requests", 32).unwrap();
-    let threads: usize = args.get("threads", pool::env_threads_or(1)).unwrap().max(1);
+    let threads = cli_threads(args, 1);
     let backend = args.get_str("backend", "functional");
     // Validate the name up front (the worker factory runs too late for
     // a friendly error; `pjrt` is thread-affine and not servable here).
     if !SOFTWARE_BACKENDS.contains(&backend.as_str()) {
         eprintln!("unknown serve backend `{backend}` (functional|fast-kmm|fast-mm)");
         return 2;
+    }
+    // Print the plans the shard backends resolve for the served widths
+    // (representative 64x128x64 shape; the probe runs on this thread).
+    if let Some(probe) = software_backend(&backend, 1) {
+        for w in [8u32, 12, 16] {
+            if let Ok(plan) = probe.resolve_spec(64, 128, 64, w).and_then(|s| probe.plan(&s)) {
+                println!("plan w={w}: {}", plan.describe());
+            }
+        }
     }
     // `--threads` shards the server: N workers, each owning its own
     // single-threaded backend instance (shard-level parallelism).
@@ -170,12 +202,13 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let stats = srv.shutdown();
     println!(
-        "served {} requests / {} batches on {} shard{}; modes {:?}; device {:.3} ms @326 MHz",
+        "served {} requests / {} batches on {} shard{}; modes {:?}; lanes {:?}; device {:.3} ms @326 MHz",
         stats.requests,
         stats.batches,
         threads,
         if threads == 1 { "" } else { "s" },
         stats.by_mode,
+        stats.by_lane,
         cycles as f64 / 326e6 * 1e3
     );
     0
@@ -206,7 +239,7 @@ fn resolve_workload(which: &str, w: u32, w_explicit: bool) -> Result<Workload, i
 fn cmd_infer(args: &Args) -> i32 {
     let model = args.get_str("model", "resnet50");
     let backend = args.get_str("backend", "fast-kmm");
-    let threads: usize = args.get("threads", pool::env_threads_or(1)).unwrap().max(1);
+    let threads = cli_threads(args, 1);
     let w: u32 = args.get("w", 8).unwrap();
     let batch: usize = args.get("batch", 0).unwrap();
     let wl = match resolve_workload(&model, w, args.options.contains_key("w")) {

@@ -50,6 +50,15 @@ pub fn parse_threads(raw: &str) -> Option<usize> {
 /// `fallback = 1` (opt-in parallelism), the bench with
 /// [`available_threads`].
 ///
+/// This is step 2 of the documented thread-budget resolution order —
+/// use [`resolve_threads`] when an explicit request may exist:
+///
+/// 1. an **explicit** request (`--threads` on the CLI,
+///    `FastBackend::with_threads`, `PlanSpec.threads = Some(_)`)
+///    always wins, even over a set `KMM_THREADS`;
+/// 2. otherwise `KMM_THREADS` (a positive integer) applies;
+/// 3. otherwise `fallback`.
+///
 /// A set-but-malformed value (e.g. `KMM_THREADS=0` or
 /// `KMM_THREADS=abc`) falls back too, but **loudly**: one warning per
 /// process on stderr, so a typo'd deployment does not silently serve
@@ -74,6 +83,20 @@ pub fn env_threads_or(fallback: usize) -> usize {
 /// [`available_threads`].
 pub fn default_threads() -> usize {
     env_threads_or(available_threads())
+}
+
+/// Resolve a thread budget with the precedence documented on
+/// [`env_threads_or`]: an explicit request always overrides
+/// `KMM_THREADS` (clamped to at least 1 — zero workers is meaningless),
+/// and only an absent request consults the environment before falling
+/// back. Every layer that accepts a thread knob (`kmm gemm/serve/infer
+/// --threads`, `PlanSpec.threads`, the benches) resolves through this
+/// one function, so the precedence cannot drift between entry points.
+pub fn resolve_threads(explicit: Option<usize>, fallback: usize) -> usize {
+    match explicit {
+        Some(n) => n.max(1),
+        None => env_threads_or(fallback),
+    }
 }
 
 /// Process the chunks of `data` (each `chunk_len` long, last one ragged)
@@ -203,6 +226,28 @@ mod tests {
         assert_eq!(parse_threads("-2"), None);
         assert_eq!(parse_threads("2.5"), None);
         assert_eq!(parse_threads("4x"), None);
+    }
+
+    #[test]
+    fn explicit_threads_override_the_environment() {
+        // The precedence contract: an explicit request beats a set
+        // KMM_THREADS, which beats the fallback. Env mutation happens
+        // in this one test only, and any pre-existing value is
+        // restored; every other env-reading assertion in the suite is
+        // robust to an arbitrary positive value being transiently
+        // visible (Rust's std synchronizes env access process-wide).
+        let prev = std::env::var("KMM_THREADS").ok();
+        std::env::set_var("KMM_THREADS", "64");
+        assert_eq!(resolve_threads(Some(2), 1), 2, "explicit wins over env");
+        assert_eq!(resolve_threads(Some(0), 1), 1, "explicit zero clamps to 1");
+        assert_eq!(resolve_threads(None, 1), 64, "env wins over fallback");
+        assert_eq!(env_threads_or(1), 64);
+        std::env::remove_var("KMM_THREADS");
+        assert_eq!(resolve_threads(None, 5), 5, "fallback when nothing is set");
+        assert_eq!(resolve_threads(Some(3), 5), 3);
+        if let Some(v) = prev {
+            std::env::set_var("KMM_THREADS", v);
+        }
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Integration tests for the plan-based execution API: typed
+//! `PlanError` validation at build time, bit-exactness of reused
+//! `MatmulPlan`/`BoundPlan` execution against the legacy `fast::` entry
+//! points, and the coordinator-level plan path
+//! (`GemmBackend::resolve_spec` / `plan`).
+
+use kmm::algo::matrix::{matmul_oracle, Mat};
+use kmm::coordinator::dispatch::{FastAlgo, FastBackend, FunctionalBackend, GemmBackend};
+use kmm::fast::{self, LaneId, MatmulPlan, PlanAlgo, PlanError, PlanSpec, MAX_W};
+use kmm::util::prop::{forall, prop_assert_eq, Config};
+
+// ---------------------------------------------------------------------
+// Typed PlanError cases: every former deep-driver panic surfaces as a
+// structured build-time rejection.
+// ---------------------------------------------------------------------
+
+#[test]
+fn over_wide_widths_are_typed_width_errors() {
+    for w in [0u32, MAX_W + 1, 48, 64] {
+        let err = MatmulPlan::build(PlanSpec::mm(4, 4, 4, w)).unwrap_err();
+        let PlanError::Width { w: got, reason } = &err else {
+            panic!("expected Width for w={w}, got {err:?}");
+        };
+        assert_eq!(*got, w);
+        assert!(reason.contains("window"), "{reason}");
+    }
+    // The out-of-window message is the shared check_width gate's.
+    let err = MatmulPlan::build(PlanSpec::kmm(4, 4, 4, 40, 2)).unwrap_err();
+    assert!(err.to_string().contains("exceeds the fast engine"), "{err}");
+}
+
+#[test]
+fn insufficient_headroom_is_a_typed_lane_error() {
+    // w=16 on u16 saturates the 32-bit accumulator at k=1; k=2 is one
+    // step past the bound.
+    let err = MatmulPlan::build(PlanSpec::mm(2, 2, 2, 16).in_lane(LaneId::U16)).unwrap_err();
+    let PlanError::LaneHeadroom { lane, w, k, digits, need, have } = err else {
+        panic!("expected LaneHeadroom, got {err:?}");
+    };
+    assert_eq!((lane, w, k, digits), (LaneId::U16, 16, 2, 1));
+    assert_eq!((need, have), (33, 32));
+    // The digit decomposition shares the same proof.
+    let err = MatmulPlan::build(PlanSpec::kmm(2, 2, 2, 16, 2).in_lane(LaneId::U16)).unwrap_err();
+    assert!(matches!(err, PlanError::LaneHeadroom { .. }), "{err:?}");
+    // Operands too wide for the lane's storage are the distinct case.
+    let err = MatmulPlan::build(PlanSpec::mm(2, 2, 2, 24).in_lane(LaneId::U16)).unwrap_err();
+    assert_eq!(err, PlanError::LaneStorage { lane: LaneId::U16, w: 24 });
+}
+
+#[test]
+fn digit_count_mismatches_are_typed_errors() {
+    for (digits, w) in [(3u32, 8u32), (5, 16), (8, 4), (16, 8)] {
+        let err = MatmulPlan::build(PlanSpec::kmm(4, 4, 4, w, digits)).unwrap_err();
+        assert_eq!(err, PlanError::InvalidDigits { digits, w }, "digits={digits} w={w}");
+        assert!(err.to_string().contains("invalid KMM config"), "{err}");
+    }
+    // Valid configurations build: digits = 1 degenerates to plain MM.
+    for (digits, w) in [(1u32, 8u32), (2, 8), (4, 8), (8, 8), (4, 32)] {
+        assert!(
+            MatmulPlan::build(PlanSpec::kmm(4, 4, 4, w, digits).with_threads(1)).is_ok(),
+            "digits={digits} w={w}"
+        );
+    }
+}
+
+#[test]
+fn zero_dimensions_are_typed_errors() {
+    for (m, k, n) in [(0usize, 4usize, 4usize), (4, 0, 4), (4, 4, 0), (0, 0, 0)] {
+        let err = MatmulPlan::build(PlanSpec::mm(m, k, n, 8)).unwrap_err();
+        assert_eq!(err, PlanError::ZeroDim { m, k, n });
+    }
+}
+
+#[test]
+fn plan_error_implements_std_error() {
+    // The typed error threads through `?` into the crate's anyhow-style
+    // chain (what the coordinator serves to clients).
+    fn build(spec: PlanSpec) -> kmm::util::error::Result<MatmulPlan> {
+        Ok(MatmulPlan::build(spec)?)
+    }
+    let err = build(PlanSpec::mm(0, 1, 1, 8)).unwrap_err();
+    assert!(err.to_string().contains("zero dimension"), "{err:#}");
+}
+
+// ---------------------------------------------------------------------
+// Reuse bit-exactness: a plan (and a bound plan) built once must agree
+// with the legacy per-call entry points on every shape, lane, and
+// thread count.
+// ---------------------------------------------------------------------
+
+#[test]
+fn reused_bound_plan_matches_fresh_mm_prop() {
+    forall(Config::default().cases(40), |rng| {
+        let (m, k, n) = (rng.range(1, 24), rng.range(1, 24), rng.range(1, 24));
+        let w = *rng.pick(&[4u32, 8, 16, 32]);
+        let threads = *rng.pick(&[1usize, 2, 4]);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let plan = MatmulPlan::build(PlanSpec::mm(m, k, n, w).with_threads(threads))
+            .expect("in-window spec builds");
+        let bound = plan.bind_b(&b);
+        let want = fast::mm(&a, &b, m, k, n);
+        prop_assert_eq(
+            plan.execute(&a, &b),
+            want.clone(),
+            &format!("plan == fast::mm ({m}x{k}x{n} w={w} t={threads})"),
+        )?;
+        // Two executions of one binding: identical bits, both fresh.
+        let first = bound.execute(&a);
+        prop_assert_eq(first.clone(), want.clone(), "bound == fast::mm")?;
+        prop_assert_eq(bound.execute(&a), first, "bound reuse is bit-identical")
+    });
+}
+
+#[test]
+fn reused_bound_plan_matches_fresh_kmm_prop() {
+    forall(Config::default().cases(40), |rng| {
+        let digits = *rng.pick(&[2u32, 4]);
+        let w = *rng.pick(&[8u32, 16, 32]);
+        let threads = *rng.pick(&[1usize, 2, 4]);
+        let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let plan = MatmulPlan::build(PlanSpec::kmm(m, k, n, w, digits).with_threads(threads))
+            .expect("in-window spec builds");
+        let bound = plan.bind_b(&b);
+        let want = fast::kmm_digits(&a, &b, m, k, n, w, digits);
+        prop_assert_eq(
+            plan.execute(&a, &b),
+            want.clone(),
+            &format!("plan == fast::kmm_digits ({m}x{k}x{n} w={w} d={digits} t={threads})"),
+        )?;
+        prop_assert_eq(bound.execute(&a), want.clone(), "bound == fast::kmm_digits")?;
+        prop_assert_eq(bound.execute(&a), want, "bound reuse is bit-identical")
+    });
+}
+
+#[test]
+fn forced_lane_plans_match_auto_selection_prop() {
+    // Wherever a forced lane builds at all, it must agree bit-for-bit
+    // with the auto-selected plan (and hence with the references).
+    forall(Config::default().cases(30), |rng| {
+        let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+        let w = *rng.pick(&[4u32, 8]);
+        let threads = *rng.pick(&[1usize, 2, 4]);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let auto = MatmulPlan::build(PlanSpec::mm(m, k, n, w).with_threads(threads)).unwrap();
+        let want = auto.execute(&a, &b);
+        for lane in LaneId::ALL {
+            let spec = PlanSpec::mm(m, k, n, w).with_threads(threads).in_lane(lane);
+            let Ok(plan) = MatmulPlan::build(spec) else {
+                continue; // headroom refusals are covered above
+            };
+            prop_assert_eq(
+                plan.execute(&a, &b),
+                want.clone(),
+                &format!("forced {lane} == auto ({m}x{k}x{n} w={w})"),
+            )?;
+            prop_assert_eq(
+                plan.bind_b(&b).execute(&a),
+                want.clone(),
+                &format!("forced {lane} bound == auto"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bound_plans_serve_any_batch_size_across_threads() {
+    // One binding, streamed activations of varying m, threads {1,2,4}:
+    // always bit-exact with the per-call reference.
+    let mut rng = kmm::util::rng::Rng::new(61);
+    let (k, n, w) = (33usize, 9usize, 16u32);
+    let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+    let bound = MatmulPlan::build(PlanSpec::kmm(1, k, n, w, 2).with_threads(1))
+        .unwrap()
+        .bind_b(&b);
+    for m in [1usize, 5, 16] {
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let want = fast::kmm_digits(&a, &b, m, k, n, w, 2);
+        for threads in [1usize, 2, 4] {
+            assert_eq!(
+                bound.execute_with_threads(&a, threads),
+                want,
+                "m={m} threads={threads}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator-level plan path: resolve once, execute many, typed
+// rejections served as errors.
+// ---------------------------------------------------------------------
+
+#[test]
+fn backend_plans_agree_with_backend_gemm() {
+    let mut rng = kmm::util::rng::Rng::new(62);
+    for (w, algo) in [(8u32, FastAlgo::Mm), (12, FastAlgo::Kmm), (20, FastAlgo::Mm)] {
+        let mut be = FastBackend::with_threads(algo, 2);
+        let spec = be.resolve_spec(6, 10, 5, w).unwrap();
+        assert_eq!(spec.threads, Some(2), "backend budget is explicit");
+        let plan = be.plan(&spec).unwrap();
+        for _ in 0..2 {
+            let a = Mat::random(6, 10, w, &mut rng);
+            let b = Mat::random(10, 5, w, &mut rng);
+            let via_plan = plan.execute(&a, &b).unwrap();
+            let via_gemm = be.gemm(&a, &b, w).unwrap();
+            assert_eq!(via_plan.c, via_gemm.c, "w={w}");
+            assert_eq!(via_plan.c, matmul_oracle(&a, &b), "w={w}");
+            assert_eq!(via_plan.mode, via_gemm.mode, "w={w}");
+            assert_eq!(via_plan.lane, via_gemm.lane, "w={w}");
+        }
+        assert!(plan.describe().contains("lane="), "{}", plan.describe());
+    }
+    // The functional backend plans too (no lanes, cycle-model modes).
+    let func = FunctionalBackend::paper();
+    let spec = func.resolve_spec(4, 6, 4, 10).unwrap();
+    assert_eq!(spec.algo, PlanAlgo::Kmm { digits: 2 });
+    let plan = func.plan(&spec).unwrap();
+    let a = Mat::random(4, 6, 10, &mut rng);
+    let b = Mat::random(6, 4, 10, &mut rng);
+    assert_eq!(plan.execute(&a, &b).unwrap().c, matmul_oracle(&a, &b));
+}
+
+#[test]
+fn backend_plan_rejections_are_served_errors() {
+    let be = FastBackend::new(FastAlgo::Kmm);
+    // Width outside the window: typed at resolve time.
+    let err = be.resolve_spec(4, 4, 4, 33).unwrap_err();
+    assert!(err.to_string().contains("ceiling"), "{err:#}");
+    // Invalid digits / zero dims: typed at plan-build time.
+    let err = be.plan(&PlanSpec::kmm(4, 4, 4, 8, 3)).unwrap_err();
+    assert!(err.to_string().contains("invalid KMM config"), "{err:#}");
+    let err = be.plan(&PlanSpec::mm(4, 0, 4, 8)).unwrap_err();
+    assert!(err.to_string().contains("zero dimension"), "{err:#}");
+}
