@@ -17,6 +17,10 @@
 //!   8. plan reuse                    — a `BoundPlan` built once and
 //!      reused vs rebuilding (re-validating + re-binding) per call on
 //!      a batched-serving shape
+//!   9. algorithm crossover           — mm, kmm, strassen (one level),
+//!      and the Strassen–Karatsuba hybrid on one divisible shape, so
+//!      the artifact records where each driver wins (no gate: the
+//!      winner is hardware- and shape-dependent)
 //!
 //! Every engine section executes through build-once `MatmulPlan`s —
 //! the same path the serving layers take — with the plan constructed
@@ -35,12 +39,15 @@
 //! API exists for — with the same one-retry discipline.
 //!
 //! Every section is recorded into `BENCH_hotpath.json` (override the
-//! path with `KMM_BENCH_OUT`): **schema 3** — per-section median
-//! seconds, Mops/s, iteration count, thread count, GEMM shape, and the
+//! path with `KMM_BENCH_OUT`): **schema 4** — per-section median
+//! seconds, Mops/s, iteration count, thread count, GEMM shape, the
 //! element lane that ran (`"lane": "u16"|"u32"|"u64"`, `null` for
-//! non-engine sections) — plus the headline speedup ratios, now
-//! including `plan_reuse_vs_rebuild` with its gate-retry flag. The
-//! file is self-validated through `util::json` before the bench exits.
+//! non-engine sections), and the resolved algorithm (`"algo"`: the
+//! `PlanAlgo` label, `null` outside the plan-routed engine) — plus the
+//! headline speedup ratios, now including the `crossover_*` pair from
+//! section 9. The file is parsed back through `util::json` and checked
+//! against the shared `report::bench_schema` validator (the same one
+//! the golden-file test runs) before the bench exits.
 //!
 //! Run: `cargo bench --bench hotpath [-- --threads N]`
 
@@ -52,6 +59,7 @@ use kmm::arch::scalable::ScalableKmm;
 use kmm::coordinator::scheduler::schedule;
 use kmm::fast::{self, MatmulPlan, PlanSpec};
 use kmm::model::resnet::{resnet, ResNet};
+use kmm::report::bench_schema;
 use kmm::util::cli::Args;
 use kmm::util::json::{finite, Json};
 use kmm::util::pool;
@@ -71,6 +79,9 @@ struct Section {
     /// The fast-engine element lane the section ran (schema 2); `None`
     /// for sections outside the lane-routed engine.
     lane: Option<kmm::fast::LaneId>,
+    /// The resolved algorithm label (`PlanAlgo` display form, schema
+    /// 4); `None` for sections outside the plan-routed engine.
+    algo: Option<String>,
 }
 
 impl Section {
@@ -97,6 +108,12 @@ impl Section {
             "lane".to_string(),
             kmm::fast::LaneId::to_json(self.lane),
         );
+        m.insert(
+            "algo".to_string(),
+            self.algo
+                .as_ref()
+                .map_or(Json::Null, |a| Json::Str(a.clone())),
+        );
         Json::Object(m)
     }
 }
@@ -113,6 +130,7 @@ fn bench(
     shape: (usize, usize, usize),
     w: u32,
     lane: Option<kmm::fast::LaneId>,
+    algo: Option<String>,
     mut f: impl FnMut() -> u64,
 ) -> f64 {
     let mut times = Vec::with_capacity(iters);
@@ -135,6 +153,7 @@ fn bench(
         shape,
         w,
         lane,
+        algo,
     });
     med
 }
@@ -180,6 +199,7 @@ fn main() {
         (64, 64, 64),
         8,
         None,
+        None,
         || {
             let out = spec.tile_product(&a, &b);
             std::hint::black_box(&out);
@@ -199,6 +219,7 @@ fn main() {
         (256, 256, 256),
         12,
         None,
+        None,
         || {
             let (c, _) = arch.gemm(&a2, &b2, 12).unwrap();
             std::hint::black_box(&c);
@@ -215,6 +236,7 @@ fn main() {
         1,
         (0, 0, 0),
         12,
+        None,
         None,
         || {
             let s = schedule(&r50, &arch).unwrap();
@@ -233,6 +255,7 @@ fn main() {
         1,
         (256, 256, 256),
         16,
+        None,
         None,
         || {
             let c = matmul_oracle(&a3, &b3);
@@ -266,6 +289,7 @@ fn main() {
         (d, d, d),
         w,
         Some(plan_mm16.lane()),
+        Some(plan_mm16.algo().to_string()),
         || {
             let c = plan_mm16.execute(fa.data(), fb.data());
             std::hint::black_box(&c);
@@ -280,6 +304,7 @@ fn main() {
         (d, d, d),
         w,
         Some(plan_kmm16.lane()),
+        Some(plan_kmm16.algo().to_string()),
         || {
             let c = plan_kmm16.execute(fa.data(), fb.data());
             std::hint::black_box(&c);
@@ -293,6 +318,7 @@ fn main() {
         1,
         (d, d, d),
         w,
+        None,
         None,
         || {
             let mut t = Tally::new();
@@ -308,6 +334,7 @@ fn main() {
         1,
         (d, d, d),
         w,
+        None,
         None,
         || {
             let mut t = Tally::new();
@@ -354,6 +381,7 @@ fn main() {
         (dp, dp, dp),
         w,
         Some(plan_mm_1.lane()),
+        Some(plan_mm_1.algo().to_string()),
         || {
             let c = plan_mm_1.execute(pa.data(), pb.data());
             std::hint::black_box(&c);
@@ -372,6 +400,7 @@ fn main() {
             (dp, dp, dp),
             w,
             Some(plan_mm_n.lane()),
+            Some(plan_mm_n.algo().to_string()),
             || {
                 let c = plan_mm_n.execute(pa.data(), pb.data());
                 std::hint::black_box(&c);
@@ -389,6 +418,7 @@ fn main() {
         (dp, dp, dp),
         w,
         Some(plan_kmm_1.lane()),
+        Some(plan_kmm_1.algo().to_string()),
         || {
             let c = plan_kmm_1.execute(pa.data(), pb.data());
             std::hint::black_box(&c);
@@ -404,6 +434,7 @@ fn main() {
             (dp, dp, dp),
             w,
             Some(plan_kmm_n.lane()),
+            Some(plan_kmm_n.algo().to_string()),
             || {
                 let c = plan_kmm_n.execute(pa.data(), pb.data());
                 std::hint::black_box(&c);
@@ -458,6 +489,7 @@ fn main() {
         (dp, dp, dp),
         w8,
         Some(narrow),
+        Some(plan_narrow.algo().to_string()),
         || {
             let c = plan_narrow.execute(la.data(), lb.data());
             std::hint::black_box(&c);
@@ -472,6 +504,7 @@ fn main() {
         (dp, dp, dp),
         w8,
         Some(fast::LaneId::U64),
+        Some(plan_wide.algo().to_string()),
         || {
             let c = plan_wide.execute(la.data(), lb.data());
             std::hint::black_box(&c);
@@ -509,6 +542,7 @@ fn main() {
         (bm, bk, bn),
         bw,
         Some(bound.lane()),
+        Some(bound_spec.algo.to_string()),
         || {
             let c = bound.execute(ba.data());
             std::hint::black_box(&c);
@@ -523,6 +557,7 @@ fn main() {
         (bm, bk, bn),
         bw,
         Some(bound.lane()),
+        Some(bound_spec.algo.to_string()),
         || {
             let fresh = MatmulPlan::build(bound_spec).expect("validated above").bind_b(bb.data());
             let c = fresh.execute(ba.data());
@@ -533,6 +568,52 @@ fn main() {
     println!(
         "plan reuse vs rebuild: {:>5.2}x",
         t_plan_rebuild / t_plan_reuse
+    );
+
+    // 9. Algorithm crossover: all four drivers on one shape divisible
+    //    by the Strassen split (192^3 at w = 8 — inside every
+    //    algorithm's exactness window at one Strassen level), each
+    //    through an identically-built single-threaded plan. No gate:
+    //    which driver wins is hardware- and shape-dependent; the
+    //    recorded ratios are the crossover data the README points at.
+    let (xd, xw) = (192usize, 8u32);
+    println!("-- algorithm crossover (192^3, w = 8, single thread) --");
+    let xa = Mat::random(xd, xd, xw, &mut rng);
+    let xb = Mat::random(xd, xd, xw, &mut rng);
+    let xmacs = (xd * xd * xd) as u64;
+    let mut xtimes: BTreeMap<String, f64> = BTreeMap::new();
+    for algo in [
+        fast::PlanAlgo::Mm,
+        fast::PlanAlgo::Kmm { digits: 2 },
+        fast::PlanAlgo::Strassen { levels: 1 },
+        fast::PlanAlgo::StrassenKmm { levels: 1, digits: 2 },
+    ] {
+        let mut spec = PlanSpec::mm(xd, xd, xd, xw).with_threads(1);
+        spec.algo = algo;
+        let plan = MatmulPlan::build(spec).expect("192^3 w8 is inside every algo's window");
+        let label = plan.algo().to_string();
+        let t = bench(
+            &mut sections,
+            &format!("crossover {label} 192^3 w8 (MACs/s)"),
+            5,
+            1,
+            (xd, xd, xd),
+            xw,
+            Some(plan.lane()),
+            Some(label.clone()),
+            || {
+                let c = plan.execute(xa.data(), xb.data());
+                std::hint::black_box(&c);
+                xmacs
+            },
+        );
+        xtimes.insert(label, t);
+    }
+    let x_strassen_vs_mm = xtimes["mm"] / xtimes["strassen[1]"];
+    let x_hybrid_vs_kmm = xtimes["kmm[2]"] / xtimes["strassen-kmm[1,2]"];
+    println!(
+        "crossover: strassen[1] vs mm {x_strassen_vs_mm:>5.2}x, \
+         strassen-kmm[1,2] vs kmm[2] {x_hybrid_vs_kmm:>5.2}x"
     );
 
     // ---- the speedup gate measurement ---------------------------------
@@ -648,11 +729,20 @@ fn main() {
         "plan_reuse_vs_rebuild".to_string(),
         Json::Float(finite(g_plan_rebuild / g_plan_reuse)),
     );
+    speedups.insert(
+        "crossover_strassen_vs_mm".to_string(),
+        Json::Float(finite(x_strassen_vs_mm)),
+    );
+    speedups.insert(
+        "crossover_strassen_kmm_vs_kmm".to_string(),
+        Json::Float(finite(x_hybrid_vs_kmm)),
+    );
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
-    // Schema 3: schema 2 (per-section "lane") plus the plan-reuse
-    // sections, the plan_reuse_vs_rebuild speedup, and its gate flag.
-    top.insert("schema".to_string(), Json::Int(3));
+    // Schema 4: schema 3 plus per-section "algo" and the algorithm-
+    // crossover sections with their speedup pair (see
+    // `report::bench_schema` for the enforced contract).
+    top.insert("schema".to_string(), Json::Int(bench_schema::HOTPATH_SCHEMA));
     top.insert("threads_max".to_string(), Json::Int(par as i64));
     top.insert("speedup_gate_retried".to_string(), Json::Bool(retried));
     top.insert("lane_gate_retried".to_string(), Json::Bool(lane_retried));
@@ -665,8 +755,13 @@ fn main() {
     let doc = Json::Object(top).to_string();
 
     // Self-validate: the emitted document must round-trip through the
-    // crate's own parser and cover both thread counts for both drivers.
+    // crate's own parser, satisfy the shared schema-4 contract (the
+    // same validator the golden-file test runs), and cover both thread
+    // counts for both drivers.
     let parsed = Json::parse(&doc).expect("BENCH_hotpath.json must parse via util::json");
+    if let Err(e) = bench_schema::validate_hotpath(&parsed) {
+        panic!("BENCH_hotpath.json violates schema {}: {e}", bench_schema::HOTPATH_SCHEMA);
+    }
     let secs = parsed.get("sections").and_then(Json::as_array).expect("sections array");
     for (driver, threads) in [
         ("fast-MM", 1i64),

@@ -33,9 +33,10 @@
 use crate::algo::matrix::{Mat, MatAcc};
 use crate::arch::mxu::SystolicSpec;
 use crate::arch::scalable::{select_mode, Mode, ScalableKmm};
-use crate::coordinator::registry::{PackPlan, PackedWeight, NATIVE_W};
+use crate::coordinator::registry::{PackPlan, PackedWeight, NATIVE_W, SERVE_LEVELS};
 use crate::fast::{
-    check_width, select_lane, LaneChoice, LaneId, MatmulPlan, PlanAlgo, PlanSpec,
+    check_width, select_lane, select_lane_strassen, LaneChoice, LaneId, MatmulPlan, PlanAlgo,
+    PlanSpec,
 };
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::gemm::{simulate_cycles, GemmStats};
@@ -395,6 +396,16 @@ pub enum FastAlgo {
     /// Karatsuba digit slicing (Algorithm 4, one level) above the
     /// native window: three sub-GEMMs plus shift recombination.
     Kmm,
+    /// Recursive Strassen over the matrix dimension
+    /// ([`SERVE_LEVELS`] deep), seven conventional sub-GEMMs per level;
+    /// falls back to plain MM when the +1-bit-per-level headroom rule
+    /// admits no lane for the request's `(w, k)`.
+    Strassen,
+    /// The Strassen–Karatsuba hybrid: Strassen recursion whose leaves
+    /// digit-slice above the native window; falls back level by level
+    /// (plain strassen inside the window, plain KMM when the headroom
+    /// rule refuses).
+    StrassenKmm,
 }
 
 /// The software hot-path backend: the [`crate::fast`] blocked engine
@@ -581,6 +592,21 @@ impl GemmBackend for FastBackend {
         let (m, k, n) = (a.rows, a.cols, weight.cols());
         let spec = self.resolve_spec(m, k, n, w)?;
         let digits = spec.algo.digits();
+        if spec.algo.levels() > 0 {
+            // Strassen routing: the cache entry must have been bound
+            // under the exact algo (levels + digits) and lane this
+            // request resolves to; anything else re-plans from raw.
+            let lane = select_lane_strassen(w, k, digits, spec.algo.levels())
+                .expect("resolve_spec only picks a strassen algo when a lane is exact");
+            let bound = weight
+                .strassen()
+                .filter(|bp| bp.plan().algo() == spec.algo && bp.lane() == lane);
+            let Some(bound) = bound else {
+                return self.gemm(a, weight.raw(), w);
+            };
+            let raw = bound.execute_with_threads(a.data(), self.threads);
+            return Ok(finish_fast(&raw, m, k, n, self.mode_of(&spec), lane, &self.timing));
+        }
         // The lane this request routes to — the same select_lane rule
         // the registry's plans were built under, so matched entries
         // verify equal.
@@ -597,12 +623,45 @@ impl GemmBackend for FastBackend {
         // Width validation goes through the engine's shared check_width
         // gate, so every layer rejects with one message.
         check_width(w)?;
-        let algo = if w <= self.m {
-            PlanAlgo::Mm
-        } else {
-            match self.algo {
-                FastAlgo::Kmm => PlanAlgo::Kmm { digits: 2 },
-                FastAlgo::Mm => PlanAlgo::Mm,
+        let algo = match self.algo {
+            FastAlgo::Mm => PlanAlgo::Mm,
+            FastAlgo::Kmm => {
+                if w <= self.m {
+                    PlanAlgo::Mm
+                } else {
+                    PlanAlgo::Kmm { digits: 2 }
+                }
+            }
+            // The matrix-dimension recursion is orthogonal to the width
+            // window, but its +1-bit-per-level headroom tax can push a
+            // request out of every lane — those shapes degrade to the
+            // flat decomposition instead of being refused.
+            FastAlgo::Strassen => {
+                if select_lane_strassen(w, k, 1, SERVE_LEVELS).is_some() {
+                    PlanAlgo::Strassen {
+                        levels: SERVE_LEVELS,
+                    }
+                } else {
+                    PlanAlgo::Mm
+                }
+            }
+            FastAlgo::StrassenKmm => {
+                if w <= self.m {
+                    if select_lane_strassen(w, k, 1, SERVE_LEVELS).is_some() {
+                        PlanAlgo::Strassen {
+                            levels: SERVE_LEVELS,
+                        }
+                    } else {
+                        PlanAlgo::Mm
+                    }
+                } else if select_lane_strassen(w, k, 2, SERVE_LEVELS).is_some() {
+                    PlanAlgo::StrassenKmm {
+                        levels: SERVE_LEVELS,
+                        digits: 2,
+                    }
+                } else {
+                    PlanAlgo::Kmm { digits: 2 }
+                }
             }
         };
         Ok(PlanSpec {
@@ -638,6 +697,8 @@ impl GemmBackend for FastBackend {
         match self.algo {
             FastAlgo::Mm => PackPlan::Mm,
             FastAlgo::Kmm => PackPlan::Kmm,
+            FastAlgo::Strassen => PackPlan::Strassen,
+            FastAlgo::StrassenKmm => PackPlan::StrassenKmm,
         }
     }
 
@@ -645,6 +706,8 @@ impl GemmBackend for FastBackend {
         match self.algo {
             FastAlgo::Mm => "fast-mm",
             FastAlgo::Kmm => "fast-kmm",
+            FastAlgo::Strassen => "fast-strassen",
+            FastAlgo::StrassenKmm => "fast-strassen-kmm",
         }
     }
 }
@@ -757,7 +820,12 @@ mod tests {
             let a = Mat::random(7, 9, w, rng);
             let b = Mat::random(9, 5, w, rng);
             let want = matmul_oracle(&a, &b);
-            for algo in [FastAlgo::Mm, FastAlgo::Kmm] {
+            for algo in [
+                FastAlgo::Mm,
+                FastAlgo::Kmm,
+                FastAlgo::Strassen,
+                FastAlgo::StrassenKmm,
+            ] {
                 let mut be = FastBackend::new(algo);
                 let r = be.gemm(&a, &b, w).unwrap();
                 prop_assert_eq(r.c, want.clone(), &format!("{} exact at w={w}", be.name()))?;
@@ -775,7 +843,12 @@ mod tests {
             let a = Mat::random(23, 17, w, rng);
             let b = Mat::random(17, 11, w, rng);
             let want = matmul_oracle(&a, &b);
-            for algo in [FastAlgo::Mm, FastAlgo::Kmm] {
+            for algo in [
+                FastAlgo::Mm,
+                FastAlgo::Kmm,
+                FastAlgo::Strassen,
+                FastAlgo::StrassenKmm,
+            ] {
                 let mut be = FastBackend::with_threads(algo, threads);
                 let r = be.gemm(&a, &b, w).unwrap();
                 prop_assert_eq(
@@ -831,6 +904,101 @@ mod tests {
         let b = Mat::random(9, 5, 12, &mut rng);
         let err = plan.execute(&a, &b).unwrap_err();
         assert!(err.to_string().contains("shape mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn strassen_backends_route_and_fall_back_by_headroom() {
+        // w=8 has headroom for one level everywhere: the strassen algos
+        // resolve their trees. w=32 has none: both degrade to the flat
+        // decomposition of their namesake, never a refusal.
+        let st = FastBackend::new(FastAlgo::Strassen);
+        let hy = FastBackend::new(FastAlgo::StrassenKmm);
+        assert_eq!(st.name(), "fast-strassen");
+        assert_eq!(hy.name(), "fast-strassen-kmm");
+        assert_eq!(
+            st.resolve_spec(4, 16, 4, 8).unwrap().algo,
+            PlanAlgo::Strassen {
+                levels: SERVE_LEVELS
+            }
+        );
+        assert_eq!(
+            hy.resolve_spec(4, 16, 4, 8).unwrap().algo,
+            PlanAlgo::Strassen {
+                levels: SERVE_LEVELS
+            },
+            "inside the native window the hybrid has nothing to digit-slice"
+        );
+        assert_eq!(
+            hy.resolve_spec(4, 16, 4, 12).unwrap().algo,
+            PlanAlgo::StrassenKmm {
+                levels: SERVE_LEVELS,
+                digits: 2
+            }
+        );
+        assert_eq!(st.resolve_spec(4, 16, 4, 32).unwrap().algo, PlanAlgo::Mm);
+        assert_eq!(
+            hy.resolve_spec(4, 16, 4, 32).unwrap().algo,
+            PlanAlgo::Kmm { digits: 2 }
+        );
+        // The packing each backend asks for matches its routing.
+        assert_eq!(st.preferred_plan(), PackPlan::Strassen);
+        assert_eq!(hy.preferred_plan(), PackPlan::StrassenKmm);
+    }
+
+    #[test]
+    fn strassen_packed_serves_from_the_bound_tree() {
+        use crate::coordinator::registry::{PackPlan, PackedWeight};
+        let mut rng = Rng::new(27);
+        for (w, plan, algo) in [
+            (8u32, PackPlan::Strassen, FastAlgo::Strassen),
+            (12, PackPlan::StrassenKmm, FastAlgo::StrassenKmm),
+        ] {
+            let a = Mat::random(6, 10, w, &mut rng);
+            let b = Mat::random(10, 7, w, &mut rng);
+            let want = matmul_oracle(&a, &b);
+            let pw = PackedWeight::with_plan(b.clone(), w, plan).unwrap();
+            assert!(pw.strassen().is_some(), "w={w} binds the tree");
+            let mut be = FastBackend::with_threads(algo, 2);
+            let packed = be.gemm_packed(&a, &pw).unwrap();
+            let fresh = be.gemm(&a, &b, w).unwrap();
+            assert_eq!(packed.c, want, "w={w}");
+            assert_eq!(packed.c, fresh.c, "packed == fresh at w={w}");
+            assert_eq!(packed.mode, fresh.mode, "w={w}");
+            // A weight packed without the tree still serves, through
+            // the raw fallback.
+            let mm_only = PackedWeight::with_plan(b.clone(), w, PackPlan::Mm).unwrap();
+            assert!(mm_only.strassen().is_none());
+            assert_eq!(be.gemm_packed(&a, &mm_only).unwrap().c, want, "w={w} fallback");
+        }
+    }
+
+    #[test]
+    fn strassen_backends_serve_degenerate_shapes_like_before() {
+        // Zero-dim requests through the new algos keep the legacy
+        // contract: validation first (width gate), then all-zero Ok
+        // outputs — identical to the clamp_degenerate shim behavior.
+        let mut rng = Rng::new(33);
+        for algo in [FastAlgo::Strassen, FastAlgo::StrassenKmm] {
+            let mut be = FastBackend::new(algo);
+            let b = Mat::random(4, 3, 12, &mut rng);
+            let r = be.gemm(&Mat::from_rows(0, 4, &[]), &b, 12).unwrap();
+            assert_eq!((r.c.rows, r.c.cols), (0, 3), "{}", be.name());
+            let r = be
+                .gemm(&Mat::random(2, 4, 12, &mut rng), &Mat::from_rows(4, 0, &[]), 12)
+                .unwrap();
+            assert_eq!((r.c.rows, r.c.cols), (2, 0), "{}", be.name());
+            assert!(r.c.to_i128_vec().unwrap().is_empty(), "{}", be.name());
+            let err = be
+                .gemm(&Mat::from_rows(0, 4, &[]), &Mat::from_rows(4, 0, &[]), 40)
+                .unwrap_err();
+            assert!(err.to_string().contains("exceeds the fast engine"), "{err:#}");
+            // 1×1 is the smallest non-degenerate shape: a genuine
+            // (padded) strassen execution, exact.
+            let a = Mat::from_rows(1, 1, &[3]);
+            let b = Mat::from_rows(1, 1, &[5]);
+            let r = be.gemm(&a, &b, 8).unwrap();
+            assert_eq!(r.c.to_i128_vec().unwrap(), vec![15], "{}", be.name());
+        }
     }
 
     #[test]

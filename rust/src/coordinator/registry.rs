@@ -46,7 +46,9 @@
 //! ```
 
 use crate::algo::matrix::Mat;
-use crate::fast::{check_width, BoundPlan, LaneId, MatmulPlan, PlanSpec};
+use crate::fast::{
+    check_width, select_lane_strassen, BoundPlan, LaneId, MatmulPlan, PlanAlgo, PlanSpec,
+};
 use crate::util::error::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -57,6 +59,16 @@ use std::sync::{Arc, RwLock};
 /// digit-plane cache so the `fast-kmm` backend can serve them without
 /// any per-call splitting.
 pub const NATIVE_W: u32 = 8;
+
+/// Strassen recursion depth the serving backends run by default: one
+/// level trades an eighth of the leaf multiply work for a single bit of
+/// the +1-bit-per-level headroom tax, so most widths keep their
+/// selected lane. The registry's pack rules and
+/// [`FastBackend::resolve_spec`] share this constant, which is what
+/// makes strassen cache entries and strassen requests agree.
+///
+/// [`FastBackend::resolve_spec`]: crate::coordinator::dispatch::FastBackend
+pub const SERVE_LEVELS: u32 = 1;
 
 /// Opaque identifier of a registered weight (unique per registry).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -84,6 +96,16 @@ pub enum PackPlan {
     /// raw matrix (e.g. `functional`), where any packing would be pure
     /// waste.
     Raw,
+    /// Serving backend recurses Strassen over the matrix dimension
+    /// (`fast-strassen`): the recursive tree of prepacked B-side
+    /// pre-combinations at [`SERVE_LEVELS`], with conventional leaves.
+    /// Skipped (raw fallback) when the +1-bit-per-level headroom rule
+    /// admits no lane for the weight's `(w, k)`.
+    Strassen,
+    /// Serving backend runs the Strassen–Karatsuba hybrid
+    /// (`fast-strassen-kmm`): Strassen tree with digit-slice leaves
+    /// above the native window, plain-Strassen leaves at or below it.
+    StrassenKmm,
 }
 
 /// One registered weight: the raw matrix (for fallback backends and
@@ -108,6 +130,7 @@ pub struct PackedWeight {
     w: u32,
     mm: Option<BoundPlan>,
     kmm: Option<BoundPlan>,
+    strassen: Option<BoundPlan>,
 }
 
 impl PackedWeight {
@@ -165,12 +188,50 @@ impl PackedWeight {
                 PackPlan::Both | PackPlan::Mm => true,
                 PackPlan::Kmm => w <= NATIVE_W,
                 PackPlan::Raw => false,
+                // The strassen plans bind conventional panels only when
+                // the headroom rule refuses their tree — exactly the
+                // request shapes their backends fall back to plain MM
+                // for, so the fallback still serves from the cache.
+                PackPlan::Strassen => select_lane_strassen(w, k, 1, SERVE_LEVELS).is_none(),
+                PackPlan::StrassenKmm => {
+                    w <= NATIVE_W && select_lane_strassen(w, k, 1, SERVE_LEVELS).is_none()
+                }
             };
         // `config_valid(2, w)` holds for every w in 9..=32, so width
         // alone decides: above the native window the digit-slicing
-        // plans always get their plane tree.
-        let build_kmm =
-            !degenerate && w > NATIVE_W && matches!(plan, PackPlan::Both | PackPlan::Kmm);
+        // plans always get their plane tree (and the hybrid keeps a
+        // digit-plane fallback for shapes its strassen tree refuses).
+        let build_kmm = !degenerate
+            && w > NATIVE_W
+            && (matches!(plan, PackPlan::Both | PackPlan::Kmm)
+                || (matches!(plan, PackPlan::StrassenKmm)
+                    && select_lane_strassen(w, k, 2, SERVE_LEVELS).is_none()));
+        // The strassen pack rules mirror FastBackend::resolve_spec at
+        // SERVE_LEVELS: whatever algo the serving backend would resolve
+        // for this weight's (w, k) is the one bound here, so request
+        // and cache agree by construction.
+        let strassen_algo = if degenerate {
+            None
+        } else {
+            match plan {
+                PackPlan::Strassen => select_lane_strassen(w, k, 1, SERVE_LEVELS)
+                    .map(|_| PlanAlgo::Strassen {
+                        levels: SERVE_LEVELS,
+                    }),
+                PackPlan::StrassenKmm if w <= NATIVE_W => {
+                    select_lane_strassen(w, k, 1, SERVE_LEVELS).map(|_| PlanAlgo::Strassen {
+                        levels: SERVE_LEVELS,
+                    })
+                }
+                PackPlan::StrassenKmm => select_lane_strassen(w, k, 2, SERVE_LEVELS).map(|_| {
+                    PlanAlgo::StrassenKmm {
+                        levels: SERVE_LEVELS,
+                        digits: 2,
+                    }
+                }),
+                _ => None,
+            }
+        };
         // Bound entries are m-agnostic (each request's activation
         // supplies its own row count) and thread-agnostic (the serving
         // shard applies its backend's budget), so the specs pin m = 1
@@ -191,7 +252,21 @@ impl PackedWeight {
         } else {
             None
         };
-        Ok(PackedWeight { raw: b, w, mm, kmm })
+        let strassen = match strassen_algo {
+            Some(algo) => {
+                let mut spec = PlanSpec::mm(1, k, n, w).with_threads(1);
+                spec.algo = algo;
+                Some(MatmulPlan::build(with_lane(spec))?.bind_b(b.data()))
+            }
+            None => None,
+        };
+        Ok(PackedWeight {
+            raw: b,
+            w,
+            mm,
+            kmm,
+            strassen,
+        })
     }
 
     /// The raw (unpacked) weight matrix.
@@ -225,6 +300,13 @@ impl PackedWeight {
         self.kmm.as_ref()
     }
 
+    /// The recursive Strassen (or Strassen–Karatsuba hybrid) binding,
+    /// when the plan calls for one and the +1-bit-per-level headroom
+    /// rule admits a lane at [`SERVE_LEVELS`].
+    pub fn strassen(&self) -> Option<&BoundPlan> {
+        self.strassen.as_ref()
+    }
+
     /// The lane the conventional binding resolved to, when present —
     /// what the serving backend checks its selected lane against.
     pub fn mm_lane(&self) -> Option<LaneId> {
@@ -241,7 +323,8 @@ impl PackedWeight {
     pub fn bytes(&self) -> usize {
         let mm = self.mm.as_ref().map_or(0, BoundPlan::bytes);
         let kmm = self.kmm.as_ref().map_or(0, BoundPlan::bytes);
-        mm + kmm
+        let strassen = self.strassen.as_ref().map_or(0, BoundPlan::bytes);
+        mm + kmm + strassen
     }
 }
 
@@ -477,6 +560,50 @@ mod tests {
         // the same shape.
         let both = PackedWeight::with_plan(b, 12, PackPlan::Both).unwrap();
         assert!(both.bytes() > pw.bytes());
+    }
+
+    #[test]
+    fn strassen_pack_rules_mirror_the_serving_resolution() {
+        let mut rng = Rng::new(11);
+        // In-headroom weight: the strassen tree binds, nothing else.
+        let b = Mat::random(12, 6, 8, &mut rng);
+        let pw = PackedWeight::with_plan(b.clone(), 8, PackPlan::Strassen).unwrap();
+        let tree = pw.strassen().expect("headroom admits a lane at w=8");
+        assert_eq!(
+            tree.plan().algo(),
+            PlanAlgo::Strassen {
+                levels: SERVE_LEVELS
+            }
+        );
+        assert!(pw.mm().is_none() && pw.kmm().is_none());
+        assert!(pw.bytes() > 0);
+        // The hybrid digit-slices its leaves above the native window...
+        let wide = Mat::random(12, 6, 12, &mut rng);
+        let pw = PackedWeight::with_plan(wide, 12, PackPlan::StrassenKmm).unwrap();
+        assert_eq!(
+            pw.strassen().expect("w=12 hybrid tree").plan().algo(),
+            PlanAlgo::StrassenKmm {
+                levels: SERVE_LEVELS,
+                digits: 2
+            }
+        );
+        // ...and runs plain strassen leaves at or below it.
+        let pw = PackedWeight::with_plan(b, 8, PackPlan::StrassenKmm).unwrap();
+        assert_eq!(
+            pw.strassen().unwrap().plan().algo(),
+            PlanAlgo::Strassen {
+                levels: SERVE_LEVELS
+            }
+        );
+        // w=32 leaves no headroom for even one level: the entry binds
+        // exactly what the backend's fallback resolution reads instead.
+        let w32 = Mat::random(4, 4, 32, &mut rng);
+        let pw = PackedWeight::with_plan(w32.clone(), 32, PackPlan::Strassen).unwrap();
+        assert!(pw.strassen().is_none());
+        assert!(pw.mm().is_some(), "plain-MM fallback panels");
+        let pw = PackedWeight::with_plan(w32, 32, PackPlan::StrassenKmm).unwrap();
+        assert!(pw.strassen().is_none());
+        assert!(pw.kmm().is_some(), "digit-plane fallback above the window");
     }
 
     #[test]

@@ -710,6 +710,52 @@ mod tests {
     }
 
     #[test]
+    fn strassen_backends_serve_raw_packed_and_degenerate_requests() {
+        // The two Strassen hot-path backends plug into the shard loop
+        // like any other `GemmBackend`: raw requests, weight-stationary
+        // serving from the prebound recursion tree (one pack event
+        // total across every shard), and the zero-dim shapes the
+        // dispatch layer clamps are all served — never rejected.
+        use crate::coordinator::registry::PackPlan;
+        for (algo, plan) in [
+            (FastAlgo::Strassen, PackPlan::Strassen),
+            (FastAlgo::StrassenKmm, PackPlan::StrassenKmm),
+        ] {
+            let mut srv = Server::start(
+                move || Box::new(FastBackend::new(algo)) as Box<dyn GemmBackend>,
+                ServerConfig::default().workers(2),
+            );
+            let mut rng = Rng::new(51);
+            let w = 12;
+            let b = Mat::random(9, 5, w, &mut rng);
+            let h = srv.register_weight_with_plan(b.clone(), w, plan).unwrap();
+            for _ in 0..3 {
+                let a = Mat::random(6, 9, w, &mut rng);
+                let want = matmul_oracle(&a, &b);
+                let resp = srv.submit_packed_sync(a.clone(), h);
+                assert_eq!(resp.result.unwrap(), want, "{algo:?} packed");
+                let resp = srv.submit_sync(a, b.clone(), w);
+                assert_eq!(resp.result.unwrap(), want, "{algo:?} raw");
+            }
+            // Degenerate shapes serve all-zero products with the shape
+            // preserved, exactly as the pre-Strassen backends did (the
+            // validation-first clamp shim runs before any recursion).
+            let c = srv.submit_sync(Mat::zeros(0, 9), b.clone(), w).result;
+            let c = c.unwrap();
+            assert_eq!((c.rows, c.cols), (0, 5), "{algo:?} zero-m");
+            let c = srv.submit_sync(Mat::zeros(2, 0), Mat::zeros(0, 4), w).result;
+            let c = c.unwrap();
+            assert_eq!((c.rows, c.cols), (2, 4), "{algo:?} zero-k");
+            let reg = srv.registry();
+            let stats = srv.shutdown();
+            assert_eq!(stats.requests, 8);
+            assert_eq!(stats.rejected, 0);
+            assert_eq!(stats.weight_hits, 3);
+            assert_eq!(reg.packs(), 1, "{algo:?}: one pack serves every shard");
+        }
+    }
+
+    #[test]
     fn mixed_raw_and_packed_batches_group_by_width() {
         // Raw and packed requests drain into one batch and both serve
         // exactly; the registry is pre-seeded via start_with_registry.

@@ -31,6 +31,13 @@
 //!
 //! # Parallel execution
 //!
+//! This driver is also the leaf of the Strassen–Karatsuba hybrid
+//! ([`PlanAlgo::StrassenKmm`](crate::fast::plan::PlanAlgo::StrassenKmm)):
+//! [`crate::fast::strassen`] recurses over the *matrix* dimension and
+//! hands each seven-way sub-product to this digit-slice decomposition
+//! of the *bitwidth* dimension — the two savings compose because they
+//! cut along orthogonal axes.
+//!
 //! [`kmm_threads`] mirrors the hardware's PE-level parallelism in
 //! software: the three digit-plane sub-GEMMs are independent until the
 //! shift-recombine, so they run concurrently via

@@ -251,6 +251,62 @@ pub fn select_lane(w: u32, k: usize, digits: u32) -> Option<LaneId> {
         .find(|&lane| lane_exact(lane, w, k, digits))
 }
 
+/// Depth of each Strassen leaf GEMM after `levels` halvings: the driver
+/// zero-pads `k` up to a multiple of `2^levels` and halves it once per
+/// level, so every leaf sub-product runs at depth `⌈k / 2^levels⌉`.
+/// (Zero-padding is exact: padded `comp` rows are cancelled by the
+/// rank-1 complement corrections, and padded depth contributes zero to
+/// both the sub-products and the row/column sums.)
+pub fn strassen_leaf_k(k: usize, levels: u32) -> usize {
+    // Past 2^63 every additional level leaves leaf_k at 1; clamping the
+    // shift keeps the function total for adversarial `levels`.
+    k.max(1).div_ceil(1usize << levels.min(usize::BITS - 1))
+}
+
+/// Accumulator bits a `levels`-deep Strassen recursion over a
+/// `(w, k, digits)` computation provably needs — the **+1 bit per
+/// level** rule: each level's operand pre-combinations (`X + Y`, and
+/// `X + comp(Y)` with `comp(Y) = (2^we − 1) − Y` standing in for the
+/// subtractive combinations so operands stay non-negative) grow the
+/// effective operand width by exactly one bit, so the leaves are
+/// genuine unsigned GEMMs at width `w + levels` and depth
+/// [`strassen_leaf_k`]. Delegates to [`required_acc_bits`] at that
+/// effective configuration (`levels = 0` is exactly the flat rule);
+/// returns `u32::MAX` when `w + levels` overflows the engine window —
+/// no lane covers it.
+pub fn strassen_required_acc_bits(w: u32, k: usize, digits: u32, levels: u32) -> u32 {
+    let we = w.saturating_add(levels);
+    if we > MAX_W {
+        return u32::MAX;
+    }
+    required_acc_bits(we, strassen_leaf_k(k, levels), digits)
+}
+
+/// Whether `lane` is provably exact for a `levels`-deep Strassen
+/// recursion over a `w`-bit, depth-`k` GEMM whose leaves run the
+/// `digits`-digit decomposition: the effective width `w + levels` must
+/// stay inside the engine window, fit the lane's storage, and the
+/// accumulator must cover [`strassen_required_acc_bits`]. At
+/// `levels = 0` this is exactly [`lane_exact`].
+pub fn strassen_lane_exact(lane: LaneId, w: u32, k: usize, digits: u32, levels: u32) -> bool {
+    let we = w.saturating_add(levels);
+    w >= 1
+        && we <= MAX_W
+        && we <= lane.elem_bits()
+        && strassen_required_acc_bits(w, k, digits, levels) <= lane.acc_bits()
+}
+
+/// The narrowest lane that is [`strassen_lane_exact`] for
+/// `(w, k, digits, levels)`. Unlike [`select_lane`], this **can** fail
+/// inside the width window: at `w = `[`MAX_W`] even one Strassen level
+/// pushes the effective width past every lane, so callers must surface
+/// the `None` as a typed refusal rather than expect a lane.
+pub fn select_lane_strassen(w: u32, k: usize, digits: u32, levels: u32) -> Option<LaneId> {
+    LaneId::ALL
+        .into_iter()
+        .find(|&lane| strassen_lane_exact(lane, w, k, digits, levels))
+}
+
 /// The one width-validation gate every fast-engine entry point shares
 /// (the drivers, the weight registry, and backend dispatch all route
 /// through it, so rejections carry one message instead of three
@@ -382,6 +438,70 @@ mod tests {
                 assert_eq!(select_lane(w, k, 1), select_lane(w, k, 2), "w={w} k={k}");
             }
         }
+    }
+
+    #[test]
+    fn strassen_rule_degenerates_to_the_flat_rule_at_zero_levels() {
+        for w in [1u32, 8, 16, 32] {
+            for k in [1usize, 7, 96, 4096] {
+                for digits in [1u32, 2, 4] {
+                    if digits > w {
+                        continue;
+                    }
+                    assert_eq!(
+                        strassen_required_acc_bits(w, k, digits, 0),
+                        required_acc_bits(w, k, digits),
+                        "w={w} k={k} digits={digits}"
+                    );
+                    assert_eq!(
+                        select_lane_strassen(w, k, digits, 0),
+                        select_lane(w, k, digits),
+                        "w={w} k={k} digits={digits}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strassen_leaf_depth_halves_with_padding() {
+        assert_eq!(strassen_leaf_k(96, 0), 96);
+        assert_eq!(strassen_leaf_k(96, 1), 48);
+        assert_eq!(strassen_leaf_k(97, 1), 49); // padded to 98 first
+        assert_eq!(strassen_leaf_k(1, 3), 1); // 1 pads up to 8, leaves depth 1
+        assert_eq!(strassen_leaf_k(0, 0), 1); // degenerate depth clamps like clamp_degenerate
+        assert_eq!(strassen_leaf_k(5, 200), 1); // adversarial level counts stay total
+    }
+
+    #[test]
+    fn strassen_headroom_costs_one_bit_per_level() {
+        // w=8, k=256: flat rule needs 24 bits; each level adds 2 bits of
+        // product growth but removes one depth bit (leaf k halves), so
+        // the net is +1 bit per level.
+        assert_eq!(strassen_required_acc_bits(8, 256, 1, 0), 24);
+        assert_eq!(strassen_required_acc_bits(8, 256, 1, 1), 25);
+        assert_eq!(strassen_required_acc_bits(8, 256, 1, 2), 26);
+        // Out-of-window effective widths are covered by no lane.
+        assert_eq!(strassen_required_acc_bits(32, 4, 1, 1), u32::MAX);
+        assert_eq!(strassen_required_acc_bits(8, 4, 1, u32::MAX), u32::MAX);
+    }
+
+    #[test]
+    fn strassen_selector_refuses_exactly_one_level_past_the_boundary() {
+        // u16 boundary at w=8, k=256: each level trades one depth bit
+        // for two product bits, so need = 24 + L <= 32 holds to L = 8 —
+        // exactly where the storage bound w + L <= 16 also saturates.
+        // L = 9 breaks both; the selector must fall to u32.
+        assert_eq!(select_lane_strassen(8, 256, 1, 8), Some(LaneId::U16));
+        assert!(strassen_lane_exact(LaneId::U16, 8, 256, 1, 8));
+        assert!(!strassen_lane_exact(LaneId::U16, 8, 256, 1, 9));
+        assert_eq!(select_lane_strassen(8, 256, 1, 9), Some(LaneId::U32));
+        // w=MAX_W: one Strassen level pushes past the window entirely.
+        assert_eq!(select_lane_strassen(32, 64, 1, 0), Some(LaneId::U64));
+        assert_eq!(select_lane_strassen(32, 64, 1, 1), None);
+        assert_eq!(select_lane_strassen(31, 64, 1, 1), Some(LaneId::U64));
+        // Degenerate zero-width never qualifies.
+        assert_eq!(select_lane_strassen(0, 4, 1, 1), None);
     }
 
     #[test]

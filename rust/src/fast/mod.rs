@@ -141,6 +141,7 @@ pub mod kmm;
 pub mod lane;
 pub mod pack;
 pub mod plan;
+pub mod strassen;
 
 pub use gemm::{
     gemm_into, gemm_into_threads, gemm_prepacked, gemm_prepacked_into,
@@ -149,7 +150,8 @@ pub use gemm::{
 pub use kernel::{Kernel, Kernel1x1, Kernel8x4};
 pub use kmm::{LanePackedKmmB, PackedKmmB};
 pub use lane::{
-    check_width, lane_exact, required_acc_bits, select_lane, Element, LaneId, MAX_W,
+    check_width, lane_exact, required_acc_bits, select_lane, select_lane_strassen,
+    strassen_lane_exact, strassen_leaf_k, strassen_required_acc_bits, Element, LaneId, MAX_W,
 };
 pub use pack::{LanePackedB, PackedB};
 pub use plan::{BoundPlan, LaneChoice, MatmulPlan, PlanAlgo, PlanError, PlanSpec};

@@ -36,9 +36,11 @@ use crate::fast::gemm::{self, Blocking};
 use crate::fast::kernel::Kernel8x4;
 use crate::fast::kmm::{self, LanePackedKmmB};
 use crate::fast::lane::{
-    check_width, narrow_plane, required_acc_bits, select_lane, widen_acc, Element, LaneId,
+    check_width, narrow_plane, required_acc_bits, select_lane, select_lane_strassen,
+    strassen_lane_exact, widen_acc, Element, LaneId,
 };
 use crate::fast::pack::LanePackedB;
+use crate::fast::strassen;
 use crate::util::pool;
 use std::fmt;
 
@@ -54,14 +56,57 @@ pub enum PlanAlgo {
         /// Digit count of the decomposition (a power of two `≤ w`).
         digits: u32,
     },
+    /// Recursive Strassen over the matrix dimension: seven conventional
+    /// sub-GEMMs per recursion level, each leaf a smaller plan through
+    /// the packed-panel engine (see [`crate::fast::strassen`]). Each
+    /// level costs one bit of operand headroom, so lane selection
+    /// proves exactness at effective width `w + levels` and leaf depth
+    /// `⌈k / 2^levels⌉`.
+    ///
+    /// ```
+    /// use kmm::fast::{MatmulPlan, PlanAlgo, PlanSpec};
+    ///
+    /// // Build once: the headroom rule resolves a lane for w+levels bits...
+    /// let mut spec = PlanSpec::mm(3, 5, 4, 8).with_threads(1);
+    /// spec.algo = PlanAlgo::Strassen { levels: 1 };
+    /// let plan = MatmulPlan::build(spec).unwrap();
+    /// assert_eq!(plan.levels(), 1);
+    ///
+    /// // ...then execute: odd shapes pad and crop transparently.
+    /// let a = vec![3u64; 3 * 5];
+    /// let b = vec![5u64; 5 * 4];
+    /// assert_eq!(plan.execute(&a, &b), vec![75u128; 3 * 4]);
+    /// ```
+    Strassen {
+        /// Strassen recursion depth (`0` degenerates to plain MM).
+        levels: u32,
+    },
+    /// The Strassen–Karatsuba hybrid: Strassen recursion over the
+    /// matrix dimension whose leaves dispatch into the Karatsuba
+    /// digit-slice driver — the composition of this paper's bitwidth
+    /// decomposition with the follow-up's matrix decomposition.
+    StrassenKmm {
+        /// Strassen recursion depth.
+        levels: u32,
+        /// Digit count of the leaf decomposition (a power of two `≤ w`).
+        digits: u32,
+    },
 }
 
 impl PlanAlgo {
     /// Digit count of the decomposition (`1` for the conventional path).
     pub fn digits(self) -> u32 {
         match self {
-            PlanAlgo::Mm => 1,
-            PlanAlgo::Kmm { digits } => digits,
+            PlanAlgo::Mm | PlanAlgo::Strassen { .. } => 1,
+            PlanAlgo::Kmm { digits } | PlanAlgo::StrassenKmm { digits, .. } => digits,
+        }
+    }
+
+    /// Strassen recursion depth (`0` for the non-Strassen paths).
+    pub fn levels(self) -> u32 {
+        match self {
+            PlanAlgo::Mm | PlanAlgo::Kmm { .. } => 0,
+            PlanAlgo::Strassen { levels } | PlanAlgo::StrassenKmm { levels, .. } => levels,
         }
     }
 }
@@ -71,6 +116,10 @@ impl fmt::Display for PlanAlgo {
         match self {
             PlanAlgo::Mm => f.write_str("mm"),
             PlanAlgo::Kmm { digits } => write!(f, "kmm[{digits}]"),
+            PlanAlgo::Strassen { levels } => write!(f, "strassen[{levels}]"),
+            PlanAlgo::StrassenKmm { levels, digits } => {
+                write!(f, "strassen-kmm[{levels},{digits}]")
+            }
         }
     }
 }
@@ -199,6 +248,24 @@ pub enum PlanError {
         /// Accumulator bits the lane has.
         have: u32,
     },
+    /// No lane can prove the Strassen headroom contract: each recursion
+    /// level widens operands by one bit, so the leaves need
+    /// `w + levels`-bit storage and matching accumulator headroom at
+    /// depth `⌈k / 2^levels⌉`
+    /// ([`strassen_required_acc_bits`](crate::fast::lane::strassen_required_acc_bits)).
+    StrassenHeadroom {
+        /// The forced lane, or `None` when automatic selection found no
+        /// exact lane at all.
+        lane: Option<LaneId>,
+        /// Operand bitwidth.
+        w: u32,
+        /// GEMM depth.
+        k: usize,
+        /// Digit count of the leaf decomposition.
+        digits: u32,
+        /// Strassen recursion depth.
+        levels: u32,
+    },
 }
 
 impl fmt::Display for PlanError {
@@ -232,6 +299,23 @@ impl fmt::Display for PlanError {
                  (accumulator {have} bits < required {need})",
                 lane.name()
             ),
+            PlanError::StrassenHeadroom {
+                lane,
+                w,
+                k,
+                digits,
+                levels,
+            } => {
+                match lane {
+                    Some(l) => write!(f, "lane {}: ", l.name())?,
+                    None => f.write_str("no lane: ")?,
+                }
+                write!(
+                    f,
+                    "not provably exact for strassen levels={levels} at w={w} depth k={k} \
+                     with digits={digits} (each level costs one bit of headroom)"
+                )
+            }
         }
     }
 }
@@ -305,13 +389,30 @@ impl MatmulPlan {
                 reason: e.to_string(),
             });
         }
-        if let PlanAlgo::Kmm { digits } = algo {
+        if let PlanAlgo::Kmm { digits } | PlanAlgo::StrassenKmm { digits, .. } = algo {
             if !bits::config_valid(digits, w) {
                 return Err(PlanError::InvalidDigits { digits, w });
             }
         }
         let digits = algo.digits();
+        let levels = algo.levels();
+        let strassen = matches!(
+            algo,
+            PlanAlgo::Strassen { .. } | PlanAlgo::StrassenKmm { .. }
+        );
         let lane = match lane {
+            // The Strassen headroom rule genuinely can refuse every
+            // lane in-window (e.g. w = MAX_W with levels ≥ 1): one bit
+            // of operand growth per level has to fit somewhere.
+            LaneChoice::Auto if strassen => select_lane_strassen(w, k, digits, levels).ok_or(
+                PlanError::StrassenHeadroom {
+                    lane: None,
+                    w,
+                    k,
+                    digits,
+                    levels,
+                },
+            )?,
             // In-window widths always admit the u64 lane, so Auto
             // selection cannot fail past check_width.
             LaneChoice::Auto => {
@@ -321,16 +422,28 @@ impl MatmulPlan {
                 if w > l.elem_bits() {
                     return Err(PlanError::LaneStorage { lane: l, w });
                 }
-                let need = required_acc_bits(w, k, digits);
-                if need > l.acc_bits() {
-                    return Err(PlanError::LaneHeadroom {
-                        lane: l,
-                        w,
-                        k,
-                        digits,
-                        need,
-                        have: l.acc_bits(),
-                    });
+                if strassen {
+                    if !strassen_lane_exact(l, w, k, digits, levels) {
+                        return Err(PlanError::StrassenHeadroom {
+                            lane: Some(l),
+                            w,
+                            k,
+                            digits,
+                            levels,
+                        });
+                    }
+                } else {
+                    let need = required_acc_bits(w, k, digits);
+                    if need > l.acc_bits() {
+                        return Err(PlanError::LaneHeadroom {
+                            lane: l,
+                            w,
+                            k,
+                            digits,
+                            need,
+                            have: l.acc_bits(),
+                        });
+                    }
                 }
                 l
             }
@@ -377,6 +490,11 @@ impl MatmulPlan {
         self.algo.digits()
     }
 
+    /// Strassen recursion depth (`0` = no matrix-dimension recursion).
+    pub fn levels(&self) -> u32 {
+        self.algo.levels()
+    }
+
     /// The element lane the plan resolved to (selected or proven).
     pub fn lane(&self) -> LaneId {
         self.lane
@@ -408,6 +526,14 @@ impl MatmulPlan {
             "operand exceeds w={} bits",
             self.w
         );
+        if matches!(
+            self.algo,
+            PlanAlgo::Strassen { .. } | PlanAlgo::StrassenKmm { .. }
+        ) {
+            // The Strassen driver recurses over the matrix dimension
+            // and re-enters this path through its leaf plans.
+            return strassen::execute(self, a, b);
+        }
         match self.lane {
             LaneId::U16 => {
                 widen_acc::<u16>(self.run(&narrow_plane::<u16>(a), &narrow_plane::<u16>(b)))
@@ -473,6 +599,9 @@ impl MatmulPlan {
                 digits,
                 self.threads,
             ),
+            PlanAlgo::Strassen { .. } | PlanAlgo::StrassenKmm { .. } => {
+                unreachable!("strassen plans execute through fast::strassen, not the lane drivers")
+            }
         }
     }
 
@@ -522,6 +651,9 @@ impl MatmulPlan {
             PlanAlgo::Kmm { digits } => BoundOperand::Kmm(LanePackedKmmB::pack_in(
                 self.lane, b, self.k, self.n, self.w, digits,
             )),
+            PlanAlgo::Strassen { .. } | PlanAlgo::StrassenKmm { .. } => {
+                BoundOperand::Strassen(strassen::bind_b(self, b))
+            }
         };
         BoundPlan {
             plan: self.clone(),
@@ -555,6 +687,8 @@ enum BoundOperand {
     Mm(LanePackedB),
     /// The Karatsuba digit-plane tree.
     Kmm(LanePackedKmmB),
+    /// The recursive Strassen tree of prepacked B-side combinations.
+    Strassen(strassen::StrassenBoundB),
 }
 
 /// A [`MatmulPlan`] with its stationary B operand bound and prepacked:
@@ -607,6 +741,7 @@ impl BoundPlan {
         match &self.operand {
             BoundOperand::Mm(p) => p.bytes(),
             BoundOperand::Kmm(p) => p.bytes(),
+            BoundOperand::Strassen(t) => t.bytes(),
         }
     }
 
@@ -646,6 +781,7 @@ impl BoundPlan {
         match &self.operand {
             BoundOperand::Mm(p) => p.gemm(a, m, threads),
             BoundOperand::Kmm(p) => p.kmm(a, m, threads),
+            BoundOperand::Strassen(t) => t.execute(a, threads),
         }
     }
 }
@@ -784,6 +920,75 @@ mod tests {
             assert_eq!(bound.execute(&a), fresh, "m={m}");
             assert_eq!(bound.execute_with_threads(&a, 4), fresh, "m={m} threads=4");
         }
+    }
+
+    #[test]
+    fn strassen_builds_resolve_the_headroom_rule() {
+        let mut spec = PlanSpec::mm(4, 256, 4, 8).with_threads(1);
+        spec.algo = PlanAlgo::Strassen { levels: 2 };
+        let plan = MatmulPlan::build(spec).unwrap();
+        assert_eq!((plan.levels(), plan.digits()), (2, 1));
+        assert_eq!(Some(plan.lane()), select_lane_strassen(8, 256, 1, 2));
+        assert!(plan.describe().contains("strassen[2]"), "{}", plan.describe());
+
+        spec.algo = PlanAlgo::StrassenKmm {
+            levels: 1,
+            digits: 2,
+        };
+        let hybrid = MatmulPlan::build(spec).unwrap();
+        assert_eq!((hybrid.levels(), hybrid.digits()), (1, 2));
+        assert!(
+            hybrid.describe().contains("strassen-kmm[1,2]"),
+            "{}",
+            hybrid.describe()
+        );
+    }
+
+    #[test]
+    fn strassen_refusals_are_typed_errors() {
+        // w = MAX_W leaves no room for even one level of operand
+        // growth: Auto refuses with lane: None.
+        let mut spec = PlanSpec::mm(2, 4, 2, MAX_W);
+        spec.algo = PlanAlgo::Strassen { levels: 1 };
+        let err = MatmulPlan::build(spec).unwrap_err();
+        assert_eq!(
+            err,
+            PlanError::StrassenHeadroom {
+                lane: None,
+                w: MAX_W,
+                k: 4,
+                digits: 1,
+                levels: 1
+            }
+        );
+        assert!(err.to_string().contains("strassen levels=1"), "{err}");
+
+        // A forced narrow lane refuses one level past its boundary
+        // (u16 holds w=8 through levels=8; 17-bit leaves do not fit).
+        let mut spec = PlanSpec::mm(2, 256, 2, 8).in_lane(LaneId::U16);
+        spec.algo = PlanAlgo::Strassen { levels: 9 };
+        let err = MatmulPlan::build(spec).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                PlanError::StrassenHeadroom {
+                    lane: Some(LaneId::U16),
+                    levels: 9,
+                    ..
+                }
+            ),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("lane u16"), "{err}");
+
+        // The hybrid validates its digit config like plain KMM.
+        let mut spec = PlanSpec::mm(2, 4, 2, 8);
+        spec.algo = PlanAlgo::StrassenKmm {
+            levels: 1,
+            digits: 3,
+        };
+        let err = MatmulPlan::build(spec).unwrap_err();
+        assert_eq!(err, PlanError::InvalidDigits { digits: 3, w: 8 });
     }
 
     #[test]

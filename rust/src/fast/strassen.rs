@@ -1,0 +1,523 @@
+//! Recursive Strassen driver over the packed-panel GEMM engine, plus
+//! the Strassen–Karatsuba hybrid whose leaves dispatch into the
+//! Algorithm-4 digit-slice driver.
+//!
+//! The source paper cuts multiplication complexity across the
+//! *bitwidth* dimension; the same authors' follow-up ("Strassen
+//! Multisystolic Array Hardware Architectures", arXiv:2502.10063) cuts
+//! it across the *matrix* dimension, and the two compose: each Strassen
+//! level replaces eight half-size sub-products with seven, and every
+//! leaf sub-product is just a smaller [`PlanSpec`] executed by the
+//! existing blocked engine — conventionally
+//! ([`PlanAlgo::Strassen`]) or through the Karatsuba digit-slice
+//! decomposition ([`PlanAlgo::StrassenKmm`]).
+//!
+//! # Staying unsigned: the complement trick
+//!
+//! Strassen's pre-combinations subtract (`B12 − B22`, `A21 − A11`, …),
+//! but the engine's lanes are unsigned and its widening multiply
+//! zero-extends — two's-complement wrapping would be wrong because the
+//! operand modulus (`2^elem_bits`) differs from the accumulator modulus.
+//! The driver therefore never forms a negative operand: with `we` the
+//! effective operand width at the current level and
+//! `comp(Y) = (2^we − 1) − Y` (elementwise, always non-negative),
+//!
+//! ```text
+//! A·(U − V)      = A·(U + comp(V))      − (2^we − 1) · A·J
+//! (X − Y)·B      = (X + comp(Y))·B      − (2^we − 1) · J·B
+//! ```
+//!
+//! where `J` is the all-ones matrix, so `(A·J)(i,j) = rowsumᵢ(A)` and
+//! `(J·B)(i,j) = colsumⱼ(B)` — rank-1 corrections costing `O(n²)`
+//! integer work per product, applied in `i128` after the sub-product
+//! returns. Both `X + Y` and `X + comp(Y)` are bounded by
+//! `2^(we+1) − 2`, which is the **+1-bit-per-level headroom rule** that
+//! [`select_lane_strassen`](crate::fast::lane::select_lane_strassen)
+//! proves at plan build: leaves are genuine unsigned GEMMs at effective
+//! width `w + levels` and depth `⌈k / 2^levels⌉`, exact in the resolved
+//! lane.
+//!
+//! # Shapes and padding
+//!
+//! Odd and non-power-of-two shapes are handled by zero-padding `m`,
+//! `k`, `n` up to the next multiple of `2^levels` once at the top, so
+//! the recursion always splits evenly; the result is cropped at the
+//! end. Padding is exact through the complement trick: a padded-zero
+//! row of `Y` turns into a `2^we − 1` row of `comp(Y)`, and the rank-1
+//! correction subtracts exactly that contribution back out, while
+//! padded depth contributes zero to both the sub-products and the
+//! row/column sums.
+//!
+//! All seven M-term products and the four C-block combinations are
+//! accumulated in `i128` (values stay far below `2^127` — the operand
+//! widths are at most 33 bits and depths far below `2^60`); the final
+//! result is proven non-negative by the algebra and converted to the
+//! `u128` serving boundary with a checked cast. Parallelism rides the
+//! leaf GEMMs' existing row-strip thread pool, so results are bit-exact
+//! at every thread count.
+
+use crate::fast::plan::{BoundPlan, MatmulPlan, PlanAlgo, PlanSpec};
+
+/// Round `x` up to the next multiple of `to`.
+fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+/// Zero-pad a row-major `rows × cols` matrix to `rp × cp`.
+fn pad(src: &[u64], rows: usize, cols: usize, rp: usize, cp: usize) -> Vec<u64> {
+    debug_assert_eq!(src.len(), rows * cols);
+    if rp == rows && cp == cols {
+        return src.to_vec();
+    }
+    let mut out = vec![0u64; rp * cp];
+    for i in 0..rows {
+        out[i * cp..i * cp + cols].copy_from_slice(&src[i * cols..(i + 1) * cols]);
+    }
+    out
+}
+
+/// Copy quadrant `(qi, qj)` of a row-major `rows × cols` matrix with
+/// even dimensions.
+fn quad(src: &[u64], rows: usize, cols: usize, qi: usize, qj: usize) -> Vec<u64> {
+    let (hr, hc) = (rows / 2, cols / 2);
+    let mut out = Vec::with_capacity(hr * hc);
+    for i in 0..hr {
+        let start = (qi * hr + i) * cols + qj * hc;
+        out.extend_from_slice(&src[start..start + hc]);
+    }
+    out
+}
+
+/// Elementwise `x + y` (grows the effective width by one bit).
+fn add(x: &[u64], y: &[u64]) -> Vec<u64> {
+    x.iter().zip(y).map(|(&p, &q)| p + q).collect()
+}
+
+/// Elementwise `x + comp(y)` with `comp(y) = mask − y` — the
+/// non-negative stand-in for `x − y` (same one-bit growth as [`add`]).
+fn comp_add(x: &[u64], y: &[u64], mask: u64) -> Vec<u64> {
+    x.iter().zip(y).map(|(&p, &q)| p + (mask - q)).collect()
+}
+
+/// Per-row sums of a row-major `rows × cols` matrix, in `i128`.
+fn rowsums(x: &[u64], rows: usize, cols: usize) -> Vec<i128> {
+    (0..rows)
+        .map(|i| x[i * cols..(i + 1) * cols].iter().map(|&v| v as i128).sum())
+        .collect()
+}
+
+/// Per-column sums of a row-major `rows × cols` matrix, in `i128`.
+fn colsums(x: &[u64], rows: usize, cols: usize) -> Vec<i128> {
+    let mut out = vec![0i128; cols];
+    for i in 0..rows {
+        for (s, &v) in out.iter_mut().zip(&x[i * cols..(i + 1) * cols]) {
+            *s += v as i128;
+        }
+    }
+    out
+}
+
+/// Subtract the B-side complement correction `mask · rowsumᵢ(A-block)`
+/// from every entry of row `i` of `p` (a `rows × hn` product).
+fn sub_row_correction(p: &mut [i128], row_sums: &[i128], mask: u64, hn: usize) {
+    for (i, &rs) in row_sums.iter().enumerate() {
+        let corr = mask as i128 * rs;
+        for v in &mut p[i * hn..(i + 1) * hn] {
+            *v -= corr;
+        }
+    }
+}
+
+/// Subtract the A-side complement correction `mask · colsumⱼ(B-block)`
+/// from every entry of column `j` of `p`.
+fn sub_col_correction(p: &mut [i128], col_sums: &[i128], mask: u64) {
+    for row in p.chunks_mut(col_sums.len()) {
+        for (v, &cs) in row.iter_mut().zip(col_sums) {
+            *v -= mask as i128 * cs;
+        }
+    }
+}
+
+/// Assemble the four output blocks from the seven M-term products
+/// (each `hm × hn`): `C11 = M1+M4−M5+M7`, `C12 = M3+M5`,
+/// `C21 = M2+M4`, `C22 = M1−M2+M3+M6`.
+fn combine(ms: [Vec<i128>; 7], hm: usize, hn: usize) -> Vec<i128> {
+    let (m, n) = (2 * hm, 2 * hn);
+    let [m1, m2, m3, m4, m5, m6, m7] = ms;
+    let mut c = vec![0i128; m * n];
+    for i in 0..hm {
+        for j in 0..hn {
+            let x = i * hn + j;
+            c[i * n + j] = m1[x] + m4[x] - m5[x] + m7[x];
+            c[i * n + hn + j] = m3[x] + m5[x];
+            c[(hm + i) * n + j] = m2[x] + m4[x];
+            c[(hm + i) * n + hn + j] = m1[x] - m2[x] + m3[x] + m6[x];
+        }
+    }
+    c
+}
+
+/// The leaf sub-product's spec: the same engine configuration the plan
+/// proved at build time — effective width `w + levels`, the plan's
+/// lane, and (for the hybrid) the digit-slice decomposition.
+fn leaf_spec(plan: &MatmulPlan, m: usize, k: usize, n: usize) -> PlanSpec {
+    let we = plan.w() + plan.levels();
+    let spec = match plan.algo() {
+        PlanAlgo::StrassenKmm { digits, .. } => PlanSpec::kmm(m, k, n, we, digits),
+        _ => PlanSpec::mm(m, k, n, we),
+    };
+    spec.with_threads(plan.threads()).in_lane(plan.lane())
+}
+
+/// Build and run one leaf GEMM (a smaller [`PlanSpec`] through the
+/// packed-panel engine), widening to `i128` for the combination layer.
+fn leaf_mul(plan: &MatmulPlan, a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<i128> {
+    let leaf = MatmulPlan::build(leaf_spec(plan, m, k, n))
+        .expect("the Strassen headroom rule proved the leaf contract at build time");
+    leaf.execute(a, b)
+        .into_iter()
+        .map(|v| i128::try_from(v).expect("leaf products fit the lane accumulator"))
+        .collect()
+}
+
+/// One recursion node of the fresh-operand driver: `a` and `b` are
+/// `m × k` and `k × n` with all dimensions divisible by `2^level`, and
+/// entries `< 2^we`.
+#[allow(clippy::too_many_arguments)]
+fn mul(
+    plan: &MatmulPlan,
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    we: u32,
+    level: u32,
+) -> Vec<i128> {
+    if level == 0 {
+        debug_assert_eq!(we, plan.w() + plan.levels());
+        return leaf_mul(plan, a, b, m, k, n);
+    }
+    let mask = (1u64 << we) - 1;
+    let (hm, hk, hn) = (m / 2, k / 2, n / 2);
+    let a11 = quad(a, m, k, 0, 0);
+    let a12 = quad(a, m, k, 0, 1);
+    let a21 = quad(a, m, k, 1, 0);
+    let a22 = quad(a, m, k, 1, 1);
+    let b11 = quad(b, k, n, 0, 0);
+    let b12 = quad(b, k, n, 0, 1);
+    let b21 = quad(b, k, n, 1, 0);
+    let b22 = quad(b, k, n, 1, 1);
+    let b6 = add(&b11, &b12);
+    let b7 = add(&b21, &b22);
+    let m1 = mul(plan, &add(&a11, &a22), &add(&b11, &b22), hm, hk, hn, we + 1, level - 1);
+    let m2 = mul(plan, &add(&a21, &a22), &b11, hm, hk, hn, we + 1, level - 1);
+    let mut m3 = mul(plan, &a11, &comp_add(&b12, &b22, mask), hm, hk, hn, we + 1, level - 1);
+    sub_row_correction(&mut m3, &rowsums(&a11, hm, hk), mask, hn);
+    let mut m4 = mul(plan, &a22, &comp_add(&b21, &b11, mask), hm, hk, hn, we + 1, level - 1);
+    sub_row_correction(&mut m4, &rowsums(&a22, hm, hk), mask, hn);
+    let m5 = mul(plan, &add(&a11, &a12), &b22, hm, hk, hn, we + 1, level - 1);
+    let mut m6 = mul(plan, &comp_add(&a21, &a11, mask), &b6, hm, hk, hn, we + 1, level - 1);
+    sub_col_correction(&mut m6, &colsums(&b6, hk, hn), mask);
+    let mut m7 = mul(plan, &comp_add(&a12, &a22, mask), &b7, hm, hk, hn, we + 1, level - 1);
+    sub_col_correction(&mut m7, &colsums(&b7, hk, hn), mask);
+    combine([m1, m2, m3, m4, m5, m6, m7], hm, hn)
+}
+
+/// Crop the padded `i128` result back to `m × n` and convert to the
+/// `u128` serving boundary (the combination algebra yields the exact
+/// non-negative product, so the cast is checked, not wrapped).
+fn crop(c: &[i128], m: usize, n: usize, stride: usize) -> Vec<u128> {
+    let mut out = Vec::with_capacity(m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let v = c[i * stride + j];
+            out.push(u128::try_from(v).expect("strassen combination yields the exact product"));
+        }
+    }
+    out
+}
+
+/// Execute a Strassen (or Strassen–Karatsuba hybrid) plan over fresh
+/// operands: pad to a multiple of `2^levels`, recurse, crop.
+pub(crate) fn execute(plan: &MatmulPlan, a: &[u64], b: &[u64]) -> Vec<u128> {
+    let (m, k, n) = (plan.m(), plan.k(), plan.n());
+    let levels = plan.levels();
+    let span = 1usize << levels;
+    let (mp, kp, np) = (round_up(m, span), round_up(k, span), round_up(n, span));
+    let ap = pad(a, m, k, mp, kp);
+    let bp = pad(b, k, n, kp, np);
+    let c = mul(plan, &ap, &bp, mp, kp, np, plan.w(), levels);
+    crop(&c, m, n, np)
+}
+
+/// The bound (weight-stationary) form of the Strassen B operand: the
+/// full recursion tree of B-side pre-combinations, each leaf prepacked
+/// as a [`BoundPlan`] in the plan's lane, plus the per-node column sums
+/// the A-side complement corrections need. All seven per-node B
+/// operands (`B11+B22`, `B11`, `B12+comp(B22)`, `B21+comp(B11)`,
+/// `B22`, `B11+B12`, `B21+B22`) depend only on B, so the whole tree
+/// binds once and serves any activation batch.
+#[derive(Debug, Clone)]
+pub(crate) struct StrassenBoundB {
+    root: Node,
+    k: usize,
+    n: usize,
+    k_pad: usize,
+    n_pad: usize,
+    levels: u32,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    /// A prepacked leaf GEMM (conventional or digit-slice panels).
+    Leaf(BoundPlan),
+    /// An internal node: seven bound children in M-term order.
+    Split(Box<Split>),
+}
+
+#[derive(Debug, Clone)]
+struct Split {
+    parts: [Node; 7],
+    /// Column sums of `B11+B12` (the M6 correction operand).
+    colsum6: Vec<i128>,
+    /// Column sums of `B21+B22` (the M7 correction operand).
+    colsum7: Vec<i128>,
+    hk: usize,
+    hn: usize,
+    we: u32,
+}
+
+fn bind_node(plan: &MatmulPlan, b: &[u64], k: usize, n: usize, we: u32, level: u32) -> Node {
+    if level == 0 {
+        let leaf = MatmulPlan::build(leaf_spec(plan, 1, k, n))
+            .expect("the Strassen headroom rule proved the leaf contract at build time");
+        return Node::Leaf(leaf.bind_b(b));
+    }
+    let mask = (1u64 << we) - 1;
+    let (hk, hn) = (k / 2, n / 2);
+    let b11 = quad(b, k, n, 0, 0);
+    let b12 = quad(b, k, n, 0, 1);
+    let b21 = quad(b, k, n, 1, 0);
+    let b22 = quad(b, k, n, 1, 1);
+    let b6 = add(&b11, &b12);
+    let b7 = add(&b21, &b22);
+    let colsum6 = colsums(&b6, hk, hn);
+    let colsum7 = colsums(&b7, hk, hn);
+    let parts = [
+        bind_node(plan, &add(&b11, &b22), hk, hn, we + 1, level - 1),
+        bind_node(plan, &b11, hk, hn, we + 1, level - 1),
+        bind_node(plan, &comp_add(&b12, &b22, mask), hk, hn, we + 1, level - 1),
+        bind_node(plan, &comp_add(&b21, &b11, mask), hk, hn, we + 1, level - 1),
+        bind_node(plan, &b22, hk, hn, we + 1, level - 1),
+        bind_node(plan, &b6, hk, hn, we + 1, level - 1),
+        bind_node(plan, &b7, hk, hn, we + 1, level - 1),
+    ];
+    Node::Split(Box::new(Split {
+        parts,
+        colsum6,
+        colsum7,
+        hk,
+        hn,
+        we,
+    }))
+}
+
+/// Bind the stationary B operand of a Strassen plan into the recursive
+/// prepacked tree.
+pub(crate) fn bind_b(plan: &MatmulPlan, b: &[u64]) -> StrassenBoundB {
+    let (k, n) = (plan.k(), plan.n());
+    let levels = plan.levels();
+    let span = 1usize << levels;
+    let (kp, np) = (round_up(k, span), round_up(n, span));
+    let bp = pad(b, k, n, kp, np);
+    let root = bind_node(plan, &bp, kp, np, plan.w(), levels);
+    StrassenBoundB {
+        root,
+        k,
+        n,
+        k_pad: kp,
+        n_pad: np,
+        levels,
+    }
+}
+
+fn node_bytes(node: &Node) -> usize {
+    match node {
+        Node::Leaf(bp) => bp.bytes(),
+        Node::Split(s) => {
+            s.parts.iter().map(node_bytes).sum::<usize>()
+                + (s.colsum6.len() + s.colsum7.len()) * std::mem::size_of::<i128>()
+        }
+    }
+}
+
+fn mul_bound(node: &Node, a: &[u64], m: usize, threads: usize) -> Vec<i128> {
+    match node {
+        Node::Leaf(bp) => bp
+            .execute_with_threads(a, threads)
+            .into_iter()
+            .map(|v| i128::try_from(v).expect("leaf products fit the lane accumulator"))
+            .collect(),
+        Node::Split(s) => {
+            let mask = (1u64 << s.we) - 1;
+            let (hm, k) = (m / 2, 2 * s.hk);
+            let a11 = quad(a, m, k, 0, 0);
+            let a12 = quad(a, m, k, 0, 1);
+            let a21 = quad(a, m, k, 1, 0);
+            let a22 = quad(a, m, k, 1, 1);
+            let m1 = mul_bound(&s.parts[0], &add(&a11, &a22), hm, threads);
+            let m2 = mul_bound(&s.parts[1], &add(&a21, &a22), hm, threads);
+            let mut m3 = mul_bound(&s.parts[2], &a11, hm, threads);
+            sub_row_correction(&mut m3, &rowsums(&a11, hm, s.hk), mask, s.hn);
+            let mut m4 = mul_bound(&s.parts[3], &a22, hm, threads);
+            sub_row_correction(&mut m4, &rowsums(&a22, hm, s.hk), mask, s.hn);
+            let m5 = mul_bound(&s.parts[4], &add(&a11, &a12), hm, threads);
+            let mut m6 = mul_bound(&s.parts[5], &comp_add(&a21, &a11, mask), hm, threads);
+            sub_col_correction(&mut m6, &s.colsum6, mask);
+            let mut m7 = mul_bound(&s.parts[6], &comp_add(&a12, &a22, mask), hm, threads);
+            sub_col_correction(&mut m7, &s.colsum7, mask);
+            combine([m1, m2, m3, m4, m5, m6, m7], hm, s.hn)
+        }
+    }
+}
+
+impl StrassenBoundB {
+    /// Serve `C = A·B` against the bound tree; `a` is row-major
+    /// `m × k` with `m` derived from the activation length, any batch
+    /// size. Leaves run at `threads` through the prepacked drivers.
+    pub(crate) fn execute(&self, a: &[u64], threads: usize) -> Vec<u128> {
+        debug_assert!(self.k > 0, "plan build rejects zero dimensions");
+        let m = a.len() / self.k;
+        if m == 0 {
+            return Vec::new();
+        }
+        let span = 1usize << self.levels;
+        let mp = round_up(m, span);
+        let ap = pad(a, m, self.k, mp, self.k_pad);
+        let c = mul_bound(&self.root, &ap, mp, threads);
+        crop(&c, m, self.n, self.n_pad)
+    }
+
+    /// Owned packed bytes across every leaf plus the correction sums
+    /// (cache observability, mirroring [`BoundPlan::bytes`]).
+    pub(crate) fn bytes(&self) -> usize {
+        node_bytes(&self.root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fast::lane::LaneId;
+    use crate::fast::plan::LaneChoice;
+    use crate::util::rng::Rng;
+
+    fn oracle(a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<u128> {
+        let mut c = vec![0u128; m * n];
+        for i in 0..m {
+            for t in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + t] as u128 * b[t * n + j] as u128;
+                }
+            }
+        }
+        c
+    }
+
+    fn spec(m: usize, k: usize, n: usize, w: u32, levels: u32, digits: u32) -> PlanSpec {
+        let mut s = PlanSpec::mm(m, k, n, w).with_threads(1);
+        s.algo = if digits == 1 {
+            PlanAlgo::Strassen { levels }
+        } else {
+            PlanAlgo::StrassenKmm { levels, digits }
+        };
+        s
+    }
+
+    #[test]
+    fn strassen_matches_the_oracle_on_odd_shapes() {
+        let mut rng = Rng::new(71);
+        for (m, k, n, w, levels) in [
+            (7usize, 9usize, 5usize, 8u32, 1u32),
+            (12, 10, 8, 8, 2),
+            (5, 17, 3, 12, 1),
+            (16, 16, 16, 16, 2),
+            (1, 1, 1, 8, 3),
+        ] {
+            let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+            let plan = MatmulPlan::build(spec(m, k, n, w, levels, 1)).unwrap();
+            assert_eq!(
+                plan.execute(&a, &b),
+                oracle(&a, &b, m, k, n),
+                "{m}x{k}x{n} w={w} levels={levels}"
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_leaves_agree_with_plain_strassen() {
+        let mut rng = Rng::new(72);
+        let (m, k, n, w) = (11usize, 13usize, 9usize, 12u32);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let want = oracle(&a, &b, m, k, n);
+        for levels in [1u32, 2] {
+            for digits in [2u32, 4] {
+                let plan = MatmulPlan::build(spec(m, k, n, w, levels, digits)).unwrap();
+                assert_eq!(plan.execute(&a, &b), want, "levels={levels} digits={digits}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_ones_saturate_the_complement_corrections_exactly() {
+        // All-(2^w − 1) operands maximize every complement and every
+        // rank-1 correction at once — the adversarial case for the
+        // unsigned rewrite.
+        let (m, k, n, w, levels) = (6usize, 6usize, 6usize, 8u32, 2u32);
+        let ones = vec![(1u64 << w) - 1; 36];
+        let plan = MatmulPlan::build(spec(m, k, n, w, levels, 1)).unwrap();
+        assert_eq!(plan.execute(&ones, &ones), oracle(&ones, &ones, m, k, n));
+    }
+
+    #[test]
+    fn bound_tree_is_bit_exact_with_the_fresh_driver() {
+        let mut rng = Rng::new(73);
+        let (k, n, w) = (10usize, 7usize, 8u32);
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        for (levels, digits) in [(1u32, 1u32), (2, 1), (1, 2)] {
+            let plan = MatmulPlan::build(spec(4, k, n, w, levels, digits)).unwrap();
+            let bound = plan.bind_b(&b);
+            assert!(bound.bytes() > 0);
+            for m in [1usize, 4, 9] {
+                let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+                let fresh = MatmulPlan::build(spec(m, k, n, w, levels, digits))
+                    .unwrap()
+                    .execute(&a, &b);
+                assert_eq!(bound.execute(&a), fresh, "m={m} levels={levels} digits={digits}");
+                assert_eq!(
+                    bound.execute_with_threads(&a, 3),
+                    fresh,
+                    "m={m} levels={levels} digits={digits} threads=3"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forced_lanes_agree_at_the_strassen_boundary() {
+        // w=15 + 1 level = effective 16 bits on u16 at leaf depth 1:
+        // the exact storage/headroom boundary of the narrow lane.
+        let (m, k, n, w) = (2usize, 2usize, 2usize, 15u32);
+        let ones = vec![(1u64 << w) - 1; 4];
+        let mut s = spec(m, k, n, w, 1, 1).in_lane(LaneId::U16);
+        assert_eq!(s.lane, LaneChoice::Forced(LaneId::U16));
+        let narrow = MatmulPlan::build(s).unwrap();
+        s = spec(m, k, n, w, 1, 1).in_lane(LaneId::U64);
+        let wide = MatmulPlan::build(s).unwrap();
+        assert_eq!(narrow.execute(&ones, &ones), wide.execute(&ones, &ones));
+        assert_eq!(narrow.execute(&ones, &ones), oracle(&ones, &ones, m, k, n));
+    }
+}

@@ -3,10 +3,12 @@
 //! Subcommands:
 //!   table1 | table2 | table3      regenerate the paper's tables
 //!   fig5 | fig11 | fig12          regenerate the paper's figures
-//!   gemm --m --k --n --w [--backend functional|pjrt|fast-kmm|fast-mm]
+//!   gemm --m --k --n --w [--backend functional|pjrt|fast-*]
+//!        [--algo mm|kmm|strassen|strassen-kmm]
 //!        [--threads N]            one GEMM through the stack (N engine
-//!                                 worker threads on the fast backends)
-//!   serve [--requests N] [--backend functional|fast-kmm|fast-mm]
+//!                                 worker threads on the fast backends;
+//!                                 --algo X is shorthand for fast-X)
+//!   serve [--requests N] [--backend functional|fast-*]
 //!         [--threads N]           batched serving demo (N server shards)
 //!   infer --model resnet50 [--backend fast-kmm|fast-mm|functional]
 //!         [--threads N] [--w 8] [--batch M] [--streams S] [--fresh]
@@ -55,7 +57,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|serve|infer|schedule|export|info> [options]\n{}",
-                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm] [--threads N]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm] [--threads N]\n  infer    --model resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--backend fast-kmm|fast-mm|functional]\n           [--threads N] [--w 8] [--batch M] [--streams S] [--fresh] [--verify] [--json FILE]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm/infer = engine worker threads; serve = server worker shards)"
+                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm]\n           [--algo mm|kmm|strassen|strassen-kmm] [--threads N]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm] [--threads N]\n  infer    --model resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--backend fast-kmm|fast-mm|functional]\n           [--threads N] [--w 8] [--batch M] [--streams S] [--fresh] [--verify] [--json FILE]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm/infer = engine worker threads; serve = server worker shards)"
             );
             2
         }
@@ -71,7 +73,13 @@ fn print_ok(s: String) -> i32 {
 /// The `--backend` names servable without thread-affine setup (the
 /// `pjrt` backend is handled separately where supported: it must be
 /// built on the thread that will use it).
-const SOFTWARE_BACKENDS: &[&str] = &["functional", "fast-kmm", "fast-mm"];
+const SOFTWARE_BACKENDS: &[&str] = &[
+    "functional",
+    "fast-kmm",
+    "fast-mm",
+    "fast-strassen",
+    "fast-strassen-kmm",
+];
 
 /// Resolve the `--threads` budget with the documented precedence
 /// (`util::pool::resolve_threads`): an explicit `--threads` always
@@ -93,6 +101,14 @@ fn software_backend(name: &str, threads: usize) -> Option<Box<dyn GemmBackend>> 
         "functional" => Some(Box::new(FunctionalBackend::paper())),
         "fast-kmm" => Some(Box::new(FastBackend::with_threads(FastAlgo::Kmm, threads))),
         "fast-mm" => Some(Box::new(FastBackend::with_threads(FastAlgo::Mm, threads))),
+        "fast-strassen" => Some(Box::new(FastBackend::with_threads(
+            FastAlgo::Strassen,
+            threads,
+        ))),
+        "fast-strassen-kmm" => Some(Box::new(FastBackend::with_threads(
+            FastAlgo::StrassenKmm,
+            threads,
+        ))),
         _ => None,
     }
 }
@@ -103,7 +119,24 @@ fn cmd_gemm(args: &Args) -> i32 {
     let n: usize = args.get("n", 128).unwrap();
     let w: u32 = args.get("w", 12).unwrap();
     let threads = cli_threads(args, 1);
-    let backend = args.get_str("backend", "functional");
+    // `--algo mm|kmm|strassen|strassen-kmm` is shorthand for the
+    // matching software hot-path backend (`fast-<algo>`).
+    let backend = match args.get_str("algo", "").as_str() {
+        "" => args.get_str("backend", "functional"),
+        algo => {
+            if args.options.contains_key("backend") {
+                eprintln!("pass either --backend or --algo, not both");
+                return 2;
+            }
+            match algo {
+                "mm" | "kmm" | "strassen" | "strassen-kmm" => format!("fast-{algo}"),
+                other => {
+                    eprintln!("unknown algo `{other}` (mm|kmm|strassen|strassen-kmm)");
+                    return 2;
+                }
+            }
+        }
+    };
     let mut rng = Rng::new(args.get("seed", 1u64).unwrap());
     let a = Mat::random(m, k, w, &mut rng);
     let b = Mat::random(k, n, w, &mut rng);
@@ -120,7 +153,7 @@ fn cmd_gemm(args: &Args) -> i32 {
             Some(be) => be,
             None => {
                 eprintln!(
-                    "unknown backend `{name}` (functional|pjrt|fast-kmm|fast-mm)"
+                    "unknown backend `{name}` (functional|pjrt|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm)"
                 );
                 return 2;
             }
@@ -165,7 +198,9 @@ fn cmd_serve(args: &Args) -> i32 {
     // Validate the name up front (the worker factory runs too late for
     // a friendly error; `pjrt` is thread-affine and not servable here).
     if !SOFTWARE_BACKENDS.contains(&backend.as_str()) {
-        eprintln!("unknown serve backend `{backend}` (functional|fast-kmm|fast-mm)");
+        eprintln!(
+            "unknown serve backend `{backend}` (functional|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm)"
+        );
         return 2;
     }
     // Print the plans the shard backends resolve for the served widths
@@ -247,7 +282,9 @@ fn cmd_infer(args: &Args) -> i32 {
         Err(code) => return code,
     };
     let Some(mut be) = software_backend(&backend, threads) else {
-        eprintln!("unknown infer backend `{backend}` (fast-kmm|fast-mm|functional)");
+        eprintln!(
+            "unknown infer backend `{backend}` (fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm|functional)"
+        );
         return 2;
     };
     let cfg = InferConfig {

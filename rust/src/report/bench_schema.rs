@@ -1,0 +1,306 @@
+//! Schema validation for the hotpath bench artifact
+//! (`BENCH_hotpath.json`, **schema 4**).
+//!
+//! One checker shared by the bench binary (which runs it on the
+//! document it is about to write) and the golden-file integration test
+//! (which runs it on the checked-in example): the schema the CI
+//! artifact claims is the schema the repo actually enforces, and the
+//! two consumers cannot drift apart.
+//!
+//! Schema history:
+//! - 1: per-section medians + the headline speedup ratios
+//! - 2: per-section `lane` (`"u16"|"u32"|"u64"` or `null`)
+//! - 3: plan-reuse sections, `plan_reuse_vs_rebuild`, its gate flag
+//! - 4: per-section `algo` (the resolved [`PlanAlgo`] label or `null`)
+//!   and the algorithm-crossover sections timing mm, kmm, strassen,
+//!   and the Strassen–Karatsuba hybrid on one shape, with the
+//!   `crossover_*` speedup ratios
+//!
+//! [`PlanAlgo`]: crate::fast::PlanAlgo
+
+use crate::util::json::Json;
+
+/// The schema revision this crate emits and validates.
+pub const HOTPATH_SCHEMA: i64 = 4;
+
+/// Speedup-ratio keys every schema-4 document must carry.
+pub const REQUIRED_SPEEDUPS: &[&str] = &[
+    "fast_mm_vs_tallied_mm1",
+    "fast_kmm_vs_tallied_kmm",
+    "fast_mm_parallel_vs_serial",
+    "fast_kmm_parallel_vs_serial",
+    "lane_narrow_vs_u64_w8",
+    "plan_reuse_vs_rebuild",
+    "crossover_strassen_vs_mm",
+    "crossover_strassen_kmm_vs_kmm",
+];
+
+/// The resolved-algorithm labels the schema-4 crossover sections must
+/// cover (the [`PlanAlgo`] display forms at the bench's crossover
+/// configuration: one Strassen level, two Karatsuba digits).
+///
+/// [`PlanAlgo`]: crate::fast::PlanAlgo
+pub const CROSSOVER_ALGOS: &[&str] = &["mm", "kmm[2]", "strassen[1]", "strassen-kmm[1,2]"];
+
+/// Numeric coercion: the emitter writes ratios as floats, but an
+/// exactly-integral value is a legal JSON number either way.
+fn num(j: &Json) -> Option<f64> {
+    j.as_f64()
+}
+
+/// Validate one section object at index `i`.
+fn validate_section(i: usize, s: &Json) -> Result<(), String> {
+    let ctx = |field: &str| format!("sections[{i}].{field}");
+    let name = s
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("{} must be a string", ctx("name")))?;
+    if name.is_empty() {
+        return Err(format!("{} must be non-empty", ctx("name")));
+    }
+    for field in ["median_s", "ops_per_s"] {
+        let v = s
+            .get(field)
+            .and_then(num)
+            .ok_or_else(|| format!("{} must be a number", ctx(field)))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("{} must be finite and >= 0, got {v}", ctx(field)));
+        }
+    }
+    for field in ["iters", "threads"] {
+        match s.get(field).and_then(Json::as_i64) {
+            Some(v) if v >= 1 => {}
+            other => {
+                return Err(format!("{} must be an integer >= 1, got {other:?}", ctx(field)));
+            }
+        }
+    }
+    let shape = s
+        .get("shape")
+        .and_then(Json::as_array)
+        .ok_or_else(|| format!("{} must be an array", ctx("shape")))?;
+    if shape.len() != 3 || !shape.iter().all(|d| d.as_i64().is_some_and(|v| v >= 0)) {
+        return Err(format!("{} must be three integers >= 0", ctx("shape")));
+    }
+    match s.get("w").and_then(Json::as_i64) {
+        Some(w) if (1..=64).contains(&w) => {}
+        other => return Err(format!("{} must be in 1..=64, got {other:?}", ctx("w"))),
+    }
+    match s.get("lane") {
+        Some(Json::Null) => {}
+        Some(Json::Str(l)) if ["u16", "u32", "u64"].contains(&l.as_str()) => {}
+        other => {
+            return Err(format!(
+                "{} must be \"u16\"|\"u32\"|\"u64\" or null, got {other:?}",
+                ctx("lane")
+            ));
+        }
+    }
+    // Schema 4: the resolved-algorithm label (null outside the engine).
+    match s.get("algo") {
+        Some(Json::Null) => {}
+        Some(Json::Str(a)) if !a.is_empty() => {}
+        other => {
+            return Err(format!(
+                "{} must be a non-empty string or null (schema 4), got {other:?}",
+                ctx("algo")
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Validate a parsed `BENCH_hotpath.json` document against schema 4.
+///
+/// Returns the first violation as a human-readable message; a document
+/// that passes is safe for every name-keyed trajectory consumer the
+/// repo ships (CI artifact diffing, the golden-file test).
+pub fn validate_hotpath(doc: &Json) -> Result<(), String> {
+    if doc.as_object().is_none() {
+        return Err("top level must be an object".to_string());
+    }
+    if doc.get("bench").and_then(Json::as_str) != Some("hotpath") {
+        return Err("`bench` must be the string \"hotpath\"".to_string());
+    }
+    match doc.get("schema").and_then(Json::as_i64) {
+        Some(s) if s == HOTPATH_SCHEMA => {}
+        other => return Err(format!("`schema` must be {HOTPATH_SCHEMA}, got {other:?}")),
+    }
+    match doc.get("threads_max").and_then(Json::as_i64) {
+        Some(t) if t >= 1 => {}
+        other => return Err(format!("`threads_max` must be an integer >= 1, got {other:?}")),
+    }
+    for flag in ["speedup_gate_retried", "lane_gate_retried", "plan_gate_retried"] {
+        match doc.get(flag) {
+            Some(Json::Bool(_)) => {}
+            _ => return Err(format!("`{flag}` must be a bool")),
+        }
+    }
+    let secs = doc
+        .get("sections")
+        .and_then(Json::as_array)
+        .ok_or_else(|| "`sections` must be an array".to_string())?;
+    if secs.is_empty() {
+        return Err("`sections` must be non-empty".to_string());
+    }
+    for (i, s) in secs.iter().enumerate() {
+        validate_section(i, s)?;
+    }
+    // Schema 4: the crossover sections cover all four algorithms.
+    for algo in CROSSOVER_ALGOS {
+        let covered = secs.iter().any(|s| {
+            s.get("algo").and_then(Json::as_str) == Some(*algo)
+                && s.get("name")
+                    .and_then(Json::as_str)
+                    .is_some_and(|n| n.contains("crossover"))
+        });
+        if !covered {
+            return Err(format!("missing crossover section for algo `{algo}` (schema 4)"));
+        }
+    }
+    let speedups = doc
+        .get("speedups")
+        .and_then(Json::as_object)
+        .ok_or_else(|| "`speedups` must be an object".to_string())?;
+    for (key, v) in speedups {
+        match num(v) {
+            Some(r) if r.is_finite() && r >= 0.0 => {}
+            _ => return Err(format!("speedups.{key} must be a finite number >= 0")),
+        }
+    }
+    for key in REQUIRED_SPEEDUPS {
+        if !speedups.contains_key(*key) {
+            return Err(format!("missing required speedup `{key}`"));
+        }
+    }
+    Ok(())
+}
+
+/// Parse *and* validate a document in one step — the form the
+/// golden-file test and any external consumer want.
+pub fn validate_hotpath_str(text: &str) -> Result<Json, String> {
+    let doc = Json::parse(text).map_err(|e| format!("parse error: {e}"))?;
+    validate_hotpath(&doc)?;
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    /// The smallest document that passes: one crossover section per
+    /// algorithm plus every required top-level field.
+    fn minimal_doc() -> Json {
+        let mut sections = Vec::new();
+        for algo in CROSSOVER_ALGOS {
+            let mut s = BTreeMap::new();
+            s.insert(
+                "name".to_string(),
+                Json::Str(format!("crossover {algo} 192^3 w8 (MACs/s)")),
+            );
+            s.insert("median_s".to_string(), Json::Float(0.5));
+            s.insert("ops_per_s".to_string(), Json::Float(2e6));
+            s.insert("iters".to_string(), Json::Int(5));
+            s.insert("threads".to_string(), Json::Int(1));
+            s.insert(
+                "shape".to_string(),
+                Json::Array(vec![Json::Int(192), Json::Int(192), Json::Int(192)]),
+            );
+            s.insert("w".to_string(), Json::Int(8));
+            s.insert("lane".to_string(), Json::Str("u16".to_string()));
+            s.insert("algo".to_string(), Json::Str((*algo).to_string()));
+            sections.push(Json::Object(s));
+        }
+        let mut speedups = BTreeMap::new();
+        for key in REQUIRED_SPEEDUPS {
+            speedups.insert((*key).to_string(), Json::Float(1.5));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
+        top.insert("schema".to_string(), Json::Int(HOTPATH_SCHEMA));
+        top.insert("threads_max".to_string(), Json::Int(2));
+        top.insert("speedup_gate_retried".to_string(), Json::Bool(false));
+        top.insert("lane_gate_retried".to_string(), Json::Bool(false));
+        top.insert("plan_gate_retried".to_string(), Json::Bool(false));
+        top.insert("sections".to_string(), Json::Array(sections));
+        top.insert("speedups".to_string(), Json::Object(speedups));
+        Json::Object(top)
+    }
+
+    #[test]
+    fn minimal_document_passes_and_round_trips() {
+        let doc = minimal_doc();
+        validate_hotpath(&doc).expect("minimal document is valid");
+        let reparsed = validate_hotpath_str(&doc.to_string()).expect("round trip");
+        assert_eq!(reparsed, doc);
+    }
+
+    #[test]
+    fn each_violation_is_named() {
+        // (mutation, expected fragment of the error message)
+        let strip = |key: &str| {
+            let mut doc = minimal_doc();
+            if let Json::Object(m) = &mut doc {
+                m.remove(key);
+            }
+            doc
+        };
+        let e = validate_hotpath(&strip("schema")).unwrap_err();
+        assert!(e.contains("schema"), "{e}");
+        let e = validate_hotpath(&strip("sections")).unwrap_err();
+        assert!(e.contains("sections"), "{e}");
+        let e = validate_hotpath(&strip("speedups")).unwrap_err();
+        assert!(e.contains("speedups"), "{e}");
+        let e = validate_hotpath(&strip("plan_gate_retried")).unwrap_err();
+        assert!(e.contains("plan_gate_retried"), "{e}");
+
+        // Wrong schema revision.
+        let mut doc = minimal_doc();
+        if let Json::Object(m) = &mut doc {
+            m.insert("schema".to_string(), Json::Int(3));
+        }
+        let e = validate_hotpath(&doc).unwrap_err();
+        assert!(e.contains("must be 4"), "{e}");
+
+        // A section missing the schema-4 algo field.
+        let mut doc = minimal_doc();
+        if let Json::Object(m) = &mut doc {
+            if let Some(Json::Array(secs)) = m.get_mut("sections") {
+                if let Json::Object(s0) = &mut secs[0] {
+                    s0.remove("algo");
+                }
+            }
+        }
+        let e = validate_hotpath(&doc).unwrap_err();
+        assert!(e.contains("algo"), "{e}");
+
+        // A crossover algorithm dropped entirely.
+        let mut doc = minimal_doc();
+        if let Json::Object(m) = &mut doc {
+            let secs = m.get("sections").and_then(Json::as_array).unwrap();
+            m.insert(
+                "sections".to_string(),
+                Json::Array(secs[..secs.len() - 1].to_vec()),
+            );
+        }
+        let e = validate_hotpath(&doc).unwrap_err();
+        assert!(e.contains("crossover"), "{e}");
+
+        // A required speedup dropped.
+        let mut doc = minimal_doc();
+        if let Json::Object(m) = &mut doc {
+            if let Some(Json::Object(sp)) = m.get_mut("speedups") {
+                sp.remove("crossover_strassen_vs_mm");
+            }
+        }
+        let e = validate_hotpath(&doc).unwrap_err();
+        assert!(e.contains("crossover_strassen_vs_mm"), "{e}");
+    }
+
+    #[test]
+    fn malformed_text_is_a_parse_error() {
+        assert!(validate_hotpath_str("{").unwrap_err().contains("parse error"));
+        assert!(validate_hotpath_str("[]").unwrap_err().contains("object"));
+    }
+}

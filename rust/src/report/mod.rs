@@ -3,6 +3,7 @@
 //! structured data for the benches and tests.
 
 pub mod ascii;
+pub mod bench_schema;
 pub mod figures;
 pub mod layers;
 pub mod tables;

@@ -1,0 +1,78 @@
+//! Shared helpers for the integration-test binaries: deterministic
+//! operand generation, the widening shim between the fast engine's
+//! `u128` results and the references' `i128` tallies, a matrix
+//! comparison that reports first-mismatch coordinates, and the
+//! adversarial shape grid the differential suites sweep.
+//!
+//! Each test binary compiles this module independently (`mod common;`),
+//! so helpers unused by one binary are expected — hence the file-level
+//! `dead_code` allow.
+#![allow(dead_code)]
+
+use kmm::algo::matrix::Mat;
+use kmm::util::rng::Rng;
+
+/// Deterministic row-major operand: `len` values of `w` random bits
+/// from the suite's seeded xorshift generator.
+pub fn rand_vec(rng: &mut Rng, len: usize, w: u32) -> Vec<u64> {
+    (0..len).map(|_| rng.bits(w)).collect()
+}
+
+/// All-ones `rows × cols` matrix of `w`-bit elements — the adversarial
+/// input that saturates every product, digit sum, and recombination
+/// shift (and, for Strassen, every complement correction).
+pub fn ones(rows: usize, cols: usize, w: u32) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| (1u64 << w) - 1)
+}
+
+/// Row-major all-ones operand for the slice-based engine entry points.
+pub fn ones_vec(len: usize, w: u32) -> Vec<u64> {
+    vec![(1u64 << w) - 1; len]
+}
+
+/// The fast engine's `u128` results, widened for comparison against the
+/// references' `I256`/`i128` accumulators (all values non-negative).
+pub fn fast_as_i128(c: &[u128]) -> Vec<i128> {
+    c.iter()
+        .map(|&v| i128::try_from(v).expect("fast value exceeds i128"))
+        .collect()
+}
+
+/// Assert two row-major `rows × cols` matrices are bit-identical,
+/// reporting the first mismatch by coordinate — far more useful on a
+/// differential-grid failure than a 4 000-element `assert_eq!` dump.
+pub fn assert_mat_eq<T>(got: &[T], want: &[T], rows: usize, cols: usize, ctx: &str)
+where
+    T: PartialEq + std::fmt::Debug,
+{
+    assert_eq!(got.len(), rows * cols, "{ctx}: result length");
+    assert_eq!(want.len(), rows * cols, "{ctx}: reference length");
+    if let Some(idx) = (0..rows * cols).find(|&i| got[i] != want[i]) {
+        panic!(
+            "{ctx}: first mismatch at ({}, {}): got {:?}, want {:?}",
+            idx / cols,
+            idx % cols,
+            got[idx],
+            want[idx]
+        );
+    }
+}
+
+/// The differential shape grid: fixed adversarial shapes (unit, odd,
+/// non-power-of-two, thin) plus `extra` seeded random draws with every
+/// dimension in `1..max`. Deliberately deterministic so a failing case
+/// reproduces from the suite's seed alone.
+pub fn shape_grid(rng: &mut Rng, extra: usize, max: usize) -> Vec<(usize, usize, usize)> {
+    let mut shapes = vec![
+        (1, 1, 1),
+        (1, 7, 1),
+        (3, 5, 2),
+        (7, 9, 5),
+        (13, 1, 11),
+        (8, 16, 8),
+    ];
+    for _ in 0..extra {
+        shapes.push((rng.range(1, max), rng.range(1, max), rng.range(1, max)));
+    }
+    shapes
+}

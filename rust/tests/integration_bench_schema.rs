@@ -1,0 +1,135 @@
+//! Golden-file test for the hotpath bench artifact contract
+//! (`BENCH_hotpath.json`, schema 4): the checked-in example document
+//! must pass the same `report::bench_schema` validator the bench binary
+//! runs on its own output before writing it, round-trip through the
+//! crate's JSON codec idempotently, and malformed or truncated
+//! documents must yield errors, never panics.
+//!
+//! The golden file pins the *external* contract: CI consumers diff the
+//! artifact by name-keyed sections and speedup ratios, so a field
+//! rename or a dropped crossover section shows up as a test diff here,
+//! not as silent drift in downstream trend lines.
+
+use kmm::report::bench_schema::{
+    validate_hotpath, validate_hotpath_str, CROSSOVER_ALGOS, HOTPATH_SCHEMA, REQUIRED_SPEEDUPS,
+};
+use kmm::util::json::Json;
+
+const GOLDEN: &str = include_str!("golden/BENCH_hotpath.schema4.example.json");
+
+#[test]
+fn golden_document_passes_the_shared_validator() {
+    let doc = validate_hotpath_str(GOLDEN).expect("golden schema-4 document validates");
+    assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(HOTPATH_SCHEMA));
+    // Every required speedup and every crossover algorithm label the
+    // validator demands is actually present in the example — the file
+    // documents the full contract, not a lucky subset.
+    let speedups = doc.get("speedups").and_then(Json::as_object).unwrap();
+    for key in REQUIRED_SPEEDUPS {
+        assert!(speedups.contains_key(*key), "golden lacks speedup `{key}`");
+    }
+    let sections = doc.get("sections").and_then(Json::as_array).unwrap();
+    for algo in CROSSOVER_ALGOS {
+        assert!(
+            sections
+                .iter()
+                .any(|s| s.get("algo").and_then(Json::as_str) == Some(*algo)),
+            "golden lacks a section for algo `{algo}`"
+        );
+    }
+}
+
+#[test]
+fn golden_document_round_trips_idempotently() {
+    // parse → emit → parse must reach a fixed point immediately, and
+    // the emitted form must still validate: what the bench writes is
+    // exactly what a re-serializing consumer would write back.
+    let doc = validate_hotpath_str(GOLDEN).unwrap();
+    let emitted = doc.to_string();
+    let back = validate_hotpath_str(&emitted).expect("emitted form validates");
+    assert_eq!(back, doc, "round trip is lossless");
+    assert_eq!(back.to_string(), emitted, "emission is idempotent");
+}
+
+#[test]
+fn malformed_documents_error_instead_of_panicking() {
+    // Parse-level failures carry the parse-error prefix…
+    for doc in ["", "{", "not json", "[1, 2"] {
+        let e = validate_hotpath_str(doc).unwrap_err();
+        assert!(e.contains("parse error"), "{doc:?}: {e}");
+    }
+    // …and structural violations name the offending field.
+    let bad_docs: &[(&str, &str)] = &[
+        ("[]", "object"),
+        ("{}", "bench"),
+        (r#"{"bench": "other"}"#, "hotpath"),
+        // A stale schema revision is refused outright.
+        (
+            &GOLDEN.replacen("\"schema\": 4", "\"schema\": 3", 1),
+            "must be 4",
+        ),
+        // A section stripped of its schema-4 algo label.
+        (
+            &GOLDEN.replacen("\"algo\": null", "\"algo\": 7", 1),
+            "algo",
+        ),
+        // A crossover label renamed away breaks coverage.
+        (
+            &GOLDEN.replacen("strassen-kmm[1,2]", "strassen-kmm[?]", 2),
+            "crossover",
+        ),
+        // A required ratio renamed away.
+        (
+            &GOLDEN.replacen("crossover_strassen_vs_mm", "crossover_vs_mm", 1),
+            "crossover_strassen_vs_mm",
+        ),
+        // Out-of-domain numerics.
+        (
+            &GOLDEN.replacen("\"median_s\": 0.0147", "\"median_s\": -1.5", 1),
+            "median_s",
+        ),
+        (
+            &GOLDEN.replacen("\"iters\": 3", "\"iters\": 0", 1),
+            "iters",
+        ),
+        (
+            &GOLDEN.replacen("\"w\": 16", "\"w\": 65", 1),
+            "w",
+        ),
+        (
+            &GOLDEN.replacen("\"lane\": \"u32\"", "\"lane\": \"u128\"", 1),
+            "lane",
+        ),
+        (
+            &GOLDEN.replacen("[96, 96, 96]", "[96, 96]", 1),
+            "shape",
+        ),
+    ];
+    for (doc, fragment) in bad_docs {
+        let e = validate_hotpath_str(doc).unwrap_err();
+        assert!(e.contains(fragment), "expected `{fragment}` in: {e}");
+    }
+    // Truncating the golden file anywhere must error, not panic.
+    for cut in [1, GOLDEN.len() / 2, GOLDEN.len() - 2] {
+        assert!(validate_hotpath_str(&GOLDEN[..cut]).is_err(), "cut at {cut}");
+    }
+}
+
+#[test]
+fn validator_mutations_verify_each_replacement_took_effect() {
+    // The replacen-based mutations above silently become no-ops if the
+    // golden text drifts; pin the substrings they rely on.
+    for needle in [
+        "\"schema\": 4",
+        "\"algo\": null",
+        "strassen-kmm[1,2]",
+        "crossover_strassen_vs_mm",
+        "\"median_s\": 0.0147",
+        "\"iters\": 3",
+        "\"w\": 16",
+        "\"lane\": \"u32\"",
+        "[96, 96, 96]",
+    ] {
+        assert!(GOLDEN.contains(needle), "golden drifted: `{needle}` missing");
+    }
+}

@@ -7,19 +7,14 @@
 //! all-ones operands at each lane's maximum exact width/depth stay
 //! exact, and the selector refuses the lane one step past the bound.
 
+mod common;
+
+use common::{fast_as_i128, ones};
 use kmm::algo::matrix::{matmul_oracle, Mat};
 use kmm::algo::opcount::Tally;
 use kmm::algo::{kmm as kmm_ref, mm1};
 use kmm::fast::{self, lane_exact, required_acc_bits, select_lane, Blocking, LaneId};
 use kmm::util::rng::Rng;
-
-/// The fast engine's `u128` results, widened for comparison against the
-/// references' `I256` accumulators (all values are non-negative).
-fn fast_as_i128(c: &[u128]) -> Vec<i128> {
-    c.iter()
-        .map(|&v| i128::try_from(v).expect("fast value exceeds i128"))
-        .collect()
-}
 
 #[test]
 fn every_exact_lane_matches_mm1_across_the_grid() {
@@ -103,12 +98,6 @@ fn every_exact_lane_matches_kmm_reference_across_the_grid() {
             }
         }
     }
-}
-
-/// All-ones `m × k` matrix of `w`-bit elements — the adversarial input
-/// that saturates every product, digit sum, and recombination shift.
-fn ones(rows: usize, cols: usize, w: u32) -> Mat {
-    Mat::from_fn(rows, cols, |_, _| (1u64 << w) - 1)
 }
 
 #[test]

@@ -4,6 +4,9 @@
 //! points, and the coordinator-level plan path
 //! (`GemmBackend::resolve_spec` / `plan`).
 
+mod common;
+
+use common::rand_vec;
 use kmm::algo::matrix::{matmul_oracle, Mat};
 use kmm::coordinator::dispatch::{FastAlgo, FastBackend, FunctionalBackend, GemmBackend};
 use kmm::fast::{self, LaneId, MatmulPlan, PlanAlgo, PlanError, PlanSpec, MAX_W};
@@ -94,8 +97,8 @@ fn reused_bound_plan_matches_fresh_mm_prop() {
         let (m, k, n) = (rng.range(1, 24), rng.range(1, 24), rng.range(1, 24));
         let w = *rng.pick(&[4u32, 8, 16, 32]);
         let threads = *rng.pick(&[1usize, 2, 4]);
-        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
-        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let a = rand_vec(rng, m * k, w);
+        let b = rand_vec(rng, k * n, w);
         let plan = MatmulPlan::build(PlanSpec::mm(m, k, n, w).with_threads(threads))
             .expect("in-window spec builds");
         let bound = plan.bind_b(&b);
@@ -119,8 +122,8 @@ fn reused_bound_plan_matches_fresh_kmm_prop() {
         let w = *rng.pick(&[8u32, 16, 32]);
         let threads = *rng.pick(&[1usize, 2, 4]);
         let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
-        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
-        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let a = rand_vec(rng, m * k, w);
+        let b = rand_vec(rng, k * n, w);
         let plan = MatmulPlan::build(PlanSpec::kmm(m, k, n, w, digits).with_threads(threads))
             .expect("in-window spec builds");
         let bound = plan.bind_b(&b);
@@ -143,8 +146,8 @@ fn forced_lane_plans_match_auto_selection_prop() {
         let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
         let w = *rng.pick(&[4u32, 8]);
         let threads = *rng.pick(&[1usize, 2, 4]);
-        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
-        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let a = rand_vec(rng, m * k, w);
+        let b = rand_vec(rng, k * n, w);
         let auto = MatmulPlan::build(PlanSpec::mm(m, k, n, w).with_threads(threads)).unwrap();
         let want = auto.execute(&a, &b);
         for lane in LaneId::ALL {
@@ -173,12 +176,12 @@ fn bound_plans_serve_any_batch_size_across_threads() {
     // always bit-exact with the per-call reference.
     let mut rng = kmm::util::rng::Rng::new(61);
     let (k, n, w) = (33usize, 9usize, 16u32);
-    let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+    let b = rand_vec(&mut rng, k * n, w);
     let bound = MatmulPlan::build(PlanSpec::kmm(1, k, n, w, 2).with_threads(1))
         .unwrap()
         .bind_b(&b);
     for m in [1usize, 5, 16] {
-        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let a = rand_vec(&mut rng, m * k, w);
         let want = fast::kmm_digits(&a, &b, m, k, n, w, 2);
         for threads in [1usize, 2, 4] {
             assert_eq!(

@@ -1,0 +1,325 @@
+//! Differential property harness for the Strassen and
+//! Strassen–Karatsuba hybrid drivers: every algorithm the plan API can
+//! build (`mm`, `kmm`, `strassen`, `strassen-kmm`) must be **bit-exact**
+//! against the instrumented exact reference `algo::mm1` across a grid
+//! of odd and non-power-of-two shapes, for every admitted lane and
+//! thread count, fresh and through a reused `bind_b` binding — and the
+//! +1-bit-per-level headroom rule must be provably right at its
+//! boundaries: adversarial all-ones operands at each lane's deepest
+//! exact Strassen configuration stay exact, and the selector refuses
+//! the lane one step (depth, level, or width) past the bound.
+
+mod common;
+
+use common::{assert_mat_eq, fast_as_i128, ones_vec, rand_vec, shape_grid};
+use kmm::algo::matrix::Mat;
+use kmm::algo::mm1;
+use kmm::algo::opcount::Tally;
+use kmm::fast::{
+    select_lane_strassen, strassen_lane_exact, strassen_required_acc_bits, LaneId, MatmulPlan,
+    PlanAlgo, PlanError, PlanSpec, MAX_W,
+};
+use kmm::util::rng::Rng;
+
+/// A `PlanSpec` for an arbitrary algorithm (the named constructors
+/// cover mm/kmm; the Strassen variants are set directly).
+fn spec_with(m: usize, k: usize, n: usize, w: u32, algo: PlanAlgo, threads: usize) -> PlanSpec {
+    let mut s = PlanSpec::mm(m, k, n, w).with_threads(threads);
+    s.algo = algo;
+    s
+}
+
+/// The exact reference: `algo::mm1` over the same row-major operands.
+fn mm1_oracle(a: &[u64], b: &[u64], m: usize, k: usize, n: usize, w: u32) -> Vec<i128> {
+    let am = Mat::from_rows(m, k, a);
+    let bm = Mat::from_rows(k, n, b);
+    let mut tally = Tally::new();
+    mm1(&am, &bm, w, &mut tally).to_i128_vec().unwrap()
+}
+
+/// Every algorithm the differential grid sweeps, including two Strassen
+/// depths so the padding/cropping path runs on shapes far from any
+/// power of two.
+const ALGOS: [PlanAlgo; 6] = [
+    PlanAlgo::Mm,
+    PlanAlgo::Kmm { digits: 2 },
+    PlanAlgo::Strassen { levels: 1 },
+    PlanAlgo::Strassen { levels: 2 },
+    PlanAlgo::StrassenKmm { levels: 1, digits: 2 },
+    PlanAlgo::StrassenKmm { levels: 2, digits: 2 },
+];
+
+#[test]
+fn all_algorithms_match_mm1_across_the_differential_grid() {
+    // Random + fixed odd shapes, widths across the lane spectrum,
+    // threads {1, 2, 4}: every algorithm reproduces algo::mm1
+    // bit-for-bit, fresh and through a reused binding.
+    let mut rng = Rng::new(71);
+    for w in [4u32, 8, 12] {
+        for (m, k, n) in shape_grid(&mut rng, 3, 24) {
+            let a = rand_vec(&mut rng, m * k, w);
+            let b = rand_vec(&mut rng, k * n, w);
+            let want = mm1_oracle(&a, &b, m, k, n, w);
+            for algo in ALGOS {
+                for threads in [1usize, 2, 4] {
+                    let ctx = format!("{m}x{k}x{n} w={w} {algo} t={threads}");
+                    let plan = MatmulPlan::build(spec_with(m, k, n, w, algo, threads))
+                        .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                    assert_mat_eq(
+                        &fast_as_i128(&plan.execute(&a, &b)),
+                        &want,
+                        m,
+                        n,
+                        &format!("fresh {ctx}"),
+                    );
+                    let bound = plan.bind_b(&b);
+                    assert_mat_eq(
+                        &fast_as_i128(&bound.execute(&a)),
+                        &want,
+                        m,
+                        n,
+                        &format!("bound {ctx}"),
+                    );
+                    assert_mat_eq(
+                        &fast_as_i128(&bound.execute_with_threads(&a, threads)),
+                        &want,
+                        m,
+                        n,
+                        &format!("bound t-override {ctx}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_lanes_agree_with_auto_across_algorithms() {
+    // Wherever a forced lane builds at all under the Strassen headroom
+    // rule, it must agree bit-for-bit with the auto-selected plan (and
+    // hence with mm1); refused lanes must fail with the typed error,
+    // never a wrong answer.
+    let mut rng = Rng::new(72);
+    let (m, k, n) = (9usize, 11usize, 6usize);
+    for w in [6u32, 8, 15] {
+        let a = rand_vec(&mut rng, m * k, w);
+        let b = rand_vec(&mut rng, k * n, w);
+        let want = mm1_oracle(&a, &b, m, k, n, w);
+        for algo in ALGOS {
+            let auto = MatmulPlan::build(spec_with(m, k, n, w, algo, 2))
+                .unwrap_or_else(|e| panic!("auto w={w} {algo}: {e}"));
+            assert_mat_eq(
+                &fast_as_i128(&auto.execute(&a, &b)),
+                &want,
+                m,
+                n,
+                &format!("auto w={w} {algo}"),
+            );
+            for lane in LaneId::ALL {
+                let spec = spec_with(m, k, n, w, algo, 2).in_lane(lane);
+                match MatmulPlan::build(spec) {
+                    Ok(plan) => {
+                        assert_eq!(plan.lane(), lane);
+                        assert_mat_eq(
+                            &fast_as_i128(&plan.bind_b(&b).execute(&a)),
+                            &want,
+                            m,
+                            n,
+                            &format!("forced {lane} w={w} {algo}"),
+                        );
+                    }
+                    Err(
+                        PlanError::LaneStorage { .. }
+                        | PlanError::LaneHeadroom { .. }
+                        | PlanError::StrassenHeadroom { .. },
+                    ) => {}
+                    Err(e) => panic!("unexpected refusal for {lane} w={w} {algo}: {e:?}"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_ones_stay_exact_at_each_lane_strassen_boundary() {
+    // Hand-computed boundary pins for the +1-bit-per-level rule: the
+    // narrow lanes' accumulators are saturated *exactly* by these
+    // (w, k, levels) triples, and all-ones operands — the worst case
+    // for every complement correction — still reproduce mm1.
+    //
+    // u16 (32-bit acc): w=14, L=1 ⇒ leaves at 15 bits; k=8 ⇒ leaf
+    // depth 4 ⇒ need 2·15 + 2 = 32. u32 (64-bit acc): w=30, L=1 ⇒
+    // 2·31 + 2 = 64.
+    assert_eq!(strassen_required_acc_bits(14, 8, 1, 1), 32);
+    assert_eq!(strassen_required_acc_bits(30, 8, 1, 1), 64);
+    for (lane, w) in [(LaneId::U16, 14u32), (LaneId::U32, 30)] {
+        let (m, k, n) = (4usize, 8usize, 4usize);
+        assert_eq!(select_lane_strassen(w, k, 1, 1), Some(lane), "w={w}");
+        let a = ones_vec(m * k, w);
+        let b = ones_vec(k * n, w);
+        let want = mm1_oracle(&a, &b, m, k, n, w);
+        for spec in [
+            spec_with(m, k, n, w, PlanAlgo::Strassen { levels: 1 }, 1),
+            spec_with(m, k, n, w, PlanAlgo::Strassen { levels: 1 }, 2).in_lane(lane),
+        ] {
+            let plan = MatmulPlan::build(spec).unwrap_or_else(|e| panic!("w={w}: {e}"));
+            assert_eq!(plan.lane(), lane, "w={w}");
+            assert_mat_eq(
+                &fast_as_i128(&plan.execute(&a, &b)),
+                &want,
+                m,
+                n,
+                &format!("all-ones boundary {lane} w={w}"),
+            );
+            assert_mat_eq(
+                &fast_as_i128(&plan.bind_b(&b).execute(&a)),
+                &want,
+                m,
+                n,
+                &format!("all-ones boundary bound {lane} w={w}"),
+            );
+        }
+        // One step past the depth bound: the selector hands the shape
+        // to the next lane, and forcing the saturated lane is a typed
+        // refusal.
+        assert!(!strassen_lane_exact(lane, w, k + 1, 1, 1), "w={w}");
+        assert_ne!(select_lane_strassen(w, k + 1, 1, 1), Some(lane), "w={w}");
+        let err = MatmulPlan::build(
+            spec_with(m, k + 1, n, w, PlanAlgo::Strassen { levels: 1 }, 1).in_lane(lane),
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, PlanError::StrassenHeadroom { lane: Some(l), .. } if l == lane),
+            "w={w}: {err:?}"
+        );
+    }
+
+    // The widest lane's boundary is the engine window itself: w=31 is
+    // the last width with room for one level (leaves at 32 bits), w=32
+    // with any Strassen level is refused by every lane.
+    let (m, k, n, w) = (2usize, 2usize, 2usize, 31u32);
+    let a = ones_vec(m * k, w);
+    let b = ones_vec(k * n, w);
+    let want = mm1_oracle(&a, &b, m, k, n, w);
+    let plan = MatmulPlan::build(
+        spec_with(m, k, n, w, PlanAlgo::Strassen { levels: 1 }, 1).in_lane(LaneId::U64),
+    )
+    .expect("u64 hosts w=31 at one level");
+    assert_mat_eq(
+        &fast_as_i128(&plan.execute(&a, &b)),
+        &want,
+        m,
+        n,
+        "all-ones w=31 u64",
+    );
+    assert_eq!(select_lane_strassen(MAX_W, k, 1, 1), None);
+}
+
+#[test]
+fn hybrid_boundary_is_self_calibrating_and_exact() {
+    // The hybrid's u16 boundary, derived from the selector itself: walk
+    // k to the deepest depth the rule still admits, prove all-ones
+    // exactness there, and prove refusal at k + 1 — no hand-derived
+    // digit-growth formula to go stale.
+    let (w, digits, levels) = (12u32, 2u32, 1u32);
+    let mut k = 1usize;
+    while k < 4096 && strassen_lane_exact(LaneId::U16, w, k + 1, digits, levels) {
+        k += 1;
+    }
+    assert!(k < 4096, "u16 hybrid boundary must be finite");
+    assert!(strassen_lane_exact(LaneId::U16, w, k, digits, levels));
+    assert!(!strassen_lane_exact(LaneId::U16, w, k + 1, digits, levels));
+    assert_eq!(select_lane_strassen(w, k, digits, levels), Some(LaneId::U16));
+    assert_eq!(
+        select_lane_strassen(w, k + 1, digits, levels),
+        Some(LaneId::U32),
+        "one past the boundary falls to the next lane"
+    );
+    let (m, n) = (2usize, 2usize);
+    let a = ones_vec(m * k, w);
+    let b = ones_vec(k * n, w);
+    let want = mm1_oracle(&a, &b, m, k, n, w);
+    let algo = PlanAlgo::StrassenKmm { levels, digits };
+    for spec in [
+        spec_with(m, k, n, w, algo, 1),
+        spec_with(m, k, n, w, algo, 1).in_lane(LaneId::U16),
+    ] {
+        let plan = MatmulPlan::build(spec).expect("boundary depth builds");
+        assert_eq!(plan.lane(), LaneId::U16);
+        assert_mat_eq(
+            &fast_as_i128(&plan.execute(&a, &b)),
+            &want,
+            m,
+            n,
+            &format!("hybrid all-ones boundary k={k}"),
+        );
+    }
+    let err = MatmulPlan::build(spec_with(m, k + 1, n, w, algo, 1).in_lane(LaneId::U16))
+        .unwrap_err();
+    assert!(
+        matches!(err, PlanError::StrassenHeadroom { lane: Some(LaneId::U16), .. }),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn level_axis_refusals_match_the_one_bit_per_level_rule() {
+    // The levels axis, without executing the (enormous) recursions:
+    // w=8 at depth 256 is exact on u16 through eight levels — the need
+    // is 2(8+L) + (8−L) = 24+L bits — refuses u16 at the ninth, and
+    // Auto falls to u32 exactly there.
+    for levels in 1u32..=8 {
+        assert_eq!(strassen_required_acc_bits(8, 256, 1, levels), 24 + levels);
+        assert_eq!(select_lane_strassen(8, 256, 1, levels), Some(LaneId::U16));
+    }
+    assert!(!strassen_lane_exact(LaneId::U16, 8, 256, 1, 9));
+    assert_eq!(select_lane_strassen(8, 256, 1, 9), Some(LaneId::U32));
+    // Forced one level past the boundary: a typed error naming the
+    // lane and the level count.
+    let err = MatmulPlan::build(
+        spec_with(4, 256, 4, 8, PlanAlgo::Strassen { levels: 9 }, 1).in_lane(LaneId::U16),
+    )
+    .unwrap_err();
+    let PlanError::StrassenHeadroom { lane, w, k, digits, levels } = err else {
+        panic!("expected StrassenHeadroom, got {err:?}");
+    };
+    assert_eq!(
+        (lane, w, k, digits, levels),
+        (Some(LaneId::U16), 8, 256, 1, 9)
+    );
+    // Auto with no admissible lane at all: w = MAX_W cannot grow a bit.
+    let err =
+        MatmulPlan::build(spec_with(4, 4, 4, MAX_W, PlanAlgo::Strassen { levels: 1 }, 1))
+            .unwrap_err();
+    assert!(
+        matches!(err, PlanError::StrassenHeadroom { lane: None, levels: 1, .. }),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn degenerate_shapes_validate_first_and_unit_shapes_stay_exact() {
+    // Zero dimensions are typed validation errors for the new
+    // algorithms exactly as for mm/kmm — checked *before* headroom, so
+    // even a hopeless width reports the shape problem (the
+    // validation-first contract the dispatch layer's clamp shim relies
+    // on).
+    for algo in [
+        PlanAlgo::Strassen { levels: 1 },
+        PlanAlgo::StrassenKmm { levels: 1, digits: 2 },
+    ] {
+        for (m, k, n) in [(0usize, 4usize, 4usize), (4, 0, 4), (4, 4, 0), (0, 0, 0)] {
+            let err = MatmulPlan::build(spec_with(m, k, n, 8, algo, 1)).unwrap_err();
+            assert_eq!(err, PlanError::ZeroDim { m, k, n }, "{algo}");
+        }
+        let err = MatmulPlan::build(spec_with(0, 4, 4, MAX_W, algo, 1)).unwrap_err();
+        assert_eq!(err, PlanError::ZeroDim { m: 0, k: 4, n: 4 }, "{algo} at MAX_W");
+    }
+    // 1×1×1 through every algorithm: one scalar product, padded up and
+    // cropped back exactly.
+    for algo in ALGOS {
+        let plan = MatmulPlan::build(spec_with(1, 1, 1, 8, algo, 1)).unwrap();
+        assert_eq!(plan.execute(&[3], &[5]), vec![15u128], "{algo}");
+        assert_eq!(plan.bind_b(&[5]).execute(&[3]), vec![15u128], "{algo} bound");
+    }
+}
