@@ -90,10 +90,7 @@ fn main() {
         || Box::new(PjrtBackend::new(Runtime::from_dir(default_dir()).unwrap())),
         // One shard: each worker would load its own PJRT runtime, and a
         // single artifact set serves this demo fine.
-        ServerConfig {
-            batch_max: 8,
-            workers: 1,
-        },
+        ServerConfig::default().max_batch(8).workers(1),
     );
     let mut rng = Rng::new(99);
     let mut pending = Vec::new();

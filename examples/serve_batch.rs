@@ -16,10 +16,7 @@ fn main() {
     // and the front door round-robins requests across them.
     let mut srv = Server::start(
         || Box::new(FunctionalBackend::paper()),
-        ServerConfig {
-            batch_max: 16,
-            workers: 2,
-        },
+        ServerConfig::default().max_batch(16).workers(2),
     );
     let mut rng = Rng::new(1234);
 

@@ -97,6 +97,27 @@ pub trait GemmBackend {
         self.gemm(a, weight.raw(), weight.w())
     }
 
+    /// Serve several activations against **one** registered weight as a
+    /// coalesced batch — the server's batch queue calls this with every
+    /// same-handle request it lingered together. The default executes
+    /// each activation independently (correct on every backend);
+    /// [`FastBackend`] overrides it to row-stack the activations into a
+    /// single [`BoundPlan`] execution, sweeping the packed panels once
+    /// per batch instead of once per request. Per-request results
+    /// (numerics, mode, lane, cycles) are bit-identical either way.
+    ///
+    /// [`BoundPlan`]: crate::fast::BoundPlan
+    fn gemm_packed_batch(
+        &mut self,
+        activations: &[&Mat],
+        weight: &PackedWeight,
+    ) -> Vec<Result<GemmResult>> {
+        activations
+            .iter()
+            .map(|a| self.gemm_packed(a, weight))
+            .collect()
+    }
+
     /// The [`PlanSpec`] this backend's routing policy resolves a raw
     /// `(m, k, n, w)` request to — algorithm from the width window,
     /// lane left to the selector, thread budget from the backend's own
@@ -526,6 +547,40 @@ impl FastBackend {
             Mode::Mm2
         }
     }
+
+    /// The registry [`BoundPlan`](crate::fast::BoundPlan) a resolved
+    /// spec serves from, with the lane the request routes to — the one
+    /// lookup rule `gemm_packed` and `gemm_packed_batch` share. `None`
+    /// when the cache lacks the needed decomposition or was bound under
+    /// a different lane/algo (callers re-plan from the raw matrix).
+    fn bound_route<'w>(
+        &self,
+        weight: &'w PackedWeight,
+        k: usize,
+        spec: &PlanSpec,
+    ) -> Option<(&'w crate::fast::BoundPlan, LaneId)> {
+        let w = spec.w;
+        let digits = spec.algo.digits();
+        if spec.algo.levels() > 0 {
+            // Strassen routing: the cache entry must have been bound
+            // under the exact algo (levels + digits) and lane this
+            // request resolves to; anything else re-plans from raw.
+            let lane = select_lane_strassen(w, k, digits, spec.algo.levels())
+                .expect("resolve_spec only picks a strassen algo when a lane is exact");
+            return weight
+                .strassen()
+                .filter(|bp| bp.plan().algo() == spec.algo && bp.lane() == lane)
+                .map(|bp| (bp, lane));
+        }
+        // The lane this request routes to — the same select_lane rule
+        // the registry's plans were built under, so matched entries
+        // verify equal.
+        let lane = select_lane(w, k, digits).expect("resolve_spec validated the width");
+        let bound = if digits == 1 { weight.mm() } else { weight.kmm() };
+        bound
+            .filter(|bp| bp.lane() == lane && bp.digits() == digits)
+            .map(|bp| (bp, lane))
+    }
 }
 
 impl GemmBackend for FastBackend {
@@ -591,32 +646,59 @@ impl GemmBackend for FastBackend {
         }
         let (m, k, n) = (a.rows, a.cols, weight.cols());
         let spec = self.resolve_spec(m, k, n, w)?;
-        let digits = spec.algo.digits();
-        if spec.algo.levels() > 0 {
-            // Strassen routing: the cache entry must have been bound
-            // under the exact algo (levels + digits) and lane this
-            // request resolves to; anything else re-plans from raw.
-            let lane = select_lane_strassen(w, k, digits, spec.algo.levels())
-                .expect("resolve_spec only picks a strassen algo when a lane is exact");
-            let bound = weight
-                .strassen()
-                .filter(|bp| bp.plan().algo() == spec.algo && bp.lane() == lane);
-            let Some(bound) = bound else {
-                return self.gemm(a, weight.raw(), w);
-            };
-            let raw = bound.execute_with_threads(a.data(), self.threads);
-            return Ok(finish_fast(&raw, m, k, n, self.mode_of(&spec), lane, &self.timing));
-        }
-        // The lane this request routes to — the same select_lane rule
-        // the registry's plans were built under, so matched entries
-        // verify equal.
-        let lane = select_lane(w, k, digits).expect("resolve_spec validated the width");
-        let bound = if digits == 1 { weight.mm() } else { weight.kmm() };
-        let Some(bound) = bound.filter(|bp| bp.lane() == lane && bp.digits() == digits) else {
+        let Some((bound, lane)) = self.bound_route(weight, k, &spec) else {
             return self.gemm(a, weight.raw(), w);
         };
         let raw = bound.execute_with_threads(a.data(), self.threads);
         Ok(finish_fast(&raw, m, k, n, self.mode_of(&spec), lane, &self.timing))
+    }
+
+    /// The coalesced hot path: row-stack every activation into **one**
+    /// [`BoundPlan`](crate::fast::BoundPlan) execution (the packed
+    /// panels stream once per batch) and split the stacked product back
+    /// into per-request results. Any activation that fails validation —
+    /// or a cache miss on the needed decomposition — drops the whole
+    /// group to the default per-request loop, which serves each request
+    /// its own Ok/Err exactly as unbatched serving would.
+    fn gemm_packed_batch(
+        &mut self,
+        activations: &[&Mat],
+        weight: &PackedWeight,
+    ) -> Vec<Result<GemmResult>> {
+        if activations.is_empty() {
+            return Vec::new();
+        }
+        let w = weight.w();
+        let k = weight.rows();
+        let n = weight.cols();
+        let uniform = activations
+            .iter()
+            .all(|a| a.fits(w) && a.cols == k && a.rows > 0);
+        let spec = if uniform {
+            self.resolve_spec(activations[0].rows, k, n, w).ok()
+        } else {
+            None
+        };
+        let route = spec
+            .as_ref()
+            .and_then(|spec| self.bound_route(weight, k, spec).map(|r| (*spec, r)));
+        let Some((spec, (bound, lane))) = route else {
+            return activations
+                .iter()
+                .map(|a| self.gemm_packed(a, weight))
+                .collect();
+        };
+        let parts: Vec<&[u64]> = activations.iter().map(|a| a.data()).collect();
+        let raws = bound.execute_batch(&parts, self.threads);
+        activations
+            .iter()
+            .zip(raws)
+            .map(|(a, raw)| {
+                // Per-request cycle stats come from the request's own
+                // (m, k, n) grid — identical to the unbatched path.
+                Ok(finish_fast(&raw, a.rows, k, n, self.mode_of(&spec), lane, &self.timing))
+            })
+            .collect()
     }
 
     fn resolve_spec(&self, m: usize, k: usize, n: usize, w: u32) -> Result<PlanSpec> {
@@ -1058,6 +1140,69 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fast_backend_batched_packed_matches_per_request_serving() {
+        // The coalescing contract at the dispatch layer: a batch of
+        // same-weight activations served through gemm_packed_batch is
+        // bit-identical — numerics, mode, lane, and cycle stats — to
+        // serving each one alone, for every fast algorithm.
+        use crate::coordinator::registry::PackedWeight;
+        let mut rng = Rng::new(41);
+        for w in [8u32, 12] {
+            let b = Mat::random(10, 7, w, &mut rng);
+            let pw = PackedWeight::new(b.clone(), w).unwrap();
+            let acts: Vec<Mat> = [1usize, 3, 1, 2]
+                .iter()
+                .map(|&m| Mat::random(m, 10, w, &mut rng))
+                .collect();
+            let refs: Vec<&Mat> = acts.iter().collect();
+            for algo in [
+                FastAlgo::Mm,
+                FastAlgo::Kmm,
+                FastAlgo::Strassen,
+                FastAlgo::StrassenKmm,
+            ] {
+                for threads in [1usize, 2] {
+                    let mut be = FastBackend::with_threads(algo, threads);
+                    let batched = be.gemm_packed_batch(&refs, &pw);
+                    assert_eq!(batched.len(), acts.len());
+                    for (a, got) in acts.iter().zip(batched) {
+                        let got = got.unwrap();
+                        let solo = be.gemm_packed(a, &pw).unwrap();
+                        let ctx = format!("{} w={w} m={} threads={threads}", be.name(), a.rows);
+                        assert_eq!(got.c, solo.c, "{ctx}");
+                        assert_eq!(got.c, matmul_oracle(a, &b), "{ctx} vs oracle");
+                        assert_eq!(got.mode, solo.mode, "{ctx}");
+                        assert_eq!(got.lane, solo.lane, "{ctx}");
+                        assert_eq!(got.stats.cycles, solo.stats.cycles, "{ctx}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_backend_batched_packed_degrades_per_request_on_bad_input() {
+        // A malformed activation in the group drops coalescing for that
+        // batch, but every request still gets its own verdict: the bad
+        // one a served Err, the good ones exact results.
+        use crate::coordinator::registry::PackedWeight;
+        let mut rng = Rng::new(43);
+        let b = Mat::random(6, 4, 8, &mut rng);
+        let pw = PackedWeight::new(b.clone(), 8).unwrap();
+        let good = Mat::random(2, 6, 8, &mut rng);
+        let mismatched = Mat::random(2, 5, 8, &mut rng); // cols != weight.rows
+        let mut be = FastBackend::new(FastAlgo::Kmm);
+        let out = be.gemm_packed_batch(&[&good, &mismatched, &good], &pw);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].as_ref().unwrap().c, matmul_oracle(&good, &b));
+        let err = out[1].as_ref().unwrap_err();
+        assert!(err.to_string().contains("dimension mismatch"), "{err:#}");
+        assert_eq!(out[2].as_ref().unwrap().c, matmul_oracle(&good, &b));
+        // An empty group is an empty response set.
+        assert!(be.gemm_packed_batch(&[], &pw).is_empty());
     }
 
     #[test]

@@ -8,6 +8,139 @@
 //! and clock frequency — the property §V-A needs for fair comparison
 //! against prior work.
 
+use std::time::Duration;
+
+/// Bucket count of [`LatencyHistogram`]: bucket 0 holds `0..=1` µs and
+/// bucket `b` holds `(2^(b-1), 2^b]` µs, so 39 buckets cover every
+/// `u64` microsecond value up to ~2^38 µs (&gt; 3 days) before clamping.
+const LATENCY_BUCKETS: usize = 39;
+
+/// A mergeable log2-bucketed latency histogram over microseconds, the
+/// serving layer's per-request enqueue→response record.
+///
+/// Shards each own one histogram per key (overall, per-lane, per-algo)
+/// and [`merge`](LatencyHistogram::merge) them at shutdown exactly like
+/// the scalar `ServerStats` counters. Quantiles are bucket upper
+/// bounds, so `p99_us` is an upper estimate within a factor of two —
+/// tight enough to gate serving regressions without per-request storage.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: [u64; LATENCY_BUCKETS],
+    total: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: [0; LATENCY_BUCKETS],
+            total: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram (all quantiles report 0).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a microsecond value: 0 for `0..=1`, else the
+    /// bit length of `us - 1` (so each bucket `b` covers
+    /// `(2^(b-1), 2^b]`), clamped to the last bucket.
+    fn bucket(us: u64) -> usize {
+        if us <= 1 {
+            0
+        } else {
+            ((64 - (us - 1).leading_zeros()) as usize).min(LATENCY_BUCKETS - 1)
+        }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, elapsed: Duration) {
+        // Saturate rather than wrap on absurd durations: one sample in
+        // the top bucket, not a panic.
+        self.record_us(u64::try_from(elapsed.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Record one latency sample given directly in microseconds.
+    pub fn record_us(&mut self, us: u64) {
+        self.counts[Self::bucket(us)] += 1;
+        self.total += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Fold another histogram into this one (shard-merge at shutdown).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Maximum recorded latency in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.total as f64
+        }
+    }
+
+    /// The `q`-quantile (`0 < q <= 1`) in microseconds: the upper bound
+    /// of the bucket holding the `⌈q·total⌉`-th sample, clamped to the
+    /// observed maximum. 0 when the histogram is empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (b, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // The true quantile can never exceed the observed max,
+                // so clamp the bucket's upper bound to it (this also
+                // reports 0, not 1, when every sample was 0 µs).
+                let upper = if b == 0 { 1 } else { 1u64 << b };
+                return upper.min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Median latency upper bound in microseconds.
+    pub fn p50_us(&self) -> u64 {
+        self.quantile_us(0.50)
+    }
+
+    /// 95th-percentile latency upper bound in microseconds.
+    pub fn p95_us(&self) -> u64 {
+        self.quantile_us(0.95)
+    }
+
+    /// 99th-percentile latency upper bound in microseconds.
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
+}
+
 /// eq. (13): recursion levels needed to compute w-bit products on m-bit
 /// multipliers: `r = ⌈log2⌈w/m⌉⌉`.
 pub fn recursion_levels(w: u32, m: u32) -> u32 {
@@ -117,6 +250,65 @@ pub fn fig11_series(m: u32, w_max: u32) -> Vec<Fig11Point> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn latency_histogram_buckets_are_powers_of_two() {
+        assert_eq!(LatencyHistogram::bucket(0), 0);
+        assert_eq!(LatencyHistogram::bucket(1), 0);
+        assert_eq!(LatencyHistogram::bucket(2), 1);
+        assert_eq!(LatencyHistogram::bucket(3), 2);
+        assert_eq!(LatencyHistogram::bucket(4), 2);
+        assert_eq!(LatencyHistogram::bucket(5), 3);
+        assert_eq!(LatencyHistogram::bucket(1024), 10);
+        assert_eq!(LatencyHistogram::bucket(1025), 11);
+        assert_eq!(LatencyHistogram::bucket(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_bound_the_samples() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.p50_us(), 0);
+        assert_eq!(h.p99_us(), 0);
+        assert_eq!(h.count(), 0);
+        // 100 samples: 1..=100 µs. Every quantile is an upper bound on
+        // the true order statistic and at most 2x above it.
+        for us in 1..=100u64 {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max_us(), 100);
+        assert!((h.mean_us() - 50.5).abs() < 1e-9);
+        for (q, true_q) in [(0.50, 50u64), (0.95, 95), (0.99, 99)] {
+            let est = h.quantile_us(q);
+            assert!(est >= true_q, "q={q}: {est} < {true_q}");
+            assert!(est <= true_q * 2, "q={q}: {est} > 2*{true_q}");
+        }
+        // All-zero samples report 0, not the bucket bound of 1.
+        let mut z = LatencyHistogram::new();
+        z.record_us(0);
+        z.record_us(0);
+        assert_eq!(z.p99_us(), 0);
+        assert_eq!(z.max_us(), 0);
+    }
+
+    #[test]
+    fn latency_histogram_merge_equals_combined_recording() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut both = LatencyHistogram::new();
+        for us in [0u64, 3, 17, 64, 900, 40_000] {
+            a.record_us(us);
+            both.record_us(us);
+        }
+        for us in [5u64, 5, 2_000_000, 81] {
+            b.record(Duration::from_micros(us));
+            both.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a, both, "merge must equal recording into one histogram");
+        assert_eq!(a.count(), 10);
+        assert_eq!(a.max_us(), 2_000_000);
+    }
 
     #[test]
     fn recursion_levels_eq13() {

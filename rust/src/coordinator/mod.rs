@@ -14,11 +14,14 @@ pub use dispatch::{
     ExecutablePlan, FastAlgo, FastBackend, FunctionalBackend, GemmBackend, GemmResult,
     PjrtBackend,
 };
-pub use metrics::{recursion_levels, scalable_roof, Execution};
+pub use metrics::{recursion_levels, scalable_roof, Execution, LatencyHistogram};
 pub use pipeline::{mlp_pipeline, Pipeline, PipelineLayer, Requant};
 pub use quantize::{adjust_zero_point, lift_signed, signed_gemm_via_unsigned, LayerPrecision};
 pub use registry::{PackPlan, PackedWeight, WeightHandle, WeightRegistry};
-pub use scheduler::{schedule, workload_gops, LayerPlan, Schedule};
+pub use scheduler::{
+    estimate_coalescing, schedule, workload_gops, BatchPlan, LayerPlan, Schedule,
+};
 pub use server::{
-    PackedRequest, Request, Response, Server, ServerConfig, ServerStats, Submission,
+    parse_duration, Busy, PackedRequest, Request, Response, Server, ServerConfig, ServerStats,
+    Submission,
 };

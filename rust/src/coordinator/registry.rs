@@ -318,6 +318,17 @@ impl PackedWeight {
         self.kmm.as_ref().map(BoundPlan::lane)
     }
 
+    /// Whether this entry holds **any** bound decomposition — the
+    /// coalescing batch queue's grouping hint. Same-handle requests are
+    /// worth lingering for only when a stacked
+    /// [`BoundPlan`] execution can actually serve them; a raw-only
+    /// entry (e.g. [`PackPlan::Raw`] or a degenerate weight) would fall
+    /// back to per-request serving anyway, so the server skips the
+    /// grouping work and its `coalesced_*` stats stay honest.
+    pub fn batchable(&self) -> bool {
+        self.mm.is_some() || self.kmm.is_some() || self.strassen.is_some()
+    }
+
     /// Total packed bytes held by this entry (cache observability —
     /// narrow-lane entries hold `elem_bits/64` of the `u64` footprint).
     pub fn bytes(&self) -> usize {

@@ -4,6 +4,7 @@
 //! from.
 
 use crate::arch::ffip::TileEngine;
+use crate::arch::mxu::SystolicSpec;
 use crate::arch::scalable::{select_mode, Mode, ScalableKmm, WidthError};
 use crate::coordinator::metrics::Execution;
 use crate::model::workload::Workload;
@@ -64,6 +65,50 @@ pub fn schedule<E: TileEngine>(
         trace.push(g.label.clone(), g.w, mode.reads(), stats);
     }
     Ok(Schedule { layers, trace })
+}
+
+/// Analytic estimate for the serve-side coalescing batch queue: the
+/// §IV-D schedule cycles per request when `batch` same-shape
+/// `(m, k, n)` requests are served one at a time versus row-stacked
+/// into a single `batch·m`-row execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPlan {
+    /// Stacked rows of the coalesced execution (`batch · m`).
+    pub rows: usize,
+    /// Schedule cycles for one solo request.
+    pub per_request_cycles: u64,
+    /// Coalesced-execution cycles amortized per request.
+    pub batched_cycles_per_request: f64,
+    /// Solo over amortized cycles: `1.0` at `batch = 1`, and > 1
+    /// whenever array fill/drain and short-stream B-load stalls
+    /// amortize across the batch — the decode-shaped `m = 1` case the
+    /// server's linger window exists for.
+    pub speedup: f64,
+}
+
+/// Estimate what coalescing `batch` same-shape requests buys on `spec`.
+/// `batch` (and `m`) are clamped to at least 1.
+pub fn estimate_coalescing(
+    m: usize,
+    k: usize,
+    n: usize,
+    mode: Mode,
+    batch: usize,
+    spec: &SystolicSpec,
+) -> BatchPlan {
+    let m = m.max(1);
+    let batch = batch.max(1);
+    let reads = mode.reads();
+    let solo = simulate_cycles(&TileGrid::new(m, k, n, spec.x, spec.y), spec, reads).cycles;
+    let stacked =
+        simulate_cycles(&TileGrid::new(batch * m, k, n, spec.x, spec.y), spec, reads).cycles;
+    let per_request = stacked as f64 / batch as f64;
+    BatchPlan {
+        rows: batch * m,
+        per_request_cycles: solo,
+        batched_cycles_per_request: per_request,
+        speedup: solo as f64 / per_request,
+    }
 }
 
 /// Throughput (GOPS) of `workload` on `arch` at `freq_mhz` — the Table
@@ -147,6 +192,34 @@ mod tests {
         // against the table).
         let g = workload_gops(&resnet(ResNet::R50, 8), &arch(true), 326.0).unwrap();
         assert!(g > 1500.0 && g < 2800.0, "GOPS = {g}");
+    }
+
+    #[test]
+    fn coalescing_estimate_amortizes_decode_shaped_traffic() {
+        // m=1 streams waste the array on fill/drain and B-load stalls;
+        // stacking amortizes them. The estimate must be exactly neutral
+        // at batch=1, monotone in batch, and show a real win by the
+        // time a batch fills the array height.
+        let spec = SystolicSpec::paper_64();
+        let base = estimate_coalescing(1, 64, 64, Mode::Kmm2, 1, &spec);
+        assert_eq!(base.rows, 1);
+        assert_eq!(base.speedup, 1.0);
+        assert_eq!(
+            base.per_request_cycles as f64,
+            base.batched_cycles_per_request
+        );
+        let mut last = 0.0;
+        for batch in [1usize, 2, 8, 64] {
+            let p = estimate_coalescing(1, 64, 64, Mode::Kmm2, batch, &spec);
+            assert_eq!(p.rows, batch);
+            assert!(p.speedup >= last, "batch {batch}: {p:?}");
+            last = p.speedup;
+        }
+        let p8 = estimate_coalescing(1, 64, 64, Mode::Kmm2, 8, &spec);
+        assert!(p8.speedup > 4.0, "{p8:?}");
+        // Degenerate inputs clamp instead of dividing by zero.
+        let clamped = estimate_coalescing(0, 64, 64, Mode::Mm1, 0, &spec);
+        assert_eq!((clamped.rows, clamped.speedup), (1, 1.0));
     }
 
     #[test]

@@ -16,18 +16,45 @@
 //! model of the hardware exactly; N shards model N array instances
 //! serving one front door, which is how the software stack scales to
 //! "heavy traffic" while each backend instance stays single-owner.
+//!
+//! # Coalescing batch queue
+//!
+//! Model serving makes same-shape traffic the common case: every stream
+//! hits the same registered weight, which is exactly the
+//! weight-stationary reuse the paper's accelerator exploits. The shard
+//! batcher therefore *coalesces*: after grouping a drained batch by
+//! bitwidth it also groups by weight handle, and every run of two or
+//! more same-handle requests against a batchable registry entry is
+//! served by **one** [`GemmBackend::gemm_packed_batch`] call — the fast
+//! backend row-stacks the activations into a single `m = Σ rows`
+//! [`BoundPlan`](crate::fast::BoundPlan) execution and splits the
+//! product back per request, sweeping the packed weight panels once per
+//! batch instead of once per request. Per-request numerics, mode, lane,
+//! and cycles are bit-identical to unbatched serving.
+//!
+//! Three knobs govern the queue. `batch_window` bounds how long a shard
+//! lingers for same-weight traffic after its first request (zero keeps
+//! the historical drain-only batcher); `max_batch_rows` caps the summed
+//! activation rows drained into one batch; `queue_depth` bounds each
+//! shard's queue, with [`Server::try_enqueue`] returning a typed
+//! [`Busy`] rejection instead of growing without bound. Per-request
+//! enqueue→response latency lands in p50/p95/p99
+//! [`LatencyHistogram`]s — overall, per-lane, and per-algorithm —
+//! merged across shards at shutdown like every other counter.
 
 use crate::algo::matrix::{Mat, MatAcc};
 use crate::arch::scalable::Mode;
-use crate::coordinator::dispatch::GemmBackend;
+use crate::coordinator::dispatch::{GemmBackend, GemmResult};
+use crate::coordinator::metrics::LatencyHistogram;
 use crate::coordinator::registry::{PackedWeight, WeightHandle, WeightRegistry};
 use crate::fast::LaneId;
 use crate::util::error::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// One GEMM inference request.
 #[derive(Debug, Clone)]
@@ -70,6 +97,21 @@ pub struct ServerConfig {
     pub batch_max: usize,
     /// Worker shards, each owning one backend instance (min 1).
     pub workers: usize,
+    /// How long a shard lingers for more traffic after the first
+    /// request of a batch arrives. `Duration::ZERO` (the default)
+    /// keeps the historical drain-only batcher: grab whatever is
+    /// already queued, never wait. A small window (e.g. `2ms`) trades
+    /// that much per-request latency for coalescing opportunity on
+    /// decode-shaped `m = 1` streams.
+    pub batch_window: Duration,
+    /// Cap on the summed activation rows drained into one batch — the
+    /// row-stacked coalesced execution never builds a stacked operand
+    /// taller than this.
+    pub max_batch_rows: usize,
+    /// Bound on requests queued (admitted but unanswered) per shard.
+    /// [`Server::try_enqueue`] rejects with [`Busy`] at the bound
+    /// instead of growing the queue without limit.
+    pub queue_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -77,6 +119,9 @@ impl Default for ServerConfig {
         ServerConfig {
             batch_max: 16,
             workers: 1,
+            batch_window: Duration::ZERO,
+            max_batch_rows: 256,
+            queue_depth: 1024,
         }
     }
 }
@@ -86,6 +131,77 @@ impl ServerConfig {
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
         self
+    }
+
+    /// Override the per-batch request cap (clamped to at least 1).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.batch_max = n.max(1);
+        self
+    }
+
+    /// Override the linger window (zero = drain-only batching).
+    pub fn batch_window(mut self, d: Duration) -> Self {
+        self.batch_window = d;
+        self
+    }
+
+    /// Override the per-batch summed-rows cap (clamped to at least 1).
+    pub fn max_batch_rows(mut self, n: usize) -> Self {
+        self.max_batch_rows = n.max(1);
+        self
+    }
+
+    /// Override the per-shard admission bound (clamped to at least 1).
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = n.max(1);
+        self
+    }
+}
+
+/// Typed backpressure: the admission-reject returned by
+/// [`Server::try_enqueue`] when the target shard already holds
+/// `queue_depth` unanswered requests. Callers decide the policy —
+/// retry after draining a response (closed-loop clients), drop, or
+/// surface the rejection upstream — instead of the queue growing
+/// without bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Busy {
+    /// The shard that refused admission.
+    pub shard: usize,
+    /// Its queued-request count at rejection time.
+    pub depth: usize,
+}
+
+impl std::fmt::Display for Busy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "shard {} busy: {} requests queued (queue_depth reached)",
+            self.shard, self.depth
+        )
+    }
+}
+
+impl std::error::Error for Busy {}
+
+/// Parse a human-readable duration: `"500us"`, `"2ms"`, `"1s"`, or a
+/// bare integer (milliseconds). `"0"` is a valid zero window.
+pub fn parse_duration(s: &str) -> std::result::Result<Duration, String> {
+    let s = s.trim();
+    let (num, unit_us) = if let Some(v) = s.strip_suffix("us") {
+        (v, 1u64)
+    } else if let Some(v) = s.strip_suffix("ms") {
+        (v, 1_000)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1_000_000)
+    } else {
+        (s, 1_000)
+    };
+    match num.trim().parse::<u64>() {
+        Ok(n) => Ok(Duration::from_micros(n.saturating_mul(unit_us))),
+        Err(_) => Err(format!(
+            "invalid duration {s:?} (expected e.g. \"500us\", \"2ms\", \"1s\", or bare ms)"
+        )),
     }
 }
 
@@ -112,6 +228,24 @@ pub struct ServerStats {
     /// Served requests per fast-engine lane (`u16`/`u32`/`u64`); empty
     /// for backends without width-specialized lanes.
     pub by_lane: HashMap<&'static str, u64>,
+    /// Admission rejections ([`Busy`]) at the front door. Counted by
+    /// the server handle, not the shards — a rejected request never
+    /// reaches a queue — and folded into the merged stats at shutdown.
+    pub busy: u64,
+    /// Coalesced executions: batches of ≥2 same-handle requests served
+    /// by one row-stacked [`GemmBackend::gemm_packed_batch`] call.
+    pub coalesced_batches: u64,
+    /// Requests served inside those coalesced executions.
+    pub coalesced_requests: u64,
+    /// Enqueue→response latency over every response this server sent
+    /// (served and rejected alike).
+    pub latency: LatencyHistogram,
+    /// Enqueue→response latency per fast-engine lane (served requests
+    /// only; empty for backends without lanes).
+    pub latency_by_lane: HashMap<&'static str, LatencyHistogram>,
+    /// Enqueue→response latency per served algorithm mode
+    /// (`mm1`/`kmm2`/`mm2`).
+    pub latency_by_algo: HashMap<&'static str, LatencyHistogram>,
 }
 
 impl ServerStats {
@@ -123,11 +257,21 @@ impl ServerStats {
         self.total_cycles += other.total_cycles;
         self.weight_hits += other.weight_hits;
         self.weight_misses += other.weight_misses;
+        self.busy += other.busy;
+        self.coalesced_batches += other.coalesced_batches;
+        self.coalesced_requests += other.coalesced_requests;
+        self.latency.merge(&other.latency);
         for (mode, count) in &other.by_mode {
             *self.by_mode.entry(mode).or_insert(0) += count;
         }
         for (lane, count) in &other.by_lane {
             *self.by_lane.entry(lane).or_insert(0) += count;
+        }
+        for (lane, hist) in &other.latency_by_lane {
+            self.latency_by_lane.entry(lane).or_default().merge(hist);
+        }
+        for (algo, hist) in &other.latency_by_algo {
+            self.latency_by_algo.entry(algo).or_default().merge(hist);
         }
     }
 }
@@ -157,8 +301,10 @@ pub enum Submission {
 }
 
 enum Msg {
-    Req(Request, Sender<Response>),
-    Packed(PackedRequest, Sender<Response>),
+    /// The `Instant` is the admission timestamp — the start of the
+    /// enqueue→response latency window.
+    Req(Request, Sender<Response>, Instant),
+    Packed(PackedRequest, Sender<Response>, Instant),
     Shutdown(Sender<ServerStats>),
 }
 
@@ -168,6 +314,13 @@ pub struct Server {
     workers: Vec<JoinHandle<()>>,
     next_id: u64,
     registry: Arc<WeightRegistry>,
+    cfg: ServerConfig,
+    /// Admitted-but-unanswered requests per shard: incremented on
+    /// admission, decremented by the worker *after* it sends each
+    /// response, so in-flight work holds its queue slot.
+    depths: Vec<Arc<AtomicUsize>>,
+    /// [`Busy`] rejections issued by this handle.
+    busy: u64,
 }
 
 impl Server {
@@ -202,13 +355,16 @@ impl Server {
         let batch_counter = Arc::new(AtomicU64::new(0));
         let mut txs = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
+        let mut depths = Vec::with_capacity(shards);
         for _ in 0..shards {
             let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
             let factory = Arc::clone(&factory);
             let counter = Arc::clone(&batch_counter);
             let registry = Arc::clone(&registry);
+            let depth = Arc::new(AtomicUsize::new(0));
+            depths.push(Arc::clone(&depth));
             workers.push(std::thread::spawn(move || {
-                worker_loop(factory.as_ref(), rx, cfg, &counter, &registry)
+                worker_loop(factory.as_ref(), rx, cfg, &counter, &registry, &depth)
             }));
             txs.push(tx);
         }
@@ -217,6 +373,9 @@ impl Server {
             workers,
             next_id: 0,
             registry,
+            cfg,
+            depths,
+            busy: 0,
         }
     }
 
@@ -259,21 +418,51 @@ impl Server {
     }
 
     /// The one enqueue path every `submit*` variant routes through:
-    /// request-id allocation, shard round-robin, and message
-    /// construction live here and nowhere else (batch-id allocation and
-    /// stats accounting live in the one worker loop), so the four
-    /// public variants cannot drift apart.
-    pub fn enqueue(&mut self, sub: Submission) -> (u64, Receiver<Response>) {
+    /// admission control, request-id allocation, shard round-robin, and
+    /// message construction live here and nowhere else (batch-id
+    /// allocation and stats accounting live in the one worker loop), so
+    /// the public variants cannot drift apart.
+    ///
+    /// Admission is bounded: when the round-robin target shard already
+    /// holds `cfg.queue_depth` unanswered requests, the submission is
+    /// rejected with [`Busy`] — no id is allocated, so the admitted id
+    /// sequence stays dense. A rejected submission is returned to the
+    /// caller untouched-in-effect (it was never queued); closed-loop
+    /// clients typically drain one response and resubmit.
+    pub fn try_enqueue(
+        &mut self,
+        sub: Submission,
+    ) -> std::result::Result<(u64, Receiver<Response>), Busy> {
+        let shard = (self.next_id as usize) % self.txs.len();
+        let depth = self.depths[shard].load(Ordering::Acquire);
+        if depth >= self.cfg.queue_depth {
+            self.busy += 1;
+            return Err(Busy { shard, depth });
+        }
         self.next_id += 1;
         let id = self.next_id;
-        let shard = (id as usize - 1) % self.txs.len();
         let (rtx, rrx) = channel();
+        let now = Instant::now();
         let msg = match sub {
-            Submission::Raw { a, b, w } => Msg::Req(Request { id, a, b, w }, rtx),
-            Submission::Packed { a, handle } => Msg::Packed(PackedRequest { id, a, handle }, rtx),
+            Submission::Raw { a, b, w } => Msg::Req(Request { id, a, b, w }, rtx, now),
+            Submission::Packed { a, handle } => {
+                Msg::Packed(PackedRequest { id, a, handle }, rtx, now)
+            }
         };
+        self.depths[shard].fetch_add(1, Ordering::AcqRel);
         self.txs[shard].send(msg).expect("server alive");
-        (id, rrx)
+        Ok((id, rrx))
+    }
+
+    /// [`try_enqueue`](Self::try_enqueue) for callers that treat a full
+    /// queue as a bug (tests, bounded demos).
+    ///
+    /// # Panics
+    /// Panics with the [`Busy`] message when the target shard's queue
+    /// is at `cfg.queue_depth`.
+    pub fn enqueue(&mut self, sub: Submission) -> (u64, Receiver<Response>) {
+        self.try_enqueue(sub)
+            .unwrap_or_else(|busy| panic!("enqueue on a full shard queue: {busy}"))
     }
 
     /// Block on an enqueued request's response.
@@ -305,6 +494,11 @@ impl Server {
     }
 
     /// Stop every worker and collect the merged statistics.
+    ///
+    /// Shutdown is a drain, not a drop: each worker serves every
+    /// request still queued ahead of (or racing) the shutdown marker
+    /// before replying with its stats, so every admitted request gets
+    /// exactly one response.
     pub fn shutdown(mut self) -> ServerStats {
         let mut stats = ServerStats::default();
         for tx in &self.txs {
@@ -312,6 +506,7 @@ impl Server {
             tx.send(Msg::Shutdown(stx)).expect("server alive");
             stats.merge(&srx.recv().expect("worker replies"));
         }
+        stats.busy += self.busy;
         self.txs.clear();
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -328,26 +523,110 @@ enum Work {
 }
 
 impl Work {
-    /// Bitwidth sort key for mode grouping (misses sort last — they
-    /// reject without touching the array).
-    fn width(&self) -> u32 {
+    /// Batch sort key: bitwidth first (one array mode per group,
+    /// misses last — they reject without touching the array), then
+    /// weight handle so same-weight traffic sits adjacent for the
+    /// coalescer. Raw requests carry no handle and sort after packed
+    /// ones within their width.
+    fn order_key(&self) -> (u32, u64) {
         match self {
-            Work::Raw(r) => r.w,
-            Work::Packed(_, Some(pw)) => pw.w(),
-            Work::Packed(_, None) => u32::MAX,
+            Work::Raw(r) => (r.w, u64::MAX),
+            Work::Packed(r, Some(pw)) => (pw.w(), r.handle.0),
+            Work::Packed(_, None) => (u32::MAX, u64::MAX),
         }
     }
 }
 
-/// One shard's event loop: block for a request, drain a batch, group by
-/// bitwidth, serve, repeat — until shutdown (reply with this shard's
-/// statistics) or every sender is dropped.
+/// A drained request awaiting service: the work, its reply channel, and
+/// its admission timestamp.
+type Pending = (Work, Sender<Response>, Instant);
+
+/// Length of the coalescable run starting at `pending[i]`: consecutive
+/// packed requests against the same handle whose registry entry holds a
+/// bound decomposition. Anything else — raw requests, unknown handles,
+/// raw-only entries — serves solo.
+fn coalescable_run(pending: &[Pending], i: usize) -> usize {
+    let handle = match &pending[i].0 {
+        Work::Packed(r, Some(pw)) if pw.batchable() => r.handle,
+        _ => return 1,
+    };
+    let mut j = i + 1;
+    while j < pending.len() {
+        match &pending[j].0 {
+            Work::Packed(r, Some(_)) if r.handle == handle => j += 1,
+            _ => break,
+        }
+    }
+    j - i
+}
+
+/// Account for one result, send its response, and release the queue
+/// slot — the single response path shared by the solo and coalesced
+/// serve branches, so latency/mode/lane accounting cannot drift
+/// between them.
+fn respond(
+    stats: &mut ServerStats,
+    depth: &AtomicUsize,
+    batch_id: u64,
+    id: u64,
+    result: Result<GemmResult>,
+    reply: &Sender<Response>,
+    enqueued: Instant,
+) {
+    let resp = match result {
+        Ok(res) => {
+            stats.total_cycles += res.stats.cycles;
+            *stats.by_mode.entry(res.mode.name()).or_insert(0) += 1;
+            if let Some(lane) = res.lane {
+                *stats.by_lane.entry(lane.name()).or_insert(0) += 1;
+            }
+            Response {
+                id,
+                result: Ok(res.c),
+                mode: Some(res.mode),
+                lane: res.lane,
+                cycles: res.stats.cycles,
+                batch: batch_id,
+            }
+        }
+        Err(e) => {
+            stats.rejected += 1;
+            Response {
+                id,
+                result: Err(format!("{e:#}")),
+                mode: None,
+                lane: None,
+                cycles: 0,
+                batch: batch_id,
+            }
+        }
+    };
+    let elapsed = enqueued.elapsed();
+    stats.latency.record(elapsed);
+    if let Some(mode) = resp.mode {
+        stats.latency_by_algo.entry(mode.name()).or_default().record(elapsed);
+    }
+    if let Some(lane) = resp.lane {
+        stats.latency_by_lane.entry(lane.name()).or_default().record(elapsed);
+    }
+    // Release the slot before the send: a client that has its response
+    // in hand must never be refused admission by its own completed
+    // request still holding the queue slot.
+    depth.fetch_sub(1, Ordering::AcqRel);
+    let _ = reply.send(resp);
+}
+
+/// One shard's event loop: block for a request, linger/drain a batch,
+/// group by bitwidth then weight handle, serve (coalescing same-handle
+/// runs), repeat — until shutdown (drain the queue, serve everything,
+/// reply with this shard's statistics) or every sender is dropped.
 fn worker_loop(
     factory: &(dyn Fn() -> Box<dyn GemmBackend> + Send + Sync),
     rx: Receiver<Msg>,
     cfg: ServerConfig,
     batch_counter: &AtomicU64,
     registry: &WeightRegistry,
+    depth: &AtomicUsize,
 ) {
     let mut backend = factory();
     let mut stats = ServerStats::default();
@@ -357,79 +636,127 @@ fn worker_loop(
             Ok(m) => m,
             Err(_) => return, // all senders dropped
         };
-        let mut pending: Vec<(Work, Sender<Response>)> = Vec::new();
+        let mut pending: Vec<Pending> = Vec::new();
+        let mut rows = 0usize;
         let mut shutdown: Option<Sender<ServerStats>> = None;
-        let enqueue = |msg: Msg, pending: &mut Vec<(Work, Sender<Response>)>| match msg {
-            Msg::Req(r, c) => pending.push((Work::Raw(r), c)),
-            Msg::Packed(r, c) => {
-                let weight = registry.get(r.handle);
-                pending.push((Work::Packed(r, weight), c));
+        let resolve = |msg: Msg, pending: &mut Vec<Pending>| -> usize {
+            match msg {
+                Msg::Req(r, c, t) => {
+                    let rows = r.a.rows;
+                    pending.push((Work::Raw(r), c, t));
+                    rows
+                }
+                Msg::Packed(r, c, t) => {
+                    let rows = r.a.rows;
+                    let weight = registry.get(r.handle);
+                    pending.push((Work::Packed(r, weight), c, t));
+                    rows
+                }
+                Msg::Shutdown(_) => unreachable!("shutdown handled by the caller"),
             }
-            Msg::Shutdown(_) => unreachable!("shutdown handled by the caller"),
         };
         match first {
             Msg::Shutdown(s) => shutdown = Some(s),
-            msg => enqueue(msg, &mut pending),
+            msg => rows += resolve(msg, &mut pending),
         }
-        // ... then drain whatever else arrived (the batcher).
-        while shutdown.is_none() && pending.len() < cfg.batch_max {
-            match rx.try_recv() {
-                Ok(Msg::Shutdown(s)) => {
+        // ... then batch: drain whatever else is queued, and — when a
+        // linger window is configured — wait out the remainder of the
+        // window for more same-weight traffic to coalesce with.
+        let deadline = Instant::now() + cfg.batch_window;
+        while shutdown.is_none() && pending.len() < cfg.batch_max && rows < cfg.max_batch_rows {
+            let next = if cfg.batch_window.is_zero() {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            } else {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            };
+            match next {
+                Msg::Shutdown(s) => {
                     shutdown = Some(s);
                     break;
                 }
-                Ok(msg) => enqueue(msg, &mut pending),
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                msg => rows += resolve(msg, &mut pending),
+            }
+        }
+        // Shutdown is a drain, not a drop: serve everything still
+        // queued (ignoring the batch caps — nothing new is coming)
+        // before replying with stats, so every admitted request gets
+        // exactly one response.
+        if shutdown.is_some() {
+            loop {
+                match rx.try_recv() {
+                    Ok(Msg::Shutdown(s)) => shutdown = Some(s),
+                    Ok(msg) => {
+                        resolve(msg, &mut pending);
+                    }
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
             }
         }
 
         if !pending.is_empty() {
             let batch_id = batch_counter.fetch_add(1, Ordering::Relaxed) + 1;
-            // Group by bitwidth: one array mode per group.
-            pending.sort_by_key(|(work, _)| work.width());
-            for (work, reply) in pending {
-                stats.requests += 1;
-                let (id, result) = match &work {
-                    Work::Raw(req) => (req.id, backend.gemm(&req.a, &req.b, req.w)),
-                    Work::Packed(req, Some(weight)) => {
+            // Group by bitwidth, then handle (stable sort: admission
+            // order within a group is preserved).
+            pending.sort_by_key(|(work, _, _)| work.order_key());
+            let mut i = 0;
+            while i < pending.len() {
+                let run = coalescable_run(&pending, i);
+                if run >= 2 {
+                    // One row-stacked BoundPlan execution serves the
+                    // whole same-handle run.
+                    let weight = match &pending[i].0 {
+                        Work::Packed(_, Some(pw)) => Arc::clone(pw),
+                        _ => unreachable!("coalescable runs are packed hits"),
+                    };
+                    let acts: Vec<&Mat> = pending[i..i + run]
+                        .iter()
+                        .map(|(work, _, _)| match work {
+                            Work::Packed(r, _) => &r.a,
+                            Work::Raw(_) => unreachable!("coalescable runs are packed hits"),
+                        })
+                        .collect();
+                    let results = backend.gemm_packed_batch(&acts, &weight);
+                    debug_assert_eq!(results.len(), run);
+                    stats.coalesced_batches += 1;
+                    stats.coalesced_requests += run as u64;
+                    for ((work, reply, enq), result) in pending[i..i + run].iter().zip(results) {
+                        let id = match work {
+                            Work::Packed(r, _) => r.id,
+                            Work::Raw(_) => unreachable!("coalescable runs are packed hits"),
+                        };
+                        stats.requests += 1;
                         stats.weight_hits += 1;
-                        (req.id, backend.gemm_packed(&req.a, weight))
+                        respond(&mut stats, depth, batch_id, id, result, reply, *enq);
                     }
-                    Work::Packed(req, None) => {
-                        stats.weight_misses += 1;
-                        let e = crate::format_err!("unknown weight handle {}", req.handle.0);
-                        (req.id, Err(e))
-                    }
-                };
-                let resp = match result {
-                    Ok(res) => {
-                        stats.total_cycles += res.stats.cycles;
-                        *stats.by_mode.entry(res.mode.name()).or_insert(0) += 1;
-                        if let Some(lane) = res.lane {
-                            *stats.by_lane.entry(lane.name()).or_insert(0) += 1;
+                    i += run;
+                } else {
+                    let (work, reply, enq) = &pending[i];
+                    stats.requests += 1;
+                    let (id, result) = match work {
+                        Work::Raw(req) => (req.id, backend.gemm(&req.a, &req.b, req.w)),
+                        Work::Packed(req, Some(weight)) => {
+                            stats.weight_hits += 1;
+                            (req.id, backend.gemm_packed(&req.a, weight))
                         }
-                        Response {
-                            id,
-                            result: Ok(res.c),
-                            mode: Some(res.mode),
-                            lane: res.lane,
-                            cycles: res.stats.cycles,
-                            batch: batch_id,
+                        Work::Packed(req, None) => {
+                            stats.weight_misses += 1;
+                            let e = crate::format_err!("unknown weight handle {}", req.handle.0);
+                            (req.id, Err(e))
                         }
-                    }
-                    Err(e) => {
-                        stats.rejected += 1;
-                        Response {
-                            id,
-                            result: Err(format!("{e:#}")),
-                            mode: None,
-                            lane: None,
-                            cycles: 0,
-                            batch: batch_id,
-                        }
-                    }
-                };
-                let _ = reply.send(resp);
+                    };
+                    respond(&mut stats, depth, batch_id, id, result, reply, *enq);
+                    i += 1;
+                }
             }
             stats.batches += 1;
         }
@@ -585,10 +912,7 @@ mod tests {
         // leaves the other shards serving.
         let mut srv = Server::start(
             || Box::new(FastBackend::new(FastAlgo::Kmm)) as Box<dyn GemmBackend>,
-            ServerConfig {
-                batch_max: 4,
-                workers: 3,
-            },
+            ServerConfig::default().max_batch(4).workers(3),
         );
         let bad = Mat::zeros(2, 2);
         assert!(srv.submit_sync(bad.clone(), bad, 33).result.is_err());
@@ -833,5 +1157,235 @@ mod tests {
         let srv = small_server_cfg(cfg);
         assert_eq!(srv.shards(), 1);
         srv.shutdown();
+    }
+
+    #[test]
+    fn config_builders_clamp_and_set() {
+        let cfg = ServerConfig::default()
+            .max_batch(0)
+            .max_batch_rows(0)
+            .queue_depth(0)
+            .batch_window(Duration::from_micros(250));
+        assert_eq!(cfg.batch_max, 1);
+        assert_eq!(cfg.max_batch_rows, 1);
+        assert_eq!(cfg.queue_depth, 1);
+        assert_eq!(cfg.batch_window, Duration::from_micros(250));
+    }
+
+    #[test]
+    fn parse_duration_accepts_suffixed_and_bare_values() {
+        assert_eq!(parse_duration("500us"), Ok(Duration::from_micros(500)));
+        assert_eq!(parse_duration("2ms"), Ok(Duration::from_millis(2)));
+        assert_eq!(parse_duration("1s"), Ok(Duration::from_secs(1)));
+        assert_eq!(parse_duration("3"), Ok(Duration::from_millis(3)));
+        assert_eq!(parse_duration("0"), Ok(Duration::ZERO));
+        assert_eq!(parse_duration(" 2ms "), Ok(Duration::from_millis(2)));
+        assert!(parse_duration("fast").is_err());
+        assert!(parse_duration("1.5ms").is_err());
+        assert!(parse_duration("-2ms").is_err());
+        assert!(parse_duration("").is_err());
+    }
+
+    #[test]
+    fn shutdown_drains_every_queued_request() {
+        // Satellite regression: requests still queued when the shutdown
+        // marker lands must be served, not dropped with their response
+        // channels closed. batch_max=1 forces one serve per drain pass
+        // so the queue is still deep when shutdown() runs; the linger
+        // window exercises the recv_timeout path of the same drain.
+        for window in [Duration::ZERO, Duration::from_millis(5)] {
+            let mut srv =
+                small_server_cfg(ServerConfig::default().max_batch(1).batch_window(window));
+            let mut rng = Rng::new(61);
+            let mut expected = Vec::new();
+            let mut rxs = Vec::new();
+            for _ in 0..32 {
+                let a = Mat::random(2, 3, 8, &mut rng);
+                let b = Mat::random(3, 2, 8, &mut rng);
+                expected.push(matmul_oracle(&a, &b));
+                rxs.push(srv.submit(a, b, 8).1);
+            }
+            let stats = srv.shutdown();
+            assert_eq!(stats.requests, 32, "window {window:?}");
+            // Exactly one response per enqueued request, all exact.
+            for (rx, want) in rxs.into_iter().zip(expected) {
+                let resp = rx.recv().expect("response delivered, not dropped");
+                assert_eq!(resp.result.unwrap(), want);
+                assert!(rx.recv().is_err(), "exactly one response");
+            }
+            assert_eq!(stats.latency.count(), 32);
+        }
+    }
+
+    /// A backend whose every call blocks on a shared mutex — lets tests
+    /// hold a request in flight deterministically.
+    struct GatedBackend {
+        gate: Arc<std::sync::Mutex<()>>,
+        inner: FunctionalBackend,
+    }
+
+    impl GemmBackend for GatedBackend {
+        fn gemm(&mut self, a: &Mat, b: &Mat, w: u32) -> Result<crate::coordinator::dispatch::GemmResult> {
+            let _hold = self.gate.lock().unwrap();
+            self.inner.gemm(a, b, w)
+        }
+
+        fn name(&self) -> &'static str {
+            "gated"
+        }
+    }
+
+    #[test]
+    fn full_queue_rejects_with_typed_busy() {
+        // queue_depth=1 with the one slot held by an in-flight request
+        // (the gate keeps it unanswered): admission must reject with
+        // Busy, not queue unboundedly, and must admit again once the
+        // response lands. Slots are released only after the response is
+        // sent, so the depth check cannot race the worker.
+        let gate = Arc::new(std::sync::Mutex::new(()));
+        let worker_gate = Arc::clone(&gate);
+        let mut srv = Server::start(
+            move || {
+                Box::new(GatedBackend {
+                    gate: Arc::clone(&worker_gate),
+                    inner: FunctionalBackend {
+                        arch: ScalableKmm {
+                            mxu: SystolicSpec { x: 4, y: 4, p: 2 },
+                            m: 8,
+                            kmm_enabled: true,
+                        },
+                    },
+                }) as Box<dyn GemmBackend>
+            },
+            ServerConfig::default().queue_depth(1),
+        );
+        let mut rng = Rng::new(62);
+        let a = Mat::random(2, 3, 8, &mut rng);
+        let b = Mat::random(3, 2, 8, &mut rng);
+        let held = gate.lock().unwrap();
+        let (id, rx) = srv
+            .try_enqueue(Submission::Raw {
+                a: a.clone(),
+                b: b.clone(),
+                w: 8,
+            })
+            .expect("first request admitted");
+        assert_eq!(id, 1);
+        // The slot is occupied (in flight behind the gate): reject.
+        let busy = srv
+            .try_enqueue(Submission::Raw {
+                a: a.clone(),
+                b: b.clone(),
+                w: 8,
+            })
+            .expect_err("second request rejected");
+        assert_eq!(busy, Busy { shard: 0, depth: 1 });
+        assert!(busy.to_string().contains("queue_depth reached"));
+        drop(held);
+        assert!(rx.recv().unwrap().result.is_ok());
+        // Slot released: the retry is admitted and served.
+        let resp = srv.submit_sync(a, b, 8);
+        assert!(resp.result.is_ok());
+        assert_eq!(resp.id, 2, "rejections allocate no ids");
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.busy, 1);
+        assert_eq!(stats.latency.count(), 2);
+    }
+
+    #[test]
+    fn linger_window_coalesces_same_handle_streams() {
+        // Six m=1 streams against one registered weight, submitted
+        // within a generous linger window: the shard serves them as one
+        // row-stacked gemm_packed_batch call, bit-exact per request,
+        // with latency histograms tracked per lane and per algo.
+        let mut srv = Server::start(
+            || Box::new(FastBackend::new(FastAlgo::Kmm)) as Box<dyn GemmBackend>,
+            ServerConfig::default().batch_window(Duration::from_millis(200)),
+        );
+        let mut rng = Rng::new(63);
+        let b = Mat::random(9, 6, 12, &mut rng);
+        let h = srv
+            .register_weight_with_plan(b.clone(), 12, crate::coordinator::registry::PackPlan::Kmm)
+            .unwrap();
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..6 {
+            let a = Mat::random(1, 9, 12, &mut rng);
+            expected.push(matmul_oracle(&a, &b));
+            rxs.push(srv.submit_packed(a, h).1);
+        }
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.result.unwrap(), want);
+            assert_eq!(resp.mode, Some(Mode::Kmm2));
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.weight_hits, 6);
+        // All six were submitted before the first could be served (the
+        // window is enormous next to the submit loop), so they coalesce
+        // into row-stacked executions.
+        assert!(
+            stats.coalesced_requests >= 2,
+            "expected coalescing, got {stats:?}"
+        );
+        assert!(stats.coalesced_batches >= 1);
+        assert!(stats.coalesced_requests >= 2 * stats.coalesced_batches);
+        // Latency percentiles: recorded for every request, keyed by the
+        // lane and mode that served them, and ordered.
+        assert_eq!(stats.latency.count(), 6);
+        let p50 = stats.latency.p50_us();
+        let p95 = stats.latency.p95_us();
+        let p99 = stats.latency.p99_us();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(
+            stats.latency_by_algo.get("kmm2").map(LatencyHistogram::count),
+            Some(6)
+        );
+        let lane_total: u64 = stats.latency_by_lane.values().map(LatencyHistogram::count).sum();
+        assert_eq!(lane_total, 6);
+    }
+
+    #[test]
+    fn coalesced_serving_matches_solo_serving_bit_exactly() {
+        // The same packed traffic through a coalescing server and a
+        // drain-only server: responses agree exactly (numerics, mode,
+        // lane, cycles) — coalescing is a scheduling optimization, not
+        // a numerics change.
+        for algo in [FastAlgo::Kmm, FastAlgo::StrassenKmm] {
+            let plan = match algo {
+                FastAlgo::StrassenKmm => crate::coordinator::registry::PackPlan::StrassenKmm,
+                _ => crate::coordinator::registry::PackPlan::Kmm,
+            };
+            let mut batched = Server::start(
+                move || Box::new(FastBackend::new(algo)) as Box<dyn GemmBackend>,
+                ServerConfig::default().batch_window(Duration::from_millis(100)),
+            );
+            let mut solo = Server::start(
+                move || Box::new(FastBackend::new(algo)) as Box<dyn GemmBackend>,
+                ServerConfig::default(),
+            );
+            let mut rng = Rng::new(64);
+            let w = 12;
+            let b = Mat::random(8, 5, w, &mut rng);
+            let hb = batched.register_weight_with_plan(b.clone(), w, plan).unwrap();
+            let hs = solo.register_weight_with_plan(b.clone(), w, plan).unwrap();
+            let acts: Vec<Mat> = (0..5).map(|_| Mat::random(1, 8, w, &mut rng)).collect();
+            let rxs: Vec<_> = acts
+                .iter()
+                .map(|a| batched.submit_packed(a.clone(), hb).1)
+                .collect();
+            for (a, rx) in acts.iter().zip(rxs) {
+                let got = rx.recv().unwrap();
+                let want = solo.submit_packed_sync(a.clone(), hs);
+                assert_eq!(got.result.unwrap(), want.result.unwrap(), "{algo:?}");
+                assert_eq!(got.mode, want.mode, "{algo:?}");
+                assert_eq!(got.lane, want.lane, "{algo:?}");
+                assert_eq!(got.cycles, want.cycles, "{algo:?}");
+            }
+            batched.shutdown();
+            solo.shutdown();
+        }
     }
 }

@@ -784,6 +784,51 @@ impl BoundPlan {
             BoundOperand::Strassen(t) => t.execute(a, threads),
         }
     }
+
+    /// Serve several activation matrices against the bound operand as
+    /// **one** row-stacked execution: the parts are concatenated into a
+    /// single activation with `m = Σ mᵢ` rows, the driver runs once
+    /// (sweeping the packed panels once per batch instead of once per
+    /// request), and the stacked product is split back into per-part
+    /// `mᵢ × n` outputs. Row-major GEMM distributes over row blocks, so
+    /// every split output is bit-identical to executing its part alone
+    /// — the coalescing batch queue's correctness contract.
+    ///
+    /// Each part's length must be a multiple of the bound depth `k`
+    /// (zero-length parts yield empty outputs).
+    pub fn execute_batch(&self, parts: &[&[u64]], threads: usize) -> Vec<Vec<u128>> {
+        let k = self.plan.k;
+        for (i, part) in parts.iter().enumerate() {
+            assert!(
+                part.len() % k == 0,
+                "batch part {i}: activation length {} is not a multiple of the bound depth k={k}",
+                part.len()
+            );
+        }
+        // A singleton batch needs no copy: the stacked execution *is*
+        // the part's execution.
+        if parts.len() == 1 {
+            return vec![self.execute_with_threads(parts[0], threads)];
+        }
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        if total == 0 {
+            return parts.iter().map(|_| Vec::new()).collect();
+        }
+        let mut stacked = Vec::with_capacity(total);
+        for part in parts {
+            stacked.extend_from_slice(part);
+        }
+        let flat = self.execute_with_threads(&stacked, threads);
+        let n = self.plan.n;
+        let mut out = Vec::with_capacity(parts.len());
+        let mut row = 0usize;
+        for part in parts {
+            let rows = part.len() / k;
+            out.push(flat[row * n..(row + rows) * n].to_vec());
+            row += rows;
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -919,6 +964,45 @@ mod tests {
             let fresh = MatmulPlan::build(spec).unwrap().execute(&a, &b);
             assert_eq!(bound.execute(&a), fresh, "m={m}");
             assert_eq!(bound.execute_with_threads(&a, 4), fresh, "m={m} threads=4");
+        }
+    }
+
+    #[test]
+    fn execute_batch_splits_bit_exactly() {
+        // The coalescing contract: a row-stacked batch execution equals
+        // per-part execution, across algorithms, part counts, and an
+        // empty part in the middle.
+        let mut rng = Rng::new(54);
+        let (k, n, w) = (23usize, 9usize, 8u32);
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        for algo in [
+            PlanAlgo::Mm,
+            PlanAlgo::Kmm { digits: 2 },
+            PlanAlgo::Strassen { levels: 1 },
+            PlanAlgo::StrassenKmm { levels: 1, digits: 2 },
+        ] {
+            let mut spec = PlanSpec::mm(1, k, n, w).with_threads(1);
+            spec.algo = algo;
+            let bound = MatmulPlan::build(spec).unwrap().bind_b(&b);
+            let parts_data: Vec<Vec<u64>> = [1usize, 3, 0, 2, 1]
+                .iter()
+                .map(|&m| (0..m * k).map(|_| rng.bits(w)).collect())
+                .collect();
+            let parts: Vec<&[u64]> = parts_data.iter().map(Vec::as_slice).collect();
+            for threads in [1usize, 2] {
+                let batched = bound.execute_batch(&parts, threads);
+                assert_eq!(batched.len(), parts.len(), "{algo}");
+                for (i, part) in parts.iter().enumerate() {
+                    assert_eq!(
+                        batched[i],
+                        bound.execute_with_threads(part, 1),
+                        "{algo} part {i} threads={threads}"
+                    );
+                }
+            }
+            // Singleton batches take the no-copy path, same answer.
+            let single = bound.execute_batch(&parts[1..2], 1);
+            assert_eq!(single[0], bound.execute_with_threads(parts[1], 1), "{algo}");
         }
     }
 

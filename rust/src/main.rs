@@ -9,7 +9,15 @@
 //!                                 worker threads on the fast backends;
 //!                                 --algo X is shorthand for fast-X)
 //!   serve [--requests N] [--backend functional|fast-*]
-//!         [--threads N]           batched serving demo (N server shards)
+//!         [--threads N] [--streams S] [--batch-window 2ms]
+//!         [--max-batch B] [--queue-depth D]
+//!                                 batched serving demo (N server shards).
+//!                                 --streams S switches to S closed-loop
+//!                                 decode-shaped (m=1) streams against
+//!                                 registered weights through the
+//!                                 coalescing batch queue; prints
+//!                                 p50/p95/p99 latency, coalescing, and
+//!                                 backpressure stats either way
 //!   infer --model resnet50 [--backend fast-kmm|fast-mm|functional]
 //!         [--threads N] [--w 8] [--batch M] [--streams S] [--fresh]
 //!         [--verify] [--json FILE]  whole-model inference, weights
@@ -57,7 +65,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|serve|infer|schedule|export|info> [options]\n{}",
-                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm]\n           [--algo mm|kmm|strassen|strassen-kmm] [--threads N]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm] [--threads N]\n  infer    --model resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--backend fast-kmm|fast-mm|functional]\n           [--threads N] [--w 8] [--batch M] [--streams S] [--fresh] [--verify] [--json FILE]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm/infer = engine worker threads; serve = server worker shards)"
+                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm]\n           [--algo mm|kmm|strassen|strassen-kmm] [--threads N]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm] [--threads N]\n           [--streams S] [--batch-window 2ms] [--max-batch 32] [--queue-depth 1024]\n  infer    --model resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--backend fast-kmm|fast-mm|functional]\n           [--threads N] [--w 8] [--batch M] [--streams S] [--fresh] [--verify] [--json FILE]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm/infer = engine worker threads; serve = server worker shards)"
             );
             2
         }
@@ -191,8 +199,42 @@ fn cmd_gemm(args: &Args) -> i32 {
     }
 }
 
+/// Print the latency/coalescing tail of a serve run — the stats the
+/// batching pipeline adds on top of the classic counters.
+fn print_serve_stats(stats: &kmm::coordinator::server::ServerStats) {
+    println!(
+        "latency µs: p50 {} p95 {} p99 {} (max {}, {} samples); coalesced {} requests into {} stacked executions; busy rejections {}",
+        stats.latency.p50_us(),
+        stats.latency.p95_us(),
+        stats.latency.p99_us(),
+        stats.latency.max_us(),
+        stats.latency.count(),
+        stats.coalesced_requests,
+        stats.coalesced_batches,
+        stats.busy,
+    );
+    for (label, map) in [
+        ("per-lane", &stats.latency_by_lane),
+        ("per-algo", &stats.latency_by_algo),
+    ] {
+        if !map.is_empty() {
+            let mut keys: Vec<_> = map.keys().collect();
+            keys.sort();
+            let cells: Vec<String> = keys
+                .iter()
+                .map(|k| {
+                    let h = &map[*k];
+                    format!("{k} p50 {} p99 {}", h.p50_us(), h.p99_us())
+                })
+                .collect();
+            println!("latency {label} µs: {}", cells.join("; "));
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let requests: usize = args.get("requests", 32).unwrap();
+    let streams: usize = args.get("streams", 0).unwrap();
     let threads = cli_threads(args, 1);
     let backend = args.get_str("backend", "functional");
     // Validate the name up front (the worker factory runs too late for
@@ -203,37 +245,126 @@ fn cmd_serve(args: &Args) -> i32 {
         );
         return 2;
     }
-    // Print the plans the shard backends resolve for the served widths
-    // (representative 64x128x64 shape; the probe runs on this thread).
-    if let Some(probe) = software_backend(&backend, 1) {
-        for w in [8u32, 12, 16] {
-            if let Ok(plan) = probe.resolve_spec(64, 128, 64, w).and_then(|s| probe.plan(&s)) {
-                println!("plan w={w}: {}", plan.describe());
-            }
+    let window = match kmm::coordinator::server::parse_duration(&args.get_str("batch-window", "0"))
+    {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("--batch-window: {e}");
+            return 2;
+        }
+    };
+    let max_batch: usize = args.get("max-batch", 16).unwrap();
+    let queue_depth: usize = args
+        .get("queue-depth", pool::env_positive("KMM_QUEUE_DEPTH").unwrap_or(1024))
+        .unwrap();
+    let cfg = ServerConfig::default()
+        .workers(threads)
+        .max_batch(max_batch)
+        .batch_window(window)
+        .queue_depth(queue_depth);
+    // Print the plans the shard backends resolve for the served widths,
+    // and what coalescing is worth on them (the probe runs on this
+    // thread; representative decode shape for the streams demo).
+    let probe = software_backend(&backend, 1).expect("name validated above");
+    let preferred = probe.preferred_plan();
+    for w in [8u32, 12, 16] {
+        if let Ok(plan) = probe.resolve_spec(64, 128, 64, w).and_then(|s| probe.plan(&s)) {
+            println!("plan w={w}: {}", plan.describe());
+        }
+    }
+    if streams > 0 {
+        let spec = kmm::arch::mxu::SystolicSpec::paper_64();
+        for (w, mode) in [(8u32, kmm::arch::scalable::Mode::Mm1), (12, kmm::arch::scalable::Mode::Kmm2)] {
+            let est = kmm::coordinator::scheduler::estimate_coalescing(1, 96, 64, mode, streams, &spec);
+            println!(
+                "coalescing estimate w={w} ({}): {}x at batch {streams} (solo {} cycles, stacked {:.1}/req)",
+                mode.name(),
+                (est.speedup * 100.0).round() / 100.0,
+                est.per_request_cycles,
+                est.batched_cycles_per_request,
+            );
         }
     }
     // `--threads` shards the server: N workers, each owning its own
     // single-threaded backend instance (shard-level parallelism).
     let mut srv = Server::start(
         move || software_backend(&backend, 1).expect("name validated above"),
-        ServerConfig::default().workers(threads),
+        cfg,
     );
     let mut rng = Rng::new(5);
-    let mut rxs = Vec::new();
-    for i in 0..requests {
-        let w = [8u32, 12, 16][i % 3];
-        let a = Mat::random(rng.range(16, 128), rng.range(16, 256), w, &mut rng);
-        let b = Mat::random(a.cols, rng.range(16, 128), w, &mut rng);
-        rxs.push(srv.submit(a, b, w).1);
-    }
-    let mut cycles = 0;
-    for rx in rxs {
-        let resp = rx.recv().unwrap();
-        if resp.result.is_err() {
-            eprintln!("request {} rejected", resp.id);
-            return 1;
+    let mut cycles = 0u64;
+    if streams == 0 {
+        // Classic demo: a burst of raw mixed-precision requests.
+        let mut rxs = Vec::new();
+        for i in 0..requests {
+            let w = [8u32, 12, 16][i % 3];
+            let a = Mat::random(rng.range(16, 128), rng.range(16, 256), w, &mut rng);
+            let b = Mat::random(a.cols, rng.range(16, 128), w, &mut rng);
+            rxs.push(srv.submit(a, b, w).1);
         }
-        cycles += resp.cycles;
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            if resp.result.is_err() {
+                eprintln!("request {} rejected", resp.id);
+                return 1;
+            }
+            cycles += resp.cycles;
+        }
+    } else {
+        // Batching demo: `streams` closed-loop decode-shaped (m=1)
+        // streams against registered weights — the traffic the
+        // coalescing queue exists for. try_enqueue admission keeps at
+        // most `streams` requests in flight; a Busy reply drains one
+        // response and retries.
+        use kmm::coordinator::server::Submission;
+        use std::collections::VecDeque;
+        let widths = [8u32, 12, 16];
+        let (k, n) = (96usize, 64usize);
+        let mut weights = Vec::new();
+        for &w in &widths {
+            let b = Mat::random(k, n, w, &mut rng);
+            let h = match srv.register_weight_with_plan(b.clone(), w, preferred) {
+                Ok(h) => h,
+                Err(e) => {
+                    eprintln!("weight registration failed: {e:#}");
+                    return 1;
+                }
+            };
+            weights.push((b, h));
+        }
+        let mut inflight: VecDeque<(Mat, usize, std::sync::mpsc::Receiver<_>)> = VecDeque::new();
+        let (mut submitted, mut served) = (0usize, 0usize);
+        while served < requests {
+            if submitted < requests && inflight.len() < streams.max(1) {
+                let wi = submitted % weights.len();
+                let a = Mat::random(1, k, widths[wi], &mut rng);
+                if let Ok((_, rx)) = srv.try_enqueue(Submission::Packed {
+                    a: a.clone(),
+                    handle: weights[wi].1,
+                }) {
+                    inflight.push_back((a, wi, rx));
+                    submitted += 1;
+                    continue;
+                }
+                // Busy: fall through and drain one response first.
+            }
+            let (a, wi, rx) = inflight.pop_front().expect("in-flight request to drain");
+            let resp = rx.recv().unwrap();
+            match resp.result {
+                Ok(c) => {
+                    if c != matmul_oracle(&a, &weights[wi].0) {
+                        eprintln!("request {} served inexactly", resp.id);
+                        return 1;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("request {} rejected: {e}", resp.id);
+                    return 1;
+                }
+            }
+            cycles += resp.cycles;
+            served += 1;
+        }
     }
     let stats = srv.shutdown();
     println!(
@@ -246,6 +377,7 @@ fn cmd_serve(args: &Args) -> i32 {
         stats.by_lane,
         cycles as f64 / 326e6 * 1e3
     );
+    print_serve_stats(&stats);
     0
 }
 

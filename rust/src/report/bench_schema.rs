@@ -1,11 +1,12 @@
-//! Schema validation for the hotpath bench artifact
-//! (`BENCH_hotpath.json`, **schema 4**).
+//! Schema validation for the bench artifacts: `BENCH_hotpath.json`
+//! (**schema 4**) and the serve load-generator's `BENCH_serve.json`
+//! (**schema 1**, [`validate_serve`]).
 //!
-//! One checker shared by the bench binary (which runs it on the
-//! document it is about to write) and the golden-file integration test
-//! (which runs it on the checked-in example): the schema the CI
-//! artifact claims is the schema the repo actually enforces, and the
-//! two consumers cannot drift apart.
+//! One checker per artifact, shared by the bench binary (which runs it
+//! on the document it is about to write) and the golden-file
+//! integration test (which runs it on the checked-in example): the
+//! schema the CI artifact claims is the schema the repo actually
+//! enforces, and the two consumers cannot drift apart.
 //!
 //! Schema history:
 //! - 1: per-section medians + the headline speedup ratios
@@ -184,6 +185,103 @@ pub fn validate_hotpath_str(text: &str) -> Result<Json, String> {
     Ok(doc)
 }
 
+/// The serve-bench schema revision this crate emits and validates
+/// (`BENCH_serve.json`, written by `benches/serve_load.rs`).
+///
+/// Schema history:
+/// - 1: closed-loop load-generator sections (per-section latency
+///   percentiles in µs on top of the hotpath section fields) and the
+///   `batched_vs_unbatched_m1` coalescing-gate speedup
+pub const SERVE_SCHEMA: i64 = 1;
+
+/// Speedup keys every serve document must carry. The first is the CI
+/// gate: batched throughput over unbatched at m=1 streams.
+pub const SERVE_REQUIRED_SPEEDUPS: &[&str] = &["batched_vs_unbatched_m1"];
+
+/// Validate one serve section: the hotpath section shape plus
+/// per-section enqueue→response latency percentiles (µs, ordered).
+fn validate_serve_section(i: usize, s: &Json) -> Result<(), String> {
+    validate_section(i, s)?;
+    let ctx = |field: &str| format!("sections[{i}].{field}");
+    let mut last = (0i64, "p50_us");
+    for field in ["p50_us", "p95_us", "p99_us"] {
+        let v = match s.get(field).and_then(Json::as_i64) {
+            Some(v) if v >= 0 => v,
+            other => {
+                return Err(format!("{} must be an integer >= 0, got {other:?}", ctx(field)));
+            }
+        };
+        if v < last.0 {
+            return Err(format!(
+                "{} must be >= {} (percentiles are ordered)",
+                ctx(field),
+                last.1
+            ));
+        }
+        last = (v, field);
+    }
+    Ok(())
+}
+
+/// Validate a parsed `BENCH_serve.json` document against
+/// [`SERVE_SCHEMA`]. Shared by the bench's self-check and the
+/// golden-file integration test, exactly like [`validate_hotpath`].
+pub fn validate_serve(doc: &Json) -> Result<(), String> {
+    if doc.as_object().is_none() {
+        return Err("top level must be an object".to_string());
+    }
+    if doc.get("bench").and_then(Json::as_str) != Some("serve") {
+        return Err("`bench` must be the string \"serve\"".to_string());
+    }
+    match doc.get("schema").and_then(Json::as_i64) {
+        Some(s) if s == SERVE_SCHEMA => {}
+        other => return Err(format!("`schema` must be {SERVE_SCHEMA}, got {other:?}")),
+    }
+    for field in ["threads_max", "streams", "max_batch"] {
+        match doc.get(field).and_then(Json::as_i64) {
+            Some(v) if v >= 1 => {}
+            other => return Err(format!("`{field}` must be an integer >= 1, got {other:?}")),
+        }
+    }
+    match doc.get("batch_gate_retried") {
+        Some(Json::Bool(_)) => {}
+        _ => return Err("`batch_gate_retried` must be a bool".to_string()),
+    }
+    let secs = doc
+        .get("sections")
+        .and_then(Json::as_array)
+        .ok_or_else(|| "`sections` must be an array".to_string())?;
+    if secs.is_empty() {
+        return Err("`sections` must be non-empty".to_string());
+    }
+    for (i, s) in secs.iter().enumerate() {
+        validate_serve_section(i, s)?;
+    }
+    let speedups = doc
+        .get("speedups")
+        .and_then(Json::as_object)
+        .ok_or_else(|| "`speedups` must be an object".to_string())?;
+    for (key, v) in speedups {
+        match num(v) {
+            Some(r) if r.is_finite() && r >= 0.0 => {}
+            _ => return Err(format!("speedups.{key} must be a finite number >= 0")),
+        }
+    }
+    for key in SERVE_REQUIRED_SPEEDUPS {
+        if !speedups.contains_key(*key) {
+            return Err(format!("missing required speedup `{key}`"));
+        }
+    }
+    Ok(())
+}
+
+/// Parse *and* validate a serve document in one step.
+pub fn validate_serve_str(text: &str) -> Result<Json, String> {
+    let doc = Json::parse(text).map_err(|e| format!("parse error: {e}"))?;
+    validate_serve(&doc)?;
+    Ok(doc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,5 +400,113 @@ mod tests {
     fn malformed_text_is_a_parse_error() {
         assert!(validate_hotpath_str("{").unwrap_err().contains("parse error"));
         assert!(validate_hotpath_str("[]").unwrap_err().contains("object"));
+    }
+
+    /// The smallest serve document that passes.
+    fn minimal_serve_doc() -> Json {
+        let mut s = BTreeMap::new();
+        s.insert(
+            "name".to_string(),
+            Json::Str("batched m=1 x8 streams k=n=192 w8 (MACs/s)".to_string()),
+        );
+        s.insert("median_s".to_string(), Json::Float(0.25));
+        s.insert("ops_per_s".to_string(), Json::Float(3e7));
+        s.insert("iters".to_string(), Json::Int(3));
+        s.insert("threads".to_string(), Json::Int(2));
+        s.insert(
+            "shape".to_string(),
+            Json::Array(vec![Json::Int(1), Json::Int(192), Json::Int(192)]),
+        );
+        s.insert("w".to_string(), Json::Int(8));
+        s.insert("lane".to_string(), Json::Str("u16".to_string()));
+        s.insert("algo".to_string(), Json::Str("mm1".to_string()));
+        s.insert("p50_us".to_string(), Json::Int(120));
+        s.insert("p95_us".to_string(), Json::Int(350));
+        s.insert("p99_us".to_string(), Json::Int(800));
+        let mut speedups = BTreeMap::new();
+        for key in SERVE_REQUIRED_SPEEDUPS {
+            speedups.insert((*key).to_string(), Json::Float(1.8));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str("serve".to_string()));
+        top.insert("schema".to_string(), Json::Int(SERVE_SCHEMA));
+        top.insert("threads_max".to_string(), Json::Int(2));
+        top.insert("streams".to_string(), Json::Int(8));
+        top.insert("max_batch".to_string(), Json::Int(8));
+        top.insert("batch_gate_retried".to_string(), Json::Bool(false));
+        top.insert("sections".to_string(), Json::Array(vec![Json::Object(s)]));
+        top.insert("speedups".to_string(), Json::Object(speedups));
+        Json::Object(top)
+    }
+
+    #[test]
+    fn minimal_serve_document_passes_and_round_trips() {
+        let doc = minimal_serve_doc();
+        validate_serve(&doc).expect("minimal serve document is valid");
+        let reparsed = validate_serve_str(&doc.to_string()).expect("round trip");
+        assert_eq!(reparsed, doc);
+    }
+
+    #[test]
+    fn serve_violations_are_named() {
+        let strip = |key: &str| {
+            let mut doc = minimal_serve_doc();
+            if let Json::Object(m) = &mut doc {
+                m.remove(key);
+            }
+            doc
+        };
+        for key in ["schema", "streams", "max_batch", "batch_gate_retried", "sections", "speedups"]
+        {
+            let e = validate_serve(&strip(key)).unwrap_err();
+            assert!(e.contains(key), "{key}: {e}");
+        }
+
+        // A hotpath document is not a serve document (and vice versa).
+        let e = validate_serve(&minimal_doc()).unwrap_err();
+        assert!(e.contains("serve"), "{e}");
+        let e = validate_hotpath(&minimal_serve_doc()).unwrap_err();
+        assert!(e.contains("hotpath"), "{e}");
+
+        // Percentile fields must exist and be ordered.
+        let patch_section = |field: &str, v: Json| {
+            let mut doc = minimal_serve_doc();
+            if let Json::Object(m) = &mut doc {
+                if let Some(Json::Array(secs)) = m.get_mut("sections") {
+                    if let Json::Object(s0) = &mut secs[0] {
+                        s0.insert(field.to_string(), v);
+                    }
+                }
+            }
+            doc
+        };
+        let mut doc = minimal_serve_doc();
+        if let Json::Object(m) = &mut doc {
+            if let Some(Json::Array(secs)) = m.get_mut("sections") {
+                if let Json::Object(s0) = &mut secs[0] {
+                    s0.remove("p95_us");
+                }
+            }
+        }
+        let e = validate_serve(&doc).unwrap_err();
+        assert!(e.contains("p95_us"), "{e}");
+        let e = validate_serve(&patch_section("p99_us", Json::Int(10))).unwrap_err();
+        assert!(e.contains("ordered"), "{e}");
+        let e = validate_serve(&patch_section("p50_us", Json::Int(-1))).unwrap_err();
+        assert!(e.contains("p50_us"), "{e}");
+
+        // The CI-gate speedup is required.
+        let mut doc = minimal_serve_doc();
+        if let Json::Object(m) = &mut doc {
+            if let Some(Json::Object(sp)) = m.get_mut("speedups") {
+                sp.remove("batched_vs_unbatched_m1");
+            }
+        }
+        let e = validate_serve(&doc).unwrap_err();
+        assert!(e.contains("batched_vs_unbatched_m1"), "{e}");
+
+        // Malformed text is a parse error here too.
+        assert!(validate_serve_str("{").unwrap_err().contains("parse error"));
+        assert!(validate_serve_str("[]").unwrap_err().contains("object"));
     }
 }

@@ -85,6 +85,16 @@ pub fn default_threads() -> usize {
     env_threads_or(available_threads())
 }
 
+/// Read an arbitrary environment variable as a positive integer —
+/// `None` when unset or malformed (same acceptance rules as
+/// [`parse_threads`]). The serve CLI defaults its `--queue-depth`
+/// through `env_positive("KMM_QUEUE_DEPTH")`; unlike `KMM_THREADS`
+/// these auxiliary knobs fall back silently, since absence is the
+/// common case rather than a typo'd deployment.
+pub fn env_positive(var: &str) -> Option<usize> {
+    std::env::var(var).ok().and_then(|raw| parse_threads(&raw))
+}
+
 /// Resolve a thread budget with the precedence documented on
 /// [`env_threads_or`]: an explicit request always overrides
 /// `KMM_THREADS` (clamped to at least 1 — zero workers is meaningless),
@@ -248,6 +258,22 @@ mod tests {
         if let Some(v) = prev {
             std::env::set_var("KMM_THREADS", v);
         }
+    }
+
+    #[test]
+    fn env_positive_reads_arbitrary_variables() {
+        // A variable name no other test touches, so the env mutation
+        // cannot race the KMM_THREADS assertions.
+        let var = "KMM_POOL_TEST_ENV_POSITIVE";
+        std::env::remove_var(var);
+        assert_eq!(env_positive(var), None, "unset");
+        std::env::set_var(var, "128");
+        assert_eq!(env_positive(var), Some(128));
+        std::env::set_var(var, "0");
+        assert_eq!(env_positive(var), None, "zero is malformed");
+        std::env::set_var(var, "deep");
+        assert_eq!(env_positive(var), None, "non-numeric is malformed");
+        std::env::remove_var(var);
     }
 
     #[test]

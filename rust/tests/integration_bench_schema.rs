@@ -1,21 +1,25 @@
-//! Golden-file test for the hotpath bench artifact contract
-//! (`BENCH_hotpath.json`, schema 4): the checked-in example document
-//! must pass the same `report::bench_schema` validator the bench binary
-//! runs on its own output before writing it, round-trip through the
-//! crate's JSON codec idempotently, and malformed or truncated
-//! documents must yield errors, never panics.
+//! Golden-file tests for the bench artifact contracts
+//! (`BENCH_hotpath.json` schema 4 and `BENCH_serve.json` schema 1):
+//! each checked-in example document must pass the same
+//! `report::bench_schema` validator the bench binary runs on its own
+//! output before writing it, round-trip through the crate's JSON codec
+//! idempotently, and malformed or truncated documents must yield
+//! errors, never panics.
 //!
-//! The golden file pins the *external* contract: CI consumers diff the
-//! artifact by name-keyed sections and speedup ratios, so a field
-//! rename or a dropped crossover section shows up as a test diff here,
-//! not as silent drift in downstream trend lines.
+//! The golden files pin the *external* contract: CI consumers diff the
+//! artifacts by name-keyed sections and speedup ratios, so a field
+//! rename, a dropped crossover section, or a lost latency percentile
+//! shows up as a test diff here, not as silent drift in downstream
+//! trend lines.
 
 use kmm::report::bench_schema::{
-    validate_hotpath, validate_hotpath_str, CROSSOVER_ALGOS, HOTPATH_SCHEMA, REQUIRED_SPEEDUPS,
+    validate_hotpath, validate_hotpath_str, validate_serve_str, CROSSOVER_ALGOS, HOTPATH_SCHEMA,
+    REQUIRED_SPEEDUPS, SERVE_REQUIRED_SPEEDUPS, SERVE_SCHEMA,
 };
 use kmm::util::json::Json;
 
 const GOLDEN: &str = include_str!("golden/BENCH_hotpath.schema4.example.json");
+const SERVE_GOLDEN: &str = include_str!("golden/BENCH_serve.schema1.example.json");
 
 #[test]
 fn golden_document_passes_the_shared_validator() {
@@ -131,5 +135,110 @@ fn validator_mutations_verify_each_replacement_took_effect() {
         "[96, 96, 96]",
     ] {
         assert!(GOLDEN.contains(needle), "golden drifted: `{needle}` missing");
+    }
+}
+
+#[test]
+fn serve_golden_document_passes_the_shared_validator() {
+    let doc = validate_serve_str(SERVE_GOLDEN).expect("golden schema-1 serve document validates");
+    assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(SERVE_SCHEMA));
+    let speedups = doc.get("speedups").and_then(Json::as_object).unwrap();
+    for key in SERVE_REQUIRED_SPEEDUPS {
+        assert!(speedups.contains_key(*key), "golden lacks speedup `{key}`");
+    }
+    // The example documents the full section vocabulary the load
+    // generator emits: the gate pair, the paced sweep, and sharding.
+    let sections = doc.get("sections").and_then(Json::as_array).unwrap();
+    for needle in ["unbatched m=1", "batched m=1", "offered 500 qps", "shards"] {
+        assert!(
+            sections.iter().any(|s| {
+                s.get("name")
+                    .and_then(Json::as_str)
+                    .is_some_and(|n| n.contains(needle))
+            }),
+            "golden lacks a `{needle}` section"
+        );
+    }
+}
+
+#[test]
+fn serve_golden_document_round_trips_idempotently() {
+    let doc = validate_serve_str(SERVE_GOLDEN).unwrap();
+    let emitted = doc.to_string();
+    let back = validate_serve_str(&emitted).expect("emitted form validates");
+    assert_eq!(back, doc, "round trip is lossless");
+    assert_eq!(back.to_string(), emitted, "emission is idempotent");
+}
+
+#[test]
+fn malformed_serve_documents_error_instead_of_panicking() {
+    for doc in ["", "{", "not json", "[1, 2"] {
+        let e = validate_serve_str(doc).unwrap_err();
+        assert!(e.contains("parse error"), "{doc:?}: {e}");
+    }
+    let bad_docs: &[(&str, &str)] = &[
+        ("[]", "object"),
+        ("{}", "bench"),
+        (r#"{"bench": "hotpath"}"#, "serve"),
+        (
+            &SERVE_GOLDEN.replacen("\"schema\": 1", "\"schema\": 2", 1),
+            "must be 1",
+        ),
+        // Latency percentiles are load-bearing: absent, negative, or
+        // out-of-order values are refused by name.
+        (
+            &SERVE_GOLDEN.replacen("\"p95_us\": 110,\n      ", "", 1),
+            "p95_us",
+        ),
+        (
+            &SERVE_GOLDEN.replacen("\"p50_us\": 34", "\"p50_us\": -1", 1),
+            "p50_us",
+        ),
+        (
+            &SERVE_GOLDEN.replacen("\"p99_us\": 244", "\"p99_us\": 9", 1),
+            "percentiles are ordered",
+        ),
+        (
+            &SERVE_GOLDEN.replacen("\"streams\": 8", "\"streams\": 0", 1),
+            "streams",
+        ),
+        (
+            &SERVE_GOLDEN.replacen(
+                "\"batch_gate_retried\": false",
+                "\"batch_gate_retried\": \"no\"",
+                1,
+            ),
+            "batch_gate_retried",
+        ),
+        // The CI gate's ratio renamed away.
+        (
+            &SERVE_GOLDEN.replacen("batched_vs_unbatched_m1\"", "batched_vs_unbatched\"", 1),
+            "batched_vs_unbatched_m1",
+        ),
+    ];
+    for (doc, fragment) in bad_docs {
+        let e = validate_serve_str(doc).unwrap_err();
+        assert!(e.contains(fragment), "expected `{fragment}` in: {e}");
+    }
+    for cut in [1, SERVE_GOLDEN.len() / 2, SERVE_GOLDEN.len() - 2] {
+        assert!(validate_serve_str(&SERVE_GOLDEN[..cut]).is_err(), "cut at {cut}");
+    }
+}
+
+#[test]
+fn serve_validator_mutations_verify_each_replacement_took_effect() {
+    for needle in [
+        "\"schema\": 1",
+        "\"p95_us\": 110,\n      ",
+        "\"p50_us\": 34",
+        "\"p99_us\": 244",
+        "\"streams\": 8",
+        "\"batch_gate_retried\": false",
+        "batched_vs_unbatched_m1\"",
+    ] {
+        assert!(
+            SERVE_GOLDEN.contains(needle),
+            "serve golden drifted: `{needle}` missing"
+        );
     }
 }

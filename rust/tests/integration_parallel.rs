@@ -192,10 +192,7 @@ fn sharded_server_with_parallel_backend_serves_exactly() {
     // engine — shard parallelism × engine parallelism, still bit-exact.
     let mut srv = Server::start(
         || Box::new(FastBackend::with_threads(FastAlgo::Kmm, 2)) as Box<dyn GemmBackend>,
-        ServerConfig {
-            batch_max: 4,
-            workers: 3,
-        },
+        ServerConfig::default().max_batch(4).workers(3),
     );
     let mut rng = Rng::new(31);
     let mut expected = Vec::new();

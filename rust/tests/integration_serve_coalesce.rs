@@ -1,0 +1,160 @@
+//! Coalescing batch-queue differential (ISSUE 7 acceptance): N
+//! same-shape submissions pushed through the linger-window batch queue
+//! must be served **bit-exactly** like N independent
+//! `submit_packed_sync` calls on a drain-only server, and both must
+//! equal the exact tallied reference `algo::mm1` — across element
+//! lanes (widths), decompositions (fast-mm / fast-kmm /
+//! fast-strassen-kmm), shard counts, and engine thread counts.
+//! Coalescing may change how many dispatches serve the traffic; it may
+//! never change a response field.
+
+use kmm::algo::matrix::Mat;
+use kmm::algo::mm1;
+use kmm::algo::opcount::Tally;
+use kmm::coordinator::dispatch::{FastAlgo, FastBackend, GemmBackend};
+use kmm::coordinator::server::{Server, ServerConfig, Submission};
+use kmm::util::prop::{forall, prop_assert_eq, Config};
+use kmm::util::rng::Rng;
+use std::time::Duration;
+
+const ALGOS: [FastAlgo; 3] = [FastAlgo::Mm, FastAlgo::Kmm, FastAlgo::StrassenKmm];
+
+fn start(algo: FastAlgo, threads: usize, cfg: ServerConfig) -> Server {
+    Server::start(
+        move || Box::new(FastBackend::with_threads(algo, threads)) as Box<dyn GemmBackend>,
+        cfg,
+    )
+}
+
+/// `algo::mm1` (exact, tallied) as flat `i128`s.
+fn mm1_flat(a: &Mat, b: &Mat, w: u32) -> Vec<i128> {
+    let mut tally = Tally::new();
+    mm1(a, b, w, &mut tally).to_i128_vec().expect("fits i128")
+}
+
+#[test]
+fn coalesced_serving_differential_prop() {
+    forall(Config::default().cases(24), |rng| {
+        let algo = *rng.pick(&ALGOS);
+        let w = *rng.pick(&[8u32, 12, 16, 32]);
+        let shards = *rng.pick(&[1usize, 2]);
+        let threads = *rng.pick(&[1usize, 2]);
+        let (k, n) = (rng.range(1, 24), rng.range(1, 16));
+        let reqs = rng.range(3, 10);
+        let b = Mat::random(k, n, w, rng);
+        let acts: Vec<Mat> = (0..reqs)
+            .map(|_| Mat::random(rng.range(1, 4), k, w, rng))
+            .collect();
+        let plan = FastBackend::new(algo).preferred_plan();
+
+        // All requests enqueued before any response is drained, so the
+        // linger window actually sees concurrent same-handle traffic.
+        let mut batched = start(
+            algo,
+            threads,
+            ServerConfig::default()
+                .workers(shards)
+                .max_batch(reqs)
+                .batch_window(Duration::from_millis(20)),
+        );
+        let hb = batched.register_weight_with_plan(b.clone(), w, plan).unwrap();
+        let rxs: Vec<_> = acts
+            .iter()
+            .map(|a| {
+                batched
+                    .enqueue(Submission::Packed {
+                        a: a.clone(),
+                        handle: hb,
+                    })
+                    .1
+            })
+            .collect();
+        let batched_resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+
+        // The drain-only control: one dispatch per request, no window.
+        let mut solo = start(algo, threads, ServerConfig::default().max_batch(1));
+        let hs = solo.register_weight_with_plan(b.clone(), w, plan).unwrap();
+        let label = format!("{algo:?} w={w} shards={shards} t={threads} k={k} n={n}");
+        for (a, resp) in acts.iter().zip(&batched_resps) {
+            let solo_resp = solo.submit_packed_sync(a.clone(), hs);
+            let got = resp.result.as_ref().expect("batched request serves");
+            let want = solo_resp.result.expect("solo request serves");
+            prop_assert_eq(got.clone(), want, &format!("batched == solo ({label})"))?;
+            prop_assert_eq(
+                got.to_i128_vec().unwrap(),
+                mm1_flat(a, &b, w),
+                &format!("batched == algo::mm1 ({label})"),
+            )?;
+            // The whole response must match, not just the numerics.
+            prop_assert_eq(resp.mode, solo_resp.mode, &format!("mode ({label})"))?;
+            prop_assert_eq(resp.lane, solo_resp.lane, &format!("lane ({label})"))?;
+            prop_assert_eq(resp.cycles, solo_resp.cycles, &format!("cycles ({label})"))?;
+        }
+        let bstats = batched.shutdown();
+        let sstats = solo.shutdown();
+        prop_assert_eq(bstats.requests, reqs as u64, "batched serves all")?;
+        prop_assert_eq(bstats.rejected, 0, "no batched rejections")?;
+        prop_assert_eq(bstats.weight_hits, reqs as u64, "every request hits the handle")?;
+        prop_assert_eq(sstats.requests, reqs as u64, "solo serves all")?;
+        prop_assert_eq(
+            bstats.latency.count(),
+            reqs as u64,
+            "one latency sample per batched request",
+        )
+    });
+}
+
+#[test]
+fn coalescing_actually_batches_decode_traffic_per_algo() {
+    // Deterministic shards=1 variant: with a wide window and every
+    // request enqueued up front, the queue must actually coalesce
+    // (counters prove it) and stay bit-exact — for every decomposition.
+    for algo in ALGOS {
+        let w = 16u32;
+        let (k, n) = (32usize, 16usize);
+        let reqs = 8usize;
+        let mut rng = Rng::new(900 + w as u64);
+        let b = Mat::random(k, n, w, &mut rng);
+        let plan = FastBackend::new(algo).preferred_plan();
+        let mut srv = start(
+            algo,
+            1,
+            ServerConfig::default()
+                .max_batch(reqs)
+                .batch_window(Duration::from_millis(200)),
+        );
+        let h = srv.register_weight_with_plan(b.clone(), w, plan).unwrap();
+        let acts: Vec<Mat> = (0..reqs).map(|_| Mat::random(1, k, w, &mut rng)).collect();
+        let rxs: Vec<_> = acts
+            .iter()
+            .map(|a| {
+                srv.enqueue(Submission::Packed {
+                    a: a.clone(),
+                    handle: h,
+                })
+                .1
+            })
+            .collect();
+        for (a, rx) in acts.iter().zip(rxs) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(
+                resp.result.expect("serves").to_i128_vec().unwrap(),
+                mm1_flat(a, &b, w),
+                "{algo:?}"
+            );
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, reqs as u64, "{algo:?}");
+        assert!(
+            stats.coalesced_requests >= 2,
+            "{algo:?}: expected coalescing, got {} coalesced requests in {} batches",
+            stats.coalesced_requests,
+            stats.coalesced_batches
+        );
+        assert!(stats.coalesced_batches >= 1, "{algo:?}");
+        // Percentiles exist and are ordered for the traffic just served.
+        let l = &stats.latency;
+        assert_eq!(l.count(), reqs as u64, "{algo:?}");
+        assert!(l.p50_us() <= l.p95_us() && l.p95_us() <= l.p99_us(), "{algo:?}");
+    }
+}

@@ -60,10 +60,7 @@ fn server_serves_full_mixed_workload_exactly() {
             })
         },
         // Two shards exercise the round-robin dispatch end to end.
-        ServerConfig {
-            batch_max: 8,
-            workers: 2,
-        },
+        ServerConfig::default().max_batch(8).workers(2),
     );
     let wl = synthetic_ragged("serving", 24, 60, 0, 77);
     let mut rng = Rng::new(78);
