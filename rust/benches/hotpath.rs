@@ -21,6 +21,10 @@
 //!      and the Strassen–Karatsuba hybrid on one divisible shape, so
 //!      the artifact records where each driver wins (no gate: the
 //!      winner is hardware- and shape-dependent)
+//!  10. SIMD vs scalar kernels        — the narrow lanes' 8×4 tile loop
+//!      on the host-resolved kernel (AVX2/NEON when present) vs the
+//!      same plan forced onto the portable scalar kernel, on the
+//!      160³ shapes (w = 8 → `u16`, w = 16 → `u32`)
 //!
 //! Every engine section executes through build-once `MatmulPlan`s —
 //! the same path the serving layers take — with the plan constructed
@@ -36,18 +40,25 @@
 //! always-`u64` lane (same one-retry discipline). Section 8 adds the
 //! plan-reuse gate: reusing a bound plan must be at least as fast
 //! (≥ 1.0×) as rebuilding it per call — the hot-path saving the plan
-//! API exists for — with the same one-retry discipline.
+//! API exists for — with the same one-retry discipline. Section 10
+//! adds the SIMD kernel gate: when plan building resolved a SIMD
+//! kernel for the `u16` lane (AVX2/NEON present, no
+//! `KMM_KERNEL=scalar` override), it must beat the scalar kernel by
+//! ≥ 1.2× (same one-retry discipline); on scalar-only hosts the gate
+//! is recorded as skipped.
 //!
 //! Every section is recorded into `BENCH_hotpath.json` (override the
-//! path with `KMM_BENCH_OUT`): **schema 4** — per-section median
+//! path with `KMM_BENCH_OUT`): **schema 5** — per-section median
 //! seconds, Mops/s, iteration count, thread count, GEMM shape, the
 //! element lane that ran (`"lane": "u16"|"u32"|"u64"`, `null` for
-//! non-engine sections), and the resolved algorithm (`"algo"`: the
-//! `PlanAlgo` label, `null` outside the plan-routed engine) — plus the
-//! headline speedup ratios, now including the `crossover_*` pair from
-//! section 9. The file is parsed back through `util::json` and checked
-//! against the shared `report::bench_schema` validator (the same one
-//! the golden-file test runs) before the bench exits.
+//! non-engine sections), the resolved algorithm (`"algo"`: the
+//! `PlanAlgo` label, `null` outside the plan-routed engine), and the
+//! resolved microkernel (`"kernel"`: `"8x4"`, `"avx2-8x4"`,
+//! `"neon-8x4"`, `null` outside the blocked engine) — plus the
+//! headline speedup ratios, now including the `simd_vs_scalar_*` pair
+//! from section 10. The file is parsed back through `util::json` and
+//! checked against the shared `report::bench_schema` validator (the
+//! same one the golden-file test runs) before the bench exits.
 //!
 //! Run: `cargo bench --bench hotpath [-- --threads N]`
 
@@ -82,6 +93,10 @@ struct Section {
     /// The resolved algorithm label (`PlanAlgo` display form, schema
     /// 4); `None` for sections outside the plan-routed engine.
     algo: Option<String>,
+    /// The resolved microkernel name (`MatmulPlan::kernel_name`, schema
+    /// 5: `"8x4"`, `"avx2-8x4"`, `"neon-8x4"`); `None` for sections
+    /// outside the blocked engine.
+    kernel: Option<&'static str>,
 }
 
 impl Section {
@@ -114,6 +129,11 @@ impl Section {
                 .as_ref()
                 .map_or(Json::Null, |a| Json::Str(a.clone())),
         );
+        m.insert(
+            "kernel".to_string(),
+            self.kernel
+                .map_or(Json::Null, |k| Json::Str(k.to_string())),
+        );
         Json::Object(m)
     }
 }
@@ -131,6 +151,7 @@ fn bench(
     w: u32,
     lane: Option<kmm::fast::LaneId>,
     algo: Option<String>,
+    kernel: Option<&'static str>,
     mut f: impl FnMut() -> u64,
 ) -> f64 {
     let mut times = Vec::with_capacity(iters);
@@ -154,6 +175,7 @@ fn bench(
         w,
         lane,
         algo,
+        kernel,
     });
     med
 }
@@ -200,6 +222,7 @@ fn main() {
         8,
         None,
         None,
+        None,
         || {
             let out = spec.tile_product(&a, &b);
             std::hint::black_box(&out);
@@ -220,6 +243,7 @@ fn main() {
         12,
         None,
         None,
+        None,
         || {
             let (c, _) = arch.gemm(&a2, &b2, 12).unwrap();
             std::hint::black_box(&c);
@@ -236,6 +260,7 @@ fn main() {
         1,
         (0, 0, 0),
         12,
+        None,
         None,
         None,
         || {
@@ -255,6 +280,7 @@ fn main() {
         1,
         (256, 256, 256),
         16,
+        None,
         None,
         None,
         || {
@@ -290,6 +316,7 @@ fn main() {
         w,
         Some(plan_mm16.lane()),
         Some(plan_mm16.algo().to_string()),
+        Some(plan_mm16.kernel_name()),
         || {
             let c = plan_mm16.execute(fa.data(), fb.data());
             std::hint::black_box(&c);
@@ -305,6 +332,7 @@ fn main() {
         w,
         Some(plan_kmm16.lane()),
         Some(plan_kmm16.algo().to_string()),
+        Some(plan_kmm16.kernel_name()),
         || {
             let c = plan_kmm16.execute(fa.data(), fb.data());
             std::hint::black_box(&c);
@@ -318,6 +346,7 @@ fn main() {
         1,
         (d, d, d),
         w,
+        None,
         None,
         None,
         || {
@@ -334,6 +363,7 @@ fn main() {
         1,
         (d, d, d),
         w,
+        None,
         None,
         None,
         || {
@@ -382,6 +412,7 @@ fn main() {
         w,
         Some(plan_mm_1.lane()),
         Some(plan_mm_1.algo().to_string()),
+        Some(plan_mm_1.kernel_name()),
         || {
             let c = plan_mm_1.execute(pa.data(), pb.data());
             std::hint::black_box(&c);
@@ -401,6 +432,7 @@ fn main() {
             w,
             Some(plan_mm_n.lane()),
             Some(plan_mm_n.algo().to_string()),
+            Some(plan_mm_n.kernel_name()),
             || {
                 let c = plan_mm_n.execute(pa.data(), pb.data());
                 std::hint::black_box(&c);
@@ -419,6 +451,7 @@ fn main() {
         w,
         Some(plan_kmm_1.lane()),
         Some(plan_kmm_1.algo().to_string()),
+        Some(plan_kmm_1.kernel_name()),
         || {
             let c = plan_kmm_1.execute(pa.data(), pb.data());
             std::hint::black_box(&c);
@@ -435,6 +468,7 @@ fn main() {
             w,
             Some(plan_kmm_n.lane()),
             Some(plan_kmm_n.algo().to_string()),
+            Some(plan_kmm_n.kernel_name()),
             || {
                 let c = plan_kmm_n.execute(pa.data(), pb.data());
                 std::hint::black_box(&c);
@@ -490,6 +524,7 @@ fn main() {
         w8,
         Some(narrow),
         Some(plan_narrow.algo().to_string()),
+        Some(plan_narrow.kernel_name()),
         || {
             let c = plan_narrow.execute(la.data(), lb.data());
             std::hint::black_box(&c);
@@ -505,6 +540,7 @@ fn main() {
         w8,
         Some(fast::LaneId::U64),
         Some(plan_wide.algo().to_string()),
+        Some(plan_wide.kernel_name()),
         || {
             let c = plan_wide.execute(la.data(), lb.data());
             std::hint::black_box(&c);
@@ -543,6 +579,7 @@ fn main() {
         bw,
         Some(bound.lane()),
         Some(bound_spec.algo.to_string()),
+        Some(bound.plan().kernel_name()),
         || {
             let c = bound.execute(ba.data());
             std::hint::black_box(&c);
@@ -558,6 +595,7 @@ fn main() {
         bw,
         Some(bound.lane()),
         Some(bound_spec.algo.to_string()),
+        Some(bound.plan().kernel_name()),
         || {
             let fresh = MatmulPlan::build(bound_spec).expect("validated above").bind_b(bb.data());
             let c = fresh.execute(ba.data());
@@ -601,6 +639,7 @@ fn main() {
             xw,
             Some(plan.lane()),
             Some(label.clone()),
+            Some(plan.kernel_name()),
             || {
                 let c = plan.execute(xa.data(), xb.data());
                 std::hint::black_box(&c);
@@ -614,6 +653,72 @@ fn main() {
     println!(
         "crossover: strassen[1] vs mm {x_strassen_vs_mm:>5.2}x, \
          strassen-kmm[1,2] vs kmm[2] {x_hybrid_vs_kmm:>5.2}x"
+    );
+
+    // 10. SIMD vs scalar kernels: the plan-resolved native kernel
+    //     (AVX2/NEON when the host has it) vs the same plans forced
+    //     onto the portable scalar kernel via `with_kernel` — the
+    //     dispatch the plan layer performs at build time, measured.
+    //     Reuses the 160^3 operands (w = 8 runs the u16 lane, w = 16
+    //     the u32 lane); the native side reuses sections 6/7's plans
+    //     and measurements, so only the scalar side is new wall time.
+    let native_u16 = plan_narrow.kernel_name();
+    let native_u32 = plan_mm_1.kernel_name();
+    println!(
+        "-- SIMD vs scalar kernels (160^3; u16 native {native_u16}, u32 native {native_u32}) --"
+    );
+    let plan_scalar_u16 = MatmulPlan::build(PlanSpec::mm(dp, dp, dp, w8).with_threads(1))
+        .expect("w=8 in window")
+        .with_kernel(fast::KernelSel::Scalar);
+    let plan_scalar_u32 = MatmulPlan::build(PlanSpec::mm(dp, dp, dp, w).with_threads(1))
+        .expect("w=16 in window")
+        .with_kernel(fast::KernelSel::Scalar);
+    let t_scalar_u16 = bench(
+        &mut sections,
+        "fast-MM 160^3 w8 kernel=scalar (MACs/s)",
+        10,
+        1,
+        (dp, dp, dp),
+        w8,
+        Some(plan_scalar_u16.lane()),
+        Some(plan_scalar_u16.algo().to_string()),
+        Some(plan_scalar_u16.kernel_name()),
+        || {
+            let c = plan_scalar_u16.execute(la.data(), lb.data());
+            std::hint::black_box(&c);
+            pmacs
+        },
+    );
+    let t_scalar_u32 = bench(
+        &mut sections,
+        "fast-MM 160^3 w16 kernel=scalar (MACs/s)",
+        10,
+        1,
+        (dp, dp, dp),
+        w,
+        Some(plan_scalar_u32.lane()),
+        Some(plan_scalar_u32.algo().to_string()),
+        Some(plan_scalar_u32.kernel_name()),
+        || {
+            let c = plan_scalar_u32.execute(pa.data(), pb.data());
+            std::hint::black_box(&c);
+            pmacs
+        },
+    );
+    println!(
+        "simd vs scalar: u16 ({native_u16}) {:>5.2}x, u32 ({native_u32}) {:>5.2}x",
+        t_scalar_u16 / t_lane_narrow,
+        t_scalar_u32 / t_mm_1
+    );
+    assert_eq!(
+        plan_scalar_u16.execute(la.data(), lb.data()),
+        plan_narrow.execute(la.data(), lb.data()),
+        "scalar and native kernels must be bit-exact (u16 lane)"
+    );
+    assert_eq!(
+        plan_scalar_u32.execute(pa.data(), pb.data()),
+        plan_mm_1.execute(pa.data(), pb.data()),
+        "scalar and native kernels must be bit-exact (u32 lane)"
     );
 
     // ---- the speedup gate measurement ---------------------------------
@@ -703,6 +808,35 @@ fn main() {
         plan_gate_ok = g_plan_reuse * PLAN_MARGIN <= g_plan_rebuild;
     }
 
+    // ---- the SIMD kernel gate measurement ------------------------------
+    // Enforced only when plan building resolved a SIMD kernel for the
+    // u16 lane (AVX2 or NEON present and no KMM_KERNEL=scalar
+    // override): the vector kernel must beat the portable scalar one by
+    // >= 1.2x on the 160^3 w=8 section — a small fraction of what the
+    // ISA promises, so only a real dispatch regression (or a
+    // scalar-speed SIMD kernel) can trip it. Same one-retry discipline;
+    // scalar-only hosts record the gate as skipped.
+    const SIMD_MARGIN: f64 = 1.2;
+    let simd_gated = plan_narrow.kernel() == fast::KernelSel::Simd;
+    let (mut g_simd_u16, mut g_scalar_u16) = (t_lane_narrow, t_scalar_u16);
+    let mut simd_retried = false;
+    let mut simd_gate_ok = !simd_gated || g_simd_u16 * SIMD_MARGIN < g_scalar_u16;
+    if !simd_gate_ok {
+        println!("simd gate missed on the first sample; re-measuring once (noisy runner?)");
+        simd_retried = true;
+        g_simd_u16 = time_median(10, || {
+            std::hint::black_box(plan_narrow.execute(la.data(), lb.data()));
+        });
+        g_scalar_u16 = time_median(10, || {
+            std::hint::black_box(plan_scalar_u16.execute(la.data(), lb.data()));
+        });
+        println!(
+            "retry ratio: {native_u16} {:.2}x vs scalar",
+            g_scalar_u16 / g_simd_u16
+        );
+        simd_gate_ok = g_simd_u16 * SIMD_MARGIN < g_scalar_u16;
+    }
+
     // ---- machine-readable output --------------------------------------
     let mut speedups = BTreeMap::new();
     speedups.insert(
@@ -737,16 +871,26 @@ fn main() {
         "crossover_strassen_kmm_vs_kmm".to_string(),
         Json::Float(finite(x_hybrid_vs_kmm)),
     );
+    speedups.insert(
+        "simd_vs_scalar_u16".to_string(),
+        Json::Float(finite(g_scalar_u16 / g_simd_u16)),
+    );
+    speedups.insert(
+        "simd_vs_scalar_u32".to_string(),
+        Json::Float(finite(t_scalar_u32 / t_mm_1)),
+    );
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
-    // Schema 4: schema 3 plus per-section "algo" and the algorithm-
-    // crossover sections with their speedup pair (see
+    // Schema 5: schema 4 plus per-section "kernel" and the
+    // simd-vs-scalar sections with their speedup pair (see
     // `report::bench_schema` for the enforced contract).
     top.insert("schema".to_string(), Json::Int(bench_schema::HOTPATH_SCHEMA));
     top.insert("threads_max".to_string(), Json::Int(par as i64));
     top.insert("speedup_gate_retried".to_string(), Json::Bool(retried));
     top.insert("lane_gate_retried".to_string(), Json::Bool(lane_retried));
     top.insert("plan_gate_retried".to_string(), Json::Bool(plan_retried));
+    top.insert("simd_gate_retried".to_string(), Json::Bool(simd_retried));
+    top.insert("simd_gate_enforced".to_string(), Json::Bool(simd_gated));
     top.insert(
         "sections".to_string(),
         Json::Array(sections.iter().map(Section::to_json).collect()),
@@ -755,7 +899,7 @@ fn main() {
     let doc = Json::Object(top).to_string();
 
     // Self-validate: the emitted document must round-trip through the
-    // crate's own parser, satisfy the shared schema-4 contract (the
+    // crate's own parser, satisfy the shared schema-5 contract (the
     // same validator the golden-file test runs), and cover both thread
     // counts for both drivers.
     let parsed = Json::parse(&doc).expect("BENCH_hotpath.json must parse via util::json");
@@ -808,6 +952,31 @@ fn main() {
             .is_some(),
         "schema 3 requires the plan_reuse_vs_rebuild speedup"
     );
+    // Schema 5: every section records its kernel (string or null), both
+    // sides of the simd-vs-scalar comparison are present, and so are
+    // both of its speedups.
+    assert!(
+        secs.iter().all(|s| s.get("kernel").is_some()),
+        "schema 5 requires a kernel field on every section"
+    );
+    for w_kernel in [8i64, 16] {
+        assert!(
+            secs.iter().any(|s| {
+                s.get("w").and_then(Json::as_i64) == Some(w_kernel)
+                    && s.get("kernel").and_then(Json::as_str) == Some("8x4")
+                    && s.get("name").and_then(Json::as_str).is_some_and(|n| {
+                        n.contains("kernel=scalar")
+                    })
+            }),
+            "missing scalar-kernel section at w={w_kernel}"
+        );
+    }
+    for key in ["simd_vs_scalar_u16", "simd_vs_scalar_u32"] {
+        assert!(
+            parsed.get("speedups").and_then(|s| s.get(key)).is_some(),
+            "schema 5 requires the {key} speedup"
+        );
+    }
     let out_path =
         std::env::var("KMM_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     std::fs::write(&out_path, &doc).expect("write bench json");
@@ -832,4 +1001,15 @@ fn main() {
         g_plan_rebuild / g_plan_reuse
     );
     println!("plan reuse beats per-call rebuild: OK");
+    if simd_gated {
+        assert!(
+            simd_gate_ok,
+            "the resolved SIMD kernel ({native_u16}) must beat the scalar kernel by \
+             >= {SIMD_MARGIN}x at w=8 on 160^3 (after one retry); got {:.3}x",
+            g_scalar_u16 / g_simd_u16
+        );
+        println!("SIMD kernel beats scalar kernel at w=8: OK");
+    } else {
+        println!("SIMD kernel gate skipped (scalar kernel resolved on this host)");
+    }
 }

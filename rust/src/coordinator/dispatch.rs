@@ -53,6 +53,10 @@ pub struct GemmResult {
     /// (`None` on backends without width-specialized lanes: the
     /// functional model and PJRT execute at fixed width).
     pub lane: Option<LaneId>,
+    /// The microkernel label the fast engine's plan resolved to (e.g.
+    /// `8x4`, `avx2-8x4`, `neon-8x4`; `None` on backends that do not
+    /// run the blocked engine).
+    pub kernel: Option<&'static str>,
 }
 
 /// A validated, backend-specialized execution configuration: built once
@@ -150,9 +154,11 @@ pub trait GemmBackend {
 }
 
 /// Lift a raw engine product into the served result shape: `u128`
-/// elements into the accumulator matrix, the lane that ran recorded,
-/// cycles from the same deterministic §IV-D schedule every backend
-/// reports. Shared by [`FastBackend`]'s plan and packed paths.
+/// elements into the accumulator matrix, the lane and microkernel that
+/// ran recorded, cycles from the same deterministic §IV-D schedule
+/// every backend reports. Shared by [`FastBackend`]'s plan and packed
+/// paths.
+#[allow(clippy::too_many_arguments)]
 fn finish_fast(
     raw: &[u128],
     m: usize,
@@ -160,6 +166,7 @@ fn finish_fast(
     n: usize,
     mode: Mode,
     lane: LaneId,
+    kernel: &'static str,
     timing: &SystolicSpec,
 ) -> GemmResult {
     let mut c = MatAcc::zeros(m, n);
@@ -175,6 +182,7 @@ fn finish_fast(
         mode,
         stats,
         lane: Some(lane),
+        kernel: Some(kernel),
     }
 }
 
@@ -226,6 +234,7 @@ impl ExecutablePlan for FunctionalPlan {
             mode: run.mode,
             stats: run.stats,
             lane: None,
+            kernel: None,
         })
     }
 
@@ -401,6 +410,7 @@ impl GemmBackend for PjrtBackend {
             mode,
             stats,
             lane: None,
+            kernel: None,
         })
     }
 
@@ -502,6 +512,7 @@ impl ExecutablePlan for FastPlan {
             self.plan.n(),
             self.mode,
             self.plan.lane(),
+            self.plan.kernel_name(),
             &self.timing,
         ))
     }
@@ -613,6 +624,7 @@ impl GemmBackend for FastBackend {
                 spec.n,
                 self.mode_of(&spec),
                 plan.lane(),
+                plan.kernel_name(),
                 &self.timing,
             ));
         }
@@ -650,7 +662,16 @@ impl GemmBackend for FastBackend {
             return self.gemm(a, weight.raw(), w);
         };
         let raw = bound.execute_with_threads(a.data(), self.threads);
-        Ok(finish_fast(&raw, m, k, n, self.mode_of(&spec), lane, &self.timing))
+        Ok(finish_fast(
+            &raw,
+            m,
+            k,
+            n,
+            self.mode_of(&spec),
+            lane,
+            bound.plan().kernel_name(),
+            &self.timing,
+        ))
     }
 
     /// The coalesced hot path: row-stack every activation into **one**
@@ -696,7 +717,16 @@ impl GemmBackend for FastBackend {
             .map(|(a, raw)| {
                 // Per-request cycle stats come from the request's own
                 // (m, k, n) grid — identical to the unbatched path.
-                Ok(finish_fast(&raw, a.rows, k, n, self.mode_of(&spec), lane, &self.timing))
+                Ok(finish_fast(
+                    &raw,
+                    a.rows,
+                    k,
+                    n,
+                    self.mode_of(&spec),
+                    lane,
+                    bound.plan().kernel_name(),
+                    &self.timing,
+                ))
             })
             .collect()
     }
@@ -912,6 +942,10 @@ mod tests {
                 let r = be.gemm(&a, &b, w).unwrap();
                 prop_assert_eq(r.c, want.clone(), &format!("{} exact at w={w}", be.name()))?;
                 prop_assert(r.stats.cycles > 0, "cycles reported")?;
+                prop_assert(
+                    r.kernel.is_some_and(|k| k.contains("8x4")),
+                    "fast backends report the resolved 8x4 kernel",
+                )?;
             }
             Ok(())
         });
@@ -1220,9 +1254,13 @@ mod tests {
         let b = Mat::random(9, 5, 32, &mut rng);
         let r = be.gemm(&a, &b, 32).unwrap();
         assert_eq!(r.lane, Some(LaneId::U64));
+        // The u64 lane has no SIMD path, so its kernel is always scalar.
+        assert_eq!(r.kernel, Some("8x4"));
         let mut func = FunctionalBackend::paper();
         let a = Mat::random(3, 3, 8, &mut rng);
-        assert_eq!(func.gemm(&a, &a, 8).unwrap().lane, None);
+        let r = func.gemm(&a, &a, 8).unwrap();
+        assert_eq!(r.lane, None);
+        assert_eq!(r.kernel, None);
     }
 
     #[test]

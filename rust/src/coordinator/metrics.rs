@@ -106,9 +106,20 @@ impl LatencyHistogram {
     /// The `q`-quantile (`0 < q <= 1`) in microseconds: the upper bound
     /// of the bucket holding the `⌈q·total⌉`-th sample, clamped to the
     /// observed maximum. 0 when the histogram is empty.
+    ///
+    /// Out-of-contract `q` is handled explicitly rather than through
+    /// float-cast accidents: anything `> 1` clamps to the maximum, and
+    /// `q ≤ 0` or NaN reports the **maximum** too — a caller asking a
+    /// nonsensical percentile gets the conservative tail bound, never a
+    /// silently-minimal latency. (Without the guard, `NaN.ceil() as
+    /// u64` is 0, which clamped to rank 1 and reported the *minimum*
+    /// bucket as if it were a valid answer.)
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.total == 0 {
             return 0;
+        }
+        if !(q > 0.0 && q <= 1.0) {
+            return self.max_us;
         }
         let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
         let mut seen = 0u64;
@@ -289,6 +300,29 @@ mod tests {
         z.record_us(0);
         assert_eq!(z.p99_us(), 0);
         assert_eq!(z.max_us(), 0);
+    }
+
+    #[test]
+    fn latency_histogram_rejects_out_of_contract_quantiles() {
+        let mut h = LatencyHistogram::new();
+        for us in 1..=100u64 {
+            h.record_us(us);
+        }
+        // The contract is 0 < q <= 1. Anything outside it — NaN, a
+        // negative, zero, or an over-unity percentile — reports the
+        // observed maximum (the conservative tail bound), never the
+        // minimum bucket the old NaN→0→rank-1 cast produced.
+        for bad in [f64::NAN, -1.0, 0.0, 1.5] {
+            assert_eq!(h.quantile_us(bad), h.max_us(), "q={bad}");
+        }
+        assert_eq!(h.quantile_us(f64::INFINITY), h.max_us());
+        // Sanity: an in-contract q still reads the bucket walk (p50 of
+        // 1..=100 is well below the max).
+        assert!(h.quantile_us(0.5) < h.max_us());
+        // And the empty histogram stays 0 for any q, valid or not.
+        let empty = LatencyHistogram::new();
+        assert_eq!(empty.quantile_us(f64::NAN), 0);
+        assert_eq!(empty.quantile_us(0.99), 0);
     }
 
     #[test]

@@ -84,6 +84,9 @@ pub struct Response {
     /// The fast engine's element-storage lane that served the request
     /// (`None` for rejections and for backends without lanes).
     pub lane: Option<LaneId>,
+    /// The fast engine's resolved microkernel label (`None` for
+    /// rejections and for backends that do not run the blocked engine).
+    pub kernel: Option<&'static str>,
     /// Deterministic device cycles attributed to this request.
     pub cycles: u64,
     /// Batch this request was served in (globally unique across shards).
@@ -228,6 +231,10 @@ pub struct ServerStats {
     /// Served requests per fast-engine lane (`u16`/`u32`/`u64`); empty
     /// for backends without width-specialized lanes.
     pub by_lane: HashMap<&'static str, u64>,
+    /// Served requests per resolved fast-engine microkernel (`8x4`,
+    /// `avx2-8x4`, `neon-8x4`); empty for backends that do not run the
+    /// blocked engine.
+    pub by_kernel: HashMap<&'static str, u64>,
     /// Admission rejections ([`Busy`]) at the front door. Counted by
     /// the server handle, not the shards — a rejected request never
     /// reaches a queue — and folded into the merged stats at shutdown.
@@ -266,6 +273,9 @@ impl ServerStats {
         }
         for (lane, count) in &other.by_lane {
             *self.by_lane.entry(lane).or_insert(0) += count;
+        }
+        for (kernel, count) in &other.by_kernel {
+            *self.by_kernel.entry(kernel).or_insert(0) += count;
         }
         for (lane, hist) in &other.latency_by_lane {
             self.latency_by_lane.entry(lane).or_default().merge(hist);
@@ -580,11 +590,15 @@ fn respond(
             if let Some(lane) = res.lane {
                 *stats.by_lane.entry(lane.name()).or_insert(0) += 1;
             }
+            if let Some(kernel) = res.kernel {
+                *stats.by_kernel.entry(kernel).or_insert(0) += 1;
+            }
             Response {
                 id,
                 result: Ok(res.c),
                 mode: Some(res.mode),
                 lane: res.lane,
+                kernel: res.kernel,
                 cycles: res.stats.cycles,
                 batch: batch_id,
             }
@@ -596,6 +610,7 @@ fn respond(
                 result: Err(format!("{e:#}")),
                 mode: None,
                 lane: None,
+                kernel: None,
                 cycles: 0,
                 batch: batch_id,
             }

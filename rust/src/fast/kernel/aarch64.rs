@@ -1,0 +1,99 @@
+//! NEON microkernels for the narrow lanes (aarch64).
+//!
+//! Each function computes the same `8 × 4` register tile as the scalar
+//! [`Kernel8x4`](super::Kernel8x4) through NEON's widening
+//! multiply-accumulate family (`umlal`), which is a genuine unsigned
+//! zero-extending MAC — so results are **bit-exact** with the scalar
+//! lane arithmetic under the engine's headroom contract
+//! ([`required_acc_bits`](crate::fast::lane::required_acc_bits)):
+//!
+//! - `u16` lane: `vmlal_u16` is `u32 += u16 × u16` across four lanes.
+//! - `u32` lane: `vmlal_u32` is `u64 += u32 × u32` across two lanes.
+//!
+//! Accumulator adds wrap modulo the lane's accumulator width, exactly
+//! like the scalar kernel's release-mode arithmetic; in-contract
+//! operands never wrap, so the two paths agree bit for bit.
+//!
+//! # Safety contract (every function in this module)
+//!
+//! Callers must guarantee, per the rten-style dispatch discipline:
+//!
+//! 1. **CPU support**: NEON (`asimd`) is available. It is baseline on
+//!    every aarch64 target Rust supports, which is why
+//!    [`supported()`](super::Kernel::supported) is unconditionally true
+//!    on this architecture; the `target_feature(enable = "neon")`
+//!    attribute keeps the contract explicit anyway.
+//! 2. **Panel bounds**: `acc` holds exactly 32 elements,
+//!    `a_panel.len() >= kc * 8`, and `b_panel.len() >= kc * 4`. The
+//!    safe wrapper [`Kernel8x4Simd`](super::Kernel8x4Simd) asserts all
+//!    of this before dispatching here.
+//!
+//! No alignment is required: `vld1`/`vst1` are unaligned-capable,
+//! matching the packed panels' `Vec` allocations.
+
+#[cfg(target_arch = "aarch64")]
+use std::arch::aarch64::*;
+
+/// NEON `8 × 4` tile for the `u16` lane: `acc[r·4 + c] = Σ_k a[k·8+r] · b[k·4+c]`
+/// in wrapping `u32` arithmetic via `vmlal_u16`.
+///
+/// Eight `uint32x4_t` accumulators, one output row each; per depth
+/// step the 4-wide B row loads once and each A value broadcasts with
+/// `vdup_n_u16`.
+///
+/// # Safety
+///
+/// See the module-level safety contract: NEON must be available and
+/// `acc`/`a_panel`/`b_panel` must satisfy the `8 × 4 × kc` panel
+/// bounds.
+#[target_feature(enable = "neon")]
+pub unsafe fn kernel8x4_u16(acc: &mut [u32], a_panel: &[u16], b_panel: &[u16], kc: usize) {
+    debug_assert_eq!(acc.len(), 32);
+    debug_assert!(a_panel.len() >= kc * 8 && b_panel.len() >= kc * 4);
+    let mut rows = [vdupq_n_u32(0); 8];
+    for kk in 0..kc {
+        let b4 = vld1_u16(b_panel.as_ptr().add(kk * 4));
+        let ak = a_panel.as_ptr().add(kk * 8);
+        for (r, row) in rows.iter_mut().enumerate() {
+            *row = vmlal_u16(*row, b4, vdup_n_u16(*ak.add(r)));
+        }
+    }
+    for (r, row) in rows.iter().enumerate() {
+        vst1q_u32(acc.as_mut_ptr().add(r * 4), *row);
+    }
+}
+
+/// NEON `8 × 4` tile for the `u32` lane: `acc[r·4 + c] = Σ_k a[k·8+r] · b[k·4+c]`
+/// in wrapping `u64` arithmetic via `vmlal_u32`.
+///
+/// Sixteen `uint64x2_t` accumulators (each output row split into a
+/// low and high column pair); per depth step the B row loads as two
+/// `uint32x2_t` halves and each A value broadcasts with `vdup_n_u32`.
+///
+/// # Safety
+///
+/// See the module-level safety contract: NEON must be available and
+/// `acc`/`a_panel`/`b_panel` must satisfy the `8 × 4 × kc` panel
+/// bounds.
+#[target_feature(enable = "neon")]
+pub unsafe fn kernel8x4_u32(acc: &mut [u64], a_panel: &[u32], b_panel: &[u32], kc: usize) {
+    debug_assert_eq!(acc.len(), 32);
+    debug_assert!(a_panel.len() >= kc * 8 && b_panel.len() >= kc * 4);
+    let mut lo = [vdupq_n_u64(0); 8];
+    let mut hi = [vdupq_n_u64(0); 8];
+    for kk in 0..kc {
+        let bp = b_panel.as_ptr().add(kk * 4);
+        let b01 = vld1_u32(bp);
+        let b23 = vld1_u32(bp.add(2));
+        let ak = a_panel.as_ptr().add(kk * 8);
+        for r in 0..8 {
+            let av = vdup_n_u32(*ak.add(r));
+            lo[r] = vmlal_u32(lo[r], b01, av);
+            hi[r] = vmlal_u32(hi[r], b23, av);
+        }
+    }
+    for r in 0..8 {
+        vst1q_u64(acc.as_mut_ptr().add(r * 4), lo[r]);
+        vst1q_u64(acc.as_mut_ptr().add(r * 4 + 2), hi[r]);
+    }
+}

@@ -1,0 +1,617 @@
+//! Register-tile microkernels: the innermost loop of the fast engine,
+//! with runtime-dispatched SIMD variants for the narrow lanes.
+//!
+//! A [`Kernel`] computes one `MR × NR` tile of `C` from packed operand
+//! panels (see [`crate::fast::pack`]): `MR` rows of `A` and `NR` columns
+//! of `B`, both laid out depth-major so the `kc`-long inner loop walks
+//! each panel contiguously. The kernels are generic over an [`Element`]
+//! lane: operands live in the lane's storage type and accumulate through
+//! its widening multiply (`u16×u16→u32`, `u32×u32→u64`, `u64×u64→u128`),
+//! so the same microkernel monomorphizes into one datapath per lane —
+//! the software mirror of the paper sizing multipliers to the operand
+//! width. Each instantiation is exact under the lane's headroom contract
+//! ([`crate::fast::lane::required_acc_bits`]).
+//!
+//! The shape follows the rten/BLIS design: a fixed register tile sized
+//! so the `MR × NR` accumulators live in registers across the whole
+//! `kc` loop, with all edge handling pushed into zero-padded packing.
+//!
+//! # SIMD dispatch
+//!
+//! Two implementations exist per narrow lane:
+//!
+//! - [`Kernel8x4`] — the scalar unrolled kernel, the universal
+//!   fallback, correct on every host.
+//! - [`Kernel8x4Simd`] — a safe wrapper over per-arch `unsafe`
+//!   microkernels ([`x86_64`]: AVX2 widening multiply-add; [`aarch64`]:
+//!   NEON `umlal`-class), bit-exact with the scalar kernel under the
+//!   lane headroom contract. On the `u64` lane (and on architectures
+//!   without a SIMD variant) it delegates to the scalar kernel.
+//!
+//! Following the rten pattern, [`Kernel::supported`] reports whether a
+//! kernel can run on the current host, and selection happens **once, at
+//! plan-build time** ([`select_kernel`]): the resolved [`KernelSel`] is
+//! recorded on the [`MatmulPlan`](crate::fast::plan::MatmulPlan) (and
+//! printed in its mode string), so bound plans and the serving stack
+//! inherit the choice for free. `KMM_KERNEL=scalar` forces the scalar
+//! kernel process-wide (the differential-testing knob);
+//! `KMM_KERNEL=native` (or unset) picks SIMD wherever
+//! [`simd_supported`] proves the host can run it. All `unsafe` lives in
+//! the per-arch modules behind documented safety contracts; the safe
+//! wrapper asserts the panel bounds and the `supported()` precondition
+//! before dispatching.
+
+use crate::fast::lane::{Element, LaneId};
+pub use crate::fast::lane::MAX_W;
+
+#[cfg(target_arch = "aarch64")]
+pub mod aarch64;
+#[cfg(target_arch = "x86_64")]
+pub mod x86_64;
+
+/// An `MR × NR` register-tile microkernel over packed panels in lane
+/// `E`'s storage.
+pub trait Kernel<E: Element> {
+    /// Register-tile height: rows of `C` produced per call.
+    const MR: usize;
+    /// Register-tile width: columns of `C` produced per call.
+    const NR: usize;
+    /// Short label for benches and logs.
+    const NAME: &'static str;
+
+    /// Whether this kernel can run on the current host. Checked once at
+    /// plan-build time (the rten discipline), **never** inside the hot
+    /// loop; a kernel whose `supported()` is false must not be
+    /// dispatched. The default is unconditionally true — scalar kernels
+    /// run everywhere.
+    fn supported(&self) -> bool {
+        true
+    }
+
+    /// Compute the `kc`-deep product of one packed A panel (`kc × MR`,
+    /// depth-major) and one packed B panel (`kc × NR`, depth-major),
+    /// overwriting `acc` (row-major `MR × NR`):
+    ///
+    /// `acc[r·NR + c] = Σ_k a_panel[k·MR + r] · b_panel[k·NR + c]`
+    fn run(&self, acc: &mut [E::Acc], a_panel: &[E], b_panel: &[E], kc: usize);
+}
+
+/// The one panel-bounds check every 8×4 kernel (scalar and SIMD) runs
+/// before touching its operands: a real `assert!`, outside the `kc`
+/// loop, so a short panel fails with a named contract violation instead
+/// of an opaque in-loop index panic in release builds — and so the
+/// `unsafe` SIMD kernels inherit a *checked* safe-wrapper contract.
+#[inline]
+fn check_8x4_bounds(acc_len: usize, a_len: usize, b_len: usize, kc: usize) {
+    assert_eq!(acc_len, 8 * 4, "acc must be an 8x4 register tile");
+    assert!(
+        a_len >= kc * 8,
+        "A panel shorter than its kc x MR contract: {a_len} < {}",
+        kc * 8
+    );
+    assert!(
+        b_len >= kc * 4,
+        "B panel shorter than its kc x NR contract: {b_len} < {}",
+        kc * 4
+    );
+}
+
+/// The default 8×4 scalar microkernel: 32 lane accumulators, fully
+/// unrolled over `NR`, broadcast of each `A` element against a
+/// contiguous `B` row. 8×4 keeps the accumulator set within the
+/// register budget of x86-64/aarch64 at every lane width while giving
+/// the compiler independent chains to schedule. The universal fallback
+/// of the SIMD dispatch: `supported()` on every host.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Kernel8x4;
+
+impl<E: Element> Kernel<E> for Kernel8x4 {
+    const MR: usize = 8;
+    const NR: usize = 4;
+    const NAME: &'static str = "8x4";
+
+    fn run(&self, acc: &mut [E::Acc], a_panel: &[E], b_panel: &[E], kc: usize) {
+        check_8x4_bounds(acc.len(), a_panel.len(), b_panel.len(), kc);
+        let zero: E::Acc = Default::default();
+        let mut t = [[zero; 4]; 8];
+        for kk in 0..kc {
+            let ak: &[E; 8] = a_panel[kk * 8..kk * 8 + 8].try_into().unwrap();
+            let bk: &[E; 4] = b_panel[kk * 4..kk * 4 + 4].try_into().unwrap();
+            for r in 0..8 {
+                let av = ak[r];
+                t[r][0] = E::madd(t[r][0], av, bk[0]);
+                t[r][1] = E::madd(t[r][1], av, bk[1]);
+                t[r][2] = E::madd(t[r][2], av, bk[2]);
+                t[r][3] = E::madd(t[r][3], av, bk[3]);
+            }
+        }
+        for r in 0..8 {
+            for c in 0..4 {
+                acc[r * 4 + c] = t[r][c];
+            }
+        }
+    }
+}
+
+/// Scalar 1×1 reference kernel: the simplest possible implementation,
+/// used to cross-check the blocked driver and the packed layouts
+/// independently of any unrolling.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Kernel1x1;
+
+impl<E: Element> Kernel<E> for Kernel1x1 {
+    const MR: usize = 1;
+    const NR: usize = 1;
+    const NAME: &'static str = "1x1-reference";
+
+    fn run(&self, acc: &mut [E::Acc], a_panel: &[E], b_panel: &[E], kc: usize) {
+        assert_eq!(acc.len(), 1, "acc must be a 1x1 tile");
+        assert!(
+            a_panel.len() >= kc && b_panel.len() >= kc,
+            "panel shorter than its kc contract"
+        );
+        let mut sum: E::Acc = Default::default();
+        for kk in 0..kc {
+            sum = E::madd(sum, a_panel[kk], b_panel[kk]);
+        }
+        acc[0] = sum;
+    }
+}
+
+/// The SIMD kernel name for this architecture's narrow-lane 8×4
+/// variant (what a plan's `kernel=` field prints when SIMD resolved).
+#[cfg(target_arch = "x86_64")]
+const SIMD_8X4_NAME: &str = "avx2-8x4";
+/// The SIMD kernel name for this architecture's narrow-lane 8×4
+/// variant (what a plan's `kernel=` field prints when SIMD resolved).
+#[cfg(target_arch = "aarch64")]
+const SIMD_8X4_NAME: &str = "neon-8x4";
+/// No SIMD variant exists on this architecture: the name degenerates
+/// to the scalar kernel's (and [`simd_supported`] is always false).
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+const SIMD_8X4_NAME: &str = "8x4";
+
+/// Whether the current host can run the narrow-lane SIMD 8×4 kernels:
+/// AVX2 (runtime-detected) on x86_64, NEON (baseline) on aarch64,
+/// false elsewhere.
+fn narrow_simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return is_x86_feature_detected!("avx2");
+    #[cfg(target_arch = "aarch64")]
+    return true;
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    false
+}
+
+/// Whether [`Kernel8x4Simd`] has a genuine SIMD datapath for `lane` on
+/// the current host. The `u64` lane has none anywhere (its `u128`
+/// accumulator has no vector form on either ISA), so it always reports
+/// false and stays on the scalar kernel.
+pub fn simd_supported(lane: LaneId) -> bool {
+    match lane {
+        LaneId::U64 => false,
+        LaneId::U16 | LaneId::U32 => narrow_simd_available(),
+    }
+}
+
+/// The 8×4 SIMD microkernel behind a safe dispatch wrapper: AVX2 on
+/// x86_64, NEON on aarch64, scalar delegation on the `u64` lane and on
+/// architectures without a vector variant. Bit-exact with [`Kernel8x4`]
+/// under the lane headroom contract (the differential grids in
+/// `tests/integration_lanes.rs` prove it across algos × lanes ×
+/// threads).
+///
+/// `run` asserts the panel bounds and the [`supported()`] precondition
+/// before entering the per-arch `unsafe` kernels, so the `unsafe`
+/// safety contracts are discharged locally — callers cannot reach
+/// undefined behavior through this type. Plans never construct it on
+/// unsupported hosts ([`select_kernel`] falls back to scalar), making
+/// the assert a belt-and-suspenders backstop, not a hot-path cost.
+///
+/// [`supported()`]: Kernel::supported
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Kernel8x4Simd;
+
+impl Kernel<u16> for Kernel8x4Simd {
+    const MR: usize = 8;
+    const NR: usize = 4;
+    const NAME: &'static str = SIMD_8X4_NAME;
+
+    fn supported(&self) -> bool {
+        simd_supported(LaneId::U16)
+    }
+
+    fn run(&self, acc: &mut [u32], a_panel: &[u16], b_panel: &[u16], kc: usize) {
+        check_8x4_bounds(acc.len(), a_panel.len(), b_panel.len(), kc);
+        assert!(
+            Kernel::<u16>::supported(self),
+            "Kernel8x4Simd dispatched without u16-lane SIMD support (check supported() first)"
+        );
+        // SAFETY: the assert above proved the CPU-feature precondition
+        // (AVX2 on x86_64; NEON is baseline on aarch64) and
+        // check_8x4_bounds proved the panel-length contract.
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            x86_64::kernel8x4_u16(acc, a_panel, b_panel, kc)
+        }
+        // SAFETY: as above — NEON is baseline on aarch64 and the panel
+        // bounds were asserted.
+        #[cfg(target_arch = "aarch64")]
+        unsafe {
+            aarch64::kernel8x4_u16(acc, a_panel, b_panel, kc)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        Kernel::<u16>::run(&Kernel8x4, acc, a_panel, b_panel, kc)
+    }
+}
+
+impl Kernel<u32> for Kernel8x4Simd {
+    const MR: usize = 8;
+    const NR: usize = 4;
+    const NAME: &'static str = SIMD_8X4_NAME;
+
+    fn supported(&self) -> bool {
+        simd_supported(LaneId::U32)
+    }
+
+    fn run(&self, acc: &mut [u64], a_panel: &[u32], b_panel: &[u32], kc: usize) {
+        check_8x4_bounds(acc.len(), a_panel.len(), b_panel.len(), kc);
+        assert!(
+            Kernel::<u32>::supported(self),
+            "Kernel8x4Simd dispatched without u32-lane SIMD support (check supported() first)"
+        );
+        // SAFETY: the assert above proved the CPU-feature precondition
+        // (AVX2 on x86_64; NEON is baseline on aarch64) and
+        // check_8x4_bounds proved the panel-length contract.
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            x86_64::kernel8x4_u32(acc, a_panel, b_panel, kc)
+        }
+        // SAFETY: as above — NEON is baseline on aarch64 and the panel
+        // bounds were asserted.
+        #[cfg(target_arch = "aarch64")]
+        unsafe {
+            aarch64::kernel8x4_u32(acc, a_panel, b_panel, kc)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        Kernel::<u32>::run(&Kernel8x4, acc, a_panel, b_panel, kc)
+    }
+}
+
+impl Kernel<u64> for Kernel8x4Simd {
+    const MR: usize = 8;
+    const NR: usize = 4;
+    // The u64 lane has no vector datapath (no u128 SIMD accumulator on
+    // either ISA): this impl *is* the scalar kernel, so the generic
+    // plan drivers stay total over every lane × kernel combination.
+    const NAME: &'static str = "8x4";
+
+    fn run(&self, acc: &mut [u128], a_panel: &[u64], b_panel: &[u64], kc: usize) {
+        Kernel::<u64>::run(&Kernel8x4, acc, a_panel, b_panel, kc)
+    }
+}
+
+/// Which 8×4 kernel implementation a plan resolved to — decided once at
+/// [`MatmulPlan::build`](crate::fast::plan::MatmulPlan::build) via
+/// [`select_kernel`], stored on the plan, and inherited by every bound
+/// and serving execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelSel {
+    /// The scalar [`Kernel8x4`] (the universal fallback, and what
+    /// `KMM_KERNEL=scalar` forces for differential testing).
+    Scalar,
+    /// The SIMD [`Kernel8x4Simd`] — only ever selected for a lane where
+    /// [`simd_supported`] proved the host can run it.
+    Simd,
+}
+
+impl KernelSel {
+    /// The kernel label a plan reports for `lane` (benches record it
+    /// per section; `MatmulPlan::describe` prints it as `kernel=`).
+    pub fn name(self, lane: LaneId) -> &'static str {
+        match self {
+            KernelSel::Scalar => <Kernel8x4 as Kernel<u64>>::NAME,
+            KernelSel::Simd => match lane {
+                LaneId::U64 => <Kernel8x4Simd as Kernel<u64>>::NAME,
+                LaneId::U16 | LaneId::U32 => SIMD_8X4_NAME,
+            },
+        }
+    }
+}
+
+/// Resolve the kernel a plan on `lane` should run — the plan-build-time
+/// dispatch point. `KMM_KERNEL=scalar` forces the scalar kernel
+/// (differential testing, perf triage); `KMM_KERNEL=native` or unset
+/// picks SIMD exactly when [`simd_supported`]`(lane)` holds. An
+/// unrecognized value warns once per process and behaves like `native`,
+/// so a typo'd deployment is loud but still serves the fast kernel.
+pub fn select_kernel(lane: LaneId) -> KernelSel {
+    let native = if simd_supported(lane) {
+        KernelSel::Simd
+    } else {
+        KernelSel::Scalar
+    };
+    match std::env::var("KMM_KERNEL") {
+        Ok(raw) => match raw.trim() {
+            "scalar" => KernelSel::Scalar,
+            "native" => native,
+            _ => {
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "warning: ignoring KMM_KERNEL={raw:?}: expected \"scalar\" or \"native\""
+                    );
+                });
+                native
+            }
+        },
+        Err(_) => native,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Direct (unpacked) dot products for comparison.
+    fn expect_tile(a: &[u64], b: &[u64], mr: usize, nr: usize, kc: usize) -> Vec<u128> {
+        let mut out = vec![0u128; mr * nr];
+        for r in 0..mr {
+            for c in 0..nr {
+                for kk in 0..kc {
+                    out[r * nr + c] += a[kk * mr + r] as u128 * b[kk * nr + c] as u128;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn kernel8x4_matches_reference_tile() {
+        let mut rng = Rng::new(1);
+        for kc in [1usize, 2, 7, 64] {
+            let a: Vec<u64> = (0..kc * 8).map(|_| rng.bits(32)).collect();
+            let b: Vec<u64> = (0..kc * 4).map(|_| rng.bits(32)).collect();
+            let mut acc = vec![0u128; 32];
+            Kernel8x4.run(&mut acc, &a, &b, kc);
+            assert_eq!(acc, expect_tile(&a, &b, 8, 4, kc), "kc={kc}");
+        }
+    }
+
+    #[test]
+    fn kernel8x4_overwrites_stale_acc() {
+        let mut rng = Rng::new(2);
+        let a: Vec<u64> = (0..8).map(|_| rng.bits(16)).collect();
+        let b: Vec<u64> = (0..4).map(|_| rng.bits(16)).collect();
+        let mut acc = vec![u128::MAX; 32];
+        Kernel8x4.run(&mut acc, &a, &b, 1);
+        assert_eq!(acc, expect_tile(&a, &b, 8, 4, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "A panel shorter")]
+    fn kernel8x4_rejects_short_a_panel_in_release_too() {
+        // The bounds guard is a real assert (not debug_assert): a short
+        // panel must fail the named contract check before the kk loop,
+        // in every build profile — the checked safe-wrapper contract
+        // the unsafe SIMD kernels inherit.
+        let a = vec![1u64; 8]; // one depth step's worth
+        let b = vec![1u64; 8];
+        let mut acc = vec![0u128; 32];
+        Kernel8x4.run(&mut acc, &a, &b, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "B panel shorter")]
+    fn kernel8x4_rejects_short_b_panel() {
+        let a = vec![1u64; 16];
+        let b = vec![1u64; 4];
+        let mut acc = vec![0u128; 32];
+        Kernel8x4.run(&mut acc, &a, &b, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "8x4 register tile")]
+    fn kernel8x4_rejects_misshapen_acc() {
+        let a = vec![1u64; 8];
+        let b = vec![1u64; 4];
+        let mut acc = vec![0u128; 31];
+        Kernel8x4.run(&mut acc, &a, &b, 1);
+    }
+
+    #[test]
+    fn kernel1x1_is_a_dot_product() {
+        let a = [3u64, 5, 7];
+        let b = [2u64, 4, 6];
+        let mut acc = [0u128; 1];
+        Kernel1x1.run(&mut acc, &a, &b, 3);
+        assert_eq!(acc[0], (6 + 20 + 42) as u128);
+    }
+
+    #[test]
+    fn narrow_lanes_agree_with_the_u64_lane() {
+        // The same tile driven through every lane: identical values,
+        // only the storage/accumulator types differ.
+        let mut rng = Rng::new(3);
+        for kc in [1usize, 5, 33] {
+            let a: Vec<u64> = (0..kc * 8).map(|_| rng.bits(8)).collect();
+            let b: Vec<u64> = (0..kc * 4).map(|_| rng.bits(8)).collect();
+            let want = expect_tile(&a, &b, 8, 4, kc);
+            let a16: Vec<u16> = a.iter().map(|&x| x as u16).collect();
+            let b16: Vec<u16> = b.iter().map(|&x| x as u16).collect();
+            let mut acc16 = vec![0u32; 32];
+            Kernel8x4.run(&mut acc16, &a16, &b16, kc);
+            assert_eq!(
+                acc16.iter().map(|&v| v as u128).collect::<Vec<_>>(),
+                want,
+                "u16 lane kc={kc}"
+            );
+            let a32: Vec<u32> = a.iter().map(|&x| x as u32).collect();
+            let b32: Vec<u32> = b.iter().map(|&x| x as u32).collect();
+            let mut acc32 = vec![0u64; 32];
+            Kernel8x4.run(&mut acc32, &a32, &b32, kc);
+            assert_eq!(
+                acc32.iter().map(|&v| v as u128).collect::<Vec<_>>(),
+                want,
+                "u32 lane kc={kc}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_width_operands_do_not_overflow() {
+        // 2^32−1 squared, 64 deep on the u64 lane: the largest tile the
+        // engine-wide contract allows.
+        let a = vec![u32::MAX as u64; 64 * 8];
+        let b = vec![u32::MAX as u64; 64 * 4];
+        let mut acc = vec![0u128; 32];
+        Kernel8x4.run(&mut acc, &a, &b, 64);
+        let want = (u32::MAX as u128 * u32::MAX as u128) * 64;
+        assert!(acc.iter().all(|&v| v == want));
+    }
+
+    #[test]
+    fn narrow_lane_headroom_boundary_tile() {
+        // u16 lane at its exact limit: w = 12 all-ones, kc = 256 gives
+        // 256·(2^12−1)² = 4 292 870 400 < 2^32 — the largest all-ones
+        // tile the 32-bit accumulator admits.
+        let a = vec![(1u16 << 12) - 1; 256 * 8];
+        let b = vec![(1u16 << 12) - 1; 256 * 4];
+        let mut acc = vec![0u32; 32];
+        Kernel8x4.run(&mut acc, &a, &b, 256);
+        let want = ((1u64 << 12) - 1).pow(2) * 256;
+        assert!(u64::from(acc[0]) == want && acc.iter().all(|&v| v == acc[0]));
+    }
+
+    #[test]
+    fn simd_kernel_matches_scalar_on_the_u16_lane() {
+        if !Kernel::<u16>::supported(&Kernel8x4Simd) {
+            return; // no SIMD datapath on this host: nothing to differ
+        }
+        let mut rng = Rng::new(7);
+        for kc in [1usize, 2, 7, 33, 256] {
+            // Full-width u16 operands: values >= 2^15 are the signed
+            // multiply trap (_mm256_madd_epi16 would corrupt them), so
+            // the grid leans on them deliberately at the shallow depths
+            // the headroom contract allows.
+            let w = if kc == 1 { 16 } else { 12 };
+            let a: Vec<u16> = (0..kc * 8).map(|_| rng.bits(w) as u16).collect();
+            let b: Vec<u16> = (0..kc * 4).map(|_| rng.bits(w) as u16).collect();
+            let mut scalar = vec![0u32; 32];
+            let mut simd = vec![u32::MAX; 32]; // stale acc must be overwritten
+            Kernel8x4.run(&mut scalar, &a, &b, kc);
+            Kernel8x4Simd.run(&mut simd, &a, &b, kc);
+            assert_eq!(simd, scalar, "kc={kc} w={w}");
+        }
+    }
+
+    #[test]
+    fn simd_kernel_matches_scalar_on_the_u32_lane() {
+        if !Kernel::<u32>::supported(&Kernel8x4Simd) {
+            return;
+        }
+        let mut rng = Rng::new(8);
+        for kc in [1usize, 2, 7, 33, 64] {
+            let w = if kc == 1 { 32 } else { 28 };
+            let a: Vec<u32> = (0..kc * 8).map(|_| rng.bits(w) as u32).collect();
+            let b: Vec<u32> = (0..kc * 4).map(|_| rng.bits(w) as u32).collect();
+            let mut scalar = vec![0u64; 32];
+            let mut simd = vec![u64::MAX; 32];
+            Kernel8x4.run(&mut scalar, &a, &b, kc);
+            Kernel8x4Simd.run(&mut simd, &a, &b, kc);
+            assert_eq!(simd, scalar, "kc={kc} w={w}");
+        }
+    }
+
+    #[test]
+    fn simd_kernel_boundary_tiles_stay_exact() {
+        // All-ones at each narrow lane's exact headroom boundary: the
+        // largest values the accumulator contract admits, where any
+        // signedness or truncation slip in the SIMD datapath shows.
+        if Kernel::<u16>::supported(&Kernel8x4Simd) {
+            let a = vec![(1u16 << 12) - 1; 256 * 8];
+            let b = vec![(1u16 << 12) - 1; 256 * 4];
+            let mut scalar = vec![0u32; 32];
+            let mut simd = vec![0u32; 32];
+            Kernel8x4.run(&mut scalar, &a, &b, 256);
+            Kernel8x4Simd.run(&mut simd, &a, &b, 256);
+            assert_eq!(simd, scalar, "u16 w=12 kc=256 boundary");
+        }
+        if Kernel::<u32>::supported(&Kernel8x4Simd) {
+            let a = vec![(1u32 << 28) - 1; 256 * 8];
+            let b = vec![(1u32 << 28) - 1; 256 * 4];
+            let mut scalar = vec![0u64; 32];
+            let mut simd = vec![0u64; 32];
+            Kernel8x4.run(&mut scalar, &a, &b, 256);
+            Kernel8x4Simd.run(&mut simd, &a, &b, 256);
+            assert_eq!(simd, scalar, "u32 w=28 kc=256 boundary");
+        }
+    }
+
+    #[test]
+    fn simd_u64_lane_is_the_scalar_kernel() {
+        // No vector datapath exists for the u64/u128 lane: the Simd
+        // type must delegate identically (and report the scalar name).
+        let mut rng = Rng::new(9);
+        let a: Vec<u64> = (0..16).map(|_| rng.bits(32)).collect();
+        let b: Vec<u64> = (0..8).map(|_| rng.bits(32)).collect();
+        let mut scalar = vec![0u128; 32];
+        let mut simd = vec![0u128; 32];
+        Kernel::<u64>::run(&Kernel8x4, &mut scalar, &a, &b, 2);
+        Kernel::<u64>::run(&Kernel8x4Simd, &mut simd, &a, &b, 2);
+        assert_eq!(simd, scalar);
+        assert_eq!(<Kernel8x4Simd as Kernel<u64>>::NAME, "8x4");
+        assert!(!simd_supported(LaneId::U64));
+        assert!(Kernel::<u64>::supported(&Kernel8x4Simd));
+    }
+
+    #[test]
+    #[should_panic(expected = "panel shorter")]
+    fn simd_wrapper_checks_bounds_before_dispatch() {
+        // The bounds assert fires before any supported() check or
+        // unsafe dispatch, so the panic is the same named contract
+        // violation on every host.
+        let a = vec![1u16; 8];
+        let b = vec![1u16; 4];
+        let mut acc = vec![0u32; 32];
+        Kernel8x4Simd.run(&mut acc, &a, &b, 3);
+    }
+
+    #[test]
+    fn kernel_sel_names_are_lane_and_arch_consistent() {
+        for lane in LaneId::ALL {
+            assert_eq!(KernelSel::Scalar.name(lane), "8x4", "{lane}");
+        }
+        // The u64 lane never has a SIMD name; narrow lanes report the
+        // arch's variant (which degenerates to "8x4" off x86_64/aarch64).
+        assert_eq!(KernelSel::Simd.name(LaneId::U64), "8x4");
+        assert_eq!(KernelSel::Simd.name(LaneId::U16), SIMD_8X4_NAME);
+        assert_eq!(KernelSel::Simd.name(LaneId::U32), SIMD_8X4_NAME);
+        assert_eq!(
+            <Kernel8x4Simd as Kernel<u16>>::NAME,
+            KernelSel::Simd.name(LaneId::U16)
+        );
+    }
+
+    #[test]
+    fn selection_honors_the_override_and_the_support_matrix() {
+        // The suite runs under both native and KMM_KERNEL=scalar in CI,
+        // so assert consistency with whatever the environment says
+        // rather than mutating process-global env state here.
+        let forced_scalar = matches!(
+            std::env::var("KMM_KERNEL").ok().as_deref().map(str::trim),
+            Some("scalar")
+        );
+        for lane in [LaneId::U16, LaneId::U32] {
+            let want = if forced_scalar || !simd_supported(lane) {
+                KernelSel::Scalar
+            } else {
+                KernelSel::Simd
+            };
+            assert_eq!(select_kernel(lane), want, "{lane}");
+        }
+        // The u64 lane resolves scalar under every environment.
+        assert_eq!(select_kernel(LaneId::U64), KernelSel::Scalar);
+    }
+}

@@ -1,0 +1,121 @@
+//! AVX2 microkernels for the narrow lanes (x86_64).
+//!
+//! Each function computes the same `8 × 4` register tile as the scalar
+//! [`Kernel8x4`](super::Kernel8x4), using zero-extending widening
+//! multiplies so results are **bit-exact** with the scalar lane
+//! arithmetic under the engine's headroom contract
+//! ([`required_acc_bits`](crate::fast::lane::required_acc_bits)):
+//!
+//! - `u16` lane: operands zero-extend to `u32` (`vpmovzxwd`) and
+//!   multiply with `vpmulld` — exact, since `u16 × u16 < 2³²`. (The
+//!   tempting `vpmaddwd` is a *signed* 16-bit multiply and would
+//!   corrupt operands `≥ 2¹⁵`, which are legal at `w = 16`.)
+//! - `u32` lane: `vpmuludq` is a genuine unsigned `32 × 32 → 64`
+//!   widening multiply on the low half of each 64-bit lane.
+//!
+//! Accumulator adds wrap modulo the lane's accumulator width, exactly
+//! like the scalar kernel's release-mode arithmetic; the headroom
+//! contract guarantees no wrap occurs for in-contract operands, so the
+//! two paths agree bit for bit (proven by the differential grids in
+//! `tests/integration_lanes.rs` / `tests/integration_strassen.rs`).
+//!
+//! # Safety contract (every function in this module)
+//!
+//! Callers must guarantee, per the rten-style dispatch discipline:
+//!
+//! 1. **CPU support**: the host supports AVX2
+//!    (`is_x86_feature_detected!("avx2")` — the
+//!    [`supported()`](super::Kernel::supported) precondition). Calling
+//!    without it is immediate undefined behavior (illegal instruction).
+//! 2. **Panel bounds**: `acc` holds exactly 32 elements,
+//!    `a_panel.len() >= kc * 8`, and `b_panel.len() >= kc * 4`. The
+//!    safe wrapper [`Kernel8x4Simd`](super::Kernel8x4Simd) asserts all
+//!    of this before dispatching here.
+//!
+//! No alignment is required: all loads and stores are unaligned
+//! (`loadu`/`storeu`), matching the packed panels' `Vec` allocations.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// AVX2 `8 × 4` tile for the `u16` lane: `acc[r·4 + c] = Σ_k a[k·8+r] · b[k·4+c]`
+/// in wrapping `u32` arithmetic.
+///
+/// Four 256-bit accumulators each hold two output rows (8 × `u32`);
+/// per depth step the 4-wide B row is widened once and broadcast to
+/// both 128-bit halves, the 8-wide A column widens once, and four
+/// cross-lane permutes splat each row pair's A values.
+///
+/// # Safety
+///
+/// See the module-level safety contract: AVX2 must be supported and
+/// `acc`/`a_panel`/`b_panel` must satisfy the `8 × 4 × kc` panel
+/// bounds.
+#[target_feature(enable = "avx2")]
+pub unsafe fn kernel8x4_u16(acc: &mut [u32], a_panel: &[u16], b_panel: &[u16], kc: usize) {
+    debug_assert_eq!(acc.len(), 32);
+    debug_assert!(a_panel.len() >= kc * 8 && b_panel.len() >= kc * 4);
+    // Row-pair splat indices: IDX[p] selects [a_{2p}×4, a_{2p+1}×4]
+    // from the 8-wide widened A column.
+    let idx0 = _mm256_setr_epi32(0, 0, 0, 0, 1, 1, 1, 1);
+    let idx1 = _mm256_setr_epi32(2, 2, 2, 2, 3, 3, 3, 3);
+    let idx2 = _mm256_setr_epi32(4, 4, 4, 4, 5, 5, 5, 5);
+    let idx3 = _mm256_setr_epi32(6, 6, 6, 6, 7, 7, 7, 7);
+    let mut c0 = _mm256_setzero_si256();
+    let mut c1 = _mm256_setzero_si256();
+    let mut c2 = _mm256_setzero_si256();
+    let mut c3 = _mm256_setzero_si256();
+    for kk in 0..kc {
+        // 4 B values (8 bytes; loadl zeroes the upper half) widened to
+        // u32 and duplicated into both 128-bit halves.
+        let b4 = _mm_loadl_epi64(b_panel.as_ptr().add(kk * 4) as *const __m128i);
+        let bv = _mm256_broadcastsi128_si256(_mm_cvtepu16_epi32(b4));
+        // 8 A values widened to u32.
+        let a8 = _mm_loadu_si128(a_panel.as_ptr().add(kk * 8) as *const __m128i);
+        let av = _mm256_cvtepu16_epi32(a8);
+        c0 = _mm256_add_epi32(c0, _mm256_mullo_epi32(_mm256_permutevar8x32_epi32(av, idx0), bv));
+        c1 = _mm256_add_epi32(c1, _mm256_mullo_epi32(_mm256_permutevar8x32_epi32(av, idx1), bv));
+        c2 = _mm256_add_epi32(c2, _mm256_mullo_epi32(_mm256_permutevar8x32_epi32(av, idx2), bv));
+        c3 = _mm256_add_epi32(c3, _mm256_mullo_epi32(_mm256_permutevar8x32_epi32(av, idx3), bv));
+    }
+    // Each accumulator is two row-major rows: contiguous in `acc`.
+    _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, c0);
+    _mm256_storeu_si256(acc.as_mut_ptr().add(8) as *mut __m256i, c1);
+    _mm256_storeu_si256(acc.as_mut_ptr().add(16) as *mut __m256i, c2);
+    _mm256_storeu_si256(acc.as_mut_ptr().add(24) as *mut __m256i, c3);
+}
+
+/// AVX2 `8 × 4` tile for the `u32` lane: `acc[r·4 + c] = Σ_k a[k·8+r] · b[k·4+c]`
+/// in wrapping `u64` arithmetic via `vpmuludq`.
+///
+/// Eight 256-bit accumulators, one output row (4 × `u64`) each; per
+/// depth step the B row zero-extends once (`vpmovzxdq`) and each A
+/// value broadcasts into all four 64-bit lanes.
+///
+/// # Safety
+///
+/// See the module-level safety contract: AVX2 must be supported and
+/// `acc`/`a_panel`/`b_panel` must satisfy the `8 × 4 × kc` panel
+/// bounds.
+#[target_feature(enable = "avx2")]
+pub unsafe fn kernel8x4_u32(acc: &mut [u64], a_panel: &[u32], b_panel: &[u32], kc: usize) {
+    debug_assert_eq!(acc.len(), 32);
+    debug_assert!(a_panel.len() >= kc * 8 && b_panel.len() >= kc * 4);
+    let mut rows = [_mm256_setzero_si256(); 8];
+    for kk in 0..kc {
+        // 4 B values zero-extended into the low half of each u64 lane —
+        // exactly the operand shape vpmuludq consumes.
+        let b4 = _mm_loadu_si128(b_panel.as_ptr().add(kk * 4) as *const __m128i);
+        let bv = _mm256_cvtepu32_epi64(b4);
+        let ak = a_panel.as_ptr().add(kk * 8);
+        for (r, row) in rows.iter_mut().enumerate() {
+            // set1 of a non-negative i64: the low 32 bits hold the u32
+            // operand, which is all vpmuludq reads.
+            let av = _mm256_set1_epi64x(*ak.add(r) as i64);
+            *row = _mm256_add_epi64(*row, _mm256_mul_epu32(av, bv));
+        }
+    }
+    for (r, row) in rows.iter().enumerate() {
+        _mm256_storeu_si256(acc.as_mut_ptr().add(r * 4) as *mut __m256i, *row);
+    }
+}

@@ -54,7 +54,7 @@ use crate::algo::bits;
 use crate::fast::gemm::{
     gemm_into, gemm_into_threads, gemm_prepacked_into, gemm_prepacked_into_threads, Blocking,
 };
-use crate::fast::kernel::{Kernel, Kernel8x4};
+use crate::fast::kernel::{Kernel, Kernel8x4, Kernel8x4Simd, KernelSel};
 use crate::fast::lane::{
     check_width, digit_sum_plane_elems, narrow_plane, required_acc_bits, select_lane,
     split_planes_elems, widen_acc, Element, LaneId,
@@ -560,23 +560,36 @@ impl LanePackedKmmB {
     /// Serve `C = A·B` against the cached digit-plane tree across up to
     /// `threads` workers, narrowing the `u64`-boundary activation into
     /// the entry's lane and widening the result back to `u128`.
-    pub fn kmm(&self, a: &[u64], m: usize, threads: usize) -> Vec<u128> {
+    /// `kernel` is the plan-resolved microkernel selection — the packed
+    /// digit planes are kernel-independent (both 8×4 kernels share
+    /// `MR × NR` geometry), so one packing serves either.
+    pub fn kmm(&self, kernel: KernelSel, a: &[u64], m: usize, threads: usize) -> Vec<u128> {
+        match kernel {
+            KernelSel::Scalar => self.kmm_with(&Kernel8x4, a, m, threads),
+            KernelSel::Simd => self.kmm_with(&Kernel8x4Simd, a, m, threads),
+        }
+    }
+
+    fn kmm_with<K>(&self, kernel: &K, a: &[u64], m: usize, threads: usize) -> Vec<u128>
+    where
+        K: Kernel<u16> + Kernel<u32> + Kernel<u64> + Sync,
+    {
         match self {
             LanePackedKmmB::U16(p) => widen_acc::<u16>(kmm_prepacked_threads(
-                &Kernel8x4,
+                kernel,
                 &narrow_plane::<u16>(a),
                 p,
                 m,
                 threads,
             )),
             LanePackedKmmB::U32(p) => widen_acc::<u32>(kmm_prepacked_threads(
-                &Kernel8x4,
+                kernel,
                 &narrow_plane::<u32>(a),
                 p,
                 m,
                 threads,
             )),
-            LanePackedKmmB::U64(p) => kmm_prepacked_threads(&Kernel8x4, a, p, m, threads),
+            LanePackedKmmB::U64(p) => kmm_prepacked_threads(kernel, a, p, m, threads),
         }
     }
 }
@@ -773,11 +786,16 @@ mod tests {
         assert_eq!((selected.rows(), selected.cols()), (k, n));
         let wide = LanePackedKmmB::pack_in(LaneId::U64, &b, k, n, w, digits);
         assert_eq!(wide.bytes(), 4 * selected.bytes(), "u16 plane tree is 4x smaller");
-        let want = wide.kmm(&a, m, 1);
-        assert_eq!(selected.kmm(&a, m, 1), want);
-        assert_eq!(selected.kmm(&a, m, 3), want);
+        let want = wide.kmm(KernelSel::Scalar, &a, m, 1);
+        assert_eq!(selected.kmm(KernelSel::Scalar, &a, m, 1), want);
+        assert_eq!(selected.kmm(KernelSel::Scalar, &a, m, 3), want);
         let mid = LanePackedKmmB::pack_in(LaneId::U32, &b, k, n, w, digits);
-        assert_eq!(mid.kmm(&a, m, 2), want);
+        assert_eq!(mid.kmm(KernelSel::Scalar, &a, m, 2), want);
+        // The SIMD selection serves identical bits off the same planes
+        // (scalar fallback inside the wrapper on hosts without SIMD).
+        if crate::fast::kernel::simd_supported(selected.lane()) {
+            assert_eq!(selected.kmm(KernelSel::Simd, &a, m, 1), want);
+        }
     }
 
     #[test]

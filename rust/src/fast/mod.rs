@@ -147,7 +147,9 @@ pub use gemm::{
     gemm_into, gemm_into_threads, gemm_prepacked, gemm_prepacked_into,
     gemm_prepacked_into_threads, gemm_prepacked_threads, Blocking,
 };
-pub use kernel::{Kernel, Kernel1x1, Kernel8x4};
+pub use kernel::{
+    select_kernel, simd_supported, Kernel, Kernel1x1, Kernel8x4, Kernel8x4Simd, KernelSel,
+};
 pub use kmm::{LanePackedKmmB, PackedKmmB};
 pub use lane::{
     check_width, lane_exact, required_acc_bits, select_lane, select_lane_strassen,

@@ -44,7 +44,7 @@
 //! form the coordinator's weight registry stores and routes on.
 
 use crate::fast::gemm::Blocking;
-use crate::fast::kernel::{Kernel, Kernel8x4};
+use crate::fast::kernel::{Kernel, Kernel8x4, Kernel8x4Simd, KernelSel};
 use crate::fast::lane::{narrow_plane, widen_acc, Element, LaneId};
 
 /// Pack the `rows × cols` block of row-major `src` (row stride `lda`)
@@ -359,25 +359,37 @@ impl LanePackedB {
     /// lane and widening the result back to `u128` (bit-exact with the
     /// fresh path at the lane's contract; the activation must fit the
     /// lane's storage, which holds whenever it fits the width the entry
-    /// was packed for).
-    pub fn gemm(&self, a: &[u64], m: usize, threads: usize) -> Vec<u128> {
+    /// was packed for). `kernel` is the plan-resolved microkernel
+    /// selection: the packed layout is kernel-independent (both 8×4
+    /// kernels share `MR × NR` geometry), so one packing serves either.
+    pub fn gemm(&self, kernel: KernelSel, a: &[u64], m: usize, threads: usize) -> Vec<u128> {
+        match kernel {
+            KernelSel::Scalar => self.gemm_with(&Kernel8x4, a, m, threads),
+            KernelSel::Simd => self.gemm_with(&Kernel8x4Simd, a, m, threads),
+        }
+    }
+
+    fn gemm_with<K>(&self, kernel: &K, a: &[u64], m: usize, threads: usize) -> Vec<u128>
+    where
+        K: Kernel<u16> + Kernel<u32> + Kernel<u64> + Sync,
+    {
         use crate::fast::gemm::gemm_prepacked_threads;
         match self {
             LanePackedB::U16(p) => widen_acc::<u16>(gemm_prepacked_threads(
-                &Kernel8x4,
+                kernel,
                 &narrow_plane::<u16>(a),
                 p,
                 m,
                 threads,
             )),
             LanePackedB::U32(p) => widen_acc::<u32>(gemm_prepacked_threads(
-                &Kernel8x4,
+                kernel,
                 &narrow_plane::<u32>(a),
                 p,
                 m,
                 threads,
             )),
-            LanePackedB::U64(p) => gemm_prepacked_threads(&Kernel8x4, a, p, m, threads),
+            LanePackedB::U64(p) => gemm_prepacked_threads(kernel, a, p, m, threads),
         }
     }
 }
@@ -515,7 +527,13 @@ mod tests {
         // Both lanes serve identical bits.
         let m = 9;
         let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
-        assert_eq!(narrow.gemm(&a, m, 1), wide.gemm(&a, m, 2));
+        let want = wide.gemm(KernelSel::Scalar, &a, m, 2);
+        assert_eq!(narrow.gemm(KernelSel::Scalar, &a, m, 1), want);
+        // The SIMD selection serves identical bits off the same panels
+        // (scalar fallback inside the wrapper on hosts without SIMD).
+        if crate::fast::kernel::simd_supported(narrow.lane()) {
+            assert_eq!(narrow.gemm(KernelSel::Simd, &a, m, 1), want);
+        }
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //!   ([`required_acc_bits`]),
 //! - thread-budget resolution with the documented precedence
 //!   ([`crate::util::pool::resolve_threads`]: explicit request >
-//!   `KMM_THREADS` > fallback of 1)
+//!   `KMM_THREADS` > fallback of 1),
+//! - microkernel dispatch ([`select_kernel`]: `KMM_KERNEL` override >
+//!   SIMD where [`simd_supported`] proves the host, scalar fallback
+//!   everywhere else) — resolved once here so every execution and
+//!   every bound serving path inherits the same kernel for free
 //!
 //! — returning a typed [`PlanError`] instead of panicking deep inside a
 //! driver. A built plan then executes any number of times with zero
@@ -33,7 +37,7 @@
 
 use crate::algo::bits;
 use crate::fast::gemm::{self, Blocking};
-use crate::fast::kernel::Kernel8x4;
+use crate::fast::kernel::{select_kernel, simd_supported, Kernel, Kernel8x4, Kernel8x4Simd, KernelSel};
 use crate::fast::kmm::{self, LanePackedKmmB};
 use crate::fast::lane::{
     check_width, narrow_plane, required_acc_bits, select_lane, select_lane_strassen,
@@ -351,6 +355,7 @@ pub struct MatmulPlan {
     algo: PlanAlgo,
     lane: LaneId,
     threads: usize,
+    kernel: KernelSel,
 }
 
 impl MatmulPlan {
@@ -449,6 +454,10 @@ impl MatmulPlan {
             }
         };
         let threads = pool::resolve_threads(threads, 1);
+        // The one kernel-dispatch point: resolved against the *final*
+        // lane, so the SIMD kernel is only ever selected where
+        // simd_supported proved the host can run it.
+        let kernel = select_kernel(lane);
         Ok(MatmulPlan {
             m,
             k,
@@ -457,7 +466,22 @@ impl MatmulPlan {
             algo,
             lane,
             threads,
+            kernel,
         })
+    }
+
+    /// Override the resolved microkernel — the programmatic form of the
+    /// `KMM_KERNEL` environment override, used by the differential test
+    /// grids to pin scalar-vs-SIMD pairs without touching process
+    /// state. Requesting [`KernelSel::Simd`] on a host (or lane)
+    /// without SIMD support clamps back to the scalar kernel, so the
+    /// returned plan is always executable.
+    pub fn with_kernel(mut self, kernel: KernelSel) -> MatmulPlan {
+        self.kernel = match kernel {
+            KernelSel::Simd if !simd_supported(self.lane) => KernelSel::Scalar,
+            other => other,
+        };
+        self
     }
 
     /// Output rows the plan was built for.
@@ -505,12 +529,32 @@ impl MatmulPlan {
         self.threads
     }
 
+    /// The microkernel implementation the plan resolved to at build
+    /// time (scalar fallback or the host's SIMD variant).
+    pub fn kernel(&self) -> KernelSel {
+        self.kernel
+    }
+
+    /// The resolved kernel's label for this plan's lane (e.g. `8x4`,
+    /// `avx2-8x4`, `neon-8x4`) — what benches, stats, and the CLI
+    /// report per execution.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name(self.lane)
+    }
+
     /// One-line human description of the resolved plan — what the CLI
     /// prints so operators can see which configuration actually serves.
     pub fn describe(&self) -> String {
         format!(
-            "{} {}x{}x{} w={} lane={} threads={}",
-            self.algo, self.m, self.k, self.n, self.w, self.lane, self.threads
+            "{} {}x{}x{} w={} lane={} threads={} kernel={}",
+            self.algo,
+            self.m,
+            self.k,
+            self.n,
+            self.w,
+            self.lane,
+            self.threads,
+            self.kernel_name()
         )
     }
 
@@ -563,17 +607,33 @@ impl MatmulPlan {
                 "operand exceeds w={} bits",
                 self.w
             );
-            gemm::gemm_into_threads(
-                &Kernel8x4,
-                &Blocking::default(),
-                self.threads,
-                a,
-                b,
-                self.m,
-                self.k,
-                self.n,
-                c,
-            );
+            // On the u64 lane both selections run the scalar datapath
+            // (Kernel8x4Simd delegates), but dispatch on the resolved
+            // kernel anyway so the plan's report never lies.
+            match self.kernel {
+                KernelSel::Scalar => gemm::gemm_into_threads(
+                    &Kernel8x4,
+                    &Blocking::default(),
+                    self.threads,
+                    a,
+                    b,
+                    self.m,
+                    self.k,
+                    self.n,
+                    c,
+                ),
+                KernelSel::Simd => gemm::gemm_into_threads(
+                    &Kernel8x4Simd,
+                    &Blocking::default(),
+                    self.threads,
+                    a,
+                    b,
+                    self.m,
+                    self.k,
+                    self.n,
+                    c,
+                ),
+            }
             return;
         }
         for (dst, v) in c.iter_mut().zip(self.execute(a, b)) {
@@ -582,14 +642,32 @@ impl MatmulPlan {
     }
 
     /// The lane-monomorphized hot path: both decompositions through the
-    /// blocked drivers at the resolved thread budget.
-    fn run<E: Element>(&self, a: &[E], b: &[E]) -> Vec<E::Acc> {
+    /// blocked drivers at the resolved thread budget, on the kernel the
+    /// build resolved. The `Kernel8x4Simd: Kernel<E>` bound holds for
+    /// every lane (the u64 impl delegates to scalar), so the dispatch
+    /// stays total.
+    fn run<E: Element>(&self, a: &[E], b: &[E]) -> Vec<E::Acc>
+    where
+        Kernel8x4Simd: Kernel<E>,
+    {
+        match self.kernel {
+            KernelSel::Scalar => self.run_with(&Kernel8x4, a, b),
+            KernelSel::Simd => self.run_with(&Kernel8x4Simd, a, b),
+        }
+    }
+
+    fn run_with<E: Element, K: Kernel<E> + Sync>(
+        &self,
+        kernel: &K,
+        a: &[E],
+        b: &[E],
+    ) -> Vec<E::Acc> {
         match self.algo {
             PlanAlgo::Mm => {
-                gemm::gemm_threads(&Kernel8x4, a, b, self.m, self.k, self.n, self.threads)
+                gemm::gemm_threads(kernel, a, b, self.m, self.k, self.n, self.threads)
             }
             PlanAlgo::Kmm { digits } => kmm::kmm_threads(
-                &Kernel8x4,
+                kernel,
                 a,
                 b,
                 self.m,
@@ -749,12 +827,13 @@ impl BoundPlan {
     /// stream per request, so no `m` appears).
     pub fn describe(&self) -> String {
         format!(
-            "{} B={}x{} w={} lane={} ({} packed bytes)",
+            "{} B={}x{} w={} lane={} kernel={} ({} packed bytes)",
             self.plan.algo,
             self.plan.k,
             self.plan.n,
             self.plan.w,
             self.plan.lane,
+            self.plan.kernel_name(),
             self.bytes()
         )
     }
@@ -778,9 +857,12 @@ impl BoundPlan {
         );
         let m = a.len() / k;
         let threads = threads.max(1);
+        // The packed layout is kernel-independent (both 8x4 kernels
+        // share MR x NR geometry), so the bound operand serves either
+        // selection; the plan's resolved kernel rides along here.
         match &self.operand {
-            BoundOperand::Mm(p) => p.gemm(a, m, threads),
-            BoundOperand::Kmm(p) => p.kmm(a, m, threads),
+            BoundOperand::Mm(p) => p.gemm(self.plan.kernel, a, m, threads),
+            BoundOperand::Kmm(p) => p.kmm(self.plan.kernel, a, m, threads),
             BoundOperand::Strassen(t) => t.execute(a, threads),
         }
     }
@@ -1093,6 +1175,68 @@ mod tests {
             };
             let plan = MatmulPlan::build(spec).unwrap();
             assert_eq!(Some(plan.lane()), select_lane(w, k, digits), "w={w}");
+        }
+    }
+
+    #[test]
+    fn build_resolves_a_kernel_and_describe_reports_it() {
+        let plan = MatmulPlan::build(PlanSpec::mm(2, 8, 2, 8).with_threads(1)).unwrap();
+        // build() must agree with the selector for the resolved lane,
+        // under whatever KMM_KERNEL the suite runs with.
+        assert_eq!(plan.kernel(), select_kernel(plan.lane()));
+        assert_eq!(plan.kernel_name(), plan.kernel().name(plan.lane()));
+        let described = plan.describe();
+        assert!(
+            described.contains(&format!("kernel={}", plan.kernel_name())),
+            "{described}"
+        );
+        // The u64 lane never resolves SIMD.
+        let wide =
+            MatmulPlan::build(PlanSpec::mm(2, 8, 2, 8).with_threads(1).in_lane(LaneId::U64))
+                .unwrap();
+        assert_eq!(wide.kernel(), KernelSel::Scalar);
+        assert!(wide.describe().contains("kernel=8x4"), "{}", wide.describe());
+    }
+
+    #[test]
+    fn with_kernel_overrides_and_clamps() {
+        let plan = MatmulPlan::build(PlanSpec::mm(2, 8, 2, 8).with_threads(1)).unwrap();
+        let lane = plan.lane();
+        assert_eq!(plan.clone().with_kernel(KernelSel::Scalar).kernel(), KernelSel::Scalar);
+        let forced = plan.clone().with_kernel(KernelSel::Simd);
+        if simd_supported(lane) {
+            assert_eq!(forced.kernel(), KernelSel::Simd);
+        } else {
+            // Unsupported hosts clamp back: the plan stays executable.
+            assert_eq!(forced.kernel(), KernelSel::Scalar);
+        }
+        let wide =
+            MatmulPlan::build(PlanSpec::mm(2, 8, 2, 8).with_threads(1).in_lane(LaneId::U64))
+                .unwrap();
+        assert_eq!(wide.with_kernel(KernelSel::Simd).kernel(), KernelSel::Scalar);
+    }
+
+    #[test]
+    fn kernel_selections_execute_bit_exactly() {
+        // Scalar vs SIMD across algos, on both execute and the bound
+        // path — the plan-level face of the kernel differential grids.
+        let mut rng = Rng::new(55);
+        let (m, k, n, w) = (9usize, 33usize, 7usize, 10u32);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        for algo in [PlanAlgo::Mm, PlanAlgo::Kmm { digits: 2 }] {
+            let mut spec = PlanSpec::mm(m, k, n, w).with_threads(1);
+            spec.algo = algo;
+            let plan = MatmulPlan::build(spec).unwrap();
+            let scalar = plan.clone().with_kernel(KernelSel::Scalar);
+            let simd = plan.clone().with_kernel(KernelSel::Simd);
+            let want = scalar.execute(&a, &b);
+            assert_eq!(simd.execute(&a, &b), want, "{algo} execute");
+            assert_eq!(simd.bind_b(&b).execute(&a), want, "{algo} bound");
+            let mut c = vec![1u128; m * n];
+            simd.execute_into(&a, &b, &mut c);
+            let accumulated: Vec<u128> = want.iter().map(|&v| v + 1).collect();
+            assert_eq!(c, accumulated, "{algo} execute_into");
         }
     }
 }

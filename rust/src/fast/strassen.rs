@@ -173,7 +173,8 @@ fn leaf_spec(plan: &MatmulPlan, m: usize, k: usize, n: usize) -> PlanSpec {
 /// packed-panel engine), widening to `i128` for the combination layer.
 fn leaf_mul(plan: &MatmulPlan, a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<i128> {
     let leaf = MatmulPlan::build(leaf_spec(plan, m, k, n))
-        .expect("the Strassen headroom rule proved the leaf contract at build time");
+        .expect("the Strassen headroom rule proved the leaf contract at build time")
+        .with_kernel(plan.kernel());
     leaf.execute(a, b)
         .into_iter()
         .map(|v| i128::try_from(v).expect("leaf products fit the lane accumulator"))
@@ -290,8 +291,11 @@ struct Split {
 
 fn bind_node(plan: &MatmulPlan, b: &[u64], k: usize, n: usize, we: u32, level: u32) -> Node {
     if level == 0 {
+        // Leaves inherit the root plan's resolved kernel, so the whole
+        // recursion runs one implementation end to end.
         let leaf = MatmulPlan::build(leaf_spec(plan, 1, k, n))
-            .expect("the Strassen headroom rule proved the leaf contract at build time");
+            .expect("the Strassen headroom rule proved the leaf contract at build time")
+            .with_kernel(plan.kernel());
         return Node::Leaf(leaf.bind_b(b));
     }
     let mask = (1u64 << we) - 1;

@@ -111,6 +111,10 @@ pub struct LayerRun {
     /// Every served stream reports a mode, so this is `None` only for
     /// a layer that served zero streams.
     pub mode: Option<Mode>,
+    /// The fast-engine microkernel the layer's plan resolved to
+    /// (`8x4`, `avx2-8x4`, `neon-8x4`; `None` on backends that do not
+    /// run the blocked engine).
+    pub kernel: Option<&'static str>,
 }
 
 impl LayerRun {
@@ -180,6 +184,13 @@ impl InferRun {
                         None => Json::Null,
                     },
                 );
+                o.insert(
+                    "kernel".to_string(),
+                    match l.kernel {
+                        Some(k) => Json::Str(k.to_string()),
+                        None => Json::Null,
+                    },
+                );
                 Json::Object(o)
             })
             .collect();
@@ -214,13 +225,13 @@ impl InferRun {
         );
         let _ = writeln!(
             s,
-            "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>12} {:>10}",
-            "layer", "M", "K", "N", "w", "plan", "lane", "ms", "Mops/s"
+            "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>8} {:>12} {:>10}",
+            "layer", "M", "K", "N", "w", "plan", "lane", "kernel", "ms", "Mops/s"
         );
         for l in &self.layers {
             let _ = writeln!(
                 s,
-                "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>12.3} {:>10.1}",
+                "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>8} {:>12.3} {:>10.1}",
                 l.label,
                 l.m,
                 l.k,
@@ -228,6 +239,7 @@ impl InferRun {
                 l.w,
                 l.mode.map_or("-", |m| m.name()),
                 l.lane.map_or("-", LaneId::name),
+                l.kernel.unwrap_or("-"),
                 l.seconds * 1e3,
                 l.ops_per_s() / 1e6
             );
@@ -312,6 +324,7 @@ pub fn run_workload(
         let mut cycles = 0u64;
         let mut lane: Option<LaneId> = None;
         let mut mode: Option<Mode> = None;
+        let mut kernel: Option<&'static str> = None;
         for stream in 0..streams {
             let a = Mat::random(g.m, g.k, g.w, &mut rng);
             let t0 = Instant::now();
@@ -327,6 +340,7 @@ pub fn run_workload(
             // first.
             lane = lane.or(res.lane);
             mode = mode.or(Some(res.mode));
+            kernel = kernel.or(res.kernel);
             // Oracle work would swamp the timings; check the first
             // stream of each small layer only.
             if cfg.verify
@@ -348,6 +362,7 @@ pub fn run_workload(
             cycles,
             lane,
             mode,
+            kernel,
         });
     }
     Ok(InferRun {
@@ -459,6 +474,15 @@ mod tests {
             run.layers.iter().all(|l| l.mode == Some(Mode::Mm1)),
             "w=8 layers resolve to the native mm1 plan"
         );
+        // Fast-backend layers record the resolved microkernel (the
+        // exact name is host-dependent: 8x4 / avx2-8x4 / neon-8x4) and
+        // the table has a column for it.
+        assert!(run.table().contains("kernel"));
+        assert!(
+            run.layers.iter().all(|l| l.kernel.is_some_and(|k| k.contains("8x4"))),
+            "{:?}",
+            run.layers.iter().map(|l| l.kernel).collect::<Vec<_>>()
+        );
     }
 
     #[test]
@@ -511,6 +535,12 @@ mod tests {
         for layer in parsed.get("layers").and_then(Json::as_array).unwrap() {
             assert_eq!(layer.get("lane").and_then(Json::as_str), Some("u16"));
             assert_eq!(layer.get("mode").and_then(Json::as_str), Some("mm1"));
+            // Schema: the kernel key is always present; on the fast
+            // backend it names the resolved 8x4 variant.
+            assert!(
+                layer.get("kernel").and_then(Json::as_str).is_some_and(|k| k.contains("8x4")),
+                "{layer:?}"
+            );
         }
         assert_eq!(
             parsed.get("total_macs").and_then(Json::as_i64),

@@ -182,11 +182,12 @@ fn cmd_gemm(args: &Args) -> i32 {
         Ok(r) => {
             let exact = r.c == matmul_oracle(&a, &b);
             println!(
-                "GEMM {m}x{k}x{n} w={w} via {} ({threads} thread{}): mode {:?}, lane {}, {} cycles, {} tile jobs, exact={exact}",
+                "GEMM {m}x{k}x{n} w={w} via {} ({threads} thread{}): mode {:?}, lane {}, kernel {}, {} cycles, {} tile jobs, exact={exact}",
                 be.name(),
                 if threads == 1 { "" } else { "s" },
                 r.mode,
                 r.lane.map_or("-", kmm::fast::LaneId::name),
+                r.kernel.unwrap_or("-"),
                 r.stats.cycles,
                 r.stats.tile_jobs
             );
@@ -368,13 +369,14 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let stats = srv.shutdown();
     println!(
-        "served {} requests / {} batches on {} shard{}; modes {:?}; lanes {:?}; device {:.3} ms @326 MHz",
+        "served {} requests / {} batches on {} shard{}; modes {:?}; lanes {:?}; kernels {:?}; device {:.3} ms @326 MHz",
         stats.requests,
         stats.batches,
         threads,
         if threads == 1 { "" } else { "s" },
         stats.by_mode,
         stats.by_lane,
+        stats.by_kernel,
         cycles as f64 / 326e6 * 1e3
     );
     print_serve_stats(&stats);

@@ -1,5 +1,5 @@
 //! Schema validation for the bench artifacts: `BENCH_hotpath.json`
-//! (**schema 4**) and the serve load-generator's `BENCH_serve.json`
+//! (**schema 5**) and the serve load-generator's `BENCH_serve.json`
 //! (**schema 1**, [`validate_serve`]).
 //!
 //! One checker per artifact, shared by the bench binary (which runs it
@@ -16,15 +16,20 @@
 //!   and the algorithm-crossover sections timing mm, kmm, strassen,
 //!   and the Strassen–Karatsuba hybrid on one shape, with the
 //!   `crossover_*` speedup ratios
+//! - 5: per-section `kernel` (the resolved microkernel label or
+//!   `null`), the SIMD-vs-scalar sections, their `simd_vs_scalar_*`
+//!   speedup pair, and the `simd_gate_retried`/`simd_gate_enforced`
+//!   flags (the gate only binds on hosts whose plans resolve a SIMD
+//!   kernel)
 //!
 //! [`PlanAlgo`]: crate::fast::PlanAlgo
 
 use crate::util::json::Json;
 
 /// The schema revision this crate emits and validates.
-pub const HOTPATH_SCHEMA: i64 = 4;
+pub const HOTPATH_SCHEMA: i64 = 5;
 
-/// Speedup-ratio keys every schema-4 document must carry.
+/// Speedup-ratio keys every schema-5 document must carry.
 pub const REQUIRED_SPEEDUPS: &[&str] = &[
     "fast_mm_vs_tallied_mm1",
     "fast_kmm_vs_tallied_kmm",
@@ -34,7 +39,14 @@ pub const REQUIRED_SPEEDUPS: &[&str] = &[
     "plan_reuse_vs_rebuild",
     "crossover_strassen_vs_mm",
     "crossover_strassen_kmm_vs_kmm",
+    "simd_vs_scalar_u16",
+    "simd_vs_scalar_u32",
 ];
+
+/// The microkernel labels a schema-5 `kernel` field may carry: the
+/// portable scalar tile kernel plus the per-architecture SIMD variants
+/// (see `fast::kernel` for the dispatch rules).
+pub const KERNEL_NAMES: &[&str] = &["8x4", "avx2-8x4", "neon-8x4"];
 
 /// The resolved-algorithm labels the schema-4 crossover sections must
 /// cover (the [`PlanAlgo`] display forms at the bench's crossover
@@ -111,7 +123,21 @@ fn validate_section(i: usize, s: &Json) -> Result<(), String> {
     Ok(())
 }
 
-/// Validate a parsed `BENCH_hotpath.json` document against schema 4.
+/// Schema 5: the resolved-microkernel label on a hotpath section —
+/// checked only by [`validate_hotpath`]; the serve sections predate the
+/// field and stay on serve schema 1.
+fn validate_kernel(i: usize, s: &Json) -> Result<(), String> {
+    match s.get("kernel") {
+        Some(Json::Null) => Ok(()),
+        Some(Json::Str(k)) if KERNEL_NAMES.contains(&k.as_str()) => Ok(()),
+        other => Err(format!(
+            "sections[{i}].kernel must be one of {KERNEL_NAMES:?} or null (schema 5), \
+             got {other:?}"
+        )),
+    }
+}
+
+/// Validate a parsed `BENCH_hotpath.json` document against schema 5.
 ///
 /// Returns the first violation as a human-readable message; a document
 /// that passes is safe for every name-keyed trajectory consumer the
@@ -131,7 +157,13 @@ pub fn validate_hotpath(doc: &Json) -> Result<(), String> {
         Some(t) if t >= 1 => {}
         other => return Err(format!("`threads_max` must be an integer >= 1, got {other:?}")),
     }
-    for flag in ["speedup_gate_retried", "lane_gate_retried", "plan_gate_retried"] {
+    for flag in [
+        "speedup_gate_retried",
+        "lane_gate_retried",
+        "plan_gate_retried",
+        "simd_gate_retried",
+        "simd_gate_enforced",
+    ] {
         match doc.get(flag) {
             Some(Json::Bool(_)) => {}
             _ => return Err(format!("`{flag}` must be a bool")),
@@ -146,6 +178,7 @@ pub fn validate_hotpath(doc: &Json) -> Result<(), String> {
     }
     for (i, s) in secs.iter().enumerate() {
         validate_section(i, s)?;
+        validate_kernel(i, s)?;
     }
     // Schema 4: the crossover sections cover all four algorithms.
     for algo in CROSSOVER_ALGOS {
@@ -308,6 +341,7 @@ mod tests {
             s.insert("w".to_string(), Json::Int(8));
             s.insert("lane".to_string(), Json::Str("u16".to_string()));
             s.insert("algo".to_string(), Json::Str((*algo).to_string()));
+            s.insert("kernel".to_string(), Json::Str("8x4".to_string()));
             sections.push(Json::Object(s));
         }
         let mut speedups = BTreeMap::new();
@@ -321,6 +355,8 @@ mod tests {
         top.insert("speedup_gate_retried".to_string(), Json::Bool(false));
         top.insert("lane_gate_retried".to_string(), Json::Bool(false));
         top.insert("plan_gate_retried".to_string(), Json::Bool(false));
+        top.insert("simd_gate_retried".to_string(), Json::Bool(false));
+        top.insert("simd_gate_enforced".to_string(), Json::Bool(false));
         top.insert("sections".to_string(), Json::Array(sections));
         top.insert("speedups".to_string(), Json::Object(speedups));
         Json::Object(top)
@@ -352,26 +388,61 @@ mod tests {
         assert!(e.contains("speedups"), "{e}");
         let e = validate_hotpath(&strip("plan_gate_retried")).unwrap_err();
         assert!(e.contains("plan_gate_retried"), "{e}");
+        let e = validate_hotpath(&strip("simd_gate_retried")).unwrap_err();
+        assert!(e.contains("simd_gate_retried"), "{e}");
+        let e = validate_hotpath(&strip("simd_gate_enforced")).unwrap_err();
+        assert!(e.contains("simd_gate_enforced"), "{e}");
 
         // Wrong schema revision.
         let mut doc = minimal_doc();
         if let Json::Object(m) = &mut doc {
-            m.insert("schema".to_string(), Json::Int(3));
+            m.insert("schema".to_string(), Json::Int(4));
         }
         let e = validate_hotpath(&doc).unwrap_err();
-        assert!(e.contains("must be 4"), "{e}");
+        assert!(e.contains("must be 5"), "{e}");
 
-        // A section missing the schema-4 algo field.
-        let mut doc = minimal_doc();
-        if let Json::Object(m) = &mut doc {
-            if let Some(Json::Array(secs)) = m.get_mut("sections") {
-                if let Json::Object(s0) = &mut secs[0] {
-                    s0.remove("algo");
+        // A section mutation helper for the per-section field checks.
+        let patch_section0 = |f: &dyn Fn(&mut BTreeMap<String, Json>)| {
+            let mut doc = minimal_doc();
+            if let Json::Object(m) = &mut doc {
+                if let Some(Json::Array(secs)) = m.get_mut("sections") {
+                    if let Json::Object(s0) = &mut secs[0] {
+                        f(s0);
+                    }
                 }
             }
-        }
-        let e = validate_hotpath(&doc).unwrap_err();
+            doc
+        };
+
+        // A section missing the schema-4 algo field.
+        let e = validate_hotpath(&patch_section0(&|s0| {
+            s0.remove("algo");
+        }))
+        .unwrap_err();
         assert!(e.contains("algo"), "{e}");
+
+        // Schema 5: the kernel field must exist and name a known
+        // kernel (or be null).
+        let e = validate_hotpath(&patch_section0(&|s0| {
+            s0.remove("kernel");
+        }))
+        .unwrap_err();
+        assert!(e.contains("kernel"), "{e}");
+        let e = validate_hotpath(&patch_section0(&|s0| {
+            s0.insert("kernel".to_string(), Json::Str("sse9-9x9".to_string()));
+        }))
+        .unwrap_err();
+        assert!(e.contains("kernel"), "{e}");
+        validate_hotpath(&patch_section0(&|s0| {
+            s0.insert("kernel".to_string(), Json::Null);
+        }))
+        .expect("null kernel is legal");
+        for name in KERNEL_NAMES {
+            validate_hotpath(&patch_section0(&|s0| {
+                s0.insert("kernel".to_string(), Json::Str((*name).to_string()));
+            }))
+            .unwrap_or_else(|e| panic!("{name} must be a legal kernel label: {e}"));
+        }
 
         // A crossover algorithm dropped entirely.
         let mut doc = minimal_doc();
@@ -386,14 +457,16 @@ mod tests {
         assert!(e.contains("crossover"), "{e}");
 
         // A required speedup dropped.
-        let mut doc = minimal_doc();
-        if let Json::Object(m) = &mut doc {
-            if let Some(Json::Object(sp)) = m.get_mut("speedups") {
-                sp.remove("crossover_strassen_vs_mm");
+        for key in ["crossover_strassen_vs_mm", "simd_vs_scalar_u16"] {
+            let mut doc = minimal_doc();
+            if let Json::Object(m) = &mut doc {
+                if let Some(Json::Object(sp)) = m.get_mut("speedups") {
+                    sp.remove(key);
+                }
             }
+            let e = validate_hotpath(&doc).unwrap_err();
+            assert!(e.contains(key), "{e}");
         }
-        let e = validate_hotpath(&doc).unwrap_err();
-        assert!(e.contains("crossover_strassen_vs_mm"), "{e}");
     }
 
     #[test]

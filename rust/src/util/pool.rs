@@ -68,15 +68,22 @@ pub fn env_threads_or(fallback: usize) -> usize {
         Ok(raw) => parse_threads(&raw).unwrap_or_else(|| {
             static WARN_ONCE: std::sync::Once = std::sync::Once::new();
             WARN_ONCE.call_once(|| {
-                eprintln!(
-                    "warning: KMM_THREADS={raw:?} is not a positive integer; \
-                     falling back to {fallback}"
-                );
+                eprintln!("{}", malformed_threads_warning(&raw));
             });
             fallback
         }),
         Err(_) => fallback,
     }
+}
+
+/// The once-per-process warning [`env_threads_or`] prints for a
+/// malformed `KMM_THREADS`. Deliberately names only the malformed
+/// value: the fallback differs per caller (the CLI uses 1, the benches
+/// the hardware thread count), and the `Once` latches whichever caller
+/// warms it first — interpolating that caller's fallback would print a
+/// number that is wrong for every *other* call site in the process.
+fn malformed_threads_warning(raw: &str) -> String {
+    format!("warning: ignoring KMM_THREADS={raw:?}: not a positive integer")
 }
 
 /// Default worker count: `KMM_THREADS` when set, otherwise
@@ -236,6 +243,28 @@ mod tests {
         assert_eq!(parse_threads("-2"), None);
         assert_eq!(parse_threads("2.5"), None);
         assert_eq!(parse_threads("4x"), None);
+    }
+
+    #[test]
+    fn malformed_threads_warning_names_no_fallback() {
+        // The Once latches the first caller's message for the whole
+        // process, so the text must be caller-independent: it names the
+        // malformed value and nothing else. A message interpolating the
+        // per-call fallback (the old behavior) would print the *first*
+        // caller's number — e.g. a bench warming the Once with
+        // fallback=nproc makes a later `kmm serve` warn with a count it
+        // never uses.
+        for raw in ["0", "abc", "", "-2", "2.5"] {
+            let msg = malformed_threads_warning(raw);
+            assert!(msg.starts_with("warning: "), "{msg}");
+            assert!(msg.contains(&format!("KMM_THREADS={raw:?}")), "{msg}");
+            assert!(msg.ends_with("not a positive integer"), "{msg}");
+            assert!(!msg.contains("falling back"), "{msg}");
+        }
+        // No digits beyond the malformed value itself: nothing numeric
+        // (a fallback count) can leak into the fixed message text.
+        let fixed = malformed_threads_warning("x");
+        assert!(!fixed.contains(|c: char| c.is_ascii_digit()), "{fixed}");
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Golden-file tests for the bench artifact contracts
-//! (`BENCH_hotpath.json` schema 4 and `BENCH_serve.json` schema 1):
+//! (`BENCH_hotpath.json` schema 5 and `BENCH_serve.json` schema 1):
 //! each checked-in example document must pass the same
 //! `report::bench_schema` validator the bench binary runs on its own
 //! output before writing it, round-trip through the crate's JSON codec
@@ -18,12 +18,12 @@ use kmm::report::bench_schema::{
 };
 use kmm::util::json::Json;
 
-const GOLDEN: &str = include_str!("golden/BENCH_hotpath.schema4.example.json");
+const GOLDEN: &str = include_str!("golden/BENCH_hotpath.schema5.example.json");
 const SERVE_GOLDEN: &str = include_str!("golden/BENCH_serve.schema1.example.json");
 
 #[test]
 fn golden_document_passes_the_shared_validator() {
-    let doc = validate_hotpath_str(GOLDEN).expect("golden schema-4 document validates");
+    let doc = validate_hotpath_str(GOLDEN).expect("golden schema-5 document validates");
     assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(HOTPATH_SCHEMA));
     // Every required speedup and every crossover algorithm label the
     // validator demands is actually present in the example — the file
@@ -69,13 +69,36 @@ fn malformed_documents_error_instead_of_panicking() {
         (r#"{"bench": "other"}"#, "hotpath"),
         // A stale schema revision is refused outright.
         (
-            &GOLDEN.replacen("\"schema\": 4", "\"schema\": 3", 1),
-            "must be 4",
+            &GOLDEN.replacen("\"schema\": 5", "\"schema\": 4", 1),
+            "must be 5",
         ),
         // A section stripped of its schema-4 algo label.
         (
             &GOLDEN.replacen("\"algo\": null", "\"algo\": 7", 1),
             "algo",
+        ),
+        // A section with a malformed or unknown schema-5 kernel label.
+        (
+            &GOLDEN.replacen("\"kernel\": null", "\"kernel\": 7", 1),
+            "kernel",
+        ),
+        (
+            &GOLDEN.replacen("\"kernel\": \"8x4\"", "\"kernel\": \"9x9\"", 1),
+            "kernel",
+        ),
+        // The simd-vs-scalar gate flags are load-bearing booleans.
+        (
+            &GOLDEN.replacen(
+                "\"simd_gate_enforced\": true",
+                "\"simd_gate_enforced\": \"yes\"",
+                1,
+            ),
+            "simd_gate_enforced",
+        ),
+        // A schema-5 required ratio renamed away.
+        (
+            &GOLDEN.replacen("simd_vs_scalar_u16", "simd_vs_scalar", 1),
+            "simd_vs_scalar_u16",
         ),
         // A crossover label renamed away breaks coverage.
         (
@@ -124,8 +147,12 @@ fn validator_mutations_verify_each_replacement_took_effect() {
     // The replacen-based mutations above silently become no-ops if the
     // golden text drifts; pin the substrings they rely on.
     for needle in [
-        "\"schema\": 4",
+        "\"schema\": 5",
         "\"algo\": null",
+        "\"kernel\": null",
+        "\"kernel\": \"8x4\"",
+        "\"simd_gate_enforced\": true",
+        "simd_vs_scalar_u16",
         "strassen-kmm[1,2]",
         "crossover_strassen_vs_mm",
         "\"median_s\": 0.0147",

@@ -13,7 +13,10 @@ use common::{fast_as_i128, ones};
 use kmm::algo::matrix::{matmul_oracle, Mat};
 use kmm::algo::opcount::Tally;
 use kmm::algo::{kmm as kmm_ref, mm1};
-use kmm::fast::{self, lane_exact, required_acc_bits, select_lane, Blocking, LaneId};
+use kmm::fast::{
+    self, lane_exact, required_acc_bits, select_lane, simd_supported, Blocking, KernelSel,
+    LaneChoice, LaneId, MatmulPlan, PlanAlgo, PlanSpec,
+};
 use kmm::util::rng::Rng;
 
 #[test]
@@ -50,7 +53,7 @@ fn every_exact_lane_matches_mm1_across_the_grid() {
                         &Blocking::default(),
                     );
                     assert_eq!(packed.lane(), lane);
-                    let served = packed.gemm(a.data(), m, threads);
+                    let served = packed.gemm(fast::select_kernel(lane), a.data(), m, threads);
                     assert_eq!(
                         fast_as_i128(&served),
                         want,
@@ -88,7 +91,7 @@ fn every_exact_lane_matches_kmm_reference_across_the_grid() {
                     );
                     let packed = fast::LanePackedKmmB::pack_in(lane, b.data(), k, n, w, 2);
                     assert_eq!((packed.lane(), packed.digits()), (lane, 2));
-                    let served = packed.kmm(a.data(), m, threads);
+                    let served = packed.kmm(fast::select_kernel(lane), a.data(), m, threads);
                     assert_eq!(
                         fast_as_i128(&served),
                         want,
@@ -210,6 +213,99 @@ fn selector_depth_boundaries_match_the_headroom_rule_exactly() {
             "w={w} k={} flips to u32",
             boundary_k + 1
         );
+    }
+}
+
+#[test]
+fn scalar_and_simd_selections_are_bit_exact_across_the_grid() {
+    // The kernel-dispatch differential: for every algo × lane × thread
+    // cell, a plan forced onto the SIMD selection must reproduce the
+    // scalar selection bit-for-bit (and both must match the exact
+    // reference) through all three execution surfaces — fresh
+    // `execute`, prepacked `bind_b`, and `execute_into`. On hosts
+    // without AVX2/NEON `with_kernel(Simd)` clamps to Scalar, so the
+    // grid degenerates to scalar-vs-scalar and stays green everywhere.
+    let mut rng = Rng::new(64);
+    for (w, lane) in [(8u32, LaneId::U16), (16, LaneId::U32), (32, LaneId::U64)] {
+        for algo in [PlanAlgo::Mm, PlanAlgo::Kmm { digits: 2 }] {
+            for threads in [1usize, 3] {
+                let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+                let a = Mat::random(m, k, w, &mut rng);
+                let b = Mat::random(k, n, w, &mut rng);
+                let want = matmul_oracle(&a, &b).to_i128_vec().unwrap();
+                let spec = PlanSpec {
+                    m,
+                    k,
+                    n,
+                    w,
+                    algo,
+                    threads: Some(threads),
+                    lane: LaneChoice::Forced(lane),
+                };
+                let scalar = MatmulPlan::build(spec).unwrap().with_kernel(KernelSel::Scalar);
+                let simd = MatmulPlan::build(spec).unwrap().with_kernel(KernelSel::Simd);
+                assert_eq!(scalar.kernel(), KernelSel::Scalar);
+                assert_eq!(
+                    simd.kernel() == KernelSel::Simd,
+                    simd_supported(lane),
+                    "with_kernel must clamp exactly when the host lacks SIMD for {lane}"
+                );
+                let ctx = format!("{lane} {algo} ({m}x{k}x{n} w={w} t={threads})");
+                let base = scalar.execute(a.data(), b.data());
+                assert_eq!(fast_as_i128(&base), want, "scalar execute {ctx}");
+                assert_eq!(simd.execute(a.data(), b.data()), base, "simd execute {ctx}");
+                assert_eq!(
+                    simd.bind_b(b.data()).execute(a.data()),
+                    base,
+                    "simd prepacked {ctx}"
+                );
+                let mut c = vec![0u128; m * n];
+                simd.execute_into(a.data(), b.data(), &mut c);
+                assert_eq!(c, base, "simd execute_into {ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_selection_is_exact_at_the_narrow_lane_headroom_boundaries() {
+    // Adversarial all-ones operands at each narrow lane's saturation
+    // point: w=12 k=256 fills the u32 accumulator to within 2²¹ of
+    // wrap, w=28 k=256 saturates u64 exactly. If a SIMD kernel widened
+    // through a signed multiply or dropped a carry, this is where it
+    // diverges from the scalar datapath.
+    for (lane, w) in [(LaneId::U16, 12u32), (LaneId::U32, 28)] {
+        let k = 256usize;
+        let (m, n) = (5usize, 4usize);
+        let (a, b) = (ones(m, k, w), ones(k, n, w));
+        let want = matmul_oracle(&a, &b).to_i128_vec().unwrap();
+        for algo in [PlanAlgo::Mm, PlanAlgo::Kmm { digits: 2 }] {
+            assert!(
+                lane_exact(lane, w, k, algo.digits()),
+                "boundary cell must be admissible: {lane} w={w} k={k} {algo}"
+            );
+            for threads in [1usize, 2] {
+                let spec = PlanSpec {
+                    m,
+                    k,
+                    n,
+                    w,
+                    algo,
+                    threads: Some(threads),
+                    lane: LaneChoice::Forced(lane),
+                };
+                for sel in [KernelSel::Scalar, KernelSel::Simd] {
+                    let plan = MatmulPlan::build(spec).unwrap().with_kernel(sel);
+                    let got = plan.execute(a.data(), b.data());
+                    assert_eq!(
+                        fast_as_i128(&got),
+                        want,
+                        "{lane} {algo} w={w} t={threads} kernel={}",
+                        plan.kernel_name()
+                    );
+                }
+            }
+        }
     }
 }
 

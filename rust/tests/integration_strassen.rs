@@ -16,8 +16,8 @@ use kmm::algo::matrix::Mat;
 use kmm::algo::mm1;
 use kmm::algo::opcount::Tally;
 use kmm::fast::{
-    select_lane_strassen, strassen_lane_exact, strassen_required_acc_bits, LaneId, MatmulPlan,
-    PlanAlgo, PlanError, PlanSpec, MAX_W,
+    select_lane_strassen, strassen_lane_exact, strassen_required_acc_bits, KernelSel, LaneId,
+    MatmulPlan, PlanAlgo, PlanError, PlanSpec, MAX_W,
 };
 use kmm::util::rng::Rng;
 
@@ -260,6 +260,53 @@ fn hybrid_boundary_is_self_calibrating_and_exact() {
         matches!(err, PlanError::StrassenHeadroom { lane: Some(LaneId::U16), .. }),
         "{err:?}"
     );
+}
+
+#[test]
+fn scalar_and_simd_kernel_selections_agree_for_every_algorithm() {
+    // The kernel-dispatch differential through the recursive drivers:
+    // Strassen and hybrid leaves inherit the root plan's resolved
+    // kernel, so forcing the SIMD selection must stay bit-exact against
+    // both the scalar selection and mm1 through the padding, the
+    // seven-product recombination, and a reused binding. Unsupported
+    // hosts clamp Simd→Scalar, so the grid is green on every arch.
+    let mut rng = Rng::new(73);
+    let (m, k, n) = (10usize, 13usize, 7usize);
+    for w in [8u32, 12] {
+        let a = rand_vec(&mut rng, m * k, w);
+        let b = rand_vec(&mut rng, k * n, w);
+        let want = mm1_oracle(&a, &b, m, k, n, w);
+        for algo in ALGOS {
+            for threads in [1usize, 2] {
+                let ctx = format!("{m}x{k}x{n} w={w} {algo} t={threads}");
+                for sel in [KernelSel::Scalar, KernelSel::Simd] {
+                    let plan = MatmulPlan::build(spec_with(m, k, n, w, algo, threads))
+                        .unwrap_or_else(|e| panic!("{ctx}: {e}"))
+                        .with_kernel(sel);
+                    assert!(
+                        plan.describe().contains(&format!("kernel={}", plan.kernel_name())),
+                        "describe must report the resolved kernel: {}",
+                        plan.describe()
+                    );
+                    let label = format!("{ctx} kernel={}", plan.kernel_name());
+                    assert_mat_eq(
+                        &fast_as_i128(&plan.execute(&a, &b)),
+                        &want,
+                        m,
+                        n,
+                        &format!("fresh {label}"),
+                    );
+                    assert_mat_eq(
+                        &fast_as_i128(&plan.bind_b(&b).execute(&a)),
+                        &want,
+                        m,
+                        n,
+                        &format!("bound {label}"),
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]
