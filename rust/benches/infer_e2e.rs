@@ -30,7 +30,7 @@ use kmm::infer::{run_workload, InferConfig, InferRun};
 use kmm::model::resnet::{resnet, ResNet};
 use kmm::util::cli::Args;
 use kmm::util::json::{finite, Json};
-use kmm::util::pool;
+use kmm::util::env as kenv;
 use std::collections::BTreeMap;
 
 /// Median of the runs' serving times; returns the medians plus the run
@@ -70,7 +70,7 @@ fn main() {
     let par = if par > 0 {
         par
     } else {
-        pool::default_threads().clamp(2, 8)
+        kenv::default_threads().clamp(2, 8)
     };
     println!("== infer e2e bench (fast engine, {par} threads) ==");
 

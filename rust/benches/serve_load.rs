@@ -36,7 +36,7 @@ use kmm::fast::LaneId;
 use kmm::report::bench_schema;
 use kmm::util::cli::Args;
 use kmm::util::json::{finite, Json};
-use kmm::util::pool;
+use kmm::util::env as kenv;
 use kmm::util::rng::Rng;
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -241,7 +241,7 @@ fn main() {
     let par = if par > 0 {
         par
     } else {
-        pool::default_threads().clamp(2, 8)
+        kenv::default_threads().clamp(2, 8)
     };
     let streams: usize = args.get("streams", 8usize).expect("--streams").max(1);
     let requests: usize = args.get("requests", 600usize).expect("--requests").max(streams);

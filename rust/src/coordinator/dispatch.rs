@@ -29,14 +29,20 @@
 //! path, and `gemm_packed` serves from the registry's prebuilt
 //! [`BoundPlan`](crate::fast::BoundPlan)s, so per-call work on the
 //! serving path is the GEMM itself, nothing else.
+//!
+//! An autotuned [`FastBackend`] ([`FastBackend::autotuned`]) routes
+//! raw-request planning through the process-wide [`PlanCache`]: the
+//! cost model picks the decomposition, lane, and blocking once per
+//! shape, every shard shares the winner, and the served
+//! [`GemmResult::tuned`] flag carries the provenance.
 
 use crate::algo::matrix::{Mat, MatAcc};
 use crate::arch::mxu::SystolicSpec;
 use crate::arch::scalable::{select_mode, Mode, ScalableKmm};
 use crate::coordinator::registry::{PackPlan, PackedWeight, NATIVE_W, SERVE_LEVELS};
 use crate::fast::{
-    check_width, select_lane, select_lane_strassen, LaneChoice, LaneId, MatmulPlan, PlanAlgo,
-    PlanSpec,
+    check_width, select_lane, select_lane_strassen, Blocking, LaneChoice, LaneId, MatmulPlan,
+    PlanAlgo, PlanCache, PlanSpec, TuneMode,
 };
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::gemm::{simulate_cycles, GemmStats};
@@ -57,6 +63,10 @@ pub struct GemmResult {
     /// `8x4`, `avx2-8x4`, `neon-8x4`; `None` on backends that do not
     /// run the blocked engine).
     pub kernel: Option<&'static str>,
+    /// Whether the plan that served this request carried autotuner
+    /// provenance (a [`PlanCache`] winner); always `false` on backends
+    /// without autotuned planning.
+    pub tuned: bool,
 }
 
 /// A validated, backend-specialized execution configuration: built once
@@ -149,6 +159,14 @@ pub trait GemmBackend {
         PackPlan::Raw
     }
 
+    /// `(hits, misses)` this backend instance observed against the
+    /// shared [`PlanCache`] through autotuned planning. `(0, 0)` for
+    /// backends that never consult the cache; the server folds these
+    /// into its per-shard statistics at shutdown.
+    fn plan_cache_counters(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
     /// Short backend label for logs/metrics.
     fn name(&self) -> &'static str;
 }
@@ -167,6 +185,7 @@ fn finish_fast(
     mode: Mode,
     lane: LaneId,
     kernel: &'static str,
+    tuned: bool,
     timing: &SystolicSpec,
 ) -> GemmResult {
     let mut c = MatAcc::zeros(m, n);
@@ -183,6 +202,7 @@ fn finish_fast(
         stats,
         lane: Some(lane),
         kernel: Some(kernel),
+        tuned,
     }
 }
 
@@ -235,6 +255,7 @@ impl ExecutablePlan for FunctionalPlan {
             stats: run.stats,
             lane: None,
             kernel: None,
+            tuned: false,
         })
     }
 
@@ -273,6 +294,7 @@ impl GemmBackend for FunctionalBackend {
             // The functional model is inherently single-owner.
             threads: Some(1),
             lane: LaneChoice::Auto,
+            blocking: Blocking::default(),
         })
     }
 
@@ -411,6 +433,7 @@ impl GemmBackend for PjrtBackend {
             stats,
             lane: None,
             kernel: None,
+            tuned: false,
         })
     }
 
@@ -461,8 +484,19 @@ pub struct FastBackend {
     /// run the scoped-thread parallel driver, bit-exact at any count).
     /// Set explicitly (construction or `with_threads`), this always
     /// overrides `KMM_THREADS` — the precedence documented on
-    /// [`crate::util::pool::env_threads_or`].
+    /// [`crate::util::env::env_threads_or`].
     pub threads: usize,
+    /// When set, [`GemmBackend::plan`] ignores the spec's decomposition
+    /// hint and serves the shared [`PlanCache`]'s winner for the shape
+    /// (tuning analytically on a miss) — the spec's `(m, k, n, w)` and
+    /// this backend's thread budget still define the request.
+    pub autotune: bool,
+    /// Plan-cache hits/misses this instance observed (interior
+    /// mutability: `plan` takes `&self`). Not shared: each backend
+    /// counts its own lookups so sharded stats sum without
+    /// double-counting the process-global cache counters.
+    plan_hits: std::cell::Cell<u64>,
+    plan_misses: std::cell::Cell<u64>,
     /// Timing model used for reported stats (numerics are native).
     timing: SystolicSpec,
 }
@@ -513,6 +547,7 @@ impl ExecutablePlan for FastPlan {
             self.mode,
             self.plan.lane(),
             self.plan.kernel_name(),
+            self.plan.tuned(),
             &self.timing,
         ))
     }
@@ -544,19 +579,39 @@ impl FastBackend {
             algo,
             m: 8,
             threads: threads.max(1),
+            autotune: false,
+            plan_hits: std::cell::Cell::new(0),
+            plan_misses: std::cell::Cell::new(0),
             timing: SystolicSpec::paper_64(),
+        }
+    }
+
+    /// Like [`FastBackend::with_threads`] with autotuned planning
+    /// enabled: raw-request plans come from the shared [`PlanCache`]
+    /// (the cost model picks the decomposition, lane, and blocking;
+    /// `algo` remains the fallback policy for paths that bypass the
+    /// planner, e.g. weight-stationary serving from prebound plans).
+    pub fn autotuned(algo: FastAlgo, threads: usize) -> Self {
+        let mut be = Self::with_threads(algo, threads);
+        be.autotune = true;
+        be
+    }
+
+    /// The mode label a `(digits, w)` configuration serves under on
+    /// this backend's window.
+    fn mode_label(&self, digits: u32, w: u32) -> Mode {
+        if digits > 1 {
+            Mode::Kmm2
+        } else if w <= self.m {
+            Mode::Mm1
+        } else {
+            Mode::Mm2
         }
     }
 
     /// The mode label a spec serves under on this backend's window.
     fn mode_of(&self, spec: &PlanSpec) -> Mode {
-        if spec.algo.digits() > 1 {
-            Mode::Kmm2
-        } else if spec.w <= self.m {
-            Mode::Mm1
-        } else {
-            Mode::Mm2
-        }
+        self.mode_label(spec.algo.digits(), spec.w)
     }
 
     /// The registry [`BoundPlan`](crate::fast::BoundPlan) a resolved
@@ -625,6 +680,7 @@ impl GemmBackend for FastBackend {
                 self.mode_of(&spec),
                 plan.lane(),
                 plan.kernel_name(),
+                false,
                 &self.timing,
             ));
         }
@@ -670,6 +726,7 @@ impl GemmBackend for FastBackend {
             self.mode_of(&spec),
             lane,
             bound.plan().kernel_name(),
+            bound.plan().tuned(),
             &self.timing,
         ))
     }
@@ -725,6 +782,7 @@ impl GemmBackend for FastBackend {
                     self.mode_of(&spec),
                     lane,
                     bound.plan().kernel_name(),
+                    bound.plan().tuned(),
                     &self.timing,
                 ))
             })
@@ -784,12 +842,32 @@ impl GemmBackend for FastBackend {
             algo,
             threads: Some(self.threads),
             lane: LaneChoice::Auto,
+            blocking: Blocking::default(),
         })
     }
 
+    /// With `autotune` unset, builds exactly the spec it is handed.
+    /// With `autotune` set, the spec's `(m, k, n, w)` defines the
+    /// request but the shared [`PlanCache`] owns the configuration:
+    /// the cached winner serves (tuning analytically on a miss), and
+    /// the hit/miss lands in this instance's counters.
     fn plan(&self, spec: &PlanSpec) -> Result<Box<dyn ExecutablePlan>> {
-        let mode = self.mode_of(spec);
-        let plan = MatmulPlan::build(*spec)?;
+        let plan = if self.autotune {
+            let (plan, hit) = PlanCache::global().lookup_or_tune(
+                spec.m,
+                spec.k,
+                spec.n,
+                spec.w,
+                self.threads,
+                TuneMode::Analytic,
+            )?;
+            let counter = if hit { &self.plan_hits } else { &self.plan_misses };
+            counter.set(counter.get() + 1);
+            plan
+        } else {
+            MatmulPlan::build(*spec)?
+        };
+        let mode = self.mode_label(plan.digits(), plan.w());
         Ok(Box::new(FastPlan {
             plan,
             mode,
@@ -812,6 +890,10 @@ impl GemmBackend for FastBackend {
             FastAlgo::Strassen => PackPlan::Strassen,
             FastAlgo::StrassenKmm => PackPlan::StrassenKmm,
         }
+    }
+
+    fn plan_cache_counters(&self) -> (u64, u64) {
+        (self.plan_hits.get(), self.plan_misses.get())
     }
 
     fn name(&self) -> &'static str {
@@ -1397,6 +1479,50 @@ mod tests {
         assert!(err.to_string().contains("no plan-based execution"), "{err:#}");
         let err = Stub.plan(&PlanSpec::mm(2, 2, 2, 8)).unwrap_err();
         assert!(err.to_string().contains("no plan-based execution"), "{err:#}");
+    }
+
+    #[test]
+    fn autotuned_backend_is_bit_exact_and_reports_provenance() {
+        // Autotuned serving is a plan-selection change, never a
+        // numerics change: results match the oracle and the default
+        // backend exactly, the served result carries tuned=true, and
+        // repeat shapes hit the shared cache instead of re-tuning.
+        let mut rng = Rng::new(57);
+        for w in [8u32, 12, 16] {
+            let a = Mat::random(21, 34, w, &mut rng);
+            let b = Mat::random(34, 13, w, &mut rng);
+            let want = matmul_oracle(&a, &b);
+            let mut tuned_be = FastBackend::autotuned(FastAlgo::Kmm, 2);
+            let mut plain_be = FastBackend::with_threads(FastAlgo::Kmm, 2);
+            for round in 0..2 {
+                let r = tuned_be.gemm(&a, &b, w).unwrap();
+                assert_eq!(r.c, want, "w={w} round={round}");
+                assert!(r.tuned, "w={w}: autotuned serving must say so");
+                assert!(r.lane.is_some() && r.kernel.is_some());
+            }
+            let r = plain_be.gemm(&a, &b, w).unwrap();
+            assert_eq!(r.c, want, "w={w} default backend");
+            assert!(!r.tuned, "w={w}: default planning carries no tuned flag");
+            let (hits, misses) = tuned_be.plan_cache_counters();
+            assert_eq!(hits + misses, 2, "w={w}: two lookups, two counts");
+            assert!(hits >= 1, "w={w}: the repeat must hit the shared cache");
+            assert_eq!(plain_be.plan_cache_counters(), (0, 0));
+        }
+    }
+
+    #[test]
+    fn autotuned_backend_serves_typed_errors_and_degenerate_shapes() {
+        // The autotune path changes plan selection only — the serving
+        // contract (width gate first, all-zero Ok for degenerate
+        // shapes, served Errs for client mistakes) is unchanged.
+        let mut rng = Rng::new(58);
+        let mut be = FastBackend::autotuned(FastAlgo::Mm, 1);
+        let err = be.gemm(&Mat::zeros(2, 2), &Mat::zeros(2, 2), 40).unwrap_err();
+        assert!(err.to_string().contains("exceeds the fast engine"), "{err:#}");
+        let b = Mat::random(4, 3, 8, &mut rng);
+        let r = be.gemm(&Mat::from_rows(0, 4, &[]), &b, 8).unwrap();
+        assert_eq!((r.c.rows, r.c.cols), (0, 3));
+        assert!(!r.tuned, "degenerate shapes bypass the tuner");
     }
 
     #[test]

@@ -87,6 +87,9 @@ pub struct Response {
     /// The fast engine's resolved microkernel label (`None` for
     /// rejections and for backends that do not run the blocked engine).
     pub kernel: Option<&'static str>,
+    /// Whether an autotuned plan (a plan-cache winner) served this
+    /// request; `false` for rejections and non-autotuned backends.
+    pub tuned: bool,
     /// Deterministic device cycles attributed to this request.
     pub cycles: u64,
     /// Batch this request was served in (globally unique across shards).
@@ -239,6 +242,19 @@ pub struct ServerStats {
     /// the server handle, not the shards — a rejected request never
     /// reaches a queue — and folded into the merged stats at shutdown.
     pub busy: u64,
+    /// Requests served by autotuned plans (plan-cache winners carrying
+    /// [`GemmResult::tuned`](crate::coordinator::dispatch::GemmResult::tuned)
+    /// provenance).
+    pub tuned: u64,
+    /// Plan-cache hits the shard backends observed through autotuned
+    /// planning (folded from
+    /// [`GemmBackend::plan_cache_counters`] at shutdown and summed
+    /// across shards — every shard consults the one process-wide
+    /// [`PlanCache`](crate::fast::PlanCache)).
+    pub plan_cache_hits: u64,
+    /// Plan-cache misses — each one ran the cost-model tuner once and
+    /// cached the winner for every other shard.
+    pub plan_cache_misses: u64,
     /// Coalesced executions: batches of ≥2 same-handle requests served
     /// by one row-stacked [`GemmBackend::gemm_packed_batch`] call.
     pub coalesced_batches: u64,
@@ -264,6 +280,9 @@ impl ServerStats {
         self.total_cycles += other.total_cycles;
         self.weight_hits += other.weight_hits;
         self.weight_misses += other.weight_misses;
+        self.tuned += other.tuned;
+        self.plan_cache_hits += other.plan_cache_hits;
+        self.plan_cache_misses += other.plan_cache_misses;
         self.busy += other.busy;
         self.coalesced_batches += other.coalesced_batches;
         self.coalesced_requests += other.coalesced_requests;
@@ -593,12 +612,16 @@ fn respond(
             if let Some(kernel) = res.kernel {
                 *stats.by_kernel.entry(kernel).or_insert(0) += 1;
             }
+            if res.tuned {
+                stats.tuned += 1;
+            }
             Response {
                 id,
                 result: Ok(res.c),
                 mode: Some(res.mode),
                 lane: res.lane,
                 kernel: res.kernel,
+                tuned: res.tuned,
                 cycles: res.stats.cycles,
                 batch: batch_id,
             }
@@ -611,6 +634,7 @@ fn respond(
                 mode: None,
                 lane: None,
                 kernel: None,
+                tuned: false,
                 cycles: 0,
                 batch: batch_id,
             }
@@ -777,6 +801,11 @@ fn worker_loop(
         }
 
         if let Some(s) = shutdown {
+            // Fold this shard backend's plan-cache lookups into the
+            // stats exactly once, at the end of its life.
+            let (hits, misses) = backend.plan_cache_counters();
+            stats.plan_cache_hits += hits;
+            stats.plan_cache_misses += misses;
             let _ = s.send(stats);
             return;
         }
@@ -1011,6 +1040,47 @@ mod tests {
         assert_eq!(stats.rejected, 1);
         // The cache packed exactly once, however many requests it served.
         assert_eq!(reg.packs(), 1);
+    }
+
+    #[test]
+    fn autotuned_server_counts_plan_cache_hits_across_shards() {
+        // Two shards, one request shape: the first lookup in the
+        // process tunes (a miss), everything after — on either shard —
+        // hits the one process-wide cache. The merged stats prove it,
+        // and every response carries the tuned provenance.
+        let mut srv = Server::start(
+            || Box::new(FastBackend::autotuned(FastAlgo::Mm, 1)) as Box<dyn GemmBackend>,
+            ServerConfig::default().workers(2),
+        );
+        let mut rng = Rng::new(71);
+        let b = Mat::random(29, 5, 10, &mut rng);
+        for _ in 0..6 {
+            let a = Mat::random(3, 29, 10, &mut rng);
+            let want = matmul_oracle(&a, &b);
+            let resp = srv.submit_sync(a, b.clone(), 10);
+            assert_eq!(resp.result.unwrap(), want);
+            assert!(resp.tuned, "autotuned serving reports provenance");
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.tuned, 6);
+        assert_eq!(stats.plan_cache_hits + stats.plan_cache_misses, 6);
+        assert!(
+            stats.plan_cache_hits >= 5,
+            "shards must share one cache: {stats:?}"
+        );
+        // A non-autotuned server reports no tuned serves and no
+        // plan-cache traffic at all.
+        let mut plain = Server::start(
+            || Box::new(FastBackend::new(FastAlgo::Mm)) as Box<dyn GemmBackend>,
+            ServerConfig::default(),
+        );
+        let a = Mat::random(3, 29, 10, &mut rng);
+        let resp = plain.submit_sync(a, b, 10);
+        assert!(!resp.tuned);
+        let stats = plain.shutdown();
+        assert_eq!(stats.tuned, 0);
+        assert_eq!((stats.plan_cache_hits, stats.plan_cache_misses), (0, 0));
     }
 
     #[test]

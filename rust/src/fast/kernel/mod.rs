@@ -323,29 +323,18 @@ impl KernelSel {
 /// dispatch point. `KMM_KERNEL=scalar` forces the scalar kernel
 /// (differential testing, perf triage); `KMM_KERNEL=native` or unset
 /// picks SIMD exactly when [`simd_supported`]`(lane)` holds. An
-/// unrecognized value warns once per process and behaves like `native`,
-/// so a typo'd deployment is loud but still serves the fast kernel.
+/// unrecognized value warns once per process (via
+/// [`crate::util::env::env_kernel`]) and behaves like `native`, so a
+/// typo'd deployment is loud but still serves the fast kernel.
 pub fn select_kernel(lane: LaneId) -> KernelSel {
     let native = if simd_supported(lane) {
         KernelSel::Simd
     } else {
         KernelSel::Scalar
     };
-    match std::env::var("KMM_KERNEL") {
-        Ok(raw) => match raw.trim() {
-            "scalar" => KernelSel::Scalar,
-            "native" => native,
-            _ => {
-                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
-                WARN_ONCE.call_once(|| {
-                    eprintln!(
-                        "warning: ignoring KMM_KERNEL={raw:?}: expected \"scalar\" or \"native\""
-                    );
-                });
-                native
-            }
-        },
-        Err(_) => native,
+    match crate::util::env::env_kernel() {
+        crate::util::env::KernelEnv::Scalar => KernelSel::Scalar,
+        crate::util::env::KernelEnv::Native => native,
     }
 }
 

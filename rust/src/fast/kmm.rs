@@ -127,13 +127,35 @@ pub fn kmm_threads<E: Element, K: Kernel<E> + Sync>(
     digits: u32,
     threads: usize,
 ) -> Vec<E::Acc> {
+    kmm_threads_bl(kernel, &Blocking::default(), a, b, m, k, n, w, digits, threads)
+}
+
+/// [`kmm_threads`] with explicit cache-blocking parameters: every leaf
+/// sub-GEMM of the digit recursion runs the blocked driver at `bl`
+/// instead of the default. This is the entry the plan layer uses now
+/// that [`Blocking`] is a runtime field of
+/// [`PlanSpec`](crate::fast::plan::PlanSpec) — the autotuner explores
+/// blocking points per shape and the winning plan carries its own.
+#[allow(clippy::too_many_arguments)]
+pub fn kmm_threads_bl<E: Element, K: Kernel<E> + Sync>(
+    kernel: &K,
+    bl: &Blocking,
+    a: &[E],
+    b: &[E],
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    digits: u32,
+    threads: usize,
+) -> Vec<E::Acc> {
     assert_lane_config::<E>(w, digits, k);
     debug_assert!(
         a.iter().chain(b).all(|&x| bits::fits(x.to_u64(), w)),
         "operand exceeds w={w} bits"
     );
     let mut out = vec![<E::Acc>::default(); m * n];
-    kmm_rec(kernel, a, b, m, k, n, w, digits, threads, &mut out);
+    kmm_rec(kernel, bl, a, b, m, k, n, w, digits, threads, &mut out);
     out
 }
 
@@ -144,6 +166,7 @@ pub fn kmm_threads<E: Element, K: Kernel<E> + Sync>(
 #[allow(clippy::too_many_arguments)]
 fn kmm_rec<E: Element, K: Kernel<E> + Sync>(
     kernel: &K,
+    bl: &Blocking,
     a: &[E],
     b: &[E],
     m: usize,
@@ -156,9 +179,9 @@ fn kmm_rec<E: Element, K: Kernel<E> + Sync>(
 ) {
     if digits == 1 {
         if threads <= 1 {
-            gemm_into(kernel, &Blocking::default(), a, b, m, k, n, out);
+            gemm_into(kernel, bl, a, b, m, k, n, out);
         } else {
-            gemm_into_threads(kernel, &Blocking::default(), threads, a, b, m, k, n, out);
+            gemm_into_threads(kernel, bl, threads, a, b, m, k, n, out);
         }
         return;
     }
@@ -175,7 +198,7 @@ fn kmm_rec<E: Element, K: Kernel<E> + Sync>(
     let sub = threads.div_ceil(3);
     let run = |x: &[E], y: &[E], ww: u32| -> Vec<E::Acc> {
         let mut c = vec![<E::Acc>::default(); m * n];
-        kmm_rec(kernel, x, y, m, k, n, ww, digits / 2, sub, &mut c);
+        kmm_rec(kernel, bl, x, y, m, k, n, ww, digits / 2, sub, &mut c);
         c
     };
     let (c1, c_s, c0) = if threads > 1 {
@@ -264,8 +287,10 @@ impl<E: Element> Plane<E> {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn pack_plane<E: Element, K: Kernel<E>>(
     kernel: &K,
+    bl: &Blocking,
     b: &[E],
     k: usize,
     n: usize,
@@ -273,15 +298,15 @@ fn pack_plane<E: Element, K: Kernel<E>>(
     digits: u32,
 ) -> Plane<E> {
     if digits == 1 {
-        return Plane::Leaf(PackedB::pack(kernel, b, k, n, &Blocking::default()));
+        return Plane::Leaf(PackedB::pack(kernel, b, k, n, bl));
     }
     let wl = bits::lo_width(w);
     let (b1, b0) = split_planes_elems(b, w);
     let b_s = digit_sum_plane_elems(&b1, &b0);
     Plane::Split {
-        hi: Box::new(pack_plane(kernel, &b1, k, n, bits::hi_width(w), digits / 2)),
-        sum: Box::new(pack_plane(kernel, &b_s, k, n, wl + 1, digits / 2)),
-        lo: Box::new(pack_plane(kernel, &b0, k, n, wl, digits / 2)),
+        hi: Box::new(pack_plane(kernel, bl, &b1, k, n, bits::hi_width(w), digits / 2)),
+        sum: Box::new(pack_plane(kernel, bl, &b_s, k, n, wl + 1, digits / 2)),
+        lo: Box::new(pack_plane(kernel, bl, &b0, k, n, wl, digits / 2)),
     }
 }
 
@@ -300,6 +325,23 @@ impl<E: Element> PackedKmmB<E> {
         w: u32,
         digits: u32,
     ) -> PackedKmmB<E> {
+        PackedKmmB::pack_with(kernel, b, k, n, w, digits, &Blocking::default())
+    }
+
+    /// [`PackedKmmB::pack`] with explicit cache-blocking parameters:
+    /// every leaf plane is packed at panel geometry `bl`, so a plan
+    /// tuned to a non-default blocking point can prepack its stationary
+    /// operand to match.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_with<K: Kernel<E>>(
+        kernel: &K,
+        b: &[E],
+        k: usize,
+        n: usize,
+        w: u32,
+        digits: u32,
+        bl: &Blocking,
+    ) -> PackedKmmB<E> {
         assert_lane_config::<E>(w, digits, k);
         assert_eq!(b.len(), k * n, "B shape mismatch");
         debug_assert!(
@@ -311,7 +353,7 @@ impl<E: Element> PackedKmmB<E> {
             n,
             w,
             digits,
-            root: pack_plane(kernel, b, k, n, w, digits),
+            root: pack_plane(kernel, bl, b, k, n, w, digits),
         }
     }
 
@@ -463,6 +505,21 @@ impl LanePackedKmmB {
         w: u32,
         digits: u32,
     ) -> LanePackedKmmB {
+        LanePackedKmmB::pack_in_bl(lane, b, k, n, w, digits, &Blocking::default())
+    }
+
+    /// [`LanePackedKmmB::pack_in`] with explicit cache-blocking
+    /// parameters for the leaf planes (see [`PackedKmmB::pack_with`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_in_bl(
+        lane: LaneId,
+        b: &[u64],
+        k: usize,
+        n: usize,
+        w: u32,
+        digits: u32,
+        bl: &Blocking,
+    ) -> LanePackedKmmB {
         assert!(
             crate::fast::lane::lane_exact(lane, w, k, digits),
             "lane {}: not provably exact for w={w} at depth k={k} \
@@ -473,23 +530,27 @@ impl LanePackedKmmB {
             required_acc_bits(w, k, digits)
         );
         match lane {
-            LaneId::U16 => LanePackedKmmB::U16(PackedKmmB::pack(
+            LaneId::U16 => LanePackedKmmB::U16(PackedKmmB::pack_with(
                 &Kernel8x4,
                 &narrow_plane::<u16>(b),
                 k,
                 n,
                 w,
                 digits,
+                bl,
             )),
-            LaneId::U32 => LanePackedKmmB::U32(PackedKmmB::pack(
+            LaneId::U32 => LanePackedKmmB::U32(PackedKmmB::pack_with(
                 &Kernel8x4,
                 &narrow_plane::<u32>(b),
                 k,
                 n,
                 w,
                 digits,
+                bl,
             )),
-            LaneId::U64 => LanePackedKmmB::U64(PackedKmmB::pack(&Kernel8x4, b, k, n, w, digits)),
+            LaneId::U64 => {
+                LanePackedKmmB::U64(PackedKmmB::pack_with(&Kernel8x4, b, k, n, w, digits, bl))
+            }
         }
     }
 

@@ -115,7 +115,7 @@
 //! (`tests/integration_parallel.rs`), and `threads = 1` *is* the
 //! sequential path. Budget precedence (explicit > `KMM_THREADS` >
 //! fallback) is resolved once at plan build by
-//! [`crate::util::pool::resolve_threads`].
+//! [`crate::util::env::resolve_threads`].
 //!
 //! # Prepacked operands (weight-stationary serving)
 //!
@@ -142,6 +142,7 @@ pub mod lane;
 pub mod pack;
 pub mod plan;
 pub mod strassen;
+pub mod tune;
 
 pub use gemm::{
     gemm_into, gemm_into_threads, gemm_prepacked, gemm_prepacked_into,
@@ -157,6 +158,7 @@ pub use lane::{
 };
 pub use pack::{LanePackedB, PackedB};
 pub use plan::{BoundPlan, LaneChoice, MatmulPlan, PlanAlgo, PlanError, PlanSpec};
+pub use tune::{tune, CacheKey, Candidate, PlanCache, TuneMode, TuneReport, PLAN_CACHE_SCHEMA};
 
 /// Build a plan from `spec`, preserving the legacy shim contract:
 /// panic (with the typed error's message) on an invalid configuration.

@@ -14,8 +14,12 @@
 //! - lane selection ([`select_lane`]) or forced-lane headroom proof
 //!   ([`required_acc_bits`]),
 //! - thread-budget resolution with the documented precedence
-//!   ([`crate::util::pool::resolve_threads`]: explicit request >
+//!   ([`crate::util::env::resolve_threads`]: explicit request >
 //!   `KMM_THREADS` > fallback of 1),
+//! - cache-blocking validation: [`Blocking`] is a *runtime* field of
+//!   the spec (the autotuner in [`crate::fast::tune`] explores blocking
+//!   points per shape), gated here so a degenerate point is a typed
+//!   error instead of a driver assert,
 //! - microkernel dispatch ([`select_kernel`]: `KMM_KERNEL` override >
 //!   SIMD where [`simd_supported`] proves the host, scalar fallback
 //!   everywhere else) — resolved once here so every execution and
@@ -45,7 +49,7 @@ use crate::fast::lane::{
 };
 use crate::fast::pack::LanePackedB;
 use crate::fast::strassen;
-use crate::util::pool;
+use crate::util::env;
 use std::fmt;
 
 /// Which decomposition a plan runs.
@@ -159,6 +163,11 @@ pub struct PlanSpec {
     pub threads: Option<usize>,
     /// Lane policy.
     pub lane: LaneChoice,
+    /// Cache-blocking point every blocked sub-GEMM of the plan runs at
+    /// (the leaf tiles of the Karatsuba and Strassen recursions
+    /// included). Defaults to [`Blocking::default`]; the autotuner
+    /// ([`crate::fast::tune`]) explores alternative points per shape.
+    pub blocking: Blocking,
 }
 
 impl PlanSpec {
@@ -173,6 +182,7 @@ impl PlanSpec {
             algo: PlanAlgo::Mm,
             threads: None,
             lane: LaneChoice::Auto,
+            blocking: Blocking::default(),
         }
     }
 
@@ -194,6 +204,14 @@ impl PlanSpec {
     /// Force an explicit lane instead of the selector's choice.
     pub fn in_lane(mut self, lane: LaneId) -> PlanSpec {
         self.lane = LaneChoice::Forced(lane);
+        self
+    }
+
+    /// Run every blocked sub-GEMM of the plan at an explicit
+    /// cache-blocking point instead of the default. Validated by
+    /// [`MatmulPlan::build`] (all three extents must be positive).
+    pub fn with_blocking(mut self, blocking: Blocking) -> PlanSpec {
+        self.blocking = blocking;
         self
     }
 }
@@ -270,6 +288,13 @@ pub enum PlanError {
         /// Strassen recursion depth.
         levels: u32,
     },
+    /// A blocking point with a zero extent — the blocked driver cannot
+    /// tile at it (its own assert would fire deep in the hot loop, so
+    /// the plan refuses it up front).
+    DegenerateBlocking {
+        /// The rejected blocking point.
+        blocking: Blocking,
+    },
 }
 
 impl fmt::Display for PlanError {
@@ -320,6 +345,11 @@ impl fmt::Display for PlanError {
                      with digits={digits} (each level costs one bit of headroom)"
                 )
             }
+            PlanError::DegenerateBlocking { blocking } => write!(
+                f,
+                "degenerate blocking mc={} kc={} nc={}: every extent must be positive",
+                blocking.mc, blocking.kc, blocking.nc
+            ),
         }
     }
 }
@@ -356,6 +386,8 @@ pub struct MatmulPlan {
     lane: LaneId,
     threads: usize,
     kernel: KernelSel,
+    blocking: Blocking,
+    tuned: bool,
 }
 
 impl MatmulPlan {
@@ -384,9 +416,13 @@ impl MatmulPlan {
             algo,
             threads,
             lane,
+            blocking,
         } = spec;
         if m == 0 || k == 0 || n == 0 {
             return Err(PlanError::ZeroDim { m, k, n });
+        }
+        if blocking.mc == 0 || blocking.kc == 0 || blocking.nc == 0 {
+            return Err(PlanError::DegenerateBlocking { blocking });
         }
         if let Err(e) = check_width(w) {
             return Err(PlanError::Width {
@@ -453,7 +489,7 @@ impl MatmulPlan {
                 l
             }
         };
-        let threads = pool::resolve_threads(threads, 1);
+        let threads = env::resolve_threads(threads, 1);
         // The one kernel-dispatch point: resolved against the *final*
         // lane, so the SIMD kernel is only ever selected where
         // simd_supported proved the host can run it.
@@ -467,6 +503,8 @@ impl MatmulPlan {
             lane,
             threads,
             kernel,
+            blocking,
+            tuned: false,
         })
     }
 
@@ -542,10 +580,31 @@ impl MatmulPlan {
         self.kernel.name(self.lane)
     }
 
+    /// The cache-blocking point every blocked sub-GEMM runs at.
+    pub fn blocking(&self) -> Blocking {
+        self.blocking
+    }
+
+    /// Whether this plan was produced by the autotuner
+    /// ([`crate::fast::tune`]) rather than built directly from a
+    /// hand-written spec — provenance that rides through
+    /// [`describe`](Self::describe), serving stats, and bench reports.
+    pub fn tuned(&self) -> bool {
+        self.tuned
+    }
+
+    /// Stamp the plan as autotuner output (see [`tuned`](Self::tuned)).
+    pub fn mark_tuned(mut self) -> MatmulPlan {
+        self.tuned = true;
+        self
+    }
+
     /// One-line human description of the resolved plan — what the CLI
     /// prints so operators can see which configuration actually serves.
+    /// Non-default blocking and autotuner provenance are appended only
+    /// when present, so default-configured plans read as before.
     pub fn describe(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} {}x{}x{} w={} lane={} threads={} kernel={}",
             self.algo,
             self.m,
@@ -555,7 +614,17 @@ impl MatmulPlan {
             self.lane,
             self.threads,
             self.kernel_name()
-        )
+        );
+        if self.blocking != Blocking::default() {
+            s.push_str(&format!(
+                " block={}x{}x{}",
+                self.blocking.mc, self.blocking.kc, self.blocking.nc
+            ));
+        }
+        if self.tuned {
+            s.push_str(" tuned");
+        }
+        s
     }
 
     /// Execute `C = A·B` over row-major `u64`-boundary operands (each
@@ -613,7 +682,7 @@ impl MatmulPlan {
             match self.kernel {
                 KernelSel::Scalar => gemm::gemm_into_threads(
                     &Kernel8x4,
-                    &Blocking::default(),
+                    &self.blocking,
                     self.threads,
                     a,
                     b,
@@ -624,7 +693,7 @@ impl MatmulPlan {
                 ),
                 KernelSel::Simd => gemm::gemm_into_threads(
                     &Kernel8x4Simd,
-                    &Blocking::default(),
+                    &self.blocking,
                     self.threads,
                     a,
                     b,
@@ -664,10 +733,23 @@ impl MatmulPlan {
     ) -> Vec<E::Acc> {
         match self.algo {
             PlanAlgo::Mm => {
-                gemm::gemm_threads(kernel, a, b, self.m, self.k, self.n, self.threads)
+                let mut c = vec![<E::Acc>::default(); self.m * self.n];
+                gemm::gemm_into_threads(
+                    kernel,
+                    &self.blocking,
+                    self.threads,
+                    a,
+                    b,
+                    self.m,
+                    self.k,
+                    self.n,
+                    &mut c,
+                );
+                c
             }
-            PlanAlgo::Kmm { digits } => kmm::kmm_threads(
+            PlanAlgo::Kmm { digits } => kmm::kmm_threads_bl(
                 kernel,
+                &self.blocking,
                 a,
                 b,
                 self.m,
@@ -724,10 +806,16 @@ impl MatmulPlan {
                 self.k,
                 self.n,
                 self.w,
-                &Blocking::default(),
+                &self.blocking,
             )),
-            PlanAlgo::Kmm { digits } => BoundOperand::Kmm(LanePackedKmmB::pack_in(
-                self.lane, b, self.k, self.n, self.w, digits,
+            PlanAlgo::Kmm { digits } => BoundOperand::Kmm(LanePackedKmmB::pack_in_bl(
+                self.lane,
+                b,
+                self.k,
+                self.n,
+                self.w,
+                digits,
+                &self.blocking,
             )),
             PlanAlgo::Strassen { .. } | PlanAlgo::StrassenKmm { .. } => {
                 BoundOperand::Strassen(strassen::bind_b(self, b))
@@ -1172,10 +1260,65 @@ mod tests {
                 },
                 threads: Some(1),
                 lane: LaneChoice::Auto,
+                blocking: Blocking::default(),
             };
             let plan = MatmulPlan::build(spec).unwrap();
             assert_eq!(Some(plan.lane()), select_lane(w, k, digits), "w={w}");
         }
+    }
+
+    #[test]
+    fn build_rejects_degenerate_blocking() {
+        for bl in [
+            Blocking { mc: 0, kc: 128, nc: 512 },
+            Blocking { mc: 64, kc: 0, nc: 512 },
+            Blocking { mc: 64, kc: 128, nc: 0 },
+        ] {
+            let err =
+                MatmulPlan::build(PlanSpec::mm(2, 3, 2, 8).with_blocking(bl)).unwrap_err();
+            assert_eq!(err, PlanError::DegenerateBlocking { blocking: bl });
+            assert!(err.to_string().contains("degenerate blocking"), "{err}");
+        }
+    }
+
+    #[test]
+    fn non_default_blocking_is_bit_exact_and_reported() {
+        // Every algo at a deliberately awkward blocking point (extents
+        // below / not multiples of the 8x4 microtile) must agree with
+        // the default point, on fresh and bound paths alike.
+        let mut rng = Rng::new(56);
+        let (m, k, n, w) = (11usize, 21usize, 9usize, 8u32);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let odd = Blocking { mc: 3, kc: 5, nc: 7 };
+        for algo in [
+            PlanAlgo::Mm,
+            PlanAlgo::Kmm { digits: 2 },
+            PlanAlgo::Strassen { levels: 1 },
+            PlanAlgo::StrassenKmm { levels: 1, digits: 2 },
+        ] {
+            let mut spec = PlanSpec::mm(m, k, n, w).with_threads(1);
+            spec.algo = algo;
+            let want = MatmulPlan::build(spec).unwrap().execute(&a, &b);
+            let plan = MatmulPlan::build(spec.with_blocking(odd)).unwrap();
+            assert_eq!(plan.blocking(), odd);
+            assert_eq!(plan.execute(&a, &b), want, "{algo} execute");
+            assert_eq!(plan.bind_b(&b).execute(&a), want, "{algo} bound");
+            assert!(plan.describe().contains("block=3x5x7"), "{}", plan.describe());
+        }
+        // Default blocking keeps the legacy describe() wording.
+        let default_plan = MatmulPlan::build(PlanSpec::mm(m, k, n, w)).unwrap();
+        assert!(!default_plan.describe().contains("block="), "{}", default_plan.describe());
+    }
+
+    #[test]
+    fn tuned_provenance_rides_describe() {
+        let plan = MatmulPlan::build(PlanSpec::mm(2, 3, 2, 8).with_threads(1)).unwrap();
+        assert!(!plan.tuned());
+        assert!(!plan.describe().ends_with("tuned"));
+        let tuned = plan.mark_tuned();
+        assert!(tuned.tuned());
+        assert!(tuned.describe().ends_with(" tuned"), "{}", tuned.describe());
     }
 
     #[test]

@@ -166,7 +166,9 @@ fn leaf_spec(plan: &MatmulPlan, m: usize, k: usize, n: usize) -> PlanSpec {
         PlanAlgo::StrassenKmm { digits, .. } => PlanSpec::kmm(m, k, n, we, digits),
         _ => PlanSpec::mm(m, k, n, we),
     };
-    spec.with_threads(plan.threads()).in_lane(plan.lane())
+    spec.with_threads(plan.threads())
+        .in_lane(plan.lane())
+        .with_blocking(plan.blocking())
 }
 
 /// Build and run one leaf GEMM (a smaller [`PlanSpec`] through the

@@ -1,0 +1,917 @@
+//! Cost-model-driven plan autotuning with a process-wide plan cache.
+//!
+//! The paper sizes its accelerators offline: §III-B's closed-form
+//! complexity equations rank the decompositions, and §IV-D's tile-buffer
+//! accounting prices the memory traffic of each configuration before
+//! anything is synthesized. This module is the software mirror of that
+//! workflow, run at serve time instead of design time:
+//!
+//! 1. **Enumerate** — [`candidates`] builds every plan the engine could
+//!    run for a `(m, k, n, w, threads)` request: the four decompositions
+//!    ([`PlanAlgo::Mm`], [`PlanAlgo::Kmm`] at each valid digit count,
+//!    [`PlanAlgo::Strassen`] and [`PlanAlgo::StrassenKmm`] at feasible
+//!    depths), each lane the headroom rules admit, and a small set of
+//!    cache-blocking points ([`BLOCKING_POINTS`]) — every candidate
+//!    validated through [`MatmulPlan::build`], so infeasible
+//!    configurations are filtered by the same typed gates serving uses.
+//! 2. **Score** — [`predicted_cost`] prices each candidate with an
+//!    analytic model: scalar-operation totals from the §III-B evaluators
+//!    ([`c_mm1`]/[`c_kmm`]), scaled across the Strassen recursion,
+//!    weighted by the lane's element width, plus a memory-traffic term
+//!    derived from the §IV-D [`TileBuffer`] replay accounting at the
+//!    candidate's blocking point.
+//! 3. **Refine** (optional) — [`TuneMode::Measured`] re-ranks the
+//!    top-[`MEASURE_TOP_K`] analytic candidates with one timed
+//!    micro-measurement each, so the model only has to get the
+//!    shortlist right, not the final ordering.
+//!
+//! Winners land in a [`PlanCache`] keyed by
+//! `(m, k, n, w, threads, kernel)` — shared process-wide (every server
+//! shard consults [`PlanCache::global`] through the coordinator) and
+//! persistable to JSON ([`PlanCache::to_json`]/[`PlanCache::load_json`])
+//! so a warm cache from one run can start the next with zero re-tunes.
+//! Cached winners rebuild through [`MatmulPlan::build`] on the way out,
+//! so a stale persisted entry can never bypass the validation gates.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+use std::time::Instant;
+
+use crate::algo::bits;
+use crate::algo::complexity::{c_kmm, c_mm1, Dims};
+use crate::algo::mm::wa_for_depth;
+use crate::fast::gemm::Blocking;
+use crate::fast::kernel::{select_kernel, KernelSel};
+use crate::fast::lane::{lane_exact, strassen_lane_exact, LaneId};
+use crate::fast::plan::{LaneChoice, MatmulPlan, PlanAlgo, PlanError, PlanSpec};
+use crate::sim::memory::TileBuffer;
+use crate::util::error::Error;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How much evidence the tuner gathers before declaring a winner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneMode {
+    /// Rank by the analytic cost model alone — no execution, so tuning
+    /// is effectively free (the serving default).
+    Analytic,
+    /// Rank analytically, then re-rank the top [`MEASURE_TOP_K`]
+    /// candidates with one timed micro-measurement each.
+    Measured,
+}
+
+/// Candidates that survive the analytic cut and get timed in
+/// [`TuneMode::Measured`].
+pub const MEASURE_TOP_K: usize = 3;
+
+/// The cache-blocking points the tuner explores, default first. A small
+/// grid on purpose: the blocked driver's performance surface is flat
+/// near the default, so the tuner only needs one smaller-footprint and
+/// one larger-footprint alternative per shape.
+pub const BLOCKING_POINTS: [Blocking; 3] = [
+    Blocking { mc: 64, kc: 128, nc: 512 },
+    Blocking { mc: 32, kc: 64, nc: 256 },
+    Blocking { mc: 128, kc: 256, nc: 512 },
+];
+
+/// One scored tuning candidate: the spec the tuner would build, the
+/// configuration it resolved to, and its predicted (and, in
+/// [`TuneMode::Measured`], measured) cost.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// The buildable spec (threads and lane pinned).
+    pub spec: PlanSpec,
+    /// The decomposition.
+    pub algo: PlanAlgo,
+    /// The lane the plan resolved to.
+    pub lane: LaneId,
+    /// The blocking point.
+    pub blocking: Blocking,
+    /// Analytic cost in weighted scalar-op equivalents (lower wins).
+    pub predicted: f64,
+    /// Wall-clock seconds of the micro-measurement, when one ran.
+    pub measured_s: Option<f64>,
+}
+
+/// The tuner's full decision record for one shape — what `kmm tune`
+/// prints as a predicted-vs-measured table.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// Output rows.
+    pub m: usize,
+    /// Depth.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Operand bitwidth.
+    pub w: u32,
+    /// Resolved thread budget the candidates were planned at.
+    pub threads: usize,
+    /// Mode the tuner ran in.
+    pub mode: TuneMode,
+    /// Every scored candidate, best first.
+    pub candidates: Vec<Candidate>,
+}
+
+impl TuneReport {
+    /// The winning candidate (the tuner never returns an empty ranking).
+    pub fn winner(&self) -> &Candidate {
+        &self.candidates[0]
+    }
+
+    /// Build the winning plan, stamped with autotuner provenance.
+    pub fn plan(&self) -> MatmulPlan {
+        MatmulPlan::build(self.winner().spec)
+            .expect("the tuner only ranks candidates that already built")
+            .mark_tuned()
+    }
+
+    /// Render the ranking as an aligned text table (one candidate per
+    /// row; measured column blank in analytic mode).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<20} {:>5} {:<14} {:>14} {:>12}\n",
+            "algo", "lane", "blocking", "predicted", "measured_s"
+        ));
+        for c in &self.candidates {
+            let bl = format!("{}x{}x{}", c.blocking.mc, c.blocking.kc, c.blocking.nc);
+            let measured = match c.measured_s {
+                Some(s) => format!("{s:.6}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<20} {:>5} {:<14} {:>14.0} {:>12}\n",
+                c.algo.to_string(),
+                c.lane.name(),
+                bl,
+                c.predicted,
+                measured
+            ));
+        }
+        out
+    }
+}
+
+/// Strassen depths the tuner considers. Each level pads every dimension
+/// to a multiple of `2^levels`, so depths are only enumerated while the
+/// smallest dimension still dominates its padding (see [`candidates`]).
+const STRASSEN_LEVELS: [u32; 2] = [1, 2];
+
+/// Karatsuba digit counts the tuner considers (validated per width).
+const KMM_DIGITS: [u32; 2] = [2, 4];
+
+/// Enumerate every feasible `(algo, lane, blocking)` candidate spec for
+/// one request. All feasibility filtering is delegated to
+/// [`MatmulPlan::build`] — a candidate exists iff serving could build
+/// it.
+pub fn candidates(m: usize, k: usize, n: usize, w: u32, threads: usize) -> Vec<PlanSpec> {
+    let mut algos = vec![PlanAlgo::Mm];
+    for digits in KMM_DIGITS {
+        if bits::config_valid(digits, w) {
+            algos.push(PlanAlgo::Kmm { digits });
+        }
+    }
+    let min_dim = m.min(k).min(n);
+    for levels in STRASSEN_LEVELS {
+        // Below ~16 rows per leaf the padding and combination adds
+        // drown the 7/8 multiply saving; do not even rank those.
+        if min_dim >= (16usize << levels) {
+            algos.push(PlanAlgo::Strassen { levels });
+            if bits::config_valid(2, w) {
+                algos.push(PlanAlgo::StrassenKmm { levels, digits: 2 });
+            }
+        }
+    }
+    let mut specs = Vec::new();
+    for algo in algos {
+        for lane in LaneId::ALL {
+            let feasible = match algo {
+                PlanAlgo::Strassen { levels } | PlanAlgo::StrassenKmm { levels, .. } => {
+                    strassen_lane_exact(lane, w, k, algo.digits(), levels)
+                }
+                _ => lane_exact(lane, w, k, algo.digits()),
+            };
+            if !feasible {
+                continue;
+            }
+            for blocking in BLOCKING_POINTS {
+                let mut spec = PlanSpec::mm(m, k, n, w)
+                    .with_threads(threads)
+                    .in_lane(lane)
+                    .with_blocking(blocking);
+                spec.algo = algo;
+                specs.push(spec);
+            }
+        }
+    }
+    specs
+}
+
+/// Analytic cost of one built candidate, in weighted scalar-op
+/// equivalents (lower is better). Three terms:
+///
+/// - **compute** — the §III-B closed-form operation totals of the leaf
+///   configuration ([`c_mm1`] for conventional leaves, [`c_kmm`] for
+///   digit-sliced ones), multiplied across the `7^levels` Strassen
+///   leaves and weighted by the lane's element width (narrow lanes
+///   stream more elements per cache line and per SIMD op);
+/// - **combine** — the Strassen recombination adds (~18 half-size
+///   matrix adds per level, on wide accumulators);
+/// - **traffic** — bytes moved for packed-B panel fetch+replay (the
+///   §IV-D [`TileBuffer`] accounting at the candidate's blocking
+///   point), plus streamed-A and output-accumulator traffic, across all
+///   digit planes and Strassen leaves.
+pub fn predicted_cost(plan: &MatmulPlan) -> f64 {
+    let levels = plan.levels();
+    let digits = plan.digits();
+    let lane = plan.lane();
+    let bl = plan.blocking();
+
+    // Leaf geometry: Strassen pads every dimension to a multiple of
+    // 2^levels, then halves per level.
+    let pad = 1usize << levels;
+    let lm = plan.m().div_ceil(pad);
+    let lk = plan.k().div_ceil(pad);
+    let ln = plan.n().div_ceil(pad);
+    let we = plan.w() + levels;
+    let dims = Dims { m: lm, k: lk, n: ln };
+    let leaf_tally = if digits == 1 {
+        c_mm1(we, dims)
+    } else {
+        c_kmm(digits, we, dims, wa_for_depth(lk))
+    };
+    let leaves = 7f64.powi(levels as i32);
+    let lane_weight = lane.elem_bits() as f64 / 64.0;
+    let compute = leaves * leaf_tally.total() as f64 * lane_weight;
+
+    // Strassen combination layer: ~18 matrix adds per level on
+    // half-size i128 operands; level i has 7^(i-1) nodes of
+    // (dim/2^i)-sized quarters.
+    let mut combine = 0f64;
+    for level in 1..=levels {
+        let nodes = 7f64.powi(level as i32 - 1);
+        let half = 1usize << level;
+        let quarter = (plan.m().div_ceil(half) * plan.n().div_ceil(half)) as f64;
+        combine += nodes * 18.0 * quarter;
+    }
+
+    // Digit planes multiply the leaf GEMM count by 3 per recursion
+    // level (the three half-width sub-products of Algorithm 4).
+    let planes = 3f64.powi(bits::recursion_levels(digits.max(1)) as i32);
+    let traffic = leaves * planes * leaf_traffic_bytes(lm, lk, ln, &bl, lane);
+
+    compute + combine + traffic
+}
+
+/// Bytes one leaf GEMM moves at blocking `bl`: packed-B fetch + replay
+/// through the §IV-D [`TileBuffer`] model, A streamed once per column
+/// panel, and the output accumulator touched once per depth block.
+fn leaf_traffic_bytes(lm: usize, lk: usize, ln: usize, bl: &Blocking, lane: LaneId) -> f64 {
+    let elem = (lane.elem_bits() / 8) as u64;
+    let acc = (lane.acc_bits() / 8) as u64;
+    let kc = bl.kc.min(lk).max(1);
+    let nc = bl.nc.min(ln).max(1);
+    let sets = (lk.div_ceil(kc) * ln.div_ceil(nc)) as u64;
+    let reads = lm.div_ceil(bl.mc.max(1)).max(1) as u64;
+    let set_bytes = (kc * nc) as u64 * elem;
+    let b_bytes = if sets.saturating_mul(reads) <= 1 << 16 {
+        // The canonical accounting: fetch each resident set once,
+        // replay it for every MC strip of the output.
+        let mut buf = TileBuffer::new(u32::try_from(reads).unwrap_or(u32::MAX), set_bytes);
+        for _ in 0..sets {
+            buf.fetch_next();
+            for _ in 0..reads {
+                buf.read();
+            }
+        }
+        buf.stats.bytes_fetched + buf.stats.bytes_replayed
+    } else {
+        // Closed form of the same accounting for degenerate points.
+        sets * set_bytes * reads
+    };
+    let a_bytes = (lm * lk) as u64 * elem * ln.div_ceil(nc) as u64;
+    let c_bytes = (lm * ln) as u64 * acc * lk.div_ceil(kc) as u64;
+    (b_bytes + a_bytes + c_bytes) as f64
+}
+
+/// One timed micro-measurement of a built plan on deterministic
+/// synthetic operands (fixed seed, so re-tunes see the same data).
+fn measure_once(plan: &MatmulPlan) -> f64 {
+    let mut rng = Rng::new(0x7a6e);
+    let a: Vec<u64> = (0..plan.m() * plan.k()).map(|_| rng.bits(plan.w())).collect();
+    let b: Vec<u64> = (0..plan.k() * plan.n()).map(|_| rng.bits(plan.w())).collect();
+    let start = Instant::now();
+    let c = plan.execute(&a, &b);
+    let elapsed = start.elapsed().as_secs_f64();
+    std::hint::black_box(c);
+    elapsed
+}
+
+/// Run the tuner for one shape: enumerate, score, optionally measure,
+/// and return the full ranking (best candidate first). `threads` is
+/// resolved through the usual precedence by the plan builds. Errors
+/// only when *no* candidate builds — then the error is whatever
+/// [`MatmulPlan::build`] said about the plain-MM request, so callers
+/// see the same typed rejection direct planning would give.
+pub fn tune(
+    m: usize,
+    k: usize,
+    n: usize,
+    w: u32,
+    threads: usize,
+    mode: TuneMode,
+) -> Result<TuneReport, PlanError> {
+    let mut scored: Vec<Candidate> = Vec::new();
+    for spec in candidates(m, k, n, w, threads) {
+        let Ok(plan) = MatmulPlan::build(spec) else {
+            continue;
+        };
+        scored.push(Candidate {
+            spec,
+            algo: plan.algo(),
+            lane: plan.lane(),
+            blocking: plan.blocking(),
+            predicted: predicted_cost(&plan),
+            measured_s: None,
+        });
+    }
+    if scored.is_empty() {
+        // Surface the canonical rejection for this request.
+        return Err(MatmulPlan::build(PlanSpec::mm(m, k, n, w).with_threads(threads))
+            .expect_err("no candidate built, so the base spec must also fail"));
+    }
+    scored.sort_by(|a, b| a.predicted.total_cmp(&b.predicted));
+    if mode == TuneMode::Measured {
+        let top = MEASURE_TOP_K.min(scored.len());
+        for c in scored.iter_mut().take(top) {
+            let plan = MatmulPlan::build(c.spec)
+                .expect("candidate built once already");
+            c.measured_s = Some(measure_once(&plan));
+        }
+        // Measured candidates re-rank by wall clock; unmeasured ones
+        // keep their analytic order behind them.
+        scored[..top].sort_by(|a, b| {
+            a.measured_s
+                .unwrap_or(f64::MAX)
+                .total_cmp(&b.measured_s.unwrap_or(f64::MAX))
+        });
+    }
+    let resolved_threads = MatmulPlan::build(scored[0].spec)
+        .expect("winner built once already")
+        .threads();
+    Ok(TuneReport {
+        m,
+        k,
+        n,
+        w,
+        threads: resolved_threads,
+        mode,
+        candidates: scored,
+    })
+}
+
+/// The cache key a tuned plan is stored under: the full request shape
+/// plus the resolved thread budget and the session's kernel policy
+/// (`KMM_KERNEL`/host fingerprint), so a cache persisted on one host
+/// configuration never serves another's winners silently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Output rows.
+    pub m: usize,
+    /// Depth.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Operand bitwidth.
+    pub w: u32,
+    /// Resolved thread budget.
+    pub threads: usize,
+    /// Kernel policy fingerprint (see [`kernel_fingerprint`]).
+    pub kernel: KernelSel,
+}
+
+/// The session's kernel policy, fingerprinted on the one lane where
+/// the scalar/SIMD choice is real (`u16` carries the SIMD microkernel;
+/// `u64` always resolves scalar). Two processes agree on this iff they
+/// would resolve the same kernels for the same plans.
+pub fn kernel_fingerprint() -> KernelSel {
+    select_kernel(LaneId::U16)
+}
+
+/// What the cache remembers per key: enough to rebuild the winning
+/// plan through [`MatmulPlan::build`] (never a pre-built plan, so
+/// every cache hit re-passes validation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct CachedChoice {
+    algo: PlanAlgo,
+    lane: LaneId,
+    blocking: Blocking,
+}
+
+/// Process-wide cache of tuning winners with hit/miss counters and
+/// JSON persistence. Shards share one instance (via
+/// [`PlanCache::global`] or an `Arc`), so a shape tuned by any worker
+/// is a hit for every other.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    map: RwLock<HashMap<CacheKey, CachedChoice>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Persisted plan-cache document schema (bumped on layout changes).
+pub const PLAN_CACHE_SCHEMA: i64 = 1;
+
+impl PlanCache {
+    /// An empty cache.
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The process-wide shared instance every serving shard consults.
+    pub fn global() -> &'static PlanCache {
+        static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
+        GLOBAL.get_or_init(PlanCache::new)
+    }
+
+    /// Cache hits observed so far (lookups that returned a plan).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses observed so far (lookups that had to tune).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached winners.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Whether the cache holds no winners yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a cached winner, counting the hit or miss. A hit
+    /// rebuilds through [`MatmulPlan::build`]; an entry that no longer
+    /// builds (e.g. a hand-edited persisted cache) is dropped and
+    /// counted as a miss.
+    pub fn get(&self, key: &CacheKey) -> Option<MatmulPlan> {
+        let choice = {
+            let map = self.map.read().unwrap_or_else(|e| e.into_inner());
+            map.get(key).copied()
+        };
+        match choice.and_then(|c| MatmulPlan::build(choice_spec(key, c)).ok()) {
+            Some(plan) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(plan.mark_tuned())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a winner for `key`.
+    pub fn insert(&self, key: CacheKey, plan: &MatmulPlan) {
+        let choice = CachedChoice {
+            algo: plan.algo(),
+            lane: plan.lane(),
+            blocking: plan.blocking(),
+        };
+        let mut map = self.map.write().unwrap_or_else(|e| e.into_inner());
+        map.insert(key, choice);
+    }
+
+    /// The serving entry point: return the cached winner for the
+    /// request, tuning (and caching) on a miss. The returned plan is
+    /// always [`tuned`](MatmulPlan::tuned).
+    pub fn get_or_tune(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        w: u32,
+        threads: usize,
+        mode: TuneMode,
+    ) -> Result<MatmulPlan, PlanError> {
+        self.lookup_or_tune(m, k, n, w, threads, mode)
+            .map(|(plan, _)| plan)
+    }
+
+    /// [`get_or_tune`](Self::get_or_tune), additionally reporting
+    /// whether the plan came from the cache (`true`) or a fresh tune
+    /// (`false`) — the signal the coordinator's per-shard hit/miss
+    /// counters record.
+    pub fn lookup_or_tune(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        w: u32,
+        threads: usize,
+        mode: TuneMode,
+    ) -> Result<(MatmulPlan, bool), PlanError> {
+        // Key on the *resolved* budget so explicit-threads and
+        // env-resolved requests that agree share an entry.
+        let resolved = crate::util::env::resolve_threads(Some(threads).filter(|&t| t > 0), 1);
+        let key = CacheKey {
+            m,
+            k,
+            n,
+            w,
+            threads: resolved,
+            kernel: kernel_fingerprint(),
+        };
+        if let Some(plan) = self.get(&key) {
+            return Ok((plan, true));
+        }
+        let report = tune(m, k, n, w, resolved, mode)?;
+        let plan = report.plan();
+        self.insert(key, &plan);
+        Ok((plan, false))
+    }
+
+    /// Serialize every cached winner to a sorted-key JSON document
+    /// (stable across runs, so round-tripping is idempotent).
+    pub fn to_json(&self) -> String {
+        use std::collections::BTreeMap;
+        let map = self.map.read().unwrap_or_else(|e| e.into_inner());
+        let mut entries: Vec<(CacheKey, CachedChoice)> =
+            map.iter().map(|(k, v)| (*k, *v)).collect();
+        drop(map);
+        entries.sort_by_key(|(k, _)| (k.m, k.k, k.n, k.w, k.threads, k.kernel == KernelSel::Simd));
+        let items: Vec<Json> = entries
+            .into_iter()
+            .map(|(k, c)| {
+                let mut o = BTreeMap::new();
+                o.insert("m".to_string(), Json::Int(k.m as i64));
+                o.insert("k".to_string(), Json::Int(k.k as i64));
+                o.insert("n".to_string(), Json::Int(k.n as i64));
+                o.insert("w".to_string(), Json::Int(k.w as i64));
+                o.insert("threads".to_string(), Json::Int(k.threads as i64));
+                o.insert(
+                    "kernel".to_string(),
+                    Json::Str(
+                        match k.kernel {
+                            KernelSel::Scalar => "scalar",
+                            KernelSel::Simd => "simd",
+                        }
+                        .to_string(),
+                    ),
+                );
+                o.insert("digits".to_string(), Json::Int(c.algo.digits() as i64));
+                o.insert("levels".to_string(), Json::Int(c.algo.levels() as i64));
+                o.insert("lane".to_string(), Json::Str(c.lane.name().to_string()));
+                o.insert("mc".to_string(), Json::Int(c.blocking.mc as i64));
+                o.insert("kc".to_string(), Json::Int(c.blocking.kc as i64));
+                o.insert("nc".to_string(), Json::Int(c.blocking.nc as i64));
+                Json::Object(o)
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Int(PLAN_CACHE_SCHEMA));
+        doc.insert("cache".to_string(), Json::Str("kmm-plan-cache".to_string()));
+        doc.insert("entries".to_string(), Json::Array(items));
+        Json::Object(doc).to_string()
+    }
+
+    /// Merge a persisted document's entries into this cache, returning
+    /// how many were loaded. Every field is validated — unknown lanes,
+    /// non-positive dimensions, undecodable algos, or a wrong schema
+    /// are typed errors, never silently-adopted winners (a loaded entry
+    /// additionally re-passes [`MatmulPlan::build`] on first use).
+    pub fn load_json(&self, text: &str) -> Result<usize, Error> {
+        let doc = Json::parse(text).map_err(|e| Error::msg(format!("plan cache: {e}")))?;
+        let schema = doc
+            .get("schema")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| Error::msg("plan cache: missing schema"))?;
+        if schema != PLAN_CACHE_SCHEMA {
+            return Err(Error::msg(format!(
+                "plan cache: schema {schema} unsupported (expected {PLAN_CACHE_SCHEMA})"
+            )));
+        }
+        let name = doc
+            .get("cache")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::msg("plan cache: missing cache name"))?;
+        if name != "kmm-plan-cache" {
+            return Err(Error::msg(format!(
+                "plan cache: unexpected cache name {name:?}"
+            )));
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_array)
+            .ok_or_else(|| Error::msg("plan cache: entries must be an array"))?;
+        let mut decoded = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            decoded.push(
+                decode_entry(e).map_err(|err| err.context(format!("plan cache entry {i}")))?,
+            );
+        }
+        let count = decoded.len();
+        let mut map = self.map.write().unwrap_or_else(|e| e.into_inner());
+        for (key, choice) in decoded {
+            map.insert(key, choice);
+        }
+        Ok(count)
+    }
+
+    /// Write the cache to `path` (see [`to_json`](Self::to_json)).
+    pub fn save_to(&self, path: &str) -> Result<(), Error> {
+        std::fs::write(path, self.to_json() + "\n")
+            .map_err(|e| Error::msg(format!("writing plan cache {path}: {e}")))
+    }
+
+    /// Load `path` into the cache, returning the entry count (see
+    /// [`load_json`](Self::load_json)). A missing file is an error —
+    /// callers decide whether cold-start is acceptable.
+    pub fn load_from(&self, path: &str) -> Result<usize, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("reading plan cache {path}: {e}")))?;
+        self.load_json(&text)
+    }
+}
+
+/// Rebuild the spec a cached choice stands for.
+fn choice_spec(key: &CacheKey, c: CachedChoice) -> PlanSpec {
+    PlanSpec {
+        m: key.m,
+        k: key.k,
+        n: key.n,
+        w: key.w,
+        algo: c.algo,
+        threads: Some(key.threads),
+        lane: LaneChoice::Forced(c.lane),
+        blocking: c.blocking,
+    }
+}
+
+/// Decode one persisted entry, validating every field.
+fn decode_entry(e: &Json) -> Result<(CacheKey, CachedChoice), Error> {
+    let dim = |field: &str| -> Result<usize, Error> {
+        let v = e
+            .get(field)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| Error::msg(format!("missing integer field {field:?}")))?;
+        usize::try_from(v)
+            .ok()
+            .filter(|&d| d > 0)
+            .ok_or_else(|| Error::msg(format!("field {field:?} must be a positive integer")))
+    };
+    let small = |field: &str| -> Result<u32, Error> {
+        let v = e
+            .get(field)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| Error::msg(format!("missing integer field {field:?}")))?;
+        u32::try_from(v)
+            .map_err(|_| Error::msg(format!("field {field:?} must be a non-negative integer")))
+    };
+    let kernel = match e.get("kernel").and_then(Json::as_str) {
+        Some("scalar") => KernelSel::Scalar,
+        Some("simd") => KernelSel::Simd,
+        other => {
+            return Err(Error::msg(format!(
+                "kernel must be \"scalar\" or \"simd\", got {other:?}"
+            )))
+        }
+    };
+    let lane = match e.get("lane").and_then(Json::as_str) {
+        Some("u16") => LaneId::U16,
+        Some("u32") => LaneId::U32,
+        Some("u64") => LaneId::U64,
+        other => {
+            return Err(Error::msg(format!(
+                "lane must be one of u16/u32/u64, got {other:?}"
+            )))
+        }
+    };
+    let digits = small("digits")?;
+    let levels = small("levels")?;
+    if digits == 0 || !digits.is_power_of_two() {
+        return Err(Error::msg(format!(
+            "digits must be a power of two, got {digits}"
+        )));
+    }
+    let algo = match (levels, digits) {
+        (0, 1) => PlanAlgo::Mm,
+        (0, d) => PlanAlgo::Kmm { digits: d },
+        (l, 1) => PlanAlgo::Strassen { levels: l },
+        (l, d) => PlanAlgo::StrassenKmm { levels: l, digits: d },
+    };
+    let key = CacheKey {
+        m: dim("m")?,
+        k: dim("k")?,
+        n: dim("n")?,
+        w: small("w")?,
+        threads: dim("threads")?,
+        kernel,
+    };
+    let choice = CachedChoice {
+        algo,
+        lane,
+        blocking: Blocking {
+            mc: dim("mc")?,
+            kc: dim("kc")?,
+            nc: dim("nc")?,
+        },
+    };
+    Ok((key, choice))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_cover_algos_lanes_and_blockings() {
+        let specs = candidates(192, 192, 192, 8, 1);
+        let algos: std::collections::BTreeSet<String> =
+            specs.iter().map(|s| s.algo.to_string()).collect();
+        for expect in ["mm", "kmm[2]", "strassen[1]", "strassen-kmm[1,2]"] {
+            assert!(algos.contains(expect), "missing {expect} in {algos:?}");
+        }
+        // Every candidate must actually build.
+        for spec in &specs {
+            assert!(MatmulPlan::build(*spec).is_ok(), "{spec:?}");
+        }
+        // All three blocking points appear.
+        let blockings: std::collections::BTreeSet<(usize, usize, usize)> = specs
+            .iter()
+            .map(|s| (s.blocking.mc, s.blocking.kc, s.blocking.nc))
+            .collect();
+        assert_eq!(blockings.len(), BLOCKING_POINTS.len());
+        // Small shapes never rank Strassen.
+        assert!(candidates(8, 8, 8, 8, 1)
+            .iter()
+            .all(|s| s.algo.levels() == 0));
+    }
+
+    #[test]
+    fn analytic_ranking_matches_the_paper_shape_at_192() {
+        // At 192^3, w=8 the u16 lane serves every algo; the model must
+        // rank strassen[1] < mm < strassen-kmm[1,2] < kmm[2] (the 7/8
+        // multiply saving wins; digit slicing is pure overhead when the
+        // narrow lane already serves mm).
+        let cost = |algo: PlanAlgo| {
+            let mut spec = PlanSpec::mm(192, 192, 192, 8)
+                .with_threads(1)
+                .in_lane(LaneId::U16);
+            spec.algo = algo;
+            predicted_cost(&MatmulPlan::build(spec).unwrap())
+        };
+        let mm = cost(PlanAlgo::Mm);
+        let kmm = cost(PlanAlgo::Kmm { digits: 2 });
+        let st = cost(PlanAlgo::Strassen { levels: 1 });
+        let hybrid = cost(PlanAlgo::StrassenKmm { levels: 1, digits: 2 });
+        assert!(st < mm, "strassen[1]={st} vs mm={mm}");
+        assert!(mm < hybrid, "mm={mm} vs strassen-kmm={hybrid}");
+        assert!(hybrid < kmm, "strassen-kmm={hybrid} vs kmm[2]={kmm}");
+    }
+
+    #[test]
+    fn tuner_prefers_narrow_lanes_and_returns_buildable_winner() {
+        let report = tune(64, 64, 64, 8, 1, TuneMode::Analytic).unwrap();
+        assert!(!report.candidates.is_empty());
+        let plan = report.plan();
+        assert!(plan.tuned());
+        assert_eq!(plan.lane(), LaneId::U16, "w=8 shallow must ride u16");
+        // Ranking is sorted by predicted cost.
+        for pair in report.candidates.windows(2) {
+            assert!(pair[0].predicted <= pair[1].predicted);
+        }
+        // The table renders one row per candidate plus a header.
+        let table = report.table();
+        assert_eq!(table.lines().count(), report.candidates.len() + 1);
+        assert!(table.contains("predicted"), "{table}");
+    }
+
+    #[test]
+    fn measured_mode_times_the_shortlist() {
+        let report = tune(32, 32, 32, 8, 1, TuneMode::Measured).unwrap();
+        let timed = report
+            .candidates
+            .iter()
+            .filter(|c| c.measured_s.is_some())
+            .count();
+        assert_eq!(timed, MEASURE_TOP_K.min(report.candidates.len()));
+        // The winner is one of the measured candidates.
+        assert!(report.winner().measured_s.is_some());
+        for s in report.candidates.iter().filter_map(|c| c.measured_s) {
+            assert!(s >= 0.0 && s.is_finite());
+        }
+    }
+
+    #[test]
+    fn tune_surfaces_typed_errors_for_impossible_requests() {
+        let err = tune(2, 2, 2, 40, 1, TuneMode::Analytic).unwrap_err();
+        assert!(matches!(err, PlanError::Width { w: 40, .. }), "{err:?}");
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses_and_marks_plans_tuned() {
+        let cache = PlanCache::new();
+        assert!(cache.is_empty());
+        let p1 = cache
+            .get_or_tune(48, 48, 48, 8, 1, TuneMode::Analytic)
+            .unwrap();
+        assert!(p1.tuned());
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        assert_eq!(cache.len(), 1);
+        let p2 = cache
+            .get_or_tune(48, 48, 48, 8, 1, TuneMode::Analytic)
+            .unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(p1.describe(), p2.describe());
+        // A different shape is a fresh miss.
+        cache
+            .get_or_tune(48, 96, 48, 8, 1, TuneMode::Analytic)
+            .unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_json_round_trips_idempotently() {
+        let cache = PlanCache::new();
+        for (m, k, n, w) in [(48usize, 48usize, 48usize, 8u32), (64, 128, 32, 16)] {
+            cache.get_or_tune(m, k, n, w, 2, TuneMode::Analytic).unwrap();
+        }
+        let doc = cache.to_json();
+        let warm = PlanCache::new();
+        assert_eq!(warm.load_json(&doc).unwrap(), 2);
+        assert_eq!(warm.to_json(), doc, "round-trip must be a fixed point");
+        // Warm lookups are hits, not re-tunes.
+        warm.get_or_tune(48, 48, 48, 8, 2, TuneMode::Analytic).unwrap();
+        assert_eq!((warm.hits(), warm.misses()), (1, 0));
+    }
+
+    #[test]
+    fn cache_load_rejects_malformed_documents() {
+        let cache = PlanCache::new();
+        for (doc, why) in [
+            ("{", "truncated"),
+            ("{\"schema\": 1}", "missing cache name"),
+            (
+                "{\"schema\": 9, \"cache\": \"kmm-plan-cache\", \"entries\": []}",
+                "wrong schema",
+            ),
+            (
+                "{\"schema\": 1, \"cache\": \"other\", \"entries\": []}",
+                "wrong name",
+            ),
+            (
+                "{\"schema\": 1, \"cache\": \"kmm-plan-cache\", \"entries\": {}}",
+                "entries not array",
+            ),
+        ] {
+            assert!(cache.load_json(doc).is_err(), "{why}");
+        }
+        assert!(cache.is_empty(), "failed loads must not partially apply");
+    }
+
+    #[test]
+    fn cached_entries_rebuild_through_validation() {
+        // An entry whose configuration no longer builds (lane headroom
+        // impossible) is dropped as a miss, never served.
+        let cache = PlanCache::new();
+        let doc = "{\"schema\": 1, \"cache\": \"kmm-plan-cache\", \"entries\": [\
+                   {\"m\": 1, \"k\": 4096, \"n\": 1, \"w\": 16, \"threads\": 1, \
+                    \"kernel\": \"scalar\", \"digits\": 1, \"levels\": 0, \
+                    \"lane\": \"u16\", \"mc\": 64, \"kc\": 128, \"nc\": 512}]}";
+        assert_eq!(cache.load_json(doc).unwrap(), 1);
+        let key = CacheKey {
+            m: 1,
+            k: 4096,
+            n: 1,
+            w: 16,
+            threads: 1,
+            kernel: KernelSel::Scalar,
+        };
+        // u16 cannot hold w=16 at depth 4096: the rebuild fails, so the
+        // lookup is a miss.
+        assert!(cache.get(&key).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+    }
+
+    #[test]
+    fn tuned_plans_are_bit_exact_with_direct_plans() {
+        let mut rng = Rng::new(77);
+        let (m, k, n, w) = (33usize, 48usize, 17usize, 12u32);
+        let a: Vec<u64> = (0..m * k).map(|_| rng.bits(w)).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.bits(w)).collect();
+        let want = MatmulPlan::build(PlanSpec::mm(m, k, n, w).with_threads(1))
+            .unwrap()
+            .execute(&a, &b);
+        let tuned = tune(m, k, n, w, 1, TuneMode::Analytic).unwrap().plan();
+        assert_eq!(tuned.execute(&a, &b), want);
+        assert_eq!(tuned.bind_b(&b).execute(&a), want);
+    }
+}

@@ -115,6 +115,9 @@ pub struct LayerRun {
     /// (`8x4`, `avx2-8x4`, `neon-8x4`; `None` on backends that do not
     /// run the blocked engine).
     pub kernel: Option<&'static str>,
+    /// Whether any stream of this layer was served by an autotuned plan
+    /// (a plan-cache winner); always `false` on non-autotuned backends.
+    pub tuned: bool,
 }
 
 impl LayerRun {
@@ -191,6 +194,7 @@ impl InferRun {
                         None => Json::Null,
                     },
                 );
+                o.insert("tuned".to_string(), Json::Bool(l.tuned));
                 Json::Object(o)
             })
             .collect();
@@ -225,13 +229,13 @@ impl InferRun {
         );
         let _ = writeln!(
             s,
-            "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>8} {:>12} {:>10}",
-            "layer", "M", "K", "N", "w", "plan", "lane", "kernel", "ms", "Mops/s"
+            "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>8} {:>5} {:>12} {:>10}",
+            "layer", "M", "K", "N", "w", "plan", "lane", "kernel", "tuned", "ms", "Mops/s"
         );
         for l in &self.layers {
             let _ = writeln!(
                 s,
-                "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>8} {:>12.3} {:>10.1}",
+                "{:<16} {:>7} {:>7} {:>7} {:>3} {:>5} {:>4} {:>8} {:>5} {:>12.3} {:>10.1}",
                 l.label,
                 l.m,
                 l.k,
@@ -240,6 +244,7 @@ impl InferRun {
                 l.mode.map_or("-", |m| m.name()),
                 l.lane.map_or("-", LaneId::name),
                 l.kernel.unwrap_or("-"),
+                if l.tuned { "yes" } else { "-" },
                 l.seconds * 1e3,
                 l.ops_per_s() / 1e6
             );
@@ -325,6 +330,7 @@ pub fn run_workload(
         let mut lane: Option<LaneId> = None;
         let mut mode: Option<Mode> = None;
         let mut kernel: Option<&'static str> = None;
+        let mut tuned = false;
         for stream in 0..streams {
             let a = Mat::random(g.m, g.k, g.w, &mut rng);
             let t0 = Instant::now();
@@ -341,6 +347,7 @@ pub fn run_workload(
             lane = lane.or(res.lane);
             mode = mode.or(Some(res.mode));
             kernel = kernel.or(res.kernel);
+            tuned |= res.tuned;
             // Oracle work would swamp the timings; check the first
             // stream of each small layer only.
             if cfg.verify
@@ -363,6 +370,7 @@ pub fn run_workload(
             lane,
             mode,
             kernel,
+            tuned,
         });
     }
     Ok(InferRun {
@@ -483,6 +491,27 @@ mod tests {
             "{:?}",
             run.layers.iter().map(|l| l.kernel).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn autotuned_backend_marks_layers_tuned() {
+        // Fresh-pack serving through an autotuned backend routes every
+        // layer's plan through the plan cache; the provenance rides the
+        // per-layer report (table column + JSON field). A default
+        // backend keeps the flag off everywhere.
+        let wl = synthetic_square("sq", 16, 2, 8);
+        let cfg = InferConfig { cached: false, verify: true, ..InferConfig::default() };
+        let mut be = FastBackend::autotuned(FastAlgo::Mm, 1);
+        let run = run_workload(&wl, &mut be, 1, &cfg).unwrap();
+        assert!(run.layers.iter().all(|l| l.tuned), "{:?}", run.layers);
+        assert!(run.table().contains("tuned"));
+        let parsed = Json::parse(&run.to_json().to_string()).unwrap();
+        for layer in parsed.get("layers").and_then(Json::as_array).unwrap() {
+            assert_eq!(layer.get("tuned"), Some(&Json::Bool(true)), "{layer:?}");
+        }
+        let mut plain = FastBackend::new(FastAlgo::Mm);
+        let run = run_workload(&wl, &mut plain, 1, &cfg).unwrap();
+        assert!(run.layers.iter().all(|l| !l.tuned));
     }
 
     #[test]

@@ -5,19 +5,31 @@
 //!   fig5 | fig11 | fig12          regenerate the paper's figures
 //!   gemm --m --k --n --w [--backend functional|pjrt|fast-*]
 //!        [--algo mm|kmm|strassen|strassen-kmm]
-//!        [--threads N]            one GEMM through the stack (N engine
+//!        [--threads N] [--autotune] one GEMM through the stack (N engine
 //!                                 worker threads on the fast backends;
-//!                                 --algo X is shorthand for fast-X)
+//!                                 --algo X is shorthand for fast-X;
+//!                                 --autotune lets the cost model pick the
+//!                                 algorithm/lane/blocking instead of the
+//!                                 backend's fixed policy)
+//!   tune --m --k --n --w [--threads N] [--measure]
+//!                                 rank every candidate plan for one
+//!                                 shape through the autotuner's cost
+//!                                 model (--measure re-times the
+//!                                 shortlist) and print the table
 //!   serve [--requests N] [--backend functional|fast-*]
 //!         [--threads N] [--streams S] [--batch-window 2ms]
 //!         [--max-batch B] [--queue-depth D]
+//!         [--autotune] [--plan-cache FILE]
 //!                                 batched serving demo (N server shards).
 //!                                 --streams S switches to S closed-loop
 //!                                 decode-shaped (m=1) streams against
 //!                                 registered weights through the
 //!                                 coalescing batch queue; prints
 //!                                 p50/p95/p99 latency, coalescing, and
-//!                                 backpressure stats either way
+//!                                 backpressure stats either way;
+//!                                 --plan-cache warm-starts the autotuner
+//!                                 from FILE and saves the tuned plans
+//!                                 back on shutdown
 //!   infer --model resnet50 [--backend fast-kmm|fast-mm|functional]
 //!         [--threads N] [--w 8] [--batch M] [--streams S] [--fresh]
 //!         [--verify] [--json FILE]  whole-model inference, weights
@@ -44,7 +56,7 @@ use kmm::report;
 use kmm::report::layers::layer_report;
 use kmm::runtime::{default_dir, Runtime};
 use kmm::util::cli::Args;
-use kmm::util::pool;
+use kmm::util::env as kenv;
 use kmm::util::rng::Rng;
 
 fn main() {
@@ -57,6 +69,7 @@ fn main() {
         Some("fig11") => print_ok(report::fig11(8, 16).0),
         Some("fig12") => print_ok(report::fig12(&ArrayCfg::paper_64()).0),
         Some("gemm") => cmd_gemm(&args),
+        Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
         Some("infer") => cmd_infer(&args),
         Some("schedule") => cmd_schedule(&args),
@@ -64,8 +77,8 @@ fn main() {
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|serve|infer|schedule|export|info> [options]\n{}",
-                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm]\n           [--algo mm|kmm|strassen|strassen-kmm] [--threads N]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm] [--threads N]\n           [--streams S] [--batch-window 2ms] [--max-batch 32] [--queue-depth 1024]\n  infer    --model resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--backend fast-kmm|fast-mm|functional]\n           [--threads N] [--w 8] [--batch M] [--streams S] [--fresh] [--verify] [--json FILE]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm/infer = engine worker threads; serve = server worker shards)"
+                "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|tune|serve|infer|schedule|export|info> [options]\n{}",
+                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm]\n           [--algo mm|kmm|strassen|strassen-kmm] [--threads N] [--autotune]\n  tune     --m 192 --k 192 --n 192 --w 8 [--threads N] [--measure]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm] [--threads N]\n           [--streams S] [--batch-window 2ms] [--max-batch 32] [--queue-depth 1024] [--autotune] [--plan-cache FILE]\n  infer    --model resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--backend fast-kmm|fast-mm|functional]\n           [--threads N] [--w 8] [--batch M] [--streams S] [--fresh] [--verify] [--json FILE] [--autotune]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm/infer = engine worker threads; serve = server worker shards)\n  (--autotune / KMM_AUTOTUNE=1: cost-model plan selection through the shared plan cache;\n   --plan-cache / KMM_PLAN_CACHE: persist tuned plans across serve runs)"
             );
             2
         }
@@ -90,7 +103,7 @@ const SOFTWARE_BACKENDS: &[&str] = &[
 ];
 
 /// Resolve the `--threads` budget with the documented precedence
-/// (`util::pool::resolve_threads`): an explicit `--threads` always
+/// (`util::env::resolve_threads`): an explicit `--threads` always
 /// overrides `KMM_THREADS`, which overrides `fallback`.
 fn cli_threads(args: &Args, fallback: usize) -> usize {
     let explicit = if args.options.contains_key("threads") {
@@ -98,27 +111,38 @@ fn cli_threads(args: &Args, fallback: usize) -> usize {
     } else {
         None
     };
-    pool::resolve_threads(explicit, fallback)
+    kenv::resolve_threads(explicit, fallback)
 }
 
 /// Build a software backend by name; `None` for names outside
 /// [`SOFTWARE_BACKENDS`]. `threads` sets the fast engine's worker count
 /// (the functional model is inherently single-owner and ignores it).
-fn software_backend(name: &str, threads: usize) -> Option<Box<dyn GemmBackend>> {
+/// With `autotune` set, the fast backends route every plan through the
+/// process-wide [`kmm::fast::PlanCache`] — the policy algorithm becomes
+/// a hint and the cost model picks the configuration (the functional
+/// model has one fixed datapath and ignores the flag).
+fn software_backend(name: &str, threads: usize, autotune: bool) -> Option<Box<dyn GemmBackend>> {
+    let fast = |algo| -> Option<Box<dyn GemmBackend>> {
+        Some(Box::new(if autotune {
+            FastBackend::autotuned(algo, threads)
+        } else {
+            FastBackend::with_threads(algo, threads)
+        }))
+    };
     match name {
         "functional" => Some(Box::new(FunctionalBackend::paper())),
-        "fast-kmm" => Some(Box::new(FastBackend::with_threads(FastAlgo::Kmm, threads))),
-        "fast-mm" => Some(Box::new(FastBackend::with_threads(FastAlgo::Mm, threads))),
-        "fast-strassen" => Some(Box::new(FastBackend::with_threads(
-            FastAlgo::Strassen,
-            threads,
-        ))),
-        "fast-strassen-kmm" => Some(Box::new(FastBackend::with_threads(
-            FastAlgo::StrassenKmm,
-            threads,
-        ))),
+        "fast-kmm" => fast(FastAlgo::Kmm),
+        "fast-mm" => fast(FastAlgo::Mm),
+        "fast-strassen" => fast(FastAlgo::Strassen),
+        "fast-strassen-kmm" => fast(FastAlgo::StrassenKmm),
         _ => None,
     }
+}
+
+/// Resolve the autotune switch: an explicit `--autotune` wins, else the
+/// `KMM_AUTOTUNE` boolean (1/0/true/false/on/off), else off.
+fn cli_autotune(args: &Args) -> bool {
+    args.flag("autotune") || kenv::env_flag("KMM_AUTOTUNE").unwrap_or(false)
 }
 
 fn cmd_gemm(args: &Args) -> i32 {
@@ -127,6 +151,7 @@ fn cmd_gemm(args: &Args) -> i32 {
     let n: usize = args.get("n", 128).unwrap();
     let w: u32 = args.get("w", 12).unwrap();
     let threads = cli_threads(args, 1);
+    let autotune = cli_autotune(args);
     // `--algo mm|kmm|strassen|strassen-kmm` is shorthand for the
     // matching software hot-path backend (`fast-<algo>`).
     let backend = match args.get_str("algo", "").as_str() {
@@ -157,7 +182,7 @@ fn cmd_gemm(args: &Args) -> i32 {
                 return 2;
             }
         },
-        name => match software_backend(name, threads) {
+        name => match software_backend(name, threads, autotune) {
             Some(be) => be,
             None => {
                 eprintln!(
@@ -200,6 +225,41 @@ fn cmd_gemm(args: &Args) -> i32 {
     }
 }
 
+/// `kmm tune`: run the plan autotuner for one GEMM shape and print the
+/// full candidate ranking — the cost model's view of the design space.
+/// `--measure` re-times the analytic shortlist so predicted and
+/// measured orderings can be compared side by side.
+fn cmd_tune(args: &Args) -> i32 {
+    use kmm::fast::{tune, TuneMode};
+    let m: usize = args.get("m", 192).unwrap();
+    let k: usize = args.get("k", 192).unwrap();
+    let n: usize = args.get("n", 192).unwrap();
+    let w: u32 = args.get("w", 8).unwrap();
+    let threads = cli_threads(args, 1);
+    let mode = if args.flag("measure") {
+        TuneMode::Measured
+    } else {
+        TuneMode::Analytic
+    };
+    match tune(m, k, n, w, threads, mode) {
+        Ok(report) => {
+            println!(
+                "tuning {m}x{k}x{n} w={w} ({threads} thread{}, {} candidates, {:?} mode)",
+                if threads == 1 { "" } else { "s" },
+                report.candidates.len(),
+                mode,
+            );
+            print!("{}", report.table());
+            println!("winner: {}", report.plan().describe());
+            0
+        }
+        Err(e) => {
+            eprintln!("tuning rejected: {e}");
+            2
+        }
+    }
+}
+
 /// Print the latency/coalescing tail of a serve run — the stats the
 /// batching pipeline adds on top of the classic counters.
 fn print_serve_stats(stats: &kmm::coordinator::server::ServerStats) {
@@ -231,6 +291,15 @@ fn print_serve_stats(stats: &kmm::coordinator::server::ServerStats) {
             println!("latency {label} µs: {}", cells.join("; "));
         }
     }
+    // Autotune provenance, merged across shards (the counters stay zero
+    // on plain backends, so the line only appears when it means
+    // something).
+    if stats.plan_cache_hits + stats.plan_cache_misses > 0 {
+        println!(
+            "plan cache: {} hits / {} misses across shards; {} of {} requests served from tuned plans",
+            stats.plan_cache_hits, stats.plan_cache_misses, stats.tuned, stats.requests,
+        );
+    }
 }
 
 fn cmd_serve(args: &Args) -> i32 {
@@ -238,6 +307,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let streams: usize = args.get("streams", 0).unwrap();
     let threads = cli_threads(args, 1);
     let backend = args.get_str("backend", "functional");
+    let autotune = cli_autotune(args);
     // Validate the name up front (the worker factory runs too late for
     // a friendly error; `pjrt` is thread-affine and not servable here).
     if !SOFTWARE_BACKENDS.contains(&backend.as_str()) {
@@ -245,6 +315,24 @@ fn cmd_serve(args: &Args) -> i32 {
             "unknown serve backend `{backend}` (functional|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm)"
         );
         return 2;
+    }
+    // Warm-start the process-wide plan cache before any shard resolves
+    // a plan: every entry loaded here is a tune the serve run skips.
+    let cache_path = match args.get_str("plan-cache", "").as_str() {
+        "" => kenv::env_path("KMM_PLAN_CACHE"),
+        p => Some(p.to_string()),
+    };
+    if let Some(path) = &cache_path {
+        if std::path::Path::new(path).exists() {
+            match kmm::fast::PlanCache::global().load_from(path) {
+                Ok(n) => println!("plan cache: warm-started {n} entr{} from {path}",
+                    if n == 1 { "y" } else { "ies" }),
+                Err(e) => {
+                    eprintln!("plan cache: {e:#}");
+                    return 2;
+                }
+            }
+        }
     }
     let window = match kmm::coordinator::server::parse_duration(&args.get_str("batch-window", "0"))
     {
@@ -256,7 +344,7 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let max_batch: usize = args.get("max-batch", 16).unwrap();
     let queue_depth: usize = args
-        .get("queue-depth", pool::env_positive("KMM_QUEUE_DEPTH").unwrap_or(1024))
+        .get("queue-depth", kenv::env_positive("KMM_QUEUE_DEPTH").unwrap_or(1024))
         .unwrap();
     let cfg = ServerConfig::default()
         .workers(threads)
@@ -266,7 +354,7 @@ fn cmd_serve(args: &Args) -> i32 {
     // Print the plans the shard backends resolve for the served widths,
     // and what coalescing is worth on them (the probe runs on this
     // thread; representative decode shape for the streams demo).
-    let probe = software_backend(&backend, 1).expect("name validated above");
+    let probe = software_backend(&backend, 1, autotune).expect("name validated above");
     let preferred = probe.preferred_plan();
     for w in [8u32, 12, 16] {
         if let Ok(plan) = probe.resolve_spec(64, 128, 64, w).and_then(|s| probe.plan(&s)) {
@@ -289,7 +377,7 @@ fn cmd_serve(args: &Args) -> i32 {
     // `--threads` shards the server: N workers, each owning its own
     // single-threaded backend instance (shard-level parallelism).
     let mut srv = Server::start(
-        move || software_backend(&backend, 1).expect("name validated above"),
+        move || software_backend(&backend, 1, autotune).expect("name validated above"),
         cfg,
     );
     let mut rng = Rng::new(5);
@@ -380,6 +468,19 @@ fn cmd_serve(args: &Args) -> i32 {
         cycles as f64 / 326e6 * 1e3
     );
     print_serve_stats(&stats);
+    // Persist every plan the shards tuned (plus the warm-started ones)
+    // so the next serve run starts with zero re-tunes.
+    if let Some(path) = &cache_path {
+        let cache = kmm::fast::PlanCache::global();
+        match cache.save_to(path) {
+            Ok(()) => println!("plan cache: saved {} entr{} to {path}",
+                cache.len(), if cache.len() == 1 { "y" } else { "ies" }),
+            Err(e) => {
+                eprintln!("plan cache: {e:#}");
+                return 1;
+            }
+        }
+    }
     0
 }
 
@@ -415,7 +516,7 @@ fn cmd_infer(args: &Args) -> i32 {
         Ok(wl) => wl,
         Err(code) => return code,
     };
-    let Some(mut be) = software_backend(&backend, threads) else {
+    let Some(mut be) = software_backend(&backend, threads, cli_autotune(args)) else {
         eprintln!(
             "unknown infer backend `{backend}` (fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm|functional)"
         );

@@ -1,5 +1,5 @@
 //! Schema validation for the bench artifacts: `BENCH_hotpath.json`
-//! (**schema 5**) and the serve load-generator's `BENCH_serve.json`
+//! (**schema 6**) and the serve load-generator's `BENCH_serve.json`
 //! (**schema 1**, [`validate_serve`]).
 //!
 //! One checker per artifact, shared by the bench binary (which runs it
@@ -21,15 +21,20 @@
 //!   speedup pair, and the `simd_gate_retried`/`simd_gate_enforced`
 //!   flags (the gate only binds on hosts whose plans resolve a SIMD
 //!   kernel)
+//! - 6: per-section `tuned` (whether the section ran a cost-model
+//!   autotuned plan), the autotune-vs-default sections, the
+//!   `autotune_vs_default` speedup (gated >= 1.0x in CI: the tuner must
+//!   never lose to the fixed default policy), and the
+//!   `autotune_gate_retried` flag
 //!
 //! [`PlanAlgo`]: crate::fast::PlanAlgo
 
 use crate::util::json::Json;
 
 /// The schema revision this crate emits and validates.
-pub const HOTPATH_SCHEMA: i64 = 5;
+pub const HOTPATH_SCHEMA: i64 = 6;
 
-/// Speedup-ratio keys every schema-5 document must carry.
+/// Speedup-ratio keys every schema-6 document must carry.
 pub const REQUIRED_SPEEDUPS: &[&str] = &[
     "fast_mm_vs_tallied_mm1",
     "fast_kmm_vs_tallied_kmm",
@@ -41,9 +46,10 @@ pub const REQUIRED_SPEEDUPS: &[&str] = &[
     "crossover_strassen_kmm_vs_kmm",
     "simd_vs_scalar_u16",
     "simd_vs_scalar_u32",
+    "autotune_vs_default",
 ];
 
-/// The microkernel labels a schema-5 `kernel` field may carry: the
+/// The microkernel labels a schema-6 `kernel` field may carry: the
 /// portable scalar tile kernel plus the per-architecture SIMD variants
 /// (see `fast::kernel` for the dispatch rules).
 pub const KERNEL_NAMES: &[&str] = &["8x4", "avx2-8x4", "neon-8x4"];
@@ -137,7 +143,20 @@ fn validate_kernel(i: usize, s: &Json) -> Result<(), String> {
     }
 }
 
-/// Validate a parsed `BENCH_hotpath.json` document against schema 5.
+/// Schema 6: the autotune-provenance bit on a hotpath section — `true`
+/// exactly when the section executed through a cost-model tuned plan.
+/// Hotpath-only, like [`validate_kernel`]; the serve sections stay on
+/// serve schema 1.
+fn validate_tuned(i: usize, s: &Json) -> Result<(), String> {
+    match s.get("tuned") {
+        Some(Json::Bool(_)) => Ok(()),
+        other => Err(format!(
+            "sections[{i}].tuned must be a bool (schema 6), got {other:?}"
+        )),
+    }
+}
+
+/// Validate a parsed `BENCH_hotpath.json` document against schema 6.
 ///
 /// Returns the first violation as a human-readable message; a document
 /// that passes is safe for every name-keyed trajectory consumer the
@@ -163,6 +182,7 @@ pub fn validate_hotpath(doc: &Json) -> Result<(), String> {
         "plan_gate_retried",
         "simd_gate_retried",
         "simd_gate_enforced",
+        "autotune_gate_retried",
     ] {
         match doc.get(flag) {
             Some(Json::Bool(_)) => {}
@@ -179,6 +199,7 @@ pub fn validate_hotpath(doc: &Json) -> Result<(), String> {
     for (i, s) in secs.iter().enumerate() {
         validate_section(i, s)?;
         validate_kernel(i, s)?;
+        validate_tuned(i, s)?;
     }
     // Schema 4: the crossover sections cover all four algorithms.
     for algo in CROSSOVER_ALGOS {
@@ -342,6 +363,7 @@ mod tests {
             s.insert("lane".to_string(), Json::Str("u16".to_string()));
             s.insert("algo".to_string(), Json::Str((*algo).to_string()));
             s.insert("kernel".to_string(), Json::Str("8x4".to_string()));
+            s.insert("tuned".to_string(), Json::Bool(false));
             sections.push(Json::Object(s));
         }
         let mut speedups = BTreeMap::new();
@@ -357,6 +379,7 @@ mod tests {
         top.insert("plan_gate_retried".to_string(), Json::Bool(false));
         top.insert("simd_gate_retried".to_string(), Json::Bool(false));
         top.insert("simd_gate_enforced".to_string(), Json::Bool(false));
+        top.insert("autotune_gate_retried".to_string(), Json::Bool(false));
         top.insert("sections".to_string(), Json::Array(sections));
         top.insert("speedups".to_string(), Json::Object(speedups));
         Json::Object(top)
@@ -392,14 +415,16 @@ mod tests {
         assert!(e.contains("simd_gate_retried"), "{e}");
         let e = validate_hotpath(&strip("simd_gate_enforced")).unwrap_err();
         assert!(e.contains("simd_gate_enforced"), "{e}");
+        let e = validate_hotpath(&strip("autotune_gate_retried")).unwrap_err();
+        assert!(e.contains("autotune_gate_retried"), "{e}");
 
         // Wrong schema revision.
         let mut doc = minimal_doc();
         if let Json::Object(m) = &mut doc {
-            m.insert("schema".to_string(), Json::Int(4));
+            m.insert("schema".to_string(), Json::Int(5));
         }
         let e = validate_hotpath(&doc).unwrap_err();
-        assert!(e.contains("must be 5"), "{e}");
+        assert!(e.contains("must be 6"), "{e}");
 
         // A section mutation helper for the per-section field checks.
         let patch_section0 = |f: &dyn Fn(&mut BTreeMap<String, Json>)| {
@@ -444,6 +469,22 @@ mod tests {
             .unwrap_or_else(|e| panic!("{name} must be a legal kernel label: {e}"));
         }
 
+        // Schema 6: the tuned bit must exist and be a bool.
+        let e = validate_hotpath(&patch_section0(&|s0| {
+            s0.remove("tuned");
+        }))
+        .unwrap_err();
+        assert!(e.contains("tuned"), "{e}");
+        let e = validate_hotpath(&patch_section0(&|s0| {
+            s0.insert("tuned".to_string(), Json::Str("yes".to_string()));
+        }))
+        .unwrap_err();
+        assert!(e.contains("tuned"), "{e}");
+        validate_hotpath(&patch_section0(&|s0| {
+            s0.insert("tuned".to_string(), Json::Bool(true));
+        }))
+        .expect("a tuned section is legal");
+
         // A crossover algorithm dropped entirely.
         let mut doc = minimal_doc();
         if let Json::Object(m) = &mut doc {
@@ -457,7 +498,7 @@ mod tests {
         assert!(e.contains("crossover"), "{e}");
 
         // A required speedup dropped.
-        for key in ["crossover_strassen_vs_mm", "simd_vs_scalar_u16"] {
+        for key in ["crossover_strassen_vs_mm", "simd_vs_scalar_u16", "autotune_vs_default"] {
             let mut doc = minimal_doc();
             if let Json::Object(m) = &mut doc {
                 if let Some(Json::Object(sp)) = m.get_mut("speedups") {

@@ -1,0 +1,358 @@
+//! One home for every `KMM_*` environment knob.
+//!
+//! The crate reads a handful of environment variables (`KMM_THREADS`,
+//! `KMM_KERNEL`, `KMM_QUEUE_DEPTH`, `KMM_AUTOTUNE`, `KMM_PLAN_CACHE`),
+//! and before this module existed each reader carried its own copy of
+//! the parse-and-warn logic — three `static Once` latches in three
+//! files, each with a slightly different message. This module unifies
+//! the acceptance rules and the **warn-once-on-malformed** behavior:
+//!
+//! - a malformed value never aborts; the reader falls back to its
+//!   documented default, but prints one warning per variable per
+//!   process on stderr, so a typo'd deployment does not silently run
+//!   with the wrong configuration;
+//! - the warning names only the malformed value, never the fallback —
+//!   the fallback differs per caller, and the per-variable latch keeps
+//!   whichever caller warms it first, so interpolating a fallback
+//!   would print a number that is wrong for every other call site.
+//!
+//! Thread-pool *primitives* (`available_threads`, `parallel_chunks_mut`,
+//! `join3`) stay in [`crate::util::pool`]; this module owns only the
+//! environment-derived policy on top of them.
+
+use std::collections::BTreeSet;
+use std::sync::Mutex;
+
+/// Parse a positive-integer knob value (`KMM_THREADS`,
+/// `KMM_QUEUE_DEPTH`): surrounding whitespace tolerated, `None` for
+/// anything malformed — empty, non-numeric, or zero (a zero worker
+/// count or queue depth is meaningless; the clamping callers apply
+/// elsewhere is for *derived* counts, not user input). Split out from
+/// [`env_threads_or`] so the malformed cases are unit-testable without
+/// mutating process-global env state.
+pub fn parse_threads(raw: &str) -> Option<usize> {
+    raw.trim().parse::<usize>().ok().filter(|&n| n > 0)
+}
+
+/// Print `msg()` on stderr at most once per process per `key`.
+/// Returns whether this call actually printed, so tests can verify the
+/// latch without scraping stderr. Keys are per *variable*, not per
+/// call site: every reader of a knob shares one latch, matching the
+/// old per-file `static Once` behavior now that the readers share a
+/// file.
+pub fn warn_once(key: &str, msg: impl FnOnce() -> String) -> bool {
+    static WARNED: Mutex<BTreeSet<String>> = Mutex::new(BTreeSet::new());
+    let mut warned = WARNED.lock().unwrap_or_else(|e| e.into_inner());
+    if warned.contains(key) {
+        return false;
+    }
+    warned.insert(key.to_string());
+    eprintln!("{}", msg());
+    true
+}
+
+/// The `KMM_THREADS` environment variable when set to a positive
+/// integer, otherwise `fallback`. The CLI defaults through this with
+/// `fallback = 1` (opt-in parallelism), the bench with
+/// [`crate::util::pool::available_threads`].
+///
+/// This is step 2 of the documented thread-budget resolution order —
+/// use [`resolve_threads`] when an explicit request may exist:
+///
+/// 1. an **explicit** request (`--threads` on the CLI,
+///    `FastBackend::with_threads`, `PlanSpec.threads = Some(_)`)
+///    always wins, even over a set `KMM_THREADS`;
+/// 2. otherwise `KMM_THREADS` (a positive integer) applies;
+/// 3. otherwise `fallback`.
+///
+/// A set-but-malformed value (e.g. `KMM_THREADS=0` or
+/// `KMM_THREADS=abc`) falls back too, but **loudly**: one warning per
+/// process on stderr (see [`warn_once`]).
+pub fn env_threads_or(fallback: usize) -> usize {
+    match std::env::var("KMM_THREADS") {
+        Ok(raw) => parse_threads(&raw).unwrap_or_else(|| {
+            warn_once("KMM_THREADS", || malformed_threads_warning(&raw));
+            fallback
+        }),
+        Err(_) => fallback,
+    }
+}
+
+/// The once-per-process warning [`env_threads_or`] prints for a
+/// malformed `KMM_THREADS`. Deliberately names only the malformed
+/// value: the fallback differs per caller (the CLI uses 1, the benches
+/// the hardware thread count), and the latch keeps whichever caller
+/// warms it first — interpolating that caller's fallback would print a
+/// number that is wrong for every *other* call site in the process.
+fn malformed_threads_warning(raw: &str) -> String {
+    format!("warning: ignoring KMM_THREADS={raw:?}: not a positive integer")
+}
+
+/// Default worker count: `KMM_THREADS` when set, otherwise
+/// [`crate::util::pool::available_threads`].
+pub fn default_threads() -> usize {
+    env_threads_or(crate::util::pool::available_threads())
+}
+
+/// Read an arbitrary environment variable as a positive integer —
+/// `None` when unset or malformed (same acceptance rules as
+/// [`parse_threads`]). The serve CLI defaults its `--queue-depth`
+/// through `env_positive("KMM_QUEUE_DEPTH")`; unlike `KMM_THREADS`
+/// these auxiliary knobs fall back silently, since absence is the
+/// common case rather than a typo'd deployment.
+pub fn env_positive(var: &str) -> Option<usize> {
+    std::env::var(var).ok().and_then(|raw| parse_threads(&raw))
+}
+
+/// Resolve a thread budget with the precedence documented on
+/// [`env_threads_or`]: an explicit request always overrides
+/// `KMM_THREADS` (clamped to at least 1 — zero workers is meaningless),
+/// and only an absent request consults the environment before falling
+/// back. Every layer that accepts a thread knob (`kmm gemm/serve/infer
+/// --threads`, `PlanSpec.threads`, the benches) resolves through this
+/// one function, so the precedence cannot drift between entry points.
+pub fn resolve_threads(explicit: Option<usize>, fallback: usize) -> usize {
+    match explicit {
+        Some(n) => n.max(1),
+        None => env_threads_or(fallback),
+    }
+}
+
+/// The `KMM_KERNEL` microkernel override.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelEnv {
+    /// `KMM_KERNEL=scalar`: force the portable scalar kernel
+    /// (differential testing, perf triage).
+    Scalar,
+    /// `KMM_KERNEL=native`, unset, or malformed: let the platform pick
+    /// (SIMD wherever it is supported).
+    Native,
+}
+
+/// Parse a `KMM_KERNEL` value. `None` means "malformed" so the caller
+/// can distinguish it from an explicit `native`; [`env_kernel`] maps
+/// both to [`KernelEnv::Native`] after warning.
+pub fn parse_kernel(raw: &str) -> Option<KernelEnv> {
+    match raw.trim() {
+        "scalar" => Some(KernelEnv::Scalar),
+        "native" => Some(KernelEnv::Native),
+        _ => None,
+    }
+}
+
+/// Read `KMM_KERNEL`: `scalar` forces the scalar kernel, `native` or
+/// unset picks the platform default, anything else warns once (see
+/// [`warn_once`]) and behaves as unset.
+pub fn env_kernel() -> KernelEnv {
+    match std::env::var("KMM_KERNEL") {
+        Ok(raw) => parse_kernel(&raw).unwrap_or_else(|| {
+            warn_once("KMM_KERNEL", || malformed_kernel_warning(&raw));
+            KernelEnv::Native
+        }),
+        Err(_) => KernelEnv::Native,
+    }
+}
+
+/// The once-per-process warning [`env_kernel`] prints for a malformed
+/// `KMM_KERNEL` (same no-fallback-in-message rule as
+/// [`malformed_threads_warning`]).
+fn malformed_kernel_warning(raw: &str) -> String {
+    format!("warning: ignoring KMM_KERNEL={raw:?}: expected \"scalar\" or \"native\"")
+}
+
+/// Parse a boolean knob value (`KMM_AUTOTUNE`): `1`/`true`/`on` and
+/// `0`/`false`/`off` (case-insensitive, whitespace tolerated), `None`
+/// for anything else.
+pub fn parse_flag(raw: &str) -> Option<bool> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" => Some(true),
+        "0" | "false" | "off" => Some(false),
+        _ => None,
+    }
+}
+
+/// Read an environment variable as a boolean flag — `None` when unset;
+/// a set-but-malformed value warns once (keyed by `var`) and reads as
+/// `None`. `KMM_AUTOTUNE=1` opts the CLI into autotuned plans without
+/// passing `--autotune` at every invocation.
+pub fn env_flag(var: &str) -> Option<bool> {
+    match std::env::var(var) {
+        Ok(raw) => {
+            let parsed = parse_flag(&raw);
+            if parsed.is_none() {
+                warn_once(var, || {
+                    format!("warning: ignoring {var}={raw:?}: expected a boolean (1/0/true/false/on/off)")
+                });
+            }
+            parsed
+        }
+        Err(_) => None,
+    }
+}
+
+/// Read an environment variable as a non-empty path string — `None`
+/// when unset or empty. `KMM_PLAN_CACHE` names the persisted plan-cache
+/// JSON the autotuner warm-starts from; there is nothing to parse, so
+/// nothing to warn about.
+pub fn env_path(var: &str) -> Option<String> {
+    std::env::var(var).ok().filter(|s| !s.trim().is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_threads_accepts_positive_integers() {
+        assert_eq!(parse_threads("1"), Some(1));
+        assert_eq!(parse_threads("8"), Some(8));
+        assert_eq!(parse_threads("  4 "), Some(4), "whitespace tolerated");
+    }
+
+    #[test]
+    fn parse_threads_rejects_malformed_values() {
+        // The cases env_threads_or must fall back (with a warning) on:
+        // zero, non-numeric, empty, negative, and fractional.
+        assert_eq!(parse_threads("0"), None, "zero workers is meaningless");
+        assert_eq!(parse_threads("abc"), None);
+        assert_eq!(parse_threads(""), None);
+        assert_eq!(parse_threads("-2"), None);
+        assert_eq!(parse_threads("2.5"), None);
+        assert_eq!(parse_threads("4x"), None);
+    }
+
+    #[test]
+    fn malformed_threads_warning_names_no_fallback() {
+        // The latch keeps the first caller's message for the whole
+        // process, so the text must be caller-independent: it names the
+        // malformed value and nothing else. A message interpolating the
+        // per-call fallback (the old behavior) would print the *first*
+        // caller's number — e.g. a bench warming the latch with
+        // fallback=nproc makes a later `kmm serve` warn with a count it
+        // never uses.
+        for raw in ["0", "abc", "", "-2", "2.5"] {
+            let msg = malformed_threads_warning(raw);
+            assert!(msg.starts_with("warning: "), "{msg}");
+            assert!(msg.contains(&format!("KMM_THREADS={raw:?}")), "{msg}");
+            assert!(msg.ends_with("not a positive integer"), "{msg}");
+            assert!(!msg.contains("falling back"), "{msg}");
+        }
+        // No digits beyond the malformed value itself: nothing numeric
+        // (a fallback count) can leak into the fixed message text.
+        let fixed = malformed_threads_warning("x");
+        assert!(!fixed.contains(|c: char| c.is_ascii_digit()), "{fixed}");
+    }
+
+    #[test]
+    fn kernel_warning_names_the_accepted_values() {
+        let msg = malformed_kernel_warning("fast");
+        assert!(msg.starts_with("warning: "), "{msg}");
+        assert!(msg.contains("KMM_KERNEL=\"fast\""), "{msg}");
+        assert!(msg.contains("\"scalar\""), "{msg}");
+        assert!(msg.contains("\"native\""), "{msg}");
+    }
+
+    #[test]
+    fn explicit_threads_override_the_environment() {
+        // The precedence contract: an explicit request beats a set
+        // KMM_THREADS, which beats the fallback. Env mutation happens
+        // in this one test only, and any pre-existing value is
+        // restored; every other env-reading assertion in the suite is
+        // robust to an arbitrary positive value being transiently
+        // visible (Rust's std synchronizes env access process-wide).
+        let prev = std::env::var("KMM_THREADS").ok();
+        std::env::set_var("KMM_THREADS", "64");
+        assert_eq!(resolve_threads(Some(2), 1), 2, "explicit wins over env");
+        assert_eq!(resolve_threads(Some(0), 1), 1, "explicit zero clamps to 1");
+        assert_eq!(resolve_threads(None, 1), 64, "env wins over fallback");
+        assert_eq!(env_threads_or(1), 64);
+        std::env::remove_var("KMM_THREADS");
+        assert_eq!(resolve_threads(None, 5), 5, "fallback when nothing is set");
+        assert_eq!(resolve_threads(Some(3), 5), 3);
+        if let Some(v) = prev {
+            std::env::set_var("KMM_THREADS", v);
+        }
+    }
+
+    #[test]
+    fn env_positive_reads_arbitrary_variables() {
+        // A variable name no other test touches, so the env mutation
+        // cannot race the KMM_THREADS assertions.
+        let var = "KMM_ENV_TEST_ENV_POSITIVE";
+        std::env::remove_var(var);
+        assert_eq!(env_positive(var), None, "unset");
+        std::env::set_var(var, "128");
+        assert_eq!(env_positive(var), Some(128));
+        std::env::set_var(var, "0");
+        assert_eq!(env_positive(var), None, "zero is malformed");
+        std::env::set_var(var, "deep");
+        assert_eq!(env_positive(var), None, "non-numeric is malformed");
+        std::env::remove_var(var);
+    }
+
+    #[test]
+    fn parse_kernel_accepts_the_two_documented_values() {
+        assert_eq!(parse_kernel("scalar"), Some(KernelEnv::Scalar));
+        assert_eq!(parse_kernel(" native "), Some(KernelEnv::Native));
+        assert_eq!(parse_kernel("simd"), None);
+        assert_eq!(parse_kernel(""), None);
+        assert_eq!(parse_kernel("SCALAR"), None, "case-sensitive like the old parser");
+    }
+
+    #[test]
+    fn parse_flag_accepts_boolean_spellings() {
+        for raw in ["1", "true", "on", " TRUE "] {
+            assert_eq!(parse_flag(raw), Some(true), "{raw:?}");
+        }
+        for raw in ["0", "false", "off", " Off "] {
+            assert_eq!(parse_flag(raw), Some(false), "{raw:?}");
+        }
+        for raw in ["", "yes", "2", "enable"] {
+            assert_eq!(parse_flag(raw), None, "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn env_flag_reads_arbitrary_variables() {
+        let var = "KMM_ENV_TEST_ENV_FLAG";
+        std::env::remove_var(var);
+        assert_eq!(env_flag(var), None, "unset");
+        std::env::set_var(var, "1");
+        assert_eq!(env_flag(var), Some(true));
+        std::env::set_var(var, "off");
+        assert_eq!(env_flag(var), Some(false));
+        std::env::set_var(var, "maybe");
+        assert_eq!(env_flag(var), None, "malformed reads as unset (after warning once)");
+        std::env::remove_var(var);
+    }
+
+    #[test]
+    fn env_path_requires_a_non_empty_value() {
+        let var = "KMM_ENV_TEST_ENV_PATH";
+        std::env::remove_var(var);
+        assert_eq!(env_path(var), None, "unset");
+        std::env::set_var(var, "  ");
+        assert_eq!(env_path(var), None, "blank is as good as unset");
+        std::env::set_var(var, "/tmp/plans.json");
+        assert_eq!(env_path(var).as_deref(), Some("/tmp/plans.json"));
+        std::env::remove_var(var);
+    }
+
+    #[test]
+    fn warn_once_latches_per_key() {
+        // Keys unique to this test so parallel test binaries cannot
+        // have warmed them.
+        assert!(warn_once("KMM_ENV_TEST_WARN_A", || "warning: a".into()));
+        assert!(!warn_once("KMM_ENV_TEST_WARN_A", || "warning: a".into()));
+        assert!(warn_once("KMM_ENV_TEST_WARN_B", || "warning: b".into()));
+        assert!(!warn_once("KMM_ENV_TEST_WARN_B", || "warning: b".into()));
+    }
+
+    #[test]
+    fn thread_counts_are_positive() {
+        assert!(default_threads() >= 1);
+        // With the variable unset (the test environment default) the
+        // fallback passes through untouched.
+        assert!(env_threads_or(1) >= 1);
+    }
+}

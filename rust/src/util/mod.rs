@@ -1,8 +1,9 @@
 //! Dependency-free utilities: deterministic RNG, property-test harness,
 //! wide integer arithmetic, error handling, a small CLI argument parser,
-//! and scoped-thread pool primitives.
+//! environment-variable policy, and scoped-thread pool primitives.
 
 pub mod cli;
+pub mod env;
 pub mod error;
 pub mod json;
 pub mod pool;

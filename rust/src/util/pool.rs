@@ -27,93 +27,16 @@
 //! be shared by reference (the packed-B slab is read by every worker)
 //! without `Arc` or `'static` bounds, and a worker panic propagates to
 //! the caller when the scope joins.
+//!
+//! Environment-derived thread *policy* (`KMM_THREADS` parsing,
+//! [`crate::util::env::resolve_threads`]) lives in [`crate::util::env`];
+//! this module owns only the mechanics.
 
 /// Number of hardware threads the OS reports (at least 1).
 pub fn available_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
-}
-
-/// Parse a `KMM_THREADS` value: a positive integer (surrounding
-/// whitespace tolerated), or `None` for anything malformed — empty,
-/// non-numeric, or zero (a zero worker count is meaningless; the
-/// clamping callers apply elsewhere is for *derived* counts, not user
-/// input). Split out from [`env_threads_or`] so the malformed cases
-/// are unit-testable without mutating process-global env state.
-pub fn parse_threads(raw: &str) -> Option<usize> {
-    raw.trim().parse::<usize>().ok().filter(|&n| n > 0)
-}
-
-/// The `KMM_THREADS` environment variable when set to a positive
-/// integer, otherwise `fallback`. The CLI defaults through this with
-/// `fallback = 1` (opt-in parallelism), the bench with
-/// [`available_threads`].
-///
-/// This is step 2 of the documented thread-budget resolution order —
-/// use [`resolve_threads`] when an explicit request may exist:
-///
-/// 1. an **explicit** request (`--threads` on the CLI,
-///    `FastBackend::with_threads`, `PlanSpec.threads = Some(_)`)
-///    always wins, even over a set `KMM_THREADS`;
-/// 2. otherwise `KMM_THREADS` (a positive integer) applies;
-/// 3. otherwise `fallback`.
-///
-/// A set-but-malformed value (e.g. `KMM_THREADS=0` or
-/// `KMM_THREADS=abc`) falls back too, but **loudly**: one warning per
-/// process on stderr, so a typo'd deployment does not silently serve
-/// single-threaded.
-pub fn env_threads_or(fallback: usize) -> usize {
-    match std::env::var("KMM_THREADS") {
-        Ok(raw) => parse_threads(&raw).unwrap_or_else(|| {
-            static WARN_ONCE: std::sync::Once = std::sync::Once::new();
-            WARN_ONCE.call_once(|| {
-                eprintln!("{}", malformed_threads_warning(&raw));
-            });
-            fallback
-        }),
-        Err(_) => fallback,
-    }
-}
-
-/// The once-per-process warning [`env_threads_or`] prints for a
-/// malformed `KMM_THREADS`. Deliberately names only the malformed
-/// value: the fallback differs per caller (the CLI uses 1, the benches
-/// the hardware thread count), and the `Once` latches whichever caller
-/// warms it first — interpolating that caller's fallback would print a
-/// number that is wrong for every *other* call site in the process.
-fn malformed_threads_warning(raw: &str) -> String {
-    format!("warning: ignoring KMM_THREADS={raw:?}: not a positive integer")
-}
-
-/// Default worker count: `KMM_THREADS` when set, otherwise
-/// [`available_threads`].
-pub fn default_threads() -> usize {
-    env_threads_or(available_threads())
-}
-
-/// Read an arbitrary environment variable as a positive integer —
-/// `None` when unset or malformed (same acceptance rules as
-/// [`parse_threads`]). The serve CLI defaults its `--queue-depth`
-/// through `env_positive("KMM_QUEUE_DEPTH")`; unlike `KMM_THREADS`
-/// these auxiliary knobs fall back silently, since absence is the
-/// common case rather than a typo'd deployment.
-pub fn env_positive(var: &str) -> Option<usize> {
-    std::env::var(var).ok().and_then(|raw| parse_threads(&raw))
-}
-
-/// Resolve a thread budget with the precedence documented on
-/// [`env_threads_or`]: an explicit request always overrides
-/// `KMM_THREADS` (clamped to at least 1 — zero workers is meaningless),
-/// and only an absent request consults the environment before falling
-/// back. Every layer that accepts a thread knob (`kmm gemm/serve/infer
-/// --threads`, `PlanSpec.threads`, the benches) resolves through this
-/// one function, so the precedence cannot drift between entry points.
-pub fn resolve_threads(explicit: Option<usize>, fallback: usize) -> usize {
-    match explicit {
-        Some(n) => n.max(1),
-        None => env_threads_or(fallback),
-    }
 }
 
 /// Process the chunks of `data` (each `chunk_len` long, last one ragged)
@@ -220,89 +143,6 @@ mod tests {
     #[test]
     fn thread_counts_are_positive() {
         assert!(available_threads() >= 1);
-        assert!(default_threads() >= 1);
-        // With the variable unset (the test environment default) the
-        // fallback passes through untouched.
-        assert!(env_threads_or(1) >= 1);
-    }
-
-    #[test]
-    fn parse_threads_accepts_positive_integers() {
-        assert_eq!(parse_threads("1"), Some(1));
-        assert_eq!(parse_threads("8"), Some(8));
-        assert_eq!(parse_threads("  4 "), Some(4), "whitespace tolerated");
-    }
-
-    #[test]
-    fn parse_threads_rejects_malformed_values() {
-        // The cases env_threads_or must fall back (with a warning) on:
-        // zero, non-numeric, empty, negative, and fractional.
-        assert_eq!(parse_threads("0"), None, "zero workers is meaningless");
-        assert_eq!(parse_threads("abc"), None);
-        assert_eq!(parse_threads(""), None);
-        assert_eq!(parse_threads("-2"), None);
-        assert_eq!(parse_threads("2.5"), None);
-        assert_eq!(parse_threads("4x"), None);
-    }
-
-    #[test]
-    fn malformed_threads_warning_names_no_fallback() {
-        // The Once latches the first caller's message for the whole
-        // process, so the text must be caller-independent: it names the
-        // malformed value and nothing else. A message interpolating the
-        // per-call fallback (the old behavior) would print the *first*
-        // caller's number — e.g. a bench warming the Once with
-        // fallback=nproc makes a later `kmm serve` warn with a count it
-        // never uses.
-        for raw in ["0", "abc", "", "-2", "2.5"] {
-            let msg = malformed_threads_warning(raw);
-            assert!(msg.starts_with("warning: "), "{msg}");
-            assert!(msg.contains(&format!("KMM_THREADS={raw:?}")), "{msg}");
-            assert!(msg.ends_with("not a positive integer"), "{msg}");
-            assert!(!msg.contains("falling back"), "{msg}");
-        }
-        // No digits beyond the malformed value itself: nothing numeric
-        // (a fallback count) can leak into the fixed message text.
-        let fixed = malformed_threads_warning("x");
-        assert!(!fixed.contains(|c: char| c.is_ascii_digit()), "{fixed}");
-    }
-
-    #[test]
-    fn explicit_threads_override_the_environment() {
-        // The precedence contract: an explicit request beats a set
-        // KMM_THREADS, which beats the fallback. Env mutation happens
-        // in this one test only, and any pre-existing value is
-        // restored; every other env-reading assertion in the suite is
-        // robust to an arbitrary positive value being transiently
-        // visible (Rust's std synchronizes env access process-wide).
-        let prev = std::env::var("KMM_THREADS").ok();
-        std::env::set_var("KMM_THREADS", "64");
-        assert_eq!(resolve_threads(Some(2), 1), 2, "explicit wins over env");
-        assert_eq!(resolve_threads(Some(0), 1), 1, "explicit zero clamps to 1");
-        assert_eq!(resolve_threads(None, 1), 64, "env wins over fallback");
-        assert_eq!(env_threads_or(1), 64);
-        std::env::remove_var("KMM_THREADS");
-        assert_eq!(resolve_threads(None, 5), 5, "fallback when nothing is set");
-        assert_eq!(resolve_threads(Some(3), 5), 3);
-        if let Some(v) = prev {
-            std::env::set_var("KMM_THREADS", v);
-        }
-    }
-
-    #[test]
-    fn env_positive_reads_arbitrary_variables() {
-        // A variable name no other test touches, so the env mutation
-        // cannot race the KMM_THREADS assertions.
-        let var = "KMM_POOL_TEST_ENV_POSITIVE";
-        std::env::remove_var(var);
-        assert_eq!(env_positive(var), None, "unset");
-        std::env::set_var(var, "128");
-        assert_eq!(env_positive(var), Some(128));
-        std::env::set_var(var, "0");
-        assert_eq!(env_positive(var), None, "zero is malformed");
-        std::env::set_var(var, "deep");
-        assert_eq!(env_positive(var), None, "non-numeric is malformed");
-        std::env::remove_var(var);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Golden-file tests for the bench artifact contracts
-//! (`BENCH_hotpath.json` schema 5 and `BENCH_serve.json` schema 1):
+//! (`BENCH_hotpath.json` schema 6 and `BENCH_serve.json` schema 1):
 //! each checked-in example document must pass the same
 //! `report::bench_schema` validator the bench binary runs on its own
 //! output before writing it, round-trip through the crate's JSON codec
@@ -18,12 +18,12 @@ use kmm::report::bench_schema::{
 };
 use kmm::util::json::Json;
 
-const GOLDEN: &str = include_str!("golden/BENCH_hotpath.schema5.example.json");
+const GOLDEN: &str = include_str!("golden/BENCH_hotpath.schema6.example.json");
 const SERVE_GOLDEN: &str = include_str!("golden/BENCH_serve.schema1.example.json");
 
 #[test]
 fn golden_document_passes_the_shared_validator() {
-    let doc = validate_hotpath_str(GOLDEN).expect("golden schema-5 document validates");
+    let doc = validate_hotpath_str(GOLDEN).expect("golden schema-6 document validates");
     assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(HOTPATH_SCHEMA));
     // Every required speedup and every crossover algorithm label the
     // validator demands is actually present in the example — the file
@@ -69,8 +69,8 @@ fn malformed_documents_error_instead_of_panicking() {
         (r#"{"bench": "other"}"#, "hotpath"),
         // A stale schema revision is refused outright.
         (
-            &GOLDEN.replacen("\"schema\": 5", "\"schema\": 4", 1),
-            "must be 5",
+            &GOLDEN.replacen("\"schema\": 6", "\"schema\": 5", 1),
+            "must be 6",
         ),
         // A section stripped of its schema-4 algo label.
         (
@@ -94,6 +94,24 @@ fn malformed_documents_error_instead_of_panicking() {
                 1,
             ),
             "simd_gate_enforced",
+        ),
+        // So are the schema-6 autotune gate flag and tuned bit.
+        (
+            &GOLDEN.replacen(
+                "\"autotune_gate_retried\": false",
+                "\"autotune_gate_retried\": 0",
+                1,
+            ),
+            "autotune_gate_retried",
+        ),
+        (
+            &GOLDEN.replacen("\"tuned\": true", "\"tuned\": \"yes\"", 1),
+            "tuned",
+        ),
+        // The schema-6 gated ratio renamed away.
+        (
+            &GOLDEN.replacen("autotune_vs_default", "autotune_vs", 1),
+            "autotune_vs_default",
         ),
         // A schema-5 required ratio renamed away.
         (
@@ -147,12 +165,15 @@ fn validator_mutations_verify_each_replacement_took_effect() {
     // The replacen-based mutations above silently become no-ops if the
     // golden text drifts; pin the substrings they rely on.
     for needle in [
-        "\"schema\": 5",
+        "\"schema\": 6",
         "\"algo\": null",
         "\"kernel\": null",
         "\"kernel\": \"8x4\"",
         "\"simd_gate_enforced\": true",
+        "\"autotune_gate_retried\": false",
+        "\"tuned\": true",
         "simd_vs_scalar_u16",
+        "autotune_vs_default",
         "strassen-kmm[1,2]",
         "crossover_strassen_vs_mm",
         "\"median_s\": 0.0147",

@@ -241,6 +241,7 @@ fn scalar_and_simd_selections_are_bit_exact_across_the_grid() {
                     algo,
                     threads: Some(threads),
                     lane: LaneChoice::Forced(lane),
+                    blocking: Blocking::default(),
                 };
                 let scalar = MatmulPlan::build(spec).unwrap().with_kernel(KernelSel::Scalar);
                 let simd = MatmulPlan::build(spec).unwrap().with_kernel(KernelSel::Simd);
@@ -293,6 +294,7 @@ fn simd_selection_is_exact_at_the_narrow_lane_headroom_boundaries() {
                     algo,
                     threads: Some(threads),
                     lane: LaneChoice::Forced(lane),
+                    blocking: Blocking::default(),
                 };
                 for sel in [KernelSel::Scalar, KernelSel::Simd] {
                     let plan = MatmulPlan::build(spec).unwrap().with_kernel(sel);

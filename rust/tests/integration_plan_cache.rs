@@ -1,0 +1,144 @@
+//! Golden-file tests for the persisted plan-cache contract
+//! (`plan_cache.schema1.example.json`, **plan-cache schema 1**): the
+//! checked-in document is byte-for-byte what [`PlanCache::to_json`]
+//! emits after loading it (so persistence is idempotent, not merely
+//! lossless), every entry it carries rebuilds into a working tuned
+//! plan, and malformed or truncated documents yield typed errors —
+//! never panics, and never a partially-adopted cache.
+//!
+//! The golden file pins the *external* contract: `kmm serve
+//! --plan-cache` ships this document between runs (and operators may
+//! check it into their deploy repos), so a renamed field, a reordered
+//! key, or a silently-accepted corrupt entry is a compatibility break
+//! this file turns into a test diff.
+//!
+//! [`PlanCache::to_json`]: kmm::fast::PlanCache
+
+use kmm::fast::{CacheKey, KernelSel, PlanCache, PLAN_CACHE_SCHEMA};
+
+const GOLDEN: &str = include_str!("golden/plan_cache.schema1.example.json");
+
+#[test]
+fn golden_cache_loads_and_round_trips_byte_exactly() {
+    let cache = PlanCache::new();
+    let n = cache.load_json(GOLDEN).expect("golden plan cache loads");
+    assert_eq!(n, 3, "golden carries three entries");
+    assert_eq!(cache.len(), 3);
+    // Emission reproduces the file byte for byte (sorted keys, sorted
+    // entries, compact form, trailing newline added by save_to) — the
+    // fixed point a load→save cycle must sit at.
+    assert_eq!(cache.to_json() + "\n", GOLDEN, "emission is the identity on the golden");
+    // And a second load of the emitted form is a no-op.
+    let again = PlanCache::new();
+    again.load_json(&cache.to_json()).expect("emitted form loads");
+    assert_eq!(again.to_json(), cache.to_json(), "round trip is idempotent");
+}
+
+#[test]
+fn golden_entries_rebuild_into_tuned_plans() {
+    let cache = PlanCache::new();
+    cache.load_json(GOLDEN).expect("golden plan cache loads");
+    // Every persisted winner re-passes MatmulPlan::build on lookup and
+    // comes back stamped with autotuner provenance. The keys mirror the
+    // golden entries (kernel is part of the key, not the build).
+    for (m, k, n, w, threads, kernel, algo) in [
+        (64usize, 128usize, 64usize, 8u32, 1usize, KernelSel::Scalar, "mm"),
+        (192, 192, 192, 8, 1, KernelSel::Scalar, "strassen[1]"),
+        (192, 192, 192, 16, 2, KernelSel::Simd, "kmm[2]"),
+    ] {
+        let key = CacheKey { m, k, n, w, threads, kernel };
+        let plan = cache
+            .get(&key)
+            .unwrap_or_else(|| panic!("golden entry {m}x{k}x{n} w={w} t={threads} must rebuild"));
+        assert!(plan.tuned(), "cache hits carry provenance");
+        assert_eq!(plan.algo().to_string(), algo, "persisted algorithm survives");
+    }
+    assert_eq!(cache.hits(), 3);
+    assert_eq!(cache.misses(), 0);
+}
+
+#[test]
+fn malformed_documents_error_instead_of_panicking() {
+    // Parse-level and structural failures, each named by the error.
+    // (mutated document, expected fragment of the `{:#}` chain)
+    let bad_docs: &[(&str, &str)] = &[
+        // 1. Empty input.
+        ("", "plan cache"),
+        // 2. Unterminated JSON.
+        ("{", "plan cache"),
+        // 3. Wrong top-level type.
+        ("[]", "schema"),
+        // 4. Missing everything.
+        ("{}", "schema"),
+        // 5. Unsupported schema revision.
+        (
+            &GOLDEN.replacen("\"schema\":1", "\"schema\":2", 1),
+            "unsupported",
+        ),
+        // 6. Wrong cache name.
+        (
+            &GOLDEN.replacen("kmm-plan-cache", "other-cache", 1),
+            "cache name",
+        ),
+        // 7. Entries replaced by a scalar.
+        (
+            r#"{"cache":"kmm-plan-cache","entries":7,"schema":1}"#,
+            "entries",
+        ),
+        // 8. An entry with a non-positive dimension.
+        (&GOLDEN.replacen("\"m\":64", "\"m\":0", 1), "positive"),
+        // 9. An entry with an unknown lane.
+        (
+            &GOLDEN.replacen("\"lane\":\"u32\"", "\"lane\":\"u128\"", 1),
+            "lane",
+        ),
+        // 10. An entry with an unknown kernel fingerprint.
+        (
+            &GOLDEN.replacen("\"kernel\":\"simd\"", "\"kernel\":\"avx9\"", 1),
+            "kernel",
+        ),
+        // 11. An entry whose digit count is not a power of two.
+        (
+            &GOLDEN.replacen("\"digits\":2", "\"digits\":3", 1),
+            "power of two",
+        ),
+        // 12. An entry missing a required field.
+        (
+            &GOLDEN.replacen("\"threads\":2,", "", 1),
+            "threads",
+        ),
+    ];
+    for (doc, fragment) in bad_docs {
+        let cache = PlanCache::new();
+        let e = cache.load_json(doc).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains(fragment), "expected `{fragment}` in: {msg}");
+        // All-or-nothing: a rejected document adopts no entries, even
+        // when the corruption is in the last entry of a valid envelope.
+        assert_eq!(cache.len(), 0, "rejected document must not partially load");
+    }
+    // Truncating the golden anywhere must error, not panic.
+    for cut in [1, GOLDEN.len() / 3, GOLDEN.len() / 2, GOLDEN.len() - 3] {
+        let cache = PlanCache::new();
+        assert!(cache.load_json(&GOLDEN[..cut]).is_err(), "cut at {cut}");
+        assert_eq!(cache.len(), 0, "truncated document must not partially load");
+    }
+}
+
+#[test]
+fn mutations_verify_each_replacement_took_effect() {
+    // The replacen-based mutations above silently become no-ops if the
+    // golden text drifts; pin the substrings they rely on.
+    assert_eq!(PLAN_CACHE_SCHEMA, 1, "golden file tracks the current schema");
+    for needle in [
+        "\"schema\":1",
+        "kmm-plan-cache",
+        "\"m\":64",
+        "\"lane\":\"u32\"",
+        "\"kernel\":\"simd\"",
+        "\"digits\":2",
+        "\"threads\":2,",
+    ] {
+        assert!(GOLDEN.contains(needle), "golden drifted: `{needle}` missing");
+    }
+}
