@@ -1,0 +1,620 @@
+//! End-to-end LLM serving: prefill then a per-stream decode loop,
+//! driven through the [`Server`]'s coalescing batch queue.
+//!
+//! [`run_workload`](crate::infer::run_workload) calls a backend
+//! directly, layer by layer; [`run_llm`] instead models how an LLM
+//! service actually runs the transformer traces from
+//! [`model::transformer`](crate::model::transformer):
+//!
+//! - **Register once.** Every projection weight is packed into the
+//!   server's shared [`WeightRegistry`] at its *own* layer width — a
+//!   mixed-width model (w4 attention + w8 MLP) holds entries on
+//!   different lanes/digit configs in one registry.
+//! - **Prefill.** Each of `streams` concurrent prompts pushes one
+//!   large-`M` activation per layer (`M = prefill` tokens).
+//! - **Decode.** `decode_steps` steps; in each step every stream
+//!   submits its m=1 activation for layer 0, the responses are
+//!   drained, then layer 1, and so on. All streams' same-layer
+//!   submissions are in flight together, so the linger window
+//!   row-stacks them into one batched dispatch — the coalesced
+//!   counters in the returned report prove it.
+//!
+//! Activations are materialized with the order-independent
+//! [`Gemm::seeded_activation`] path (per stream × step derived
+//! seeds), so runs are reproducible no matter how shard scheduling
+//! interleaves — the property the decode benches gate on.
+//!
+//! [`Server`]: crate::coordinator::server::Server
+//! [`WeightRegistry`]: crate::coordinator::registry::WeightRegistry
+//! [`Gemm::seeded_activation`]: crate::model::workload::Gemm::seeded_activation
+
+use crate::algo::matrix::{matmul_oracle, Mat};
+use crate::arch::scalable::Mode;
+use crate::coordinator::dispatch::{FastAlgo, FastBackend, GemmBackend};
+use crate::coordinator::server::{Server, ServerConfig, Submission};
+use crate::coordinator::LatencyHistogram;
+use crate::fast::LaneId;
+use crate::infer::VERIFY_MACS_MAX;
+use crate::model::workload::Workload;
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::{finite, Json};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+/// LLM serving-run settings (see the [module docs](self)).
+#[derive(Debug, Clone)]
+pub struct LlmConfig {
+    /// Fast-engine decomposition the shard backends run.
+    pub algo: FastAlgo,
+    /// Server worker shards.
+    pub shards: usize,
+    /// Engine threads per shard backend.
+    pub threads: usize,
+    /// Prompt tokens per stream (the prefill `M`); 0 skips prefill.
+    pub prefill: usize,
+    /// Decode steps per stream (one token each); 0 skips decode.
+    pub decode_steps: usize,
+    /// Concurrent streams (independent "users" of the service).
+    pub streams: usize,
+    /// Coalescing linger window handed to the batch queue;
+    /// `Duration::ZERO` disables lingering (unbatched baseline).
+    pub batch_window: Duration,
+    /// Requests per coalesced batch; 0 means `streams`.
+    pub max_batch: usize,
+    /// Route every shard plan through the process-wide
+    /// [`PlanCache`](crate::fast::PlanCache) (cost-model autotuning).
+    pub autotune: bool,
+    /// Operand seed; identical seeds reproduce identical runs.
+    pub seed: u64,
+    /// Oracle-check the first stream of each small layer per phase.
+    pub verify: bool,
+}
+
+impl Default for LlmConfig {
+    fn default() -> Self {
+        LlmConfig {
+            algo: FastAlgo::Kmm,
+            shards: 1,
+            threads: 1,
+            prefill: 16,
+            decode_steps: 8,
+            streams: 4,
+            batch_window: Duration::from_millis(1),
+            max_batch: 0,
+            autotune: false,
+            seed: 1,
+            verify: false,
+        }
+    }
+}
+
+/// One serving phase's totals (prefill or decode).
+#[derive(Debug, Clone, Default)]
+pub struct LlmPhase {
+    /// Tokens processed across all streams (prefill: `streams ·
+    /// prompt`; decode: `streams · steps`).
+    pub tokens: u64,
+    /// GEMM requests served.
+    pub requests: u64,
+    /// Multiply-accumulates served.
+    pub macs: u64,
+    /// Wall time of the phase's closed submit/drain loop.
+    pub seconds: f64,
+    /// Deterministic device cycles summed over responses.
+    pub cycles: u64,
+}
+
+impl LlmPhase {
+    /// Tokens per second (0 when the phase was skipped).
+    pub fn tokens_per_s(&self) -> f64 {
+        finite(self.tokens as f64 / self.seconds)
+    }
+
+    /// MACs per second.
+    pub fn ops_per_s(&self) -> f64 {
+        finite(self.macs as f64 / self.seconds)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("tokens".to_string(), Json::Int(self.tokens as i64));
+        o.insert("requests".to_string(), Json::Int(self.requests as i64));
+        o.insert("macs".to_string(), Json::Int(self.macs as i64));
+        o.insert("seconds".to_string(), Json::Float(finite(self.seconds)));
+        o.insert("tokens_per_s".to_string(), Json::Float(self.tokens_per_s()));
+        o.insert("ops_per_s".to_string(), Json::Float(self.ops_per_s()));
+        o.insert("cycles".to_string(), Json::Int(self.cycles as i64));
+        Json::Object(o)
+    }
+}
+
+/// One registered layer's serving provenance: the plan its requests
+/// actually resolved on the shard backends.
+#[derive(Debug, Clone)]
+pub struct LlmLayer {
+    pub label: String,
+    pub k: usize,
+    pub n: usize,
+    /// The layer's own bitwidth (mixed-width models differ per layer).
+    pub w: u32,
+    /// Element lane the layer served on.
+    pub lane: Option<LaneId>,
+    /// Precision mode (`mm1` / `kmm2` / …) the plan resolved.
+    pub mode: Option<Mode>,
+    /// Resolved microkernel label.
+    pub kernel: Option<&'static str>,
+    /// Whether any request of this layer ran an autotuned plan.
+    pub tuned: bool,
+    /// Requests served against this layer across both phases.
+    pub requests: u64,
+}
+
+impl LlmLayer {
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("label".to_string(), Json::Str(self.label.clone()));
+        o.insert("k".to_string(), Json::Int(self.k as i64));
+        o.insert("n".to_string(), Json::Int(self.n as i64));
+        o.insert("w".to_string(), Json::Int(i64::from(self.w)));
+        o.insert("lane".to_string(), LaneId::to_json(self.lane));
+        o.insert(
+            "mode".to_string(),
+            self.mode.map_or(Json::Null, |m| Json::Str(m.name().to_string())),
+        );
+        o.insert(
+            "kernel".to_string(),
+            self.kernel.map_or(Json::Null, |k| Json::Str(k.to_string())),
+        );
+        o.insert("tuned".to_string(), Json::Bool(self.tuned));
+        o.insert("requests".to_string(), Json::Int(self.requests as i64));
+        Json::Object(o)
+    }
+}
+
+/// One LLM serving run: per-phase throughput, per-layer provenance,
+/// and the server's coalescing/latency accounting.
+#[derive(Debug, Clone)]
+pub struct LlmRun {
+    pub model: String,
+    pub backend: String,
+    pub shards: usize,
+    pub threads: usize,
+    pub streams: usize,
+    /// Prompt tokens per stream (0 = prefill skipped).
+    pub prefill_tokens: usize,
+    pub decode_steps: usize,
+    /// Wall time registering (packing) every layer weight up front.
+    pub register_seconds: f64,
+    pub prefill: LlmPhase,
+    pub decode: LlmPhase,
+    pub layers: Vec<LlmLayer>,
+    /// Batches that row-stacked more than one request.
+    pub coalesced_batches: u64,
+    /// Requests served inside those coalesced batches.
+    pub coalesced_requests: u64,
+    /// Total dispatched batches.
+    pub batches: u64,
+    /// `Busy` backpressure rejections observed (0 under the sized
+    /// queue this driver configures).
+    pub busy: u64,
+    /// Requests served by autotuned plans.
+    pub tuned_requests: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    /// Requests per lane label (shard-merged), sorted by label.
+    pub by_lane: Vec<(String, u64)>,
+    /// Enqueue→response latency over every request of the run.
+    pub latency: LatencyHistogram,
+}
+
+impl LlmRun {
+    /// Total requests across both phases.
+    pub fn total_requests(&self) -> u64 {
+        self.prefill.requests + self.decode.requests
+    }
+
+    /// Machine-readable form (the per-run payload the CLI's `--json`
+    /// writes; the `llm_serve` bench derives its sections from the
+    /// same fields).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("model".to_string(), Json::Str(self.model.clone()));
+        o.insert("backend".to_string(), Json::Str(self.backend.clone()));
+        o.insert("shards".to_string(), Json::Int(self.shards as i64));
+        o.insert("threads".to_string(), Json::Int(self.threads as i64));
+        o.insert("streams".to_string(), Json::Int(self.streams as i64));
+        o.insert("prefill_tokens".to_string(), Json::Int(self.prefill_tokens as i64));
+        o.insert("decode_steps".to_string(), Json::Int(self.decode_steps as i64));
+        o.insert(
+            "register_s".to_string(),
+            Json::Float(finite(self.register_seconds)),
+        );
+        o.insert("prefill".to_string(), self.prefill.to_json());
+        o.insert("decode".to_string(), self.decode.to_json());
+        o.insert(
+            "layers".to_string(),
+            Json::Array(self.layers.iter().map(LlmLayer::to_json).collect()),
+        );
+        o.insert(
+            "coalesced_batches".to_string(),
+            Json::Int(self.coalesced_batches as i64),
+        );
+        o.insert(
+            "coalesced_requests".to_string(),
+            Json::Int(self.coalesced_requests as i64),
+        );
+        o.insert("batches".to_string(), Json::Int(self.batches as i64));
+        o.insert("busy".to_string(), Json::Int(self.busy as i64));
+        o.insert("tuned_requests".to_string(), Json::Int(self.tuned_requests as i64));
+        o.insert(
+            "plan_cache_hits".to_string(),
+            Json::Int(self.plan_cache_hits as i64),
+        );
+        o.insert(
+            "plan_cache_misses".to_string(),
+            Json::Int(self.plan_cache_misses as i64),
+        );
+        let mut lanes = BTreeMap::new();
+        for (lane, count) in &self.by_lane {
+            lanes.insert(lane.clone(), Json::Int(*count as i64));
+        }
+        o.insert("by_lane".to_string(), Json::Object(lanes));
+        o.insert("p50_us".to_string(), Json::Int(self.latency.p50_us() as i64));
+        o.insert("p95_us".to_string(), Json::Int(self.latency.p95_us() as i64));
+        o.insert("p99_us".to_string(), Json::Int(self.latency.p99_us() as i64));
+        Json::Object(o)
+    }
+
+    /// Human-readable report (the `kmm infer` output for LLM models).
+    pub fn table(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{} via {} ({} shard{}, {} engine thread{}/shard, {} stream{}):",
+            self.model,
+            self.backend,
+            self.shards,
+            if self.shards == 1 { "" } else { "s" },
+            self.threads,
+            if self.threads == 1 { "" } else { "s" },
+            self.streams,
+            if self.streams == 1 { "" } else { "s" },
+        );
+        let _ = writeln!(
+            s,
+            "{:<16} {:>7} {:>7} {:>3} {:>5} {:>4} {:>8} {:>5} {:>8}",
+            "layer", "K", "N", "w", "plan", "lane", "kernel", "tuned", "reqs"
+        );
+        for l in &self.layers {
+            let _ = writeln!(
+                s,
+                "{:<16} {:>7} {:>7} {:>3} {:>5} {:>4} {:>8} {:>5} {:>8}",
+                l.label,
+                l.k,
+                l.n,
+                l.w,
+                l.mode.map_or("-", |m| m.name()),
+                l.lane.map_or("-", LaneId::name),
+                l.kernel.unwrap_or("-"),
+                if l.tuned { "yes" } else { "-" },
+                l.requests,
+            );
+        }
+        if self.prefill.tokens > 0 {
+            let _ = writeln!(
+                s,
+                "prefill: {} tokens ({}/stream) in {:.1} ms — {:.1} tok/s, {:.1} Mops/s",
+                self.prefill.tokens,
+                self.prefill_tokens,
+                self.prefill.seconds * 1e3,
+                self.prefill.tokens_per_s(),
+                self.prefill.ops_per_s() / 1e6,
+            );
+        }
+        if self.decode.tokens > 0 {
+            let _ = writeln!(
+                s,
+                "decode:  {} tokens ({} steps x {} streams) in {:.1} ms — {:.1} tok/s, {:.1} Mops/s",
+                self.decode.tokens,
+                self.decode_steps,
+                self.streams,
+                self.decode.seconds * 1e3,
+                self.decode.tokens_per_s(),
+                self.decode.ops_per_s() / 1e6,
+            );
+        }
+        let _ = write!(
+            s,
+            "coalesced {} requests into {} of {} batches; latency p50 {} p95 {} p99 {} us; \
+             register {:.1} ms; tuned {}; plan cache {}/{} hits",
+            self.coalesced_requests,
+            self.coalesced_batches,
+            self.batches,
+            self.latency.p50_us(),
+            self.latency.p95_us(),
+            self.latency.p99_us(),
+            self.register_seconds * 1e3,
+            self.tuned_requests,
+            self.plan_cache_hits,
+            self.plan_cache_hits + self.plan_cache_misses,
+        );
+        s
+    }
+}
+
+/// Per-(stream, step) activation sub-seed: a SplitMix64-style finalize
+/// over the run seed, so streams and steps draw disjoint, stable
+/// operand sequences regardless of submission interleaving. `step` 0
+/// is the prefill prompt; decode steps are 1-based.
+fn stream_seed(seed: u64, stream: u64, step: u64) -> u64 {
+    let mut z = seed
+        ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(stream.wrapping_add(1))
+        ^ 0xbf58_476d_1ce4_e5b9u64.wrapping_mul(step.wrapping_add(1));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Drive `wl`'s layers (shapes + per-layer widths; each gemm's `m` is
+/// ignored — the phase sets it) through a coalescing [`Server`]:
+/// prefill once per stream, then `decode_steps` m=1 steps per stream,
+/// every layer of every step submitted for all streams concurrently so
+/// same-layer traffic coalesces. See the [module docs](self).
+pub fn run_llm(wl: &Workload, cfg: &LlmConfig) -> Result<LlmRun> {
+    if wl.is_empty() {
+        bail!("workload {} has no layers", wl.name);
+    }
+    if cfg.prefill == 0 && cfg.decode_steps == 0 {
+        bail!("nothing to serve: prefill and decode_steps are both 0");
+    }
+    let streams = cfg.streams.max(1);
+    let shards = cfg.shards.max(1);
+    let threads = cfg.threads.max(1);
+    let max_batch = if cfg.max_batch == 0 { streams } else { cfg.max_batch };
+    let algo = cfg.algo;
+    let autotune = cfg.autotune;
+    let backend_name = FastBackend::new(algo).name().to_string();
+
+    // Queue depth sized so the per-layer barrier (at most `streams`
+    // requests in flight) can never trip Busy backpressure.
+    let scfg = ServerConfig::default()
+        .workers(shards)
+        .max_batch(max_batch)
+        .batch_window(cfg.batch_window)
+        .max_batch_rows(256.max(streams * cfg.prefill.max(1)))
+        .queue_depth((4 * streams).max(1024));
+    let mut srv = Server::start(
+        move || {
+            Box::new(if autotune {
+                FastBackend::autotuned(algo, threads)
+            } else {
+                FastBackend::with_threads(algo, threads)
+            }) as Box<dyn GemmBackend>
+        },
+        scfg,
+    );
+
+    // Register every layer weight at its own width — the mixed-width
+    // registry the transformer traces exist to exercise. Weights are
+    // derived-seed stable, kept for oracle verification.
+    let plan = FastBackend::new(algo).preferred_plan();
+    let t0 = Instant::now();
+    let weights: Vec<Mat> = wl.gemms.iter().map(|g| g.seeded_weight(cfg.seed)).collect();
+    let mut handles = Vec::with_capacity(wl.len());
+    for (g, b) in wl.gemms.iter().zip(&weights) {
+        let h = srv
+            .register_weight_with_plan(b.clone(), g.w, plan)
+            .with_context(|| format!("registering weights for layer {}", g.label))?;
+        handles.push(h);
+    }
+    let register_seconds = t0.elapsed().as_secs_f64();
+
+    let mut layers: Vec<LlmLayer> = wl
+        .gemms
+        .iter()
+        .map(|g| LlmLayer {
+            label: g.label.clone(),
+            k: g.k,
+            n: g.n,
+            w: g.w,
+            lane: None,
+            mode: None,
+            kernel: None,
+            tuned: false,
+            requests: 0,
+        })
+        .collect();
+
+    // One phase: for each layer, submit all streams' activations, then
+    // drain them — so same-layer traffic is concurrently in flight
+    // (and coalescable), while layer order still models the forward
+    // pass. `step` 0 is prefill; decode steps are 1-based.
+    let serve_phase = |srv: &mut Server,
+                       layers: &mut [LlmLayer],
+                       rows: usize,
+                       step: u64,
+                       verify: bool|
+     -> Result<(u64, u64)> {
+        let mut cycles = 0u64;
+        let mut requests = 0u64;
+        for (l, g) in wl.gemms.iter().enumerate() {
+            let mut rxs: Vec<Receiver<_>> = Vec::with_capacity(streams);
+            let mut verify_a: Option<Mat> = None;
+            for s in 0..streams {
+                let a = g.seeded_activation(stream_seed(cfg.seed, s as u64, step), rows);
+                if verify && s == 0 {
+                    verify_a = Some(a.clone());
+                }
+                let (_, rx) = srv.enqueue(Submission::Packed { a, handle: handles[l] });
+                rxs.push(rx);
+            }
+            for (s, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().expect("server worker alive");
+                let c = match resp.result {
+                    Ok(c) => c,
+                    Err(e) => bail!("layer {} stream {s} rejected: {e}", g.label),
+                };
+                cycles += resp.cycles;
+                requests += 1;
+                let lr = &mut layers[l];
+                lr.lane = lr.lane.or(resp.lane);
+                lr.mode = lr.mode.or(resp.mode);
+                lr.kernel = lr.kernel.or(resp.kernel);
+                lr.tuned |= resp.tuned;
+                lr.requests += 1;
+                if s == 0 {
+                    if let Some(a) = verify_a.take() {
+                        let macs = rows as u64 * g.k as u64 * g.n as u64;
+                        if macs <= VERIFY_MACS_MAX && c != matmul_oracle(&a, &weights[l]) {
+                            bail!("layer {} mismatches the exact oracle", g.label);
+                        }
+                    }
+                }
+            }
+        }
+        Ok((cycles, requests))
+    };
+
+    let layer_macs_m1: u64 = wl.gemms.iter().map(|g| g.k as u64 * g.n as u64).sum();
+
+    // Prefill: every stream's whole prompt, layer by layer.
+    let mut prefill = LlmPhase::default();
+    if cfg.prefill > 0 {
+        let t0 = Instant::now();
+        let (cycles, requests) = serve_phase(&mut srv, &mut layers, cfg.prefill, 0, cfg.verify)?;
+        prefill = LlmPhase {
+            tokens: (streams * cfg.prefill) as u64,
+            requests,
+            macs: streams as u64 * cfg.prefill as u64 * layer_macs_m1,
+            seconds: t0.elapsed().as_secs_f64(),
+            cycles,
+        };
+    }
+
+    // Decode: one token per stream per step, m=1 everywhere.
+    let mut decode = LlmPhase::default();
+    if cfg.decode_steps > 0 {
+        let t0 = Instant::now();
+        let mut cycles = 0u64;
+        let mut requests = 0u64;
+        for step in 0..cfg.decode_steps {
+            let verify = cfg.verify && step == 0;
+            let (c, r) = serve_phase(&mut srv, &mut layers, 1, step as u64 + 1, verify)?;
+            cycles += c;
+            requests += r;
+        }
+        decode = LlmPhase {
+            tokens: (streams * cfg.decode_steps) as u64,
+            requests,
+            macs: streams as u64 * cfg.decode_steps as u64 * layer_macs_m1,
+            seconds: t0.elapsed().as_secs_f64(),
+            cycles,
+        };
+    }
+
+    let stats = srv.shutdown();
+    let mut by_lane: Vec<(String, u64)> = stats
+        .by_lane
+        .iter()
+        .map(|(lane, count)| ((*lane).to_string(), *count))
+        .collect();
+    by_lane.sort();
+    Ok(LlmRun {
+        model: wl.name.clone(),
+        backend: backend_name,
+        shards,
+        threads,
+        streams,
+        prefill_tokens: cfg.prefill,
+        decode_steps: cfg.decode_steps,
+        register_seconds,
+        prefill,
+        decode,
+        layers,
+        coalesced_batches: stats.coalesced_batches,
+        coalesced_requests: stats.coalesced_requests,
+        batches: stats.batches,
+        busy: stats.busy,
+        tuned_requests: stats.tuned,
+        plan_cache_hits: stats.plan_cache_hits,
+        plan_cache_misses: stats.plan_cache_misses,
+        by_lane,
+        latency: stats.latency.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::{decode, llama_tiny};
+    use crate::model::workload::synthetic_square;
+
+    fn tiny_cfg() -> LlmConfig {
+        LlmConfig {
+            prefill: 3,
+            decode_steps: 2,
+            streams: 3,
+            batch_window: Duration::from_millis(10),
+            verify: true,
+            ..LlmConfig::default()
+        }
+    }
+
+    #[test]
+    fn llm_run_accounts_tokens_and_requests() {
+        let wl = decode(&llama_tiny());
+        let run = run_llm(&wl, &tiny_cfg()).unwrap();
+        assert_eq!(run.model, "llama-tiny@decode");
+        assert_eq!(run.prefill.tokens, 3 * 3);
+        assert_eq!(run.decode.tokens, 3 * 2);
+        // streams × layers requests per prefill pass / decode step.
+        assert_eq!(run.prefill.requests, 3 * 20);
+        assert_eq!(run.decode.requests, 2 * 3 * 20);
+        assert_eq!(run.total_requests(), 3 * 20 + 2 * 3 * 20);
+        assert_eq!(run.layers.len(), 20);
+        assert!(run.layers.iter().all(|l| l.requests == 3 + 2 * 3));
+        assert!(run.busy == 0, "sized queue never trips backpressure");
+        assert!(run.decode.cycles > 0 && run.prefill.cycles > 0);
+        // Mixed-width provenance: every layer reports a lane and mode.
+        assert!(run.layers.iter().all(|l| l.lane.is_some() && l.mode.is_some()));
+        // The report renders both ways.
+        assert!(run.table().contains("decode:"));
+        let doc = Json::parse(&run.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("model").and_then(Json::as_str), Some("llama-tiny@decode"));
+        assert!(doc.get("decode").and_then(|d| d.get("tokens_per_s")).is_some());
+    }
+
+    #[test]
+    fn phases_can_be_skipped_but_not_both() {
+        let wl = synthetic_square("sq", 8, 2, 8);
+        let decode_only =
+            run_llm(&wl, &LlmConfig { prefill: 0, ..tiny_cfg() }).unwrap();
+        assert_eq!(decode_only.prefill.tokens, 0);
+        assert!(decode_only.decode.tokens > 0);
+        let prefill_only =
+            run_llm(&wl, &LlmConfig { decode_steps: 0, ..tiny_cfg() }).unwrap();
+        assert!(prefill_only.prefill.tokens > 0);
+        assert_eq!(prefill_only.decode.tokens, 0);
+        let err = run_llm(&wl, &LlmConfig { prefill: 0, decode_steps: 0, ..tiny_cfg() })
+            .unwrap_err();
+        assert!(err.to_string().contains("nothing to serve"), "{err:#}");
+        let err = run_llm(&Workload::new("empty", Vec::new()), &tiny_cfg()).unwrap_err();
+        assert!(err.to_string().contains("no layers"), "{err:#}");
+    }
+
+    #[test]
+    fn identical_seeds_reproduce_identical_cycles() {
+        // The whole run is derived-seed deterministic: same seed, same
+        // operands, same deterministic cycle totals — even though shard
+        // scheduling interleaves differently run to run.
+        let wl = decode(&llama_tiny());
+        let a = run_llm(&wl, &tiny_cfg()).unwrap();
+        let b = run_llm(&wl, &tiny_cfg()).unwrap();
+        assert_eq!(a.prefill.cycles, b.prefill.cycles);
+        assert_eq!(a.decode.cycles, b.decode.cycles);
+        let c = run_llm(&wl, &LlmConfig { seed: 99, ..tiny_cfg() }).unwrap();
+        assert_eq!(a.decode.requests, c.decode.requests);
+    }
+}

@@ -36,6 +36,10 @@
 //! assert_eq!(run.total_macs(), wl.macs());
 //! ```
 
+pub mod llm;
+
+pub use llm::{run_llm, LlmConfig, LlmRun};
+
 use crate::algo::matrix::{matmul_oracle, Mat};
 use crate::arch::scalable::Mode;
 use crate::coordinator::dispatch::GemmBackend;
@@ -85,8 +89,9 @@ impl Default for InferConfig {
     }
 }
 
-/// Oracle-verification ceiling (MACs) for [`InferConfig::verify`].
-const VERIFY_MACS_MAX: u64 = 1 << 22;
+/// Oracle-verification ceiling (MACs) for [`InferConfig::verify`] and
+/// [`LlmConfig::verify`](llm::LlmConfig::verify).
+pub(crate) const VERIFY_MACS_MAX: u64 = 1 << 22;
 
 /// One served layer's outcome.
 #[derive(Debug, Clone)]

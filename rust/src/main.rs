@@ -35,7 +35,15 @@
 //!         [--verify] [--json FILE]  whole-model inference, weights
 //!                                 prepacked once and reused across S
 //!                                 requests per layer (--fresh re-packs
-//!                                 per call), per-layer timing table
+//!                                 per call), per-layer timing table.
+//!                                 Transformer models (llama-tiny,
+//!                                 gpt2-124m) serve end-to-end instead:
+//!                                 [--prefill P] [--decode-steps T]
+//!                                 [--streams S] [--batch-window 1ms]
+//!                                 [--max-batch B] [--autotune] drive
+//!                                 prefill + a multi-stream decode loop
+//!                                 through the coalescing batch server
+//!                                 (--threads = server shards here)
 //!   schedule --workload FILE|resnet50|resnet101|resnet152|vgg16 [--w W]
 //!                                 per-layer plan + aggregate metrics
 //!   export --model resnet50 --w 8 [--out FILE]  dump a workload JSON
@@ -78,7 +86,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: kmm <table1|table2|table3|fig5|fig11|fig12|gemm|tune|serve|infer|schedule|export|info> [options]\n{}",
-                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm]\n           [--algo mm|kmm|strassen|strassen-kmm] [--threads N] [--autotune]\n  tune     --m 192 --k 192 --n 192 --w 8 [--threads N] [--measure]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm] [--threads N]\n           [--streams S] [--batch-window 2ms] [--max-batch 32] [--queue-depth 1024] [--autotune] [--plan-cache FILE]\n  infer    --model resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--backend fast-kmm|fast-mm|functional]\n           [--threads N] [--w 8] [--batch M] [--streams S] [--fresh] [--verify] [--json FILE] [--autotune]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--w 8]\n  export   --model resnet50 --w 8 [--out workload.json]\n  (--threads: gemm/infer = engine worker threads; serve = server worker shards)\n  (--autotune / KMM_AUTOTUNE=1: cost-model plan selection through the shared plan cache;\n   --plan-cache / KMM_PLAN_CACHE: persist tuned plans across serve runs)"
+                "  gemm     --m 128 --k 256 --n 128 --w 12 [--backend functional|pjrt|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm]\n           [--algo mm|kmm|strassen|strassen-kmm] [--threads N] [--autotune]\n  tune     --m 192 --k 192 --n 192 --w 8 [--threads N] [--measure]\n  serve    [--requests 32] [--backend functional|fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm] [--threads N]\n           [--streams S] [--batch-window 2ms] [--max-batch 32] [--queue-depth 1024] [--autotune] [--plan-cache FILE]\n  infer    --model resnet50|resnet101|resnet152|vgg16|vgg11|<file.json> [--backend fast-kmm|fast-mm|functional]\n           [--threads N] [--w 8] [--batch M] [--streams S] [--fresh] [--verify] [--json FILE] [--autotune]\n  infer    --model llama-tiny|gpt2-124m [--backend fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm]\n           [--prefill 16] [--decode-steps 8] [--streams 4] [--batch-window 1ms] [--max-batch B]\n           [--threads N(=server shards)] [--seed S] [--verify] [--json FILE] [--autotune]\n  schedule --workload resnet50|resnet101|resnet152|vgg16|vgg11|llama-tiny|gpt2-124m|<file.json> [--w 8]\n  export   --model resnet50|...|llama-tiny --w 8 [--out workload.json]\n  (--threads: gemm/infer = engine worker threads; serve = server worker shards)\n  (--autotune / KMM_AUTOTUNE=1: cost-model plan selection through the shared plan cache;\n   --plan-cache / KMM_PLAN_CACHE: persist tuned plans across serve runs)"
             );
             2
         }
@@ -508,6 +516,11 @@ fn resolve_workload(which: &str, w: u32, w_explicit: bool) -> Result<Workload, i
 
 fn cmd_infer(args: &Args) -> i32 {
     let model = args.get_str("model", "resnet50");
+    // Builtin transformer models serve end-to-end (prefill + decode
+    // through the coalescing batch server) rather than layer-by-layer.
+    if let Some(tcfg) = kmm::model::transformer::builtin(&model) {
+        return cmd_infer_llm(args, &tcfg);
+    }
     let backend = args.get_str("backend", "fast-kmm");
     let threads = cli_threads(args, 1);
     let w: u32 = args.get("w", 8).unwrap();
@@ -553,6 +566,76 @@ fn cmd_infer(args: &Args) -> i32 {
     }
 }
 
+/// LLM route of `kmm infer`: builtin transformer models run
+/// [`run_llm`] — weights registered once per layer at the model's own
+/// mixed widths, then prefill and a multi-stream decode loop through
+/// the coalescing batch server. `--w` stays the uniform-width
+/// override, exactly as on file traces.
+fn cmd_infer_llm(args: &Args, tcfg: &kmm::model::TransformerCfg) -> i32 {
+    let backend = args.get_str("backend", "fast-kmm");
+    let algo = match backend.as_str() {
+        "fast-kmm" => FastAlgo::Kmm,
+        "fast-mm" => FastAlgo::Mm,
+        "fast-strassen" => FastAlgo::Strassen,
+        "fast-strassen-kmm" => FastAlgo::StrassenKmm,
+        _ => {
+            eprintln!(
+                "unknown llm backend `{backend}` (fast-kmm|fast-mm|fast-strassen|fast-strassen-kmm; \
+                 transformer serving needs the fast engine's registry path)"
+            );
+            return 2;
+        }
+    };
+    let mut wl = kmm::model::transformer::decode(tcfg);
+    if args.options.contains_key("w") {
+        wl = wl.at_bitwidth(args.get("w", 8).unwrap());
+    }
+    let window = match kmm::coordinator::server::parse_duration(
+        &args.get_str("batch-window", "1ms"),
+    ) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("--batch-window: {e}");
+            return 2;
+        }
+    };
+    let cfg = kmm::infer::LlmConfig {
+        algo,
+        shards: cli_threads(args, 1),
+        threads: 1,
+        prefill: args.get("prefill", 16usize).unwrap(),
+        decode_steps: args.get("decode-steps", 8usize).unwrap(),
+        streams: args.get("streams", 4usize).unwrap().max(1),
+        batch_window: window,
+        max_batch: args.get("max-batch", 0usize).unwrap(),
+        autotune: cli_autotune(args),
+        seed: args.get("seed", 1u64).unwrap(),
+        verify: args.flag("verify"),
+    };
+    match kmm::infer::run_llm(&wl, &cfg) {
+        Ok(run) => {
+            println!("{}", run.table());
+            match args.get_str("json", "").as_str() {
+                "" => 0,
+                path => match std::fs::write(path, run.to_json().to_string()) {
+                    Ok(()) => {
+                        println!("wrote {path}");
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("cannot write {path}: {e}");
+                        1
+                    }
+                },
+            }
+        }
+        Err(e) => {
+            eprintln!("llm inference failed: {e:#}");
+            1
+        }
+    }
+}
+
 fn named_workload(name: &str, w: u32) -> Option<Workload> {
     Some(match name {
         "resnet50" => resnet(ResNet::R50, w),
@@ -560,6 +643,12 @@ fn named_workload(name: &str, w: u32) -> Option<Workload> {
         "resnet152" => resnet(ResNet::R152, w),
         "vgg16" => vgg(Vgg::V16, w),
         "vgg11" => vgg(Vgg::V11, w),
+        // Transformer decode traces ignore `w`: they carry their own
+        // per-layer widths (w4 attention + w8 MLP on llama-tiny).
+        "llama-tiny" | "gpt2-124m" => {
+            let cfg = kmm::model::transformer::builtin(name)?;
+            kmm::model::transformer::decode(&cfg)
+        }
         _ => return None,
     })
 }
@@ -598,7 +687,9 @@ fn cmd_export(args: &Args) -> i32 {
     let model = args.get_str("model", "resnet50");
     let w: u32 = args.get("w", 8).unwrap();
     let Some(wl) = named_workload(&model, w) else {
-        eprintln!("unknown model `{model}` (resnet50|resnet101|resnet152|vgg16|vgg11)");
+        eprintln!(
+            "unknown model `{model}` (resnet50|resnet101|resnet152|vgg16|vgg11|llama-tiny|gpt2-124m)"
+        );
         return 2;
     };
     let text = workload_to_json(&wl);

@@ -1,15 +1,35 @@
 //! Workload import/export: JSON GEMM traces so external tools (or the
 //! CLI) can feed custom workloads to the scheduler and server.
 //!
-//! Format:
+//! Format (schema 2):
 //! ```json
-//! { "name": "my-net",
+//! { "schema": 2, "name": "my-net",
 //!   "gemms": [ {"label": "l1", "m": 128, "k": 256, "n": 64, "w": 8}, … ] }
 //! ```
+//!
+//! Schema history:
+//! - 1 (no `schema` field): uniform-width traces — every consumer
+//!   assumed one `w` for the whole model, and `w` was unbounded above.
+//! - 2: **mixed-width traces are first-class.** Per-gemm `w` values
+//!   may differ (transformer traces carry w4 attention + w8 MLP
+//!   layers in one document) and are bounded to the engine-storable
+//!   `1..=64` window; the top-level `schema` field is emitted and
+//!   enforced when present. Documents without the field still parse
+//!   as schema 1 (all checked-in CNN goldens predate the bump), and
+//!   [`Workload::at_bitwidth`] remains the uniform-width override.
 
 use crate::model::workload::{Gemm, Workload};
 use crate::util::json::Json;
 use std::fmt::Write as _;
+
+/// The workload-trace schema revision this crate emits (see the
+/// [module docs](self) for the history).
+pub const WORKLOAD_SCHEMA: i64 = 2;
+
+/// The largest per-layer bitwidth a schema-2 trace may carry (the
+/// `Mat` element ceiling; the exact `algo::` layer serves all of it,
+/// the fast engine the `1..=32` window within it).
+pub const MAX_TRACE_W: i64 = 64;
 
 /// Workload parse failure.
 #[derive(Debug)]
@@ -49,9 +69,23 @@ fn field(g: &Json, idx: usize, key: &str) -> Result<i64, WorkloadIoError> {
         .ok_or_else(|| WorkloadIoError::Field(format!("gemms[{idx}].{key}")))
 }
 
-/// Parse a workload from JSON text.
+/// Parse a workload from JSON text. Accepts schema-2 documents and
+/// legacy schema-1 documents (no `schema` field); any other revision
+/// is rejected so stale tooling fails loudly instead of misreading a
+/// future format.
 pub fn workload_from_json(text: &str) -> Result<Workload, WorkloadIoError> {
     let j = Json::parse(text)?;
+    match j.get("schema") {
+        None => {}
+        Some(s) => match s.as_i64() {
+            Some(1 | WORKLOAD_SCHEMA) => {}
+            other => {
+                return Err(WorkloadIoError::Field(format!(
+                    "schema must be 1 or {WORKLOAD_SCHEMA}, got {other:?}"
+                )));
+            }
+        },
+    }
     let name = j
         .get("name")
         .and_then(Json::as_str)
@@ -67,12 +101,18 @@ pub fn workload_from_json(text: &str) -> Result<Workload, WorkloadIoError> {
             .and_then(Json::as_str)
             .map(str::to_string)
             .unwrap_or_else(|| format!("gemm{i}"));
+        let w = field(g, i, "w")?;
+        if w > MAX_TRACE_W {
+            return Err(WorkloadIoError::Field(format!(
+                "gemms[{i}].w must be in 1..={MAX_TRACE_W}, got {w}"
+            )));
+        }
         out.push(Gemm::new(
             label,
             field(g, i, "m")? as usize,
             field(g, i, "k")? as usize,
             field(g, i, "n")? as usize,
-            field(g, i, "w")? as u32,
+            w as u32,
         ));
     }
     if out.is_empty() {
@@ -81,10 +121,15 @@ pub fn workload_from_json(text: &str) -> Result<Workload, WorkloadIoError> {
     Ok(Workload::new(name, out))
 }
 
-/// Serialize a workload to JSON text (inverse of [`workload_from_json`]).
+/// Serialize a workload to JSON text (inverse of [`workload_from_json`]),
+/// at the current [`WORKLOAD_SCHEMA`].
 pub fn workload_to_json(wl: &Workload) -> String {
     let mut s = String::new();
-    let _ = write!(s, "{{\"name\": {:?}, \"gemms\": [", wl.name);
+    let _ = write!(
+        s,
+        "{{\"schema\": {WORKLOAD_SCHEMA}, \"name\": {:?}, \"gemms\": [",
+        wl.name
+    );
     for (i, g) in wl.gemms.iter().enumerate() {
         if i > 0 {
             s.push(',');
@@ -129,6 +174,59 @@ mod tests {
         .unwrap();
         assert_eq!(wl.gemms[0].label, "gemm0");
         assert_eq!(wl.gemms[0].macs(), 120);
+    }
+
+    #[test]
+    fn emits_and_enforces_the_schema_field() {
+        let wl = synthetic_square("sq", 8, 2, 8);
+        let text = workload_to_json(&wl);
+        assert!(text.contains("\"schema\": 2"), "{text}");
+        // Legacy documents (no schema field) and explicit schema 1/2
+        // all parse; anything else is a loud rejection.
+        assert!(workload_from_json(
+            r#"{"name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}]}"#
+        )
+        .is_ok());
+        for ok in [1, 2] {
+            assert!(workload_from_json(&format!(
+                r#"{{"schema": {ok}, "name": "t", "gemms": [{{"m": 1, "k": 1, "n": 1, "w": 8}}]}}"#
+            ))
+            .is_ok());
+        }
+        for bad in [r#""two""#, "3", "0", "-1", "null"] {
+            let doc = format!(
+                r#"{{"schema": {bad}, "name": "t", "gemms": [{{"m": 1, "k": 1, "n": 1, "w": 8}}]}}"#
+            );
+            let e = workload_from_json(&doc).unwrap_err();
+            assert!(e.to_string().contains("schema"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn mixed_width_traces_roundtrip() {
+        use crate::model::transformer::{decode, llama_tiny};
+        let wl = decode(&llama_tiny());
+        assert!(wl.is_mixed_width());
+        let back = workload_from_json(&workload_to_json(&wl)).unwrap();
+        assert_eq!(back, wl);
+        assert_eq!(back.widths(), vec![4, 8]);
+        // at_bitwidth stays the uniform override on parsed traces.
+        let w8 = back.at_bitwidth(8);
+        assert!(!w8.is_mixed_width());
+        assert_eq!(workload_from_json(&workload_to_json(&w8)).unwrap(), w8);
+    }
+
+    #[test]
+    fn rejects_out_of_window_widths() {
+        assert!(workload_from_json(
+            r#"{"name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 64}]}"#
+        )
+        .is_ok());
+        let e = workload_from_json(
+            r#"{"name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 65}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("1..=64"), "{e}");
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! Neural-network workload tables: the GEMM traces the paper's evaluation
-//! runs (ResNet-50/101/152, VGG-11/16) plus synthetic generators.
+//! runs (ResNet-50/101/152, VGG-11/16), transformer/LLM prefill+decode
+//! traces (llama-tiny, gpt2-124m), plus synthetic generators.
 
 pub mod io;
 pub mod resnet;
+pub mod transformer;
 pub mod vgg;
 pub mod workload;
 
-pub use io::{workload_from_json, workload_to_json};
+pub use io::{workload_from_json, workload_to_json, WORKLOAD_SCHEMA};
 pub use resnet::{resnet, ResNet};
+pub use transformer::{gpt2_124m, llama_tiny, TransformerCfg};
 pub use vgg::{vgg, Vgg};
 pub use workload::{conv_gemm, synthetic_ragged, synthetic_square, Gemm, Workload};

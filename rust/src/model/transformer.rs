@@ -1,0 +1,260 @@
+//! Transformer/LLM layer-shape tables: the GEMM traces a decoder-only
+//! transformer inference decomposes into, in both serving phases.
+//!
+//! A decoder block contributes four (GPT-2 style) or five (LLaMA style,
+//! gated MLP) projection GEMMs per token batch:
+//!
+//! | label      | shape (`M×K·K×N`)        | role                          |
+//! |------------|--------------------------|-------------------------------|
+//! | `qkv`      | `t×d  ·  d×3d`           | fused Q/K/V projection        |
+//! | `attn_out` | `t×d  ·  d×d`            | attention output projection   |
+//! | `ffn_gate` | `t×d  ·  d×f` (gated)    | SwiGLU gate projection        |
+//! | `ffn_up`   | `t×d  ·  d×f`            | MLP up projection             |
+//! | `ffn_down` | `t×f  ·  f×d`            | MLP down projection           |
+//!
+//! with `t` the token count of the phase: **prefill** runs the whole
+//! prompt at once (`t = prompt tokens`, large-`M` GEMMs), **decode**
+//! generates one token per step (`t = 1`, skinny m=1 GEMMs — the
+//! traffic the server's coalescing batch queue exists for). The
+//! attention score/context products (`QKᵀ`, `softmax·V`) are
+//! activation×activation work with no stationary operand; like the
+//! CNN tables' pooling/normalization they are outside the
+//! weight-stationary GEMM trace this module models.
+//!
+//! Widths are **per layer group**: attention projections at
+//! [`TransformerCfg::w_attn`], MLP projections at
+//! [`TransformerCfg::w_mlp`] — one registered model spans several
+//! lanes/digit configs at once (w4 attention + w8 MLP in the builtin
+//! `llama-tiny`), the heterogeneous-precision regime the paper's
+//! scalable architecture (§IV-C) serves from one datapath.
+//!
+//! Like the ResNet/VGG tables, throughput on the deterministic
+//! accelerator depends only on shapes and bitwidths (§V-B), so these
+//! tables are a faithful substitute for trained checkpoints.
+
+use crate::model::workload::{Gemm, Workload};
+
+/// A decoder-only transformer's GEMM-relevant hyperparameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransformerCfg {
+    /// Model name (`llama-tiny`, `gpt2-124m`, …).
+    pub name: String,
+    /// Decoder block count.
+    pub layers: usize,
+    /// Model (embedding) dimension `d`.
+    pub d_model: usize,
+    /// Attention head count (must divide `d_model`).
+    pub heads: usize,
+    /// MLP hidden dimension `f`.
+    pub d_ff: usize,
+    /// Gated MLP (LLaMA's SwiGLU: gate+up+down) vs plain up+down.
+    pub gated: bool,
+    /// Bitwidth of the attention projections (`qkv`, `attn_out`).
+    pub w_attn: u32,
+    /// Bitwidth of the MLP projections (`ffn_*`).
+    pub w_mlp: u32,
+}
+
+impl TransformerCfg {
+    /// GEMMs per decoder block (4 plain, 5 gated).
+    pub fn gemms_per_layer(&self) -> usize {
+        if self.gated {
+            5
+        } else {
+            4
+        }
+    }
+
+    /// The same architecture re-quantized to `(w_attn, w_mlp)` — the
+    /// knob tests use to spread one model across lanes (e.g. w8
+    /// attention on u16 vs w16 MLP on u32) or digit configs (w8 mm1
+    /// vs w12 kmm2).
+    pub fn with_widths(mut self, w_attn: u32, w_mlp: u32) -> TransformerCfg {
+        self.w_attn = w_attn;
+        self.w_mlp = w_mlp;
+        self
+    }
+}
+
+/// A small LLaMA-flavored config (gated MLP, `d_ff ≈ 8/3·d`, rounded
+/// to a multiple of 16): big enough that every projection exercises
+/// the blocked engine, small enough for CI-speed decode loops. Mixed
+/// width by default — w4 attention, w8 MLP — so one registered model
+/// carries both width groups (the ROADMAP's heterogeneous-precision
+/// target).
+pub fn llama_tiny() -> TransformerCfg {
+    TransformerCfg {
+        name: "llama-tiny".to_string(),
+        layers: 4,
+        d_model: 128,
+        heads: 4,
+        d_ff: 352,
+        gated: true,
+        w_attn: 4,
+        w_mlp: 8,
+    }
+}
+
+/// GPT-2 124M's published architecture (12 blocks, `d = 768`,
+/// `f = 4d`), uniform w8: the per-block projection parameters sum to
+/// the familiar ~85M non-embedding weights.
+pub fn gpt2_124m() -> TransformerCfg {
+    TransformerCfg {
+        name: "gpt2-124m".to_string(),
+        layers: 12,
+        d_model: 768,
+        heads: 12,
+        d_ff: 3072,
+        gated: false,
+        w_attn: 8,
+        w_mlp: 8,
+    }
+}
+
+/// Resolve a builtin config by its CLI/model name.
+pub fn builtin(name: &str) -> Option<TransformerCfg> {
+    match name {
+        "llama-tiny" => Some(llama_tiny()),
+        "gpt2-124m" => Some(gpt2_124m()),
+        _ => None,
+    }
+}
+
+/// The per-block GEMM trace at `tokens` activation rows per layer:
+/// `tokens = 1` is one decode step (the workload name gains
+/// `@decode`), `tokens > 1` is a prefill pass over a `tokens`-token
+/// prompt (`@prefill{t}`). Layer order is execution order within one
+/// forward pass: block by block, attention before MLP.
+pub fn trace(cfg: &TransformerCfg, tokens: usize) -> Workload {
+    assert!(cfg.layers >= 1, "transformer needs at least one block");
+    assert!(
+        cfg.heads >= 1 && cfg.d_model % cfg.heads == 0,
+        "heads must divide d_model ({} % {} != 0)",
+        cfg.d_model,
+        cfg.heads
+    );
+    let t = tokens.max(1);
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let mut gemms = Vec::with_capacity(cfg.layers * cfg.gemms_per_layer());
+    for i in 0..cfg.layers {
+        gemms.push(Gemm::new(format!("blk{i}.qkv"), t, d, 3 * d, cfg.w_attn));
+        gemms.push(Gemm::new(format!("blk{i}.attn_out"), t, d, d, cfg.w_attn));
+        if cfg.gated {
+            gemms.push(Gemm::new(format!("blk{i}.ffn_gate"), t, d, f, cfg.w_mlp));
+        }
+        gemms.push(Gemm::new(format!("blk{i}.ffn_up"), t, d, f, cfg.w_mlp));
+        gemms.push(Gemm::new(format!("blk{i}.ffn_down"), t, f, d, cfg.w_mlp));
+    }
+    let name = if tokens <= 1 {
+        format!("{}@decode", cfg.name)
+    } else {
+        format!("{}@prefill{t}", cfg.name)
+    };
+    Workload::new(name, gemms)
+}
+
+/// Prefill trace: the whole `tokens`-token prompt in one large-`M`
+/// pass per layer.
+pub fn prefill(cfg: &TransformerCfg, tokens: usize) -> Workload {
+    trace(cfg, tokens.max(2))
+}
+
+/// One decode step: m=1 skinny GEMMs, every layer.
+pub fn decode(cfg: &TransformerCfg) -> Workload {
+    trace(cfg, 1)
+}
+
+/// A multi-step decode stream as an explicit flat trace: `steps`
+/// sequential m=1 passes over every layer, labels prefixed `t{step}.`.
+/// [`infer::run_llm`](crate::infer::llm::run_llm) drives the steps
+/// live against registered weights instead; this flat form exists for
+/// direct [`run_workload`](crate::infer::run_workload) playback and
+/// scheduling analysis.
+pub fn decode_stream(cfg: &TransformerCfg, steps: usize) -> Workload {
+    let step_trace = trace(cfg, 1);
+    let mut gemms = Vec::with_capacity(steps.max(1) * step_trace.len());
+    for s in 0..steps.max(1) {
+        for g in &step_trace.gemms {
+            let mut g = g.clone();
+            g.label = format!("t{s}.{}", g.label);
+            gemms.push(g);
+        }
+    }
+    Workload::new(format!("{}@decode{}", cfg.name, steps.max(1)), gemms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_tiny_is_mixed_width() {
+        let wl = decode(&llama_tiny());
+        assert_eq!(wl.name, "llama-tiny@decode");
+        assert_eq!(wl.len(), 4 * 5);
+        assert_eq!(wl.widths(), vec![4, 8]);
+        assert!(wl.is_mixed_width());
+        // Attention projections at w4, MLP at w8.
+        for g in &wl.gemms {
+            let expect = if g.label.contains("ffn") { 8 } else { 4 };
+            assert_eq!(g.w, expect, "{}", g.label);
+        }
+        // Decode is m=1 everywhere; per-step MACs are the parameter
+        // count of the projection weights.
+        assert!(wl.gemms.iter().all(|g| g.m == 1));
+        assert_eq!(wl.macs(), 4 * (128 * 384 + 128 * 128 + 2 * 128 * 352 + 352 * 128));
+    }
+
+    #[test]
+    fn gpt2_124m_matches_published_parameter_count() {
+        let wl = decode(&gpt2_124m());
+        assert_eq!(wl.len(), 12 * 4);
+        assert_eq!(wl.widths(), vec![8]);
+        assert!(!wl.is_mixed_width());
+        // Per-block projections: 768·2304 + 768² + 2·768·3072; twelve
+        // blocks sum to GPT-2's ~85M non-embedding parameters (124M
+        // minus the token/position embeddings).
+        assert_eq!(wl.macs(), 84_934_656);
+    }
+
+    #[test]
+    fn prefill_sets_m_to_the_prompt_length() {
+        let cfg = llama_tiny();
+        let p = prefill(&cfg, 64);
+        assert_eq!(p.name, "llama-tiny@prefill64");
+        assert!(p.gemms.iter().all(|g| g.m == 64));
+        assert_eq!(p.macs(), 64 * decode(&cfg).macs());
+        // qkv is the fused 3d projection; down transposes the hidden dim.
+        let qkv = &p.gemms[0];
+        assert_eq!((qkv.k, qkv.n), (128, 3 * 128));
+        let down = p.gemms.iter().find(|g| g.label == "blk0.ffn_down").unwrap();
+        assert_eq!((down.k, down.n), (352, 128));
+    }
+
+    #[test]
+    fn decode_stream_flattens_steps() {
+        let cfg = llama_tiny();
+        let s = decode_stream(&cfg, 3);
+        assert_eq!(s.len(), 3 * 20);
+        assert_eq!(s.macs(), 3 * decode(&cfg).macs());
+        assert_eq!(s.gemms[0].label, "t0.blk0.qkv");
+        assert_eq!(s.gemms[20].label, "t1.blk0.qkv");
+    }
+
+    #[test]
+    fn with_widths_requantizes_both_groups() {
+        let wl = decode(&llama_tiny().with_widths(8, 16));
+        assert_eq!(wl.widths(), vec![8, 16]);
+        for g in &wl.gemms {
+            let expect = if g.label.contains("ffn") { 16 } else { 8 };
+            assert_eq!(g.w, expect, "{}", g.label);
+        }
+    }
+
+    #[test]
+    fn builtin_resolves_cli_names() {
+        assert_eq!(builtin("llama-tiny").unwrap(), llama_tiny());
+        assert_eq!(builtin("gpt2-124m").unwrap(), gpt2_124m());
+        assert!(builtin("resnet50").is_none());
+    }
+}

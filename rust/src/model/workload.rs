@@ -38,11 +38,57 @@ impl Gemm {
     }
 
     /// Materialize random `w`-bit operand matrices (functional testing).
+    ///
+    /// Draws from the *shared* `rng`, so the result depends on every
+    /// draw made before this call — deterministic only when the whole
+    /// call sequence is. Concurrent serving loops (multi-stream decode)
+    /// interleave draws nondeterministically; they must use the
+    /// order-independent [`seeded_operands`](Self::seeded_operands)
+    /// family instead.
     pub fn random_operands(&self, rng: &mut Rng) -> (Mat, Mat) {
         (
             Mat::random(self.m, self.k, self.w, rng),
             Mat::random(self.k, self.n, self.w, rng),
         )
+    }
+
+    /// A stable per-layer seed derived from `(seed, label, shape, w)`
+    /// by FNV-1a: independent of call order, thread interleaving, and
+    /// the layer's position in the workload — the same layer under the
+    /// same run seed always materializes the same operands.
+    pub fn derive_seed(&self, seed: u64) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET ^ seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        for b in self.label.bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+        }
+        for v in [self.m as u64, self.k as u64, self.n as u64, u64::from(self.w)] {
+            h = (h ^ v).wrapping_mul(PRIME);
+        }
+        h
+    }
+
+    /// The layer's stationary `K×N` weight from its derived seed
+    /// (order- and thread-independent, unlike
+    /// [`random_operands`](Self::random_operands)).
+    pub fn seeded_weight(&self, seed: u64) -> Mat {
+        Mat::random(self.k, self.n, self.w, &mut Rng::new(self.derive_seed(seed)))
+    }
+
+    /// A `rows×K` activation from the derived seed (a distinct stream
+    /// from [`seeded_weight`](Self::seeded_weight), so activation and
+    /// weight never alias even at identical shapes).
+    pub fn seeded_activation(&self, seed: u64, rows: usize) -> Mat {
+        let s = self.derive_seed(seed) ^ 0x5dee_ce66_d513_7db1;
+        Mat::random(rows.max(1), self.k, self.w, &mut Rng::new(s))
+    }
+
+    /// Both operands from the derived seed: `(M×K activation, K×N
+    /// weight)`, reproducible regardless of what else drew from any
+    /// RNG in between.
+    pub fn seeded_operands(&self, seed: u64) -> (Mat, Mat) {
+        (self.seeded_activation(seed, self.m), self.seeded_weight(seed))
     }
 }
 
@@ -77,6 +123,22 @@ impl Workload {
                 .map(|g| Gemm { w, ..g.clone() })
                 .collect(),
         }
+    }
+
+    /// The distinct bitwidths present, sorted ascending. CNN tables
+    /// are uniform (one entry); transformer traces are mixed-width
+    /// (w4 attention + w8 MLP → `[4, 8]`).
+    pub fn widths(&self) -> Vec<u32> {
+        let mut ws: Vec<u32> = self.gemms.iter().map(|g| g.w).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    }
+
+    /// Whether layers run at more than one bitwidth (per-layer lanes
+    /// and digit configs diverge inside one registered model).
+    pub fn is_mixed_width(&self) -> bool {
+        self.widths().len() > 1
     }
 
     /// Layer count.
@@ -186,5 +248,74 @@ mod tests {
         assert_eq!((a.rows, a.cols), (5, 7));
         assert_eq!((b.rows, b.cols), (7, 3));
         assert!(a.fits(11) && b.fits(11));
+    }
+
+    #[test]
+    fn seeded_operands_are_call_order_independent() {
+        // The decode serving loop materializes layer operands in
+        // whatever order its streams interleave; the derived-seed path
+        // must not care. Draw the same layers forwards, backwards, and
+        // with unrelated draws injected in between — identical mats.
+        let wl = synthetic_ragged("r", 6, 40, 8, 9);
+        let forwards: Vec<_> = wl.gemms.iter().map(|g| g.seeded_operands(3)).collect();
+        let mut backwards: Vec<_> =
+            wl.gemms.iter().rev().map(|g| g.seeded_operands(3)).collect();
+        backwards.reverse();
+        assert_eq!(forwards, backwards);
+        let mut noise = Rng::new(0xdead);
+        let interleaved: Vec<_> = wl
+            .gemms
+            .iter()
+            .map(|g| {
+                let _ = Mat::random(3, 3, 8, &mut noise);
+                g.seeded_operands(3)
+            })
+            .collect();
+        assert_eq!(forwards, interleaved);
+        // Distinct run seeds and distinct labels give distinct draws;
+        // activation and weight streams never alias.
+        let g = &wl.gemms[0];
+        assert_ne!(g.seeded_operands(3), g.seeded_operands(4));
+        assert_ne!(g.derive_seed(3), Gemm::new("other", g.m, g.k, g.n, g.w).derive_seed(3));
+        let sq = Gemm::new("sq", 4, 4, 4, 8);
+        assert_ne!(sq.seeded_activation(1, 4), sq.seeded_weight(1));
+        // Everything stays within the layer width.
+        let (a, b) = g.seeded_operands(3);
+        assert!(a.fits(g.w) && b.fits(g.w));
+        assert_eq!((a.rows, a.cols, b.rows, b.cols), (g.m, g.k, g.k, g.n));
+    }
+
+    #[test]
+    fn trace_generation_is_deterministic_across_threads() {
+        // Identical seeds give identical traces and operands no matter
+        // which thread generates them (SplitMix64 holds no global
+        // state; the derived per-layer seeds hold none either).
+        let here = synthetic_ragged("r", 8, 64, 12, 77);
+        let ops_here: Vec<_> = here.gemms.iter().map(|g| g.seeded_operands(5)).collect();
+        let (there, ops_there) = std::thread::spawn(|| {
+            let wl = synthetic_ragged("r", 8, 64, 12, 77);
+            let ops: Vec<_> = wl.gemms.iter().map(|g| g.seeded_operands(5)).collect();
+            (wl, ops)
+        })
+        .join()
+        .unwrap();
+        assert_eq!(here, there);
+        assert_eq!(ops_here, ops_there);
+    }
+
+    #[test]
+    fn widths_dedup_and_sort() {
+        let wl = Workload::new(
+            "mixed",
+            vec![
+                Gemm::new("a", 1, 2, 3, 8),
+                Gemm::new("b", 1, 2, 3, 4),
+                Gemm::new("c", 1, 2, 3, 8),
+            ],
+        );
+        assert_eq!(wl.widths(), vec![4, 8]);
+        assert!(wl.is_mixed_width());
+        assert!(!wl.at_bitwidth(8).is_mixed_width());
+        assert_eq!(synthetic_square("s", 8, 2, 12).widths(), vec![12]);
     }
 }

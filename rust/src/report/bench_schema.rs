@@ -336,6 +336,174 @@ pub fn validate_serve_str(text: &str) -> Result<Json, String> {
     Ok(doc)
 }
 
+/// The LLM-serving bench schema revision this crate emits and
+/// validates (`BENCH_llm.json`, written by `benches/llm_serve.rs`).
+///
+/// Schema history:
+/// - 1: end-to-end transformer serving sections over a whole
+///   prefill/decode trace (per-phase `tokens_per_s`, per-section
+///   `widths` for mixed-width models, coalescing evidence, latency
+///   percentiles) and the `batched_decode_vs_unbatched_m1` CI gate
+pub const LLM_SCHEMA: i64 = 1;
+
+/// Speedup keys every LLM document must carry. The first is the CI
+/// gate: batched decode throughput over unbatched at m=1; the second
+/// reports the autotuned-over-default decode ratio (informational).
+pub const LLM_REQUIRED_SPEEDUPS: &[&str] =
+    &["batched_decode_vs_unbatched_m1", "autotune_vs_default_decode"];
+
+/// The serving phases an LLM section may belong to; a valid document
+/// covers both (prefill is large-`M`, decode is m=1 — the bench must
+/// measure each regime).
+pub const LLM_PHASES: &[&str] = &["prefill", "decode"];
+
+/// Validate one LLM section. These sections describe a whole
+/// transformer trace, not one GEMM, so instead of the hotpath
+/// `shape`/`w`/`lane` fields they carry the phase, the distinct layer
+/// widths, token throughput, and the coalescing evidence.
+fn validate_llm_section(i: usize, s: &Json) -> Result<(), String> {
+    let ctx = |field: &str| format!("sections[{i}].{field}");
+    match s.get("name").and_then(Json::as_str) {
+        Some(n) if !n.is_empty() => {}
+        other => return Err(format!("{} must be a non-empty string, got {other:?}", ctx("name"))),
+    }
+    match s.get("phase").and_then(Json::as_str) {
+        Some(p) if LLM_PHASES.contains(&p) => {}
+        other => {
+            return Err(format!("{} must be one of {LLM_PHASES:?}, got {other:?}", ctx("phase")));
+        }
+    }
+    for field in ["median_s", "ops_per_s", "tokens_per_s"] {
+        let v = s
+            .get(field)
+            .and_then(num)
+            .ok_or_else(|| format!("{} must be a number", ctx(field)))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("{} must be finite and >= 0, got {v}", ctx(field)));
+        }
+    }
+    for field in ["iters", "threads", "streams"] {
+        match s.get(field).and_then(Json::as_i64) {
+            Some(v) if v >= 1 => {}
+            other => {
+                return Err(format!("{} must be an integer >= 1, got {other:?}", ctx(field)));
+            }
+        }
+    }
+    let widths = s
+        .get("widths")
+        .and_then(Json::as_array)
+        .ok_or_else(|| format!("{} must be an array", ctx("widths")))?;
+    if widths.is_empty()
+        || !widths.iter().all(|w| w.as_i64().is_some_and(|v| (1..=64).contains(&v)))
+    {
+        return Err(format!(
+            "{} must be a non-empty array of integers in 1..=64",
+            ctx("widths")
+        ));
+    }
+    match s.get("coalesced_requests").and_then(Json::as_i64) {
+        Some(v) if v >= 0 => {}
+        other => {
+            return Err(format!(
+                "{} must be an integer >= 0, got {other:?}",
+                ctx("coalesced_requests")
+            ));
+        }
+    }
+    match s.get("tuned") {
+        Some(Json::Bool(_)) => {}
+        other => return Err(format!("{} must be a bool, got {other:?}", ctx("tuned"))),
+    }
+    let mut last = (0i64, "p50_us");
+    for field in ["p50_us", "p95_us", "p99_us"] {
+        let v = match s.get(field).and_then(Json::as_i64) {
+            Some(v) if v >= 0 => v,
+            other => {
+                return Err(format!("{} must be an integer >= 0, got {other:?}", ctx(field)));
+            }
+        };
+        if v < last.0 {
+            return Err(format!(
+                "{} must be >= {} (percentiles are ordered)",
+                ctx(field),
+                last.1
+            ));
+        }
+        last = (v, field);
+    }
+    Ok(())
+}
+
+/// Validate a parsed `BENCH_llm.json` document against [`LLM_SCHEMA`].
+/// Shared by the bench's self-check and the golden-file integration
+/// test, exactly like [`validate_hotpath`] and [`validate_serve`].
+pub fn validate_llm(doc: &Json) -> Result<(), String> {
+    if doc.as_object().is_none() {
+        return Err("top level must be an object".to_string());
+    }
+    if doc.get("bench").and_then(Json::as_str) != Some("llm") {
+        return Err("`bench` must be the string \"llm\"".to_string());
+    }
+    match doc.get("schema").and_then(Json::as_i64) {
+        Some(s) if s == LLM_SCHEMA => {}
+        other => return Err(format!("`schema` must be {LLM_SCHEMA}, got {other:?}")),
+    }
+    match doc.get("model").and_then(Json::as_str) {
+        Some(m) if !m.is_empty() => {}
+        other => return Err(format!("`model` must be a non-empty string, got {other:?}")),
+    }
+    for field in ["threads_max", "streams", "prefill", "decode_steps"] {
+        match doc.get(field).and_then(Json::as_i64) {
+            Some(v) if v >= 1 => {}
+            other => return Err(format!("`{field}` must be an integer >= 1, got {other:?}")),
+        }
+    }
+    match doc.get("decode_gate_retried") {
+        Some(Json::Bool(_)) => {}
+        _ => return Err("`decode_gate_retried` must be a bool".to_string()),
+    }
+    let secs = doc
+        .get("sections")
+        .and_then(Json::as_array)
+        .ok_or_else(|| "`sections` must be an array".to_string())?;
+    if secs.is_empty() {
+        return Err("`sections` must be non-empty".to_string());
+    }
+    for (i, s) in secs.iter().enumerate() {
+        validate_llm_section(i, s)?;
+    }
+    // Both serving regimes must be measured.
+    for phase in LLM_PHASES {
+        if !secs.iter().any(|s| s.get("phase").and_then(Json::as_str) == Some(*phase)) {
+            return Err(format!("missing a section for phase `{phase}`"));
+        }
+    }
+    let speedups = doc
+        .get("speedups")
+        .and_then(Json::as_object)
+        .ok_or_else(|| "`speedups` must be an object".to_string())?;
+    for (key, v) in speedups {
+        match num(v) {
+            Some(r) if r.is_finite() && r >= 0.0 => {}
+            _ => return Err(format!("speedups.{key} must be a finite number >= 0")),
+        }
+    }
+    for key in LLM_REQUIRED_SPEEDUPS {
+        if !speedups.contains_key(*key) {
+            return Err(format!("missing required speedup `{key}`"));
+        }
+    }
+    Ok(())
+}
+
+/// Parse *and* validate an LLM document in one step.
+pub fn validate_llm_str(text: &str) -> Result<Json, String> {
+    let doc = Json::parse(text).map_err(|e| format!("parse error: {e}"))?;
+    validate_llm(&doc)?;
+    Ok(doc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -622,5 +790,147 @@ mod tests {
         // Malformed text is a parse error here too.
         assert!(validate_serve_str("{").unwrap_err().contains("parse error"));
         assert!(validate_serve_str("[]").unwrap_err().contains("object"));
+    }
+
+    /// The smallest LLM document that passes: one section per phase.
+    fn minimal_llm_doc() -> Json {
+        let mut sections = Vec::new();
+        for (phase, tps) in [("prefill", 5200.0), ("decode", 480.0)] {
+            let mut s = BTreeMap::new();
+            s.insert(
+                "name".to_string(),
+                Json::Str(format!("llama-tiny {phase} x4 streams (tok/s)")),
+            );
+            s.insert("phase".to_string(), Json::Str(phase.to_string()));
+            s.insert("median_s".to_string(), Json::Float(0.1));
+            s.insert("ops_per_s".to_string(), Json::Float(4e8));
+            s.insert("tokens_per_s".to_string(), Json::Float(tps));
+            s.insert("iters".to_string(), Json::Int(3));
+            s.insert("threads".to_string(), Json::Int(2));
+            s.insert("streams".to_string(), Json::Int(4));
+            s.insert("widths".to_string(), Json::Array(vec![Json::Int(4), Json::Int(8)]));
+            s.insert("coalesced_requests".to_string(), Json::Int(160));
+            s.insert("tuned".to_string(), Json::Bool(false));
+            s.insert("p50_us".to_string(), Json::Int(90));
+            s.insert("p95_us".to_string(), Json::Int(400));
+            s.insert("p99_us".to_string(), Json::Int(900));
+            sections.push(Json::Object(s));
+        }
+        let mut speedups = BTreeMap::new();
+        for key in LLM_REQUIRED_SPEEDUPS {
+            speedups.insert((*key).to_string(), Json::Float(1.4));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str("llm".to_string()));
+        top.insert("schema".to_string(), Json::Int(LLM_SCHEMA));
+        top.insert("model".to_string(), Json::Str("llama-tiny".to_string()));
+        top.insert("threads_max".to_string(), Json::Int(2));
+        top.insert("streams".to_string(), Json::Int(4));
+        top.insert("prefill".to_string(), Json::Int(32));
+        top.insert("decode_steps".to_string(), Json::Int(32));
+        top.insert("decode_gate_retried".to_string(), Json::Bool(false));
+        top.insert("sections".to_string(), Json::Array(sections));
+        top.insert("speedups".to_string(), Json::Object(speedups));
+        Json::Object(top)
+    }
+
+    #[test]
+    fn minimal_llm_document_passes_and_round_trips() {
+        let doc = minimal_llm_doc();
+        validate_llm(&doc).expect("minimal llm document is valid");
+        let reparsed = validate_llm_str(&doc.to_string()).expect("round trip");
+        assert_eq!(reparsed, doc);
+    }
+
+    #[test]
+    fn llm_violations_are_named() {
+        let strip = |key: &str| {
+            let mut doc = minimal_llm_doc();
+            if let Json::Object(m) = &mut doc {
+                m.remove(key);
+            }
+            doc
+        };
+        for key in [
+            "schema",
+            "model",
+            "streams",
+            "prefill",
+            "decode_steps",
+            "decode_gate_retried",
+            "sections",
+            "speedups",
+        ] {
+            let e = validate_llm(&strip(key)).unwrap_err();
+            assert!(e.contains(key), "{key}: {e}");
+        }
+
+        // The three bench families reject one another's documents.
+        let e = validate_llm(&minimal_doc()).unwrap_err();
+        assert!(e.contains("llm"), "{e}");
+        let e = validate_llm(&minimal_serve_doc()).unwrap_err();
+        assert!(e.contains("llm"), "{e}");
+        let e = validate_serve(&minimal_llm_doc()).unwrap_err();
+        assert!(e.contains("serve"), "{e}");
+
+        // Per-section mutations: patch field `f` of section 0.
+        let patch_section = |field: &str, v: Option<Json>| {
+            let mut doc = minimal_llm_doc();
+            if let Json::Object(m) = &mut doc {
+                if let Some(Json::Array(secs)) = m.get_mut("sections") {
+                    if let Json::Object(s0) = &mut secs[0] {
+                        match v {
+                            Some(v) => s0.insert(field.to_string(), v),
+                            None => s0.remove(field),
+                        };
+                    }
+                }
+            }
+            doc
+        };
+        let e = validate_llm(&patch_section("phase", Some(Json::Str("warmup".into()))))
+            .unwrap_err();
+        assert!(e.contains("phase"), "{e}");
+        let e = validate_llm(&patch_section("tokens_per_s", None)).unwrap_err();
+        assert!(e.contains("tokens_per_s"), "{e}");
+        let e = validate_llm(&patch_section("widths", Some(Json::Array(Vec::new()))))
+            .unwrap_err();
+        assert!(e.contains("widths"), "{e}");
+        let e = validate_llm(&patch_section("widths", Some(Json::Array(vec![Json::Int(65)]))))
+            .unwrap_err();
+        assert!(e.contains("widths"), "{e}");
+        let e = validate_llm(&patch_section("coalesced_requests", Some(Json::Int(-1))))
+            .unwrap_err();
+        assert!(e.contains("coalesced_requests"), "{e}");
+        let e = validate_llm(&patch_section("tuned", Some(Json::Str("yes".into()))))
+            .unwrap_err();
+        assert!(e.contains("tuned"), "{e}");
+        let e = validate_llm(&patch_section("p99_us", Some(Json::Int(1)))).unwrap_err();
+        assert!(e.contains("ordered"), "{e}");
+        let e = validate_llm(&patch_section("p50_us", None)).unwrap_err();
+        assert!(e.contains("p50_us"), "{e}");
+
+        // Dropping the decode section loses phase coverage.
+        let mut doc = minimal_llm_doc();
+        if let Json::Object(m) = &mut doc {
+            let secs = m.get("sections").and_then(Json::as_array).unwrap();
+            m.insert("sections".to_string(), Json::Array(secs[..1].to_vec()));
+        }
+        let e = validate_llm(&doc).unwrap_err();
+        assert!(e.contains("decode"), "{e}");
+
+        // The CI-gate speedup is required.
+        let mut doc = minimal_llm_doc();
+        if let Json::Object(m) = &mut doc {
+            if let Some(Json::Object(sp)) = m.get_mut("speedups") {
+                sp.remove("batched_decode_vs_unbatched_m1");
+            }
+        }
+        let e = validate_llm(&doc).unwrap_err();
+        assert!(e.contains("batched_decode_vs_unbatched_m1"), "{e}");
+
+        // Malformed text is a parse error here too.
+        assert!(validate_llm_str("{").unwrap_err().contains("parse error"));
+        assert!(validate_llm_str("[]").unwrap_err().contains("object"));
     }
 }

@@ -1,6 +1,6 @@
 //! Golden-file tests for the bench artifact contracts
-//! (`BENCH_hotpath.json` schema 6 and `BENCH_serve.json` schema 1):
-//! each checked-in example document must pass the same
+//! (`BENCH_hotpath.json` schema 6, `BENCH_serve.json` schema 1, and
+//! `BENCH_llm.json` schema 1): each checked-in example document must pass the same
 //! `report::bench_schema` validator the bench binary runs on its own
 //! output before writing it, round-trip through the crate's JSON codec
 //! idempotently, and malformed or truncated documents must yield
@@ -13,13 +13,15 @@
 //! trend lines.
 
 use kmm::report::bench_schema::{
-    validate_hotpath, validate_hotpath_str, validate_serve_str, CROSSOVER_ALGOS, HOTPATH_SCHEMA,
+    validate_hotpath_str, validate_llm_str, validate_serve_str,
+    CROSSOVER_ALGOS, HOTPATH_SCHEMA, LLM_PHASES, LLM_REQUIRED_SPEEDUPS, LLM_SCHEMA,
     REQUIRED_SPEEDUPS, SERVE_REQUIRED_SPEEDUPS, SERVE_SCHEMA,
 };
 use kmm::util::json::Json;
 
 const GOLDEN: &str = include_str!("golden/BENCH_hotpath.schema6.example.json");
 const SERVE_GOLDEN: &str = include_str!("golden/BENCH_serve.schema1.example.json");
+const LLM_GOLDEN: &str = include_str!("golden/BENCH_llm.schema1.example.json");
 
 #[test]
 fn golden_document_passes_the_shared_validator() {
@@ -287,6 +289,178 @@ fn serve_validator_mutations_verify_each_replacement_took_effect() {
         assert!(
             SERVE_GOLDEN.contains(needle),
             "serve golden drifted: `{needle}` missing"
+        );
+    }
+}
+
+#[test]
+fn llm_golden_document_passes_the_shared_validator() {
+    let doc = validate_llm_str(LLM_GOLDEN).expect("golden schema-1 llm document validates");
+    assert_eq!(doc.get("schema").and_then(Json::as_i64), Some(LLM_SCHEMA));
+    assert_eq!(doc.get("model").and_then(Json::as_str), Some("llama-tiny"));
+    let speedups = doc.get("speedups").and_then(Json::as_object).unwrap();
+    for key in LLM_REQUIRED_SPEEDUPS {
+        assert!(speedups.contains_key(*key), "golden lacks speedup `{key}`");
+    }
+    // The example documents the full section vocabulary the llm bench
+    // emits: both phases, the decode gate pair, autotune, and sharding.
+    let sections = doc.get("sections").and_then(Json::as_array).unwrap();
+    for phase in LLM_PHASES {
+        assert!(
+            sections
+                .iter()
+                .any(|s| s.get("phase").and_then(Json::as_str) == Some(*phase)),
+            "golden lacks a `{phase}` section"
+        );
+    }
+    for needle in ["prefill", "unbatched", "window=1ms", "autotuned", "shards"] {
+        assert!(
+            sections.iter().any(|s| {
+                s.get("name")
+                    .and_then(Json::as_str)
+                    .is_some_and(|n| n.contains(needle))
+            }),
+            "golden lacks a `{needle}` section"
+        );
+    }
+    // Mixed-width evidence: every section carries the llama-tiny
+    // [4, 8] width set, and the batched sections show coalescing.
+    for s in sections {
+        assert_eq!(
+            s.get("widths"),
+            Some(&Json::Array(vec![Json::Int(4), Json::Int(8)])),
+            "{s:?}"
+        );
+    }
+    assert!(
+        sections.iter().any(|s| {
+            s.get("coalesced_requests").and_then(Json::as_i64).unwrap_or(0) > 0
+        }),
+        "golden must document coalesced decode traffic"
+    );
+}
+
+#[test]
+fn llm_golden_document_round_trips_idempotently() {
+    let doc = validate_llm_str(LLM_GOLDEN).unwrap();
+    let emitted = doc.to_string();
+    let back = validate_llm_str(&emitted).expect("emitted form validates");
+    assert_eq!(back, doc, "round trip is lossless");
+    assert_eq!(back.to_string(), emitted, "emission is idempotent");
+}
+
+#[test]
+fn malformed_llm_documents_error_instead_of_panicking() {
+    for doc in ["", "{", "not json", "[1, 2"] {
+        let e = validate_llm_str(doc).unwrap_err();
+        assert!(e.contains("parse error"), "{doc:?}: {e}");
+    }
+    let bad_docs: &[(&str, &str)] = &[
+        ("[]", "object"),
+        ("{}", "bench"),
+        (r#"{"bench": "serve"}"#, "llm"),
+        (
+            &LLM_GOLDEN.replacen("\"schema\": 1", "\"schema\": 2", 1),
+            "must be 1",
+        ),
+        (
+            &LLM_GOLDEN.replacen("\"model\": \"llama-tiny\"", "\"model\": \"\"", 1),
+            "model",
+        ),
+        // Phases come from a fixed vocabulary, and both must appear.
+        (
+            &LLM_GOLDEN.replacen("\"phase\": \"prefill\"", "\"phase\": \"warmup\"", 1),
+            "phase",
+        ),
+        // Token throughput, widths, and coalescing evidence are
+        // load-bearing per-section fields.
+        (
+            &LLM_GOLDEN.replacen("\"tokens_per_s\": 6718.2", "\"tokens_per_s\": \"fast\"", 1),
+            "tokens_per_s",
+        ),
+        (
+            &LLM_GOLDEN.replacen("\"widths\": [4, 8]", "\"widths\": []", 1),
+            "widths",
+        ),
+        (
+            &LLM_GOLDEN.replacen("\"widths\": [4, 8]", "\"widths\": [4, 65]", 1),
+            "widths",
+        ),
+        (
+            &LLM_GOLDEN.replacen(
+                "\"coalesced_requests\": 140",
+                "\"coalesced_requests\": -3",
+                1,
+            ),
+            "coalesced_requests",
+        ),
+        (
+            &LLM_GOLDEN.replacen("\"tuned\": true", "\"tuned\": \"yes\"", 1),
+            "tuned",
+        ),
+        // Percentiles stay ordered here too.
+        (
+            &LLM_GOLDEN.replacen("\"p99_us\": 1150", "\"p99_us\": 12", 1),
+            "percentiles are ordered",
+        ),
+        (
+            &LLM_GOLDEN.replacen("\"decode_steps\": 24", "\"decode_steps\": 0", 1),
+            "decode_steps",
+        ),
+        (
+            &LLM_GOLDEN.replacen(
+                "\"decode_gate_retried\": false",
+                "\"decode_gate_retried\": \"no\"",
+                1,
+            ),
+            "decode_gate_retried",
+        ),
+        // The CI gate's ratio renamed away.
+        (
+            &LLM_GOLDEN.replacen(
+                "batched_decode_vs_unbatched_m1\"",
+                "batched_decode_vs_unbatched\"",
+                1,
+            ),
+            "batched_decode_vs_unbatched_m1",
+        ),
+        (
+            &LLM_GOLDEN.replacen(
+                "autotune_vs_default_decode\"",
+                "autotune_vs_decode\"",
+                1,
+            ),
+            "autotune_vs_default_decode",
+        ),
+    ];
+    for (doc, fragment) in bad_docs {
+        let e = validate_llm_str(doc).unwrap_err();
+        assert!(e.contains(fragment), "expected `{fragment}` in: {e}");
+    }
+    for cut in [1, LLM_GOLDEN.len() / 2, LLM_GOLDEN.len() - 2] {
+        assert!(validate_llm_str(&LLM_GOLDEN[..cut]).is_err(), "cut at {cut}");
+    }
+}
+
+#[test]
+fn llm_validator_mutations_verify_each_replacement_took_effect() {
+    for needle in [
+        "\"schema\": 1",
+        "\"model\": \"llama-tiny\"",
+        "\"phase\": \"prefill\"",
+        "\"tokens_per_s\": 6718.2",
+        "\"widths\": [4, 8]",
+        "\"coalesced_requests\": 140",
+        "\"tuned\": true",
+        "\"p99_us\": 1150",
+        "\"decode_steps\": 24",
+        "\"decode_gate_retried\": false",
+        "batched_decode_vs_unbatched_m1\"",
+        "autotune_vs_default_decode\"",
+    ] {
+        assert!(
+            LLM_GOLDEN.contains(needle),
+            "llm golden drifted: `{needle}` missing"
         );
     }
 }

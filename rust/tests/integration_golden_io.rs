@@ -1,7 +1,8 @@
 //! Golden-file round-trip tests for the workload JSON codec
-//! (`model/io.rs`): checked-in ResNet-50 and VGG-16 traces must parse
-//! to exactly the built-in tables, the serializer must round-trip them,
-//! and malformed documents must yield errors, never panics.
+//! (`model/io.rs`): checked-in ResNet-50, VGG-16, and llama-tiny
+//! (mixed-width, schema 2) traces must parse to exactly the built-in
+//! tables, the serializer must round-trip them, and malformed
+//! documents must yield errors, never panics.
 //!
 //! The golden files pin the *external* contract: a workload exported by
 //! one version of the tool keeps parsing identically in the next —
@@ -10,10 +11,12 @@
 
 use kmm::model::io::{workload_from_json, workload_to_json};
 use kmm::model::resnet::{resnet, ResNet};
+use kmm::model::transformer::{decode, llama_tiny};
 use kmm::model::vgg::{vgg, Vgg};
 
 const GOLDEN_RESNET50: &str = include_str!("golden/resnet50_w8.json");
 const GOLDEN_VGG16: &str = include_str!("golden/vgg16_w8.json");
+const GOLDEN_LLAMA: &str = include_str!("golden/llama_tiny_mixed.json");
 
 #[test]
 fn golden_resnet50_parses_to_the_builtin_table() {
@@ -31,6 +34,26 @@ fn golden_vgg16_parses_to_the_builtin_table() {
     assert_eq!(golden, builtin);
     assert_eq!(golden.macs(), builtin.macs());
     assert_eq!(golden.len(), 16);
+}
+
+#[test]
+fn golden_llama_tiny_parses_to_the_builtin_trace() {
+    // The mixed-width transformer golden: w4 attention + w8 MLP in one
+    // schema-2 document.
+    let golden = workload_from_json(GOLDEN_LLAMA).expect("golden file parses");
+    let builtin = decode(&llama_tiny());
+    assert_eq!(golden, builtin);
+    assert_eq!(golden.len(), 20);
+    assert_eq!(golden.widths(), vec![4, 8]);
+    assert!(golden.is_mixed_width());
+}
+
+#[test]
+fn golden_llama_tiny_is_byte_identical_to_the_serializer() {
+    // Unlike the hand-formatted CNN goldens, this one pins the exact
+    // bytes the schema-2 serializer emits: `kmm export` output drift
+    // shows up as a diff here.
+    assert_eq!(workload_to_json(&decode(&llama_tiny())), GOLDEN_LLAMA);
 }
 
 #[test]
@@ -78,6 +101,16 @@ fn malformed_documents_error_instead_of_panicking() {
         r#"{"name": "t", "gemms": [{"m": "four", "k": 1, "n": 1, "w": 8}]}"#, // non-numeric
         r#"{"name": "t", "gemms": [{"m": 1, "k": 1, "n": 1}]}"#, // missing w
         r#"{"name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}"#, // truncated
+        // Schema-2 rejections: unknown/ill-typed schema revisions and
+        // widths outside the 1..=64 trace window.
+        r#"{"schema": 3, "name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}]}"#,
+        r#"{"schema": 0, "name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}]}"#,
+        r#"{"schema": -1, "name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}]}"#,
+        r#"{"schema": "two", "name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}]}"#,
+        r#"{"schema": null, "name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 8}]}"#,
+        r#"{"schema": 2, "name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 65}]}"#,
+        r#"{"schema": 2, "name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": 0}]}"#,
+        r#"{"schema": 2, "name": "t", "gemms": [{"m": 1, "k": 1, "n": 1, "w": -8}]}"#,
     ];
     for doc in bad_docs {
         assert!(
@@ -85,8 +118,11 @@ fn malformed_documents_error_instead_of_panicking() {
             "must reject: {doc:?}"
         );
     }
-    // Truncating the golden file anywhere must error, not panic.
+    // Truncating the goldens anywhere must error, not panic.
     for cut in [1, GOLDEN_RESNET50.len() / 2, GOLDEN_RESNET50.len() - 2] {
         assert!(workload_from_json(&GOLDEN_RESNET50[..cut]).is_err(), "cut at {cut}");
+    }
+    for cut in [1, GOLDEN_LLAMA.len() / 2, GOLDEN_LLAMA.len() - 2] {
+        assert!(workload_from_json(&GOLDEN_LLAMA[..cut]).is_err(), "cut at {cut}");
     }
 }
